@@ -1,0 +1,96 @@
+//! End-to-end validation driver — proves all layers compose.
+//!
+//! Runs the FULL three-layer stack on a real small workload:
+//!   L1/L2: AOT JAX+Pallas artifacts (`make artifacts`) executed via PJRT,
+//!   L3:    the Rust coordinator (consensus + bilinear global updates,
+//!          node workers, transfer + network ledgers).
+//!
+//! Workload: sparse linear regression, n = 2000 features over N = 4 nodes
+//! x M = 2 device queues, 40k samples total, kappa = 400.  Reports the
+//! residual curve, support-recovery F1, throughput, and the transfer
+//! ledger; writes results/end_to_end_trace.csv.  The numbers quoted in
+//! EXPERIMENTS.md §End-to-end come from this binary.
+//!
+//!     cargo run --release --example end_to_end [-- --pallas]
+//!
+//! `--pallas` switches to the interpret-mode Pallas artifact set
+//! (artifacts-pallas/), proving the L1 kernels themselves execute through
+//! PJRT end to end (slower; see DESIGN.md §Hardware-Adaptation).
+
+use psfit::config::{BackendKind, Config};
+use psfit::data::SyntheticSpec;
+use psfit::harness;
+use psfit::losses::Squared;
+use psfit::sparsity::support_f1;
+
+fn main() -> anyhow::Result<()> {
+    let pallas = std::env::args().any(|a| a == "--pallas");
+    if pallas {
+        std::env::set_var("PSFIT_ARTIFACTS", "artifacts-pallas");
+        eprintln!("using interpret-mode Pallas artifacts (artifacts-pallas/)");
+    }
+
+    let (n, m_total, nodes) = if pallas { (512, 8_000, 4) } else { (2000, 40_000, 4) };
+    let mut spec = SyntheticSpec::regression(n, m_total, nodes);
+    spec.sparsity_level = 0.8;
+    spec.noise_std = 0.05;
+    let kappa = spec.kappa();
+    eprintln!("generating SLS workload: n={n}, m={m_total}, N={nodes}, kappa={kappa}");
+    let dataset = spec.generate();
+
+    let mut cfg = Config::default();
+    cfg.platform.nodes = nodes;
+    cfg.platform.devices_per_node = 2;
+    cfg.platform.backend = BackendKind::Xla;
+    cfg.solver.kappa = kappa;
+    cfg.solver.rho_c = 2.0;
+    cfg.solver = cfg.solver.alpha(0.5);
+    cfg.solver.rho_l = 2.0;
+    cfg.solver.max_iters = if pallas { 40 } else { 300 };
+
+    let run = harness::run_timed(&dataset, &cfg, true)?;
+    let res = &run.result;
+
+    println!("=== end-to-end validation (three-layer stack) ===");
+    println!("artifacts:        {}", if pallas { "pallas (interpret)" } else { "xla" });
+    println!("setup (stage+compile): {:.2} s", run.setup_seconds);
+    println!("solve:            {:.2} s ({} outer iterations, converged={})",
+        run.solve_seconds, res.iters, res.converged);
+    println!(
+        "throughput:       {:.1} outer iters/s, {:.1} Msamples-touched/s",
+        res.iters as f64 / run.solve_seconds,
+        (res.iters * cfg.solver.inner_iters * m_total) as f64 / run.solve_seconds / 1e6
+    );
+    let first = &res.trace.records[0];
+    let last = res.trace.last().unwrap();
+    println!(
+        "residuals:        primal {:.2e} -> {:.2e}, bilinear {:.2e} -> {:.2e}",
+        first.primal, last.primal, first.bilinear, last.bilinear
+    );
+    let f1 = support_f1(&res.support, &dataset.support_true);
+    println!("support recovery: F1 = {f1:.4} ({} / {})", res.support.len(), kappa);
+    let obj = psfit::admm::solver::objective(&dataset, &Squared, cfg.solver.gamma, &res.x);
+    println!("final objective:  {obj:.4}");
+    println!(
+        "transfers:        h2d {:.1} MB / d2h {:.1} MB, {:.3} s in copies",
+        res.transfers.h2d_bytes as f64 / 1e6,
+        res.transfers.d2h_bytes as f64 / 1e6,
+        res.transfers.copy_seconds
+    );
+    println!(
+        "network:          {:.2} MB up / {:.2} MB down over {} rounds",
+        res.transfers.net_up_bytes as f64 / 1e6,
+        res.transfers.net_down_bytes as f64 / 1e6,
+        res.iters
+    );
+
+    std::fs::create_dir_all("results")?;
+    let path = if pallas { "results/end_to_end_pallas_trace.csv" } else { "results/end_to_end_trace.csv" };
+    std::fs::write(path, res.trace.to_csv())?;
+    eprintln!("wrote {path}");
+
+    anyhow::ensure!(res.converged, "did not converge");
+    anyhow::ensure!(f1 > 0.9, "support recovery too weak: {f1}");
+    println!("END-TO-END: OK");
+    Ok(())
+}

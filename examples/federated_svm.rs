@@ -1,0 +1,80 @@
+//! Federated sparse SVM (SSVM) across 8 nodes with non-IID shards.
+//!
+//! Demonstrates the FL-relevant property the paper emphasizes: raw data
+//! (A_i, b_i) never leaves a node — only the coefficient-space iterates
+//! (x_i, u_i) and the consensus z cross the wire.  The byte ledger printed
+//! at the end is the entire communication footprint.
+//!
+//!     cargo run --release --example federated_svm
+
+use psfit::config::Config;
+use psfit::data::{SyntheticSpec, Task};
+use psfit::driver;
+use psfit::losses::LossKind;
+use psfit::sparsity::support_f1;
+use psfit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let nodes = 8;
+    let mut spec = SyntheticSpec::regression(400, 9600, nodes);
+    spec.task = Task::Binary;
+    spec.sparsity_level = 0.9;
+    spec.noise_std = 0.2;
+    let mut ds = spec.generate();
+
+    // make the shards non-IID: give each node a biased subsample of one
+    // class (a classic federated pathology)
+    let mut rng = Rng::seed_from(7);
+    for (i, shard) in ds.shards.iter_mut().enumerate() {
+        let keep_label = if i % 2 == 0 { 1.0 } else { -1.0 };
+        // flip 30% of the opposite-class labels toward the node's bias
+        for l in shard.labels.iter_mut() {
+            if *l != keep_label && rng.uniform() < 0.3 {
+                *l = keep_label;
+            }
+        }
+    }
+
+    let mut cfg = Config::default();
+    cfg.loss = LossKind::Hinge;
+    cfg.platform.nodes = nodes;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.solver.max_iters = 120;
+
+    println!("federated SSVM: {nodes} non-IID nodes, n=400, kappa={}", spec.kappa());
+    let res = driver::fit(&ds, &cfg)?;
+
+    println!(
+        "converged: {} in {} iterations ({:.2} s)",
+        res.converged, res.iters, res.wall_seconds
+    );
+    println!(
+        "support F1 vs planted model: {:.3}",
+        support_f1(&res.support, &ds.support_true)
+    );
+
+    // the complete communication footprint (no raw data!)
+    let per_round = (nodes * 400 * 8) as f64 / 1e3; // z down, per round
+    println!("\n--- communication ledger (the ONLY data that moved) ---");
+    println!(
+        "coordinator -> nodes: {:.2} MB total ({:.1} KB z-broadcast per round)",
+        res.transfers.net_down_bytes as f64 / 1e6,
+        per_round
+    );
+    println!(
+        "nodes -> coordinator: {:.2} MB total (x_i + u_i per node per round)",
+        res.transfers.net_up_bytes as f64 / 1e6
+    );
+    let raw_bytes: u64 = ds
+        .shards
+        .iter()
+        .map(|s| (s.a.data.len() + s.labels.len()) as u64 * 4)
+        .sum();
+    println!(
+        "raw data kept on-node:  {:.2} MB (never transmitted)",
+        raw_bytes as f64 / 1e6
+    );
+    Ok(())
+}

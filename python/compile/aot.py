@@ -1,0 +1,162 @@
+"""AOT lowering: JAX tile programs -> HLO text artifacts + manifest.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 Rust crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; a content hash of the compile package makes the
+target a no-op when inputs are unchanged.  Output layout::
+
+    artifacts/
+      manifest.json          # tile shapes + per-artifact input/output specs
+      <program>.hlo.txt      # one per tile program
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.common import TileConfig
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_list(avals) -> list:
+    """Flatten (pytree order) and describe each leaf tensor."""
+    out = []
+    leaves = jax.tree_util.tree_leaves(list(avals))
+    for v in leaves:
+        out.append({"shape": list(v.shape), "dtype": str(v.dtype)})
+    return out
+
+
+def source_fingerprint() -> str:
+    """Hash of every .py in the compile package (drives Makefile no-op)."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: pathlib.Path, cfg: TileConfig, *, verbose: bool = True) -> dict:
+    cfg.validate()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    registry = dict(model.program_registry(cfg))
+    registry.update(model.sweep_registry(cfg))
+
+    manifest = {
+        "version": 1,
+        "fingerprint": source_fingerprint(),
+        "mode": cfg.mode,
+        "tile_m": cfg.tile_m,
+        "block_n": cfg.block_n,
+        "bm": cfg.bm,
+        "cg_iters": cfg.cg_iters,
+        "newton_iters": cfg.newton_iters,
+        "classes": cfg.classes,
+        "inner_sweeps": cfg.inner_sweeps,
+        "param_slots": {
+            "m_blocks": model.P_MBLOCKS,
+            "rho_l": model.P_RHO_L,
+            "rho_c": model.P_RHO_C,
+            "reg": model.P_REG,
+            "size": model.P_SIZE,
+        },
+        "artifacts": {},
+    }
+
+    for name, (fn, example_args, static_kwargs) in registry.items():
+        lowered = fn.lower(*example_args, **static_kwargs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        out_avals = jax.tree_util.tree_leaves(
+            jax.eval_shape(functools.partial(fn, **static_kwargs), *example_args)
+        )
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _spec_list(example_args),
+            "outputs": _spec_list(out_avals),
+        }
+        if verbose:
+            print(f"  {name:18s} -> {fname} ({len(text)} chars)", file=sys.stderr)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if verbose:
+        print(
+            f"wrote {len(registry)} artifacts + manifest.json to {out_dir} "
+            f"(mode={cfg.mode}, tile_m={cfg.tile_m}, block_n={cfg.block_n}, "
+            f"cg_iters={cfg.cg_iters})",
+            file=sys.stderr,
+        )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--tile-m", type=int, default=None)
+    ap.add_argument("--block-n", type=int, default=None)
+    ap.add_argument("--cg-iters", type=int, default=None)
+    ap.add_argument("--mode", choices=["xla", "pallas"], default=None,
+                    help="tile-program lowering (see TileConfig.mode)")
+    args = ap.parse_args()
+
+    cfg = TileConfig.from_env()
+    overrides = {
+        k: v
+        for k, v in {
+            "tile_m": args.tile_m,
+            "block_n": args.block_n,
+            "cg_iters": args.cg_iters,
+            "mode": args.mode,
+        }.items()
+        if v is not None
+    }
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    out_dir = pathlib.Path(args.out)
+    # No-op if fingerprint matches an existing manifest (make-friendly).
+    mpath = out_dir / "manifest.json"
+    if mpath.exists():
+        try:
+            existing = json.loads(mpath.read_text())
+            if existing.get("fingerprint") == source_fingerprint() and (
+                existing.get("tile_m"),
+                existing.get("block_n"),
+                existing.get("cg_iters"),
+                existing.get("mode"),
+            ) == (cfg.tile_m, cfg.block_n, cfg.cg_iters, cfg.mode):
+                print("artifacts up to date — skipping", file=sys.stderr)
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+    build(out_dir, cfg)
+
+
+if __name__ == "__main__":
+    main()

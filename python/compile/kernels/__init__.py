@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for the Bi-cADMM compute hot-spot.
+
+Kernel inventory (each tested against ``ref.py``):
+
+  matvec.matvec            A @ x           streamed row tiles (prediction)
+  matvec.matvec_t          A^T @ y         streamed row tiles (back-proj)
+  matvec.fused_gram_matvec A^T (A x)       single-pass Gram matvec
+  gram.gram                A^T A           setup-time Gram accumulation
+  gram.gemv                G @ x           per-CG-step coefficient-space op
+  prox.omega_squared       SLS   omega-bar prox (closed form)
+  prox.omega_logistic      SLogR omega-bar prox (Newton)
+  prox.omega_hinge         SSVM  omega-bar prox (three-piece exact)
+  prox.omega_softmax       SSR   omega-bar prox (Sherman-Morrison Newton)
+
+All kernels lower with ``interpret=True`` (CPU-PJRT executable HLO); the
+TPU VMEM/MXU projections live in the module docstrings and DESIGN.md §10.
+"""
+
+from . import gram, matvec, prox, ref  # noqa: F401
+from .common import TileConfig, ceil_div, pad_to  # noqa: F401

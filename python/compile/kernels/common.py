@@ -1,0 +1,107 @@
+"""Shared tiling utilities for the PsFiT Pallas kernels.
+
+Tiling model
+------------
+Every kernel in this package operates on *fixed-shape tiles* so that a single
+AOT-compiled artifact serves every problem size the benchmarks sweep over.
+The Rust coordinator (L3) pads each node's local feature block to the tile
+grid and streams row tiles through the compiled executables:
+
+  * ``TILE_M``  — rows (samples) per row-tile of a feature block.  The
+    sample dimension is unbounded in the paper's experiments (up to 3e5 rows
+    per node), so the m-axis is tiled and accumulated by the caller.
+  * ``BLOCK_N`` — columns (features) per feature block ``A_ij``.  This is the
+    paper's per-GPU feature partition: node ``i`` splits its ``A_i`` into M
+    column blocks, one per device queue.
+
+VMEM budget (TPU projection; see DESIGN.md §10)
+-----------------------------------------------
+With the default ``(TILE_M, BLOCK_N) = (8192, 512)`` and ``bm = 1024`` the
+working set of the inner matmul tile is
+
+  A-tile  : 1024 x 512 x 4 B = 2.0 MiB
+  Gram out:  512 x 512 x 4 B = 1.0 MiB
+  vectors :  < 16 KiB
+
+comfortably inside a 16 MiB VMEM.  ``bm`` is a multiple of 8 and ``BLOCK_N``
+a multiple of 128, matching the f32 (8, 128) TPU tile so the MXU sees fully
+populated systolic passes.
+
+All tile-size knobs can be overridden through environment variables at
+``make artifacts`` time (``PSFIT_TILE_M``, ``PSFIT_BLOCK_N``, ...); the chosen
+values are recorded in ``artifacts/manifest.json`` and read back by the Rust
+runtime.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    return int(raw) if raw else default
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Static shape configuration baked into the AOT artifacts.
+
+    ``mode`` selects the lowering of the tile programs:
+
+    * ``"pallas"`` — the L1 Pallas kernels, lowered with ``interpret=True``
+      so the CPU PJRT client can execute them.  Interpret mode materializes
+      full-buffer copies per grid step, so this is a *correctness* vehicle
+      (it proves the kernels compose through the whole stack); real-TPU
+      performance is projected in DESIGN.md §10.
+    * ``"xla"`` — the pure-jnp reference forms of the same tile programs
+      (tested equal to the kernels in python/tests), fused by XLA into the
+      shapes a production CPU/GPU lowering would produce.  This is what the
+      performance benchmarks run.
+    """
+
+    tile_m: int = 8192  # rows per streamed row-tile
+    block_n: int = 512  # features per device block (paper's per-GPU split)
+    bm: int = 1024  # row sub-tile inside a kernel grid step
+    cg_iters: int = 24  # CG iterations of the block solve artifact
+    newton_iters: int = 8  # Newton steps for smooth omega proxes
+    classes: int = 10  # K for the softmax (SSR) artifacts
+    inner_sweeps: int = 3  # Algorithm-2 sweeps fused into node_sweep_*
+    mode: str = "xla"  # "xla" (fast CPU lowering) | "pallas" (interpret)
+
+    @staticmethod
+    def from_env() -> "TileConfig":
+        return TileConfig(
+            tile_m=_env_int("PSFIT_TILE_M", 8192),
+            block_n=_env_int("PSFIT_BLOCK_N", 512),
+            bm=_env_int("PSFIT_BM", 1024),
+            cg_iters=_env_int("PSFIT_CG_ITERS", 24),
+            newton_iters=_env_int("PSFIT_NEWTON_ITERS", 8),
+            classes=_env_int("PSFIT_CLASSES", 10),
+            inner_sweeps=_env_int("PSFIT_INNER_ITERS", 3),
+            mode=os.environ.get("PSFIT_MODE", "xla"),
+        )
+
+    def validate(self) -> None:
+        if self.mode not in ("xla", "pallas"):
+            raise ValueError(f"mode must be 'xla' or 'pallas', got {self.mode!r}")
+        if self.tile_m % self.bm != 0:
+            raise ValueError(f"tile_m={self.tile_m} must divide by bm={self.bm}")
+        if self.bm % 8 != 0:
+            raise ValueError(f"bm={self.bm} must be a multiple of 8 (f32 sublane)")
+        if self.block_n % 128 != 0:
+            raise ValueError(
+                f"block_n={self.block_n} must be a multiple of 128 (lane width)"
+            )
+        if self.cg_iters < 1 or self.newton_iters < 1:
+            raise ValueError("iteration counts must be >= 1")
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``x``."""
+    return ceil_div(x, multiple) * multiple

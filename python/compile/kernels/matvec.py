@@ -1,0 +1,126 @@
+"""Pallas matrix-vector kernels for the streamed row tiles.
+
+These are the data-touching hot ops of Algorithm 2: per inner iteration and
+per feature block the node computes one ``A_ij @ x_ij`` (prediction,
+feeds the AllReduce) and one ``A_ij^T @ v`` (back-projection of the sample-
+space correction into coefficient space).  The Rust coordinator streams
+``TILE_M``-row tiles of the block through the compiled artifact and
+accumulates partial results, so the artifacts themselves have fixed shapes.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA threadblock grid of
+the paper becomes a Pallas grid over (row-tile, ) with ``(bm, block_n)``
+VMEM-resident A sub-tiles; the MXU consumes the ``(bm, block_n) @
+(block_n, 1)`` products as weight-stationary systolic passes.  Kernels are
+lowered with ``interpret=True`` so the CPU PJRT client can execute the HLO
+(real-TPU lowering would emit Mosaic custom calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TileConfig
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One grid step: o_tile = A_tile @ x (x fully VMEM-resident)."""
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def matvec(a, x, *, bm: int = 1024):
+    """``A @ x`` with A: (tile_m, block_n), x: (block_n, 1) -> (tile_m, 1).
+
+    Grid over row sub-tiles only; ``x`` is small enough (block_n <= a few K)
+    to pin in VMEM for every step, so each A element is read exactly once.
+    """
+    m, n = a.shape
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def _matvec_t_kernel(a_ref, y_ref, o_ref):
+    """Accumulating grid step: o += A_tile^T @ y_tile.
+
+    The output block is revisited on every grid step (its index_map is
+    constant), which Pallas guarantees to execute sequentially — the
+    classic reduction-over-grid pattern.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...].T @ y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def matvec_t(a, y, *, bm: int = 1024):
+    """``A^T @ y`` with A: (tile_m, block_n), y: (tile_m, 1) -> (block_n, 1)."""
+    m, n = a.shape
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), a.dtype),
+        interpret=True,
+    )(a, y)
+
+
+def _fused_xt_ax_kernel(a_ref, x_ref, o_ref):
+    """Fused grid step: o += A_tile^T (A_tile @ x).
+
+    One pass over A computes the Gram-matvec G x = A^T(A x) without ever
+    materializing either A x (beyond one tile) or G — the roofline-optimal
+    form when G itself is not cached.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = a_ref[...] @ x_ref[...]
+    o_ref[...] += a_ref[...].T @ w
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def fused_gram_matvec(a, x, *, bm: int = 1024):
+    """``A^T (A @ x)`` in a single streamed pass over A."""
+    m, n = a.shape
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _fused_xt_ax_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def default_bm(cfg: TileConfig) -> int:
+    return cfg.bm

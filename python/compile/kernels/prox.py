@@ -1,0 +1,141 @@
+"""Pallas kernels for the separable omega-bar proximal updates (Eq. 21).
+
+Because every loss of the paper's model zoo (SLS, SLogR, SSVM, SSR) is
+separable across samples, the omega-bar minimization splits into m scalar
+(or K-vector for softmax) problems — "the omega-update splits entirely into
+m_i scalar optimization problems" (paper §3.1).  That is an elementwise map
+over the sample axis: ideal Pallas territory — a 1-D grid of (bm, 1) tiles,
+VPU-only (no MXU), fully vectorized.
+
+Scalars (M = number of feature blocks, rho_l) are passed as a (8, 1) f32
+parameter vector so the artifact signature is uniform; see model.PARAMS_*.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Parameter-vector slots (kept in sync with rust/src/runtime/params.rs)
+P_MBLOCKS = 0  # M — number of feature blocks (paper's per-node GPU count)
+P_RHO_L = 1  # rho_l — inner (sharing) ADMM penalty
+P_SIZE = 8
+
+
+def _omega_squared_kernel(b_ref, c_ref, p_ref, o_ref):
+    m = p_ref[P_MBLOCKS, 0]
+    rho = p_ref[P_RHO_L, 0]
+    o_ref[...] = (2.0 * b_ref[...] + rho * c_ref[...]) / (2.0 * m + rho)
+
+
+def _omega_logistic_kernel(b_ref, c_ref, p_ref, o_ref, *, iters: int):
+    m = p_ref[P_MBLOCKS, 0]
+    rho = p_ref[P_RHO_L, 0]
+    b = b_ref[...]
+    c = c_ref[...]
+    w = c
+    for _ in range(iters):  # unrolled Newton — iters is a lowering constant
+        sig = jax.nn.sigmoid(-b * m * w)
+        grad = -m * b * sig + m * rho * (w - c)
+        hess = m * m * sig * (1.0 - sig) + m * rho
+        w = w - grad / hess
+    o_ref[...] = w
+
+
+def _omega_hinge_kernel(b_ref, c_ref, p_ref, o_ref):
+    m = p_ref[P_MBLOCKS, 0]
+    rho = p_ref[P_RHO_L, 0]
+    b = b_ref[...]
+    c = c_ref[...]
+    s = b * m * c
+    o_ref[...] = jnp.where(
+        s >= 1.0, c, jnp.where(s <= 1.0 - m / rho, c + b / rho, b / m)
+    )
+
+
+def _omega_softmax_kernel(y_ref, c_ref, p_ref, o_ref, *, iters: int):
+    m = p_ref[P_MBLOCKS, 0]
+    rho = p_ref[P_RHO_L, 0]
+    y = y_ref[...]  # (bm, K) one-hot labels
+    c = c_ref[...]
+
+    def obj(w):
+        return (
+            jax.nn.logsumexp(m * w, axis=-1, keepdims=True)
+            - m * jnp.sum(w * y, axis=-1, keepdims=True)
+            + m * rho / 2.0 * jnp.sum((w - c) ** 2, axis=-1, keepdims=True)
+        )
+
+    w = c
+    for _ in range(iters):  # damped Sherman-Morrison Newton, unrolled
+        s = jax.nn.softmax(m * w, axis=-1)
+        grad = m * (s - y) + m * rho * (w - c)
+        d = m * m * s + m * rho
+        u = m * s
+        dinv_g = grad / d
+        dinv_u = u / d
+        # Stable form of 1 - u^T D^-1 u: since sum(s) == 1,
+        #   1 - sum(M^2 s^2 / (M^2 s + M rho)) = rho * sum(M s / (M^2 s + M rho))
+        # — a sum of positives, no cancellation in f32.
+        denom = rho * jnp.sum(dinv_u, axis=-1, keepdims=True)
+        step = dinv_g + dinv_u * (
+            jnp.sum(u * dinv_g, axis=-1, keepdims=True) / denom
+        )
+        # Damped: best-of-menu keeps global monotone descent (H > 0) while
+        # eta = 1 preserves the quadratic local rate near the optimum.
+        best_w, best_f = w, obj(w)
+        for eta in (1.0, 0.5, 0.25, 0.125, 0.03125):
+            cand = w - eta * step
+            f = obj(cand)
+            take = f < best_f
+            best_w = jnp.where(take, cand, best_w)
+            best_f = jnp.where(take, f, best_f)
+        w = best_w
+    o_ref[...] = w
+
+
+def _elementwise_call(kernel, b, c, params, *, bm: int, width: int = 1):
+    m = b.shape[0]
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, width), lambda i: (i, 0)),
+            pl.BlockSpec((bm, width), lambda i: (i, 0)),
+            pl.BlockSpec((P_SIZE, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, width), b.dtype),
+        interpret=True,
+    )(b, c, params)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def omega_squared(b, c, params, *, bm: int = 1024):
+    """SLS omega-bar prox; b, c: (tile_m, 1); params: (8, 1)."""
+    return _elementwise_call(_omega_squared_kernel, b, c, params, bm=bm)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "iters"))
+def omega_logistic(b, c, params, *, bm: int = 1024, iters: int = 8):
+    """SLogR omega-bar prox (Newton); labels b in {-1, +1}."""
+    kernel = functools.partial(_omega_logistic_kernel, iters=iters)
+    return _elementwise_call(kernel, b, c, params, bm=bm)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def omega_hinge(b, c, params, *, bm: int = 1024):
+    """SSVM omega-bar prox (exact three-piece form); labels b in {-1, +1}."""
+    return _elementwise_call(_omega_hinge_kernel, b, c, params, bm=bm)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "iters", "classes"))
+def omega_softmax(y_onehot, c, params, *, bm: int = 1024, iters: int = 8, classes: int = 10):
+    """SSR omega-bar prox; y_onehot, c: (tile_m, K)."""
+    kernel = functools.partial(_omega_softmax_kernel, iters=iters)
+    return _elementwise_call(kernel, y_onehot, c, params, bm=bm, width=classes)

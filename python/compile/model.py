@@ -1,0 +1,382 @@
+"""L2 — the Bi-cADMM node-level tile programs (Algorithm 2 of the paper).
+
+Each public function here is a *tile program*: a jitted JAX function with
+fixed shapes that composes the L1 Pallas kernels into one step of the
+node-level inner ADMM.  ``aot.py`` lowers every program to HLO text once;
+the Rust coordinator (L3) loads the artifacts via PJRT and streams data
+through them — Python never runs at request time.
+
+Coefficient-space formulation
+-----------------------------
+The block x-update (Eq. 23) is a ridge least-squares whose normal matrix
+``rho_l * G_j + reg * I`` (``G_j = A_ij^T A_ij``) is iteration-invariant.
+The programs therefore split into:
+
+  * setup-time (once per dataset): ``gram_tile`` accumulates G_j over
+    streamed row tiles;
+  * per-inner-iteration: ``matvec_t_tile`` back-projects the sample-space
+    correction ``omega_bar - w_bar - nu`` into ``q_j``; ``block_solve``
+    runs ``cg_iters`` CG steps entirely in (block_n)-space;
+    ``matvec_tile`` recomputes the block prediction ``w_j = A_j x_j``
+    feeding the AllReduce; ``omega_*`` applies the separable prox (21).
+
+Scalar parameters travel in an (8, 1) f32 vector (slots below) so all
+artifacts share a uniform ABI with the Rust runtime
+(``rust/src/runtime/params.rs`` mirrors the slot layout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram as gram_k
+from .kernels import matvec as mv_k
+from .kernels import prox as prox_k
+from .kernels import ref
+from .kernels.common import TileConfig
+
+# Parameter-vector slots — keep in sync with rust/src/runtime/params.rs
+P_MBLOCKS = 0  # M     — feature blocks per node (the paper's GPU count)
+P_RHO_L = 1  # rho_l — inner sharing-ADMM penalty
+P_RHO_C = 2  # rho_c — outer consensus penalty
+P_REG = 3  # reg   — 1/(N gamma) + rho_c (Tikhonov + consensus curvature)
+P_SIZE = 8
+
+assert P_MBLOCKS == prox_k.P_MBLOCKS and P_RHO_L == prox_k.P_RHO_L
+
+
+def make_params(m_blocks, rho_l, rho_c, reg, dtype=jnp.float32):
+    p = jnp.zeros((P_SIZE, 1), dtype)
+    return (
+        p.at[P_MBLOCKS, 0]
+        .set(m_blocks)
+        .at[P_RHO_L, 0]
+        .set(rho_l)
+        .at[P_RHO_C, 0]
+        .set(rho_c)
+        .at[P_REG, 0]
+        .set(reg)
+    )
+
+
+# --------------------------------------------------------------------------
+# Lowering-mode dispatch (see TileConfig.mode)
+# --------------------------------------------------------------------------
+#
+# "pallas": the L1 kernels (interpret=True) — correctness vehicle on CPU.
+# "xla":    the tested-equal jnp forms, fused by XLA — the perf lowering.
+
+
+def _matvec(a, x, *, bm, mode):
+    if mode == "pallas":
+        return mv_k.matvec(a, x, bm=bm)
+    return a @ x
+
+
+def _matvec_t(a, y, *, bm, mode):
+    if mode == "pallas":
+        return mv_k.matvec_t(a, y, bm=bm)
+    # (y^T A)^T streams A row-major (sequential loads); the naive A^T @ y
+    # form makes XLA-CPU walk columns — ~50x slower at (8192, 512).
+    return (y.reshape(1, -1) @ a).reshape(-1, 1)
+
+
+def _gram(a, *, bm, mode):
+    if mode == "pallas":
+        return gram_k.gram(a, bm=bm)
+    return a.T @ a
+
+
+def _gemv(g, x, *, bn, mode):
+    if mode == "pallas":
+        return gram_k.gemv(g, x, bn=bn)
+    return g @ x
+
+
+# --------------------------------------------------------------------------
+# Setup-time programs
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def gram_tile(a, *, bm: int = 1024, mode: str = "pallas"):
+    """Partial Gram ``A_tile^T A_tile`` of one streamed row tile.
+
+    The caller (Rust) sums the partials over all row tiles of the block.
+    Zero-padded rows contribute nothing, so padding the last tile is exact.
+    """
+    return (_gram(a, bm=bm, mode=mode),)
+
+
+# --------------------------------------------------------------------------
+# Per-iteration programs
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def matvec_tile(a, x, *, bm: int = 1024, mode: str = "pallas"):
+    """Block prediction tile: ``w = A_tile @ x_j`` (feeds the AllReduce)."""
+    return (_matvec(a, x, bm=bm, mode=mode),)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def matvec_t_tile(a, y, *, bm: int = 1024, mode: str = "pallas"):
+    """Back-projection tile: partial ``q = A_tile^T y_tile`` (caller sums)."""
+    return (_matvec_t(a, y, bm=bm, mode=mode),)
+
+
+@functools.partial(jax.jit, static_argnames=("cg_iters", "bn", "mode"))
+def block_solve(g, x_prev, q, z, u, params, *, cg_iters: int = 24, bn: int = 512, mode: str = "pallas"):
+    """Eq. (23): ridge LS in coefficient space by ``cg_iters`` CG steps.
+
+    Solves  (rho_l G + reg I) x = rho_l (G x_prev + q) + rho_c (z - u)
+    with the Pallas ``gemv`` as the operator, warm-started at x_prev.
+    Shapes: g (block_n, block_n); all vectors (block_n, 1).
+    """
+    rho_l = params[P_RHO_L, 0]
+    rho_c = params[P_RHO_C, 0]
+    reg = params[P_REG, 0]
+
+    def hmul(v):
+        return rho_l * _gemv(g, v, bn=bn, mode=mode) + reg * v
+
+    rhs = rho_l * (_gemv(g, x_prev, bn=bn, mode=mode) + q) + rho_c * (z - u)
+    x = x_prev
+    r = rhs - hmul(x)
+    p = r
+    rs = jnp.sum(r * r)
+
+    # The loop is UNROLLED at trace time: cg_iters is a lowering constant,
+    # and straight-line HLO avoids the per-iteration while-loop overhead of
+    # the TFRT CPU runtime (~ms/iter, dominating the actual 0.5 MFLOP gemv).
+    for _ in range(cg_iters):
+        hp = hmul(p)
+        denom = jnp.sum(p * hp)
+        alpha = rs / jnp.where(denom == 0, 1.0, denom)
+        x = x + alpha * p
+        r = r - alpha * hp
+        rs_new = jnp.sum(r * r)
+        beta = rs_new / jnp.where(rs == 0, 1.0, rs)
+        p = r + beta * p
+        rs = rs_new
+    return (x,)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def omega_squared(b, c, params, *, bm: int = 1024, mode: str = "pallas"):
+    """SLS omega-bar prox tile (closed form)."""
+    if mode == "pallas":
+        return (prox_k.omega_squared(b, c, params, bm=bm),)
+    return (ref.omega_squared(b, c, params[P_MBLOCKS, 0], params[P_RHO_L, 0]),)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "iters", "mode"))
+def omega_logistic(b, c, params, *, bm: int = 1024, iters: int = 8, mode: str = "pallas"):
+    """SLogR omega-bar prox tile (Newton, labels in {-1,+1})."""
+    if mode == "pallas":
+        return (prox_k.omega_logistic(b, c, params, bm=bm, iters=iters),)
+    return (ref.omega_logistic(b, c, params[P_MBLOCKS, 0], params[P_RHO_L, 0], iters=iters),)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def omega_hinge(b, c, params, *, bm: int = 1024, mode: str = "pallas"):
+    """SSVM omega-bar prox tile (exact three-piece form)."""
+    if mode == "pallas":
+        return (prox_k.omega_hinge(b, c, params, bm=bm),)
+    return (ref.omega_hinge(b, c, params[P_MBLOCKS, 0], params[P_RHO_L, 0]),)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "iters", "classes", "mode"))
+def omega_softmax(y_onehot, c, params, *, bm: int = 1024, iters: int = 8, classes: int = 10,
+                  mode: str = "pallas"):
+    """SSR omega-bar prox tile (Sherman-Morrison Newton)."""
+    if mode == "pallas":
+        return (
+            prox_k.omega_softmax(y_onehot, c, params, bm=bm, iters=iters, classes=classes),
+        )
+    return (ref.omega_softmax(y_onehot, c, params[P_MBLOCKS, 0], params[P_RHO_L, 0], iters=iters),)
+
+
+# --------------------------------------------------------------------------
+# Fused inner-iteration program (perf ablation; see EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cg_iters", "bn", "bm", "mode"))
+def block_iteration(
+    g, a, x_prev, corr, z, u, params, *, cg_iters: int = 24, bn: int = 512, bm: int = 1024,
+    mode: str = "pallas",
+):
+    """One fused inner step for a single-row-tile block.
+
+    ``q = A^T corr``; ``x = block_solve(...)``; ``w = A x`` — one PJRT call
+    instead of three when the block's sample count fits a single tile.
+    """
+    q = _matvec_t(a, corr, bm=bm, mode=mode)
+    (x,) = block_solve(g, x_prev, q, z, u, params, cg_iters=cg_iters, bn=bn, mode=mode)
+    w = _matvec(a, x, bm=bm, mode=mode)
+    return (x, w)
+
+
+# --------------------------------------------------------------------------
+# Fused node-level sweep (the launch-granularity optimization; §Perf)
+# --------------------------------------------------------------------------
+
+
+def _omega_dispatch(loss, b, c, params, *, bm, iters, mode):
+    if loss == "squared":
+        return omega_squared(b, c, params, bm=bm, mode=mode)[0]
+    if loss == "logistic":
+        return omega_logistic(b, c, params, bm=bm, iters=iters, mode=mode)[0]
+    if loss == "hinge":
+        return omega_hinge(b, c, params, bm=bm, mode=mode)[0]
+    raise ValueError(f"node_sweep does not support loss {loss!r}")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sweeps", "cg_iters", "bn", "bm", "iters", "mode", "loss"),
+)
+def node_sweep(
+    a_blocks,
+    g_blocks,
+    x_blocks,
+    w_blocks,
+    omega,
+    nu,
+    z_blocks,
+    u_blocks,
+    b,
+    params,
+    *,
+    sweeps: int = 3,
+    cg_iters: int = 24,
+    bn: int = 512,
+    bm: int = 1024,
+    iters: int = 8,
+    mode: str = "pallas",
+    loss: str = "squared",
+):
+    """Algorithm 2, fully fused: `sweeps` inner iterations over all M
+    feature blocks of one node in a single PJRT call.
+
+    This is the launch-granularity optimization of the perf pass: the
+    granular path costs ~8 host<->device operations per (block, sweep);
+    this artifact costs one execute + one state round-trip per *outer*
+    iteration.  Both loops are unrolled at trace time.
+
+    Blocks are passed as TUPLES of separate (tile_m, block_n) arrays —
+    not one stacked (M, tile_m, block_n) tensor — so XLA never
+    materializes 16 MB slice copies per use (8.5x faster on CPU) and the
+    Rust runtime can feed its per-block persistent device buffers
+    directly.  HLO parameter order = pytree order:
+    a_0..a_{M-1}, g_0.., x_0.., w_0.., omega, nu, z_0.., u_0.., b, params.
+    Outputs: x_0..x_{M-1}, w_0..w_{M-1}, omega, nu.
+
+    Single-class losses only (squared / logistic / hinge).
+    """
+    m_blocks = len(a_blocks)
+    xs = list(x_blocks)
+    ws = list(w_blocks)
+    inv_m = 1.0 / m_blocks
+
+    for _ in range(sweeps):
+        wbar = sum(ws) * inv_m
+        corr = omega - wbar - nu
+        for j in range(m_blocks):
+            q = _matvec_t(a_blocks[j], corr, bm=bm, mode=mode)
+            (xj,) = block_solve(
+                g_blocks[j], xs[j], q, z_blocks[j], u_blocks[j], params,
+                cg_iters=cg_iters, bn=bn, mode=mode,
+            )
+            xs[j] = xj
+            ws[j] = _matvec(a_blocks[j], xj, bm=bm, mode=mode)
+        wbar = sum(ws) * inv_m
+        c = wbar + nu
+        omega = _omega_dispatch(loss, b, c, params, bm=bm, iters=iters, mode=mode)
+        nu = nu + wbar - omega
+
+    return tuple(xs) + tuple(ws) + (omega, nu)
+
+
+# --------------------------------------------------------------------------
+# Program registry consumed by aot.py
+# --------------------------------------------------------------------------
+
+
+def program_registry(cfg: TileConfig):
+    """Returns ``{name: (jitted_fn, example_args, static_kwargs)}``.
+
+    ``aot.py`` lowers via ``fn.lower(*args, **kwargs)`` so the static
+    (shape-determining) keywords are baked into the artifact.
+    """
+    f32 = jnp.float32
+    tm, nb, k = cfg.tile_m, cfg.block_n, cfg.classes
+    a = jax.ShapeDtypeStruct((tm, nb), f32)
+    vec_m = jax.ShapeDtypeStruct((tm, 1), f32)
+    vec_n = jax.ShapeDtypeStruct((nb, 1), f32)
+    mat_g = jax.ShapeDtypeStruct((nb, nb), f32)
+    mat_k = jax.ShapeDtypeStruct((tm, k), f32)
+    par = jax.ShapeDtypeStruct((P_SIZE, 1), f32)
+
+    bm = cfg.bm
+    mode = cfg.mode
+    return {
+        "gram_tile": (gram_tile, (a,), {"bm": bm, "mode": mode}),
+        "matvec_tile": (matvec_tile, (a, vec_n), {"bm": bm, "mode": mode}),
+        "matvec_t_tile": (matvec_t_tile, (a, vec_m), {"bm": bm, "mode": mode}),
+        "block_solve": (
+            block_solve,
+            (mat_g, vec_n, vec_n, vec_n, vec_n, par),
+            {"cg_iters": cfg.cg_iters, "bn": nb, "mode": mode},
+        ),
+        "block_iteration": (
+            block_iteration,
+            (mat_g, a, vec_n, vec_m, vec_n, vec_n, par),
+            {"cg_iters": cfg.cg_iters, "bn": nb, "bm": bm, "mode": mode},
+        ),
+        "omega_squared": (omega_squared, (vec_m, vec_m, par), {"bm": bm, "mode": mode}),
+        "omega_logistic": (
+            omega_logistic,
+            (vec_m, vec_m, par),
+            {"bm": bm, "iters": cfg.newton_iters, "mode": mode},
+        ),
+        "omega_hinge": (omega_hinge, (vec_m, vec_m, par), {"bm": bm, "mode": mode}),
+        "omega_softmax": (
+            omega_softmax,
+            (mat_k, mat_k, par),
+            {"bm": bm, "iters": cfg.newton_iters, "classes": k, "mode": mode},
+        ),
+    }
+
+
+def sweep_registry(cfg: TileConfig, m_block_counts=(1, 2, 4), losses=("squared", "logistic", "hinge")):
+    """Fused node_sweep artifacts: one per (M, loss) combination."""
+    f32 = jnp.float32
+    tm, nb = cfg.tile_m, cfg.block_n
+    par = jax.ShapeDtypeStruct((P_SIZE, 1), f32)
+    vec_m = jax.ShapeDtypeStruct((tm, 1), f32)
+    out = {}
+    for m in m_block_counts:
+        a_t = tuple(jax.ShapeDtypeStruct((tm, nb), f32) for _ in range(m))
+        g_t = tuple(jax.ShapeDtypeStruct((nb, nb), f32) for _ in range(m))
+        x_t = tuple(jax.ShapeDtypeStruct((nb, 1), f32) for _ in range(m))
+        w_t = tuple(jax.ShapeDtypeStruct((tm, 1), f32) for _ in range(m))
+        for loss in losses:
+            out[f"node_sweep_{loss}_m{m}"] = (
+                node_sweep,
+                (a_t, g_t, x_t, w_t, vec_m, vec_m, x_t, x_t, vec_m, par),
+                {
+                    "sweeps": cfg.inner_sweeps,
+                    "cg_iters": cfg.cg_iters,
+                    "bn": nb,
+                    "bm": cfg.bm,
+                    "iters": cfg.newton_iters,
+                    "mode": cfg.mode,
+                    "loss": loss,
+                },
+            )
+    return out

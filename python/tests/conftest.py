@@ -1,0 +1,25 @@
+"""Shared fixtures for the compile-path test suite."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+# f64 oracles need real double precision.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20240607)
+
+
+def make_matrix(rng, m, n, dtype=np.float32, normalize=True):
+    """Standard-normal feature matrix with unit-l2 columns (paper §4)."""
+    a = rng.normal(size=(m, n)).astype(dtype)
+    if normalize:
+        norms = np.linalg.norm(a, axis=0, keepdims=True)
+        norms[norms == 0] = 1.0
+        a = a / norms
+    return a

@@ -1,0 +1,235 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes (within the tile grid constraints: rows divisible
+by the row sub-tile, feature counts in lane multiples) and the numeric
+regime of every kernel in ``compile.kernels``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram as gram_k
+from compile.kernels import matvec as mv_k
+from compile.kernels import prox as prox_k
+from compile.kernels import ref
+
+from .conftest import make_matrix
+
+# Small-but-representative tile grid for the sweeps (kernels are
+# shape-generic; the AOT shapes are exercised in test_model/test_aot).
+BMS = [8, 16, 32]
+ROW_MULTIPLES = st.integers(min_value=1, max_value=6)
+COLS = st.sampled_from([8, 16, 64, 128])
+
+
+def _params(m_blocks, rho_l, rho_c=0.0, reg=0.0):
+    p = np.zeros((8, 1), np.float32)
+    p[0, 0], p[1, 0], p[2, 0], p[3, 0] = m_blocks, rho_l, rho_c, reg
+    return jnp.asarray(p)
+
+
+class TestMatvec:
+    @settings(max_examples=20, deadline=None)
+    @given(rows=ROW_MULTIPLES, n=COLS, bm=st.sampled_from(BMS), seed=st.integers(0, 2**31))
+    def test_matvec_matches_ref(self, rows, n, bm, seed):
+        rng = np.random.default_rng(seed)
+        m = rows * bm
+        a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        got = mv_k.matvec(a, x, bm=bm)
+        np.testing.assert_allclose(got, ref.matvec(a, x), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=ROW_MULTIPLES, n=COLS, bm=st.sampled_from(BMS), seed=st.integers(0, 2**31))
+    def test_matvec_t_matches_ref(self, rows, n, bm, seed):
+        rng = np.random.default_rng(seed)
+        m = rows * bm
+        a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(m, 1)), jnp.float32)
+        got = mv_k.matvec_t(a, y, bm=bm)
+        np.testing.assert_allclose(got, ref.matvec_t(a, y), rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(rows=ROW_MULTIPLES, n=COLS, bm=st.sampled_from(BMS), seed=st.integers(0, 2**31))
+    def test_fused_gram_matvec_matches_ref(self, rows, n, bm, seed):
+        rng = np.random.default_rng(seed)
+        m = rows * bm
+        a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        got = mv_k.fused_gram_matvec(a, x, bm=bm)
+        want = ref.gram(a) @ x
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_zero_padding_rows_is_exact(self, rng):
+        """Padding rows with zeros must not change A^T y or A^T A."""
+        a = make_matrix(rng, 48, 16)
+        y = rng.normal(size=(48, 1)).astype(np.float32)
+        a_pad = np.vstack([a, np.zeros((16, 16), np.float32)])
+        y_pad = np.vstack([y, np.zeros((16, 1), np.float32)])
+        got = mv_k.matvec_t(jnp.asarray(a_pad), jnp.asarray(y_pad), bm=16)
+        want = ref.matvec_t(jnp.asarray(a), jnp.asarray(y))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestGram:
+    @settings(max_examples=15, deadline=None)
+    @given(rows=ROW_MULTIPLES, n=COLS, bm=st.sampled_from(BMS), seed=st.integers(0, 2**31))
+    def test_gram_matches_ref(self, rows, n, bm, seed):
+        rng = np.random.default_rng(seed)
+        m = rows * bm
+        a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        np.testing.assert_allclose(
+            gram_k.gram(a, bm=bm), ref.gram(a), rtol=1e-3, atol=1e-3
+        )
+
+    def test_gram_is_symmetric_psd(self, rng):
+        a = jnp.asarray(make_matrix(rng, 64, 32))
+        g = np.asarray(gram_k.gram(a, bm=16))
+        np.testing.assert_allclose(g, g.T, atol=1e-6)
+        eigs = np.linalg.eigvalsh(g.astype(np.float64))
+        assert eigs.min() > -1e-5
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([64, 128, 256]), bn=st.sampled_from([32, 64]), seed=st.integers(0, 2**31))
+    def test_gemv_matches_ref(self, n, bn, seed):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        np.testing.assert_allclose(
+            gram_k.gemv(g, x, bn=bn), ref.gemv(g, x), rtol=1e-3, atol=1e-3
+        )
+
+
+class TestOmegaProx:
+    """Each prox kernel must (a) match ref and (b) satisfy first-order
+    optimality of  min_w phi(M w; b) + (M rho / 2)(w - c)^2."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m_blocks=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+        rho=st.floats(0.5, 16.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_squared_matches_ref_and_is_optimal(self, m_blocks, rho, seed):
+        rng = np.random.default_rng(seed)
+        b = jnp.asarray(rng.normal(size=(32, 1)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(32, 1)), jnp.float32)
+        got = prox_k.omega_squared(b, c, _params(m_blocks, rho), bm=8)
+        want = ref.omega_squared(b, c, m_blocks, rho)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        # optimality: 2M(Mw - b) + M rho (w - c) == 0
+        w = np.asarray(got, np.float64)
+        grad = 2 * m_blocks * (m_blocks * w - np.asarray(b)) + m_blocks * rho * (
+            w - np.asarray(c)
+        )
+        np.testing.assert_allclose(grad, 0.0, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m_blocks=st.sampled_from([1.0, 2.0, 4.0]),
+        rho=st.floats(0.5, 8.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_logistic_matches_ref_and_is_optimal(self, m_blocks, rho, seed):
+        rng = np.random.default_rng(seed)
+        b = jnp.asarray(np.where(rng.normal(size=(32, 1)) > 0, 1.0, -1.0), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(32, 1)), jnp.float32)
+        got = prox_k.omega_logistic(b, c, _params(m_blocks, rho), bm=8, iters=12)
+        want = ref.omega_logistic(b, c, m_blocks, rho, iters=40)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+        w = np.asarray(got, np.float64)
+        bb, cc = np.asarray(b, np.float64), np.asarray(c, np.float64)
+        sig = 1.0 / (1.0 + np.exp(bb * m_blocks * w))
+        grad = -m_blocks * bb * sig + m_blocks * rho * (w - cc)
+        np.testing.assert_allclose(grad, 0.0, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m_blocks=st.sampled_from([1.0, 2.0, 4.0]),
+        rho=st.floats(0.5, 8.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hinge_matches_ref(self, m_blocks, rho, seed):
+        rng = np.random.default_rng(seed)
+        b = jnp.asarray(np.where(rng.normal(size=(32, 1)) > 0, 1.0, -1.0), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(32, 1)), jnp.float32)
+        got = prox_k.omega_hinge(b, c, _params(m_blocks, rho), bm=8)
+        want = ref.omega_hinge(b, c, m_blocks, rho)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_hinge_is_global_min_by_scan(self, rng):
+        """Brute-force: the closed form beats a dense grid of candidates."""
+        m_blocks, rho = 2.0, 3.0
+        b = np.where(rng.normal(size=(16, 1)) > 0, 1.0, -1.0).astype(np.float32)
+        c = rng.normal(size=(16, 1)).astype(np.float32)
+        w = np.asarray(
+            prox_k.omega_hinge(
+                jnp.asarray(b), jnp.asarray(c), _params(m_blocks, rho), bm=8
+            )
+        )
+
+        def h(wv):
+            return np.maximum(0, 1 - b * m_blocks * wv) + m_blocks * rho / 2 * (
+                wv - c
+            ) ** 2
+
+        h_star = h(w)
+        grid = np.linspace(-4, 4, 801, dtype=np.float64)
+        for g in grid:
+            assert np.all(h_star <= h(np.full_like(w, g)) + 1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m_blocks=st.sampled_from([1.0, 2.0, 4.0]),
+        rho=st.floats(0.5, 8.0),
+        k=st.sampled_from([4, 10]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_softmax_matches_ref_and_is_optimal(self, m_blocks, rho, k, seed):
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(np.eye(k, dtype=np.float32)[rng.integers(0, k, 24)])
+        c = jnp.asarray(rng.normal(size=(24, k)), jnp.float32)
+        got = prox_k.omega_softmax(
+            y, c, _params(m_blocks, rho), bm=8, iters=12, classes=k
+        )
+        want = ref.omega_softmax(y, c, m_blocks, rho, iters=40)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-3)
+        w = np.asarray(got, np.float64)
+        yy, cc = np.asarray(y, np.float64), np.asarray(c, np.float64)
+        p = np.exp(m_blocks * w - (m_blocks * w).max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        grad = m_blocks * (p - yy) + m_blocks * rho * (w - cc)
+        np.testing.assert_allclose(grad, 0.0, atol=5e-3)
+
+
+class TestRefSelfConsistency:
+    """The oracles themselves satisfy the optimality conditions in f64."""
+
+    def test_block_solve_exact_stationarity(self, rng):
+        n = 32
+        a = make_matrix(rng, 96, n).astype(np.float64)
+        g = jnp.asarray(a.T @ a)
+        x_prev = jnp.asarray(rng.normal(size=(n, 1)))
+        q = jnp.asarray(rng.normal(size=(n, 1)))
+        z = jnp.asarray(rng.normal(size=(n, 1)))
+        u = jnp.asarray(rng.normal(size=(n, 1)))
+        rho_l, rho_c, reg = 2.0, 1.5, 1.7
+        x = ref.block_solve_exact(g, x_prev, q, z, u, rho_l, rho_c, reg)
+        # gradient of the quadratic: (rho_l G + reg I)x - rhs == 0
+        lhs = rho_l * np.asarray(g) @ np.asarray(x) + reg * np.asarray(x)
+        rhs = rho_l * (
+            np.asarray(g) @ np.asarray(x_prev) + np.asarray(q)
+        ) + rho_c * (np.asarray(z) - np.asarray(u))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+    def test_cg_converges_to_exact(self, rng):
+        n = 48
+        a = make_matrix(rng, 128, n).astype(np.float64)
+        g = jnp.asarray(a.T @ a)
+        args = [jnp.asarray(rng.normal(size=(n, 1))) for _ in range(4)]
+        exact = ref.block_solve_exact(g, *args, 2.0, 1.0, 1.5)
+        cg = ref.block_solve_cg(g, *args, 2.0, 1.0, 1.5, iters=n * 2)
+        np.testing.assert_allclose(cg, exact, rtol=1e-8, atol=1e-8)

@@ -1,0 +1,195 @@
+"""L2 tile programs vs exact solutions, and the AOT manifest contract."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.common import TileConfig
+
+from .conftest import make_matrix
+
+
+SMALL = TileConfig(tile_m=128, block_n=128, bm=32, cg_iters=40, newton_iters=8, classes=4)
+
+
+class TestBlockSolve:
+    def test_block_solve_matches_exact(self, rng):
+        n = 128
+        a = make_matrix(rng, 256, n)
+        g = jnp.asarray((a.T @ a).astype(np.float32))
+        x_prev = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+        rho_l, rho_c, reg = 2.0, 1.0, 1.5
+        params = model.make_params(4.0, rho_l, rho_c, reg)
+        (x,) = model.block_solve(g, x_prev, q, z, u, params, cg_iters=80, bn=n)
+        exact = ref.block_solve_exact(
+            jnp.asarray(g, jnp.float64),
+            jnp.asarray(x_prev, jnp.float64),
+            jnp.asarray(q, jnp.float64),
+            jnp.asarray(z, jnp.float64),
+            jnp.asarray(u, jnp.float64),
+            rho_l,
+            rho_c,
+            reg,
+        )
+        np.testing.assert_allclose(x, exact, rtol=1e-3, atol=1e-4)
+
+    def test_block_solve_warm_start_is_fixed_point(self, rng):
+        """If x_prev already solves the system, CG must not move it."""
+        n = 64
+        a = make_matrix(rng, 128, n)
+        g64 = (a.T @ a).astype(np.float64)
+        rho_l, rho_c, reg = 2.0, 1.0, 1.5
+        q = rng.normal(size=(n, 1))
+        z = rng.normal(size=(n, 1))
+        u = rng.normal(size=(n, 1))
+        # find the fixed point x*: (rho_l G + reg I) x* = rho_l(G x* + q) + rho_c(z-u)
+        #   -> reg x* = rho_l q + rho_c (z - u)
+        x_star = (rho_l * q + rho_c * (z - u)) / reg
+        params = model.make_params(4.0, rho_l, rho_c, reg)
+        (x,) = model.block_solve(
+            jnp.asarray(g64, jnp.float32),
+            jnp.asarray(x_star, jnp.float32),
+            jnp.asarray(q, jnp.float32),
+            jnp.asarray(z, jnp.float32),
+            jnp.asarray(u, jnp.float32),
+            params,
+            cg_iters=5,
+            bn=n,
+        )
+        np.testing.assert_allclose(x, x_star.astype(np.float32), rtol=1e-4, atol=1e-4)
+
+
+class TestBlockIteration:
+    def test_fused_equals_composition(self, rng):
+        tm, nb = 64, 128
+        a = jnp.asarray(make_matrix(rng, tm, nb))
+        g = jnp.asarray(np.asarray(a.T @ a))
+        x_prev = jnp.asarray(rng.normal(size=(nb, 1)), jnp.float32)
+        corr = jnp.asarray(rng.normal(size=(tm, 1)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(nb, 1)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(nb, 1)), jnp.float32)
+        params = model.make_params(2.0, 2.0, 1.0, 1.5)
+        x_f, w_f = model.block_iteration(
+            g, a, x_prev, corr, z, u, params, cg_iters=30, bn=nb, bm=32
+        )
+        (q,) = model.matvec_t_tile(a, corr, bm=32)
+        (x_c,) = model.block_solve(g, x_prev, q, z, u, params, cg_iters=30, bn=nb)
+        (w_c,) = model.matvec_tile(a, x_c, bm=32)
+        np.testing.assert_allclose(x_f, x_c, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(w_f, w_c, rtol=1e-5, atol=1e-6)
+
+
+class TestInnerAdmmSweep:
+    """Compose the tile programs into the full Algorithm 2 and check that it
+    solves the node subproblem (15) for the squared loss."""
+
+    def test_inner_admm_solves_prox_problem(self, rng):
+        m, n, blocks = 96, 64, 2
+        nb = n // blocks
+        n_nodes, gamma = 2.0, 10.0
+        rho_c, rho_l = 1.0, 2.0
+        reg = 1.0 / (n_nodes * gamma) + rho_c
+        a = make_matrix(rng, m, n).astype(np.float64)
+        b = rng.normal(size=(m, 1))
+        z = rng.normal(size=(n, 1))
+        u = rng.normal(size=(n, 1))
+
+        # exact minimizer of (15): (2 A^T A + reg I) x = 2 A^T b + rho_c (z-u)
+        h = 2 * a.T @ a + reg * np.eye(n)
+        x_exact = np.linalg.solve(h, 2 * a.T @ b + rho_c * (z - u))
+
+        # inner ADMM via tile programs (f32)
+        a32 = a.astype(np.float32)
+        params = model.make_params(float(blocks), rho_l, rho_c, reg)
+        xs = [np.zeros((nb, 1), np.float32) for _ in range(blocks)]
+        ws = [np.zeros((m, 1), np.float32) for _ in range(blocks)]
+        omega = np.zeros((m, 1), np.float32)
+        nu = np.zeros((m, 1), np.float32)
+        ablocks = [a32[:, j * nb : (j + 1) * nb] for j in range(blocks)]
+        grams = [np.asarray(model.gram_tile(jnp.asarray(aj), bm=32)[0]) for aj in ablocks]
+        zs = [z[j * nb : (j + 1) * nb].astype(np.float32) for j in range(blocks)]
+        us = [u[j * nb : (j + 1) * nb].astype(np.float32) for j in range(blocks)]
+
+        for _ in range(60):
+            wbar = sum(ws) / blocks
+            corr = omega - wbar - nu
+            for j in range(blocks):
+                (q,) = model.matvec_t_tile(jnp.asarray(ablocks[j]), jnp.asarray(corr), bm=32)
+                (xj,) = model.block_solve(
+                    jnp.asarray(grams[j]),
+                    jnp.asarray(xs[j]),
+                    q,
+                    jnp.asarray(zs[j]),
+                    jnp.asarray(us[j]),
+                    params,
+                    cg_iters=40,
+                    bn=nb,
+                )
+                xs[j] = np.asarray(xj)
+                ws[j] = np.asarray(model.matvec_tile(jnp.asarray(ablocks[j]), xj, bm=32)[0])
+            wbar = sum(ws) / blocks
+            c = wbar + nu
+            (omega_j,) = model.omega_squared(
+                jnp.asarray(b, jnp.float32), jnp.asarray(c), params, bm=32
+            )
+            omega = np.asarray(omega_j)
+            nu = nu + wbar - omega
+
+        x_admm = np.vstack(xs)
+        np.testing.assert_allclose(x_admm, x_exact, rtol=5e-3, atol=5e-3)
+
+
+class TestAotManifest:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.build(out, SMALL, verbose=False)
+        return out, manifest
+
+    def test_manifest_lists_all_programs(self, built):
+        _, manifest = built
+        expected = set(model.program_registry(SMALL).keys())
+        expected |= set(model.sweep_registry(SMALL).keys())
+        assert set(manifest["artifacts"].keys()) == expected
+
+    def test_files_exist_and_are_hlo_text(self, built):
+        out, manifest = built
+        for name, art in manifest["artifacts"].items():
+            p = out / art["file"]
+            assert p.exists(), name
+            head = p.read_text()[:200]
+            assert "HloModule" in head, name
+
+    def test_manifest_shapes_match_registry(self, built):
+        import jax
+
+        _, manifest = built
+        reg = dict(model.program_registry(SMALL))
+        reg.update(model.sweep_registry(SMALL))
+        for name, art in manifest["artifacts"].items():
+            _, args, _ = reg[name]
+            leaves = jax.tree_util.tree_leaves(list(args))
+            assert len(art["inputs"]) == len(leaves)
+            for spec, aval in zip(art["inputs"], leaves):
+                assert spec["shape"] == list(aval.shape)
+                assert spec["dtype"] == "float32"
+
+    def test_fingerprint_stable(self, built):
+        _, manifest = built
+        assert manifest["fingerprint"] == aot.source_fingerprint()
+
+    def test_roundtrip_is_noop(self, built, capfd):
+        out, manifest = built
+        on_disk = json.loads((pathlib.Path(out) / "manifest.json").read_text())
+        assert on_disk["fingerprint"] == manifest["fingerprint"]

@@ -1,0 +1,103 @@
+"""The fused node_sweep program vs the granular tile-program composition,
+in both lowering modes — the contract the Rust fused path relies on."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+from .conftest import make_matrix
+
+
+def manual_sweeps(a_blocks, b, z_blocks, u_blocks, params, *, sweeps, cg_iters, bn, bm, mode, loss):
+    """Compose the granular programs exactly as admm::local does."""
+    M = len(a_blocks)
+    tm = a_blocks[0].shape[0]
+    nb = a_blocks[0].shape[1]
+    grams = [np.asarray(model.gram_tile(a, bm=bm, mode=mode)[0]) for a in a_blocks]
+    xs = [np.zeros((nb, 1), np.float32) for _ in range(M)]
+    ws = [np.zeros((tm, 1), np.float32) for _ in range(M)]
+    omega = np.zeros((tm, 1), np.float32)
+    nu = np.zeros((tm, 1), np.float32)
+    omega_fn = {
+        "squared": model.omega_squared,
+        "logistic": model.omega_logistic,
+        "hinge": model.omega_hinge,
+    }[loss]
+    for _ in range(sweeps):
+        wbar = sum(ws) / M
+        corr = omega - wbar - nu
+        for j in range(M):
+            (q,) = model.matvec_t_tile(a_blocks[j], jnp.asarray(corr), bm=bm, mode=mode)
+            (xj,) = model.block_solve(
+                jnp.asarray(grams[j]), jnp.asarray(xs[j]), q,
+                z_blocks[j], u_blocks[j], params, cg_iters=cg_iters, bn=nb, mode=mode,
+            )
+            xs[j] = np.asarray(xj)
+            ws[j] = np.asarray(model.matvec_tile(a_blocks[j], xj, bm=bm, mode=mode)[0])
+        wbar = sum(ws) / M
+        c = jnp.asarray(wbar + nu)
+        omega = np.asarray(omega_fn(jnp.asarray(b), c, params, bm=bm, mode=mode)[0])
+        nu = nu + wbar - omega
+    return xs, ws, omega, nu
+
+
+@pytest.mark.parametrize("mode", ["xla", "pallas"])
+@pytest.mark.parametrize("loss", ["squared", "logistic", "hinge"])
+@pytest.mark.parametrize("m_blocks", [1, 2])
+def test_node_sweep_equals_composition(rng, mode, loss, m_blocks):
+    tm, nb, sweeps, cg = 64, 32, 2, 30
+    a_blocks = tuple(jnp.asarray(make_matrix(rng, tm, nb)) for _ in range(m_blocks))
+    g_blocks = tuple(
+        model.gram_tile(a, bm=16, mode=mode)[0] for a in a_blocks
+    )
+    x0 = tuple(jnp.zeros((nb, 1), jnp.float32) for _ in range(m_blocks))
+    w0 = tuple(jnp.zeros((tm, 1), jnp.float32) for _ in range(m_blocks))
+    omega0 = jnp.zeros((tm, 1), jnp.float32)
+    nu0 = jnp.zeros((tm, 1), jnp.float32)
+    z = tuple(jnp.asarray(rng.normal(size=(nb, 1)), jnp.float32) for _ in range(m_blocks))
+    u = tuple(jnp.asarray(rng.normal(size=(nb, 1)) * 0.1, jnp.float32) for _ in range(m_blocks))
+    if loss == "squared":
+        b = jnp.asarray(rng.normal(size=(tm, 1)), jnp.float32)
+    else:
+        b = jnp.asarray(np.where(rng.normal(size=(tm, 1)) > 0, 1.0, -1.0), jnp.float32)
+    params = model.make_params(float(m_blocks), 2.0, 1.0, 1.05)
+
+    out = model.node_sweep(
+        a_blocks, g_blocks, x0, w0, omega0, nu0, z, u, b, params,
+        sweeps=sweeps, cg_iters=cg, bn=nb, bm=16, iters=8, mode=mode, loss=loss,
+    )
+    xs = out[:m_blocks]
+    ws = out[m_blocks : 2 * m_blocks]
+    omega, nu = out[2 * m_blocks], out[2 * m_blocks + 1]
+
+    xs2, ws2, omega2, nu2 = manual_sweeps(
+        a_blocks, b, z, u, params,
+        sweeps=sweeps, cg_iters=cg, bn=nb, bm=16, mode=mode, loss=loss,
+    )
+    for j in range(m_blocks):
+        np.testing.assert_allclose(xs[j], xs2[j], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(ws[j], ws2[j], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(omega, omega2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(nu, nu2, rtol=1e-4, atol=1e-5)
+
+
+def test_modes_agree_with_each_other(rng):
+    """The xla and pallas lowerings are the same math."""
+    tm, nb = 64, 32
+    a = (jnp.asarray(make_matrix(rng, tm, nb)),)
+    g = (model.gram_tile(a[0], bm=16, mode="xla")[0],)
+    x0 = (jnp.zeros((nb, 1), jnp.float32),)
+    w0 = (jnp.zeros((tm, 1), jnp.float32),)
+    z = (jnp.asarray(rng.normal(size=(nb, 1)), jnp.float32),)
+    zero = jnp.zeros((tm, 1), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(tm, 1)), jnp.float32)
+    params = model.make_params(1.0, 2.0, 1.0, 1.05)
+    kw = dict(sweeps=2, cg_iters=30, bn=nb, bm=16, iters=8, loss="squared")
+    out_x = model.node_sweep(a, g, x0, w0, zero, zero, z, z, b, params, mode="xla", **kw)
+    out_p = model.node_sweep(a, g, x0, w0, zero, zero, z, z, b, params, mode="pallas", **kw)
+    for ax, ap in zip(out_x, out_p):
+        np.testing.assert_allclose(ax, ap, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,240 @@
+//! Micro-benchmarks of the iteration hot paths (criterion-style harness
+//! from `psfit::util::bench`; criterion itself is unavailable offline).
+//!
+//! Groups:
+//!   linalg       — native matvec / gram / Cholesky primitives
+//!   sparsity     — l1-ball & epigraph projections, s-update (coordinator)
+//!   global       — the full (z,t,s,v) coordinator update at paper dims
+//!   block        — native block_step (the per-device inner op)
+//!   omega        — separable prox per loss
+//!   xla          — artifact execution (block_iteration, node_sweep) if
+//!                  artifacts are built
+//!
+//! Run: `cargo bench --bench hot_paths [-- <group-filter>]`
+
+use std::time::Duration;
+
+use psfit::backend::native::{NativeBackend, SolveMode};
+use psfit::backend::{BlockParams, NodeBackend};
+use psfit::data::{FeaturePlan, SyntheticSpec};
+use psfit::linalg::{Cholesky, Matrix};
+use psfit::losses::{Hinge, Logistic, Loss, Squared};
+use psfit::sparsity;
+use psfit::util::bench::bench;
+use psfit::util::rng::Rng;
+
+const TARGET: Duration = Duration::from_millis(300);
+
+fn filter_match(filter: &Option<String>, group: &str) -> bool {
+    filter.as_deref().map_or(true, |f| group.contains(f))
+}
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| a != "--bench");
+    let mut rng = Rng::seed_from(42);
+
+    if filter_match(&filter, "linalg") {
+        println!("\n== linalg ==");
+        let a = {
+            let mut m = Matrix::zeros(2048, 512);
+            rng.fill_normal_f32(&mut m.data);
+            m
+        };
+        let x: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; 2048];
+        println!("{}", bench("matvec 2048x512", TARGET, || a.matvec(&x, &mut y)).report());
+        let mut q = vec![0.0f32; 512];
+        println!(
+            "{}",
+            bench("matvec_t 2048x512", TARGET, || a.matvec_t(&y, &mut q)).report()
+        );
+        let mut g = vec![0.0f32; 512 * 512];
+        println!(
+            "{}",
+            bench("gram 2048x512 (setup op)", Duration::from_millis(600), || {
+                g.fill(0.0);
+                a.gram_accumulate(&mut g);
+            })
+            .report()
+        );
+        let mut h = vec![0.0f64; 512 * 512];
+        for i in 0..512 {
+            for j in 0..512 {
+                h[i * 512 + j] = 2.0 * g[i * 512 + j] as f64;
+            }
+            h[i * 512 + i] += 1.5;
+        }
+        println!(
+            "{}",
+            bench("cholesky factor 512", Duration::from_millis(600), || {
+                let _ = Cholesky::factor(&h, 512).unwrap();
+            })
+            .report()
+        );
+    }
+
+    if filter_match(&filter, "sparsity") {
+        println!("\n== sparsity (coordinator geometry) ==");
+        for n in [1000usize, 4000, 10000] {
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            println!(
+                "{}",
+                bench(&format!("project_l1_ball n={n}"), TARGET, || {
+                    let _ = sparsity::project_l1_ball(&v, 10.0);
+                })
+                .report()
+            );
+            println!(
+                "{}",
+                bench(&format!("project_l1_epigraph n={n}"), TARGET, || {
+                    let _ = sparsity::project_l1_epigraph(&v, 5.0);
+                })
+                .report()
+            );
+            println!(
+                "{}",
+                bench(&format!("s_update n={n} kappa={}", n / 5), TARGET, || {
+                    let _ = sparsity::s_update(&v, 3.0, n / 5);
+                })
+                .report()
+            );
+        }
+    }
+
+    if filter_match(&filter, "global") {
+        println!("\n== global (z,t,s,v) update at paper dims ==");
+        for n in [2000usize, 4000] {
+            let mut g = psfit::admm::GlobalState::new(n);
+            let c: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            g.s = sparsity::s_update(&c, 2.0, n / 5);
+            println!(
+                "{}",
+                bench(&format!("zt_update n={n} (80 PG iters)"), TARGET, || {
+                    g.zt_update(&c, 4, 2.0, 1.0, 80);
+                })
+                .report()
+            );
+            println!(
+                "{}",
+                bench(&format!("s_update+v n={n}"), TARGET, || {
+                    g.s_update(n / 5);
+                    g.v_update();
+                })
+                .report()
+            );
+        }
+    }
+
+    if filter_match(&filter, "block") {
+        println!("\n== native block_step (per-device inner op) ==");
+        let spec = SyntheticSpec::regression(512, 2048, 1);
+        let ds = spec.generate();
+        let plan = FeaturePlan::new(512, 1, 1 << 20);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 2.0,
+            reg: 2.025,
+        };
+        for (label, mode) in [
+            ("cg24", SolveMode::Cg { iters: 24 }),
+            ("direct", SolveMode::Direct),
+        ] {
+            let mut be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
+            let corr: Vec<f32> = (0..2048).map(|_| rng.normal_f32()).collect();
+            let z = vec![0.1f32; 512];
+            let u = vec![0.0f32; 512];
+            let mut x = vec![0.0f32; 512];
+            let mut pred = vec![0.0f32; 2048];
+            println!(
+                "{}",
+                bench(&format!("block_step 2048x512 {label}"), TARGET, || {
+                    be.block_step(0, params, &corr, &z, &u, &mut x, &mut pred);
+                })
+                .report()
+            );
+        }
+    }
+
+    if filter_match(&filter, "omega") {
+        println!("\n== omega prox (per-sample separable) ==");
+        let m = 8192;
+        let labels: Vec<f32> = (0..m)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let c: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0.0f32; m];
+        for (name, loss) in [
+            ("squared", &Squared as &dyn Loss),
+            ("logistic", &Logistic),
+            ("hinge", &Hinge),
+        ] {
+            println!(
+                "{}",
+                bench(&format!("omega_{name} m=8192"), TARGET, || {
+                    loss.omega_update(&labels, &c, 2.0, 2.0, &mut out);
+                })
+                .report()
+            );
+        }
+    }
+
+    if filter_match(&filter, "xla") {
+        let dir = psfit::driver::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            println!("\n== xla artifact execution ==");
+            let spec = SyntheticSpec::regression(512, 2048, 1);
+            let ds = spec.generate();
+            let rt = std::rc::Rc::new(psfit::runtime::XlaRuntime::open(&dir).unwrap());
+            let plan = FeaturePlan::new(512, 1, rt.manifest().block_n);
+            let mut be =
+                psfit::backend::xla::XlaBackend::new(rt, &ds.shards[0], &plan, Box::new(Squared))
+                    .unwrap();
+            let params = BlockParams {
+                rho_l: 2.0,
+                rho_c: 2.0,
+                reg: 2.025,
+            };
+            let corr: Vec<f32> = (0..2048).map(|_| rng.normal_f32()).collect();
+            let z = vec![0.1f32; 512];
+            let u = vec![0.0f32; 512];
+            let mut x = vec![0.0f32; 512];
+            let mut pred = vec![0.0f32; 2048];
+            println!(
+                "{}",
+                bench(
+                    "xla block_iteration 8192x512 (padded)",
+                    Duration::from_secs(2),
+                    || {
+                        be.block_step(0, params, &corr, &z, &u, &mut x, &mut pred);
+                    }
+                )
+                .report()
+            );
+            let z_blocks = vec![z.clone()];
+            let u_blocks = vec![u.clone()];
+            let mut x_blocks = vec![x.clone()];
+            let mut preds = vec![pred.clone()];
+            let mut omega = vec![0.0f32; 2048];
+            let mut nu = vec![0.0f32; 2048];
+            println!(
+                "{}",
+                bench("xla node_sweep M=1 (3 sweeps)", Duration::from_secs(2), || {
+                    let ok = be.node_sweep(
+                        params,
+                        3,
+                        &z_blocks,
+                        &u_blocks,
+                        &mut x_blocks,
+                        &mut preds,
+                        &mut omega,
+                        &mut nu,
+                    );
+                    assert!(ok);
+                })
+                .report()
+            );
+        } else {
+            eprintln!("(xla group skipped: run `make artifacts`)");
+        }
+    }
+}

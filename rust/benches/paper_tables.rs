@@ -1,0 +1,140 @@
+//! End-to-end benchmark per paper table/figure — `cargo bench` entry point.
+//!
+//! Runs each experiment harness at REDUCED sizes (bench-budget versions of
+//! the `psfit fig1..fig4 / table1` commands, which remain the full
+//! regeneration path) and prints the same rows the paper reports.  The
+//! point of this binary is CI-sized evidence that every harness runs and
+//! produces the paper's qualitative shape; EXPERIMENTS.md records a full
+//! run of the real harnesses.
+//!
+//! Run: `cargo bench --bench paper_tables [-- <filter>]`
+
+use psfit::config::BackendKind;
+use psfit::harness;
+
+fn filter_match(filter: &Option<String>, group: &str) -> bool {
+    filter.as_deref().map_or(true, |f| group.contains(f))
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| a != "--bench");
+    let artifacts = psfit::driver::default_artifacts_dir()
+        .join("manifest.json")
+        .exists();
+
+    if filter_match(&filter, "fig1") {
+        println!("\n===== Figure 1 (residuals vs rho_b) — bench-sized =====");
+        let opts = harness::fig1::Fig1Opts {
+            full: false,
+            iters: 25,
+            backend: BackendKind::Native,
+            out: None,
+        };
+        let t = harness::fig1(&opts)?;
+        // print the last row of each rho_b series (the converged residuals)
+        let mut last: std::collections::BTreeMap<String, Vec<String>> = Default::default();
+        for row in &t.rows {
+            last.insert(row[0].clone(), row.clone());
+        }
+        println!("rho_b   iter   primal       dual         bilinear");
+        for (_, row) in last {
+            println!("{:<7} {:<6} {:<12} {:<12} {}", row[0], row[1], row[2], row[3], row[4]);
+        }
+    }
+
+    if filter_match(&filter, "table1") {
+        println!("\n===== Table 1 (Bi-cADMM vs MIP vs Lasso) — bench-sized =====");
+        let opts = harness::table1::Table1Opts {
+            full: false,
+            backend: if artifacts {
+                BackendKind::Xla
+            } else {
+                BackendKind::Native
+            },
+            mip_budget: 20.0,
+            out: None,
+        };
+        let t = table1_reduced(&opts)?;
+        println!("{}", t.to_pretty());
+    }
+
+    if filter_match(&filter, "fig23") {
+        println!("\n===== Figures 2 & 3 (scaling) — bench-sized =====");
+        if artifacts {
+            let opts = harness::scaling::ScalingOpts {
+                full: false,
+                iters: 5,
+                out: None,
+            };
+            let t = harness::fig2(&opts)?;
+            println!("{}", t.to_pretty());
+        } else {
+            eprintln!("(skipped: run `make artifacts`)");
+        }
+    }
+
+    Ok(())
+}
+
+/// Table 1 on an even smaller grid than the CLI default (bench budget).
+fn table1_reduced(opts: &harness::table1::Table1Opts) -> anyhow::Result<psfit::metrics::CsvTable> {
+    use psfit::baselines::{best_subset_bnb, lasso_path, BnbStatus};
+    use psfit::config::Config;
+    use psfit::data::SyntheticSpec;
+    use psfit::metrics::CsvTable;
+    use psfit::sparsity::support_f1;
+    use psfit::util::Stopwatch;
+
+    let mut table = CsvTable::new(&[
+        "s_l", "m", "n", "bicadmm_s", "bicadmm_f1", "mip_s", "mip_status", "lasso_s",
+        "lasso_recovered",
+    ]);
+    for &sl in &[0.6, 0.9] {
+        let (m, n) = (2000usize, 128usize);
+        let mut spec = SyntheticSpec::regression(n, m, 4);
+        spec.sparsity_level = sl;
+        spec.noise_std = 0.05;
+        let ds = spec.generate();
+        let kappa = spec.kappa();
+
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 4;
+        cfg.platform.backend = opts.backend;
+        cfg.solver.kappa = kappa;
+        cfg.solver.rho_c = 2.0;
+        cfg.solver.rho_b = 1.0;
+        cfg.solver.rho_l = 2.0;
+        cfg.solver.max_iters = 120;
+        cfg.solver.polish = false;
+        let run = harness::run_timed(&ds, &cfg, true)?;
+        let f1 = support_f1(&run.result.support, &ds.support_true);
+
+        let (a, b) = ds.stacked();
+        let mip = best_subset_bnb(&a, &b, kappa, cfg.solver.gamma, opts.mip_budget);
+        let mip_status = match mip.status {
+            BnbStatus::Optimal => "optimal".to_string(),
+            BnbStatus::CutOff => "cut off".to_string(),
+        };
+        let watch = Stopwatch::start();
+        let lasso = lasso_path(&a, &b, kappa, 40, 200);
+        let lasso_s = watch.elapsed_secs();
+        let lasso_top = {
+            let mut idx = psfit::sparsity::top_k_indices(&lasso.x, kappa);
+            idx.sort_unstable();
+            idx
+        };
+        let recovered = lasso_top == ds.support_true;
+        table.row(vec![
+            format!("{sl}"),
+            m.to_string(),
+            n.to_string(),
+            format!("{:.2}", run.solve_seconds),
+            format!("{f1:.3}"),
+            format!("{:.1}", mip.wall_seconds),
+            mip_status,
+            format!("{:.2}{}", lasso_s, if recovered { "" } else { "*" }),
+            recovered.to_string(),
+        ]);
+    }
+    Ok(table)
+}

@@ -1,0 +1,209 @@
+//! Coordinator-side (global node) updates of Bi-cADMM.
+//!
+//! These are the "cost-effective computations" the paper keeps on CPUs:
+//! they touch only coefficient-space vectors (length n), never the data.
+
+use crate::linalg::ops;
+use crate::metrics::IterRecord;
+use crate::sparsity::{self, project_l1_epigraph};
+
+/// Global variables (z, t, s, v) plus the previous z for the dual residual.
+#[derive(Debug, Clone)]
+pub struct GlobalState {
+    pub z: Vec<f64>,
+    pub t: f64,
+    pub s: Vec<f64>,
+    /// Scaled bilinear multiplier v = lambda / rho_b (Eq. 11/13).
+    pub v: f64,
+    z_prev: Vec<f64>,
+}
+
+impl GlobalState {
+    pub fn new(dim: usize) -> GlobalState {
+        GlobalState {
+            z: vec![0.0; dim],
+            t: 0.0,
+            s: vec![0.0; dim],
+            v: 0.0,
+            z_prev: vec![0.0; dim],
+        }
+    }
+
+    /// The (z, t)-update (7b): minimize
+    ///   F(z, t) = (N rho_c / 2) ||z - c||^2
+    ///           + (rho_b / 2) (z^T s - t + v)^2
+    /// over the l1 epigraph {||z||_1 <= t}, where `c = mean_i(x_i + u_i)`.
+    ///
+    /// Solved by FISTA with the exact epigraph projection; the gradient is
+    ///   dF/dz = N rho_c (z - c) + rho_b g s,   dF/dt = -rho_b g,
+    /// with g = z^T s - t + v, and the Lipschitz constant is bounded by
+    ///   L <= N rho_c + rho_b (||s||^2 + 1).
+    /// Warm-started from the previous (z, t); `iters` projected-gradient
+    /// steps (paper: "convex QP performed on a coordinator node").
+    pub fn zt_update(&mut self, c: &[f64], n_nodes: usize, rho_c: f64, rho_b: f64, iters: usize) {
+        let dim = self.z.len();
+        assert_eq!(c.len(), dim);
+        self.z_prev.copy_from_slice(&self.z);
+
+        let n_rho = n_nodes as f64 * rho_c;
+        let s_sq = ops::dot(&self.s, &self.s);
+        let lip = n_rho + rho_b * (s_sq + 1.0);
+        let step = 1.0 / lip;
+
+        // FISTA state: y = extrapolated point
+        let mut zy = self.z.clone();
+        let mut ty = self.t;
+        let mut z_old = self.z.clone();
+        let mut t_old = self.t;
+        let mut theta = 1.0f64;
+        let mut grad = vec![0.0; dim];
+
+        for _ in 0..iters {
+            let g = ops::dot(&zy, &self.s) - ty + self.v;
+            for i in 0..dim {
+                grad[i] = n_rho * (zy[i] - c[i]) + rho_b * g * self.s[i];
+            }
+            let gt = -rho_b * g;
+            // gradient step then epigraph projection
+            for i in 0..dim {
+                zy[i] -= step * grad[i];
+            }
+            let t_cand = ty - step * gt;
+            let (z_new, t_new) = project_l1_epigraph(&zy, t_cand);
+
+            // FISTA extrapolation
+            let theta_new = 0.5 * (1.0 + (1.0 + 4.0 * theta * theta).sqrt());
+            let beta = (theta - 1.0) / theta_new;
+            for i in 0..dim {
+                zy[i] = z_new[i] + beta * (z_new[i] - z_old[i]);
+            }
+            ty = t_new + beta * (t_new - t_old);
+            z_old = z_new;
+            t_old = t_new;
+            theta = theta_new;
+        }
+        self.z = z_old;
+        self.t = t_old;
+    }
+
+    /// The s-update (7c)/(12): closed form over S^kappa.
+    pub fn s_update(&mut self, kappa: usize) {
+        self.s = sparsity::s_update(&self.z, self.t - self.v, kappa);
+    }
+
+    /// Scaled bilinear dual update (13): v += g(z, s, t).
+    pub fn v_update(&mut self) {
+        self.v += self.bilinear_residual_signed();
+    }
+
+    pub fn bilinear_residual_signed(&self) -> f64 {
+        sparsity::bilinear_g(&self.z, &self.s, self.t)
+    }
+
+    /// Residuals (Eq. 14).  `xs` are the collected x_i^{k+1}.
+    pub fn residuals(&self, xs: &[Vec<f64>], rho_c: f64, iter: usize, wall: f64) -> IterRecord {
+        let primal: f64 = xs
+            .iter()
+            .map(|x| ops::dist2(x, &self.z).sqrt())
+            .sum();
+        let dual =
+            (xs.len() as f64).sqrt() * rho_c * ops::dist2(&self.z, &self.z_prev).sqrt();
+        IterRecord {
+            iter,
+            primal,
+            dual,
+            bilinear: self.bilinear_residual_signed().abs(),
+            wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zt_update_shrinks_toward_c_with_zero_s() {
+        // with s = 0, v = 0:  F = (N rho_c / 2)||z - c||^2 + (rho_b/2) t^2,
+        // so the optimum has t = ||z||_1 (boundary) and z is a shrunken c
+        // (the t^2 term penalizes ||z||_1^2).  Check the shrinkage
+        // structure and first-order optimality of the scalarized problem.
+        let mut g = GlobalState::new(3);
+        let c = vec![0.5, -0.25, 0.0];
+        let (n_nodes, rho_c, rho_b) = (2, 1.0, 0.5);
+        g.zt_update(&c, n_nodes, rho_c, rho_b, 500);
+        let l1: f64 = g.z.iter().map(|v| v.abs()).sum();
+        assert!((g.t - l1).abs() < 1e-5, "t should sit on the boundary");
+        // shrinkage: same signs, smaller magnitudes
+        for (zi, ci) in g.z.iter().zip(&c) {
+            assert!(zi.abs() <= ci.abs() + 1e-9);
+            assert!(zi * ci >= -1e-12);
+        }
+        // stationarity on the active coordinates of
+        //   N rho_c/2 ||z - c||^2 + rho_b/2 (sum |z_i|)^2:
+        //   N rho_c (z_i - c_i) + rho_b * l1 * sign(z_i) = 0
+        for (zi, ci) in g.z.iter().zip(&c) {
+            if zi.abs() > 1e-9 {
+                let grad = n_nodes as f64 * rho_c * (zi - ci) + rho_b * l1 * zi.signum();
+                assert!(grad.abs() < 1e-4, "grad {grad}");
+            }
+        }
+    }
+
+    #[test]
+    fn zt_update_result_is_feasible_and_stationary() {
+        let mut rng = Rng::seed_from(4);
+        let dim = 24;
+        let mut g = GlobalState::new(dim);
+        g.s = sparsity::s_update(
+            &(0..dim).map(|_| rng.normal()).collect::<Vec<_>>(),
+            2.0,
+            6,
+        );
+        g.v = 0.3;
+        let c: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let (n_nodes, rho_c, rho_b) = (4, 1.5, 0.75);
+        g.zt_update(&c, n_nodes, rho_c, rho_b, 800);
+
+        // feasibility
+        let l1: f64 = g.z.iter().map(|v| v.abs()).sum();
+        assert!(l1 <= g.t + 1e-8, "infeasible: {l1} > {}", g.t);
+
+        // stationarity: projected gradient step must be a fixed point
+        let n_rho = n_nodes as f64 * rho_c;
+        let gg = ops::dot(&g.z, &g.s) - g.t + g.v;
+        let step = 1e-3;
+        let zc: Vec<f64> = (0..dim)
+            .map(|i| g.z[i] - step * (n_rho * (g.z[i] - c[i]) + rho_b * gg * g.s[i]))
+            .collect();
+        let tc = g.t - step * (-rho_b * gg);
+        let (zp, tp) = project_l1_epigraph(&zc, tc);
+        assert!(ops::dist2(&zp, &g.z).sqrt() < 1e-5, "z moved");
+        assert!((tp - g.t).abs() < 1e-5, "t moved");
+    }
+
+    #[test]
+    fn s_and_v_updates_drive_bilinear_residual() {
+        let mut g = GlobalState::new(4);
+        g.z = vec![2.0, 0.0, -1.0, 0.1];
+        g.t = 2.5;
+        g.s_update(2);
+        // target t - v = 2.5 reachable (mx = 3) -> residual 0
+        assert!(g.bilinear_residual_signed().abs() < 1e-12);
+        g.v_update();
+        assert!(g.v.abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_record_shapes() {
+        let mut g = GlobalState::new(2);
+        g.z = vec![1.0, 0.0];
+        let xs = vec![vec![1.0, 0.0], vec![0.0, 0.0]];
+        let rec = g.residuals(&xs, 2.0, 7, 0.5);
+        assert_eq!(rec.iter, 7);
+        assert!((rec.primal - 1.0).abs() < 1e-12); // ||x_2 - z|| = 1
+        // dual: z_prev = 0 -> sqrt(2) * 2 * 1 = 2 sqrt 2
+        assert!((rec.dual - 2.0 * 2.0f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Bi-cADMM algorithm (the paper's core contribution).
+//!
+//! * [`global`] — coordinator-side updates: the (z, t) epigraph-constrained
+//!   QP (7b), the closed-form s-update (7c)/(12), the scaled bilinear dual
+//!   (13), and the three residuals (14).
+//! * [`local`]  — node-side Algorithm 2: the feature-decomposed inner
+//!   sharing-ADMM that evaluates the proximal operator (10) over a
+//!   [`crate::backend::NodeBackend`].
+//! * [`solver`] — Algorithm 1: the outer consensus loop over a cluster of
+//!   node workers, with residual-based termination and solution
+//!   extraction (hard threshold + optional ridge polish).
+//!
+//! Coefficient-space layout: all global vectors (`x_i`, `u_i`, `z`, `s`)
+//! are flattened class-major — entry `(class c, feature i)` lives at
+//! `c * n + i`.  Width is 1 for the scalar losses, `k` for softmax.
+
+pub mod global;
+pub mod local;
+pub mod solver;
+
+pub use global::GlobalState;
+pub use local::LocalProx;
+pub use solver::{solve, SolveOptions, SolveResult};

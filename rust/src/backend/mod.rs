@@ -1,0 +1,95 @@
+//! Compute backends for the node-level data path (Algorithm 2).
+//!
+//! The paper runs the feature-decomposed inner ADMM on GPUs (PyTorch/CUDA)
+//! with a CPU fallback.  Here:
+//!
+//!   * [`native::NativeBackend`] — dependency-free Rust (the "CPU backend")
+//!   * [`xla::XlaBackend`]       — AOT-compiled JAX/Pallas artifacts
+//!     executed through PJRT (the "GPU backend"; DESIGN.md §3)
+//!
+//! Both implement [`NodeBackend`], whose operations are *per feature block
+//! and per class column* — the driver in `admm::local` owns the sweep
+//! logic, so the two backends share iteration structure exactly (a
+//! prerequisite for the backend-parity tests).
+
+pub mod native;
+pub mod xla;
+
+use crate::metrics::TransferLedger;
+
+/// Scalar parameters of the block subproblem (Eq. 23).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockParams {
+    /// Inner sharing-ADMM penalty rho_l.
+    pub rho_l: f64,
+    /// Consensus penalty rho_c.
+    pub rho_c: f64,
+    /// Curvature of r_j: 1/(N gamma) + rho_c.
+    pub reg: f64,
+}
+
+/// One node's compute engine: holds the feature-decomposed local dataset
+/// (the paper's per-GPU partitions) and executes the two data-touching
+/// primitives of the inner sweep.
+pub trait NodeBackend: Send {
+    /// Number of feature blocks M (device queues engaged).
+    fn blocks(&self) -> usize;
+    /// Samples m_i in this node's shard.
+    fn samples(&self) -> usize;
+    /// Width of the coefficient block `j` (unpadded).
+    fn block_width(&self, j: usize) -> usize;
+
+    /// Block x-update (Eq. 23) followed by the prediction refresh
+    /// `pred_j = A_j x_j`, for one class column.
+    ///
+    /// * `corr`  — sample-space correction `omega_bar - w_bar - nu` (m)
+    /// * `z_j`, `u_j` — consensus slice and scaled dual for this block
+    /// * `x_j`   — in: warm start; out: updated coefficients
+    /// * `pred_j`— out: A_j x_j
+    fn block_step(
+        &mut self,
+        j: usize,
+        params: BlockParams,
+        corr: &[f32],
+        z_j: &[f32],
+        u_j: &[f32],
+        x_j: &mut [f32],
+        pred_j: &mut [f32],
+    );
+
+    /// Separable omega-bar prox (Eq. 21) against this node's labels.
+    /// `c` and `out` are row-major (m, width).
+    fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]);
+
+    /// Loss value at the given predictions (row-major (m, width)) —
+    /// objective reporting only, not on the iteration hot path.
+    fn loss_value(&self, pred: &[f32]) -> f64;
+
+    /// Staging-copy ledger (zeroes on the native backend).
+    fn ledger(&self) -> TransferLedger;
+    fn reset_ledger(&mut self);
+
+    /// Fused Algorithm-2 path: run `sweeps` inner iterations over ALL
+    /// blocks in a single backend call (the launch-granularity
+    /// optimization; see `python/compile/model.py::node_sweep`).
+    ///
+    /// `z_blocks`/`u_blocks` are per-block consensus slices (unpadded);
+    /// `x_blocks` (per block coefficients), `preds` (per block A_j x_j),
+    /// `omega`, `nu` are the inner state, updated in place on success.
+    /// Returns false when the backend (or this problem shape) does not
+    /// support the fused path — the caller then uses the granular ops.
+    #[allow(clippy::too_many_arguments)]
+    fn node_sweep(
+        &mut self,
+        _params: BlockParams,
+        _sweeps: usize,
+        _z_blocks: &[Vec<f32>],
+        _u_blocks: &[Vec<f32>],
+        _x_blocks: &mut [Vec<f32>],
+        _preds: &mut [Vec<f32>],
+        _omega: &mut [f32],
+        _nu: &mut [f32],
+    ) -> bool {
+        false
+    }
+}

@@ -1,0 +1,303 @@
+//! Native Rust backend — the paper's "CPU backend".
+//!
+//! Per feature block it caches the Gram matrix `G_j = A_j^T A_j` (f64) at
+//! construction; each `block_step` is then one `A_j^T corr` matvec over the
+//! raw data plus a coefficient-space solve.  Two solver modes:
+//!
+//!   * `Cg { iters }` — identical iteration structure to the XLA artifact
+//!     (used by the parity tests and the honest CPU-vs-GPU comparison);
+//!   * `Direct`       — Cholesky of `rho_l G + reg I`, re-factored only
+//!     when the penalties change (ablation: direct vs iterative).
+
+use super::{BlockParams, NodeBackend};
+use crate::data::{FeaturePlan, Shard};
+use crate::linalg::{conjugate_gradient, Cholesky, Matrix};
+use crate::losses::Loss;
+use crate::metrics::TransferLedger;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolveMode {
+    /// Fixed-iteration CG on the cached Gram operator (artifact-parallel).
+    Cg { iters: usize },
+    /// Cached Cholesky factorization of the block normal matrix.
+    Direct,
+}
+
+struct Block {
+    /// Packed column block of the shard (m x width_j).
+    a: Matrix,
+    /// Cached Gram (width_j x width_j), f64.
+    gram: Vec<f64>,
+    /// Cached Cholesky of rho_l G + reg I (Direct mode only).
+    chol: Option<Cholesky>,
+    /// Penalties the factorization was built for.
+    chol_params: Option<BlockParams>,
+}
+
+pub struct NativeBackend {
+    blocks: Vec<Block>,
+    labels: Vec<f32>,
+    loss: Box<dyn Loss>,
+    mode: SolveMode,
+    m: usize,
+    scratch: Scratch,
+}
+
+#[derive(Default)]
+struct Scratch {
+    q: Vec<f64>,
+    rhs: Vec<f64>,
+    x: Vec<f64>,
+    hv: Vec<f64>,
+    qf32: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new(shard: &Shard, plan: &FeaturePlan, loss: Box<dyn Loss>, mode: SolveMode) -> Self {
+        assert_eq!(shard.width, loss.width(), "label width mismatch");
+        let blocks = plan
+            .ranges
+            .iter()
+            .map(|&(start, width)| {
+                let a = shard.a.column_block(start, width);
+                let mut gram32 = vec![0.0f32; width * width];
+                a.gram_accumulate(&mut gram32);
+                Block {
+                    a,
+                    gram: gram32.iter().map(|&v| v as f64).collect(),
+                    chol: None,
+                    chol_params: None,
+                }
+            })
+            .collect();
+        NativeBackend {
+            blocks,
+            labels: shard.labels.clone(),
+            loss,
+            mode,
+            m: shard.a.rows,
+            scratch: Scratch::default(),
+        }
+    }
+
+    fn ensure_chol(block: &mut Block, params: BlockParams) {
+        if block.chol_params == Some(params) && block.chol.is_some() {
+            return;
+        }
+        let n = block.a.cols;
+        let mut h = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                h[i * n + j] = params.rho_l * block.gram[i * n + j];
+            }
+            h[i * n + i] += params.reg;
+        }
+        block.chol = Some(Cholesky::factor(&h, n).expect("block normal matrix is SPD"));
+        block.chol_params = Some(params);
+    }
+}
+
+impl NodeBackend for NativeBackend {
+    fn blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn samples(&self) -> usize {
+        self.m
+    }
+
+    fn block_width(&self, j: usize) -> usize {
+        self.blocks[j].a.cols
+    }
+
+    fn block_step(
+        &mut self,
+        j: usize,
+        params: BlockParams,
+        corr: &[f32],
+        z_j: &[f32],
+        u_j: &[f32],
+        x_j: &mut [f32],
+        pred_j: &mut [f32],
+    ) {
+        let block = &mut self.blocks[j];
+        let n = block.a.cols;
+        debug_assert_eq!(corr.len(), self.m);
+        debug_assert_eq!(x_j.len(), n);
+        debug_assert_eq!(pred_j.len(), self.m);
+
+        let s = &mut self.scratch;
+        s.qf32.resize(n, 0.0);
+        s.q.resize(n, 0.0);
+        s.rhs.resize(n, 0.0);
+        s.x.resize(n, 0.0);
+        s.hv.resize(n, 0.0);
+
+        // q = A_j^T corr  (the data-touching op)
+        block.a.matvec_t(corr, &mut s.qf32);
+        for (qi, &v) in s.q.iter_mut().zip(&s.qf32) {
+            *qi = v as f64;
+        }
+
+        // rhs = rho_l (G x_prev + q) + rho_c (z - u)
+        let gram = &block.gram;
+        for i in 0..n {
+            let mut gx = 0.0f64;
+            let row = &gram[i * n..(i + 1) * n];
+            for (g, &xv) in row.iter().zip(x_j.iter()) {
+                gx += g * xv as f64;
+            }
+            s.rhs[i] = params.rho_l * (gx + s.q[i])
+                + params.rho_c * (z_j[i] as f64 - u_j[i] as f64);
+            s.x[i] = x_j[i] as f64; // warm start
+        }
+
+        match self.mode {
+            SolveMode::Cg { iters } => {
+                // H v = rho_l G v + reg v — same operator as the artifact's CG
+                let rho_l = params.rho_l;
+                let reg = params.reg;
+                let rhs = std::mem::take(&mut s.rhs);
+                let mut x = std::mem::take(&mut s.x);
+                conjugate_gradient(
+                    |v, out| {
+                        for i in 0..n {
+                            let row = &gram[i * n..(i + 1) * n];
+                            let mut acc = 0.0;
+                            for (g, &vv) in row.iter().zip(v) {
+                                acc += g * vv;
+                            }
+                            out[i] = rho_l * acc + reg * v[i];
+                        }
+                    },
+                    &rhs,
+                    &mut x,
+                    iters,
+                    0.0, // fixed-iteration, matching the artifact
+                );
+                s.rhs = rhs;
+                s.x = x;
+            }
+            SolveMode::Direct => {
+                Self::ensure_chol(block, params);
+                s.x.copy_from_slice(&s.rhs);
+                block.chol.as_ref().unwrap().solve(&mut s.x);
+            }
+        }
+
+        for (o, &v) in x_j.iter_mut().zip(s.x.iter()) {
+            *o = v as f32;
+        }
+        // pred_j = A_j x_j
+        block.a.matvec(x_j, pred_j);
+    }
+
+    fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]) {
+        self.loss.omega_update(&self.labels, c, m_blocks, rho_l, out);
+    }
+
+    fn loss_value(&self, pred: &[f32]) -> f64 {
+        self.loss.value(pred, &self.labels)
+    }
+
+    fn ledger(&self) -> TransferLedger {
+        TransferLedger::default() // no staging copies on the native path
+    }
+
+    fn reset_ledger(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticSpec, FeaturePlan};
+    use crate::losses::Squared;
+    use crate::util::rng::Rng;
+
+    fn setup(mode: SolveMode) -> (NativeBackend, FeaturePlan, usize) {
+        let ds = SyntheticSpec::regression(24, 60, 1).generate();
+        let plan = FeaturePlan::new(24, 2, 512);
+        let be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
+        (be, plan, 60)
+    }
+
+    #[test]
+    fn block_step_solves_normal_equations_direct() {
+        let (mut be, plan, m) = setup(SolveMode::Direct);
+        let mut rng = Rng::seed_from(1);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.5,
+        };
+        let n0 = plan.ranges[0].1;
+        let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let z: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
+        let u: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
+        let x_prev: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
+        let mut x = x_prev.clone();
+        let mut pred = vec![0.0f32; m];
+        be.block_step(0, params, &corr, &z, &u, &mut x, &mut pred);
+
+        // residual of (rho_l G + reg I) x = rho_l (G x_prev + q) + rho_c (z-u)
+        let block_a = &be.blocks[0].a;
+        let gram = &be.blocks[0].gram;
+        let mut q = vec![0.0f32; n0];
+        block_a.matvec_t(&corr, &mut q);
+        for i in 0..n0 {
+            let hx: f64 = (0..n0)
+                .map(|k| params.rho_l * gram[i * n0 + k] * x[k] as f64)
+                .sum::<f64>()
+                + params.reg * x[i] as f64;
+            let gxp: f64 = (0..n0).map(|k| gram[i * n0 + k] * x_prev[k] as f64).sum();
+            let rhs = params.rho_l * (gxp + q[i] as f64)
+                + params.rho_c * (z[i] as f64 - u[i] as f64);
+            assert!((hx - rhs).abs() < 1e-3, "i={i}: {hx} vs {rhs}");
+        }
+        // pred = A x
+        let mut want = vec![0.0f32; m];
+        block_a.matvec(&x, &mut want);
+        assert_eq!(pred, want);
+    }
+
+    #[test]
+    fn cg_mode_approaches_direct() {
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.5,
+        };
+        let mut rng = Rng::seed_from(2);
+        let (mut be_cg, plan, m) = setup(SolveMode::Cg { iters: 60 });
+        let (mut be_dir, _, _) = setup(SolveMode::Direct);
+        let n0 = plan.ranges[0].1;
+        let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let z = vec![0.1f32; n0];
+        let u = vec![0.0f32; n0];
+        let mut x_cg = vec![0.0f32; n0];
+        let mut x_dir = vec![0.0f32; n0];
+        let mut pred = vec![0.0f32; m];
+        be_cg.block_step(0, params, &corr, &z, &u, &mut x_cg, &mut pred);
+        be_dir.block_step(0, params, &corr, &z, &u, &mut x_dir, &mut pred);
+        for (a, b) in x_cg.iter().zip(&x_dir) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn chol_refactors_on_param_change() {
+        let (mut be, plan, m) = setup(SolveMode::Direct);
+        let n0 = plan.ranges[0].1;
+        let corr = vec![0.0f32; m];
+        let z = vec![0.0f32; n0];
+        let u = vec![0.0f32; n0];
+        let mut x = vec![0.0f32; n0];
+        let mut pred = vec![0.0f32; m];
+        let p1 = BlockParams { rho_l: 1.0, rho_c: 1.0, reg: 1.0 };
+        let p2 = BlockParams { rho_l: 9.0, rho_c: 1.0, reg: 4.0 };
+        be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
+        assert_eq!(be.blocks[0].chol_params, Some(p1));
+        be.block_step(0, p2, &corr, &z, &u, &mut x, &mut pred);
+        assert_eq!(be.blocks[0].chol_params, Some(p2));
+    }
+}

@@ -1,0 +1,587 @@
+//! XLA backend — the paper's "GPU backend" (DESIGN.md §Hardware-Adaptation).
+//!
+//! Per node, construction mirrors the paper's device placement: each
+//! feature block `A_ij` is packed into fixed-shape row tiles and staged
+//! once as persistent device buffers ("data partitions reside on the j-th
+//! GPU"), and the block Gram matrix is accumulated on device via the
+//! `gram_tile` artifact.  Per inner iteration only small vectors cross the
+//! host/device boundary; every crossing is recorded in the transfer
+//! ledger (Figure 4).
+//!
+//! The artifacts executed here are the AOT-lowered JAX/Pallas tile
+//! programs (`python/compile/model.py`); `block_solve` runs the same
+//! fixed-iteration CG the native backend mirrors in `SolveMode::Cg`.
+
+use super::{BlockParams, NodeBackend};
+use crate::data::{FeaturePlan, Shard};
+use crate::losses::Loss;
+use crate::metrics::TransferLedger;
+use crate::runtime::{DeviceTensor, Manifest, ParamsBuffer, XlaRuntime};
+
+struct XBlock {
+    /// Row tiles of A_ij, each (tile_m, block_n), zero-padded.
+    a_tiles: Vec<DeviceTensor>,
+    /// Gram matrix (block_n, block_n), zero-padded outside width x width.
+    gram: DeviceTensor,
+    /// Actual (unpadded) feature count of this block.
+    width: usize,
+}
+
+/// Fused node_sweep state.  The A tiles and Gram matrices are the
+/// per-block persistent buffers already staged at setup — the artifact
+/// takes blocks as separate parameters precisely so they can be reused.
+struct FusedSweep {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    /// (tile_m, 1) labels.
+    b: DeviceTensor,
+    /// Sweeps baked into the artifact.
+    sweeps: usize,
+}
+
+pub struct XlaBackend {
+    rt: std::rc::Rc<XlaRuntime>,
+    blocks: Vec<XBlock>,
+    fused: Option<FusedSweep>,
+    labels_host: Vec<f32>,
+    /// Per row tile: labels staged as (tile_m, label_width).
+    label_tiles: Vec<DeviceTensor>,
+    loss: Box<dyn Loss>,
+    m: usize,
+    tile_m: usize,
+    block_n: usize,
+    tiles: usize,
+    params: ParamsBuffer,
+    ledger: TransferLedger,
+    // artifact names; compiled lazily via the runtime cache on first use
+    // (compiling the full set eagerly costs ~15 s per node, and the fused
+    // path never touches the granular executables)
+    omega_artifact: &'static str,
+    // scratch
+    tile_buf: Vec<f32>,
+    vec_buf: Vec<f32>,
+}
+
+// SAFETY: every `Rc`-refcounted xla wrapper object reachable from an
+// `XlaBackend` (client, executables, device buffers) is created privately
+// by `XlaBackend::new` and never aliased outside the struct, PROVIDED the
+// runtime handed in is not shared (driver::build_workers creates one
+// private runtime per node unless `platform.share_runtime` is set, in
+// which case the driver forces the sequential in-thread cluster so the
+// shared graph never crosses threads).  Under that invariant the whole
+// object graph moves to the node worker's thread as one unit and is only
+// ever touched from that thread.
+unsafe impl Send for XlaBackend {}
+
+impl XlaBackend {
+    pub fn new(
+        rt: std::rc::Rc<XlaRuntime>,
+        shard: &Shard,
+        plan: &FeaturePlan,
+        loss: Box<dyn Loss>,
+    ) -> anyhow::Result<XlaBackend> {
+        let man = rt.manifest().clone();
+        let (tile_m, block_n) = (man.tile_m, man.block_n);
+        anyhow::ensure!(
+            plan.padded_width == block_n,
+            "feature plan padded_width {} != artifact block_n {}",
+            plan.padded_width,
+            block_n
+        );
+        if loss.width() > 1 {
+            anyhow::ensure!(
+                loss.width() == man.classes,
+                "softmax width {} != artifact classes {}",
+                loss.width(),
+                man.classes
+            );
+        }
+        let m = shard.a.rows;
+        let tiles = m.div_ceil(tile_m);
+        let mut ledger = TransferLedger::default();
+
+        let exe_gram = rt.executable("gram_tile")?;
+        let omega_artifact = Manifest::omega_artifact(loss.kind());
+
+        // ---- stage feature tiles + accumulate Gram per block -------------
+        let mut blocks = Vec::with_capacity(plan.blocks);
+        let mut tile_buf = vec![0.0f32; tile_m * block_n];
+        for &(start, width) in &plan.ranges {
+            let mut a_tiles = Vec::with_capacity(tiles);
+            let mut gram_host = vec![0.0f32; block_n * block_n];
+            for t in 0..tiles {
+                let row0 = t * tile_m;
+                let count = (m - row0).min(tile_m);
+                // pack rows [row0, row0+count) of columns [start, start+width)
+                tile_buf.fill(0.0);
+                for r in 0..count {
+                    let src = &shard.a.row(row0 + r)[start..start + width];
+                    tile_buf[r * block_n..r * block_n + width].copy_from_slice(src);
+                }
+                let (tensor, secs) = rt.stage(&tile_buf, &[tile_m, block_n])?;
+                ledger.record_h2d(tile_buf.len() * 4, secs);
+
+                // Gram partial on device
+                let out = rt.run(&exe_gram, &[&tensor.buffer])?;
+                let (parts, secs) = rt.fetch_tuple(&out[0])?;
+                ledger.record_d2h(parts[0].len() * 4, secs);
+                for (g, &p) in gram_host.iter_mut().zip(&parts[0]) {
+                    *g += p;
+                }
+                a_tiles.push(tensor);
+            }
+            let (gram, secs) = rt.stage(&gram_host, &[block_n, block_n])?;
+            ledger.record_h2d(gram_host.len() * 4, secs);
+            blocks.push(XBlock {
+                a_tiles,
+                gram,
+                width,
+            });
+        }
+
+        // ---- stage label tiles for the omega artifact ---------------------
+        let lw = loss.width();
+        let mut label_tiles = Vec::with_capacity(tiles);
+        let mut lbuf = vec![0.0f32; tile_m * lw];
+        for t in 0..tiles {
+            let row0 = t * tile_m;
+            let count = (m - row0).min(tile_m);
+            lbuf.fill(0.0);
+            lbuf[..count * lw].copy_from_slice(&shard.labels[row0 * lw..(row0 + count) * lw]);
+            let (tensor, secs) = rt.stage(&lbuf, &[tile_m, lw])?;
+            ledger.record_h2d(lbuf.len() * 4, secs);
+            label_tiles.push(tensor);
+        }
+
+        // ---- fused node_sweep path (launch-granularity optimization) -----
+        // Eligible when the whole shard fits one row tile, the loss is
+        // single-class, and a matching artifact was lowered.
+        let sweep_name = format!(
+            "node_sweep_{}_m{}",
+            match loss.kind() {
+                crate::losses::LossKind::Squared => "squared",
+                crate::losses::LossKind::Logistic => "logistic",
+                crate::losses::LossKind::Hinge => "hinge",
+                crate::losses::LossKind::Softmax => "softmax",
+            },
+            plan.blocks
+        );
+        let fused = if tiles == 1 && lw == 1 && man.artifacts.contains_key(&sweep_name) {
+            let exe = rt.executable(&sweep_name)?;
+            let (b, secs) = {
+                let mut lb = vec![0.0f32; tile_m];
+                lb[..m].copy_from_slice(&shard.labels);
+                rt.stage(&lb, &[tile_m, 1])?
+            };
+            ledger.record_h2d(tile_m * 4, secs);
+            Some(FusedSweep {
+                exe,
+                b,
+                sweeps: man.inner_sweeps,
+            })
+        } else {
+            None
+        };
+
+        let param_size = man.param_size;
+        Ok(XlaBackend {
+            rt,
+            blocks,
+            fused,
+            labels_host: shard.labels.clone(),
+            label_tiles,
+            loss,
+            m,
+            tile_m,
+            block_n,
+            tiles,
+            params: ParamsBuffer::new(param_size),
+            ledger,
+            omega_artifact,
+            tile_buf: vec![0.0f32; tile_m * man.classes.max(1)],
+            vec_buf: vec![0.0f32; block_n],
+        })
+    }
+
+    /// Stage an m-vector as zero-padded (tile_m, 1) tiles.
+    fn stage_sample_tiles(&mut self, v: &[f32]) -> anyhow::Result<Vec<DeviceTensor>> {
+        let mut out = Vec::with_capacity(self.tiles);
+        for t in 0..self.tiles {
+            let row0 = t * self.tile_m;
+            let count = (self.m - row0).min(self.tile_m);
+            self.tile_buf[..self.tile_m].fill(0.0);
+            self.tile_buf[..count].copy_from_slice(&v[row0..row0 + count]);
+            let (tensor, secs) = self
+                .rt
+                .stage(&self.tile_buf[..self.tile_m], &[self.tile_m, 1])?;
+            self.ledger.record_h2d(self.tile_m * 4, secs);
+            out.push(tensor);
+        }
+        Ok(out)
+    }
+
+    /// Stage a coefficient vector zero-padded to (block_n, 1).
+    fn stage_coeff(&mut self, v: &[f32]) -> anyhow::Result<DeviceTensor> {
+        self.vec_buf.fill(0.0);
+        self.vec_buf[..v.len()].copy_from_slice(v);
+        let (tensor, secs) = self.rt.stage(&self.vec_buf, &[self.block_n, 1])?;
+        self.ledger.record_h2d(self.block_n * 4, secs);
+        Ok(tensor)
+    }
+
+    fn try_block_step(
+        &mut self,
+        j: usize,
+        params: BlockParams,
+        corr: &[f32],
+        z_j: &[f32],
+        u_j: &[f32],
+        x_j: &mut [f32],
+        pred_j: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let bw = self.blocks[j].width;
+        debug_assert_eq!(x_j.len(), bw);
+        debug_assert_eq!(corr.len(), self.m);
+        let m_blocks = self.blocks.len() as f64;
+
+        let x_prev = self.stage_coeff(x_j)?;
+        let z_buf = self.stage_coeff(z_j)?;
+        let u_buf = self.stage_coeff(u_j)?;
+        {
+            let (_, pbytes, psecs) = self.params.get(&self.rt, m_blocks, params)?;
+            if pbytes > 0 {
+                self.ledger.record_h2d(pbytes, psecs);
+            }
+        }
+
+        if self.tiles == 1 {
+            // fused path: q = A^T corr; CG; pred = A x in one artifact call
+            let exe = self.rt.executable("block_iteration")?;
+            let corr_tiles = self.stage_sample_tiles(corr)?;
+            let out = {
+                let params_buf = &self.params.get(&self.rt, m_blocks, params)?.0.buffer;
+                let block = &self.blocks[j];
+                self.rt.run(
+                    &exe,
+                    &[
+                        &block.gram.buffer,
+                        &block.a_tiles[0].buffer,
+                        &x_prev.buffer,
+                        &corr_tiles[0].buffer,
+                        &z_buf.buffer,
+                        &u_buf.buffer,
+                        params_buf,
+                    ],
+                )?
+            };
+            let (parts, secs) = self.rt.fetch_tuple(&out[0])?;
+            self.ledger
+                .record_d2h((parts[0].len() + parts[1].len()) * 4, secs);
+            x_j.copy_from_slice(&parts[0][..bw]);
+            pred_j.copy_from_slice(&parts[1][..self.m]);
+            return Ok(());
+        }
+
+        // ---- multi-tile path ------------------------------------------
+        // q = sum_t A_t^T corr_t
+        let exe_matvec = self.rt.executable("matvec_tile")?;
+        let exe_matvec_t = self.rt.executable("matvec_t_tile")?;
+        let exe_block_solve = self.rt.executable("block_solve")?;
+        let corr_tiles = self.stage_sample_tiles(corr)?;
+        let mut q_host = vec![0.0f32; self.block_n];
+        for (t, ct) in corr_tiles.iter().enumerate() {
+            let out = self.rt.run(
+                &exe_matvec_t,
+                &[&self.blocks[j].a_tiles[t].buffer, &ct.buffer],
+            )?;
+            let (parts, secs) = self.rt.fetch_tuple(&out[0])?;
+            self.ledger.record_d2h(parts[0].len() * 4, secs);
+            for (qi, &p) in q_host.iter_mut().zip(&parts[0]) {
+                *qi += p;
+            }
+        }
+        let (q_buf, secs) = self.rt.stage(&q_host, &[self.block_n, 1])?;
+        self.ledger.record_h2d(q_host.len() * 4, secs);
+
+        // coefficient-space CG
+        let out = {
+            let params_buf = &self.params.get(&self.rt, m_blocks, params)?.0.buffer;
+            self.rt.run(
+                &exe_block_solve,
+                &[
+                    &self.blocks[j].gram.buffer,
+                    &x_prev.buffer,
+                    &q_buf.buffer,
+                    &z_buf.buffer,
+                    &u_buf.buffer,
+                    params_buf,
+                ],
+            )?
+        };
+        let (parts, secs) = self.rt.fetch_tuple(&out[0])?;
+        self.ledger.record_d2h(parts[0].len() * 4, secs);
+        x_j.copy_from_slice(&parts[0][..bw]);
+
+        // pred = A x, streamed over tiles
+        let (x_buf, secs) = self.rt.stage(&parts[0], &[self.block_n, 1])?;
+        self.ledger.record_h2d(parts[0].len() * 4, secs);
+        for t in 0..self.tiles {
+            let out = self.rt.run(
+                &exe_matvec,
+                &[&self.blocks[j].a_tiles[t].buffer, &x_buf.buffer],
+            )?;
+            let (parts, secs) = self.rt.fetch_tuple(&out[0])?;
+            self.ledger.record_d2h(parts[0].len() * 4, secs);
+            let row0 = t * self.tile_m;
+            let count = (self.m - row0).min(self.tile_m);
+            pred_j[row0..row0 + count].copy_from_slice(&parts[0][..count]);
+        }
+        Ok(())
+    }
+
+    fn try_omega_update(
+        &mut self,
+        c: &[f32],
+        m_blocks: f64,
+        rho_l: f64,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let lw = self.loss.width();
+        // omega artifacts read only the M and rho_l slots, so staging a
+        // BlockParams with zeroed rho_c/reg is exact.
+        let params = BlockParams {
+            rho_l,
+            rho_c: 0.0,
+            reg: 0.0,
+        };
+        {
+            let (_, pbytes, psecs) = self.params.get(&self.rt, m_blocks, params)?;
+            if pbytes > 0 {
+                self.ledger.record_h2d(pbytes, psecs);
+            }
+        }
+        for t in 0..self.tiles {
+            let row0 = t * self.tile_m;
+            let count = (self.m - row0).min(self.tile_m);
+            self.tile_buf[..self.tile_m * lw].fill(0.0);
+            self.tile_buf[..count * lw]
+                .copy_from_slice(&c[row0 * lw..(row0 + count) * lw]);
+            let (c_buf, secs) = self
+                .rt
+                .stage(&self.tile_buf[..self.tile_m * lw], &[self.tile_m, lw])?;
+            self.ledger.record_h2d(self.tile_m * lw * 4, secs);
+            let outb = {
+                let exe = self.rt.executable(self.omega_artifact)?;
+                let params_buf = &self.params.get(&self.rt, m_blocks, params)?.0.buffer;
+                self.rt.run(
+                    &exe,
+                    &[&self.label_tiles[t].buffer, &c_buf.buffer, params_buf],
+                )?
+            };
+            let (parts, secs) = self.rt.fetch_tuple(&outb[0])?;
+            self.ledger.record_d2h(parts[0].len() * 4, secs);
+            out[row0 * lw..(row0 + count) * lw].copy_from_slice(&parts[0][..count * lw]);
+        }
+        Ok(())
+    }
+}
+
+impl XlaBackend {
+    /// Stage one coefficient vector zero-padded to (block_n, 1), ledgered.
+    fn stage_coeff_block(&mut self, v: &[f32]) -> anyhow::Result<DeviceTensor> {
+        let bn = self.block_n;
+        let mut host = vec![0.0f32; bn];
+        host[..v.len()].copy_from_slice(v);
+        let (tensor, secs) = self.rt.stage(&host, &[bn, 1])?;
+        self.ledger.record_h2d(bn * 4, secs);
+        Ok(tensor)
+    }
+
+    /// Stage one sample vector zero-padded to (tile_m, 1), ledgered.
+    fn stage_m_vec(&mut self, v: &[f32]) -> anyhow::Result<DeviceTensor> {
+        let tm = self.tile_m;
+        let mut host = vec![0.0f32; tm];
+        host[..v.len().min(tm)].copy_from_slice(&v[..v.len().min(tm)]);
+        let (tensor, secs) = self.rt.stage(&host, &[tm, 1])?;
+        self.ledger.record_h2d(tm * 4, secs);
+        Ok(tensor)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_node_sweep(
+        &mut self,
+        params: BlockParams,
+        calls: usize,
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+        omega: &mut [f32],
+        nu: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let mblocks = self.blocks.len();
+        let (tm, bn, m) = (self.tile_m, self.block_n, self.m);
+        let m_blocks_f = mblocks as f64;
+
+        // per-round-trip staging: z/u once, state before each call
+        let z_bufs: Vec<DeviceTensor> = z_blocks
+            .iter()
+            .map(|z| self.stage_coeff_block(z))
+            .collect::<anyhow::Result<_>>()?;
+        let u_bufs: Vec<DeviceTensor> = u_blocks
+            .iter()
+            .map(|u| self.stage_coeff_block(u))
+            .collect::<anyhow::Result<_>>()?;
+        {
+            let (_, pbytes, psecs) = self.params.get(&self.rt, m_blocks_f, params)?;
+            if pbytes > 0 {
+                self.ledger.record_h2d(pbytes, psecs);
+            }
+        }
+
+        let mut x_bufs: Vec<DeviceTensor> = x_blocks
+            .iter()
+            .map(|x| self.stage_coeff_block(x))
+            .collect::<anyhow::Result<_>>()?;
+        let mut w_bufs: Vec<DeviceTensor> = preds
+            .iter()
+            .map(|p| self.stage_m_vec(p))
+            .collect::<anyhow::Result<_>>()?;
+        let mut omega_buf = self.stage_m_vec(omega)?;
+        let mut nu_buf = self.stage_m_vec(nu)?;
+
+        for call in 0..calls {
+            // HLO parameter order = pytree order of node_sweep:
+            // a_0.., g_0.., x_0.., w_0.., omega, nu, z_0.., u_0.., b, params
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * mblocks + 4);
+            for b in &self.blocks {
+                args.push(&b.a_tiles[0].buffer);
+            }
+            for b in &self.blocks {
+                args.push(&b.gram.buffer);
+            }
+            for x in &x_bufs {
+                args.push(&x.buffer);
+            }
+            for w in &w_bufs {
+                args.push(&w.buffer);
+            }
+            args.push(&omega_buf.buffer);
+            args.push(&nu_buf.buffer);
+            for z in &z_bufs {
+                args.push(&z.buffer);
+            }
+            for u in &u_bufs {
+                args.push(&u.buffer);
+            }
+            let fused = self.fused.as_ref().unwrap();
+            args.push(&fused.b.buffer);
+            let params_tensor = self.params.get(&self.rt, m_blocks_f, params)?.0 as *const DeviceTensor;
+            // SAFETY: params buffer lives in self.params for the whole call
+            args.push(unsafe { &(*params_tensor).buffer });
+
+            let fused = self.fused.as_ref().unwrap();
+            let out = self.rt.run(&fused.exe, &args)?;
+            // outputs: x_0..x_{M-1}, w_0..w_{M-1}, omega, nu
+            let (parts, secs) = self.rt.fetch_tuple(&out[0])?;
+            let bytes: usize = parts.iter().map(|p| p.len() * 4).sum();
+            self.ledger.record_d2h(bytes, secs);
+
+            if call + 1 < calls {
+                for (bi, part) in parts[..mblocks].iter().enumerate() {
+                    let (t, secs) = self.rt.stage(part, &[bn, 1])?;
+                    self.ledger.record_h2d(part.len() * 4, secs);
+                    x_bufs[bi] = t;
+                }
+                for (bi, part) in parts[mblocks..2 * mblocks].iter().enumerate() {
+                    let (t, secs) = self.rt.stage(part, &[tm, 1])?;
+                    self.ledger.record_h2d(part.len() * 4, secs);
+                    w_bufs[bi] = t;
+                }
+                let (t, secs) = self.rt.stage(&parts[2 * mblocks], &[tm, 1])?;
+                self.ledger.record_h2d(tm * 4, secs);
+                omega_buf = t;
+                let (t, secs) = self.rt.stage(&parts[2 * mblocks + 1], &[tm, 1])?;
+                self.ledger.record_h2d(tm * 4, secs);
+                nu_buf = t;
+            } else {
+                for (bi, xb) in x_blocks.iter_mut().enumerate() {
+                    let w = xb.len();
+                    xb.copy_from_slice(&parts[bi][..w]);
+                }
+                for (bi, p) in preds.iter_mut().enumerate() {
+                    p[..m].copy_from_slice(&parts[mblocks + bi][..m]);
+                }
+                omega[..m].copy_from_slice(&parts[2 * mblocks][..m]);
+                nu[..m].copy_from_slice(&parts[2 * mblocks + 1][..m]);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl NodeBackend for XlaBackend {
+    fn blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn samples(&self) -> usize {
+        self.m
+    }
+
+    fn block_width(&self, j: usize) -> usize {
+        self.blocks[j].width
+    }
+
+    fn block_step(
+        &mut self,
+        j: usize,
+        params: BlockParams,
+        corr: &[f32],
+        z_j: &[f32],
+        u_j: &[f32],
+        x_j: &mut [f32],
+        pred_j: &mut [f32],
+    ) {
+        self.try_block_step(j, params, corr, z_j, u_j, x_j, pred_j)
+            .expect("xla block_step failed");
+    }
+
+    fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]) {
+        self.try_omega_update(c, m_blocks, rho_l, out)
+            .expect("xla omega_update failed");
+    }
+
+    fn loss_value(&self, pred: &[f32]) -> f64 {
+        self.loss.value(pred, &self.labels_host)
+    }
+
+    fn ledger(&self) -> TransferLedger {
+        self.ledger.clone()
+    }
+
+    fn reset_ledger(&mut self) {
+        self.ledger = TransferLedger::default();
+    }
+
+    fn node_sweep(
+        &mut self,
+        params: BlockParams,
+        sweeps: usize,
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+        omega: &mut [f32],
+        nu: &mut [f32],
+    ) -> bool {
+        let Some(f) = &self.fused else { return false };
+        // the artifact bakes its sweep count; only a multiple avoids drift
+        if sweeps % f.sweeps != 0 {
+            return false;
+        }
+        let calls = sweeps / f.sweeps;
+        self.try_node_sweep(params, calls, z_blocks, u_blocks, x_blocks, preds, omega, nu)
+            .expect("xla node_sweep failed");
+        true
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline solvers for the Table 1 comparison:
+//!
+//!   * [`lasso`] — l1-relaxation (glmnet-style pathwise coordinate descent
+//!     + FISTA), the paper's "Lasso" column.  The paper's asterisks
+//!     ("could not recover the true sparsity") emerge from the l1 bias.
+//!   * [`mip`]   — exact best-subset selection by branch-and-bound with
+//!     ridge-relaxation bounds and a time budget — the stand-in for the
+//!     paper's Gurobi MIP column (same problem class, same exponential
+//!     blow-up, "cut off" behaviour included).
+//!   * [`iht`]   — iterative hard thresholding (the projection-based
+//!     family the paper cites as related work; used in ablations).
+//!
+//! All baselines are *centralized*: they see the stacked dataset, exactly
+//! like the paper runs Gurobi and glmnet on a single machine.
+
+pub mod iht;
+pub mod lasso;
+pub mod mip;
+
+pub use iht::iht;
+pub use lasso::{lasso_cd, lasso_path, LassoResult};
+pub use mip::{best_subset_bnb, BnbResult, BnbStatus};

@@ -1,0 +1,338 @@
+//! Configuration system: solver, problem, and platform settings with
+//! validated builders and JSON file loading (`psfit train --config x.json`).
+
+use crate::losses::LossKind;
+use crate::util::json::Json;
+
+/// Which compute backend executes the node-level data path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native Rust (the paper's "CPU backend").
+    Native,
+    /// AOT XLA artifacts via PJRT (the paper's "GPU backend"; see
+    /// DESIGN.md §Hardware-Adaptation).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "native" | "cpu" => Ok(BackendKind::Native),
+            "xla" | "gpu" => Ok(BackendKind::Xla),
+            other => anyhow::bail!("unknown backend `{other}` (native|xla)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Bi-cADMM solver parameters (Eq. 7 and Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Consensus penalty rho_c.
+    pub rho_c: f64,
+    /// Bi-linear penalty rho_b.  Paper guidance: rho_b = alpha * rho_c,
+    /// alpha in (0, 1].
+    pub rho_b: f64,
+    /// Inner sharing-ADMM penalty rho_l (Algorithm 2).
+    pub rho_l: f64,
+    /// Tikhonov weight gamma (objective has 1/(2 gamma) ||x||^2).
+    pub gamma: f64,
+    /// Cardinality bound kappa.
+    pub kappa: usize,
+    /// Outer iteration cap.
+    pub max_iters: usize,
+    /// Inner (node-level) ADMM sweeps per outer iteration.
+    pub inner_iters: usize,
+    /// CG iterations per block solve (must match the artifact's baked
+    /// count on the XLA path).
+    pub cg_iters: usize,
+    /// Termination tolerances on the residuals (Eq. 14).
+    pub tol_primal: f64,
+    pub tol_dual: f64,
+    pub tol_bilinear: f64,
+    /// Projected-gradient iterations for the (z,t)-update (7b).
+    pub zt_iters: usize,
+    /// Re-fit the dense solution on the recovered support at the end.
+    pub polish: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            rho_c: 1.0,
+            rho_b: 0.5,
+            rho_l: 1.0,
+            gamma: 10.0,
+            kappa: 1,
+            max_iters: 200,
+            inner_iters: 3,
+            cg_iters: 24,
+            tol_primal: 1e-4,
+            tol_dual: 1e-4,
+            tol_bilinear: 1e-4,
+            zt_iters: 80,
+            polish: true,
+        }
+    }
+}
+
+impl SolverConfig {
+    pub fn with_kappa(kappa: usize) -> SolverConfig {
+        SolverConfig {
+            kappa,
+            ..Default::default()
+        }
+    }
+
+    /// Paper's selection rule: rho_b = alpha * rho_c, alpha in (0, 1].
+    pub fn alpha(mut self, alpha: f64) -> SolverConfig {
+        self.rho_b = alpha * self.rho_c;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.rho_c <= 0.0 || self.rho_b <= 0.0 || self.rho_l <= 0.0 {
+            anyhow::bail!("penalties must be positive");
+        }
+        if self.gamma <= 0.0 {
+            anyhow::bail!("gamma must be positive");
+        }
+        if self.kappa == 0 {
+            anyhow::bail!("kappa must be >= 1");
+        }
+        if self.max_iters == 0 || self.inner_iters == 0 || self.cg_iters == 0 {
+            anyhow::bail!("iteration counts must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Curvature of r_j: reg = 1/(N gamma) + rho_c (see Eq. 17).
+    pub fn block_reg(&self, nodes: usize) -> f64 {
+        1.0 / (nodes as f64 * self.gamma) + self.rho_c
+    }
+}
+
+/// Platform topology: node count, devices per node, transfer cost model.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub nodes: usize,
+    /// Device (simulated GPU) queues per node = the feature-block count M.
+    pub devices_per_node: usize,
+    pub backend: BackendKind,
+    /// Optional synthetic PCIe model for the transfer ledger: seconds =
+    /// bytes / (gbps * 1e9 / 8) + latency.  `None` records measured copy
+    /// time only.
+    pub pcie_gbps: Option<f64>,
+    pub pcie_latency_us: f64,
+    /// Share one PJRT runtime (and its compiled-executable cache) across
+    /// all node backends.  Compiles each artifact once per process instead
+    /// of once per node, but forces the sequential cluster (the shared
+    /// `Rc` graph must stay on one thread).  Default true for the XLA
+    /// backend benchmarks.
+    pub share_runtime: bool,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            nodes: 4,
+            devices_per_node: 2,
+            backend: BackendKind::Native,
+            pcie_gbps: None,
+            pcie_latency_us: 10.0,
+            share_runtime: true,
+        }
+    }
+}
+
+/// Complete experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub solver: SolverConfig,
+    pub platform: PlatformConfig,
+    pub loss: LossKind,
+    pub classes: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            solver: SolverConfig::default(),
+            platform: PlatformConfig::default(),
+            loss: LossKind::Squared,
+            classes: 2,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; unknown keys are rejected.
+    pub fn from_json_file(path: &std::path::Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Config> {
+        let mut cfg = Config::default();
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config must be a JSON object"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "solver" => {
+                    let s = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("solver must be an object"))?;
+                    for (k, v) in s {
+                        let f = || {
+                            v.as_f64()
+                                .ok_or_else(|| anyhow::anyhow!("solver.{k} must be a number"))
+                        };
+                        let u = || {
+                            v.as_usize()
+                                .ok_or_else(|| anyhow::anyhow!("solver.{k} must be an integer"))
+                        };
+                        match k.as_str() {
+                            "rho_c" => cfg.solver.rho_c = f()?,
+                            "rho_b" => cfg.solver.rho_b = f()?,
+                            "rho_l" => cfg.solver.rho_l = f()?,
+                            "gamma" => cfg.solver.gamma = f()?,
+                            "kappa" => cfg.solver.kappa = u()?,
+                            "max_iters" => cfg.solver.max_iters = u()?,
+                            "inner_iters" => cfg.solver.inner_iters = u()?,
+                            "cg_iters" => cfg.solver.cg_iters = u()?,
+                            "tol_primal" => cfg.solver.tol_primal = f()?,
+                            "tol_dual" => cfg.solver.tol_dual = f()?,
+                            "tol_bilinear" => cfg.solver.tol_bilinear = f()?,
+                            "zt_iters" => cfg.solver.zt_iters = u()?,
+                            "polish" => {
+                                cfg.solver.polish = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("solver.polish: bool"))?
+                            }
+                            other => anyhow::bail!("unknown solver key `{other}`"),
+                        }
+                    }
+                }
+                "platform" => {
+                    let p = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("platform must be an object"))?;
+                    for (k, v) in p {
+                        match k.as_str() {
+                            "nodes" => {
+                                cfg.platform.nodes = v
+                                    .as_usize()
+                                    .ok_or_else(|| anyhow::anyhow!("platform.nodes: int"))?
+                            }
+                            "devices_per_node" => {
+                                cfg.platform.devices_per_node = v.as_usize().ok_or_else(|| {
+                                    anyhow::anyhow!("platform.devices_per_node: int")
+                                })?
+                            }
+                            "backend" => {
+                                cfg.platform.backend = BackendKind::parse(
+                                    v.as_str()
+                                        .ok_or_else(|| anyhow::anyhow!("platform.backend: str"))?,
+                                )?
+                            }
+                            "pcie_gbps" => cfg.platform.pcie_gbps = v.as_f64(),
+                            "share_runtime" => {
+                                cfg.platform.share_runtime = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("share_runtime: bool"))?
+                            }
+                            "pcie_latency_us" => {
+                                cfg.platform.pcie_latency_us = v
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow::anyhow!("pcie_latency_us: num"))?
+                            }
+                            other => anyhow::bail!("unknown platform key `{other}`"),
+                        }
+                    }
+                }
+                "loss" => {
+                    cfg.loss = LossKind::parse(
+                        val.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("loss must be a string"))?,
+                    )?
+                }
+                "classes" => {
+                    cfg.classes = val
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("classes must be an integer"))?
+                }
+                other => anyhow::bail!("unknown config key `{other}`"),
+            }
+        }
+        cfg.solver.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().solver.validate().unwrap();
+    }
+
+    #[test]
+    fn alpha_rule() {
+        let s = SolverConfig {
+            rho_c: 4.0,
+            ..Default::default()
+        }
+        .alpha(0.5);
+        assert_eq!(s.rho_b, 2.0);
+    }
+
+    #[test]
+    fn block_reg_formula() {
+        let s = SolverConfig {
+            rho_c: 1.5,
+            gamma: 10.0,
+            ..Default::default()
+        };
+        assert!((s.block_reg(4) - (1.0 / 40.0 + 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{
+            "solver": {"rho_c": 2.0, "kappa": 10, "polish": false},
+            "platform": {"nodes": 8, "backend": "xla"},
+            "loss": "logistic"
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.solver.rho_c, 2.0);
+        assert_eq!(cfg.solver.kappa, 10);
+        assert!(!cfg.solver.polish);
+        assert_eq!(cfg.platform.nodes, 8);
+        assert_eq!(cfg.platform.backend, BackendKind::Xla);
+        assert_eq!(cfg.loss, LossKind::Logistic);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let src = r#"{"solver": {"rho_x": 2.0}}"#;
+        assert!(Config::from_json(&Json::parse(src).unwrap()).is_err());
+        let src = r#"{"whatever": 1}"#;
+        assert!(Config::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let src = r#"{"solver": {"rho_c": -1.0}}"#;
+        assert!(Config::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Dataset persistence: a simple self-describing binary format (PSF1) for
+//! distributed datasets, plus a dense-CSV loader for real data.
+//!
+//! Layout (little-endian):
+//!   magic "PSF1" | u32 nodes | u32 n_features | u32 width
+//!   | u32 truth_len | truth_len x f64 (x_true, class-major)
+//!   | per shard: u32 rows | rows*n f32 (A row-major) | rows*width f32
+//!
+//! `support_true` is re-derived from `x_true` on load, so the file stays
+//! minimal.  Used by the examples to cache generated workloads and by
+//! users to bring their own data (`load_csv` builds a single-shard
+//! dataset that `partition::shard_sizes` can re-split).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{Dataset, Shard};
+use crate::linalg::Matrix;
+
+const MAGIC: &[u8; 4] = b"PSF1";
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn save(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, ds.shards.len() as u32)?;
+    write_u32(&mut w, ds.n_features as u32)?;
+    write_u32(&mut w, ds.width as u32)?;
+    write_u32(&mut w, ds.x_true.len() as u32)?;
+    for &v in &ds.x_true {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for shard in &ds.shards {
+        write_u32(&mut w, shard.a.rows as u32)?;
+        write_f32s(&mut w, &shard.a.data)?;
+        write_f32s(&mut w, &shard.labels)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a PSF1 dataset file");
+    let nodes = read_u32(&mut r)? as usize;
+    let n = read_u32(&mut r)? as usize;
+    let width = read_u32(&mut r)? as usize;
+    anyhow::ensure!(nodes > 0 && n > 0 && width > 0, "corrupt header");
+    let truth_len = read_u32(&mut r)? as usize;
+    anyhow::ensure!(truth_len == n * width, "truth length mismatch");
+    let mut x_true = vec![0.0f64; truth_len];
+    for v in x_true.iter_mut() {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        *v = f64::from_le_bytes(b);
+    }
+    let mut shards = Vec::with_capacity(nodes);
+    for _ in 0..nodes {
+        let rows = read_u32(&mut r)? as usize;
+        let data = read_f32s(&mut r, rows * n)?;
+        let labels = read_f32s(&mut r, rows * width)?;
+        shards.push(Shard {
+            a: Matrix {
+                rows,
+                cols: n,
+                data,
+            },
+            labels,
+            width,
+        });
+    }
+    let support_true = x_true
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v != 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    Ok(Dataset {
+        shards,
+        x_true,
+        support_true,
+        n_features: n,
+        width,
+    })
+}
+
+/// Load a dense CSV (last column = label, others = features) as a
+/// single-shard regression/classification dataset.  No ground truth.
+pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<f32> = line
+            .split(',')
+            .map(|c| {
+                c.trim()
+                    .parse::<f32>()
+                    .map_err(|_| anyhow::anyhow!("line {}: bad number `{c}`", lineno + 1))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(cells.len() >= 2, "line {}: need >= 2 columns", lineno + 1);
+        labels.push(*cells.last().unwrap());
+        rows.push(cells[..cells.len() - 1].to_vec());
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty csv");
+    let n = rows[0].len();
+    anyhow::ensure!(
+        rows.iter().all(|r| r.len() == n),
+        "ragged rows in csv"
+    );
+    let a = Matrix::from_rows(rows);
+    Ok(Dataset {
+        shards: vec![Shard {
+            a,
+            labels,
+            width: 1,
+        }],
+        x_true: vec![0.0; n],
+        support_true: Vec::new(),
+        n_features: n,
+        width: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticSpec, Task};
+
+    #[test]
+    fn roundtrip_regression() {
+        let ds = SyntheticSpec::regression(12, 50, 3).generate();
+        let path = std::env::temp_dir().join("psfit_io_test.psf");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n_features, ds.n_features);
+        assert_eq!(back.nodes(), ds.nodes());
+        assert_eq!(back.x_true, ds.x_true);
+        assert_eq!(back.support_true, ds.support_true);
+        for (a, b) in back.shards.iter().zip(&ds.shards) {
+            assert_eq!(a.a.data, b.a.data);
+            assert_eq!(a.labels, b.labels);
+        }
+    }
+
+    #[test]
+    fn roundtrip_multiclass() {
+        let mut spec = SyntheticSpec::regression(8, 30, 2);
+        spec.task = Task::Multiclass { k: 3 };
+        let ds = spec.generate();
+        let path = std::env::temp_dir().join("psfit_io_test_mc.psf");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.width, 3);
+        assert_eq!(back.shards[1].labels, ds.shards[1].labels);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join("psfit_io_garbage.psf");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn csv_loader_parses_and_validates() {
+        let path = std::env::temp_dir().join("psfit_io_test.csv");
+        std::fs::write(&path, "# comment\n1.0, 2.0, 3.5\n4.0, 5.0, -1.5\n").unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!(ds.n_features, 2);
+        assert_eq!(ds.total_samples(), 2);
+        assert_eq!(ds.shards[0].labels, vec![3.5, -1.5]);
+
+        std::fs::write(&path, "1.0, x\n").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::write(&path, "1.0,2.0,3.0\n1.0,2.0\n").unwrap();
+        assert!(load_csv(&path).is_err());
+    }
+}

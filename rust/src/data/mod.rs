@@ -1,0 +1,52 @@
+//! Dataset substrate: synthetic generators (paper §4), sample
+//! decomposition across nodes, and the delayed feature-decomposition plan.
+
+pub mod io;
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::{FeaturePlan, Shard};
+pub use synthetic::{SyntheticSpec, Task};
+
+use crate::linalg::Matrix;
+
+/// A distributed dataset: one shard per computational node plus the ground
+/// truth used for recovery metrics.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub shards: Vec<Shard>,
+    /// Planted coefficients, flattened (n * width).
+    pub x_true: Vec<f64>,
+    /// Planted support (indices into the flattened coefficient vector).
+    pub support_true: Vec<usize>,
+    pub n_features: usize,
+    /// Label / prediction width (1, or k for softmax).
+    pub width: usize,
+}
+
+impl Dataset {
+    pub fn total_samples(&self) -> usize {
+        self.shards.iter().map(|s| s.a.rows).sum()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Stack all shards back into one (m_total, n) matrix + labels —
+    /// used by the centralized baselines (Lasso, MIP, IHT).
+    pub fn stacked(&self) -> (Matrix, Vec<f32>) {
+        let m_total = self.total_samples();
+        let mut a = Matrix::zeros(m_total, self.n_features);
+        let mut labels = Vec::with_capacity(m_total * self.width);
+        let mut row = 0;
+        for shard in &self.shards {
+            let bytes = shard.a.rows * self.n_features;
+            a.data[row * self.n_features..row * self.n_features + bytes]
+                .copy_from_slice(&shard.a.data);
+            labels.extend_from_slice(&shard.labels);
+            row += shard.a.rows;
+        }
+        (a, labels)
+    }
+}

@@ -1,0 +1,146 @@
+//! Decomposition plans.
+//!
+//! * Sample decomposition (network level): each node holds a row shard of
+//!   the global dataset — done at generation time, `Shard` is the result.
+//! * Feature decomposition (device level, the paper's "delayed"
+//!   decomposition): each node splits its columns into M blocks, one per
+//!   device queue, padded to the artifact's `block_n`.
+
+use crate::linalg::Matrix;
+
+/// One node's local data.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub a: Matrix,
+    /// Row-major (rows, width) labels.
+    pub labels: Vec<f32>,
+    pub width: usize,
+}
+
+/// The feature-decomposition plan for one node: M column blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeaturePlan {
+    pub n: usize,
+    /// Number of blocks (devices engaged).
+    pub blocks: usize,
+    /// (start, width) of each block, covering 0..n disjointly in order.
+    pub ranges: Vec<(usize, usize)>,
+    /// Artifact block width (blocks are zero-padded to this for the XLA
+    /// backend; the native backend uses the exact width).
+    pub padded_width: usize,
+}
+
+impl FeaturePlan {
+    /// Split `n` features into at most `max_blocks` blocks of width at most
+    /// `block_n` each.  Blocks are as even as possible; every feature is
+    /// covered exactly once.
+    pub fn new(n: usize, max_blocks: usize, block_n: usize) -> FeaturePlan {
+        assert!(n > 0 && max_blocks > 0 && block_n > 0);
+        let needed = n.div_ceil(block_n);
+        let blocks = needed.max(max_blocks.min(n));
+        // distribute n over `blocks` as evenly as possible
+        let base = n / blocks;
+        let extra = n % blocks;
+        let mut ranges = Vec::with_capacity(blocks);
+        let mut start = 0;
+        for b in 0..blocks {
+            let w = base + usize::from(b < extra);
+            if w == 0 {
+                continue;
+            }
+            ranges.push((start, w));
+            start += w;
+        }
+        debug_assert_eq!(start, n);
+        let max_w = ranges.iter().map(|&(_, w)| w).max().unwrap_or(0);
+        assert!(
+            max_w <= block_n,
+            "block width {max_w} exceeds artifact block_n {block_n}"
+        );
+        FeaturePlan {
+            n,
+            blocks: ranges.len(),
+            ranges,
+            padded_width: block_n,
+        }
+    }
+
+    /// Scatter a block-local vector back into the global coefficient vector.
+    pub fn scatter(&self, block: usize, local: &[f64], global: &mut [f64]) {
+        let (start, w) = self.ranges[block];
+        global[start..start + w].copy_from_slice(&local[..w]);
+    }
+
+    /// Gather the global vector's slice for one block (padded with zeros to
+    /// `len`, which is `padded_width` on the XLA path).
+    pub fn gather(&self, block: usize, global: &[f64], len: usize, out: &mut Vec<f64>) {
+        let (start, w) = self.ranges[block];
+        out.clear();
+        out.extend_from_slice(&global[start..start + w]);
+        out.resize(len.max(w), 0.0);
+    }
+}
+
+/// Split `m_total` samples into `nodes` shard sizes (as even as possible).
+pub fn shard_sizes(m_total: usize, nodes: usize) -> Vec<usize> {
+    assert!(nodes > 0);
+    let base = m_total / nodes;
+    let extra = m_total % nodes;
+    (0..nodes)
+        .map(|i| base + usize::from(i < extra))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_sizes_cover_total() {
+        for (m, n) in [(10, 3), (100, 4), (7, 7), (5, 8)] {
+            let sizes = shard_sizes(m, n);
+            assert_eq!(sizes.iter().sum::<usize>(), m);
+            let mx = *sizes.iter().max().unwrap();
+            let mn = *sizes.iter().min().unwrap();
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn feature_plan_covers_disjointly() {
+        for (n, blocks, bn) in [(100, 4, 512), (1000, 3, 512), (513, 1, 512), (512, 2, 512)] {
+            let plan = FeaturePlan::new(n, blocks, bn);
+            let mut covered = vec![false; n];
+            for &(s, w) in &plan.ranges {
+                for i in s..s + w {
+                    assert!(!covered[i], "overlap at {i}");
+                    covered[i] = true;
+                }
+                assert!(w <= bn);
+            }
+            assert!(covered.iter().all(|&c| c), "n={n} blocks={blocks}");
+        }
+    }
+
+    #[test]
+    fn feature_plan_splits_when_exceeding_block_n() {
+        // 1000 features with block_n=512 needs at least 2 blocks even if
+        // the caller asked for 1.
+        let plan = FeaturePlan::new(1000, 1, 512);
+        assert!(plan.blocks >= 2);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let plan = FeaturePlan::new(10, 3, 512);
+        let global: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut out = Vec::new();
+        let mut rebuilt = vec![0.0; 10];
+        for b in 0..plan.blocks {
+            plan.gather(b, &global, 512, &mut out);
+            assert_eq!(out.len(), 512);
+            plan.scatter(b, &out, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, global);
+    }
+}

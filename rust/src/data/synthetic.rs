@@ -1,0 +1,250 @@
+//! Synthetic dataset generators following the paper's experimental setup
+//! (§4): dense standard-normal feature matrices with unit-l2-normalized
+//! columns, a planted kappa-sparse ground truth, Gaussian label noise, and
+//! per-node sample shards.  Classification variants reuse the same design
+//! matrix recipe with sign / argmax labelling.
+
+use super::partition::{shard_sizes, Shard};
+use super::Dataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Task {
+    /// b = A x_true + noise  (SLS, Eq. 24)
+    Regression,
+    /// b = sign(A x_true + noise)  in {-1, +1}  (SLogR / SSVM)
+    Binary,
+    /// one-hot argmax over k planted coefficient columns (SSR)
+    Multiclass { k: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub n_features: usize,
+    pub m_total: usize,
+    pub nodes: usize,
+    /// Paper's s_l in (0, 1): fraction of zero coefficients.
+    /// kappa = round(n * (1 - s_l)).
+    pub sparsity_level: f64,
+    pub noise_std: f64,
+    pub task: Task,
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    pub fn regression(n: usize, m_total: usize, nodes: usize) -> SyntheticSpec {
+        SyntheticSpec {
+            n_features: n,
+            m_total,
+            nodes,
+            sparsity_level: 0.8,
+            noise_std: 0.1,
+            task: Task::Regression,
+            seed: 42,
+        }
+    }
+
+    pub fn kappa(&self) -> usize {
+        let k = (self.n_features as f64 * (1.0 - self.sparsity_level)).round() as usize;
+        k.clamp(1, self.n_features)
+    }
+
+    pub fn width(&self) -> usize {
+        match self.task {
+            Task::Multiclass { k } => k,
+            _ => 1,
+        }
+    }
+
+    /// Generate the distributed dataset.
+    pub fn generate(&self) -> Dataset {
+        assert!(self.nodes > 0 && self.n_features > 0 && self.m_total >= self.nodes);
+        assert!(
+            (0.0..1.0).contains(&self.sparsity_level),
+            "sparsity_level in [0, 1)"
+        );
+        let mut rng = Rng::seed_from(self.seed);
+        let n = self.n_features;
+        let kappa = self.kappa();
+        let width = self.width();
+
+        // planted coefficients: kappa active rows shared across columns.
+        // Layout is CLASS-MAJOR — entry (class c, feature i) at c*n + i —
+        // matching the solver's flattened coefficient space (admm::mod).
+        let active = {
+            let mut idx = rng.choose_indices(n, kappa);
+            idx.sort_unstable();
+            idx
+        };
+        let mut x_true = vec![0.0f64; n * width];
+        for &i in &active {
+            for c in 0..width {
+                // well-separated magnitudes so the support is identifiable
+                x_true[c * n + i] = rng.normal() + 2.0 * rng.normal().signum();
+            }
+        }
+        let support_true: Vec<usize> = match self.task {
+            Task::Multiclass { .. } => (0..n * width)
+                .filter(|&j| x_true[j] != 0.0)
+                .collect(),
+            _ => active.clone(),
+        };
+
+        // per-node shards
+        let sizes = shard_sizes(self.m_total, self.nodes);
+        let mut shards = Vec::with_capacity(self.nodes);
+        for (node, &m_i) in sizes.iter().enumerate() {
+            let mut node_rng = rng.split(node as u64 + 1);
+            let mut a = Matrix::zeros(m_i, n);
+            node_rng.fill_normal_f32(&mut a.data);
+            a.normalize_columns(); // paper: per-node column normalization
+
+            // clean predictions (f64 accumulate for the planted signal)
+            let mut labels = vec![0.0f32; m_i * width];
+            for r in 0..m_i {
+                let row = a.row(r);
+                for c in 0..width {
+                    let mut acc = 0.0f64;
+                    for &i in &active {
+                        acc += row[i] as f64 * x_true[c * n + i];
+                    }
+                    labels[r * width + c] = acc as f32;
+                }
+            }
+            // noise + task-specific labelling
+            match self.task {
+                Task::Regression => {
+                    for l in labels.iter_mut() {
+                        *l += (node_rng.normal() * self.noise_std) as f32;
+                    }
+                }
+                Task::Binary => {
+                    for l in labels.iter_mut() {
+                        let noisy = *l as f64 + node_rng.normal() * self.noise_std;
+                        *l = if noisy >= 0.0 { 1.0 } else { -1.0 };
+                    }
+                }
+                Task::Multiclass { k } => {
+                    for r in 0..m_i {
+                        let row = &mut labels[r * k..(r + 1) * k];
+                        let mut best = 0;
+                        let mut best_v = f64::NEG_INFINITY;
+                        for (c, v) in row.iter().enumerate() {
+                            let noisy = *v as f64 + node_rng.normal() * self.noise_std;
+                            if noisy > best_v {
+                                best_v = noisy;
+                                best = c;
+                            }
+                        }
+                        row.fill(0.0);
+                        row[best] = 1.0;
+                    }
+                }
+            }
+            shards.push(Shard {
+                a,
+                labels,
+                width,
+            });
+        }
+
+        Dataset {
+            shards,
+            x_true,
+            support_true,
+            n_features: n,
+            width,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_shapes() {
+        let spec = SyntheticSpec::regression(50, 203, 4);
+        let ds = spec.generate();
+        assert_eq!(ds.nodes(), 4);
+        assert_eq!(ds.total_samples(), 203);
+        assert_eq!(ds.n_features, 50);
+        let sizes: Vec<usize> = ds.shards.iter().map(|s| s.a.rows).collect();
+        assert_eq!(sizes, vec![51, 51, 51, 50]);
+    }
+
+    #[test]
+    fn kappa_matches_paper_formula() {
+        let mut spec = SyntheticSpec::regression(4000, 100, 2);
+        spec.sparsity_level = 0.8;
+        assert_eq!(spec.kappa(), 800); // round(4000 * 0.2)
+        spec.sparsity_level = 0.9;
+        assert_eq!(spec.kappa(), 400);
+    }
+
+    #[test]
+    fn ground_truth_has_kappa_nonzeros() {
+        let spec = SyntheticSpec::regression(100, 80, 2);
+        let ds = spec.generate();
+        let nnz = ds.x_true.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, spec.kappa());
+        assert_eq!(ds.support_true.len(), spec.kappa());
+    }
+
+    #[test]
+    fn columns_are_normalized_per_node() {
+        let ds = SyntheticSpec::regression(20, 100, 2).generate();
+        for shard in &ds.shards {
+            for j in 0..20 {
+                let s: f64 = (0..shard.a.rows)
+                    .map(|i| (shard.a.at(i, j) as f64).powi(2))
+                    .sum();
+                assert!((s.sqrt() - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = SyntheticSpec::regression(10, 30, 2).generate();
+        let b = SyntheticSpec::regression(10, 30, 2).generate();
+        assert_eq!(a.shards[0].a.data, b.shards[0].a.data);
+        assert_eq!(a.x_true, b.x_true);
+    }
+
+    #[test]
+    fn binary_labels_are_signs() {
+        let mut spec = SyntheticSpec::regression(10, 40, 2);
+        spec.task = Task::Binary;
+        let ds = spec.generate();
+        for s in &ds.shards {
+            assert!(s.labels.iter().all(|&l| l == 1.0 || l == -1.0));
+        }
+    }
+
+    #[test]
+    fn multiclass_labels_are_onehot() {
+        let mut spec = SyntheticSpec::regression(10, 40, 2);
+        spec.task = Task::Multiclass { k: 3 };
+        let ds = spec.generate();
+        assert_eq!(ds.width, 3);
+        for s in &ds.shards {
+            for r in 0..s.a.rows {
+                let row = &s.labels[r * 3..(r + 1) * 3];
+                assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+                assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_concatenates_rows() {
+        let ds = SyntheticSpec::regression(5, 14, 3).generate();
+        let (a, labels) = ds.stacked();
+        assert_eq!(a.rows, 14);
+        assert_eq!(labels.len(), 14);
+        // first shard rows appear first
+        assert_eq!(&a.data[..5 * ds.shards[0].a.rows], &ds.shards[0].a.data[..]);
+    }
+}

@@ -1,0 +1,131 @@
+//! High-level drivers: build a cluster for a dataset + config and solve.
+//!
+//! This is the API the CLI, examples, and benchmark harnesses use:
+//!
+//! ```no_run
+//! use psfit::{config::Config, data::SyntheticSpec, driver};
+//! let ds = SyntheticSpec::regression(1000, 8000, 4).generate();
+//! let mut cfg = Config::default();
+//! cfg.solver.kappa = 200;
+//! let result = driver::fit(&ds, &cfg).unwrap();
+//! println!("support recovered: {:?}", &result.support[..5]);
+//! ```
+//!
+//! For `BackendKind::Xla`, each node worker gets its **own** PJRT runtime
+//! (client + compiled executables + staged tiles) so the whole object graph
+//! moves to that node's thread — mirroring the paper, where each node owns
+//! its GPU context.
+
+use std::path::{Path, PathBuf};
+
+use crate::admm::{self, LocalProx, SolveOptions, SolveResult};
+use crate::backend::native::{NativeBackend, SolveMode};
+use crate::backend::xla::XlaBackend;
+use crate::backend::BlockParams;
+use crate::config::{BackendKind, Config};
+use crate::data::{Dataset, FeaturePlan};
+use crate::losses::make_loss;
+use crate::network::{Cluster, NodeWorker, SequentialCluster, ThreadedCluster};
+use crate::runtime::{Manifest, XlaRuntime};
+
+/// Locate the repo's artifact directory (env override, then ./artifacts,
+/// then the crate root).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PSFIT_ARTIFACTS") {
+        return dir.into();
+    }
+    let local = Path::new("artifacts");
+    if local.join("manifest.json").exists() {
+        return local.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The feature-decomposition plan a config implies for a dataset.
+pub fn plan_for(ds: &Dataset, cfg: &Config, artifacts: &Path) -> anyhow::Result<FeaturePlan> {
+    Ok(match cfg.platform.backend {
+        BackendKind::Xla => {
+            let man = Manifest::load(&artifacts.join("manifest.json"))?;
+            FeaturePlan::new(ds.n_features, cfg.platform.devices_per_node, man.block_n)
+        }
+        BackendKind::Native => {
+            FeaturePlan::new(ds.n_features, cfg.platform.devices_per_node, usize::MAX >> 1)
+        }
+    })
+}
+
+/// Build the node workers for a dataset under a config.
+///
+/// For `BackendKind::Xla` with `platform.share_runtime` (the default) all
+/// backends share one PJRT runtime — each artifact compiles once per
+/// process — and the cluster MUST be sequential (enforced by
+/// `fit_with_options`).  With `share_runtime = false`, every node gets a
+/// private runtime and may run on its own thread.
+pub fn build_workers(ds: &Dataset, cfg: &Config) -> anyhow::Result<Vec<NodeWorker>> {
+    let artifacts = default_artifacts_dir();
+    let plan = plan_for(ds, cfg, &artifacts)?;
+    let params = BlockParams {
+        rho_l: cfg.solver.rho_l,
+        rho_c: cfg.solver.rho_c,
+        reg: cfg.solver.block_reg(ds.nodes()),
+    };
+    let shared_rt = match (cfg.platform.backend, cfg.platform.share_runtime) {
+        (BackendKind::Xla, true) => Some(std::rc::Rc::new(XlaRuntime::open(&artifacts)?)),
+        _ => None,
+    };
+    let mut workers = Vec::with_capacity(ds.nodes());
+    for (i, shard) in ds.shards.iter().enumerate() {
+        let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
+        let backend: Box<dyn crate::backend::NodeBackend> = match cfg.platform.backend {
+            BackendKind::Native => Box::new(NativeBackend::new(
+                shard,
+                &plan,
+                loss,
+                SolveMode::Cg {
+                    iters: cfg.solver.cg_iters,
+                },
+            )),
+            BackendKind::Xla => {
+                let rt = match &shared_rt {
+                    Some(rt) => rt.clone(),
+                    None => std::rc::Rc::new(XlaRuntime::open(&artifacts)?),
+                };
+                Box::new(XlaBackend::new(rt, shard, &plan, loss)?)
+            }
+        };
+        workers.push(NodeWorker::new(
+            i,
+            LocalProx::new(backend, plan.clone(), ds.width),
+            params,
+            cfg.solver.inner_iters,
+        ));
+    }
+    Ok(workers)
+}
+
+/// True when this config requires the sequential (single-thread) cluster.
+pub fn requires_sequential(cfg: &Config) -> bool {
+    cfg.platform.backend == BackendKind::Xla && cfg.platform.share_runtime
+}
+
+/// End-to-end fit: build a threaded cluster, run Bi-cADMM, return result.
+pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
+    fit_with_options(ds, cfg, &SolveOptions::default(), true)
+}
+
+pub fn fit_with_options(
+    ds: &Dataset,
+    cfg: &Config,
+    opts: &SolveOptions,
+    threaded: bool,
+) -> anyhow::Result<SolveResult> {
+    let workers = build_workers(ds, cfg)?;
+    let dim = ds.n_features * ds.width;
+    let threaded = threaded && !requires_sequential(cfg);
+    let mut cluster: Box<dyn Cluster> = if threaded {
+        Box::new(ThreadedCluster::new(workers, dim))
+    } else {
+        Box::new(SequentialCluster::new(workers, dim))
+    };
+    admm::solve(cluster.as_mut(), dim, cfg, Some(ds), opts)
+}

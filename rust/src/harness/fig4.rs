@@ -1,0 +1,81 @@
+//! Figure 4 — total CPU<->GPU data-transfer time during execution, for both
+//! the feature-scaling and sample-scaling scenarios, N in {2, 4, 8}.
+//!
+//! Transfers are the staging copies into/out of PJRT buffers recorded by
+//! the ledger (measured), plus a modeled PCIe time when `--pcie-gbps` is
+//! given (`bytes / bandwidth`), which projects the measured volume onto
+//! the paper's physical link.  Expected shape: transfer time grows with
+//! the feature count (bigger z/u/x vectors each round) and stays nearly
+//! flat in the sample sweep (fixed parameter volume per iteration; only
+//! the setup staging grows).
+
+use crate::metrics::CsvTable;
+
+pub struct Fig4Opts {
+    pub full: bool,
+    pub iters: usize,
+    pub pcie_gbps: Option<f64>,
+    pub out: Option<String>,
+}
+
+impl Default for Fig4Opts {
+    fn default() -> Self {
+        Fig4Opts {
+            full: false,
+            iters: 10,
+            pcie_gbps: Some(16.0), // PCIe 3.0 x16-ish, the paper's 4070 link class
+            out: None,
+        }
+    }
+}
+
+pub fn fig4(opts: &Fig4Opts) -> anyhow::Result<CsvTable> {
+    let mut table = CsvTable::new(&[
+        "scenario",
+        "sweep_value",
+        "nodes",
+        "measured_transfer_s",
+        "modeled_pcie_s",
+        "h2d_mb",
+        "d2h_mb",
+    ]);
+
+    let scaling = super::scaling::ScalingOpts {
+        full: opts.full,
+        iters: opts.iters,
+        out: None,
+    };
+
+    // feature sweep
+    let feat = super::scaling::fig2(&scaling)?;
+    harvest("features", &feat, opts, &mut table);
+    // sample sweep
+    let samp = super::scaling::fig3(&scaling)?;
+    harvest("samples", &samp, opts, &mut table);
+    Ok(table)
+}
+
+fn harvest(scenario: &str, src: &CsvTable, opts: &Fig4Opts, out: &mut CsvTable) {
+    // columns of the scaling table:
+    // 0 sweep, 1 nodes, 2 backend, 3 solve, 4 setup, 5 transfer_s, 6 h2d, 7 d2h
+    for row in &src.rows {
+        if row[2] != "xla" {
+            continue; // only the GPU backend has transfers
+        }
+        let h2d_mb: f64 = row[6].parse().unwrap_or(0.0);
+        let d2h_mb: f64 = row[7].parse().unwrap_or(0.0);
+        let modeled = opts
+            .pcie_gbps
+            .map(|g| (h2d_mb + d2h_mb) * 1e6 / (g * 1e9 / 8.0))
+            .unwrap_or(0.0);
+        out.row(vec![
+            scenario.to_string(),
+            row[0].clone(),
+            row[1].clone(),
+            row[5].clone(),
+            format!("{modeled:.4}"),
+            row[6].clone(),
+            row[7].clone(),
+        ]);
+    }
+}

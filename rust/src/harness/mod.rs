@@ -1,0 +1,76 @@
+//! Experiment harnesses — one per table/figure of the paper's §4.
+//!
+//! Every harness has a **scaled** default grid (laptop-friendly, same
+//! qualitative shape) and a `--full` grid at the paper's sizes (needs the
+//! paper's 32 GB-class testbed; fig3's full sample sweep in particular).
+//! Each prints the table to stdout and optionally writes a CSV.
+//!
+//! | Harness  | Paper artifact | What must reproduce                        |
+//! |----------|----------------|--------------------------------------------|
+//! | [`fig1`] | Figure 1       | residual curves; rho_b moves b_r only      |
+//! | [`table1`]| Table 1       | Bi-cADMM << Lasso << Gurobi(BnB); asterisks|
+//! | [`fig2`] | Figure 2       | GPU(XLA) flatter than CPU(native) in n     |
+//! | [`fig3`] | Figure 3       | same, in per-node samples                  |
+//! | [`fig4`] | Figure 4       | transfer time grows with n; flat-ish in m  |
+
+pub mod fig1;
+pub mod fig4;
+pub mod scaling;
+pub mod table1;
+
+pub use fig1::fig1;
+pub use fig4::fig4;
+pub use scaling::{fig2, fig3};
+pub use table1::table1;
+
+use crate::admm::{SolveOptions, SolveResult};
+use crate::config::Config;
+use crate::data::Dataset;
+use crate::driver;
+use crate::network::{Cluster, SequentialCluster, ThreadedCluster};
+use crate::util::Stopwatch;
+
+/// A solve with setup (backend construction / staging / compile) separated
+/// from the iteration loop — Table 1 and the scaling figures time the
+/// iteration loop, like the paper times the solver (not data loading).
+pub struct TimedRun {
+    pub result: SolveResult,
+    pub setup_seconds: f64,
+    pub solve_seconds: f64,
+}
+
+pub fn run_timed(ds: &Dataset, cfg: &Config, threaded: bool) -> anyhow::Result<TimedRun> {
+    let watch = Stopwatch::start();
+    let workers = driver::build_workers(ds, cfg)?;
+    let dim = ds.n_features * ds.width;
+    let threaded = threaded && !driver::requires_sequential(cfg);
+    let mut cluster: Box<dyn Cluster> = if threaded {
+        Box::new(ThreadedCluster::new(workers, dim))
+    } else {
+        Box::new(SequentialCluster::new(workers, dim))
+    };
+    let setup_seconds = watch.elapsed_secs();
+    let result = crate::admm::solve(
+        cluster.as_mut(),
+        dim,
+        cfg,
+        Some(ds),
+        &SolveOptions::default(),
+    )?;
+    let solve_seconds = result.wall_seconds;
+    Ok(TimedRun {
+        result,
+        setup_seconds,
+        solve_seconds,
+    })
+}
+
+/// Write a CSV if a path was given; always print the pretty table.
+pub fn emit(table: &crate::metrics::CsvTable, out: Option<&str>) -> anyhow::Result<()> {
+    println!("{}", table.to_pretty());
+    if let Some(path) = out {
+        table.write_file(std::path::Path::new(path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Figures 2 & 3 — scalability of Bi-cADMM across features (fig2) and
+//! per-node samples (fig3), for N in {2, 4, 8} nodes, on both backends.
+//!
+//! Expected shape: the XLA ("GPU") backend stays flatter than the native
+//! ("CPU") backend as the swept dimension grows, on both sweeps — the
+//! paper's Figures 2 and 3.
+
+use crate::config::{BackendKind, Config};
+use crate::data::SyntheticSpec;
+use crate::metrics::CsvTable;
+
+pub struct ScalingOpts {
+    pub full: bool,
+    /// Outer iterations to time (fixed horizon for comparability).
+    pub iters: usize,
+    pub out: Option<String>,
+}
+
+impl Default for ScalingOpts {
+    fn default() -> Self {
+        ScalingOpts {
+            full: false,
+            iters: 10,
+            out: None,
+        }
+    }
+}
+
+fn run_point(
+    n: usize,
+    m_per_node: usize,
+    nodes: usize,
+    backend: BackendKind,
+    iters: usize,
+) -> anyhow::Result<(f64, f64, crate::metrics::TransferLedger)> {
+    let mut spec = SyntheticSpec::regression(n, m_per_node * nodes, nodes);
+    spec.sparsity_level = 0.8;
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = nodes;
+    cfg.platform.backend = backend;
+    cfg.platform.devices_per_node = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.rho_c = 2.0;
+    cfg.solver.rho_b = 1.0;
+    cfg.solver.rho_l = 2.0;
+    cfg.solver.max_iters = iters;
+    cfg.solver.tol_primal = 0.0; // fixed horizon
+    cfg.solver.polish = false;
+    let run = super::run_timed(&ds, &cfg, true)?;
+    Ok((
+        run.solve_seconds,
+        run.setup_seconds,
+        run.result.transfers,
+    ))
+}
+
+/// Figure 2: fixed m_i = 800 rows per node, sweep the feature count.
+pub fn fig2(opts: &ScalingOpts) -> anyhow::Result<CsvTable> {
+    let (ns, m_per_node) = if opts.full {
+        (vec![1000, 2000, 4000, 6000, 8000, 10_000], 800)
+    } else {
+        (vec![256, 512, 1024, 2048], 400)
+    };
+    sweep("features", &ns, |n| (n, m_per_node), opts)
+}
+
+/// Figure 3: fixed n = 4000 features, sweep per-node samples.
+pub fn fig3(opts: &ScalingOpts) -> anyhow::Result<CsvTable> {
+    let (ms, n) = if opts.full {
+        (
+            vec![25_000, 50_000, 100_000, 200_000, 300_000],
+            4000,
+        )
+    } else {
+        (vec![2_000, 4_000, 8_000, 16_000], 512)
+    };
+    sweep("samples_per_node", &ms, |m| (n, m), opts)
+}
+
+fn sweep(
+    sweep_name: &str,
+    points: &[usize],
+    shape: impl Fn(usize) -> (usize, usize),
+    opts: &ScalingOpts,
+) -> anyhow::Result<CsvTable> {
+    let mut table = CsvTable::new(&[
+        sweep_name,
+        "nodes",
+        "backend",
+        "solve_s",
+        "setup_s",
+        "transfer_s",
+        "h2d_mb",
+        "d2h_mb",
+    ]);
+    for &nodes in &[2usize, 4, 8] {
+        for backend in [BackendKind::Native, BackendKind::Xla] {
+            for &p in points {
+                let (n, m) = shape(p);
+                eprintln!(
+                    "{sweep_name}: N={nodes} backend={} point={p} (n={n}, m/node={m})",
+                    backend.name()
+                );
+                let (solve_s, setup_s, ledger) =
+                    run_point(n, m, nodes, backend, opts.iters)?;
+                table.row(vec![
+                    p.to_string(),
+                    nodes.to_string(),
+                    backend.name().to_string(),
+                    format!("{solve_s:.3}"),
+                    format!("{setup_s:.3}"),
+                    format!("{:.4}", ledger.copy_seconds),
+                    format!("{:.1}", ledger.h2d_bytes as f64 / 1e6),
+                    format!("{:.1}", ledger.d2h_bytes as f64 / 1e6),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}

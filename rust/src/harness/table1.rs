@@ -1,0 +1,120 @@
+//! Table 1 — solution-time comparison: Bi-cADMM vs the exact MIP
+//! (branch-and-bound, the Gurobi stand-in) vs Lasso, over
+//! s_l in {0.6, 0.9} x m x n, N = 4 nodes.
+//!
+//! Expected shape (the paper's finding): Bi-cADMM seconds-scale and flat in
+//! the grid; the MIP orders of magnitude slower / cut off at larger sizes;
+//! Lasso in between, with asterisks where the l1 path fails to recover the
+//! planted support.
+
+use crate::baselines::{best_subset_bnb, lasso_path, BnbStatus};
+use crate::config::{BackendKind, Config};
+use crate::data::SyntheticSpec;
+use crate::metrics::CsvTable;
+use crate::sparsity::support_f1;
+use crate::util::Stopwatch;
+
+pub struct Table1Opts {
+    pub full: bool,
+    pub backend: BackendKind,
+    /// BnB time budget in seconds (paper: 1800).
+    pub mip_budget: f64,
+    pub out: Option<String>,
+}
+
+impl Default for Table1Opts {
+    fn default() -> Self {
+        Table1Opts {
+            full: false,
+            backend: BackendKind::Xla,
+            mip_budget: 60.0,
+            out: None,
+        }
+    }
+}
+
+pub fn table1(opts: &Table1Opts) -> anyhow::Result<CsvTable> {
+    // paper grid: m in {1e5, 2e5, 3e5}, n in {2000, 4000}
+    let (ms, ns, mip_budget) = if opts.full {
+        (vec![100_000, 200_000, 300_000], vec![2000, 4000], 1800.0)
+    } else {
+        (vec![4_000, 8_000, 12_000], vec![128, 256], opts.mip_budget)
+    };
+    let sls = [0.6, 0.9];
+    let nodes = 4;
+
+    let mut table = CsvTable::new(&[
+        "s_l",
+        "m",
+        "n",
+        "bicadmm_s",
+        "bicadmm_f1",
+        "mip_s",
+        "mip_status",
+        "lasso_s",
+        "lasso_recovered",
+    ]);
+
+    for &sl in &sls {
+        for &m in &ms {
+            for &n in &ns {
+                let mut spec = SyntheticSpec::regression(n, m, nodes);
+                spec.sparsity_level = sl;
+                // enough noise that the MIP's relaxation bounds stay loose
+                // (the regime where Gurobi's blow-up shows in the paper)
+                spec.noise_std = 0.25;
+                let ds = spec.generate();
+                let kappa = spec.kappa();
+                eprintln!("table1: s_l={sl} m={m} n={n} kappa={kappa}");
+
+                // ---- Bi-cADMM (distributed, N=4) -----------------------
+                let mut cfg = Config::default();
+                cfg.platform.nodes = nodes;
+                cfg.platform.backend = opts.backend;
+                cfg.solver.kappa = kappa;
+                cfg.solver.rho_c = 2.0;
+                cfg.solver.rho_b = 1.0; // alpha = 0.5
+                cfg.solver.rho_l = 2.0;
+                cfg.solver.max_iters = 150;
+                cfg.solver.polish = false;
+                let run = super::run_timed(&ds, &cfg, true)?;
+                let f1 = support_f1(&run.result.support, &ds.support_true);
+
+                // ---- exact MIP by branch-and-bound ----------------------
+                let (a, b) = ds.stacked();
+                let mip = best_subset_bnb(&a, &b, kappa, cfg.solver.gamma, mip_budget);
+                let mip_status = match mip.status {
+                    BnbStatus::Optimal => "optimal".to_string(),
+                    BnbStatus::CutOff => "cut off".to_string(),
+                };
+
+                // ---- Lasso path ----------------------------------------
+                let watch = Stopwatch::start();
+                let lasso = lasso_path(&a, &b, kappa, 50, 300);
+                let lasso_s = watch.elapsed_secs();
+                // "recovered" means: the kappa largest-|.| lasso coefficients
+                // sit exactly on the true support (the paper's criterion for
+                // dropping the asterisk)
+                let lasso_top: Vec<usize> = {
+                    let mut idx = crate::sparsity::top_k_indices(&lasso.x, kappa);
+                    idx.sort_unstable();
+                    idx
+                };
+                let recovered = lasso_top == ds.support_true;
+
+                table.row(vec![
+                    format!("{sl}"),
+                    m.to_string(),
+                    n.to_string(),
+                    format!("{:.2}", run.solve_seconds),
+                    format!("{:.3}", f1),
+                    format!("{:.1}", mip.wall_seconds),
+                    mip_status,
+                    format!("{:.2}{}", lasso_s, if recovered { "" } else { "*" }),
+                    recovered.to_string(),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}

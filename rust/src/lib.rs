@@ -1,0 +1,27 @@
+//! PsFiT-rs — Bi-linear consensus ADMM (Bi-cADMM) for distributed sparse
+//! machine learning: a Rust + JAX/Pallas (AOT via XLA/PJRT) reproduction
+//! of "A GPU-Accelerated Bi-linear ADMM Algorithm for Distributed Sparse
+//! Machine Learning" (Olama et al., 2024).
+//!
+//! Architecture (see DESIGN.md):
+//!   * [`admm`]     — the Bi-cADMM algorithm (Algorithms 1 & 2)
+//!   * [`backend`]  — native ("CPU") and XLA-artifact ("GPU") data paths
+//!   * [`runtime`]  — PJRT loader/executor for the AOT artifacts
+//!   * [`network`]  — node workers + collectives (the MPI stand-in)
+//!   * [`baselines`]— Lasso, best-subset branch-and-bound (Gurobi
+//!     stand-in), IHT
+//!   * [`driver`]   — high-level fit API used by the CLI and examples
+pub mod admm;
+pub mod backend;
+pub mod baselines;
+pub mod config;
+pub mod data;
+pub mod driver;
+pub mod harness;
+pub mod linalg;
+pub mod losses;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod sparsity;
+pub mod util;

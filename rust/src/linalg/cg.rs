@@ -1,0 +1,131 @@
+//! Conjugate gradient over an abstract SPD operator.
+//!
+//! Mirrors the CG baked into the `block_solve` artifact (same update
+//! order), so backend-parity tests can compare trajectories, not just
+//! fixed points.
+
+use super::ops;
+
+/// Solve `H x = rhs` where `apply(v, out)` computes `out = H v`.
+/// Returns the number of iterations performed.
+pub fn conjugate_gradient<F>(
+    mut apply: F,
+    rhs: &[f64],
+    x: &mut [f64],
+    max_iters: usize,
+    tol: f64,
+) -> usize
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let n = rhs.len();
+    assert_eq!(x.len(), n);
+    let mut r = vec![0.0; n];
+    let mut hx = vec![0.0; n];
+    apply(x, &mut hx);
+    ops::sub(rhs, &hx, &mut r);
+    let mut p = r.clone();
+    let mut rs = ops::dot(&r, &r);
+    let mut hp = vec![0.0; n];
+    let tol2 = tol * tol;
+
+    for it in 0..max_iters {
+        if rs <= tol2 {
+            return it;
+        }
+        apply(&p, &mut hp);
+        let denom = ops::dot(&p, &hp);
+        let alpha = if denom == 0.0 { 0.0 } else { rs / denom };
+        ops::axpy(alpha, &p, x);
+        ops::axpy(-alpha, &hp, &mut r);
+        let rs_new = ops::dot(&r, &r);
+        let beta = if rs == 0.0 { 0.0 } else { rs_new / rs };
+        for (pi, ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        rs = rs_new;
+    }
+    max_iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_diagonal_system_in_one_pass() {
+        let d = [2.0, 4.0, 8.0];
+        let rhs = [2.0, 8.0, 32.0];
+        let mut x = vec![0.0; 3];
+        let iters = conjugate_gradient(
+            |v, out| {
+                for i in 0..3 {
+                    out[i] = d[i] * v[i];
+                }
+            },
+            &rhs,
+            &mut x,
+            50,
+            1e-12,
+        );
+        assert!(iters <= 4);
+        for (xi, want) in x.iter().zip([1.0, 2.0, 4.0]) {
+            assert!((xi - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn converges_on_random_spd_within_n_iters() {
+        let mut rng = Rng::seed_from(2);
+        let n = 24;
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[k * n + i] * b[k * n + j];
+                }
+                a[i * n + j] = s + if i == j { 2.0 } else { 0.0 };
+            }
+        }
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut rhs = vec![0.0; n];
+        for i in 0..n {
+            rhs[i] = (0..n).map(|j| a[i * n + j] * x_true[j]).sum();
+        }
+        let mut x = vec![0.0; n];
+        conjugate_gradient(
+            |v, out| {
+                for i in 0..n {
+                    out[i] = (0..n).map(|j| a[i * n + j] * v[j]).sum();
+                }
+            },
+            &rhs,
+            &mut x,
+            2 * n,
+            1e-12,
+        );
+        for (xi, yi) in x.iter().zip(&x_true) {
+            assert!((xi - yi).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_start_at_solution_is_noop() {
+        let rhs = [3.0, 5.0];
+        let mut x = [1.5, 2.5]; // exact solution of 2I x = rhs
+        let iters = conjugate_gradient(
+            |v, out| {
+                out[0] = 2.0 * v[0];
+                out[1] = 2.0 * v[1];
+            },
+            &rhs,
+            &mut x,
+            10,
+            1e-10,
+        );
+        assert_eq!(iters, 0);
+    }
+}

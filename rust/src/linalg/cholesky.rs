@@ -1,0 +1,127 @@
+//! Dense Cholesky factorization (f64) for the native block solver.
+//!
+//! The native ("CPU") backend factors `rho_l * G_j + reg * I` once per
+//! (outer-iteration penalty change) and then back-substitutes per inner
+//! iteration — the classic direct alternative to the artifact's CG.
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    n: usize,
+    /// Row-major lower triangle (full n x n storage, upper ignored).
+    l: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite at pivot {0}")]
+pub struct NotPositiveDefinite(pub usize);
+
+impl Cholesky {
+    /// Factor `a` (row-major n x n, symmetric PD).
+    pub fn factor(a: &[f64], n: usize) -> Result<Cholesky, NotPositiveDefinite> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[i * n + j];
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(NotPositiveDefinite(i));
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l })
+    }
+
+    /// Solve A x = b in place.
+    pub fn solve(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[i * n + k] * b[k];
+            }
+            b[i] = sum / self.l[i * n + i];
+        }
+        // backward: L^T x = y
+        for i in (0..n).rev() {
+            let mut sum = b[i];
+            for k in (i + 1)..n {
+                sum -= self.l[k * n + i] * b[k];
+            }
+            b[i] = sum / self.l[i * n + i];
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // A = B^T B + n * I
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[k * n + i] * b[k * n + j];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // A = [[4, 2], [2, 3]], b = [10, 9] -> x = [1.5, 2]
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let ch = Cholesky::factor(&a, 2).unwrap();
+        let mut b = [10.0, 9.0];
+        ch.solve(&mut b);
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        for n in [1, 2, 5, 16, 40] {
+            let a = random_spd(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a[i * n + j] * x_true[j];
+                }
+            }
+            let ch = Cholesky::factor(&a, n).unwrap();
+            ch.solve(&mut b);
+            for (x, y) in b.iter().zip(&x_true) {
+                assert!((x - y).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a, 2).is_err());
+    }
+}

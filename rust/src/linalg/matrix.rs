@@ -1,0 +1,238 @@
+//! Row-major dense `f32` matrix with the operations the ADMM data path
+//! needs: matvec, transposed matvec, Gram accumulation, column-block
+//! extraction (the paper's feature decomposition) and row-tile packing (the
+//! host->device staging copy of the GPU backend).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major storage: element (i, j) at `data[i * cols + j]`.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x  (accumulates in f32, matching the XLA artifacts).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = self.row(i);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            *yi = acc;
+        }
+    }
+
+    /// y = A^T v.
+    pub fn matvec_t(&self, v: &[f32], y: &mut [f32]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (yj, &aij) in y.iter_mut().zip(row) {
+                *yj += aij * vi;
+            }
+        }
+    }
+
+    /// G += A^T A, writing into a `cols x cols` row-major buffer.
+    ///
+    /// Rank-1 accumulation over rows; upper triangle computed then
+    /// mirrored.  This is the setup-time op — the per-iteration path only
+    /// does matvecs.
+    pub fn gram_accumulate(&self, g: &mut [f32]) {
+        let n = self.cols;
+        assert_eq!(g.len(), n * n);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &aj) in row.iter().enumerate() {
+                if aj == 0.0 {
+                    continue;
+                }
+                let grow = &mut g[j * n..(j + 1) * n];
+                for (k, &ak) in row.iter().enumerate().skip(j) {
+                    grow[k] += aj * ak;
+                }
+            }
+        }
+        // mirror upper -> lower
+        for j in 0..n {
+            for k in (j + 1)..n {
+                g[k * n + j] = g[j * n + k];
+            }
+        }
+    }
+
+    /// Extract the column block `[col0, col0+width)` as a packed matrix.
+    /// This is the paper's feature decomposition: block j of `A_i`.
+    pub fn column_block(&self, col0: usize, width: usize) -> Matrix {
+        assert!(col0 + width <= self.cols);
+        let mut out = Matrix::zeros(self.rows, width);
+        for i in 0..self.rows {
+            let src = &self.row(i)[col0..col0 + width];
+            out.data[i * width..(i + 1) * width].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Pack rows `[row0, row0+count)` into `buf` (zero-padded to
+    /// `buf.len() / cols` rows).  This is the staging copy a real GPU
+    /// backend performs host->device; the transfer ledger measures it.
+    pub fn pack_row_tile(&self, row0: usize, count: usize, buf: &mut [f32]) {
+        let tile_rows = buf.len() / self.cols;
+        assert!(count <= tile_rows);
+        assert!(row0 + count <= self.rows);
+        let bytes = count * self.cols;
+        buf[..bytes].copy_from_slice(&self.data[row0 * self.cols..row0 * self.cols + bytes]);
+        buf[bytes..].fill(0.0);
+    }
+
+    /// Normalize each column to unit l2 norm (paper §4); returns the norms.
+    pub fn normalize_columns(&mut self) -> Vec<f32> {
+        let mut norms = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                norms[j] += (v as f64) * (v as f64);
+            }
+        }
+        let norms: Vec<f32> = norms
+            .iter()
+            .map(|&s| if s > 0.0 { (s.sqrt()) as f32 } else { 1.0 })
+            .collect();
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (v, &nrm) in row.iter_mut().zip(&norms) {
+                *v /= nrm;
+            }
+        }
+        norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 10.0],
+            vec![0.5, -1.0, 2.0],
+        ])
+    }
+
+    #[test]
+    fn matvec_known_values() {
+        let a = sample();
+        let mut y = vec![0.0; 4];
+        a.matvec(&[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![-2.0, -2.0, -3.0, -1.5]);
+    }
+
+    #[test]
+    fn matvec_t_known_values() {
+        let a = sample();
+        let mut y = vec![0.0; 3];
+        a.matvec_t(&[1.0, 1.0, 0.0, 2.0], &mut y);
+        assert_eq!(y, vec![6.0, 5.0, 13.0]);
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let a = sample();
+        let mut g = vec![0.0f32; 9];
+        a.gram_accumulate(&mut g);
+        for j in 0..3 {
+            for k in 0..3 {
+                let want: f32 = (0..4).map(|i| a.at(i, j) * a.at(i, k)).sum();
+                assert!((g[j * 3 + k] - want).abs() < 1e-5, "({j},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_accumulates_across_tiles() {
+        let a = sample();
+        let top = Matrix::from_rows(vec![a.row(0).to_vec(), a.row(1).to_vec()]);
+        let bot = Matrix::from_rows(vec![a.row(2).to_vec(), a.row(3).to_vec()]);
+        let mut g_whole = vec![0.0f32; 9];
+        a.gram_accumulate(&mut g_whole);
+        let mut g_tiled = vec![0.0f32; 9];
+        top.gram_accumulate(&mut g_tiled);
+        bot.gram_accumulate(&mut g_tiled);
+        for (x, y) in g_whole.iter().zip(&g_tiled) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn column_block_extracts() {
+        let a = sample();
+        let b = a.column_block(1, 2);
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.cols, 2);
+        assert_eq!(b.row(2), &[8.0, 10.0]);
+    }
+
+    #[test]
+    fn pack_row_tile_pads_with_zeros() {
+        let a = sample();
+        let mut buf = vec![f32::NAN; 3 * 3]; // 3-row tile
+        a.pack_row_tile(2, 2, &mut buf);
+        assert_eq!(&buf[0..3], a.row(2));
+        assert_eq!(&buf[3..6], a.row(3));
+        assert_eq!(&buf[6..9], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut a = sample();
+        a.normalize_columns();
+        for j in 0..a.cols {
+            let s: f64 = (0..a.rows).map(|i| (a.at(i, j) as f64).powi(2)).sum();
+            assert!((s.sqrt() - 1.0).abs() < 1e-5, "col {j}: {s}");
+        }
+    }
+}

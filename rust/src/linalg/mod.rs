@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate for the native ("CPU") backend and the
+//! coordinator-side global updates.
+//!
+//! Data-path matrices are `f32` (matching the XLA artifacts); factorizations
+//! and solver-level scalar work run in `f64` for stability.  Everything here
+//! is dependency-free Rust; the "GPU" path goes through `runtime::` instead.
+
+pub mod cg;
+pub mod cholesky;
+pub mod matrix;
+pub mod ops;
+
+pub use cg::conjugate_gradient;
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;

@@ -1,0 +1,111 @@
+//! The paper's model zoo: SLinR (squared), SLogR (logistic), SSVM (hinge),
+//! SSR (softmax) — each a separable convex loss `sum_i phi(pred_i; b_i)`.
+//!
+//! A `Loss` supplies the three operations the stack needs:
+//!   * `value`        — objective reporting / baselines
+//!   * `grad_pred`    — gradient in prediction space (IHT & Lasso-path use)
+//!   * `omega_update` — the separable prox of Eq. (21), the node-level
+//!     omega-bar step.  The native implementations here mirror the Pallas
+//!     kernels (`python/compile/kernels/prox.py`) exactly — same math, same
+//!     damping — so the backend-parity tests can compare trajectories.
+//!
+//! Labels are stored row-major `(m, width)`: width 1 for the scalar losses
+//! (values, or ±1 for classification), `k` one-hot columns for softmax.
+
+pub mod scalar;
+pub mod softmax;
+
+pub use scalar::{Hinge, Logistic, Squared};
+pub use softmax::Softmax;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    Squared,
+    Logistic,
+    Hinge,
+    Softmax,
+}
+
+impl LossKind {
+    pub fn parse(name: &str) -> anyhow::Result<LossKind> {
+        match name {
+            "squared" | "sls" | "linreg" => Ok(LossKind::Squared),
+            "logistic" | "slogr" => Ok(LossKind::Logistic),
+            "hinge" | "svm" | "ssvm" => Ok(LossKind::Hinge),
+            "softmax" | "ssr" => Ok(LossKind::Softmax),
+            other => anyhow::bail!("unknown loss `{other}`"),
+        }
+    }
+}
+
+pub trait Loss: Send + Sync {
+    fn kind(&self) -> LossKind;
+    fn name(&self) -> &'static str;
+    /// Columns of the prediction matrix (1, or k for softmax).
+    fn width(&self) -> usize;
+    /// Total loss over predictions `pred` (row-major (m, width)).
+    fn value(&self, pred: &[f32], labels: &[f32]) -> f64;
+    /// d(loss)/d(pred), written into `out` (same shape as `pred`).
+    fn grad_pred(&self, pred: &[f32], labels: &[f32], out: &mut [f32]);
+    /// Separable omega-bar prox (Eq. 21): per row solve
+    ///   min_w phi(M w; b) + (M rho / 2) ||w - c||^2
+    fn omega_update(&self, labels: &[f32], c: &[f32], m_blocks: f64, rho: f64, out: &mut [f32]);
+}
+
+/// Construct a loss by kind (softmax needs the class count).
+pub fn make_loss(kind: LossKind, classes: usize) -> Box<dyn Loss> {
+    match kind {
+        LossKind::Squared => Box::new(Squared),
+        LossKind::Logistic => Box::new(Logistic),
+        LossKind::Hinge => Box::new(Hinge),
+        LossKind::Softmax => Box::new(Softmax::new(classes)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::Loss;
+
+    /// Finite-difference check of `grad_pred` at a random point.
+    pub fn check_grad(loss: &dyn Loss, pred: &[f32], labels: &[f32], tol: f64) {
+        let mut grad = vec![0.0f32; pred.len()];
+        loss.grad_pred(pred, labels, &mut grad);
+        let h = 1e-3f32;
+        for i in 0..pred.len() {
+            let mut p = pred.to_vec();
+            p[i] += h;
+            let up = loss.value(&p, labels);
+            p[i] -= 2.0 * h;
+            let dn = loss.value(&p, labels);
+            let fd = (up - dn) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[i] as f64).abs() < tol * (1.0 + fd.abs()),
+                "grad[{i}] = {} vs fd {}",
+                grad[i],
+                fd
+            );
+        }
+    }
+
+    /// Check omega_update satisfies first-order optimality via the loss's
+    /// own grad: M phi'(M w) + M rho (w - c) ~= 0 (smooth losses only).
+    pub fn check_omega_stationarity(
+        loss: &dyn Loss,
+        labels: &[f32],
+        c: &[f32],
+        m_blocks: f64,
+        rho: f64,
+        tol: f64,
+    ) {
+        let mut w = vec![0.0f32; c.len()];
+        loss.omega_update(labels, c, m_blocks, rho, &mut w);
+        let scaled: Vec<f32> = w.iter().map(|&x| x * m_blocks as f32).collect();
+        let mut g = vec![0.0f32; c.len()];
+        loss.grad_pred(&scaled, labels, &mut g);
+        for i in 0..c.len() {
+            let total =
+                m_blocks * g[i] as f64 + m_blocks * rho * (w[i] as f64 - c[i] as f64);
+            assert!(total.abs() < tol, "omega grad[{i}] = {total}");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Scalar (width-1) losses: squared, logistic, hinge.
+//!
+//! Prox derivations (per sample, `h(w) = phi(M w; b) + (M rho / 2)(w-c)^2`):
+//!
+//! squared  phi(p) = (p - b)^2
+//!          h'(w) = 2M(Mw - b) + M rho (w - c) = 0
+//!                -> w = (2b + rho c) / (2M + rho)
+//!
+//! logistic phi(p) = log(1 + exp(-b p)), b in {-1, +1}
+//!          Newton on h'(w) = -M b sigma(-bMw) + M rho (w - c),
+//!          h'' = M^2 sigma' + M rho  (strongly convex, sigma' <= 1/4)
+//!
+//! hinge    phi(p) = max(0, 1 - b p); with s = bMc:
+//!            s >= 1          -> w = c
+//!            s <= 1 - M/rho  -> w = c + b / rho
+//!            otherwise       -> w = b / M   (the kink)
+
+use super::{Loss, LossKind};
+
+pub struct Squared;
+
+impl Loss for Squared {
+    fn kind(&self) -> LossKind {
+        LossKind::Squared
+    }
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+    fn width(&self) -> usize {
+        1
+    }
+
+    fn value(&self, pred: &[f32], labels: &[f32]) -> f64 {
+        pred.iter()
+            .zip(labels)
+            .map(|(&p, &b)| {
+                let d = (p - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    fn grad_pred(&self, pred: &[f32], labels: &[f32], out: &mut [f32]) {
+        for ((o, &p), &b) in out.iter_mut().zip(pred).zip(labels) {
+            *o = 2.0 * (p - b);
+        }
+    }
+
+    fn omega_update(&self, labels: &[f32], c: &[f32], m_blocks: f64, rho: f64, out: &mut [f32]) {
+        let m = m_blocks as f32;
+        let r = rho as f32;
+        for ((o, &b), &ci) in out.iter_mut().zip(labels).zip(c) {
+            *o = (2.0 * b + r * ci) / (2.0 * m + r);
+        }
+    }
+}
+
+pub struct Logistic;
+
+pub(crate) const LOGISTIC_NEWTON_ITERS: usize = 12;
+
+impl Loss for Logistic {
+    fn kind(&self) -> LossKind {
+        LossKind::Logistic
+    }
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+    fn width(&self) -> usize {
+        1
+    }
+
+    fn value(&self, pred: &[f32], labels: &[f32]) -> f64 {
+        pred.iter()
+            .zip(labels)
+            .map(|(&p, &b)| {
+                let z = -(b as f64) * p as f64;
+                // log(1 + e^z), stably
+                if z > 0.0 {
+                    z + (1.0 + (-z).exp()).ln()
+                } else {
+                    (1.0 + z.exp()).ln()
+                }
+            })
+            .sum()
+    }
+
+    fn grad_pred(&self, pred: &[f32], labels: &[f32], out: &mut [f32]) {
+        for ((o, &p), &b) in out.iter_mut().zip(pred).zip(labels) {
+            let z = (b as f64) * p as f64;
+            let sig = 1.0 / (1.0 + z.exp()); // sigma(-bp)
+            *o = (-(b as f64) * sig) as f32;
+        }
+    }
+
+    fn omega_update(&self, labels: &[f32], c: &[f32], m_blocks: f64, rho: f64, out: &mut [f32]) {
+        let m = m_blocks;
+        for ((o, &b), &ci) in out.iter_mut().zip(labels).zip(c) {
+            let b = b as f64;
+            let ci = ci as f64;
+            let mut w = ci;
+            for _ in 0..LOGISTIC_NEWTON_ITERS {
+                let sig = 1.0 / (1.0 + (b * m * w).exp()); // sigma(-bMw)
+                let grad = -m * b * sig + m * rho * (w - ci);
+                let hess = m * m * sig * (1.0 - sig) + m * rho;
+                w -= grad / hess;
+            }
+            *o = w as f32;
+        }
+    }
+}
+
+pub struct Hinge;
+
+impl Loss for Hinge {
+    fn kind(&self) -> LossKind {
+        LossKind::Hinge
+    }
+    fn name(&self) -> &'static str {
+        "hinge"
+    }
+    fn width(&self) -> usize {
+        1
+    }
+
+    fn value(&self, pred: &[f32], labels: &[f32]) -> f64 {
+        pred.iter()
+            .zip(labels)
+            .map(|(&p, &b)| (1.0 - (b * p) as f64).max(0.0))
+            .sum()
+    }
+
+    fn grad_pred(&self, pred: &[f32], labels: &[f32], out: &mut [f32]) {
+        // subgradient: -b on the violating side, 0 elsewhere
+        for ((o, &p), &b) in out.iter_mut().zip(pred).zip(labels) {
+            *o = if (b * p) < 1.0 { -b } else { 0.0 };
+        }
+    }
+
+    fn omega_update(&self, labels: &[f32], c: &[f32], m_blocks: f64, rho: f64, out: &mut [f32]) {
+        let m = m_blocks;
+        for ((o, &b), &ci) in out.iter_mut().zip(labels).zip(c) {
+            let b = b as f64;
+            let ci = ci as f64;
+            let s = b * m * ci;
+            let w = if s >= 1.0 {
+                ci
+            } else if s <= 1.0 - m / rho {
+                ci + b / rho
+            } else {
+                b / m
+            };
+            *o = w as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::{check_grad, check_omega_stationarity};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_preds(rng: &mut Rng, m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let pred: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let real: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let sign: Vec<f32> = (0..m)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        (pred, real, sign)
+    }
+
+    #[test]
+    fn squared_value_and_grad() {
+        assert_eq!(Squared.value(&[2.0, 0.0], &[1.0, 1.0]), 2.0);
+        let mut rng = Rng::seed_from(1);
+        let (pred, real, _) = random_preds(&mut rng, 16);
+        check_grad(&Squared, &pred, &real, 1e-3);
+    }
+
+    #[test]
+    fn logistic_value_and_grad() {
+        // phi(0) = ln 2
+        let v = Logistic.value(&[0.0], &[1.0]);
+        assert!((v - std::f64::consts::LN_2).abs() < 1e-9);
+        let mut rng = Rng::seed_from(2);
+        let (pred, _, sign) = random_preds(&mut rng, 16);
+        check_grad(&Logistic, &pred, &sign, 1e-3);
+    }
+
+    #[test]
+    fn hinge_value() {
+        // b=1, p=0.5 -> 0.5; b=1, p=2 -> 0
+        assert_eq!(Hinge.value(&[0.5, 2.0], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn squared_omega_stationarity() {
+        let mut rng = Rng::seed_from(3);
+        let (_, real, _) = random_preds(&mut rng, 32);
+        let c: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        check_omega_stationarity(&Squared, &real, &c, 4.0, 2.0, 1e-3);
+    }
+
+    #[test]
+    fn logistic_omega_stationarity() {
+        let mut rng = Rng::seed_from(4);
+        let (_, _, sign) = random_preds(&mut rng, 32);
+        let c: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        check_omega_stationarity(&Logistic, &sign, &c, 2.0, 1.5, 1e-3);
+    }
+
+    #[test]
+    fn hinge_omega_is_global_min_on_grid() {
+        let mut rng = Rng::seed_from(5);
+        let m_blocks = 2.0;
+        let rho = 3.0;
+        let labels: Vec<f32> = (0..16)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let c: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let mut w = vec![0.0f32; 16];
+        Hinge.omega_update(&labels, &c, m_blocks, rho, &mut w);
+        for i in 0..16 {
+            let h = |wv: f64| {
+                (1.0 - labels[i] as f64 * m_blocks * wv).max(0.0)
+                    + m_blocks * rho / 2.0 * (wv - c[i] as f64).powi(2)
+            };
+            let h_star = h(w[i] as f64);
+            for j in 0..800 {
+                let cand = -4.0 + j as f64 * 0.01;
+                assert!(h_star <= h(cand) + 1e-6, "i={i} cand={cand}");
+            }
+        }
+    }
+
+    #[test]
+    fn omega_matches_limit_cases() {
+        // rho -> infinity: w -> c for every loss.
+        let labels = vec![1.0f32, -1.0];
+        let c = vec![0.3f32, -0.7];
+        for loss in [&Squared as &dyn Loss, &Logistic, &Hinge] {
+            let mut w = vec![0.0f32; 2];
+            loss.omega_update(&labels, &c, 2.0, 1e9, &mut w);
+            for (a, b) in w.iter().zip(&c) {
+                assert!((a - b).abs() < 1e-3, "{}", loss.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Softmax (SSR) loss: per sample `phi(p; y) = logsumexp(p) - p_y` over K
+//! classes.  The omega prox is a K-dimensional damped Newton with the exact
+//! softmax Hessian inverted per sample by Sherman-Morrison — identical
+//! structure to the `omega_softmax` Pallas kernel.
+
+use super::{Loss, LossKind};
+
+pub struct Softmax {
+    k: usize,
+}
+
+impl Softmax {
+    pub fn new(k: usize) -> Softmax {
+        assert!(k >= 2, "softmax needs >= 2 classes");
+        Softmax { k }
+    }
+
+    fn softmax_row(logits: &[f64], out: &mut [f64]) {
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for (o, &l) in out.iter_mut().zip(logits) {
+            *o = (l - mx).exp();
+            sum += *o;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+const NEWTON_ITERS: usize = 12;
+const STEP_MENU: [f64; 5] = [1.0, 0.5, 0.25, 0.125, 0.03125];
+
+impl Loss for Softmax {
+    fn kind(&self) -> LossKind {
+        LossKind::Softmax
+    }
+    fn name(&self) -> &'static str {
+        "softmax"
+    }
+    fn width(&self) -> usize {
+        self.k
+    }
+
+    fn value(&self, pred: &[f32], labels: &[f32]) -> f64 {
+        let k = self.k;
+        let m = pred.len() / k;
+        let mut total = 0.0;
+        for i in 0..m {
+            let row = &pred[i * k..(i + 1) * k];
+            let lab = &labels[i * k..(i + 1) * k];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let lse = mx
+                + row
+                    .iter()
+                    .map(|&p| ((p as f64) - mx).exp())
+                    .sum::<f64>()
+                    .ln();
+            let py: f64 = row
+                .iter()
+                .zip(lab)
+                .map(|(&p, &y)| p as f64 * y as f64)
+                .sum();
+            total += lse - py;
+        }
+        total
+    }
+
+    fn grad_pred(&self, pred: &[f32], labels: &[f32], out: &mut [f32]) {
+        let k = self.k;
+        let m = pred.len() / k;
+        let mut logits = vec![0.0f64; k];
+        let mut probs = vec![0.0f64; k];
+        for i in 0..m {
+            for (l, &p) in logits.iter_mut().zip(&pred[i * k..(i + 1) * k]) {
+                *l = p as f64;
+            }
+            Self::softmax_row(&logits, &mut probs);
+            for j in 0..k {
+                out[i * k + j] = (probs[j] - labels[i * k + j] as f64) as f32;
+            }
+        }
+    }
+
+    fn omega_update(&self, labels: &[f32], c: &[f32], m_blocks: f64, rho: f64, out: &mut [f32]) {
+        let k = self.k;
+        let m = c.len() / k;
+        let mb = m_blocks;
+        let mut w = vec![0.0f64; k];
+        let mut logits = vec![0.0f64; k];
+        let mut s = vec![0.0f64; k];
+        let mut step = vec![0.0f64; k];
+        let mut cand = vec![0.0f64; k];
+
+        for i in 0..m {
+            let ci = &c[i * k..(i + 1) * k];
+            let yi = &labels[i * k..(i + 1) * k];
+            for (wj, &cj) in w.iter_mut().zip(ci) {
+                *wj = cj as f64;
+            }
+            let obj = |wv: &[f64], logits: &mut [f64], s: &mut [f64]| -> f64 {
+                for (l, &x) in logits.iter_mut().zip(wv.iter()) {
+                    *l = mb * x;
+                }
+                let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lse = mx + logits.iter().map(|&l| (l - mx).exp()).sum::<f64>().ln();
+                let py: f64 = wv
+                    .iter()
+                    .zip(yi)
+                    .map(|(&x, &y)| mb * x * y as f64)
+                    .sum();
+                let quad: f64 = wv
+                    .iter()
+                    .zip(ci)
+                    .map(|(&x, &cj)| (x - cj as f64) * (x - cj as f64))
+                    .sum();
+                let _ = s;
+                lse - py + mb * rho / 2.0 * quad
+            };
+
+            for _ in 0..NEWTON_ITERS {
+                for (l, &x) in logits.iter_mut().zip(w.iter()) {
+                    *l = mb * x;
+                }
+                Self::softmax_row(&logits, &mut s);
+                // Newton step via Sherman-Morrison on H = diag(d) - u u^T,
+                // d = M^2 s + M rho, u = M s; stable denominator
+                // rho * sum(u/d) (== 1 - u^T D^-1 u exactly, since sum s = 1).
+                let mut dot_udg = 0.0;
+                let mut sum_du = 0.0;
+                let mut dinv_g = vec![0.0f64; k];
+                let mut dinv_u = vec![0.0f64; k];
+                for j in 0..k {
+                    let grad = mb * (s[j] - yi[j] as f64) + mb * rho * (w[j] - ci[j] as f64);
+                    let d = mb * mb * s[j] + mb * rho;
+                    let u = mb * s[j];
+                    dinv_g[j] = grad / d;
+                    dinv_u[j] = u / d;
+                    dot_udg += u * dinv_g[j];
+                    sum_du += dinv_u[j];
+                }
+                let denom = rho * sum_du;
+                for j in 0..k {
+                    step[j] = dinv_g[j] + dinv_u[j] * (dot_udg / denom);
+                }
+                // damped: best-of-menu line search (monotone descent)
+                let mut best_f = obj(&w, &mut logits, &mut s);
+                let mut best_eta = 0.0;
+                for &eta in &STEP_MENU {
+                    for j in 0..k {
+                        cand[j] = w[j] - eta * step[j];
+                    }
+                    let f = obj(&cand, &mut logits, &mut s);
+                    if f < best_f {
+                        best_f = f;
+                        best_eta = eta;
+                    }
+                }
+                if best_eta == 0.0 {
+                    break; // converged (no step improves)
+                }
+                for j in 0..k {
+                    w[j] -= best_eta * step[j];
+                }
+            }
+            for j in 0..k {
+                out[i * k + j] = w[j] as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::{check_grad, check_omega_stationarity};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn onehot(rng: &mut Rng, m: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * k];
+        for i in 0..m {
+            out[i * k + rng.below(k)] = 1.0;
+        }
+        out
+    }
+
+    #[test]
+    fn value_uniform_logits() {
+        // all-zero logits: phi = ln K per sample
+        let sm = Softmax::new(4);
+        let labels = vec![1.0, 0.0, 0.0, 0.0];
+        let v = sm.value(&[0.0; 4], &labels);
+        assert!((v - (4.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let mut rng = Rng::seed_from(6);
+        let sm = Softmax::new(5);
+        let pred: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
+        let labels = onehot(&mut rng, 4, 5);
+        check_grad(&sm, &pred, &labels, 2e-3);
+    }
+
+    #[test]
+    fn omega_stationarity() {
+        let mut rng = Rng::seed_from(7);
+        let sm = Softmax::new(4);
+        let labels = onehot(&mut rng, 12, 4);
+        let c: Vec<f32> = (0..48).map(|_| rng.normal_f32()).collect();
+        check_omega_stationarity(&sm, &labels, &c, 2.0, 1.5, 5e-3);
+    }
+
+    #[test]
+    fn omega_hard_regime_still_converges() {
+        // the regime that broke undamped Newton: big M, small rho
+        let mut rng = Rng::seed_from(8);
+        let sm = Softmax::new(4);
+        let labels = onehot(&mut rng, 16, 4);
+        let c: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        check_omega_stationarity(&sm, &labels, &c, 4.0, 0.5, 2e-2);
+    }
+
+    #[test]
+    fn omega_rho_infinity_returns_c() {
+        let mut rng = Rng::seed_from(9);
+        let sm = Softmax::new(3);
+        let labels = onehot(&mut rng, 8, 3);
+        let c: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+        let mut w = vec![0.0f32; 24];
+        sm.omega_update(&labels, &c, 2.0, 1e9, &mut w);
+        for (a, b) in w.iter().zip(&c) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! psfit — the PsFiT-rs command-line launcher.
+//!
+//! Subcommands:
+//!   train   — fit a sparse model on a synthetic distributed dataset
+//!   fig1    — regenerate Figure 1 (residual convergence vs rho_b)
+//!   table1  — regenerate Table 1 (Bi-cADMM vs MIP vs Lasso)
+//!   fig2    — regenerate Figure 2 (feature scaling, CPU vs GPU backend)
+//!   fig3    — regenerate Figure 3 (sample scaling)
+//!   fig4    — regenerate Figure 4 (CPU<->GPU transfer time)
+//!   info    — print artifact manifest + platform info
+//!
+//! Scaled-down grids by default; `--full` switches to the paper's sizes.
+
+use psfit::config::{BackendKind, Config};
+use psfit::data::{SyntheticSpec, Task};
+use psfit::driver;
+use psfit::harness;
+use psfit::losses::LossKind;
+use psfit::sparsity::support_f1;
+use psfit::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => train(&args),
+        Some("fig1") => {
+            let opts = harness::fig1::Fig1Opts {
+                full: args.flag("full"),
+                iters: args.get("iters", 60)?,
+                backend: BackendKind::parse(args.opt("backend").unwrap_or("native"))?,
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::fig1(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
+        Some("table1") => {
+            let opts = harness::table1::Table1Opts {
+                full: args.flag("full"),
+                backend: BackendKind::parse(args.opt("backend").unwrap_or("xla"))?,
+                mip_budget: args.get("mip-budget", 60.0)?,
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::table1(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
+        Some(cmd @ ("fig2" | "fig3")) => {
+            let cmd = cmd.to_string();
+            let opts = harness::scaling::ScalingOpts {
+                full: args.flag("full"),
+                iters: args.get("iters", 10)?,
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = if cmd == "fig2" {
+                harness::fig2(&opts)?
+            } else {
+                harness::fig3(&opts)?
+            };
+            harness::emit(&table, opts.out.as_deref())
+        }
+        Some("fig4") => {
+            let opts = harness::fig4::Fig4Opts {
+                full: args.flag("full"),
+                iters: args.get("iters", 10)?,
+                pcie_gbps: Some(args.get("pcie-gbps", 16.0)?),
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::fig4(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
+        Some("info") => info(&args),
+        Some(other) => {
+            anyhow::bail!("unknown subcommand `{other}` (try: train, fig1..fig4, table1, info)")
+        }
+        None => {
+            eprintln!("usage: psfit <train|fig1|fig2|fig3|fig4|table1|info> [options]");
+            eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
+            eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
+            Ok(())
+        }
+    }
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.get("n", 1000)?;
+    let m: usize = args.get("m", 8000)?;
+    let nodes: usize = args.get("nodes", 4)?;
+    let sparsity: f64 = args.get("sparsity", 0.8)?;
+    let loss = LossKind::parse(args.opt("loss").unwrap_or("squared"))?;
+    let classes: usize = args.get("classes", 10)?;
+    let backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_json_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.loss = loss;
+    cfg.classes = classes;
+    cfg.platform.nodes = nodes;
+    cfg.platform.backend = backend;
+    cfg.platform.devices_per_node = args.get("devices", cfg.platform.devices_per_node)?;
+    cfg.solver.rho_c = args.get("rho-c", cfg.solver.rho_c)?;
+    cfg.solver.rho_b = args.get("rho-b", cfg.solver.rho_b)?;
+    cfg.solver.rho_l = args.get("rho-l", cfg.solver.rho_l)?;
+    cfg.solver.max_iters = args.get("iters", cfg.solver.max_iters)?;
+    cfg.solver.inner_iters = args.get("inner-iters", cfg.solver.inner_iters)?;
+
+    let mut spec = SyntheticSpec::regression(n, m, nodes);
+    spec.sparsity_level = sparsity;
+    spec.seed = args.get("seed", 42)?;
+    spec.task = match loss {
+        LossKind::Squared => Task::Regression,
+        LossKind::Logistic | LossKind::Hinge => Task::Binary,
+        LossKind::Softmax => Task::Multiclass { k: classes },
+    };
+    cfg.solver.kappa = args.get("kappa", spec.kappa())?;
+    let trace_out = args.opt("trace").map(String::from);
+    args.reject_unknown()?;
+
+    eprintln!(
+        "training {} (n={n}, m={m}, N={nodes}, kappa={}, backend={})",
+        loss_name(loss),
+        cfg.solver.kappa,
+        backend.name()
+    );
+    let ds = spec.generate();
+    let run = harness::run_timed(&ds, &cfg, true)?;
+    let res = &run.result;
+
+    println!("converged:   {} in {} iterations", res.converged, res.iters);
+    println!("setup:       {:.3} s", run.setup_seconds);
+    println!("solve:       {:.3} s", run.solve_seconds);
+    if let Some(rec) = res.trace.last() {
+        println!(
+            "residuals:   primal {:.3e}  dual {:.3e}  bilinear {:.3e}",
+            rec.primal, rec.dual, rec.bilinear
+        );
+    }
+    println!(
+        "support F1:  {:.3} ({} recovered / {} true)",
+        support_f1(&res.support, &ds.support_true),
+        res.support.len(),
+        ds.support_true.len()
+    );
+    println!(
+        "transfers:   h2d {:.1} MB, d2h {:.1} MB, {:.4} s copied; net {:.1} MB up / {:.1} MB down",
+        res.transfers.h2d_bytes as f64 / 1e6,
+        res.transfers.d2h_bytes as f64 / 1e6,
+        res.transfers.copy_seconds,
+        res.transfers.net_up_bytes as f64 / 1e6,
+        res.transfers.net_down_bytes as f64 / 1e6,
+    );
+    if let Some(path) = trace_out {
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, res.trace.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn loss_name(l: LossKind) -> &'static str {
+    match l {
+        LossKind::Squared => "sparse linear regression (SLS)",
+        LossKind::Logistic => "sparse logistic regression (SLogR)",
+        LossKind::Hinge => "sparse SVM (SSVM)",
+        LossKind::Softmax => "sparse softmax regression (SSR)",
+    }
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown()?;
+    let dir = driver::default_artifacts_dir();
+    println!("artifact dir: {}", dir.display());
+    match psfit::runtime::Manifest::load(&dir.join("manifest.json")) {
+        Ok(m) => {
+            println!(
+                "manifest: tile_m={} block_n={} bm={} cg_iters={} newton_iters={} classes={}",
+                m.tile_m, m.block_n, m.bm, m.cg_iters, m.newton_iters, m.classes
+            );
+            println!("artifacts ({}):", m.artifacts.len());
+            for (name, spec) in &m.artifacts {
+                let ins: Vec<String> =
+                    spec.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+                println!("  {name:18} {} <- {}", spec.file, ins.join(", "));
+            }
+        }
+        Err(e) => println!("no manifest ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Metrics: transfer ledger (Figure 4), iteration traces (Figure 1),
+//! and CSV/JSON emission for the experiment harnesses.
+
+use std::fmt::Write as _;
+
+/// Accounting of host<->device staging copies and network bytes.
+///
+/// On the XLA ("GPU") backend every tile pushed into a PJRT literal and
+/// every result pulled back is recorded here — the measured analogue of the
+/// paper's CPU<->GPU PCIe transfers.  An optional synthetic PCIe model
+/// (`pcie_gbps`) converts bytes to modeled seconds for Figure 4's shape.
+#[derive(Debug, Clone, Default)]
+pub struct TransferLedger {
+    /// host -> device bytes (staging tiles, vectors into literals)
+    pub h2d_bytes: u64,
+    /// device -> host bytes (results out of literals)
+    pub d2h_bytes: u64,
+    /// measured wall time spent in staging copies (seconds)
+    pub copy_seconds: f64,
+    /// network bytes node -> coordinator
+    pub net_up_bytes: u64,
+    /// network bytes coordinator -> node
+    pub net_down_bytes: u64,
+}
+
+impl TransferLedger {
+    pub fn record_h2d(&mut self, bytes: usize, seconds: f64) {
+        self.h2d_bytes += bytes as u64;
+        self.copy_seconds += seconds;
+    }
+
+    pub fn record_d2h(&mut self, bytes: usize, seconds: f64) {
+        self.d2h_bytes += bytes as u64;
+        self.copy_seconds += seconds;
+    }
+
+    pub fn merge(&mut self, other: &TransferLedger) {
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+        self.copy_seconds += other.copy_seconds;
+        self.net_up_bytes += other.net_up_bytes;
+        self.net_down_bytes += other.net_down_bytes;
+    }
+
+    /// Modeled PCIe seconds for the recorded volume: bytes / bandwidth +
+    /// a fixed per-transfer latency is approximated by the measured copy
+    /// time when no model is given.
+    pub fn modeled_transfer_seconds(&self, pcie_gbps: Option<f64>) -> f64 {
+        match pcie_gbps {
+            Some(gbps) => {
+                (self.h2d_bytes + self.d2h_bytes) as f64 / (gbps * 1e9 / 8.0)
+            }
+            None => self.copy_seconds,
+        }
+    }
+}
+
+/// One outer Bi-cADMM iteration's convergence record (Eq. 14 residuals).
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// primal residual  sum_i ||x_i - z||_2
+    pub primal: f64,
+    /// dual residual    sqrt(N) rho_c ||z - z_prev||_2
+    pub dual: f64,
+    /// bilinear residual |g(z, s, t)|
+    pub bilinear: f64,
+    /// wall-clock seconds since solve start
+    pub wall: f64,
+}
+
+/// Full convergence trace of one solve.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn iters(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn last(&self) -> Option<&IterRecord> {
+        self.records.last()
+    }
+
+    /// CSV with header: iter,primal,dual,bilinear,wall
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,primal,dual,bilinear,wall\n");
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{},{:.6e},{:.6e},{:.6e},{:.6e}",
+                r.iter, r.primal, r.dual, r.bilinear, r.wall
+            );
+        }
+        out
+    }
+}
+
+/// Generic CSV table builder for the figure/table harnesses.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> CsvTable {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Fixed-width console rendering.
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (w, c) in widths.iter_mut().zip(r) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = TransferLedger::default();
+        a.record_h2d(100, 0.5);
+        a.record_d2h(50, 0.25);
+        let mut b = TransferLedger::default();
+        b.record_h2d(10, 0.1);
+        b.net_up_bytes = 7;
+        a.merge(&b);
+        assert_eq!(a.h2d_bytes, 110);
+        assert_eq!(a.d2h_bytes, 50);
+        assert_eq!(a.net_up_bytes, 7);
+        assert!((a.copy_seconds - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modeled_seconds_uses_bandwidth() {
+        let mut l = TransferLedger::default();
+        l.record_h2d(16_000_000_000 / 8, 1.0); // 2 GB
+        let secs = l.modeled_transfer_seconds(Some(16.0)); // 16 Gbps
+        assert!((secs - 1.0).abs() < 1e-9);
+        assert_eq!(l.modeled_transfer_seconds(None), 1.0);
+    }
+
+    #[test]
+    fn trace_csv_shape() {
+        let mut t = Trace::default();
+        t.push(IterRecord {
+            iter: 0,
+            primal: 1.0,
+            dual: 2.0,
+            bilinear: 3.0,
+            wall: 0.1,
+        });
+        let csv = t.to_csv();
+        assert!(csv.starts_with("iter,primal,dual,bilinear,wall\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn csv_table_roundtrip() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+        assert!(t.to_pretty().contains('1'));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn csv_table_rejects_ragged() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

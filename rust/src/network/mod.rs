@@ -1,0 +1,346 @@
+//! Simulated distributed layer: node workers, collectives, byte ledger.
+//!
+//! The paper runs over MPI (`mpi4py`): a global/coordinator node performs
+//! the (z, t, s, v) updates while N computational nodes evaluate the
+//! proximal operators.  Here each node is a worker owning its shard and
+//! inner-ADMM state; the [`Cluster`] trait abstracts the transport:
+//!
+//!   * [`SequentialCluster`] — in-process loop (deterministic; tests)
+//!   * [`ThreadedCluster`]   — one OS thread per node with channel-based
+//!     Bcast/Collect, the MPI stand-in used by the benchmarks
+//!
+//! The byte ledger records exactly the paper's protocol volume per round:
+//! coordinator -> node: z (dim f64); node -> coordinator: x_i and u_i
+//! (2 x dim f64) — "Collect: Gather x_i and u_i from all nodes".
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::admm::LocalProx;
+use crate::backend::BlockParams;
+use crate::metrics::TransferLedger;
+
+/// One computational node's full state for the outer loop.
+pub struct NodeWorker {
+    pub id: usize,
+    prox: LocalProx,
+    /// Local estimate x_i (class-major flattened).
+    x: Vec<f64>,
+    /// Scaled consensus dual u_i = y_i / rho_c.
+    u: Vec<f64>,
+    first_round: bool,
+    params: BlockParams,
+    sweeps: usize,
+}
+
+impl NodeWorker {
+    pub fn new(id: usize, prox: LocalProx, params: BlockParams, sweeps: usize) -> NodeWorker {
+        let dim = prox.dim();
+        NodeWorker {
+            id,
+            prox,
+            x: vec![0.0; dim],
+            u: vec![0.0; dim],
+            first_round: true,
+            params,
+            sweeps,
+        }
+    }
+
+    /// One outer round: receive z^k, refresh the dual (Eq. 9), evaluate the
+    /// prox (7a)/(10), and return (x_i^{k+1}, u_i^k) for the Collect step.
+    pub fn round(&mut self, z: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        if self.first_round {
+            self.first_round = false;
+        } else {
+            // u_i^k = u_i^{k-1} + x_i^k - z^k
+            for i in 0..self.u.len() {
+                self.u[i] += self.x[i] - z[i];
+            }
+        }
+        let u_used = self.u.clone();
+        let mut x_new = std::mem::take(&mut self.x);
+        self.prox.solve(z, &self.u, self.params, self.sweeps, &mut x_new);
+        self.x = x_new;
+        (self.x.clone(), u_used)
+    }
+
+    pub fn loss_value(&mut self) -> f64 {
+        self.prox.loss_value()
+    }
+
+    pub fn ledger(&self) -> TransferLedger {
+        self.prox.ledger()
+    }
+}
+
+/// Reply from one node's round.
+pub struct NodeReply {
+    pub node: usize,
+    pub x: Vec<f64>,
+    pub u: Vec<f64>,
+}
+
+pub trait Cluster {
+    fn nodes(&self) -> usize;
+    /// Broadcast z, run every node's round, gather replies (sorted by node).
+    fn round(&mut self, z: &[f64]) -> Vec<NodeReply>;
+    /// Sum of local loss values at the current iterates (reporting).
+    fn loss_value(&mut self) -> f64;
+    /// Merged transfer + network ledger.
+    fn ledger(&mut self) -> TransferLedger;
+}
+
+// ---------------------------------------------------------------------
+// Sequential (in-process) cluster
+// ---------------------------------------------------------------------
+
+pub struct SequentialCluster {
+    workers: Vec<NodeWorker>,
+    net: TransferLedger,
+    dim: usize,
+}
+
+impl SequentialCluster {
+    pub fn new(workers: Vec<NodeWorker>, dim: usize) -> SequentialCluster {
+        SequentialCluster {
+            workers,
+            net: TransferLedger::default(),
+            dim,
+        }
+    }
+}
+
+impl Cluster for SequentialCluster {
+    fn nodes(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn round(&mut self, z: &[f64]) -> Vec<NodeReply> {
+        let bytes = self.dim as u64 * 8;
+        let mut replies = Vec::with_capacity(self.workers.len());
+        for w in self.workers.iter_mut() {
+            self.net.net_down_bytes += bytes;
+            let (x, u) = w.round(z);
+            self.net.net_up_bytes += 2 * bytes;
+            replies.push(NodeReply { node: w.id, x, u });
+        }
+        replies
+    }
+
+    fn loss_value(&mut self) -> f64 {
+        self.workers.iter_mut().map(|w| w.loss_value()).sum()
+    }
+
+    fn ledger(&mut self) -> TransferLedger {
+        let mut total = self.net.clone();
+        for w in &self.workers {
+            total.merge(&w.ledger());
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threaded cluster (one OS thread per node; channels as the wire)
+// ---------------------------------------------------------------------
+
+enum Command {
+    Round(Arc<Vec<f64>>),
+    Loss,
+    Ledger,
+}
+
+enum Reply {
+    Round(NodeReply),
+    Loss(f64),
+    Ledger(TransferLedger),
+}
+
+pub struct ThreadedCluster {
+    senders: Vec<mpsc::Sender<Command>>,
+    replies: mpsc::Receiver<Reply>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    net: TransferLedger,
+    dim: usize,
+    n: usize,
+}
+
+impl ThreadedCluster {
+    pub fn new(workers: Vec<NodeWorker>, dim: usize) -> ThreadedCluster {
+        let n = workers.len();
+        let (reply_tx, replies) = mpsc::channel::<Reply>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for mut w in workers {
+            let (tx, rx) = mpsc::channel::<Command>();
+            let out = reply_tx.clone();
+            senders.push(tx);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    let reply = match cmd {
+                        Command::Round(z) => {
+                            let (x, u) = w.round(&z);
+                            Reply::Round(NodeReply { node: w.id, x, u })
+                        }
+                        Command::Loss => Reply::Loss(w.loss_value()),
+                        Command::Ledger => Reply::Ledger(w.ledger()),
+                    };
+                    if out.send(reply).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        ThreadedCluster {
+            senders,
+            replies,
+            handles,
+            net: TransferLedger::default(),
+            dim,
+            n,
+        }
+    }
+}
+
+impl Cluster for ThreadedCluster {
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn round(&mut self, z: &[f64]) -> Vec<NodeReply> {
+        let payload = Arc::new(z.to_vec());
+        let bytes = self.dim as u64 * 8;
+        for tx in &self.senders {
+            self.net.net_down_bytes += bytes;
+            tx.send(Command::Round(payload.clone())).expect("node died");
+        }
+        let mut replies: Vec<NodeReply> = (0..self.n)
+            .map(|_| match self.replies.recv().expect("node died") {
+                Reply::Round(r) => {
+                    self.net.net_up_bytes += 2 * bytes;
+                    r
+                }
+                _ => unreachable!("protocol violation"),
+            })
+            .collect();
+        replies.sort_by_key(|r| r.node);
+        replies
+    }
+
+    fn loss_value(&mut self) -> f64 {
+        for tx in &self.senders {
+            tx.send(Command::Loss).expect("node died");
+        }
+        (0..self.n)
+            .map(|_| match self.replies.recv().expect("node died") {
+                Reply::Loss(v) => v,
+                _ => unreachable!("protocol violation"),
+            })
+            .sum()
+    }
+
+    fn ledger(&mut self) -> TransferLedger {
+        let mut total = self.net.clone();
+        for tx in &self.senders {
+            tx.send(Command::Ledger).expect("node died");
+        }
+        for _ in 0..self.n {
+            match self.replies.recv().expect("node died") {
+                Reply::Ledger(l) => total.merge(&l),
+                _ => unreachable!("protocol violation"),
+            }
+        }
+        total
+    }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels; workers exit their loops
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeBackend, SolveMode};
+    use crate::data::{FeaturePlan, SyntheticSpec};
+    use crate::losses::Squared;
+
+    fn make_workers(nodes: usize) -> (Vec<NodeWorker>, usize) {
+        let ds = SyntheticSpec::regression(12, 40 * nodes, nodes).generate();
+        let plan = FeaturePlan::new(12, 2, 512);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.0 / (nodes as f64 * 10.0) + 1.0,
+        };
+        let workers = ds
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let be = NativeBackend::new(shard, &plan, Box::new(Squared), SolveMode::Direct);
+                NodeWorker::new(i, LocalProx::new(Box::new(be), plan.clone(), 1), params, 10)
+            })
+            .collect();
+        (workers, 12)
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let (w1, dim) = make_workers(3);
+        let (w2, _) = make_workers(3);
+        let mut seq = SequentialCluster::new(w1, dim);
+        let mut thr = ThreadedCluster::new(w2, dim);
+        let z = vec![0.05; dim];
+        for _ in 0..3 {
+            let a = seq.round(&z);
+            let b = thr.round(&z);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.node, rb.node);
+                for (x, y) in ra.x.iter().zip(&rb.x) {
+                    assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+                }
+                for (x, y) in ra.u.iter().zip(&rb.u) {
+                    assert!((x - y).abs() < 1e-12);
+                }
+            }
+        }
+        assert!((seq.loss_value() - thr.loss_value()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_ledger_counts_protocol_volume() {
+        let (w, dim) = make_workers(2);
+        let mut seq = SequentialCluster::new(w, dim);
+        let z = vec![0.0; dim];
+        seq.round(&z);
+        seq.round(&z);
+        let l = seq.ledger();
+        // 2 rounds x 2 nodes x dim x 8 bytes down; twice that up
+        assert_eq!(l.net_down_bytes, 2 * 2 * dim as u64 * 8);
+        assert_eq!(l.net_up_bytes, 2 * 2 * 2 * dim as u64 * 8);
+    }
+
+    #[test]
+    fn dual_update_follows_consensus_protocol() {
+        let (mut w, dim) = {
+            let (mut ws, d) = make_workers(1);
+            (ws.remove(0), d)
+        };
+        let z0 = vec![0.0; dim];
+        let (x1, u0) = w.round(&z0);
+        assert!(u0.iter().all(|&v| v == 0.0), "first-round dual must be 0");
+        let z1 = vec![0.1; dim];
+        let (_x2, u1) = w.round(&z1);
+        // u1 = u0 + x1 - z1
+        for i in 0..dim {
+            assert!((u1[i] - (x1[i] - z1[i])).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: tile shapes, iteration constants, and the
+//! input/output specs of every artifact.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub tile_m: usize,
+    pub block_n: usize,
+    pub bm: usize,
+    pub cg_iters: usize,
+    pub newton_iters: usize,
+    pub classes: usize,
+    /// Algorithm-2 sweeps baked into each `node_sweep_*` artifact.
+    pub inner_sweeps: usize,
+    /// Lowering mode of the tile programs ("xla" or "pallas").
+    pub mode: String,
+    pub param_size: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} (run `make artifacts` first?): {e}",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text)?;
+        let usize_of = |key: &str| -> anyhow::Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest key `{key}` must be an integer"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("`artifacts` must be an object"))?;
+        for (name, spec) in arts {
+            let tensor_list = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                spec.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{name}.{key} must be an array"))?
+                    .iter()
+                    .map(|t| {
+                        let shape = t
+                            .req("shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| anyhow::anyhow!("bad dim in {name}.{key}"))
+                            })
+                            .collect::<anyhow::Result<Vec<usize>>>()?;
+                        let dtype = t
+                            .req("dtype")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("bad dtype"))?
+                            .to_string();
+                        anyhow::ensure!(dtype == "float32", "only f32 artifacts supported");
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: spec
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("{name}.file must be a string"))?
+                        .to_string(),
+                    inputs: tensor_list("inputs")?,
+                    outputs: tensor_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            fingerprint: v
+                .req("fingerprint")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            tile_m: usize_of("tile_m")?,
+            block_n: usize_of("block_n")?,
+            bm: usize_of("bm")?,
+            cg_iters: usize_of("cg_iters")?,
+            newton_iters: usize_of("newton_iters")?,
+            classes: usize_of("classes")?,
+            inner_sweeps: v
+                .get("inner_sweeps")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(3),
+            mode: v
+                .get("mode")
+                .and_then(|x| x.as_str())
+                .unwrap_or("xla")
+                .to_string(),
+            param_size: v
+                .req("param_slots")?
+                .req("size")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("param_slots.size"))?,
+            artifacts,
+        })
+    }
+
+    /// The omega artifact name for a loss.
+    pub fn omega_artifact(kind: crate::losses::LossKind) -> &'static str {
+        match kind {
+            crate::losses::LossKind::Squared => "omega_squared",
+            crate::losses::LossKind::Logistic => "omega_logistic",
+            crate::losses::LossKind::Hinge => "omega_hinge",
+            crate::losses::LossKind::Softmax => "omega_softmax",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "fingerprint": "abc123",
+      "tile_m": 128, "block_n": 64, "bm": 32,
+      "cg_iters": 24, "newton_iters": 8, "classes": 10,
+      "param_slots": {"m_blocks": 0, "rho_l": 1, "rho_c": 2, "reg": 3, "size": 8},
+      "artifacts": {
+        "gram_tile": {
+          "file": "gram_tile.hlo.txt",
+          "inputs": [{"shape": [128, 64], "dtype": "float32"}],
+          "outputs": [{"shape": [64, 64], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tile_m, 128);
+        assert_eq!(m.block_n, 64);
+        assert_eq!(m.cg_iters, 24);
+        assert_eq!(m.param_size, 8);
+        let g = &m.artifacts["gram_tile"];
+        assert_eq!(g.file, "gram_tile.hlo.txt");
+        assert_eq!(g.inputs[0].shape, vec![128, 64]);
+        assert_eq!(g.outputs[0].elems(), 64 * 64);
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("float32", "float64");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse(r#"{"tile_m": 1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain every program the backend needs.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in [
+            "gram_tile",
+            "matvec_tile",
+            "matvec_t_tile",
+            "block_solve",
+            "block_iteration",
+            "omega_squared",
+            "omega_logistic",
+            "omega_hinge",
+            "omega_softmax",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax >= 0.5's
+//! 64-bit-id protos; the text parser reassigns ids).  Executables are
+//! compiled lazily on first use and cached; input tensors that live across
+//! iterations (feature tiles, Gram matrices, labels) are staged once as
+//! persistent `PjRtBuffer`s — the analogue of the paper keeping `A_ij`
+//! resident on GPU j — while per-iteration vectors go through the
+//! transfer-ledger-accounted staging path.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use params::ParamsBuffer;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::Stopwatch;
+
+/// PJRT client + lazily compiled executable cache.
+///
+/// Ownership note: the `xla` wrapper types refcount the client with `Rc`,
+/// so an `XlaRuntime` (and every buffer/executable derived from it) must
+/// stay on a single thread.  The architecture therefore gives **each node
+/// worker its own private runtime** — created before the worker moves to
+/// its thread, after which the entire object graph lives there.  That is
+/// also the honest simulation: in the paper each node owns its own GPU
+/// context.  `backend::xla::XlaBackend` carries the `unsafe impl Send`
+/// with this invariant documented.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// A persistent device-resident tensor.
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub elems: usize,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> anyhow::Result<XlaRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Stage a host f32 tensor as a persistent device buffer.
+    /// Returns the tensor and the staging wall-time in seconds.
+    pub fn stage(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<(DeviceTensor, f64)> {
+        let watch = Stopwatch::start();
+        let buffer = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("staging {dims:?}: {e:?}"))?;
+        let secs = watch.elapsed_secs();
+        Ok((
+            DeviceTensor {
+                buffer,
+                elems: data.len(),
+            },
+            secs,
+        ))
+    }
+
+    /// Execute an artifact over device buffers; returns the raw output
+    /// buffers of the (single) replica.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "no outputs");
+        Ok(out.swap_remove(0))
+    }
+
+    /// Pull a tuple output buffer back to host f32 vectors.
+    /// Returns the vectors and the copy-out wall time.
+    pub fn fetch_tuple(&self, buffer: &xla::PjRtBuffer) -> anyhow::Result<(Vec<Vec<f32>>, f64)> {
+        let watch = Stopwatch::start();
+        let literal = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+            );
+        }
+        let secs = watch.elapsed_secs();
+        Ok((out, secs))
+    }
+}

@@ -1,0 +1,77 @@
+//! The (8, 1) f32 scalar-parameter vector shared by every artifact —
+//! mirrors `python/compile/model.py` slot layout (P_MBLOCKS..P_REG).
+
+use super::{DeviceTensor, XlaRuntime};
+use crate::backend::BlockParams;
+
+pub const P_MBLOCKS: usize = 0;
+pub const P_RHO_L: usize = 1;
+pub const P_RHO_C: usize = 2;
+pub const P_REG: usize = 3;
+
+/// Device-resident parameter vector, re-staged only when values change.
+pub struct ParamsBuffer {
+    tensor: Option<DeviceTensor>,
+    current: Option<(f64, BlockParams)>,
+    size: usize,
+}
+
+impl ParamsBuffer {
+    pub fn new(size: usize) -> ParamsBuffer {
+        ParamsBuffer {
+            tensor: None,
+            current: None,
+            size,
+        }
+    }
+
+    /// Host-side encoding (exposed for tests).
+    pub fn encode(m_blocks: f64, p: BlockParams, size: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; size];
+        v[P_MBLOCKS] = m_blocks as f32;
+        v[P_RHO_L] = p.rho_l as f32;
+        v[P_RHO_C] = p.rho_c as f32;
+        v[P_REG] = p.reg as f32;
+        v
+    }
+
+    /// Get the device buffer for these parameter values, staging if needed.
+    /// Returns the buffer and the bytes staged (0 when cached).
+    pub fn get(
+        &mut self,
+        rt: &XlaRuntime,
+        m_blocks: f64,
+        p: BlockParams,
+    ) -> anyhow::Result<(&DeviceTensor, usize, f64)> {
+        let key = (m_blocks, p);
+        if self.current != Some(key) || self.tensor.is_none() {
+            let host = Self::encode(m_blocks, p, self.size);
+            let (tensor, secs) = rt.stage(&host, &[self.size, 1])?;
+            self.tensor = Some(tensor);
+            self.current = Some(key);
+            return Ok((self.tensor.as_ref().unwrap(), self.size * 4, secs));
+        }
+        Ok((self.tensor.as_ref().unwrap(), 0, 0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_layout_matches_python_slots() {
+        let p = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.5,
+            reg: 1.525,
+        };
+        let v = ParamsBuffer::encode(4.0, p, 8);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[P_MBLOCKS], 4.0);
+        assert_eq!(v[P_RHO_L], 2.0);
+        assert_eq!(v[P_RHO_C], 1.5);
+        assert_eq!(v[P_REG], 1.525);
+        assert_eq!(&v[4..], &[0.0; 4]);
+    }
+}

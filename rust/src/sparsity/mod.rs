@@ -1,0 +1,110 @@
+//! Sparsity machinery for the bi-linear reformulation (Theorem 2.1).
+//!
+//! `||x||_0 <= kappa`  <=>  exists (s, t):
+//!     x^T s = t,   ||x||_1 <= t,   ||s||_1 <= kappa,   ||s||_inf <= 1.
+//!
+//! This module provides the three geometric operations the coordinator
+//! needs, each exact and O(n log n):
+//!
+//!   * [`project_l1_ball`]      — projection onto {w : ||w||_1 <= r}
+//!   * [`project_l1_epigraph`]  — projection onto {(z,t) : ||z||_1 <= t}
+//!     (the constraint set of the (z,t)-update (7b))
+//!   * [`s_update`]             — the closed-form minimizer of (12) over
+//!     S^kappa = {s : ||s||_inf <= 1, ||s||_1 <= kappa}
+//!
+//! plus hard-thresholding / support utilities shared by the IHT baseline
+//! and the solution-polish step.
+
+pub mod projections;
+pub mod support;
+
+pub use projections::{project_l1_ball, project_l1_epigraph};
+pub use support::{hard_threshold, support_f1, support_of, top_k_indices};
+
+/// Closed-form s-update (Eq. 12): minimize (z^T s - tau)^2 over S^kappa.
+///
+/// Let `s*` be the greedy extreme point (sign pattern on the kappa largest
+/// |z| coordinates) and `mx = max_{s in S^kappa} z^T s = sum of kappa
+/// largest |z|`.  Then:
+///   * |tau| >= mx  ->  s = sign(tau) * s*      (best achievable, residual
+///     |tau| - mx)
+///   * |tau| <  mx  ->  s = (tau / mx) * s*     (exact zero of the
+///     objective; feasible because S^kappa is balanced and convex)
+pub fn s_update(z: &[f64], tau: f64, kappa: usize) -> Vec<f64> {
+    let n = z.len();
+    let kappa = kappa.min(n);
+    let mut s = vec![0.0; n];
+    if kappa == 0 {
+        return s;
+    }
+    let idx = top_k_indices(z, kappa);
+    let mx: f64 = idx.iter().map(|&i| z[i].abs()).sum();
+    if mx == 0.0 {
+        return s; // z == 0 on its top support: any feasible s gives z^T s = 0
+    }
+    let scale = if tau.abs() >= mx { tau.signum() } else { tau / mx };
+    for &i in &idx {
+        s[i] = scale * z[i].signum();
+    }
+    s
+}
+
+/// Value of the bilinear constraint g(z, s, t) = z^T s - t.
+pub fn bilinear_g(z: &[f64], s: &[f64], t: f64) -> f64 {
+    crate::linalg::ops::dot(z, s) - t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    #[test]
+    fn s_update_hits_target_exactly_when_reachable() {
+        let z = vec![3.0, -1.0, 0.5, 2.0];
+        let kappa = 2;
+        // mx = 3 + 2 = 5; target 4 < 5 -> exact
+        let s = s_update(&z, 4.0, kappa);
+        assert!((ops::dot(&z, &s) - 4.0).abs() < 1e-12);
+        assert!(s.iter().map(|v| v.abs()).sum::<f64>() <= kappa as f64 + 1e-12);
+        assert!(s.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn s_update_saturates_when_target_unreachable() {
+        let z = vec![3.0, -1.0, 0.5, 2.0];
+        let s = s_update(&z, 10.0, 2);
+        // best achievable is mx = 5 with sign pattern on {0, 3}
+        assert!((ops::dot(&z, &s) - 5.0).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+        assert_eq!(s[2], 0.0);
+    }
+
+    #[test]
+    fn s_update_negative_target() {
+        let z = vec![1.0, -2.0];
+        let s = s_update(&z, -3.0, 2);
+        assert!((ops::dot(&z, &s) + 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn s_update_zero_vector() {
+        let s = s_update(&[0.0, 0.0, 0.0], 1.0, 2);
+        assert_eq!(s, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn s_update_kappa_zero() {
+        let s = s_update(&[1.0, 2.0], 1.0, 0);
+        assert_eq!(s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn bilinear_residual_zero_iff_sparse_certificate() {
+        // If z is kappa-sparse, s = sign pattern and t = ||z||_1 certify it.
+        let z = vec![0.0, 2.0, 0.0, -1.0];
+        let t = 3.0;
+        let s = s_update(&z, t, 2);
+        assert!(bilinear_g(&z, &s, t).abs() < 1e-12);
+    }
+}

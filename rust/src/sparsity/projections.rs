@@ -1,0 +1,223 @@
+//! Exact Euclidean projections onto the l1 ball and the l1-norm epigraph.
+//!
+//! Both are sort-based O(n log n) algorithms; correctness is checked by
+//! first-order optimality properties in the proptest suite (feasibility,
+//! idempotence, and distance-dominance against random feasible points).
+
+/// Project `v` onto `{w : ||w||_1 <= r}` (Duchi et al. 2008).
+pub fn project_l1_ball(v: &[f64], r: f64) -> Vec<f64> {
+    assert!(r >= 0.0, "radius must be non-negative");
+    let l1: f64 = v.iter().map(|x| x.abs()).sum();
+    if l1 <= r {
+        return v.to_vec();
+    }
+    if r == 0.0 {
+        return vec![0.0; v.len()];
+    }
+    // find threshold theta via the sorted magnitudes
+    let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cumsum = 0.0;
+    let mut theta = 0.0;
+    for (k, &m) in mags.iter().enumerate() {
+        cumsum += m;
+        let cand = (cumsum - r) / (k + 1) as f64;
+        if k + 1 == mags.len() || mags[k + 1] <= cand {
+            theta = cand;
+            break;
+        }
+    }
+    v.iter()
+        .map(|&x| x.signum() * (x.abs() - theta).max(0.0))
+        .collect()
+}
+
+/// Project `(v, s)` onto the epigraph `{(z, t) : ||z||_1 <= t}`.
+///
+/// KKT: the projection is `z = soft(v, lam)`, `t = s + lam` for the unique
+/// `lam >= 0` solving `phi(lam) = ||soft(v, lam)||_1 - s - lam = 0`
+/// (phi is strictly decreasing with slope <= -1).  Special cases:
+/// feasible input (lam = 0) and total collapse to the origin
+/// (s <= -max|v|).
+pub fn project_l1_epigraph(v: &[f64], s: f64) -> (Vec<f64>, f64) {
+    let l1: f64 = v.iter().map(|x| x.abs()).sum();
+    if l1 <= s {
+        return (v.to_vec(), s); // already feasible
+    }
+    let vmax = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    if s <= -vmax {
+        return (vec![0.0; v.len()], 0.0); // projection is the apex
+    }
+    // phi is piecewise linear with breakpoints at the sorted magnitudes:
+    // on [a_{k+1}, a_k] (descending), ||soft(v,lam)||_1 = C_k - k*lam with
+    // C_k = sum of the k largest magnitudes, so the root is
+    // lam = (C_k - s) / (k + 1).
+    let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cumsum = 0.0;
+    let mut lam = 0.0;
+    let mut found = false;
+    for (k, &m) in mags.iter().enumerate() {
+        cumsum += m;
+        let cand = (cumsum - s) / (k + 2) as f64; // k+1 terms active => slope -(k+1)-1
+        let next = mags.get(k + 1).copied().unwrap_or(0.0);
+        if cand >= next && cand <= m {
+            lam = cand;
+            found = true;
+            break;
+        }
+    }
+    if !found {
+        // Floating-point tie at a breakpoint: fall back to bisection on the
+        // (strictly decreasing, continuous) phi — always succeeds.
+        let (mut lo, mut hi) = (0.0f64, vmax.max(-s) + 1.0);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            let soft: f64 = v.iter().map(|x| (x.abs() - mid).max(0.0)).sum();
+            if soft - s - mid > 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lam = 0.5 * (lo + hi);
+    }
+    if lam <= 0.0 {
+        // the input sits on the boundary to within fp (l1 ~= s): the
+        // projection is the point itself
+        return (v.to_vec(), s.max(l1));
+    }
+    let z: Vec<f64> = v
+        .iter()
+        .map(|&x| x.signum() * (x.abs() - lam).max(0.0))
+        .collect();
+    let t = s + lam;
+    (z, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+    use crate::util::rng::Rng;
+
+    fn l1(v: &[f64]) -> f64 {
+        v.iter().map(|x| x.abs()).sum()
+    }
+
+    #[test]
+    fn ball_feasible_is_identity() {
+        let v = vec![0.2, -0.3, 0.1];
+        assert_eq!(project_l1_ball(&v, 1.0), v);
+    }
+
+    #[test]
+    fn ball_projection_lands_on_boundary() {
+        let v = vec![3.0, -4.0, 1.0];
+        let w = project_l1_ball(&v, 2.0);
+        assert!((l1(&w) - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ball_radius_zero() {
+        assert_eq!(project_l1_ball(&[1.0, -2.0], 0.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn ball_matches_bruteforce_soft_threshold() {
+        // direct bisection on theta as an oracle
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..20).map(|_| rng.normal() * 3.0).collect();
+            let r = rng.uniform() * 5.0;
+            let w = project_l1_ball(&v, r);
+            if l1(&v) <= r {
+                assert_eq!(w, v);
+                continue;
+            }
+            let (mut lo, mut hi) = (0.0, v.iter().fold(0.0f64, |m, x| m.max(x.abs())));
+            for _ in 0..200 {
+                let mid = 0.5 * (lo + hi);
+                let s: f64 = v.iter().map(|x| (x.abs() - mid).max(0.0)).sum();
+                if s > r {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            let oracle: Vec<f64> = v
+                .iter()
+                .map(|&x| x.signum() * (x.abs() - lo).max(0.0))
+                .collect();
+            for (a, b) in w.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn epigraph_feasible_is_identity() {
+        let v = vec![0.5, -0.5];
+        let (z, t) = project_l1_epigraph(&v, 2.0);
+        assert_eq!(z, v);
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn epigraph_projection_is_feasible_and_tight() {
+        let v = vec![3.0, -1.0, 2.0];
+        let (z, t) = project_l1_epigraph(&v, 1.0);
+        assert!(l1(&z) <= t + 1e-10);
+        // infeasible input projects onto the boundary
+        assert!((l1(&z) - t).abs() < 1e-10);
+    }
+
+    #[test]
+    fn epigraph_collapses_to_apex() {
+        let v = vec![0.5, -0.25];
+        let (z, t) = project_l1_epigraph(&v, -10.0);
+        assert_eq!(z, vec![0.0, 0.0]);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn epigraph_projection_minimizes_distance() {
+        // compare against dense grid search over the multiplier lam
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..30 {
+            let v: Vec<f64> = (0..8).map(|_| rng.normal() * 2.0).collect();
+            let s = rng.normal();
+            let (z, t) = project_l1_epigraph(&v, s);
+            let d_star = ops::dist2(&z, &v) + (t - s) * (t - s);
+            // sample feasible candidates: soft-threshold at many lams
+            for i in 0..400 {
+                let lam = i as f64 * 0.02;
+                let zc: Vec<f64> = v
+                    .iter()
+                    .map(|&x| x.signum() * (x.abs() - lam).max(0.0))
+                    .collect();
+                let tc = zc.iter().map(|x| x.abs()).sum::<f64>();
+                let d = ops::dist2(&zc, &v) + (tc - s) * (tc - s);
+                assert!(
+                    d_star <= d + 1e-8,
+                    "found better feasible point: {d} < {d_star}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn epigraph_is_idempotent() {
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..12).map(|_| rng.normal() * 3.0).collect();
+            let s = rng.normal() * 2.0;
+            let (z, t) = project_l1_epigraph(&v, s);
+            let (z2, t2) = project_l1_epigraph(&z, t);
+            for (a, b) in z.iter().zip(&z2) {
+                assert!((a - b).abs() < 1e-10);
+            }
+            assert!((t - t2).abs() < 1e-10);
+        }
+    }
+}

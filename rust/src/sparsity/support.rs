@@ -1,0 +1,112 @@
+//! Support-set utilities: top-k selection, hard thresholding, recovery
+//! metrics.  Shared by the coordinator's solution extraction, the IHT
+//! baseline, and the experiment harnesses (Table 1 reports which methods
+//! recover the planted support).
+
+/// Indices of the `k` largest-|.| entries (ties broken by lower index,
+/// making the selection deterministic).
+pub fn top_k_indices(v: &[f64], k: usize) -> Vec<usize> {
+    let k = k.min(v.len());
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| {
+        v[b].abs()
+            .partial_cmp(&v[a].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Zero all but the `k` largest-|.| entries (in place), returning the
+/// retained support (sorted).
+pub fn hard_threshold(v: &mut [f64], k: usize) -> Vec<usize> {
+    let mut keep = top_k_indices(v, k);
+    keep.sort_unstable();
+    let mut ptr = 0;
+    for i in 0..v.len() {
+        if ptr < keep.len() && keep[ptr] == i {
+            ptr += 1;
+        } else {
+            v[i] = 0.0;
+        }
+    }
+    keep
+}
+
+/// Support of `v` under an absolute tolerance.
+pub fn support_of(v: &[f64], tol: f64) -> Vec<usize> {
+    v.iter()
+        .enumerate()
+        .filter(|(_, &x)| x.abs() > tol)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// F1 score between a recovered support and the ground-truth support.
+pub fn support_f1(recovered: &[usize], truth: &[usize]) -> f64 {
+    if recovered.is_empty() && truth.is_empty() {
+        return 1.0;
+    }
+    let truth_set: std::collections::HashSet<usize> = truth.iter().copied().collect();
+    let tp = recovered.iter().filter(|i| truth_set.contains(i)).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / recovered.len() as f64;
+    let recall = tp / truth.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_selects_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 3.0, -0.2, 4.0];
+        let mut idx = top_k_indices(&v, 3);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn top_k_ties_are_deterministic() {
+        let v = vec![1.0, -1.0, 1.0];
+        assert_eq!(top_k_indices(&v, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn hard_threshold_zeroes_rest() {
+        let mut v = vec![0.1, -5.0, 3.0, -0.2, 4.0];
+        let keep = hard_threshold(&mut v, 2);
+        assert_eq!(keep, vec![1, 4]);
+        assert_eq!(v, vec![0.0, -5.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn hard_threshold_k_geq_len_is_identity() {
+        let mut v = vec![1.0, 2.0];
+        hard_threshold(&mut v, 5);
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn f1_perfect_and_disjoint() {
+        assert_eq!(support_f1(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(support_f1(&[4, 5], &[1, 2]), 0.0);
+        assert_eq!(support_f1(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // recovered {1,2}, truth {2,3}: tp=1, p=0.5, r=0.5 -> f1=0.5
+        assert!((support_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn support_of_tolerance() {
+        let v = vec![1e-9, 0.5, -1e-7, 2.0];
+        assert_eq!(support_of(&v, 1e-6), vec![1, 3]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Micro-benchmark kit (criterion is not available offline).
+//!
+//! Adaptive-iteration timing with warmup, median/mean/p10/p90 statistics,
+//! and a uniform one-line report format shared by `rust/benches/*` and the
+//! EXPERIMENTS.md perf tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill `target` wall time.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStats {
+    // Warmup + calibration: run until we have an estimate of per-call cost.
+    let mut per_call = {
+        let t0 = Instant::now();
+        f();
+        t0.elapsed().as_secs_f64().max(1e-9)
+    };
+    // a couple more warmup rounds for JIT-ish effects (page faults, caches)
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        per_call = 0.5 * per_call + 0.5 * t0.elapsed().as_secs_f64().max(1e-9);
+    }
+
+    let total = target.as_secs_f64();
+    let samples = 16usize;
+    let calls_per_sample = ((total / samples as f64) / per_call).ceil().max(1.0) as usize;
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..calls_per_sample {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() / calls_per_sample as f64 * 1e9);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: samples * calls_per_sample,
+        mean_ns: mean,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+    }
+}
+
+/// Time a single invocation (for expensive end-to-end runs).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut acc = 0u64;
+        let stats = bench("spin", Duration::from_millis(50), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p10_ns <= stats.median_ns);
+        assert!(stats.median_ns <= stats.p90_ns + 1.0);
+        assert!(stats.iters >= 16);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

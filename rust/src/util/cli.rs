@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `psfit <subcommand> [--flag] [--key value] ...`.  Unknown keys
+//! are errors so typos fail fast; every option can also be read with a
+//! default.  Used by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let mut subcommand = None;
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected `--option`, got `{arg}`"))?
+                .to_string();
+            // `--key=value` form
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Args {
+            subcommand,
+            opts,
+            flags,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn parse_env() -> anyhow::Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: `{raw}`")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    /// Error on any option the command never consumed (typo detection).
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("fig1 --nodes 4 --full --out results/x.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.get("nodes", 0usize).unwrap(), 4);
+        assert!(a.flag("full"));
+        assert_eq!(a.opt("out"), Some("results/x.csv"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("train --rho-c=2.5");
+        assert_eq!(a.get("rho-c", 0.0f64).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = args("train");
+        assert_eq!(a.get("iters", 100usize).unwrap(), 100);
+        assert!(a.require("data").is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = args("train --shift -3.5");
+        assert_eq!(a.get("shift", 0.0f64).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = args("train --typo 1");
+        let _ = a.get("iters", 1usize);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = args("train --iters abc");
+        let err = a.get("iters", 1usize).unwrap_err().to_string();
+        assert!(err.contains("iters"), "{err}");
+    }
+}

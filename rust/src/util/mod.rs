@@ -1,0 +1,29 @@
+//! Small self-contained substrates: PRNG, JSON, CLI parsing, bench/test kits.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (rand, serde,
+//! clap, criterion, proptest) are replaced by the minimal implementations in
+//! this module.  Each is tested in its own unit-test block and, for the
+//! property-testing kit, exercised heavily by `rust/tests/proptests.rs`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod testkit;
+
+/// Wall-clock stopwatch used by the metrics ledger and the bench kit.
+#[derive(Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}

@@ -1,0 +1,117 @@
+//! Property-testing kit (proptest is not available offline).
+//!
+//! `run_prop` drives a property over many seeded random cases; on failure it
+//! retries with progressively "smaller" size hints to report the smallest
+//! failing scale (a lightweight stand-in for shrinking), then panics with
+//! the seed so the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum size hint passed to the generator (e.g. vector length).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 128,
+            seed: 0x5EED,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` random cases.  `prop` returns
+/// `Err(msg)` to signal a failure.
+pub fn run_prop<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut root = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        // sizes sweep small -> large so early failures are small failures
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = root.next_u64();
+        let mut rng = Rng::seed_from(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // "shrink": retry smaller sizes with the same seed, report smallest
+            let mut smallest = (size, msg.clone());
+            for s in 1..size {
+                let mut rng = Rng::seed_from(case_seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    smallest = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {case_seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+pub fn assert_close_f32(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", PropConfig::default(), |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, PropConfig::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        run_prop("fails", PropConfig::default(), |rng, size| {
+            if size > 3 && rng.uniform() < 2.0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-9], 1e-6).is_ok());
+    }
+}

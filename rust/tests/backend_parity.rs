@@ -1,0 +1,208 @@
+//! Native ("CPU") vs XLA-artifact ("GPU") backend parity.
+//!
+//! Both backends implement the same math — the native `SolveMode::Cg`
+//! mirrors the artifact's fixed-iteration CG — so whole solves must agree
+//! to f32-accumulation tolerance.  This is the end-to-end proof that the
+//! three-layer stack (Pallas kernels -> JAX tile programs -> HLO artifacts
+//! -> PJRT execution) computes what the paper's algorithm specifies.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use psfit::config::{BackendKind, Config};
+use psfit::data::{SyntheticSpec, Task};
+use psfit::driver;
+use psfit::losses::LossKind;
+use psfit::sparsity::support_f1;
+
+fn artifacts_ready() -> bool {
+    let dir = driver::default_artifacts_dir();
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first ({})", dir.display());
+    }
+    ok
+}
+
+fn base_config(kappa: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.solver.kappa = kappa;
+    cfg.solver.max_iters = 60;
+    // 2 inner sweeps != the artifact's baked 3 -> the fused node_sweep
+    // path declines and the GRANULAR xla path is exercised; the fused
+    // path is covered by `xla_fused_path_matches_native` below.
+    cfg.solver.inner_iters = 2;
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.platform.devices_per_node = 2;
+    cfg
+}
+
+fn run_both(
+    spec: &SyntheticSpec,
+    mut cfg: Config,
+) -> (psfit::admm::SolveResult, psfit::admm::SolveResult) {
+    let ds = spec.generate();
+    cfg.platform.nodes = ds.nodes();
+    cfg.platform.backend = BackendKind::Native;
+    let native = driver::fit_with_options(&ds, &cfg, &Default::default(), false).unwrap();
+    cfg.platform.backend = BackendKind::Xla;
+    let xla = driver::fit_with_options(&ds, &cfg, &Default::default(), false).unwrap();
+    (native, xla)
+}
+
+#[test]
+fn squared_loss_trajectories_match() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(64, 120, 2);
+    spec.sparsity_level = 0.8;
+    let (native, xla) = run_both(&spec, base_config(13));
+
+    assert_eq!(native.iters, xla.iters, "iteration counts diverged");
+    // residual trajectories agree to f32 tolerance
+    for (a, b) in native.trace.records.iter().zip(&xla.trace.records) {
+        assert!(
+            (a.primal - b.primal).abs() < 1e-2 * (1.0 + a.primal),
+            "iter {}: primal {} vs {}",
+            a.iter,
+            a.primal,
+            b.primal
+        );
+        assert!(
+            (a.bilinear - b.bilinear).abs() < 1e-2 * (1.0 + a.bilinear),
+            "iter {}: bilinear {} vs {}",
+            a.iter,
+            a.bilinear,
+            b.bilinear
+        );
+    }
+    // consensus iterates agree
+    for (a, b) in native.z.iter().zip(&xla.z) {
+        assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+    }
+    // identical recovered supports
+    assert_eq!(native.support, xla.support);
+}
+
+#[test]
+fn logistic_loss_supports_match() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(48, 200, 2);
+    spec.task = Task::Binary;
+    spec.sparsity_level = 0.875;
+    let mut cfg = base_config(6);
+    cfg.loss = LossKind::Logistic;
+    cfg.solver.max_iters = 40;
+    let (native, xla) = run_both(&spec, cfg);
+    let f1 = support_f1(&native.support, &xla.support);
+    assert!(f1 > 0.95, "support agreement f1 = {f1}");
+}
+
+#[test]
+fn hinge_loss_supports_match() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(48, 200, 2);
+    spec.task = Task::Binary;
+    spec.sparsity_level = 0.875;
+    let mut cfg = base_config(6);
+    cfg.loss = LossKind::Hinge;
+    cfg.solver.max_iters = 40;
+    let (native, xla) = run_both(&spec, cfg);
+    let f1 = support_f1(&native.support, &xla.support);
+    assert!(f1 > 0.95, "support agreement f1 = {f1}");
+}
+
+#[test]
+fn xla_fused_path_matches_native() {
+    // inner_iters == manifest.inner_sweeps (3) and a single row tile ->
+    // the fused node_sweep artifact runs; it must match native exactly
+    // like the granular path does.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(64, 120, 2);
+    spec.sparsity_level = 0.8;
+    let mut cfg = base_config(13);
+    cfg.solver.inner_iters = 3;
+    let (native, xla) = run_both(&spec, cfg);
+    assert_eq!(native.iters, xla.iters);
+    for (a, b) in native.z.iter().zip(&xla.z) {
+        assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+    }
+    assert_eq!(native.support, xla.support);
+}
+
+#[test]
+fn xla_fused_and_granular_agree_with_each_other() {
+    // 6 sweeps: fused runs 2 node_sweep calls; granular is forced with a
+    // prime sweep count (5) on a second config — instead compare fused(6)
+    // against native(6) and granular xla via sweeps=5 against native(5).
+    // Direct fused-vs-granular at identical sweeps: use 3 (fused) vs a
+    // manifest-mismatched 4 (granular) on the SAME dataset and check both
+    // land on the same support.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(48, 100, 2);
+    spec.sparsity_level = 0.875;
+    let ds = spec.generate();
+    let mut cfg = base_config(6);
+    cfg.platform.nodes = 2;
+    cfg.platform.backend = BackendKind::Xla;
+    cfg.solver.inner_iters = 3; // fused
+    let fused = driver::fit_with_options(&ds, &cfg, &Default::default(), false).unwrap();
+    cfg.solver.inner_iters = 4; // granular (4 % 3 != 0)
+    let granular = driver::fit_with_options(&ds, &cfg, &Default::default(), false).unwrap();
+    assert_eq!(fused.support, granular.support);
+}
+
+#[test]
+fn xla_ledger_records_transfers() {
+    if !artifacts_ready() {
+        return;
+    }
+    let spec = SyntheticSpec::regression(32, 80, 2);
+    let mut cfg = base_config(6);
+    cfg.solver.max_iters = 5;
+    cfg.solver.tol_primal = 0.0; // force all 5 iterations
+    let ds = spec.generate();
+    cfg.platform.nodes = 2;
+    cfg.platform.backend = BackendKind::Xla;
+    let res = driver::fit_with_options(&ds, &cfg, &Default::default(), false).unwrap();
+    let l = &res.transfers;
+    assert!(l.h2d_bytes > 0, "no host->device transfers recorded");
+    assert!(l.d2h_bytes > 0, "no device->host transfers recorded");
+    assert!(l.copy_seconds > 0.0);
+    // network ledger too: 5 rounds * 2 nodes * dim * 8 bytes down
+    assert_eq!(l.net_down_bytes, 5 * 2 * 32 * 8);
+}
+
+#[test]
+fn multiclass_softmax_runs_on_both_backends() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(32, 240, 2);
+    spec.task = Task::Multiclass { k: 10 }; // matches artifact classes
+    spec.sparsity_level = 0.75;
+    let mut cfg = base_config(8 * 10);
+    cfg.loss = LossKind::Softmax;
+    cfg.classes = 10;
+    cfg.solver.max_iters = 25;
+    let (native, xla) = run_both(&spec, cfg);
+    // trajectories in the same ballpark (softmax Newton is iterative; exact
+    // equality is not expected, convergence behaviour is)
+    let a = native.trace.last().unwrap();
+    let b = xla.trace.last().unwrap();
+    assert!(
+        (a.primal - b.primal).abs() < 0.1 * (1.0 + a.primal.max(b.primal)),
+        "{} vs {}",
+        a.primal,
+        b.primal
+    );
+}

@@ -1,0 +1,135 @@
+//! Failure-injection tests: every misconfiguration must fail loudly with a
+//! actionable message, never silently compute garbage.
+
+use psfit::config::{BackendKind, Config};
+use psfit::data::{FeaturePlan, SyntheticSpec};
+use psfit::driver;
+use psfit::losses::LossKind;
+use psfit::runtime::Manifest;
+use psfit::util::cli::Args;
+use psfit::util::json::Json;
+
+#[test]
+fn invalid_solver_configs_are_rejected() {
+    let ds = SyntheticSpec::regression(10, 40, 2).generate();
+    for mutate in [
+        (|c: &mut Config| c.solver.rho_c = 0.0) as fn(&mut Config),
+        |c| c.solver.rho_b = -1.0,
+        |c| c.solver.gamma = 0.0,
+        |c| c.solver.kappa = 0,
+        |c| c.solver.max_iters = 0,
+        |c| c.solver.inner_iters = 0,
+    ] {
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 2;
+        mutate(&mut cfg);
+        assert!(
+            driver::fit(&ds, &cfg).is_err(),
+            "config mutation accepted: {cfg:?}"
+        );
+    }
+}
+
+#[test]
+fn xla_backend_without_artifacts_errors_with_hint() {
+    let ds = SyntheticSpec::regression(10, 40, 2).generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = 2;
+    cfg.platform.backend = BackendKind::Xla;
+    // point at an empty dir
+    let dir = std::env::temp_dir().join("psfit_no_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::env::set_var("PSFIT_ARTIFACTS", &dir);
+    let err = driver::fit(&ds, &cfg).unwrap_err().to_string();
+    std::env::remove_var("PSFIT_ARTIFACTS");
+    assert!(
+        err.contains("manifest") || err.contains("artifacts"),
+        "unhelpful error: {err}"
+    );
+}
+
+#[test]
+fn manifest_parse_failures_name_the_problem() {
+    // missing required key
+    let err = Manifest::parse(r#"{"tile_m": 128}"#).unwrap_err().to_string();
+    assert!(err.contains("block_n") || err.contains("missing"), "{err}");
+    // wrong dtype
+    let bad = r#"{
+      "fingerprint": "x", "tile_m": 8, "block_n": 8, "bm": 8,
+      "cg_iters": 1, "newton_iters": 1, "classes": 2,
+      "param_slots": {"size": 8},
+      "artifacts": {"a": {"file": "a.hlo.txt",
+        "inputs": [{"shape": [8], "dtype": "int32"}], "outputs": []}}
+    }"#;
+    let err = Manifest::parse(bad).unwrap_err().to_string();
+    assert!(err.contains("f32"), "{err}");
+}
+
+#[test]
+fn config_json_rejects_unknown_and_mistyped_keys() {
+    for bad in [
+        r#"{"solver": {"rho_zeta": 1.0}}"#,
+        r#"{"solver": {"kappa": "ten"}}"#,
+        r#"{"platform": {"backend": "cuda"}}"#,
+        r#"{"loss": "perceptron"}"#,
+        r#"{"unknown_section": {}}"#,
+    ] {
+        let v = Json::parse(bad).unwrap();
+        assert!(Config::from_json(&v).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_options_and_bad_values() {
+    let a = Args::parse_from(["train".to_string(), "--bogus".to_string(), "7".to_string()])
+        .unwrap();
+    let _ = a.get("n", 5usize);
+    assert!(a.reject_unknown().is_err());
+
+    let a = Args::parse_from(["train".to_string(), "--n".to_string(), "x7".to_string()]).unwrap();
+    assert!(a.get("n", 5usize).is_err());
+}
+
+#[test]
+fn feature_plan_always_respects_block_width_bound() {
+    // the plan must split into extra blocks rather than exceed block_n
+    for (n, blocks, bn) in [(100, 1, 10), (1001, 2, 512), (7, 3, 2)] {
+        let plan = FeaturePlan::new(n, blocks, bn);
+        assert!(plan.ranges.iter().all(|&(_, w)| w <= bn), "{n},{blocks},{bn}");
+        assert_eq!(plan.ranges.iter().map(|&(_, w)| w).sum::<usize>(), n);
+    }
+}
+
+#[test]
+fn softmax_classes_mismatch_is_caught_on_xla() {
+    // the softmax artifact is lowered for `classes = 10`; asking the xla
+    // backend to run k = 4 must fail at construction, not at solve time
+    let dir = driver::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let mut spec = SyntheticSpec::regression(16, 60, 2);
+    spec.task = psfit::data::Task::Multiclass { k: 4 };
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.platform.backend = BackendKind::Xla;
+    cfg.loss = LossKind::Softmax;
+    cfg.classes = 4;
+    cfg.solver.kappa = 8;
+    let err = driver::fit(&ds, &cfg).unwrap_err().to_string();
+    assert!(err.contains("classes") || err.contains("width"), "{err}");
+}
+
+#[test]
+fn dataset_spec_invariants_enforced() {
+    let mut spec = SyntheticSpec::regression(10, 40, 2);
+    spec.sparsity_level = 1.0; // kappa would be 0
+    assert_eq!(spec.kappa(), 1, "kappa must clamp to >= 1");
+    // nodes > samples is rejected
+    let bad = SyntheticSpec::regression(10, 1, 2);
+    let result = std::panic::catch_unwind(|| bad.generate());
+    assert!(result.is_err());
+}

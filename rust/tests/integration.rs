@@ -1,0 +1,194 @@
+//! Integration tests: whole-system behaviour on the native backend
+//! (fast; the XLA path is covered by tests/backend_parity.rs).
+
+use psfit::baselines::{best_subset_bnb, iht, lasso_path, BnbStatus};
+use psfit::config::Config;
+use psfit::data::{SyntheticSpec, Task};
+use psfit::driver;
+use psfit::losses::{make_loss, LossKind};
+use psfit::sparsity::support_f1;
+
+fn base(n: usize, m: usize, nodes: usize, sl: f64) -> (SyntheticSpec, Config) {
+    let mut spec = SyntheticSpec::regression(n, m, nodes);
+    spec.sparsity_level = sl;
+    spec.noise_std = 0.05;
+    let mut cfg = Config::default();
+    cfg.platform.nodes = nodes;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.solver.max_iters = 300;
+    (spec, cfg)
+}
+
+#[test]
+fn regression_recovers_support_across_node_counts() {
+    for nodes in [1, 2, 5] {
+        let (mut spec, cfg) = base(60, 600, nodes, 0.9);
+        spec.noise_std = 0.02;
+        let ds = spec.generate();
+        let res = driver::fit(&ds, &cfg).unwrap();
+        let f1 = support_f1(&res.support, &ds.support_true);
+        assert!(f1 > 0.85, "nodes={nodes}: f1={f1}");
+        assert_eq!(res.support.len(), spec.kappa());
+    }
+}
+
+#[test]
+fn logistic_and_hinge_converge_and_select_features() {
+    for loss in [LossKind::Logistic, LossKind::Hinge] {
+        let (mut spec, mut cfg) = base(48, 800, 2, 0.875);
+        spec.task = Task::Binary;
+        spec.noise_std = 0.1;
+        cfg.loss = loss;
+        cfg.solver.max_iters = 150;
+        let ds = spec.generate();
+        let res = driver::fit(&ds, &cfg).unwrap();
+        let f1 = support_f1(&res.support, &ds.support_true);
+        assert!(f1 > 0.6, "{loss:?}: f1={f1}");
+    }
+}
+
+#[test]
+fn softmax_multiclass_runs_native() {
+    let (mut spec, mut cfg) = base(32, 400, 2, 0.75);
+    spec.task = Task::Multiclass { k: 4 };
+    cfg.loss = LossKind::Softmax;
+    cfg.classes = 4;
+    cfg.solver.kappa = spec.kappa() * 4;
+    cfg.solver.max_iters = 60;
+    let ds = spec.generate();
+    let res = driver::fit(&ds, &cfg).unwrap();
+    let f1 = support_f1(&res.support, &ds.support_true);
+    assert!(f1 > 0.5, "f1={f1}");
+}
+
+#[test]
+fn more_nodes_same_data_same_answer() {
+    // consensus invariance: the distributed split must not change the
+    // recovered model (same total data, different shardings)
+    let (spec1, cfg1) = base(40, 480, 2, 0.9);
+    let ds1 = spec1.generate();
+    let res1 = driver::fit(&ds1, &cfg1).unwrap();
+
+    let (mut spec2, mut cfg2) = base(40, 480, 4, 0.9);
+    spec2.seed = spec1.seed; // same global generator stream
+    cfg2.platform.nodes = 4;
+    let ds2 = spec2.generate();
+    let res2 = driver::fit(&ds2, &cfg2).unwrap();
+
+    // shards differ (per-node normalization), but both must find the truth
+    let f1_1 = support_f1(&res1.support, &ds1.support_true);
+    let f1_2 = support_f1(&res2.support, &ds2.support_true);
+    assert!(f1_1 > 0.85 && f1_2 > 0.85, "{f1_1} vs {f1_2}");
+}
+
+#[test]
+fn rho_b_controls_bilinear_residual() {
+    // Figure 1's qualitative claim, as a test: larger rho_b drives the
+    // bilinear residual down faster, while primal/dual stay comparable.
+    let (spec, mut cfg) = base(60, 600, 4, 0.8);
+    let ds = spec.generate();
+    cfg.solver.max_iters = 30;
+    cfg.solver.tol_primal = 0.0; // fixed horizon
+
+    let mut finals = Vec::new();
+    for rho_b in [0.5, 4.0] {
+        cfg.solver.rho_b = rho_b;
+        cfg.solver.rho_c = 2.0 * rho_b;
+        cfg.solver.rho_l = cfg.solver.rho_c;
+        let res = driver::fit(&ds, &cfg).unwrap();
+        finals.push(res.trace.last().unwrap().bilinear);
+    }
+    assert!(
+        finals[1] < finals[0],
+        "bilinear residual should drop faster with larger rho_b: {finals:?}"
+    );
+}
+
+#[test]
+fn objective_beats_lasso_and_iht_matches_bnb_on_easy_problem() {
+    let (spec, mut cfg) = base(30, 400, 2, 0.9);
+    cfg.solver.polish = true;
+    let ds = spec.generate();
+    let kappa = spec.kappa();
+    let res = driver::fit(&ds, &cfg).unwrap();
+
+    let (a, b) = ds.stacked();
+    let loss = make_loss(LossKind::Squared, 1);
+    let obj_admm = psfit::admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &res.x);
+
+    // exact best subset
+    let bnb = best_subset_bnb(&a, &b, kappa, cfg.solver.gamma, 60.0);
+    assert_eq!(bnb.status, BnbStatus::Optimal);
+    // Bi-cADMM should land on (or extremely near) the exact optimum
+    assert!(
+        obj_admm <= bnb.objective * 1.02 + 1e-6,
+        "admm {obj_admm} vs exact {}",
+        bnb.objective
+    );
+
+    // lasso at the same support size has the l1 bias -> worse objective
+    let lasso = lasso_path(&a, &b, kappa, 40, 200);
+    let obj_lasso = psfit::admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &lasso.x);
+    assert!(
+        obj_admm <= obj_lasso + 1e-9,
+        "admm {obj_admm} vs lasso {obj_lasso}"
+    );
+
+    // IHT agrees on this easy instance
+    let ih = iht(&a, &b, kappa, cfg.solver.gamma, 3000, 1e-10);
+    assert_eq!(ih.support, bnb.support);
+}
+
+#[test]
+fn termination_respects_tolerances() {
+    let (spec, mut cfg) = base(40, 400, 2, 0.9);
+    let ds = spec.generate();
+    // loose tolerances stop much earlier than tight ones
+    cfg.solver.tol_primal = 1e-2;
+    cfg.solver.tol_dual = 1e-2;
+    cfg.solver.tol_bilinear = 1e-1;
+    let loose = driver::fit(&ds, &cfg).unwrap();
+    cfg.solver.tol_primal = 1e-5;
+    cfg.solver.tol_dual = 1e-5;
+    cfg.solver.tol_bilinear = 1e-5;
+    let tight = driver::fit(&ds, &cfg).unwrap();
+    assert!(loose.iters < tight.iters, "{} vs {}", loose.iters, tight.iters);
+    assert!(loose.converged);
+}
+
+#[test]
+fn trace_csv_is_well_formed() {
+    let (spec, mut cfg) = base(20, 200, 2, 0.9);
+    cfg.solver.max_iters = 10;
+    cfg.solver.tol_primal = 0.0;
+    let ds = spec.generate();
+    let res = driver::fit(&ds, &cfg).unwrap();
+    let csv = res.trace.to_csv();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines[0], "iter,primal,dual,bilinear,wall");
+    assert_eq!(lines.len(), 11); // header + 10 iterations
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), 5);
+    }
+}
+
+#[test]
+fn config_json_file_roundtrip_drives_solver() {
+    let dir = std::env::temp_dir().join("psfit_test_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    std::fs::write(
+        &path,
+        r#"{"solver": {"kappa": 4, "max_iters": 12, "tol_primal": 0.0}, "platform": {"nodes": 2}}"#,
+    )
+    .unwrap();
+    let cfg = Config::from_json_file(&path).unwrap();
+    assert_eq!(cfg.solver.kappa, 4);
+    let spec = SyntheticSpec::regression(20, 100, 2);
+    let ds = spec.generate();
+    let res = driver::fit(&ds, &cfg).unwrap();
+    assert_eq!(res.iters, 12);
+    assert_eq!(res.support.len(), 4);
+}

@@ -1,0 +1,390 @@
+//! Property-based tests of the coordinator invariants (psfit::util::testkit
+//! drives seeded random cases; proptest itself is unavailable offline).
+//!
+//! Properties cover: the sparsity geometry (projections, s-update), data
+//! partitioning (disjoint cover, scatter/gather, padding), the collectives
+//! (threaded == sequential, allreduce == sum), and solver state rules
+//! (dual updates, residual definitions, hard-threshold feasibility).
+
+use psfit::data::partition::{shard_sizes, FeaturePlan};
+use psfit::linalg::ops;
+use psfit::linalg::Matrix;
+use psfit::sparsity::{
+    self, hard_threshold, project_l1_ball, project_l1_epigraph, support_f1, top_k_indices,
+};
+use psfit::util::rng::Rng;
+use psfit::util::testkit::{assert_close, run_prop, PropConfig};
+
+fn randvec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+// ---------------------------------------------------------------- sparsity
+
+#[test]
+fn prop_l1_ball_projection_is_feasible_and_idempotent() {
+    run_prop("l1_ball", PropConfig::default(), |rng, size| {
+        let v = randvec(rng, size, 3.0);
+        let r = rng.uniform() * 4.0;
+        let w = project_l1_ball(&v, r);
+        let l1: f64 = w.iter().map(|x| x.abs()).sum();
+        if l1 > r + 1e-9 {
+            return Err(format!("infeasible: {l1} > {r}"));
+        }
+        let w2 = project_l1_ball(&w, r);
+        assert_close(&w, &w2, 1e-9)?;
+        // projection never flips signs
+        for (a, b) in v.iter().zip(&w) {
+            if a * b < 0.0 {
+                return Err("sign flip".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_l1_ball_projection_dominates_random_feasible_points() {
+    run_prop("l1_ball_optimal", PropConfig { cases: 64, ..Default::default() }, |rng, size| {
+        let v = randvec(rng, size, 2.0);
+        let r = rng.uniform() * 2.0 + 0.1;
+        let w = project_l1_ball(&v, r);
+        let d_star = ops::dist2(&v, &w);
+        for _ in 0..20 {
+            // random feasible candidate: scaled random point on the ball
+            let mut c = randvec(rng, size, 1.0);
+            let l1: f64 = c.iter().map(|x| x.abs()).sum();
+            if l1 > 0.0 {
+                let scale = rng.uniform() * r / l1;
+                for ci in c.iter_mut() {
+                    *ci *= scale;
+                }
+            }
+            if ops::dist2(&v, &c) < d_star - 1e-9 {
+                return Err("found closer feasible point".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_epigraph_projection_feasible_idempotent_dominant() {
+    run_prop("epigraph", PropConfig::default(), |rng, size| {
+        let v = randvec(rng, size, 2.0);
+        let s = rng.normal() * 2.0;
+        let (z, t) = project_l1_epigraph(&v, s);
+        let l1: f64 = z.iter().map(|x| x.abs()).sum();
+        if l1 > t + 1e-8 {
+            return Err(format!("infeasible: {l1} > {t}"));
+        }
+        let (z2, t2) = project_l1_epigraph(&z, t);
+        assert_close(&z, &z2, 1e-8)?;
+        if (t - t2).abs() > 1e-8 {
+            return Err("t not idempotent".into());
+        }
+        // distance-dominance against soft-threshold candidates
+        let d_star = ops::dist2(&v, &z) + (t - s) * (t - s);
+        for k in 0..10 {
+            let lam = k as f64 * 0.3;
+            let zc: Vec<f64> = v
+                .iter()
+                .map(|&x| x.signum() * (x.abs() - lam).max(0.0))
+                .collect();
+            let tc: f64 = zc.iter().map(|x| x.abs()).sum();
+            let d = ops::dist2(&v, &zc) + (tc - s) * (tc - s);
+            if d < d_star - 1e-8 {
+                return Err(format!("candidate beats projection: {d} < {d_star}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_s_update_is_feasible_and_exact_when_reachable() {
+    run_prop("s_update", PropConfig::default(), |rng, size| {
+        let z = randvec(rng, size, 2.0);
+        let kappa = 1 + rng.below(size);
+        let tau = rng.normal() * 3.0;
+        let s = sparsity::s_update(&z, tau, kappa);
+        let l1: f64 = s.iter().map(|x| x.abs()).sum();
+        let linf = s.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        if l1 > kappa as f64 + 1e-9 || linf > 1.0 + 1e-9 {
+            return Err(format!("infeasible: l1={l1}, linf={linf}"));
+        }
+        let mut idx = top_k_indices(&z, kappa);
+        idx.sort_unstable();
+        let mx: f64 = idx.iter().map(|&i| z[i].abs()).sum();
+        let zs = ops::dot(&z, &s);
+        if tau.abs() <= mx {
+            if (zs - tau).abs() > 1e-9 * (1.0 + tau.abs()) {
+                return Err(format!("not exact: z^T s = {zs} vs tau = {tau}"));
+            }
+        } else if (zs - tau.signum() * mx).abs() > 1e-9 * (1.0 + mx) {
+            return Err(format!("not saturated: {zs} vs {}", tau.signum() * mx));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hard_threshold_keeps_largest() {
+    run_prop("hard_threshold", PropConfig::default(), |rng, size| {
+        let v = randvec(rng, size, 1.0);
+        let k = rng.below(size + 1);
+        let mut w = v.clone();
+        let kept = hard_threshold(&mut w, k);
+        if kept.len() != k.min(size) {
+            return Err("wrong support size".into());
+        }
+        let min_kept = kept.iter().map(|&i| v[i].abs()).fold(f64::INFINITY, f64::min);
+        for i in 0..size {
+            if w[i] == 0.0 && v[i].abs() > min_kept + 1e-12 && !kept.contains(&i) {
+                return Err(format!("dropped larger element at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_support_f1_bounds_and_symmetry() {
+    run_prop("support_f1", PropConfig::default(), |rng, size| {
+        let a: Vec<usize> = (0..size).filter(|_| rng.uniform() < 0.4).collect();
+        let b: Vec<usize> = (0..size).filter(|_| rng.uniform() < 0.4).collect();
+        let f = support_f1(&a, &b);
+        if !(0.0..=1.0).contains(&f) {
+            return Err(format!("f1 out of range: {f}"));
+        }
+        if (support_f1(&b, &a) - f).abs() > 1e-12 {
+            return Err("not symmetric".into());
+        }
+        if support_f1(&a, &a) != 1.0 && !a.is_empty() {
+            return Err("self f1 != 1".into());
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- partitioning
+
+#[test]
+fn prop_shard_sizes_cover_and_balance() {
+    run_prop("shard_sizes", PropConfig::default(), |rng, size| {
+        let nodes = 1 + rng.below(8);
+        let m = size * 7 + rng.below(13);
+        let sizes = shard_sizes(m, nodes);
+        if sizes.iter().sum::<usize>() != m {
+            return Err("does not cover".into());
+        }
+        let (mx, mn) = (
+            *sizes.iter().max().unwrap(),
+            *sizes.iter().min().unwrap(),
+        );
+        if mx - mn > 1 {
+            return Err("unbalanced".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feature_plan_disjoint_cover_and_roundtrip() {
+    run_prop("feature_plan", PropConfig::default(), |rng, size| {
+        let n = size + 1;
+        let blocks = 1 + rng.below(6);
+        let block_n = 1 + rng.below(2 * n);
+        let plan = FeaturePlan::new(n, blocks, block_n.max(n.div_ceil(64)));
+        let mut covered = vec![false; n];
+        for &(s, w) in &plan.ranges {
+            for i in s..s + w {
+                if covered[i] {
+                    return Err(format!("overlap at {i}"));
+                }
+                covered[i] = true;
+            }
+        }
+        if !covered.iter().all(|&c| c) {
+            return Err("not covering".into());
+        }
+        // scatter/gather round-trip
+        let global = randvec(rng, n, 1.0);
+        let mut rebuilt = vec![0.0; n];
+        let mut buf = Vec::new();
+        for b in 0..plan.blocks {
+            plan.gather(b, &global, plan.padded_width.min(1 << 20), &mut buf);
+            plan.scatter(b, &buf, &mut rebuilt);
+        }
+        assert_close(&global, &rebuilt, 0.0)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_tile_padding_preserves_products() {
+    run_prop("tile_padding", PropConfig { cases: 48, ..Default::default() }, |rng, size| {
+        let m = size + 2;
+        let n = 1 + rng.below(16);
+        let mut a = Matrix::zeros(m, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal_f32();
+        }
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        // padded tile
+        let tile_rows = m + rng.below(8) + 1;
+        let mut buf = vec![f32::NAN; tile_rows * n];
+        a.pack_row_tile(0, m, &mut buf);
+        let padded = Matrix {
+            rows: tile_rows,
+            cols: n,
+            data: buf,
+        };
+        let mut y_pad = vec![0.0f32; tile_rows];
+        padded.matvec(&x, &mut y_pad);
+        let mut y = vec![0.0f32; m];
+        a.matvec(&x, &mut y);
+        for i in 0..m {
+            if (y[i] - y_pad[i]).abs() > 1e-5 {
+                return Err(format!("row {i}: {} vs {}", y[i], y_pad[i]));
+            }
+        }
+        if y_pad[m..].iter().any(|&v| v != 0.0) {
+            return Err("padding rows produced nonzero output".into());
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- collectives
+
+#[test]
+fn prop_threaded_cluster_equals_sequential() {
+    use psfit::backend::native::{NativeBackend, SolveMode};
+    use psfit::backend::BlockParams;
+    use psfit::losses::Squared;
+    use psfit::network::{Cluster, NodeWorker, SequentialCluster, ThreadedCluster};
+
+    run_prop(
+        "threaded_eq_sequential",
+        PropConfig {
+            cases: 12,
+            max_size: 24,
+            ..Default::default()
+        },
+        |rng, size| {
+            let n = 4 + size;
+            let nodes = 1 + rng.below(4);
+            let mut spec = psfit::data::SyntheticSpec::regression(n, (8 + size) * nodes, nodes);
+            spec.seed = rng.next_u64();
+            let ds = spec.generate();
+            let params = BlockParams {
+                rho_l: 2.0,
+                rho_c: 1.0,
+                reg: 1.1,
+            };
+            let build = || -> Vec<NodeWorker> {
+                ds.shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, shard)| {
+                        let plan = FeaturePlan::new(n, 2, 1 << 20);
+                        let be =
+                            NativeBackend::new(shard, &plan, Box::new(Squared), SolveMode::Direct);
+                        NodeWorker::new(
+                            i,
+                            psfit::admm::LocalProx::new(Box::new(be), plan, 1),
+                            params,
+                            2,
+                        )
+                    })
+                    .collect()
+            };
+            let mut seq = SequentialCluster::new(build(), n);
+            let mut thr = ThreadedCluster::new(build(), n);
+            let z = randvec(rng, n, 0.5);
+            for _ in 0..2 {
+                let a = seq.round(&z);
+                let b = thr.round(&z);
+                for (ra, rb) in a.iter().zip(&b) {
+                    if ra.node != rb.node {
+                        return Err("reply order".into());
+                    }
+                    assert_close(&ra.x, &rb.x, 1e-12)?;
+                    assert_close(&ra.u, &rb.u, 1e-12)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ solver rules
+
+#[test]
+fn prop_worker_dual_update_matches_consensus_rule() {
+    use psfit::backend::native::{NativeBackend, SolveMode};
+    use psfit::backend::BlockParams;
+    use psfit::losses::Squared;
+    use psfit::network::NodeWorker;
+
+    run_prop(
+        "dual_update",
+        PropConfig {
+            cases: 16,
+            max_size: 16,
+            ..Default::default()
+        },
+        |rng, size| {
+            let n = 4 + size;
+            let mut spec = psfit::data::SyntheticSpec::regression(n, 30 + size, 1);
+            spec.seed = rng.next_u64();
+            let ds = spec.generate();
+            let plan = FeaturePlan::new(n, 1, 1 << 20);
+            let be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), SolveMode::Direct);
+            let params = BlockParams {
+                rho_l: 2.0,
+                rho_c: 1.0,
+                reg: 1.1,
+            };
+            let mut w = NodeWorker::new(0, psfit::admm::LocalProx::new(Box::new(be), plan, 1), params, 2);
+            let z0 = randvec(rng, n, 0.3);
+            let (x1, u0) = w.round(&z0);
+            if u0.iter().any(|&v| v != 0.0) {
+                return Err("first-round dual nonzero".into());
+            }
+            let z1 = randvec(rng, n, 0.3);
+            let (_x2, u1) = w.round(&z1);
+            // u1 = u0 + x1 - z1
+            let want: Vec<f64> = x1.iter().zip(&z1).map(|(x, z)| x - z).collect();
+            assert_close(&u1, &want, 1e-12)?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_residual_definitions_match_paper() {
+    use psfit::admm::GlobalState;
+
+    run_prop("residuals", PropConfig::default(), |rng, size| {
+        let n = 2 + size;
+        let nodes = 1 + rng.below(5);
+        let mut g = GlobalState::new(n);
+        g.z = randvec(rng, n, 1.0);
+        let xs: Vec<Vec<f64>> = (0..nodes).map(|_| randvec(rng, n, 1.0)).collect();
+        let rho_c = 0.5 + rng.uniform() * 3.0;
+        let rec = g.residuals(&xs, rho_c, 3, 0.0);
+        // p_r = sum_i ||x_i - z||
+        let want_p: f64 = xs.iter().map(|x| ops::dist2(x, &g.z).sqrt()).sum();
+        if (rec.primal - want_p).abs() > 1e-12 * (1.0 + want_p) {
+            return Err("primal residual mismatch".into());
+        }
+        // d_r with z_prev = 0: sqrt(N) rho_c ||z||
+        let want_d = (nodes as f64).sqrt() * rho_c * ops::norm2(&g.z);
+        if (rec.dual - want_d).abs() > 1e-12 * (1.0 + want_d) {
+            return Err("dual residual mismatch".into());
+        }
+        Ok(())
+    });
+}
