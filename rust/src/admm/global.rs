@@ -114,6 +114,8 @@ impl GlobalState {
             dual,
             bilinear: self.bilinear_residual_signed().abs(),
             wall,
+            participants: xs.len(),
+            max_lag: 0,
         }
     }
 }

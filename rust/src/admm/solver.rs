@@ -38,6 +38,8 @@ impl Default for SolveOptions {
 pub struct SolveResult {
     /// Dense consensus iterate at termination.
     pub z: Vec<f64>,
+    /// Async coordination accounting (None for synchronous clusters).
+    pub coordination: Option<crate::metrics::CoordinationStats>,
     /// kappa-sparse solution (hard-thresholded z, optionally polished).
     pub x: Vec<f64>,
     /// Support of `x` (sorted indices into the flattened coefficients).
@@ -64,7 +66,6 @@ pub fn solve(
 ) -> anyhow::Result<SolveResult> {
     cfg.solver.validate()?;
     let sc = &cfg.solver;
-    let n_nodes = cluster.nodes();
     let watch = Stopwatch::start();
 
     let mut global = GlobalState::new(dim);
@@ -74,35 +75,46 @@ pub fn solve(
     let mut iters = 0;
 
     // scaled termination thresholds (absolute tolerances scaled by the
-    // problem dimension, Boyd §3.3 style)
-    let p_thresh = sc.tol_primal * ((n_nodes * dim) as f64).sqrt().max(1.0);
+    // problem dimension, Boyd §3.3 style); the primal threshold scales
+    // with the nodes that actually contributed residual terms this round,
+    // so a degraded async cluster is held to the same per-node accuracy
     let d_thresh = sc.tol_dual * (dim as f64).sqrt().max(1.0);
     let b_thresh = sc.tol_bilinear;
 
     for k in 0..sc.max_iters {
         iters = k + 1;
         // ---- Bcast z^k / Collect x_i^{k+1}, u_i^k -----------------------
-        let replies = cluster.round(&global.z);
+        let replies = cluster.round(&global.z)?;
+        anyhow::ensure!(
+            !replies.is_empty(),
+            "round {k}: no node replies (cluster lost its quorum)"
+        );
 
         // ---- global updates (7b), (12), (13) ----------------------------
+        // Averages are weighted by the nodes that actually participated
+        // (Zhu-style partial barrier): under synchronous coordination every
+        // node replies and this reduces exactly to the 1/N mean.
+        let participants = replies.len();
+        let max_lag = replies.iter().map(|r| r.lag).max().unwrap_or(0);
         c.fill(0.0);
         for r in &replies {
             for i in 0..dim {
                 c[i] += r.x[i] + r.u[i];
             }
         }
-        let inv = 1.0 / n_nodes as f64;
+        let inv = 1.0 / participants as f64;
         for ci in c.iter_mut() {
             *ci *= inv;
         }
-        global.zt_update(&c, n_nodes, sc.rho_c, sc.rho_b, sc.zt_iters);
+        global.zt_update(&c, participants, sc.rho_c, sc.rho_b, sc.zt_iters);
 
         // ---- residuals (14): bilinear measured against the PREVIOUS s ---
         // (g(z^{k+1}, s^k, t^{k+1}) — the quantity the rho_b penalty acts
         // on; the closed-form s-update that follows zeroes g whenever the
         // target is reachable, so measuring after it would be trivially 0)
         let xs: Vec<Vec<f64>> = replies.into_iter().map(|r| r.x).collect();
-        let rec = global.residuals(&xs, sc.rho_c, k, watch.elapsed_secs());
+        let mut rec = global.residuals(&xs, sc.rho_c, k, watch.elapsed_secs());
+        rec.max_lag = max_lag;
 
         global.s_update(sc.kappa);
         global.v_update();
@@ -113,6 +125,7 @@ pub fn solve(
                 k, rec.primal, rec.dual, rec.bilinear
             );
         }
+        let p_thresh = sc.tol_primal * ((participants * dim) as f64).sqrt().max(1.0);
         let done = k > 0
             && rec.primal <= p_thresh
             && rec.dual <= d_thresh
@@ -135,17 +148,21 @@ pub fn solve(
     }
 
     let final_loss = if opts.track_loss {
-        Some(cluster.loss_value())
+        Some(cluster.loss_value()?)
     } else {
         None
     };
 
+    // ledger first: collecting it can surface deaths that the
+    // coordination snapshot should include
+    let transfers = cluster.ledger();
     Ok(SolveResult {
         z: global.z,
+        coordination: cluster.coordination(),
         x,
         support,
         trace,
-        transfers: cluster.ledger(),
+        transfers,
         iters,
         converged,
         wall_seconds: watch.elapsed_secs(),

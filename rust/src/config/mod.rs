@@ -1,6 +1,7 @@
 //! Configuration system: solver, problem, and platform settings with
 //! validated builders and JSON file loading (`psfit train --config x.json`).
 
+use crate::coordinator::fault::FaultSpec;
 use crate::losses::LossKind;
 use crate::util::json::Json;
 
@@ -118,6 +119,76 @@ impl SolverConfig {
     }
 }
 
+/// Which coordination protocol drives the outer consensus rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoordinationKind {
+    /// Full barrier: every round waits for every node (the paper's MPI
+    /// loop; `SequentialCluster` / `ThreadedCluster`).
+    Sync,
+    /// Partial barrier with bounded staleness (`coordinator::AsyncCluster`).
+    Async,
+}
+
+impl CoordinationKind {
+    pub fn parse(s: &str) -> anyhow::Result<CoordinationKind> {
+        match s {
+            "sync" => Ok(CoordinationKind::Sync),
+            "async" => Ok(CoordinationKind::Async),
+            other => anyhow::bail!("unknown coordination `{other}` (sync|async)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoordinationKind::Sync => "sync",
+            CoordinationKind::Async => "async",
+        }
+    }
+}
+
+/// Settings for the coordination layer (see `coordinator/`).
+///
+/// With the defaults (`quorum = 1.0`, `max_staleness = 0`) the async
+/// scheduler degenerates to a full barrier and reproduces the synchronous
+/// clusters bit-for-bit — the convergence guardrail the parity tests pin.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub coordination: CoordinationKind,
+    /// Fraction of active nodes whose replies commit a round, in (0, 1].
+    pub quorum: f64,
+    /// Replies older than this many rounds are dropped and the node is
+    /// resynced with the current z.
+    pub max_staleness: usize,
+    /// Liveness-probe interval while waiting on a quorum.
+    pub heartbeat_ms: u64,
+    /// Deterministic straggler/crash model (empty = healthy cluster).
+    pub faults: FaultSpec,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            coordination: CoordinationKind::Sync,
+            quorum: 1.0,
+            max_staleness: 0,
+            heartbeat_ms: 50,
+            faults: FaultSpec::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.quorum.is_nan() || self.quorum <= 0.0 || self.quorum > 1.0 {
+            anyhow::bail!("coordinator.quorum must be in (0, 1], got {}", self.quorum);
+        }
+        if self.heartbeat_ms == 0 {
+            anyhow::bail!("coordinator.heartbeat_ms must be >= 1");
+        }
+        self.faults.validate()
+    }
+}
+
 /// Platform topology: node count, devices per node, transfer cost model.
 #[derive(Clone, Debug)]
 pub struct PlatformConfig {
@@ -156,6 +227,7 @@ impl Default for PlatformConfig {
 pub struct Config {
     pub solver: SolverConfig,
     pub platform: PlatformConfig,
+    pub coordinator: CoordinatorConfig,
     pub loss: LossKind,
     pub classes: usize,
 }
@@ -165,6 +237,7 @@ impl Default for Config {
         Config {
             solver: SolverConfig::default(),
             platform: PlatformConfig::default(),
+            coordinator: CoordinatorConfig::default(),
             loss: LossKind::Squared,
             classes: 2,
         }
@@ -258,6 +331,86 @@ impl Config {
                         }
                     }
                 }
+                "coordinator" => {
+                    let c = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("coordinator must be an object"))?;
+                    for (k, v) in c {
+                        match k.as_str() {
+                            "coordination" => {
+                                cfg.coordinator.coordination = CoordinationKind::parse(
+                                    v.as_str().ok_or_else(|| {
+                                        anyhow::anyhow!("coordinator.coordination: str")
+                                    })?,
+                                )?
+                            }
+                            "quorum" => {
+                                cfg.coordinator.quorum = v
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow::anyhow!("coordinator.quorum: num"))?
+                            }
+                            "max_staleness" => {
+                                cfg.coordinator.max_staleness = v.as_usize().ok_or_else(|| {
+                                    anyhow::anyhow!("coordinator.max_staleness: int")
+                                })?
+                            }
+                            "heartbeat_ms" => {
+                                cfg.coordinator.heartbeat_ms =
+                                    v.as_usize().ok_or_else(|| {
+                                        anyhow::anyhow!("coordinator.heartbeat_ms: int")
+                                    })? as u64
+                            }
+                            "seed" => {
+                                cfg.coordinator.faults.seed = v
+                                    .as_usize()
+                                    .ok_or_else(|| anyhow::anyhow!("coordinator.seed: int"))?
+                                    as u64
+                            }
+                            "jitter_ms" => {
+                                cfg.coordinator.faults.jitter_ms = v
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow::anyhow!("coordinator.jitter_ms: num"))?
+                            }
+                            "stragglers" => {
+                                let arr = v.as_arr().ok_or_else(|| {
+                                    anyhow::anyhow!("coordinator.stragglers: array")
+                                })?;
+                                for entry in arr {
+                                    let node = entry
+                                        .req("node")?
+                                        .as_usize()
+                                        .ok_or_else(|| anyhow::anyhow!("straggler.node: int"))?;
+                                    let delay_ms =
+                                        entry.req("delay_ms")?.as_f64().ok_or_else(|| {
+                                            anyhow::anyhow!("straggler.delay_ms: num")
+                                        })?;
+                                    cfg.coordinator.faults =
+                                        std::mem::take(&mut cfg.coordinator.faults)
+                                            .straggler(node, delay_ms);
+                                }
+                            }
+                            "crashes" => {
+                                let arr = v
+                                    .as_arr()
+                                    .ok_or_else(|| anyhow::anyhow!("coordinator.crashes: array"))?;
+                                for entry in arr {
+                                    let node = entry
+                                        .req("node")?
+                                        .as_usize()
+                                        .ok_or_else(|| anyhow::anyhow!("crash.node: int"))?;
+                                    let round = entry
+                                        .req("round")?
+                                        .as_usize()
+                                        .ok_or_else(|| anyhow::anyhow!("crash.round: int"))?;
+                                    cfg.coordinator.faults =
+                                        std::mem::take(&mut cfg.coordinator.faults)
+                                            .crash(node, round);
+                                }
+                            }
+                            other => anyhow::bail!("unknown coordinator key `{other}`"),
+                        }
+                    }
+                }
                 "loss" => {
                     cfg.loss = LossKind::parse(
                         val.as_str()
@@ -273,6 +426,7 @@ impl Config {
             }
         }
         cfg.solver.validate()?;
+        cfg.coordinator.validate()?;
         Ok(cfg)
     }
 }
@@ -334,5 +488,53 @@ mod tests {
     fn invalid_values_rejected() {
         let src = r#"{"solver": {"rho_c": -1.0}}"#;
         assert!(Config::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn coordinator_section_roundtrip() {
+        let src = r#"{
+            "coordinator": {
+                "coordination": "async",
+                "quorum": 0.75,
+                "max_staleness": 2,
+                "heartbeat_ms": 25,
+                "seed": 9,
+                "jitter_ms": 1.5,
+                "stragglers": [{"node": 0, "delay_ms": 20.0}],
+                "crashes": [{"node": 2, "round": 5}]
+            }
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.coordinator.coordination, CoordinationKind::Async);
+        assert_eq!(cfg.coordinator.quorum, 0.75);
+        assert_eq!(cfg.coordinator.max_staleness, 2);
+        assert_eq!(cfg.coordinator.heartbeat_ms, 25);
+        assert_eq!(cfg.coordinator.faults.seed, 9);
+        assert_eq!(cfg.coordinator.faults.jitter_ms, 1.5);
+        assert_eq!(cfg.coordinator.faults.stragglers.len(), 1);
+        assert_eq!(cfg.coordinator.faults.stragglers[0].node, 0);
+        assert_eq!(cfg.coordinator.faults.crashes[0].round, 5);
+    }
+
+    #[test]
+    fn coordinator_validation_rejects_bad_values() {
+        for bad in [
+            r#"{"coordinator": {"quorum": 0.0}}"#,
+            r#"{"coordinator": {"quorum": 1.5}}"#,
+            r#"{"coordinator": {"heartbeat_ms": 0}}"#,
+            r#"{"coordinator": {"coordination": "gossip"}}"#,
+            r#"{"coordinator": {"typo_key": 1}}"#,
+            r#"{"coordinator": {"stragglers": [{"node": 0, "delay_ms": -2.0}]}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        let mut c = CoordinatorConfig::default();
+        c.validate().unwrap();
+        c.quorum = 0.5;
+        c.max_staleness = 3;
+        c.validate().unwrap();
     }
 }

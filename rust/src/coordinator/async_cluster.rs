@@ -1,0 +1,500 @@
+//! Event-driven async cluster: threads + channels around the scheduler.
+//!
+//! One OS thread per node (like `network::ThreadedCluster`) but the
+//! barrier is partial: `round` commits as soon as the scheduler's quorum
+//! of replies has landed, folds bounded-stale replies from stragglers,
+//! resyncs nodes that fall too far behind, and degrades the shard of any
+//! node whose channel is gone (crash).  The [`super::fault::FaultInjector`]
+//! runs *inside* the worker threads, so seeded straggler/crash scenarios
+//! exercise the real wire protocol.
+//!
+//! Liveness: a node's death is detected either eagerly (a broadcast to it
+//! fails) or lazily (the collect loop times out on `heartbeat` and probes
+//! every busy node with a ping — a failed ping send means the worker's
+//! receiver is gone).  Because each node has at most one outstanding
+//! broadcast, a live-but-slow node can always be told apart from a dead
+//! one without wall-clock guesswork.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::fault::FaultInjector;
+use super::scheduler::{ReplyAction, RoundScheduler};
+use crate::config::CoordinatorConfig;
+use crate::metrics::{CoordinationStats, TransferLedger};
+use crate::network::{Cluster, NodeReply, NodeWorker};
+
+enum Command {
+    Round { round: usize, z: Arc<Vec<f64>> },
+    Ping,
+    Loss,
+    Ledger,
+    Stop,
+}
+
+enum Reply {
+    Round {
+        node: usize,
+        round: usize,
+        x: Vec<f64>,
+        u: Vec<f64>,
+    },
+    Loss {
+        node: usize,
+        value: f64,
+    },
+    Ledger {
+        node: usize,
+        ledger: TransferLedger,
+    },
+}
+
+struct NodeLink {
+    sender: Option<mpsc::Sender<Command>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_worker(
+    mut w: NodeWorker,
+    rx: mpsc::Receiver<Command>,
+    out: mpsc::Sender<Reply>,
+    fault: FaultInjector,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let node = w.id;
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Command::Round { round, z } => {
+                    if fault.crashes_at(node, round) {
+                        // simulated crash: drop the receiver and vanish
+                        return;
+                    }
+                    let (x, u) = w.round(&z);
+                    let delay = fault.delay(node, round);
+                    if delay > Duration::ZERO {
+                        std::thread::sleep(delay);
+                    }
+                    if out.send(Reply::Round { node, round, x, u }).is_err() {
+                        return;
+                    }
+                }
+                Command::Ping => {} // liveness probe: receipt is the answer
+                Command::Loss => {
+                    let value = w.loss_value();
+                    if out.send(Reply::Loss { node, value }).is_err() {
+                        return;
+                    }
+                }
+                Command::Ledger => {
+                    let ledger = w.ledger();
+                    if out.send(Reply::Ledger { node, ledger }).is_err() {
+                        return;
+                    }
+                }
+                Command::Stop => return,
+            }
+        }
+    })
+}
+
+pub struct AsyncCluster {
+    links: Vec<NodeLink>,
+    reply_tx: mpsc::Sender<Reply>,
+    replies: mpsc::Receiver<Reply>,
+    scheduler: RoundScheduler,
+    injector: FaultInjector,
+    heartbeat: Duration,
+    current_z: Option<Arc<Vec<f64>>>,
+}
+
+impl AsyncCluster {
+    pub fn new(workers: Vec<NodeWorker>, dim: usize, cfg: &CoordinatorConfig) -> AsyncCluster {
+        let n = workers.len();
+        let injector = FaultInjector::new(cfg.faults.clone());
+        let (reply_tx, replies) = mpsc::channel::<Reply>();
+        let mut links = Vec::with_capacity(n);
+        for w in workers {
+            let (tx, rx) = mpsc::channel::<Command>();
+            let handle = spawn_worker(w, rx, reply_tx.clone(), injector.clone());
+            links.push(NodeLink {
+                sender: Some(tx),
+                handle: Some(handle),
+            });
+        }
+        AsyncCluster {
+            links,
+            reply_tx,
+            replies,
+            scheduler: RoundScheduler::new(n, dim, cfg.quorum, cfg.max_staleness),
+            injector,
+            heartbeat: Duration::from_millis(cfg.heartbeat_ms.max(1)),
+            current_z: None,
+        }
+    }
+
+    /// Protocol accounting so far.
+    pub fn stats(&self) -> &CoordinationStats {
+        &self.scheduler.stats
+    }
+
+    /// Node ids whose shards are degraded (dead members).
+    pub fn degraded(&self) -> Vec<usize> {
+        self.scheduler.membership.degraded()
+    }
+
+    /// Elastically add a node mid-solve.  The worker's id is rewritten to
+    /// the next roster slot; it is primed with the current z (resync
+    /// traffic) and becomes a full quorum member on its first reply.
+    pub fn join(&mut self, mut worker: NodeWorker) -> usize {
+        let id = self.scheduler.register_join();
+        worker.id = id;
+        let (tx, rx) = mpsc::channel::<Command>();
+        let handle = spawn_worker(worker, rx, self.reply_tx.clone(), self.injector.clone());
+        self.links.push(NodeLink {
+            sender: Some(tx),
+            handle: Some(handle),
+        });
+        if let Some(z) = self.current_z.clone() {
+            let round = self.scheduler.current_round();
+            self.push_z(id, round, z, true);
+        }
+        id
+    }
+
+    /// Gracefully remove a node (its shard leaves the consensus).
+    pub fn leave(&mut self, node: usize) {
+        if let Some(tx) = &self.links[node].sender {
+            let _ = tx.send(Command::Stop);
+        }
+        self.scheduler.remove(node);
+        self.links[node].sender = None;
+        if let Some(h) = self.links[node].handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Send z to one node; on a dead channel, degrade the node instead.
+    fn push_z(&mut self, node: usize, round: usize, z: Arc<Vec<f64>>, resync: bool) {
+        let ok = match &self.links[node].sender {
+            Some(tx) => tx.send(Command::Round { round, z }).is_ok(),
+            None => false,
+        };
+        if ok {
+            if resync {
+                self.scheduler.on_resync_sent(node);
+            } else {
+                self.scheduler.on_sent(node);
+            }
+        } else {
+            self.reap(node);
+        }
+    }
+
+    /// Degrade a node whose channel is gone and reclaim its thread.
+    fn reap(&mut self, node: usize) {
+        self.scheduler.on_send_failed(node);
+        self.links[node].sender = None;
+        if let Some(h) = self.links[node].handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Ping `node`: a failed send means the worker's receiver is gone, so
+    /// reap it.  Returns whether the node is still alive.  The single
+    /// liveness primitive — round laggard checks, collect-loop probes,
+    /// and query pruning all go through here.
+    fn ping_or_reap(&mut self, node: usize) -> bool {
+        let alive = match &self.links[node].sender {
+            Some(tx) => tx.send(Command::Ping).is_ok(),
+            None => false,
+        };
+        if !alive {
+            self.reap(node);
+        }
+        alive
+    }
+
+    /// Ping every busy node; a failed send unmasks a silent crash.
+    fn probe(&mut self) {
+        for node in 0..self.links.len() {
+            if self.scheduler.is_busy(node) && self.scheduler.membership.is_reachable(node) {
+                self.ping_or_reap(node);
+            }
+        }
+    }
+
+    /// Drop any pending-query nodes whose channels turn out to be dead.
+    fn prune_dead(&mut self, pending: &mut Vec<usize>) {
+        for node in pending.clone() {
+            if !self.ping_or_reap(node) {
+                pending.retain(|&n| n != node);
+            }
+        }
+    }
+}
+
+impl Cluster for AsyncCluster {
+    fn nodes(&self) -> usize {
+        self.scheduler.membership.len()
+    }
+
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+        let payload = Arc::new(z.to_vec());
+        self.current_z = Some(payload.clone());
+        let (k, targets) = self.scheduler.begin_round();
+        for node in targets {
+            self.push_z(node, k, payload.clone(), false);
+        }
+        // a node still owing an older round's reply is either slow or
+        // silently dead — a ping on its channel tells the two apart
+        for node in self.scheduler.laggards() {
+            self.ping_or_reap(node);
+        }
+        let mut collected = 0usize;
+        while collected < self.scheduler.quorum_needed() {
+            anyhow::ensure!(
+                !self.scheduler.membership.reachable_nodes().is_empty(),
+                "round {k}: every node is dead or departed"
+            );
+            match self.replies.recv_timeout(self.heartbeat) {
+                Ok(Reply::Round { node, round, x, u }) => {
+                    match self.scheduler.on_reply(node, round, x, u) {
+                        ReplyAction::Fresh | ReplyAction::Folded { .. } => collected += 1,
+                        ReplyAction::Dropped { .. } => {
+                            // beyond the staleness bound: resync with the
+                            // freshest z so the straggler does useful work
+                            self.push_z(node, k, payload.clone(), true);
+                        }
+                        ReplyAction::Ignored => {}
+                    }
+                }
+                Ok(_) => {} // stale loss/ledger responses: not part of a round
+                Err(mpsc::RecvTimeoutError::Timeout) => self.probe(),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("round {k}: all node workers disconnected");
+                }
+            }
+        }
+        let replies = self.scheduler.collect();
+        anyhow::ensure!(
+            !replies.is_empty(),
+            "round {k}: no replies within the staleness bound"
+        );
+        Ok(replies)
+    }
+
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        let mut pending = Vec::new();
+        for node in self.scheduler.membership.reachable_nodes() {
+            let ok = match &self.links[node].sender {
+                Some(tx) => tx.send(Command::Loss).is_ok(),
+                None => false,
+            };
+            if ok {
+                pending.push(node);
+            } else {
+                self.reap(node);
+            }
+        }
+        let mut total = 0.0;
+        while !pending.is_empty() {
+            match self.replies.recv_timeout(self.heartbeat) {
+                Ok(Reply::Loss { node, value }) => {
+                    if pending.contains(&node) {
+                        pending.retain(|&n| n != node);
+                        total += value;
+                    }
+                }
+                Ok(Reply::Round { node, .. }) => {
+                    // a straggler's reply surfacing after the last round:
+                    // free its slot, but no global update will consume it
+                    self.scheduler.on_stray_reply(node);
+                }
+                Ok(Reply::Ledger { .. }) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => self.prune_dead(&mut pending),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all node workers disconnected during the loss query");
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    fn ledger(&mut self) -> TransferLedger {
+        let mut total = self.scheduler.net.clone();
+        let mut pending = Vec::new();
+        for node in self.scheduler.membership.reachable_nodes() {
+            let ok = match &self.links[node].sender {
+                Some(tx) => tx.send(Command::Ledger).is_ok(),
+                None => false,
+            };
+            if ok {
+                pending.push(node);
+            } else {
+                self.reap(node);
+            }
+        }
+        while !pending.is_empty() {
+            match self.replies.recv_timeout(self.heartbeat) {
+                Ok(Reply::Ledger { node, ledger }) => {
+                    if pending.contains(&node) {
+                        pending.retain(|&n| n != node);
+                        total.merge(&ledger);
+                    }
+                }
+                Ok(Reply::Round { node, .. }) => {
+                    self.scheduler.on_stray_reply(node);
+                }
+                Ok(Reply::Loss { .. }) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => self.prune_dead(&mut pending),
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        total
+    }
+
+    fn coordination(&self) -> Option<CoordinationStats> {
+        Some(self.scheduler.stats.clone())
+    }
+}
+
+impl Drop for AsyncCluster {
+    fn drop(&mut self) {
+        for link in &mut self.links {
+            link.sender = None; // closes channels; workers exit their loops
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::LocalProx;
+    use crate::backend::native::{NativeBackend, SolveMode};
+    use crate::backend::BlockParams;
+    use crate::coordinator::fault::FaultSpec;
+    use crate::data::{FeaturePlan, SyntheticSpec};
+    use crate::losses::Squared;
+    use crate::network::SequentialCluster;
+
+    fn make_workers(nodes: usize) -> (Vec<NodeWorker>, usize) {
+        let ds = SyntheticSpec::regression(12, 40 * nodes, nodes).generate();
+        let plan = FeaturePlan::new(12, 2, 512);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.0 / (nodes as f64 * 10.0) + 1.0,
+        };
+        let workers = ds
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let be = NativeBackend::new(shard, &plan, Box::new(Squared), SolveMode::Direct);
+                NodeWorker::new(i, LocalProx::new(Box::new(be), plan.clone(), 1), params, 10)
+            })
+            .collect();
+        (workers, 12)
+    }
+
+    fn full_barrier_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            coordination: crate::config::CoordinationKind::Async,
+            quorum: 1.0,
+            max_staleness: 0,
+            heartbeat_ms: 25,
+            faults: FaultSpec::default(),
+        }
+    }
+
+    #[test]
+    fn full_barrier_async_matches_sequential_bit_for_bit() {
+        let (w1, dim) = make_workers(3);
+        let (w2, _) = make_workers(3);
+        let mut seq = SequentialCluster::new(w1, dim);
+        let mut asy = AsyncCluster::new(w2, dim, &full_barrier_cfg());
+        let z = vec![0.05; dim];
+        for k in 0..3 {
+            let a = seq.round(&z).unwrap();
+            let b = asy.round(&z).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.node, rb.node);
+                assert_eq!(rb.round, k, "full barrier replies must be fresh");
+                assert_eq!(ra.x, rb.x, "x must match bit-for-bit");
+                assert_eq!(ra.u, rb.u, "u must match bit-for-bit");
+            }
+        }
+        let stats = asy.coordination().unwrap();
+        assert_eq!(stats.rounds, 3);
+        assert_eq!(stats.drops, 0);
+        assert_eq!(stats.resyncs, 0);
+        assert_eq!(stats.staleness_hist, vec![9], "3 rounds x 3 nodes, lag 0");
+        let dl = (seq.loss_value().unwrap() - asy.loss_value().unwrap()).abs();
+        assert!(dl < 1e-12, "loss drifted by {dl}");
+    }
+
+    #[test]
+    fn crash_mid_run_degrades_the_shard_and_rounds_continue() {
+        let (workers, dim) = make_workers(3);
+        let cfg = CoordinatorConfig {
+            coordination: crate::config::CoordinationKind::Async,
+            quorum: 0.6,
+            max_staleness: 1,
+            heartbeat_ms: 10,
+            faults: FaultSpec::default().crash(2, 2),
+        };
+        let mut cluster = AsyncCluster::new(workers, dim, &cfg);
+        let z = vec![0.0; dim];
+        for _ in 0..6 {
+            let replies = cluster.round(&z).unwrap();
+            assert!(!replies.is_empty());
+        }
+        assert_eq!(cluster.degraded(), vec![2], "node 2 must be degraded");
+        // the dead shard must no longer appear in round snapshots
+        let replies = cluster.round(&z).unwrap();
+        assert!(replies.iter().all(|r| r.node != 2));
+        assert_eq!(cluster.coordination().unwrap().deaths, 1);
+        // loss and ledger remain answerable on the quorum
+        let _ = cluster.loss_value().unwrap();
+        let ledger = cluster.ledger();
+        assert!(ledger.net_down_bytes > 0);
+    }
+
+    #[test]
+    fn elastic_join_and_leave_mid_run() {
+        let (workers, dim) = make_workers(2);
+        let (mut extra, _) = make_workers(3);
+        let cfg = full_barrier_cfg();
+        let mut cluster = AsyncCluster::new(workers, dim, &cfg);
+        let z = vec![0.01; dim];
+        cluster.round(&z).unwrap();
+
+        // join node: primed via resync, counted after its first reply
+        let id = cluster.join(extra.pop().unwrap());
+        assert_eq!(id, 2);
+        let mut saw_three = false;
+        for _ in 0..4 {
+            let replies = cluster.round(&z).unwrap();
+            if replies.len() == 3 {
+                saw_three = true;
+            }
+        }
+        assert!(saw_three, "joined node never reached the snapshot");
+        let stats = cluster.coordination().unwrap();
+        assert_eq!(stats.joins, 1);
+        assert!(stats.resyncs >= 1, "join must be primed via resync");
+
+        // graceful leave shrinks the roster again
+        cluster.leave(id);
+        let replies = cluster.round(&z).unwrap();
+        assert!(replies.iter().all(|r| r.node != id));
+        assert!(cluster.degraded().is_empty(), "leave is not a failure");
+    }
+}

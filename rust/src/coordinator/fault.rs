@@ -1,0 +1,181 @@
+//! Deterministic fault injection for the coordination layer.
+//!
+//! The async coordinator is only worth having if stragglers and crashes
+//! are testable without real machines, so faults are a *model*, not an
+//! accident: a [`FaultSpec`] names which nodes are slow (fixed per-round
+//! delay plus optional seeded jitter) and which nodes crash at which
+//! round, and a [`FaultInjector`] evaluates that model as a pure function
+//! of `(node, round)`.  Two injectors built from the same spec agree on
+//! every decision, so failure scenarios reproduce bit-exactly.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// A node that takes extra wall-clock time per round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerSpec {
+    pub node: usize,
+    /// Extra milliseconds added to every round this node computes.
+    pub delay_ms: f64,
+}
+
+/// A node that dies when it picks up work for `round` (or any later one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub node: usize,
+    pub round: usize,
+}
+
+/// The full failure model for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the jitter stream (delays are deterministic given it).
+    pub seed: u64,
+    /// Uniform jitter in [0, jitter_ms) added on top of straggler delays.
+    pub jitter_ms: f64,
+    pub stragglers: Vec<StragglerSpec>,
+    pub crashes: Vec<CrashSpec>,
+}
+
+impl FaultSpec {
+    /// True when the model injects nothing (the healthy-cluster default).
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty() && self.crashes.is_empty() && self.jitter_ms == 0.0
+    }
+
+    /// Builder: slow `node` down by `delay_ms` per round.
+    pub fn straggler(mut self, node: usize, delay_ms: f64) -> FaultSpec {
+        self.stragglers.push(StragglerSpec { node, delay_ms });
+        self
+    }
+
+    /// Builder: kill `node` when it starts work for `round`.
+    pub fn crash(mut self, node: usize, round: usize) -> FaultSpec {
+        self.crashes.push(CrashSpec { node, round });
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.jitter_ms < 0.0 {
+            anyhow::bail!("fault jitter_ms must be >= 0");
+        }
+        for s in &self.stragglers {
+            if s.delay_ms.is_nan() || s.delay_ms < 0.0 {
+                anyhow::bail!("straggler delay_ms must be >= 0 (node {})", s.node);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Evaluates a [`FaultSpec`]; cloned into every node worker thread.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec) -> FaultInjector {
+        FaultInjector { spec }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Does `node` die when it picks up work for `round`?
+    pub fn crashes_at(&self, node: usize, round: usize) -> bool {
+        self.spec
+            .crashes
+            .iter()
+            .any(|c| c.node == node && round >= c.round)
+    }
+
+    /// Injected extra compute time for `(node, round)` — a pure function
+    /// of the spec, so repeated queries (and re-built injectors) agree.
+    pub fn delay(&self, node: usize, round: usize) -> Duration {
+        let base: f64 = self
+            .spec
+            .stragglers
+            .iter()
+            .filter(|s| s.node == node)
+            .map(|s| s.delay_ms)
+            .sum();
+        let jitter = if self.spec.jitter_ms > 0.0 {
+            // stateless per-(node, round) stream: hash the coordinates
+            // into a seed so the draw does not depend on query order
+            let mix = self
+                .spec
+                .seed
+                .wrapping_add((node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add((round as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+            Rng::seed_from(mix).uniform() * self.spec.jitter_ms
+        } else {
+            0.0
+        };
+        let total_ms = base + jitter;
+        if total_ms <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(total_ms / 1e3)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_injects_nothing() {
+        let inj = FaultInjector::new(FaultSpec::default());
+        assert!(inj.spec().is_empty());
+        for node in 0..4 {
+            for round in 0..8 {
+                assert_eq!(inj.delay(node, round), Duration::ZERO);
+                assert!(!inj.crashes_at(node, round));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_delay_is_deterministic_and_targeted() {
+        let spec = FaultSpec {
+            seed: 11,
+            jitter_ms: 3.0,
+            ..Default::default()
+        }
+        .straggler(1, 20.0);
+        let a = FaultInjector::new(spec.clone());
+        let b = FaultInjector::new(spec);
+        for round in 0..16 {
+            assert_eq!(a.delay(1, round), b.delay(1, round));
+            let d = a.delay(1, round).as_secs_f64() * 1e3;
+            assert!((20.0..23.0).contains(&d), "delay {d} ms");
+            // non-straggler nodes see jitter only
+            let d0 = a.delay(0, round).as_secs_f64() * 1e3;
+            assert!((0.0..3.0).contains(&d0), "jitter {d0} ms");
+        }
+    }
+
+    #[test]
+    fn crash_fires_at_and_after_its_round() {
+        let inj = FaultInjector::new(FaultSpec::default().crash(2, 5));
+        assert!(!inj.crashes_at(2, 4));
+        assert!(inj.crashes_at(2, 5));
+        assert!(inj.crashes_at(2, 9));
+        assert!(!inj.crashes_at(1, 9));
+    }
+
+    #[test]
+    fn validate_rejects_negative_delays() {
+        assert!(FaultSpec::default().straggler(0, -1.0).validate().is_err());
+        let bad = FaultSpec {
+            jitter_ms: -0.5,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        assert!(FaultSpec::default().straggler(0, 5.0).validate().is_ok());
+    }
+}

@@ -1,0 +1,172 @@
+//! Elastic cluster membership for the async coordinator.
+//!
+//! The roster is an append-only table of node slots (slot index == node
+//! id, so shard ownership never moves).  Slots step through a small state
+//! machine:
+//!
+//! ```text
+//!           join()                 first reply
+//! (new) ----------> Joining ---------------------> Active
+//!                      |                             |
+//!                      | crash / send failure        | crash / send failure
+//!                      v                             v
+//!                    Dead  <------------------------+        leave() -> Left
+//! ```
+//!
+//! `Dead` marks the shard *degraded*: the solve continues on the quorum of
+//! the remaining actives, which is the whole point of the partial barrier.
+
+/// Lifecycle state of one node slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Participating: receives broadcasts, counts toward quorum.
+    Active,
+    /// Joined mid-solve; receives broadcasts but does not count toward the
+    /// quorum denominator until its first reply lands.
+    Joining,
+    /// Crashed or unreachable — its shard is degraded.
+    Dead,
+    /// Gracefully removed via `leave`.
+    Left,
+}
+
+/// The coordinator's membership table.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    states: Vec<NodeState>,
+}
+
+impl Membership {
+    pub fn new(nodes: usize) -> Membership {
+        Membership {
+            states: vec![NodeState::Active; nodes],
+        }
+    }
+
+    /// Total slots ever allocated (including dead/left ones).
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn state(&self, node: usize) -> NodeState {
+        self.states[node]
+    }
+
+    /// Counts toward the quorum denominator.
+    pub fn is_active(&self, node: usize) -> bool {
+        self.states[node] == NodeState::Active
+    }
+
+    /// Should receive broadcasts (Active or Joining).
+    pub fn is_reachable(&self, node: usize) -> bool {
+        matches!(self.states[node], NodeState::Active | NodeState::Joining)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| **s == NodeState::Active)
+            .count()
+    }
+
+    pub fn reachable_nodes(&self) -> Vec<usize> {
+        (0..self.states.len())
+            .filter(|&i| self.is_reachable(i))
+            .collect()
+    }
+
+    /// Replies required before the coordinator commits a round: a fraction
+    /// of the *active* roster, at least one.
+    pub fn quorum_needed(&self, quorum_frac: f64) -> usize {
+        let frac = quorum_frac.clamp(0.0, 1.0);
+        let need = (frac * self.active_count() as f64).ceil() as usize;
+        need.max(1)
+    }
+
+    /// Mark a node dead (crash detected); returns true on a fresh death so
+    /// callers can count it once.
+    pub fn mark_dead(&mut self, node: usize) -> bool {
+        if matches!(self.states[node], NodeState::Dead | NodeState::Left) {
+            return false;
+        }
+        self.states[node] = NodeState::Dead;
+        true
+    }
+
+    /// Promote a Joining node after its first reply.
+    pub fn mark_active(&mut self, node: usize) {
+        if self.states[node] == NodeState::Joining {
+            self.states[node] = NodeState::Active;
+        }
+    }
+
+    /// Allocate a slot for an elastically-joining node.
+    pub fn join(&mut self) -> usize {
+        self.states.push(NodeState::Joining);
+        self.states.len() - 1
+    }
+
+    /// Gracefully remove a node.
+    pub fn leave(&mut self, node: usize) {
+        self.states[node] = NodeState::Left;
+    }
+
+    /// Node ids whose shards are degraded (dead members).
+    pub fn degraded(&self) -> Vec<usize> {
+        (0..self.states.len())
+            .filter(|&i| self.states[i] == NodeState::Dead)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_tracks_active_count() {
+        let mut m = Membership::new(4);
+        assert_eq!(m.quorum_needed(1.0), 4);
+        assert_eq!(m.quorum_needed(0.5), 2);
+        assert_eq!(m.quorum_needed(0.6), 3); // ceil(2.4)
+        assert!(m.mark_dead(3));
+        assert!(!m.mark_dead(3), "second death must not double-count");
+        assert_eq!(m.active_count(), 3);
+        assert_eq!(m.quorum_needed(1.0), 3);
+        assert_eq!(m.degraded(), vec![3]);
+        // quorum never drops to zero
+        m.mark_dead(0);
+        m.mark_dead(1);
+        m.mark_dead(2);
+        assert_eq!(m.quorum_needed(0.5), 1);
+    }
+
+    #[test]
+    fn join_is_reachable_but_not_counted_until_first_reply() {
+        let mut m = Membership::new(2);
+        let id = m.join();
+        assert_eq!(id, 2);
+        assert_eq!(m.state(id), NodeState::Joining);
+        assert!(m.is_reachable(id));
+        assert!(!m.is_active(id));
+        assert_eq!(m.quorum_needed(1.0), 2);
+        m.mark_active(id);
+        assert!(m.is_active(id));
+        assert_eq!(m.quorum_needed(1.0), 3);
+    }
+
+    #[test]
+    fn leave_removes_from_everything() {
+        let mut m = Membership::new(3);
+        m.leave(1);
+        assert_eq!(m.state(1), NodeState::Left);
+        assert!(!m.is_reachable(1));
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.reachable_nodes(), vec![0, 2]);
+        assert!(m.degraded().is_empty(), "leave is not a failure");
+    }
+}

@@ -1,0 +1,379 @@
+//! The coordinator's round scheduler — a pure state machine.
+//!
+//! All partial-barrier policy lives here, with no threads or channels, so
+//! every protocol decision is unit-testable: which nodes get the next
+//! broadcast, whether an arriving reply is fresh / folded (late but within
+//! the staleness bound) / dropped (too stale -> resync), when the quorum
+//! is satisfied, and the exact byte accounting of each decision (round
+//! broadcasts, resync broadcasts, and replies are ledgered separately).
+//! [`super::AsyncCluster`] is a thin transport shell around this type.
+//!
+//! The protocol follows Zhu et al.'s block-wise async consensus ADMM
+//! (arXiv:1802.08882): the coordinator keeps the last reply it folded from
+//! every node and commits a global update as soon as a quorum fraction of
+//! the active roster has replied; each node has at most one outstanding
+//! broadcast, so a straggler is simply re-dispatched with the *current* z
+//! whenever it surfaces, rather than queueing up stale work.
+
+use super::membership::{Membership, NodeState};
+use crate::metrics::{CoordinationStats, TransferLedger};
+use crate::network::NodeReply;
+
+/// Per-node dispatch state: at most one outstanding broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dispatch {
+    Idle,
+    /// Owes a reply for the given round's broadcast.
+    Busy(usize),
+}
+
+#[derive(Clone, Debug)]
+struct CachedReply {
+    x: Vec<f64>,
+    u: Vec<f64>,
+    round: usize,
+}
+
+/// What the scheduler decided about an arriving reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplyAction {
+    /// Computed against the current round's z.
+    Fresh,
+    /// Late but within the staleness bound — folded into the cache.
+    Folded { lag: usize },
+    /// Beyond `max_staleness`: discarded; the node needs a resync.
+    Dropped { lag: usize },
+    /// From a dead or departed node; ignored entirely.
+    Ignored,
+}
+
+pub struct RoundScheduler {
+    dim: usize,
+    quorum_frac: f64,
+    max_staleness: usize,
+    round: usize,
+    started: bool,
+    dispatch: Vec<Dispatch>,
+    cache: Vec<Option<CachedReply>>,
+    pub membership: Membership,
+    pub stats: CoordinationStats,
+    /// Network accounting (coordinator side): round broadcasts in
+    /// `net_down_bytes`, resyncs in `net_resync_bytes`, replies in
+    /// `net_up_bytes`.
+    pub net: TransferLedger,
+}
+
+impl RoundScheduler {
+    pub fn new(nodes: usize, dim: usize, quorum_frac: f64, max_staleness: usize) -> RoundScheduler {
+        RoundScheduler {
+            dim,
+            quorum_frac,
+            max_staleness,
+            round: 0,
+            started: false,
+            dispatch: vec![Dispatch::Idle; nodes],
+            cache: vec![None; nodes],
+            membership: Membership::new(nodes),
+            stats: CoordinationStats::new(nodes),
+            net: TransferLedger::default(),
+        }
+    }
+
+    fn z_bytes(&self) -> u64 {
+        self.dim as u64 * 8
+    }
+
+    pub fn current_round(&self) -> usize {
+        self.round
+    }
+
+    pub fn max_staleness(&self) -> usize {
+        self.max_staleness
+    }
+
+    /// Start the next round: returns its index and the reachable idle
+    /// nodes to broadcast z to.  Nodes still busy with older work are
+    /// skipped — they will be re-dispatched when their reply surfaces.
+    pub fn begin_round(&mut self) -> (usize, Vec<usize>) {
+        if self.started {
+            self.round += 1;
+        } else {
+            self.started = true;
+        }
+        self.stats.rounds += 1;
+        let targets = (0..self.dispatch.len())
+            .filter(|&i| self.membership.is_reachable(i) && self.dispatch[i] == Dispatch::Idle)
+            .collect();
+        (self.round, targets)
+    }
+
+    /// A round broadcast reached `node`.
+    pub fn on_sent(&mut self, node: usize) {
+        self.dispatch[node] = Dispatch::Busy(self.round);
+        self.net.net_down_bytes += self.z_bytes();
+    }
+
+    /// A resync broadcast (current z re-pushed to a stale or joining
+    /// node) reached `node` — accounted separately from round traffic.
+    pub fn on_resync_sent(&mut self, node: usize) {
+        self.dispatch[node] = Dispatch::Busy(self.round);
+        self.net.net_resync_bytes += self.z_bytes();
+        self.stats.resyncs += 1;
+    }
+
+    /// A broadcast to `node` failed: its channel is gone, so it is dead.
+    /// Returns true on a fresh death.
+    pub fn on_send_failed(&mut self, node: usize) -> bool {
+        self.kill(node)
+    }
+
+    /// Declare `node` dead (shard degraded).  Its cached reply is evicted
+    /// so it stops contributing to the consensus average.
+    pub fn kill(&mut self, node: usize) -> bool {
+        let fresh = self.membership.mark_dead(node);
+        if fresh {
+            self.stats.deaths += 1;
+        }
+        self.cache[node] = None;
+        self.dispatch[node] = Dispatch::Idle;
+        fresh
+    }
+
+    pub fn is_busy(&self, node: usize) -> bool {
+        matches!(self.dispatch[node], Dispatch::Busy(_))
+    }
+
+    /// Reachable nodes still owing a reply for an *older* round — the
+    /// candidates for a liveness probe (a silently-crashed node looks
+    /// exactly like a straggler until its channel is tested).
+    pub fn laggards(&self) -> Vec<usize> {
+        (0..self.dispatch.len())
+            .filter(|&i| {
+                let behind = matches!(self.dispatch[i], Dispatch::Busy(r) if r < self.round);
+                behind && self.membership.is_reachable(i)
+            })
+            .collect()
+    }
+
+    /// Replies that must land in the current collect phase before the
+    /// round commits.
+    pub fn quorum_needed(&self) -> usize {
+        self.membership.quorum_needed(self.quorum_frac)
+    }
+
+    /// Handle a reply from `node` computed against round `tag`.
+    pub fn on_reply(&mut self, node: usize, tag: usize, x: Vec<f64>, u: Vec<f64>) -> ReplyAction {
+        self.dispatch[node] = Dispatch::Idle;
+        if !self.membership.is_reachable(node) {
+            return ReplyAction::Ignored;
+        }
+        self.net.net_up_bytes += 2 * self.z_bytes();
+        // a joining node is a full member from its first reply on
+        if self.membership.state(node) == NodeState::Joining {
+            self.membership.mark_active(node);
+        }
+        let lag = self.round.saturating_sub(tag);
+        if lag > self.max_staleness {
+            self.stats.drops += 1;
+            return ReplyAction::Dropped { lag };
+        }
+        self.cache[node] = Some(CachedReply { x, u, round: tag });
+        self.stats.record_fold(node, lag);
+        if lag == 0 {
+            ReplyAction::Fresh
+        } else {
+            ReplyAction::Folded { lag }
+        }
+    }
+
+    /// A reply surfacing outside any round collect (loss/ledger queries
+    /// after the solve): free the dispatch slot and ledger the wire
+    /// bytes, but do NOT fold it — no further global update will consume
+    /// it, so folding would skew the participation statistics.
+    pub fn on_stray_reply(&mut self, node: usize) {
+        self.dispatch[node] = Dispatch::Idle;
+        if self.membership.is_reachable(node) {
+            self.net.net_up_bytes += 2 * self.z_bytes();
+            if self.membership.state(node) == NodeState::Joining {
+                self.membership.mark_active(node);
+            }
+        }
+    }
+
+    /// Snapshot for the solver: every active node's latest folded reply
+    /// that is still within the staleness bound, sorted by node id.
+    pub fn collect(&self) -> Vec<NodeReply> {
+        let mut out = Vec::with_capacity(self.cache.len());
+        for (node, entry) in self.cache.iter().enumerate() {
+            if !self.membership.is_active(node) {
+                continue;
+            }
+            if let Some(c) = entry {
+                let lag = self.round.saturating_sub(c.round);
+                if lag <= self.max_staleness {
+                    out.push(NodeReply {
+                        node,
+                        round: c.round,
+                        lag,
+                        x: c.x.clone(),
+                        u: c.u.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Allocate the slot for an elastically-joining node.
+    pub fn register_join(&mut self) -> usize {
+        let id = self.membership.join();
+        self.dispatch.push(Dispatch::Idle);
+        self.cache.push(None);
+        if self.stats.participation.len() <= id {
+            self.stats.participation.resize(id + 1, 0);
+        }
+        self.stats.joins += 1;
+        id
+    }
+
+    /// Gracefully remove a node from the roster.
+    pub fn remove(&mut self, node: usize) {
+        self.membership.leave(node);
+        self.cache[node] = None;
+        self.dispatch[node] = Dispatch::Idle;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(v: f64, dim: usize) -> (Vec<f64>, Vec<f64>) {
+        (vec![v; dim], vec![-v; dim])
+    }
+
+    #[test]
+    fn full_barrier_mode_waits_for_everyone_and_stays_fresh() {
+        let dim = 3;
+        let mut s = RoundScheduler::new(2, dim, 1.0, 0);
+        let (k, targets) = s.begin_round();
+        assert_eq!(k, 0);
+        assert_eq!(targets, vec![0, 1]);
+        assert_eq!(s.quorum_needed(), 2);
+        s.on_sent(0);
+        s.on_sent(1);
+        let (x, u) = reply(1.0, dim);
+        assert_eq!(s.on_reply(0, 0, x, u), ReplyAction::Fresh);
+        let (x, u) = reply(2.0, dim);
+        assert_eq!(s.on_reply(1, 0, x, u), ReplyAction::Fresh);
+        let replies = s.collect();
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[0].node, 0);
+        assert_eq!(replies[1].node, 1);
+        assert!(replies.iter().all(|r| r.round == 0));
+    }
+
+    #[test]
+    fn byte_accounting_separates_round_and_resync_traffic() {
+        // satellite requirement: resync bytes are ledgered apart from the
+        // regular round broadcasts.
+        let dim = 4;
+        let zb = (dim * 8) as u64;
+        let mut s = RoundScheduler::new(2, dim, 0.5, 0);
+
+        // round 0: both nodes broadcast (2 x round traffic)
+        let (_, targets) = s.begin_round();
+        assert_eq!(targets.len(), 2);
+        s.on_sent(0);
+        s.on_sent(1);
+        // node 0 replies; quorum = ceil(0.5 * 2) = 1 -> round commits
+        let (x, u) = reply(1.0, dim);
+        assert_eq!(s.on_reply(0, 0, x, u), ReplyAction::Fresh);
+        assert_eq!(s.collect().len(), 1, "node 1 has not replied yet");
+
+        // round 1: only idle node 0 gets the round broadcast
+        let (_, targets) = s.begin_round();
+        assert_eq!(targets, vec![0]);
+        s.on_sent(0);
+        // node 1's old reply surfaces now: lag 1 > max_staleness 0 -> drop
+        let (x, u) = reply(9.0, dim);
+        assert_eq!(s.on_reply(1, 0, x, u), ReplyAction::Dropped { lag: 1 });
+        // the coordinator resyncs it with the current z
+        s.on_resync_sent(1);
+
+        assert_eq!(s.net.net_down_bytes, 3 * zb, "3 round broadcasts");
+        assert_eq!(s.net.net_resync_bytes, zb, "1 resync broadcast");
+        assert_eq!(s.net.net_up_bytes, 2 * 2 * zb, "2 replies (x_i + u_i)");
+        assert_eq!(s.stats.drops, 1);
+        assert_eq!(s.stats.resyncs, 1);
+    }
+
+    #[test]
+    fn bounded_staleness_folds_late_replies_then_evicts() {
+        let dim = 2;
+        let mut s = RoundScheduler::new(3, dim, 1.0 / 3.0, 1);
+        let (_, t) = s.begin_round(); // round 0
+        for n in t {
+            s.on_sent(n);
+        }
+        let (x, u) = reply(1.0, dim);
+        s.on_reply(0, 0, x, u);
+        let (_, t) = s.begin_round(); // round 1
+        for n in t {
+            s.on_sent(n);
+        }
+        // node 1's round-0 reply arrives one round late: folded
+        let (x, u) = reply(2.0, dim);
+        assert_eq!(s.on_reply(1, 0, x, u), ReplyAction::Folded { lag: 1 });
+        // node 0's cache (round 0) is still within the bound at round 1
+        let replies = s.collect();
+        assert_eq!(
+            replies.iter().map(|r| r.node).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        // two rounds later both entries age out of the staleness window
+        s.begin_round(); // round 2
+        s.begin_round(); // round 3
+        assert!(s.collect().is_empty());
+        assert_eq!(s.stats.staleness_hist, vec![1, 1]);
+        assert_eq!(s.stats.participation, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn death_degrades_the_shard_and_shrinks_the_quorum() {
+        let dim = 2;
+        let mut s = RoundScheduler::new(3, dim, 1.0, 0);
+        let (_, t) = s.begin_round();
+        for n in t {
+            s.on_sent(n);
+        }
+        assert_eq!(s.quorum_needed(), 3);
+        let (x, u) = reply(1.0, dim);
+        s.on_reply(0, 0, x, u);
+        assert!(s.kill(2));
+        assert_eq!(s.quorum_needed(), 2);
+        assert_eq!(s.membership.degraded(), vec![2]);
+        // a dead node's late reply is ignored, not folded
+        let (x, u) = reply(7.0, dim);
+        assert_eq!(s.on_reply(2, 0, x, u), ReplyAction::Ignored);
+        assert_eq!(s.collect().len(), 1);
+        assert_eq!(s.stats.deaths, 1);
+    }
+
+    #[test]
+    fn elastic_join_becomes_active_on_first_reply() {
+        let dim = 2;
+        let mut s = RoundScheduler::new(2, dim, 1.0, 1);
+        s.begin_round();
+        let id = s.register_join();
+        assert_eq!(id, 2);
+        assert_eq!(s.quorum_needed(), 2, "joining node not yet counted");
+        s.on_resync_sent(id); // joiner is primed with the current z
+        let (x, u) = reply(3.0, dim);
+        assert_eq!(s.on_reply(id, 0, x, u), ReplyAction::Fresh);
+        assert_eq!(s.quorum_needed(), 3, "promoted after first reply");
+        assert_eq!(s.stats.joins, 1);
+        s.remove(id);
+        assert_eq!(s.quorum_needed(), 2);
+    }
+}

@@ -22,7 +22,8 @@ use crate::admm::{self, LocalProx, SolveOptions, SolveResult};
 use crate::backend::native::{NativeBackend, SolveMode};
 use crate::backend::xla::XlaBackend;
 use crate::backend::BlockParams;
-use crate::config::{BackendKind, Config};
+use crate::config::{BackendKind, Config, CoordinationKind};
+use crate::coordinator::AsyncCluster;
 use crate::data::{Dataset, FeaturePlan};
 use crate::losses::make_loss;
 use crate::network::{Cluster, NodeWorker, SequentialCluster, ThreadedCluster};
@@ -108,7 +109,38 @@ pub fn requires_sequential(cfg: &Config) -> bool {
     cfg.platform.backend == BackendKind::Xla && cfg.platform.share_runtime
 }
 
-/// End-to-end fit: build a threaded cluster, run Bi-cADMM, return result.
+/// Build the transport for a set of workers.  `config.coordinator.
+/// coordination` selects it: `sync` (default) is the full-barrier
+/// threaded/sequential cluster, `async` the partial-barrier
+/// [`AsyncCluster`].  Single policy point — the fit API, the harness
+/// timer, and the straggler scenario all construct clusters here.
+pub fn build_cluster(
+    workers: Vec<NodeWorker>,
+    dim: usize,
+    cfg: &Config,
+    threaded: bool,
+) -> anyhow::Result<Box<dyn Cluster>> {
+    cfg.coordinator.validate()?;
+    Ok(match cfg.coordinator.coordination {
+        CoordinationKind::Async => {
+            anyhow::ensure!(
+                !requires_sequential(cfg),
+                "async coordination needs per-node runtimes: set platform.share_runtime = false"
+            );
+            Box::new(AsyncCluster::new(workers, dim, &cfg.coordinator))
+        }
+        CoordinationKind::Sync => {
+            if threaded && !requires_sequential(cfg) {
+                Box::new(ThreadedCluster::new(workers, dim))
+            } else {
+                Box::new(SequentialCluster::new(workers, dim))
+            }
+        }
+    })
+}
+
+/// End-to-end fit: build the configured cluster, run Bi-cADMM, return
+/// the result.
 pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
     fit_with_options(ds, cfg, &SolveOptions::default(), true)
 }
@@ -121,11 +153,6 @@ pub fn fit_with_options(
 ) -> anyhow::Result<SolveResult> {
     let workers = build_workers(ds, cfg)?;
     let dim = ds.n_features * ds.width;
-    let threaded = threaded && !requires_sequential(cfg);
-    let mut cluster: Box<dyn Cluster> = if threaded {
-        Box::new(ThreadedCluster::new(workers, dim))
-    } else {
-        Box::new(SequentialCluster::new(workers, dim))
-    };
+    let mut cluster = build_cluster(workers, dim, cfg, threaded)?;
     admm::solve(cluster.as_mut(), dim, cfg, Some(ds), opts)
 }

@@ -12,22 +12,24 @@
 //! | [`fig2`] | Figure 2       | GPU(XLA) flatter than CPU(native) in n     |
 //! | [`fig3`] | Figure 3       | same, in per-node samples                  |
 //! | [`fig4`] | Figure 4       | transfer time grows with n; flat-ish in m  |
+//! | [`straggler`] | (new)     | async coordination hides a 1x-16x straggler|
 
 pub mod fig1;
 pub mod fig4;
 pub mod scaling;
+pub mod straggler;
 pub mod table1;
 
 pub use fig1::fig1;
 pub use fig4::fig4;
 pub use scaling::{fig2, fig3};
+pub use straggler::straggler;
 pub use table1::table1;
 
 use crate::admm::{SolveOptions, SolveResult};
 use crate::config::Config;
 use crate::data::Dataset;
 use crate::driver;
-use crate::network::{Cluster, SequentialCluster, ThreadedCluster};
 use crate::util::Stopwatch;
 
 /// A solve with setup (backend construction / staging / compile) separated
@@ -43,12 +45,7 @@ pub fn run_timed(ds: &Dataset, cfg: &Config, threaded: bool) -> anyhow::Result<T
     let watch = Stopwatch::start();
     let workers = driver::build_workers(ds, cfg)?;
     let dim = ds.n_features * ds.width;
-    let threaded = threaded && !driver::requires_sequential(cfg);
-    let mut cluster: Box<dyn Cluster> = if threaded {
-        Box::new(ThreadedCluster::new(workers, dim))
-    } else {
-        Box::new(SequentialCluster::new(workers, dim))
-    };
+    let mut cluster = driver::build_cluster(workers, dim, cfg, threaded)?;
     let setup_seconds = watch.elapsed_secs();
     let result = crate::admm::solve(
         cluster.as_mut(),

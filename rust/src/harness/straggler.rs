@@ -1,0 +1,135 @@
+//! Straggler-scaling scenario: wall-clock of sync (full-barrier) vs async
+//! (partial-barrier) coordination as one node is slowed 1x-16x.
+//!
+//! Both modes run on `coordinator::AsyncCluster` with the same seeded
+//! fault model, so the *only* difference is the coordination policy:
+//! `sync` is quorum = 1.0 / staleness = 0 (which reproduces the
+//! full-barrier clusters bit-for-bit), `async` is the configured partial
+//! barrier.  Expected shape: sync wall-clock grows linearly with the
+//! slowdown factor (the straggler gates every round); async stays nearly
+//! flat, paying instead with bounded-stale folds and occasional resyncs —
+//! all of which the emitted table reports.
+
+use crate::admm::{self, SolveOptions};
+use crate::config::{Config, CoordinationKind};
+use crate::coordinator::FaultSpec;
+use crate::data::SyntheticSpec;
+use crate::driver;
+use crate::metrics::{CoordinationStats, CsvTable};
+
+pub struct StragglerOpts {
+    pub full: bool,
+    /// Cluster size; node 0 is the straggler.
+    pub nodes: usize,
+    /// Outer rounds (fixed horizon so wall-clock is comparable).
+    pub iters: usize,
+    /// Per-round delay unit: the slow node sleeps `base_ms * (factor - 1)`.
+    pub base_ms: f64,
+    /// Async-mode quorum fraction.
+    pub quorum: f64,
+    /// Async-mode staleness bound (rounds).
+    pub max_staleness: usize,
+    pub out: Option<String>,
+}
+
+impl Default for StragglerOpts {
+    fn default() -> Self {
+        StragglerOpts {
+            full: false,
+            nodes: 3,
+            iters: 12,
+            base_ms: 3.0,
+            quorum: 0.5,
+            max_staleness: 2,
+            out: None,
+        }
+    }
+}
+
+/// One (factor, mode) measurement.
+pub struct StragglerPoint {
+    pub wall_seconds: f64,
+    pub final_primal: f64,
+    pub stats: CoordinationStats,
+}
+
+/// Run one fixed-horizon fit under the given coordination policy with
+/// node 0 slowed by `factor`.
+pub fn run_point(
+    opts: &StragglerOpts,
+    factor: usize,
+    quorum: f64,
+    max_staleness: usize,
+) -> anyhow::Result<StragglerPoint> {
+    let (n, m_per_node) = if opts.full { (256, 800) } else { (48, 160) };
+    let mut spec = SyntheticSpec::regression(n, m_per_node * opts.nodes, opts.nodes);
+    spec.sparsity_level = 0.8;
+    let ds = spec.generate();
+
+    let mut cfg = Config::default();
+    cfg.platform.nodes = opts.nodes;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = opts.iters;
+    cfg.solver.tol_primal = 0.0; // fixed horizon
+    cfg.solver.polish = false;
+    cfg.coordinator.coordination = CoordinationKind::Async;
+    cfg.coordinator.quorum = quorum;
+    cfg.coordinator.max_staleness = max_staleness;
+    cfg.coordinator.heartbeat_ms = 10;
+    cfg.coordinator.faults =
+        FaultSpec::default().straggler(0, opts.base_ms * (factor.saturating_sub(1)) as f64);
+
+    let workers = driver::build_workers(&ds, &cfg)?;
+    let dim = ds.n_features * ds.width;
+    let mut cluster = driver::build_cluster(workers, dim, &cfg, false)?;
+    let res = admm::solve(cluster.as_mut(), dim, &cfg, Some(&ds), &SolveOptions::default())?;
+    Ok(StragglerPoint {
+        wall_seconds: res.wall_seconds,
+        final_primal: res.trace.last().map(|r| r.primal).unwrap_or(f64::NAN),
+        stats: res.coordination.unwrap_or_default(),
+    })
+}
+
+/// The full sweep: factors 1x-16x, sync vs async, one row per point.
+pub fn straggler(opts: &StragglerOpts) -> anyhow::Result<CsvTable> {
+    let factors = [1usize, 2, 4, 8, 16];
+    let mut table = CsvTable::new(&[
+        "slow_factor",
+        "mode",
+        "wall_s",
+        "final_primal",
+        "stale_folds",
+        "drops",
+        "resyncs",
+        "straggler_folds",
+    ]);
+    for &factor in &factors {
+        for (mode, quorum, staleness) in [
+            ("sync", 1.0, 0usize),
+            ("async", opts.quorum, opts.max_staleness),
+        ] {
+            eprintln!(
+                "straggler: factor={factor} mode={mode} (N={}, {} rounds)",
+                opts.nodes, opts.iters
+            );
+            let p = run_point(opts, factor, quorum, staleness)?;
+            let stale_folds: u64 = p.stats.staleness_hist.iter().skip(1).sum();
+            table.row(vec![
+                factor.to_string(),
+                mode.to_string(),
+                format!("{:.4}", p.wall_seconds),
+                format!("{:.3e}", p.final_primal),
+                stale_folds.to_string(),
+                p.stats.drops.to_string(),
+                p.stats.resyncs.to_string(),
+                p.stats
+                    .participation
+                    .first()
+                    .copied()
+                    .unwrap_or(0)
+                    .to_string(),
+            ]);
+        }
+    }
+    Ok(table)
+}

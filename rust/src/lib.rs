@@ -8,6 +8,8 @@
 //!   * [`backend`]  — native ("CPU") and XLA-artifact ("GPU") data paths
 //!   * [`runtime`]  — PJRT loader/executor for the AOT artifacts
 //!   * [`network`]  — node workers + collectives (the MPI stand-in)
+//!   * [`coordinator`] — async round scheduler with bounded staleness,
+//!     elastic membership, and deterministic fault injection
 //!   * [`baselines`]— Lasso, best-subset branch-and-bound (Gurobi
 //!     stand-in), IHT
 //!   * [`driver`]   — high-level fit API used by the CLI and examples
@@ -15,6 +17,7 @@ pub mod admm;
 pub mod backend;
 pub mod baselines;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod driver;
 pub mod harness;

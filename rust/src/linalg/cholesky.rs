@@ -12,9 +12,16 @@ pub struct Cholesky {
     l: Vec<f64>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("matrix not positive definite at pivot {0}")]
+#[derive(Debug)]
 pub struct NotPositiveDefinite(pub usize);
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {}", self.0)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
 
 impl Cholesky {
     /// Factor `a` (row-major n x n, symmetric PD).

@@ -7,11 +7,12 @@
 //!   fig2    — regenerate Figure 2 (feature scaling, CPU vs GPU backend)
 //!   fig3    — regenerate Figure 3 (sample scaling)
 //!   fig4    — regenerate Figure 4 (CPU<->GPU transfer time)
+//!   straggler — sync vs async coordination under a 1x-16x slow node
 //!   info    — print artifact manifest + platform info
 //!
 //! Scaled-down grids by default; `--full` switches to the paper's sizes.
 
-use psfit::config::{BackendKind, Config};
+use psfit::config::{BackendKind, Config, CoordinationKind};
 use psfit::data::{SyntheticSpec, Task};
 use psfit::driver;
 use psfit::harness;
@@ -78,14 +79,32 @@ fn run() -> anyhow::Result<()> {
             let table = harness::fig4(&opts)?;
             harness::emit(&table, opts.out.as_deref())
         }
+        Some("straggler") => {
+            let opts = harness::straggler::StragglerOpts {
+                full: args.flag("full"),
+                nodes: args.get("nodes", 3)?,
+                iters: args.get("iters", 12)?,
+                base_ms: args.get("base-ms", 3.0)?,
+                quorum: args.get("quorum", 0.5)?,
+                max_staleness: args.get("staleness", 2)?,
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::straggler(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
         Some("info") => info(&args),
         Some(other) => {
-            anyhow::bail!("unknown subcommand `{other}` (try: train, fig1..fig4, table1, info)")
+            anyhow::bail!(
+                "unknown subcommand `{other}` (try: train, fig1..fig4, table1, straggler, info)"
+            )
         }
         None => {
-            eprintln!("usage: psfit <train|fig1|fig2|fig3|fig4|table1|info> [options]");
+            eprintln!("usage: psfit <train|fig1|fig2|fig3|fig4|table1|straggler|info> [options]");
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
+            eprintln!("        psfit train --coordination async --quorum 0.75 --staleness 2");
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
+            eprintln!("        psfit straggler --out results/straggler.csv");
             Ok(())
         }
     }
@@ -114,6 +133,12 @@ fn train(args: &Args) -> anyhow::Result<()> {
     cfg.solver.rho_l = args.get("rho-l", cfg.solver.rho_l)?;
     cfg.solver.max_iters = args.get("iters", cfg.solver.max_iters)?;
     cfg.solver.inner_iters = args.get("inner-iters", cfg.solver.inner_iters)?;
+    if let Some(coord) = args.opt("coordination") {
+        cfg.coordinator.coordination = CoordinationKind::parse(coord)?;
+    }
+    cfg.coordinator.quorum = args.get("quorum", cfg.coordinator.quorum)?;
+    cfg.coordinator.max_staleness = args.get("staleness", cfg.coordinator.max_staleness)?;
+    cfg.coordinator.heartbeat_ms = args.get("heartbeat-ms", cfg.coordinator.heartbeat_ms)?;
 
     let mut spec = SyntheticSpec::regression(n, m, nodes);
     spec.sparsity_level = sparsity;
@@ -128,10 +153,11 @@ fn train(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown()?;
 
     eprintln!(
-        "training {} (n={n}, m={m}, N={nodes}, kappa={}, backend={})",
+        "training {} (n={n}, m={m}, N={nodes}, kappa={}, backend={}, coordination={})",
         loss_name(loss),
         cfg.solver.kappa,
-        backend.name()
+        backend.name(),
+        cfg.coordinator.coordination.name()
     );
     let ds = spec.generate();
     let run = harness::run_timed(&ds, &cfg, true)?;
@@ -160,6 +186,9 @@ fn train(args: &Args) -> anyhow::Result<()> {
         res.transfers.net_up_bytes as f64 / 1e6,
         res.transfers.net_down_bytes as f64 / 1e6,
     );
+    if let Some(stats) = &res.coordination {
+        println!("coordination: {}", stats.summary());
+    }
     if let Some(path) = trace_out {
         if let Some(parent) = std::path::Path::new(&path).parent() {
             std::fs::create_dir_all(parent)?;

@@ -19,8 +19,12 @@ pub struct TransferLedger {
     pub copy_seconds: f64,
     /// network bytes node -> coordinator
     pub net_up_bytes: u64,
-    /// network bytes coordinator -> node
+    /// network bytes coordinator -> node (regular round broadcasts)
     pub net_down_bytes: u64,
+    /// coordinator -> node bytes spent re-synchronizing lagging or joining
+    /// nodes (async coordination only; counted separately from the round
+    /// broadcasts so the protocol overhead of staleness is visible)
+    pub net_resync_bytes: u64,
 }
 
 impl TransferLedger {
@@ -40,6 +44,7 @@ impl TransferLedger {
         self.copy_seconds += other.copy_seconds;
         self.net_up_bytes += other.net_up_bytes;
         self.net_down_bytes += other.net_down_bytes;
+        self.net_resync_bytes += other.net_resync_bytes;
     }
 
     /// Modeled PCIe seconds for the recorded volume: bytes / bandwidth +
@@ -67,6 +72,12 @@ pub struct IterRecord {
     pub bilinear: f64,
     /// wall-clock seconds since solve start
     pub wall: f64,
+    /// node replies folded into this round's consensus average (equals the
+    /// cluster size under synchronous coordination)
+    pub participants: usize,
+    /// largest staleness (in rounds) among the folded replies (0 under
+    /// synchronous coordination)
+    pub max_lag: usize,
 }
 
 /// Full convergence trace of one solve.
@@ -88,17 +99,85 @@ impl Trace {
         self.records.last()
     }
 
-    /// CSV with header: iter,primal,dual,bilinear,wall
+    /// CSV with header: iter,primal,dual,bilinear,wall,participants,max_lag
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("iter,primal,dual,bilinear,wall\n");
+        let mut out = String::from("iter,primal,dual,bilinear,wall,participants,max_lag\n");
         for r in &self.records {
             let _ = writeln!(
                 out,
-                "{},{:.6e},{:.6e},{:.6e},{:.6e}",
-                r.iter, r.primal, r.dual, r.bilinear, r.wall
+                "{},{:.6e},{:.6e},{:.6e},{:.6e},{},{}",
+                r.iter, r.primal, r.dual, r.bilinear, r.wall, r.participants, r.max_lag
             );
         }
         out
+    }
+}
+
+/// Per-solve accounting of the asynchronous coordination protocol: how
+/// often each node's reply made it into a global update, how stale the
+/// folded replies were, and how much membership churn the run saw.
+/// Produced by `coordinator::AsyncCluster`; `None` for synchronous
+/// clusters.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinationStats {
+    /// Outer rounds the scheduler started.
+    pub rounds: u64,
+    /// Histogram of reply staleness at fold time: `staleness_hist[l]` is
+    /// the number of folded replies that were `l` rounds old.
+    pub staleness_hist: Vec<u64>,
+    /// Per-node count of replies folded into a global update.
+    pub participation: Vec<u64>,
+    /// Replies discarded for exceeding the staleness bound.
+    pub drops: u64,
+    /// Resync broadcasts (fresh z pushed to a lagging or joining node).
+    pub resyncs: u64,
+    /// Nodes declared dead (shard degraded).
+    pub deaths: u64,
+    /// Nodes that joined after construction.
+    pub joins: u64,
+}
+
+impl CoordinationStats {
+    pub fn new(nodes: usize) -> CoordinationStats {
+        CoordinationStats {
+            participation: vec![0; nodes],
+            ..Default::default()
+        }
+    }
+
+    /// Record a reply from `node` folded with staleness `lag`.
+    pub fn record_fold(&mut self, node: usize, lag: usize) {
+        if self.staleness_hist.len() <= lag {
+            self.staleness_hist.resize(lag + 1, 0);
+        }
+        self.staleness_hist[lag] += 1;
+        if self.participation.len() <= node {
+            self.participation.resize(node + 1, 0);
+        }
+        self.participation[node] += 1;
+    }
+
+    /// Fraction of folded replies that were perfectly fresh (lag 0).
+    pub fn fresh_fraction(&self) -> f64 {
+        let total: u64 = self.staleness_hist.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        self.staleness_hist.first().copied().unwrap_or(0) as f64 / total as f64
+    }
+
+    /// One-line human summary for the CLI and harness logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "rounds {} | staleness hist {:?} | participation {:?} | drops {} resyncs {} deaths {} joins {}",
+            self.rounds,
+            self.staleness_hist,
+            self.participation,
+            self.drops,
+            self.resyncs,
+            self.deaths,
+            self.joins
+        )
     }
 }
 
@@ -203,10 +282,39 @@ mod tests {
             dual: 2.0,
             bilinear: 3.0,
             wall: 0.1,
+            participants: 4,
+            max_lag: 1,
         });
         let csv = t.to_csv();
-        assert!(csv.starts_with("iter,primal,dual,bilinear,wall\n"));
+        assert!(csv.starts_with("iter,primal,dual,bilinear,wall,participants,max_lag\n"));
         assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().ends_with(",4,1"));
+    }
+
+    #[test]
+    fn coordination_stats_histogram_and_participation() {
+        let mut s = CoordinationStats::new(3);
+        s.record_fold(0, 0);
+        s.record_fold(1, 0);
+        s.record_fold(1, 2);
+        assert_eq!(s.staleness_hist, vec![2, 0, 1]);
+        assert_eq!(s.participation, vec![1, 2, 0]);
+        assert!((s.fresh_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        // folding from a node beyond the initial roster grows the table
+        s.record_fold(5, 1);
+        assert_eq!(s.participation.len(), 6);
+        assert!(s.summary().contains("drops 0"));
+    }
+
+    #[test]
+    fn resync_bytes_merge_separately() {
+        let mut a = TransferLedger::default();
+        a.net_down_bytes = 100;
+        let mut b = TransferLedger::default();
+        b.net_resync_bytes = 40;
+        a.merge(&b);
+        assert_eq!(a.net_down_bytes, 100);
+        assert_eq!(a.net_resync_bytes, 40);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!   * [`SequentialCluster`] — in-process loop (deterministic; tests)
 //!   * [`ThreadedCluster`]   — one OS thread per node with channel-based
 //!     Bcast/Collect, the MPI stand-in used by the benchmarks
+//!   * [`crate::coordinator::AsyncCluster`] — partial-barrier rounds with
+//!     bounded staleness, elastic membership, and fault injection
 //!
 //! The byte ledger records exactly the paper's protocol volume per round:
 //! coordinator -> node: z (dim f64); node -> coordinator: x_i and u_i
@@ -15,10 +17,11 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::admm::LocalProx;
 use crate::backend::BlockParams;
-use crate::metrics::TransferLedger;
+use crate::metrics::{CoordinationStats, TransferLedger};
 
 /// One computational node's full state for the outer loop.
 pub struct NodeWorker {
@@ -77,18 +80,34 @@ impl NodeWorker {
 /// Reply from one node's round.
 pub struct NodeReply {
     pub node: usize,
+    /// Coordinator round the reply's `z` belonged to.  Synchronous
+    /// clusters always tag the current round; the async coordinator may
+    /// return cached replies lagging by up to its staleness bound.
+    pub round: usize,
+    /// Staleness in rounds, as judged by the cluster that produced the
+    /// snapshot (always 0 for synchronous clusters).
+    pub lag: usize,
     pub x: Vec<f64>,
     pub u: Vec<f64>,
 }
 
 pub trait Cluster {
+    /// Total roster size (including degraded members, for threshold
+    /// scaling — the solver weights its averages by actual replies).
     fn nodes(&self) -> usize;
-    /// Broadcast z, run every node's round, gather replies (sorted by node).
-    fn round(&mut self, z: &[f64]) -> Vec<NodeReply>;
+    /// Broadcast z, run a coordination round, gather replies (sorted by
+    /// node).  Node failure is an error value, not a process abort; the
+    /// async coordinator degrades the dead shard and keeps going, so it
+    /// only errors when no quorum is reachable at all.
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>>;
     /// Sum of local loss values at the current iterates (reporting).
-    fn loss_value(&mut self) -> f64;
-    /// Merged transfer + network ledger.
+    fn loss_value(&mut self) -> anyhow::Result<f64>;
+    /// Merged transfer + network ledger (best-effort over live nodes).
     fn ledger(&mut self) -> TransferLedger;
+    /// Async-protocol accounting, if this cluster keeps any.
+    fn coordination(&self) -> Option<CoordinationStats> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -99,6 +118,7 @@ pub struct SequentialCluster {
     workers: Vec<NodeWorker>,
     net: TransferLedger,
     dim: usize,
+    round: usize,
 }
 
 impl SequentialCluster {
@@ -107,6 +127,7 @@ impl SequentialCluster {
             workers,
             net: TransferLedger::default(),
             dim,
+            round: 0,
         }
     }
 }
@@ -116,20 +137,28 @@ impl Cluster for SequentialCluster {
         self.workers.len()
     }
 
-    fn round(&mut self, z: &[f64]) -> Vec<NodeReply> {
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
         let bytes = self.dim as u64 * 8;
+        let round = self.round;
+        self.round += 1;
         let mut replies = Vec::with_capacity(self.workers.len());
         for w in self.workers.iter_mut() {
             self.net.net_down_bytes += bytes;
             let (x, u) = w.round(z);
             self.net.net_up_bytes += 2 * bytes;
-            replies.push(NodeReply { node: w.id, x, u });
+            replies.push(NodeReply {
+                node: w.id,
+                round,
+                lag: 0,
+                x,
+                u,
+            });
         }
-        replies
+        Ok(replies)
     }
 
-    fn loss_value(&mut self) -> f64 {
-        self.workers.iter_mut().map(|w| w.loss_value()).sum()
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        Ok(self.workers.iter_mut().map(|w| w.loss_value()).sum())
     }
 
     fn ledger(&mut self) -> TransferLedger {
@@ -164,6 +193,7 @@ pub struct ThreadedCluster {
     net: TransferLedger,
     dim: usize,
     n: usize,
+    round: usize,
 }
 
 impl ThreadedCluster {
@@ -181,7 +211,14 @@ impl ThreadedCluster {
                     let reply = match cmd {
                         Command::Round(z) => {
                             let (x, u) = w.round(&z);
-                            Reply::Round(NodeReply { node: w.id, x, u })
+                            // the coordinator stamps the round tag on receipt
+                            Reply::Round(NodeReply {
+                                node: w.id,
+                                round: 0,
+                                lag: 0,
+                                x,
+                                u,
+                            })
                         }
                         Command::Loss => Reply::Loss(w.loss_value()),
                         Command::Ledger => Reply::Ledger(w.ledger()),
@@ -199,6 +236,7 @@ impl ThreadedCluster {
             net: TransferLedger::default(),
             dim,
             n,
+            round: 0,
         }
     }
 }
@@ -208,47 +246,65 @@ impl Cluster for ThreadedCluster {
         self.n
     }
 
-    fn round(&mut self, z: &[f64]) -> Vec<NodeReply> {
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
         let payload = Arc::new(z.to_vec());
         let bytes = self.dim as u64 * 8;
-        for tx in &self.senders {
+        let round = self.round;
+        self.round += 1;
+        for (i, tx) in self.senders.iter().enumerate() {
+            if tx.send(Command::Round(payload.clone())).is_err() {
+                anyhow::bail!("node {i} died before the round-{round} broadcast");
+            }
             self.net.net_down_bytes += bytes;
-            tx.send(Command::Round(payload.clone())).expect("node died");
         }
-        let mut replies: Vec<NodeReply> = (0..self.n)
-            .map(|_| match self.replies.recv().expect("node died") {
-                Reply::Round(r) => {
+        let mut replies = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            match self.replies.recv() {
+                Ok(Reply::Round(mut r)) => {
                     self.net.net_up_bytes += 2 * bytes;
-                    r
+                    r.round = round;
+                    replies.push(r);
                 }
-                _ => unreachable!("protocol violation"),
-            })
-            .collect();
+                Ok(_) => anyhow::bail!("protocol violation: non-round reply in round {round}"),
+                Err(_) => anyhow::bail!("a node worker died during round {round}"),
+            }
+        }
         replies.sort_by_key(|r| r.node);
-        replies
+        Ok(replies)
     }
 
-    fn loss_value(&mut self) -> f64 {
-        for tx in &self.senders {
-            tx.send(Command::Loss).expect("node died");
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        for (i, tx) in self.senders.iter().enumerate() {
+            if tx.send(Command::Loss).is_err() {
+                anyhow::bail!("node {i} died before the loss query");
+            }
         }
-        (0..self.n)
-            .map(|_| match self.replies.recv().expect("node died") {
-                Reply::Loss(v) => v,
-                _ => unreachable!("protocol violation"),
-            })
-            .sum()
+        let mut total = 0.0;
+        for _ in 0..self.n {
+            match self.replies.recv() {
+                Ok(Reply::Loss(v)) => total += v,
+                Ok(_) => anyhow::bail!("protocol violation: non-loss reply to loss query"),
+                Err(_) => anyhow::bail!("a node worker died during the loss query"),
+            }
+        }
+        Ok(total)
     }
 
     fn ledger(&mut self) -> TransferLedger {
+        // Best-effort: skip dead nodes so a degraded cluster still reports
+        // the traffic it actually observed.
         let mut total = self.net.clone();
+        let mut expected = 0;
         for tx in &self.senders {
-            tx.send(Command::Ledger).expect("node died");
+            if tx.send(Command::Ledger).is_ok() {
+                expected += 1;
+            }
         }
-        for _ in 0..self.n {
-            match self.replies.recv().expect("node died") {
-                Reply::Ledger(l) => total.merge(&l),
-                _ => unreachable!("protocol violation"),
+        for _ in 0..expected {
+            match self.replies.recv_timeout(Duration::from_secs(10)) {
+                Ok(Reply::Ledger(l)) => total.merge(&l),
+                Ok(_) => continue,
+                Err(_) => break,
             }
         }
         total
@@ -298,11 +354,13 @@ mod tests {
         let mut seq = SequentialCluster::new(w1, dim);
         let mut thr = ThreadedCluster::new(w2, dim);
         let z = vec![0.05; dim];
-        for _ in 0..3 {
-            let a = seq.round(&z);
-            let b = thr.round(&z);
+        for k in 0..3 {
+            let a = seq.round(&z).unwrap();
+            let b = thr.round(&z).unwrap();
             for (ra, rb) in a.iter().zip(&b) {
                 assert_eq!(ra.node, rb.node);
+                assert_eq!(ra.round, k);
+                assert_eq!(rb.round, k);
                 for (x, y) in ra.x.iter().zip(&rb.x) {
                     assert!((x - y).abs() < 1e-12, "{x} vs {y}");
                 }
@@ -311,7 +369,7 @@ mod tests {
                 }
             }
         }
-        assert!((seq.loss_value() - thr.loss_value()).abs() < 1e-9);
+        assert!((seq.loss_value().unwrap() - thr.loss_value().unwrap()).abs() < 1e-9);
     }
 
     #[test]
@@ -319,8 +377,8 @@ mod tests {
         let (w, dim) = make_workers(2);
         let mut seq = SequentialCluster::new(w, dim);
         let z = vec![0.0; dim];
-        seq.round(&z);
-        seq.round(&z);
+        seq.round(&z).unwrap();
+        seq.round(&z).unwrap();
         let l = seq.ledger();
         // 2 rounds x 2 nodes x dim x 8 bytes down; twice that up
         assert_eq!(l.net_down_bytes, 2 * 2 * dim as u64 * 8);

@@ -1,0 +1,164 @@
+//! Coordinator-subsystem integration tests: the sync-parity guardrail,
+//! crash recovery on the quorum, and the straggler wall-clock win.
+
+use psfit::admm::{self, SolveOptions};
+use psfit::config::{Config, CoordinationKind, CoordinatorConfig};
+use psfit::coordinator::{AsyncCluster, FaultSpec};
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::harness::straggler::{run_point, StragglerOpts};
+use psfit::network::SequentialCluster;
+use psfit::sparsity::support_f1;
+
+fn regression_fixture(nodes: usize) -> (psfit::data::Dataset, Config) {
+    let mut spec = SyntheticSpec::regression(40, 480, nodes);
+    spec.sparsity_level = 0.9;
+    spec.noise_std = 0.02;
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = nodes;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.solver.max_iters = 250;
+    (ds, cfg)
+}
+
+fn full_barrier(heartbeat_ms: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        coordination: CoordinationKind::Async,
+        quorum: 1.0,
+        max_staleness: 0,
+        heartbeat_ms,
+        faults: FaultSpec::default(),
+    }
+}
+
+/// Acceptance guardrail: AsyncCluster(quorum = 1.0, staleness = 0) must
+/// reproduce SequentialCluster bit-for-bit on a multi-node fit.
+#[test]
+fn async_full_barrier_matches_sequential_bit_for_bit() {
+    let (ds, cfg) = regression_fixture(3);
+    let dim = ds.n_features * ds.width;
+    let opts = SolveOptions::default();
+
+    let mut seq = SequentialCluster::new(driver::build_workers(&ds, &cfg).unwrap(), dim);
+    let res_sync = admm::solve(&mut seq, dim, &cfg, Some(&ds), &opts).unwrap();
+
+    let ccfg = full_barrier(25);
+    let mut asy = AsyncCluster::new(driver::build_workers(&ds, &cfg).unwrap(), dim, &ccfg);
+    let res_async = admm::solve(&mut asy, dim, &cfg, Some(&ds), &opts).unwrap();
+
+    assert_eq!(res_sync.iters, res_async.iters, "termination must agree");
+    assert_eq!(res_sync.converged, res_async.converged);
+    assert_eq!(res_sync.z, res_async.z, "consensus iterate must be bit-identical");
+    assert_eq!(res_sync.x, res_async.x, "extracted solution must be bit-identical");
+    assert_eq!(res_sync.support, res_async.support);
+    for (a, b) in res_sync.trace.records.iter().zip(&res_async.trace.records) {
+        assert_eq!(a.primal, b.primal, "iter {}: primal residual drifted", a.iter);
+        assert_eq!(a.dual, b.dual);
+        assert_eq!(a.bilinear, b.bilinear);
+        assert_eq!(b.participants, 3);
+        assert_eq!(b.max_lag, 0, "full barrier must never fold stale replies");
+    }
+    // identical protocol volume, and strictly zero resync traffic
+    assert_eq!(
+        res_sync.transfers.net_down_bytes,
+        res_async.transfers.net_down_bytes
+    );
+    assert_eq!(
+        res_sync.transfers.net_up_bytes,
+        res_async.transfers.net_up_bytes
+    );
+    assert_eq!(res_async.transfers.net_resync_bytes, 0);
+    let stats = res_async.coordination.expect("async run must report stats");
+    assert_eq!(stats.rounds as usize, res_async.iters);
+    assert_eq!(stats.drops, 0);
+    assert_eq!(stats.deaths, 0);
+}
+
+/// Acceptance: a node dies mid-solve and the fit still converges on the
+/// quorum, with the dead shard marked degraded.
+#[test]
+fn crash_mid_solve_converges_on_the_quorum() {
+    let (ds, mut cfg) = regression_fixture(3);
+    cfg.solver.max_iters = 400;
+    cfg.coordinator.coordination = CoordinationKind::Async;
+    cfg.coordinator.quorum = 0.6;
+    cfg.coordinator.max_staleness = 1;
+    cfg.coordinator.heartbeat_ms = 10;
+    cfg.coordinator.faults = FaultSpec::default().crash(1, 4);
+
+    let dim = ds.n_features * ds.width;
+    let workers = driver::build_workers(&ds, &cfg).unwrap();
+    let mut cluster = AsyncCluster::new(workers, dim, &cfg.coordinator);
+    let res = admm::solve(&mut cluster, dim, &cfg, Some(&ds), &SolveOptions::default()).unwrap();
+
+    assert!(
+        res.converged,
+        "must converge on the surviving quorum ({} iters)",
+        res.iters
+    );
+    assert_eq!(cluster.degraded(), vec![1], "crashed shard must be degraded");
+    let stats = res.coordination.unwrap();
+    assert_eq!(stats.deaths, 1);
+    // the survivors' data still pins most of the planted support
+    let f1 = support_f1(&res.support, &ds.support_true);
+    assert!(f1 > 0.6, "support recovery collapsed after the crash: f1 = {f1}");
+    // late rounds must run on the 2-node quorum
+    let last = res.trace.last().unwrap();
+    assert_eq!(last.participants, 2);
+}
+
+/// Acceptance: under a 16x slow node, async rounds finish in less
+/// wall-clock than the full barrier (same fault model, same horizon).
+#[test]
+fn async_beats_full_barrier_under_a_16x_straggler() {
+    let opts = StragglerOpts {
+        iters: 8,
+        base_ms: 4.0,
+        ..Default::default()
+    };
+    let sync = run_point(&opts, 16, 1.0, 0).unwrap();
+    let asy = run_point(&opts, 16, opts.quorum, opts.max_staleness).unwrap();
+    // the barrier pays the straggler's 60 ms every round (>= 0.4 s over 8
+    // rounds); the partial barrier proceeds on the two fast nodes
+    assert!(
+        sync.wall_seconds > 0.2,
+        "sync run too fast ({:.3} s) — straggler delay not injected?",
+        sync.wall_seconds
+    );
+    assert!(
+        asy.wall_seconds * 2.0 < sync.wall_seconds,
+        "async ({:.3} s) must be well under sync ({:.3} s) with a 16x straggler",
+        asy.wall_seconds,
+        sync.wall_seconds
+    );
+    // both ran the same fixed horizon
+    assert_eq!(sync.stats.rounds, 8);
+    assert_eq!(asy.stats.rounds, 8);
+}
+
+/// A milder straggler exercises the fold/resync machinery itself: late
+/// replies within the bound are folded, deeper ones dropped and resynced.
+#[test]
+fn straggler_replies_fold_within_the_staleness_bound() {
+    let opts = StragglerOpts {
+        iters: 30,
+        base_ms: 2.0,
+        quorum: 0.5,
+        max_staleness: 2,
+        ..Default::default()
+    };
+    let p = run_point(&opts, 2, opts.quorum, opts.max_staleness).unwrap();
+    let folded: u64 = p.stats.staleness_hist.iter().sum();
+    assert!(folded > 0, "no replies folded at all");
+    let straggler_folds = p.stats.participation.first().copied().unwrap_or(0);
+    let stale_or_dropped = p.stats.staleness_hist.iter().skip(1).sum::<u64>() + p.stats.drops;
+    assert!(
+        straggler_folds > 0 || stale_or_dropped > 0 || p.stats.resyncs > 0,
+        "a 2x straggler over 30 rounds should surface in the protocol stats: {}",
+        p.stats.summary()
+    );
+    assert_eq!(p.stats.deaths, 0, "a slow node is not a dead node");
+}

@@ -167,10 +167,12 @@ fn trace_csv_is_well_formed() {
     let res = driver::fit(&ds, &cfg).unwrap();
     let csv = res.trace.to_csv();
     let lines: Vec<&str> = csv.lines().collect();
-    assert_eq!(lines[0], "iter,primal,dual,bilinear,wall");
+    assert_eq!(lines[0], "iter,primal,dual,bilinear,wall,participants,max_lag");
     assert_eq!(lines.len(), 11); // header + 10 iterations
     for line in &lines[1..] {
-        assert_eq!(line.split(',').count(), 5);
+        assert_eq!(line.split(',').count(), 7);
+        // synchronous coordination: every node participates, nothing stale
+        assert!(line.ends_with(",2,0"), "unexpected row: {line}");
     }
 }
 

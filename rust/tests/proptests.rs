@@ -304,8 +304,8 @@ fn prop_threaded_cluster_equals_sequential() {
             let mut thr = ThreadedCluster::new(build(), n);
             let z = randvec(rng, n, 0.5);
             for _ in 0..2 {
-                let a = seq.round(&z);
-                let b = thr.round(&z);
+                let a = seq.round(&z).map_err(|e| e.to_string())?;
+                let b = thr.round(&z).map_err(|e| e.to_string())?;
                 for (ra, rb) in a.iter().zip(&b) {
                     if ra.node != rb.node {
                         return Err("reply order".into());

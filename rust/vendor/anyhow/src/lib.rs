@@ -1,0 +1,121 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io), so this crate
+//! implements exactly the subset of anyhow's API that psfit uses: a
+//! string-backed [`Error`], the [`Result`] alias, and the `anyhow!` /
+//! `bail!` / `ensure!` macros.  Like the real anyhow, [`Error`] does NOT
+//! implement `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! concrete error type) possible without overlapping impls.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message (anyhow's dynamic error value,
+/// reduced to its Display form — nothing in psfit downcasts).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> crate::Result<u32> {
+            let v: u32 = "12".parse()?;
+            Ok(v)
+        }
+        assert_eq!(inner().unwrap(), 12);
+
+        fn bad() -> crate::Result<u32> {
+            let v: u32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(bad().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let name = "x";
+        let e = crate::anyhow!("missing `{name}` ({})", 7);
+        assert_eq!(e.to_string(), "missing `x` (7)");
+
+        fn guard(ok: bool) -> crate::Result<()> {
+            crate::ensure!(ok, "flag was {ok}");
+            Ok(())
+        }
+        assert!(guard(true).is_ok());
+        assert_eq!(guard(false).unwrap_err().to_string(), "flag was false");
+
+        fn never() -> crate::Result<()> {
+            crate::bail!("nope");
+        }
+        assert_eq!(never().unwrap_err().to_string(), "nope");
+    }
+}

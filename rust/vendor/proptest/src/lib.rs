@@ -1,0 +1,8 @@
+//! Offline stand-in for the `proptest` crate.
+//!
+//! The real proptest is unavailable in the offline build environment;
+//! psfit's property tests (`rust/tests/proptests.rs`) run on the
+//! self-contained seeded runner in `psfit::util::testkit` instead.  This
+//! crate exists so the manifest can declare the dependency the test suite
+//! is written against without reaching the network; it intentionally
+//! exports nothing.
