@@ -30,7 +30,7 @@ fn split_holdout(ds: &Dataset, every: usize) -> (Dataset, Dataset) {
                     labels.extend_from_slice(&s.labels[r * s.width..(r + 1) * s.width]);
                 }
                 Shard {
-                    a,
+                    a: std::sync::Arc::new(a),
                     labels,
                     width: s.width,
                 }

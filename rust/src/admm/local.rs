@@ -12,9 +12,11 @@
 //!   6. nu += w_bar - omega_bar
 //!
 //! All inner state (x_j, pred_j, omega_bar, nu) is warm-started across
-//! outer iterations.  Multiclass (softmax) runs the block math per class
-//! column against the same Gram operator; only the omega prox couples
-//! classes.
+//! outer iterations.  Step 3 goes through `NodeBackend::block_sweep`: the
+//! correction is frozen once per sweep, so the block updates are
+//! Jacobi-independent and the native backend runs them on its worker pool
+//! (multiclass batches all class columns per block as one multi-RHS
+//! solve; only the omega prox couples classes).
 
 use crate::backend::{BlockParams, NodeBackend};
 use crate::data::FeaturePlan;
@@ -33,13 +35,19 @@ pub struct LocalProx {
     omega: Vec<f32>,
     /// nu (scaled inner dual), class-major (width x m).
     nu: Vec<f32>,
-    // scratch
+    // scratch (allocated once, reused across solve calls)
     wbar: Vec<f32>,
     corr: Vec<f32>,
+    /// Frozen sweep correction `omega - wbar - nu`, class-major (width, m).
+    corr_cm: Vec<f32>,
     rowmaj_c: Vec<f32>,
     rowmaj_o: Vec<f32>,
-    z_slice: Vec<f32>,
-    u_slice: Vec<f32>,
+    /// Per-block consensus slices, class-major (width, bw_j).
+    z_blocks: Vec<Vec<f32>>,
+    u_blocks: Vec<Vec<f32>>,
+    /// Row-major prediction buffer for `prediction_rowmajor`/`loss_value`
+    /// (interior mutability so reporting stays `&self`).
+    pred_scratch: std::cell::RefCell<Vec<f32>>,
 }
 
 impl LocalProx {
@@ -53,6 +61,11 @@ impl LocalProx {
             .map(|&(_, w)| vec![0.0f32; w * width])
             .collect();
         let preds = (0..blocks).map(|_| vec![0.0f32; m * width]).collect();
+        let z_blocks: Vec<Vec<f32>> = plan
+            .ranges
+            .iter()
+            .map(|&(_, w)| vec![0.0f32; w * width])
+            .collect();
         LocalProx {
             backend,
             plan,
@@ -64,10 +77,12 @@ impl LocalProx {
             nu: vec![0.0; m * width],
             wbar: vec![0.0; m * width],
             corr: vec![0.0; m],
+            corr_cm: vec![0.0; m * width],
             rowmaj_c: Vec::new(),
             rowmaj_o: Vec::new(),
-            z_slice: Vec::new(),
-            u_slice: Vec::new(),
+            u_blocks: z_blocks.clone(),
+            z_blocks,
+            pred_scratch: std::cell::RefCell::new(Vec::new()),
         }
     }
 
@@ -109,67 +124,61 @@ impl LocalProx {
         let m = self.m;
         let m_blocks = self.backend.blocks() as f64;
 
-        // ---- fused backend path (one artifact call per outer iteration) --
-        if width == 1 {
-            let mut z_blocks = Vec::with_capacity(self.plan.blocks);
-            let mut u_blocks = Vec::with_capacity(self.plan.blocks);
-            for &(start, bw) in &self.plan.ranges {
-                z_blocks.push(z[start..start + bw].iter().map(|&v| v as f32).collect());
-                u_blocks.push(u[start..start + bw].iter().map(|&v| v as f32).collect());
+        // gather per-block consensus slices once per solve (z and u are
+        // fixed for every sweep) into the reusable class-major scratch
+        for (j, &(start, bw)) in self.plan.ranges.iter().enumerate() {
+            for c in 0..width {
+                for i in 0..bw {
+                    self.z_blocks[j][c * bw + i] = z[c * n + start + i] as f32;
+                    self.u_blocks[j][c * bw + i] = u[c * n + start + i] as f32;
+                }
             }
-            if self.backend.node_sweep(
+        }
+
+        // ---- fused backend path (one artifact call per outer iteration) --
+        if width == 1
+            && self.backend.node_sweep(
                 params,
                 sweeps,
-                &z_blocks,
-                &u_blocks,
+                &self.z_blocks,
+                &self.u_blocks,
                 &mut self.x_blocks,
                 &mut self.preds,
                 &mut self.omega,
                 &mut self.nu,
-            ) {
-                for j in 0..self.plan.blocks {
-                    let (start, bw) = self.plan.ranges[j];
-                    for i in 0..bw {
-                        x_out[start + i] = self.x_blocks[j][i] as f64;
-                    }
+            )
+        {
+            for j in 0..self.plan.blocks {
+                let (start, bw) = self.plan.ranges[j];
+                for i in 0..bw {
+                    x_out[start + i] = self.x_blocks[j][i] as f64;
                 }
-                return;
             }
+            return;
         }
 
         for _ in 0..sweeps {
             // 1. AllReduce: w_bar = mean_j pred_j (over old predictions)
             self.compute_wbar();
 
-            // 2-3. block steps per class column
-            for j in 0..self.plan.blocks {
-                let (start, bw) = self.plan.ranges[j];
-                for c in 0..width {
-                    // corr_c = omega[c] - wbar[c] - nu[c]
-                    for i in 0..m {
-                        self.corr[i] =
-                            self.omega[c * m + i] - self.wbar[c * m + i] - self.nu[c * m + i];
-                    }
-                    // gather z, u slices for this (class, block)
-                    self.z_slice.clear();
-                    self.u_slice.clear();
-                    for i in 0..bw {
-                        self.z_slice.push(z[c * n + start + i] as f32);
-                        self.u_slice.push(u[c * n + start + i] as f32);
-                    }
-                    let x_j = &mut self.x_blocks[j][c * bw..(c + 1) * bw];
-                    let pred_j = &mut self.preds[j][c * m..(c + 1) * m];
-                    self.backend.block_step(
-                        j,
-                        params,
-                        &self.corr,
-                        &self.z_slice,
-                        &self.u_slice,
-                        x_j,
-                        pred_j,
-                    );
-                }
+            // 2. corr = omega - wbar - nu: one frozen snapshot for the
+            //    whole sweep — this is what makes the block updates below
+            //    Jacobi-independent (order-free, safe to run in parallel)
+            for i in 0..m * width {
+                self.corr_cm[i] = self.omega[i] - self.wbar[i] - self.nu[i];
             }
+
+            // 3. all blocks, all class columns — batched (and, on the
+            //    native backend, pooled across worker threads)
+            self.backend.block_sweep(
+                params,
+                width,
+                &self.corr_cm,
+                &self.z_blocks,
+                &self.u_blocks,
+                &mut self.x_blocks,
+                &mut self.preds,
+            );
 
             // 4. recompute w_bar with fresh predictions
             self.compute_wbar();
@@ -221,12 +230,12 @@ impl LocalProx {
         }
     }
 
-    /// Current total prediction (sum over blocks), row-major (m, width) —
-    /// for objective reporting.
-    pub fn prediction_rowmajor(&mut self) -> Vec<f32> {
+    /// Sum the per-block predictions into `sum`, row-major (m, width).
+    fn prediction_into(&self, sum: &mut Vec<f32>) {
         let m = self.m;
         let width = self.width;
-        let mut sum = vec![0.0f32; m * width];
+        sum.resize(m * width, 0.0);
+        sum.fill(0.0);
         for p in &self.preds {
             for c in 0..width {
                 for i in 0..m {
@@ -234,12 +243,24 @@ impl LocalProx {
                 }
             }
         }
+    }
+
+    /// Current total prediction (sum over blocks), row-major (m, width) —
+    /// for objective reporting.  Reporting never mutates solver state, so
+    /// the receiver is `&self`.
+    pub fn prediction_rowmajor(&self) -> Vec<f32> {
+        let mut sum = Vec::new();
+        self.prediction_into(&mut sum);
         sum
     }
 
-    pub fn loss_value(&mut self) -> f64 {
-        let pred = self.prediction_rowmajor();
-        self.backend.loss_value(&pred)
+    /// Training loss at the current prediction.  This is the call the
+    /// solver repeats every round, so it reuses an interior scratch buffer
+    /// instead of allocating (the borrow never escapes this method).
+    pub fn loss_value(&self) -> f64 {
+        let mut scratch = self.pred_scratch.borrow_mut();
+        self.prediction_into(&mut scratch);
+        self.backend.loss_value(&scratch)
     }
 
     pub fn ledger(&self) -> crate::metrics::TransferLedger {

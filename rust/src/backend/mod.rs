@@ -57,6 +57,53 @@ pub trait NodeBackend: Send {
         pred_j: &mut [f32],
     );
 
+    /// Step 3 of the inner sweep for ALL feature blocks and class columns
+    /// in one call: per (block j, class c) run the x-update (Eq. 23) and
+    /// the prediction refresh `pred_j = A_j x_j`.
+    ///
+    /// Layouts (all class-major):
+    /// * `corr` — `(width, m)`: the frozen correction `omega - w_bar - nu`
+    /// * `z_blocks[j]` / `u_blocks[j]` — `(width, bw_j)` consensus slices
+    /// * `x_blocks[j]` — `(width, bw_j)` warm-start in / solution out
+    /// * `preds[j]` — `(width, m)` prediction out
+    ///
+    /// Blocks are Jacobi-independent within a sweep (Deng et al.,
+    /// arXiv:1312.3040): every input is a snapshot taken before the sweep,
+    /// so block updates commute.  Overrides may therefore batch class
+    /// columns (multi-RHS) or run blocks concurrently, but MUST keep each
+    /// block's result independent of execution order.  The default loops
+    /// serially over blocks then classes via [`NodeBackend::block_step`] —
+    /// exactly the historical iteration order.
+    fn block_sweep(
+        &mut self,
+        params: BlockParams,
+        width: usize,
+        corr: &[f32],
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+    ) {
+        let m = self.samples();
+        debug_assert_eq!(corr.len(), width * m);
+        for j in 0..self.blocks() {
+            let bw = self.block_width(j);
+            for c in 0..width {
+                let x_j = &mut x_blocks[j][c * bw..(c + 1) * bw];
+                let pred_j = &mut preds[j][c * m..(c + 1) * m];
+                self.block_step(
+                    j,
+                    params,
+                    &corr[c * m..(c + 1) * m],
+                    &z_blocks[j][c * bw..(c + 1) * bw],
+                    &u_blocks[j][c * bw..(c + 1) * bw],
+                    x_j,
+                    pred_j,
+                );
+            }
+        }
+    }
+
     /// Separable omega-bar prox (Eq. 21) against this node's labels.
     /// `c` and `out` are row-major (m, width).
     fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]);

@@ -1,19 +1,41 @@
 //! Native Rust backend — the paper's "CPU backend".
 //!
 //! Per feature block it caches the Gram matrix `G_j = A_j^T A_j` (f64) at
-//! construction; each `block_step` is then one `A_j^T corr` matvec over the
-//! raw data plus a coefficient-space solve.  Two solver modes:
+//! construction, computed **in place** from the shard through a
+//! stride-aware [`ColumnBlockView`] — no packed per-block copy (the bytes
+//! the old eager `column_block` packing would have cost are reported via
+//! `TransferLedger::host_copy_saved_bytes`).  Each block step is then one
+//! `A_j^T corr` kernel call over the shared shard plus a
+//! coefficient-space solve.  Two solver modes:
 //!
 //!   * `Cg { iters }` — identical iteration structure to the XLA artifact
 //!     (used by the parity tests and the honest CPU-vs-GPU comparison);
 //!   * `Direct`       — Cholesky of `rho_l G + reg I`, re-factored only
 //!     when the penalties change (ablation: direct vs iterative).
+//!
+//! The batched [`NodeBackend::block_sweep`] override is the hot path:
+//!
+//!   * independent feature blocks run concurrently on a
+//!     [`WorkerPool`] — the CPU analogue of the paper's per-GPU block
+//!     queues (`--threads` / `platform.threads`).  Each worker owns its
+//!     block's coefficients, predictions, and scratch; nothing else is
+//!     written, and the `w_bar` reduction happens in `admm::local` in
+//!     fixed block order, so solver output is bit-identical at any thread
+//!     count.
+//!   * multiclass solves batch all `width` class columns per block: one
+//!     `A_j^T C` multi-vector kernel call, one multi-RHS
+//!     Cholesky/CG solve, one `A_j X` prediction refresh — instead of
+//!     re-running the granular step per class column.
+
+use std::sync::Arc;
 
 use super::{BlockParams, NodeBackend};
 use crate::data::{FeaturePlan, Shard};
+use crate::linalg::kernels::{self, ColumnBlockView};
 use crate::linalg::{conjugate_gradient, Cholesky, Matrix};
 use crate::losses::Loss;
 use crate::metrics::TransferLedger;
+use crate::util::pool::WorkerPool;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SolveMode {
@@ -23,78 +45,199 @@ pub enum SolveMode {
     Direct,
 }
 
+/// Per-block f64 scratch, owned by the block so pooled workers never
+/// share buffers (and reused across sweeps — no per-call allocation).
+#[derive(Default)]
+struct Scratch {
+    /// A_j^T C for all class columns (class-major `(width, n_j)`), f32.
+    qt: Vec<f32>,
+    /// Right-hand sides, class-major `(width, n_j)`.
+    rhs: Vec<f64>,
+    /// Solutions (warm-started), class-major `(width, n_j)`.
+    x: Vec<f64>,
+}
+
 struct Block {
-    /// Packed column block of the shard (m x width_j).
-    a: Matrix,
-    /// Cached Gram (width_j x width_j), f64.
+    /// Column range `[start, start + width)` of the shard — the feature
+    /// block `A_j`, read in place through `ColumnBlockView`.
+    start: usize,
+    width: usize,
+    /// Cached Gram (width x width), f64.
     gram: Vec<f64>,
     /// Cached Cholesky of rho_l G + reg I (Direct mode only).
     chol: Option<Cholesky>,
     /// Penalties the factorization was built for.
     chol_params: Option<BlockParams>,
+    scratch: Scratch,
 }
 
 pub struct NativeBackend {
+    /// The node's full design matrix, shared with the dataset shard (Arc —
+    /// construction copies no feature data).
+    a: Arc<Matrix>,
     blocks: Vec<Block>,
     labels: Vec<f32>,
     loss: Box<dyn Loss>,
     mode: SolveMode,
     m: usize,
-    scratch: Scratch,
-}
-
-#[derive(Default)]
-struct Scratch {
-    q: Vec<f64>,
-    rhs: Vec<f64>,
-    x: Vec<f64>,
-    hv: Vec<f64>,
-    qf32: Vec<f32>,
+    pool: WorkerPool,
+    /// Bytes the eager per-block packing used to copy at construction.
+    inplace_saved_bytes: u64,
 }
 
 impl NativeBackend {
     pub fn new(shard: &Shard, plan: &FeaturePlan, loss: Box<dyn Loss>, mode: SolveMode) -> Self {
         assert_eq!(shard.width, loss.width(), "label width mismatch");
+        let a = shard.a.clone();
+        let mut saved = 0u64;
         let blocks = plan
             .ranges
             .iter()
             .map(|&(start, width)| {
-                let a = shard.a.column_block(start, width);
+                let view = a.column_block_view(start, width);
                 let mut gram32 = vec![0.0f32; width * width];
-                a.gram_accumulate(&mut gram32);
+                kernels::gram(&view, &mut gram32);
+                saved += (a.rows * width * std::mem::size_of::<f32>()) as u64;
                 Block {
-                    a,
+                    start,
+                    width,
                     gram: gram32.iter().map(|&v| v as f64).collect(),
                     chol: None,
                     chol_params: None,
+                    scratch: Scratch::default(),
                 }
             })
             .collect();
         NativeBackend {
+            m: a.rows,
+            a,
             blocks,
             labels: shard.labels.clone(),
             loss,
             mode,
-            m: shard.a.rows,
-            scratch: Scratch::default(),
+            pool: WorkerPool::new(1),
+            inplace_saved_bytes: saved,
         }
     }
 
-    fn ensure_chol(block: &mut Block, params: BlockParams) {
-        if block.chol_params == Some(params) && block.chol.is_some() {
-            return;
-        }
-        let n = block.a.cols;
-        let mut h = vec![0.0f64; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                h[i * n + j] = params.rho_l * block.gram[i * n + j];
-            }
-            h[i * n + i] += params.reg;
-        }
-        block.chol = Some(Cholesky::factor(&h, n).expect("block normal matrix is SPD"));
-        block.chol_params = Some(params);
+    /// Set the worker-pool width for the block sweep: `1` = serial
+    /// (default), `0` = all available cores.  Results are bit-identical
+    /// at any width (see `util::pool`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = WorkerPool::new(threads);
+        self
     }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+fn ensure_chol(block: &mut Block, params: BlockParams) {
+    if block.chol_params == Some(params) && block.chol.is_some() {
+        return;
+    }
+    let n = block.width;
+    let mut h = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            h[i * n + j] = params.rho_l * block.gram[i * n + j];
+        }
+        h[i * n + i] += params.reg;
+    }
+    block.chol = Some(Cholesky::factor(&h, n).expect("block normal matrix is SPD"));
+    block.chol_params = Some(params);
+}
+
+/// The block x-update (Eq. 23) + prediction refresh for all `width` class
+/// columns of one feature block, batched: one `A_j^T C` kernel call, one
+/// multi-RHS solve, one `A_j X` kernel call.  Shared verbatim by the
+/// granular `block_step` (`width == 1`) and the pooled `block_sweep`, so
+/// the two paths are bit-identical.
+fn solve_block(
+    a: &Matrix,
+    mode: SolveMode,
+    block: &mut Block,
+    params: BlockParams,
+    width: usize,
+    corr: &[f32],
+    z_j: &[f32],
+    u_j: &[f32],
+    x_j: &mut [f32],
+    pred_j: &mut [f32],
+) {
+    let n = block.width;
+    let m = a.rows;
+    debug_assert_eq!(corr.len(), width * m);
+    debug_assert_eq!(x_j.len(), width * n);
+    debug_assert_eq!(pred_j.len(), width * m);
+    let view = a.column_block_view(block.start, n);
+
+    if matches!(mode, SolveMode::Direct) {
+        ensure_chol(block, params);
+    }
+    let gram = &block.gram;
+    let chol = &block.chol;
+    let s = &mut block.scratch;
+    s.qt.resize(width * n, 0.0);
+    s.rhs.resize(width * n, 0.0);
+    s.x.resize(width * n, 0.0);
+
+    // Q = A_j^T C for all class columns at once (the data-touching op)
+    kernels::matmul_t(&view, corr, width, &mut s.qt);
+
+    // rhs_c = rho_l (G x_c + q_c) + rho_c (z_c - u_c); warm-start x_c
+    for c in 0..width {
+        let x_c = &x_j[c * n..(c + 1) * n];
+        for i in 0..n {
+            let row = &gram[i * n..(i + 1) * n];
+            let mut gx = 0.0f64;
+            for (g, &xv) in row.iter().zip(x_c) {
+                gx += g * xv as f64;
+            }
+            s.rhs[c * n + i] = params.rho_l * (gx + s.qt[c * n + i] as f64)
+                + params.rho_c * (z_j[c * n + i] as f64 - u_j[c * n + i] as f64);
+            s.x[c * n + i] = x_c[i] as f64; // warm start
+        }
+    }
+
+    match mode {
+        SolveMode::Cg { iters } => {
+            // H v = rho_l G v + reg v — same operator as the artifact's CG
+            let rho_l = params.rho_l;
+            let reg = params.reg;
+            for c in 0..width {
+                let rhs_c = &s.rhs[c * n..(c + 1) * n];
+                let x_c = &mut s.x[c * n..(c + 1) * n];
+                conjugate_gradient(
+                    |v, out| {
+                        for i in 0..n {
+                            let row = &gram[i * n..(i + 1) * n];
+                            let mut acc = 0.0;
+                            for (g, &vv) in row.iter().zip(v) {
+                                acc += g * vv;
+                            }
+                            out[i] = rho_l * acc + reg * v[i];
+                        }
+                    },
+                    rhs_c,
+                    x_c,
+                    iters,
+                    0.0, // fixed-iteration, matching the artifact
+                );
+            }
+        }
+        SolveMode::Direct => {
+            s.x.copy_from_slice(&s.rhs);
+            chol.as_ref().unwrap().solve_multi(&mut s.x, width);
+        }
+    }
+
+    for (o, &v) in x_j.iter_mut().zip(s.x.iter()) {
+        *o = v as f32;
+    }
+    // pred_j = A_j X for all class columns
+    kernels::matmul(&view, x_j, width, pred_j);
 }
 
 impl NodeBackend for NativeBackend {
@@ -107,7 +250,7 @@ impl NodeBackend for NativeBackend {
     }
 
     fn block_width(&self, j: usize) -> usize {
-        self.blocks[j].a.cols
+        self.blocks[j].width
     }
 
     fn block_step(
@@ -120,76 +263,49 @@ impl NodeBackend for NativeBackend {
         x_j: &mut [f32],
         pred_j: &mut [f32],
     ) {
-        let block = &mut self.blocks[j];
-        let n = block.a.cols;
-        debug_assert_eq!(corr.len(), self.m);
-        debug_assert_eq!(x_j.len(), n);
-        debug_assert_eq!(pred_j.len(), self.m);
+        solve_block(
+            &self.a,
+            self.mode,
+            &mut self.blocks[j],
+            params,
+            1,
+            corr,
+            z_j,
+            u_j,
+            x_j,
+            pred_j,
+        );
+    }
 
-        let s = &mut self.scratch;
-        s.qf32.resize(n, 0.0);
-        s.q.resize(n, 0.0);
-        s.rhs.resize(n, 0.0);
-        s.x.resize(n, 0.0);
-        s.hv.resize(n, 0.0);
-
-        // q = A_j^T corr  (the data-touching op)
-        block.a.matvec_t(corr, &mut s.qf32);
-        for (qi, &v) in s.q.iter_mut().zip(&s.qf32) {
-            *qi = v as f64;
-        }
-
-        // rhs = rho_l (G x_prev + q) + rho_c (z - u)
-        let gram = &block.gram;
-        for i in 0..n {
-            let mut gx = 0.0f64;
-            let row = &gram[i * n..(i + 1) * n];
-            for (g, &xv) in row.iter().zip(x_j.iter()) {
-                gx += g * xv as f64;
-            }
-            s.rhs[i] = params.rho_l * (gx + s.q[i])
-                + params.rho_c * (z_j[i] as f64 - u_j[i] as f64);
-            s.x[i] = x_j[i] as f64; // warm start
-        }
-
-        match self.mode {
-            SolveMode::Cg { iters } => {
-                // H v = rho_l G v + reg v — same operator as the artifact's CG
-                let rho_l = params.rho_l;
-                let reg = params.reg;
-                let rhs = std::mem::take(&mut s.rhs);
-                let mut x = std::mem::take(&mut s.x);
-                conjugate_gradient(
-                    |v, out| {
-                        for i in 0..n {
-                            let row = &gram[i * n..(i + 1) * n];
-                            let mut acc = 0.0;
-                            for (g, &vv) in row.iter().zip(v) {
-                                acc += g * vv;
-                            }
-                            out[i] = rho_l * acc + reg * v[i];
-                        }
-                    },
-                    &rhs,
-                    &mut x,
-                    iters,
-                    0.0, // fixed-iteration, matching the artifact
-                );
-                s.rhs = rhs;
-                s.x = x;
-            }
-            SolveMode::Direct => {
-                Self::ensure_chol(block, params);
-                s.x.copy_from_slice(&s.rhs);
-                block.chol.as_ref().unwrap().solve(&mut s.x);
-            }
-        }
-
-        for (o, &v) in x_j.iter_mut().zip(s.x.iter()) {
-            *o = v as f32;
-        }
-        // pred_j = A_j x_j
-        block.a.matvec(x_j, pred_j);
+    /// Pooled Jacobi sweep: every feature block (with all its class
+    /// columns batched) is one job on the worker pool.  Disjoint writes
+    /// per job; the caller reduces `w_bar` in fixed order afterwards.
+    fn block_sweep(
+        &mut self,
+        params: BlockParams,
+        width: usize,
+        corr: &[f32],
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+    ) {
+        debug_assert_eq!(corr.len(), width * self.m);
+        let a = &self.a;
+        let mode = self.mode;
+        let jobs: Vec<_> = self
+            .blocks
+            .iter_mut()
+            .zip(x_blocks.iter_mut())
+            .zip(preds.iter_mut())
+            .zip(z_blocks.iter().zip(u_blocks))
+            .map(|(((block, x_j), pred_j), (z_j, u_j))| {
+                move || {
+                    solve_block(a, mode, block, params, width, corr, z_j, u_j, x_j, pred_j);
+                }
+            })
+            .collect();
+        self.pool.run(jobs);
     }
 
     fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]) {
@@ -201,7 +317,11 @@ impl NodeBackend for NativeBackend {
     }
 
     fn ledger(&self) -> TransferLedger {
-        TransferLedger::default() // no staging copies on the native path
+        // no staging copies on the native path — only the packing note
+        TransferLedger {
+            host_copy_saved_bytes: self.inplace_saved_bytes,
+            ..Default::default()
+        }
     }
 
     fn reset_ledger(&mut self) {}
@@ -210,27 +330,32 @@ impl NodeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{SyntheticSpec, FeaturePlan};
+    use crate::data::{FeaturePlan, SyntheticSpec};
     use crate::losses::Squared;
     use crate::util::rng::Rng;
 
-    fn setup(mode: SolveMode) -> (NativeBackend, FeaturePlan, usize) {
+    fn setup(mode: SolveMode) -> (NativeBackend, FeaturePlan, usize, Arc<Matrix>) {
         let ds = SyntheticSpec::regression(24, 60, 1).generate();
         let plan = FeaturePlan::new(24, 2, 512);
+        let a = ds.shards[0].a.clone();
         let be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
-        (be, plan, 60)
+        (be, plan, 60, a)
+    }
+
+    fn params() -> BlockParams {
+        BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.5,
+        }
     }
 
     #[test]
     fn block_step_solves_normal_equations_direct() {
-        let (mut be, plan, m) = setup(SolveMode::Direct);
+        let (mut be, plan, m, a) = setup(SolveMode::Direct);
         let mut rng = Rng::seed_from(1);
-        let params = BlockParams {
-            rho_l: 2.0,
-            rho_c: 1.0,
-            reg: 1.5,
-        };
-        let n0 = plan.ranges[0].1;
+        let params = params();
+        let (start, n0) = plan.ranges[0];
         let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
         let z: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
         let u: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
@@ -240,7 +365,7 @@ mod tests {
         be.block_step(0, params, &corr, &z, &u, &mut x, &mut pred);
 
         // residual of (rho_l G + reg I) x = rho_l (G x_prev + q) + rho_c (z-u)
-        let block_a = &be.blocks[0].a;
+        let block_a = a.column_block(start, n0);
         let gram = &be.blocks[0].gram;
         let mut q = vec![0.0f32; n0];
         block_a.matvec_t(&corr, &mut q);
@@ -254,7 +379,7 @@ mod tests {
                 + params.rho_c * (z[i] as f64 - u[i] as f64);
             assert!((hx - rhs).abs() < 1e-3, "i={i}: {hx} vs {rhs}");
         }
-        // pred = A x
+        // pred = A x — same kernel, same order: exact
         let mut want = vec![0.0f32; m];
         block_a.matvec(&x, &mut want);
         assert_eq!(pred, want);
@@ -262,14 +387,10 @@ mod tests {
 
     #[test]
     fn cg_mode_approaches_direct() {
-        let params = BlockParams {
-            rho_l: 2.0,
-            rho_c: 1.0,
-            reg: 1.5,
-        };
+        let params = params();
         let mut rng = Rng::seed_from(2);
-        let (mut be_cg, plan, m) = setup(SolveMode::Cg { iters: 60 });
-        let (mut be_dir, _, _) = setup(SolveMode::Direct);
+        let (mut be_cg, plan, m, _) = setup(SolveMode::Cg { iters: 60 });
+        let (mut be_dir, _, _, _) = setup(SolveMode::Direct);
         let n0 = plan.ranges[0].1;
         let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
         let z = vec![0.1f32; n0];
@@ -286,7 +407,7 @@ mod tests {
 
     #[test]
     fn chol_refactors_on_param_change() {
-        let (mut be, plan, m) = setup(SolveMode::Direct);
+        let (mut be, plan, m, _) = setup(SolveMode::Direct);
         let n0 = plan.ranges[0].1;
         let corr = vec![0.0f32; m];
         let z = vec![0.0f32; n0];
@@ -299,5 +420,90 @@ mod tests {
         assert_eq!(be.blocks[0].chol_params, Some(p1));
         be.block_step(0, p2, &corr, &z, &u, &mut x, &mut pred);
         assert_eq!(be.blocks[0].chol_params, Some(p2));
+    }
+
+    /// Random per-(block, class) inputs for sweep tests.
+    fn sweep_inputs(
+        rng: &mut Rng,
+        plan: &FeaturePlan,
+        m: usize,
+        width: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let corr: Vec<f32> = (0..width * m).map(|_| rng.normal_f32()).collect();
+        let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal_f32()).collect()
+        };
+        let z: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(rng, width * w)).collect();
+        let u: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(rng, width * w)).collect();
+        let x: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(rng, width * w)).collect();
+        let p: Vec<Vec<f32>> = plan.ranges.iter().map(|_| vec![0.0; width * m]).collect();
+        (corr, z, u, x, p)
+    }
+
+    #[test]
+    fn pooled_sweep_is_bit_identical_to_serial() {
+        for mode in [SolveMode::Direct, SolveMode::Cg { iters: 12 }] {
+            let mut rng = Rng::seed_from(3);
+            let ds = SyntheticSpec::regression(24, 60, 1).generate();
+            let plan = FeaturePlan::new(24, 4, 512);
+            let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, 60, 1);
+
+            let mut results = Vec::new();
+            for threads in [1usize, 4] {
+                let mut be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode)
+                    .with_threads(threads);
+                let mut x = x0.clone();
+                let mut p = p0.clone();
+                be.block_sweep(params(), 1, &corr, &z, &u, &mut x, &mut p);
+                results.push((x, p));
+            }
+            assert_eq!(results[0], results[1], "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn batched_sweep_matches_granular_block_steps() {
+        // width = 3 multiclass batch vs three explicit width-1 solves
+        let width = 3;
+        let ds = SyntheticSpec::regression(18, 40, 1).generate();
+        let plan = FeaturePlan::new(18, 3, 512);
+        let m = 40;
+        let mut rng = Rng::seed_from(4);
+        let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, m, width);
+
+        let mk = || NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), SolveMode::Direct);
+        let mut be_batch = mk();
+        let mut x_b = x0.clone();
+        let mut p_b = p0.clone();
+        be_batch.block_sweep(params(), width, &corr, &z, &u, &mut x_b, &mut p_b);
+
+        let mut be_gran = mk();
+        let mut x_g = x0;
+        let mut p_g = p0;
+        for (j, &(_, bw)) in plan.ranges.iter().enumerate() {
+            for c in 0..width {
+                let x_j = &mut x_g[j][c * bw..(c + 1) * bw];
+                let pred_j = &mut p_g[j][c * m..(c + 1) * m];
+                be_gran.block_step(
+                    j,
+                    params(),
+                    &corr[c * m..(c + 1) * m],
+                    &z[j][c * bw..(c + 1) * bw],
+                    &u[j][c * bw..(c + 1) * bw],
+                    x_j,
+                    pred_j,
+                );
+            }
+        }
+        assert_eq!(x_b, x_g);
+        assert_eq!(p_b, p_g);
+    }
+
+    #[test]
+    fn ledger_reports_inplace_savings() {
+        let (be, _, m, a) = setup(SolveMode::Direct);
+        let l = be.ledger();
+        assert_eq!(l.host_copy_saved_bytes, (m * a.cols * 4) as u64);
+        assert_eq!(l.h2d_bytes, 0);
     }
 }

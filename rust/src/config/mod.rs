@@ -195,6 +195,10 @@ pub struct PlatformConfig {
     pub nodes: usize,
     /// Device (simulated GPU) queues per node = the feature-block count M.
     pub devices_per_node: usize,
+    /// Worker threads per node for the native backend's block sweep
+    /// (`1` = serial, `0` = all available cores).  Results are
+    /// bit-identical at any value — see `util::pool`.
+    pub threads: usize,
     pub backend: BackendKind,
     /// Optional synthetic PCIe model for the transfer ledger: seconds =
     /// bytes / (gbps * 1e9 / 8) + latency.  `None` records measured copy
@@ -214,6 +218,7 @@ impl Default for PlatformConfig {
         PlatformConfig {
             nodes: 4,
             devices_per_node: 2,
+            threads: 1,
             backend: BackendKind::Native,
             pcie_gbps: None,
             pcie_latency_us: 10.0,
@@ -309,6 +314,11 @@ impl Config {
                                 cfg.platform.devices_per_node = v.as_usize().ok_or_else(|| {
                                     anyhow::anyhow!("platform.devices_per_node: int")
                                 })?
+                            }
+                            "threads" => {
+                                cfg.platform.threads = v
+                                    .as_usize()
+                                    .ok_or_else(|| anyhow::anyhow!("platform.threads: int"))?
                             }
                             "backend" => {
                                 cfg.platform.backend = BackendKind::parse(
@@ -464,7 +474,7 @@ mod tests {
     fn json_roundtrip() {
         let src = r#"{
             "solver": {"rho_c": 2.0, "kappa": 10, "polish": false},
-            "platform": {"nodes": 8, "backend": "xla"},
+            "platform": {"nodes": 8, "backend": "xla", "threads": 4},
             "loss": "logistic"
         }"#;
         let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
@@ -473,7 +483,10 @@ mod tests {
         assert!(!cfg.solver.polish);
         assert_eq!(cfg.platform.nodes, 8);
         assert_eq!(cfg.platform.backend, BackendKind::Xla);
+        assert_eq!(cfg.platform.threads, 4);
         assert_eq!(cfg.loss, LossKind::Logistic);
+        // default stays serial
+        assert_eq!(Config::default().platform.threads, 1);
     }
 
     #[test]

@@ -90,11 +90,11 @@ pub fn load(path: &Path) -> anyhow::Result<Dataset> {
         let data = read_f32s(&mut r, rows * n)?;
         let labels = read_f32s(&mut r, rows * width)?;
         shards.push(Shard {
-            a: Matrix {
+            a: std::sync::Arc::new(Matrix {
                 rows,
                 cols: n,
                 data,
-            },
+            }),
             labels,
             width,
         });
@@ -146,7 +146,7 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
     let a = Matrix::from_rows(rows);
     Ok(Dataset {
         shards: vec![Shard {
-            a,
+            a: std::sync::Arc::new(a),
             labels,
             width: 1,
         }],

@@ -6,12 +6,19 @@
 //!   decomposition): each node splits its columns into M blocks, one per
 //!   device queue, padded to the artifact's `block_n`.
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
 
 /// One node's local data.
+///
+/// The design matrix is reference-counted so backends can hold it without
+/// copying: the native backend reads its feature blocks in place through
+/// stride-aware [`crate::linalg::ColumnBlockView`]s (the paper's "delayed"
+/// decomposition becomes a view, not a packing copy).
 #[derive(Debug, Clone)]
 pub struct Shard {
-    pub a: Matrix,
+    pub a: Arc<Matrix>,
     /// Row-major (rows, width) labels.
     pub labels: Vec<f32>,
     pub width: usize,

@@ -143,7 +143,7 @@ impl SyntheticSpec {
                 }
             }
             shards.push(Shard {
-                a,
+                a: std::sync::Arc::new(a),
                 labels,
                 width,
             });

@@ -78,14 +78,17 @@ pub fn build_workers(ds: &Dataset, cfg: &Config) -> anyhow::Result<Vec<NodeWorke
     for (i, shard) in ds.shards.iter().enumerate() {
         let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
         let backend: Box<dyn crate::backend::NodeBackend> = match cfg.platform.backend {
-            BackendKind::Native => Box::new(NativeBackend::new(
-                shard,
-                &plan,
-                loss,
-                SolveMode::Cg {
-                    iters: cfg.solver.cg_iters,
-                },
-            )),
+            BackendKind::Native => Box::new(
+                NativeBackend::new(
+                    shard,
+                    &plan,
+                    loss,
+                    SolveMode::Cg {
+                        iters: cfg.solver.cg_iters,
+                    },
+                )
+                .with_threads(cfg.platform.threads),
+            ),
             BackendKind::Xla => {
                 let rt = match &shared_rt {
                     Some(rt) => rt.clone(),

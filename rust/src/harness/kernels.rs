@@ -1,0 +1,256 @@
+//! `psfit bench` — kernel-layer micro-benchmarks: naive vs tiled kernels
+//! and serial vs pooled block sweeps across problem shapes.
+//!
+//! Prints the usual pretty table / optional CSV and always writes a
+//! machine-readable `BENCH_kernels.json` (validated by the CI smoke step
+//! and summarized in EXPERIMENTS.md), seeding the repo's perf trajectory:
+//! every future kernel change can be judged against this file.
+
+use std::time::Duration;
+
+use crate::backend::native::{NativeBackend, SolveMode};
+use crate::backend::{BlockParams, NodeBackend};
+use crate::data::{FeaturePlan, SyntheticSpec};
+use crate::linalg::{kernels, Matrix};
+use crate::losses::Squared;
+use crate::metrics::CsvTable;
+use crate::util::bench::bench;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+pub struct KernelBenchOpts {
+    /// Small shapes + short timing windows (CI smoke).
+    pub quick: bool,
+    /// Worker threads for the pooled sweep (`0` = all cores).
+    pub threads: usize,
+    /// Where to write the JSON report.
+    pub json: String,
+    /// Optional CSV path (same convention as the figure harnesses).
+    pub out: Option<String>,
+}
+
+struct Entry {
+    name: &'static str,
+    m: usize,
+    n: usize,
+    blocks: usize,
+    baseline_ns: f64,
+    optimized_ns: f64,
+}
+
+impl Entry {
+    fn speedup(&self) -> f64 {
+        if self.optimized_ns > 0.0 {
+            self.baseline_ns / self.optimized_ns
+        } else {
+            0.0
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("m", Json::Num(self.m as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("blocks", Json::Num(self.blocks as f64)),
+            ("baseline_ns", Json::Num(self.baseline_ns)),
+            ("optimized_ns", Json::Num(self.optimized_ns)),
+            ("speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+fn report_json(entries: &[Entry], quick: bool, threads: usize) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("generated_by", Json::Str("psfit bench".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "entries",
+            Json::Arr(entries.iter().map(|e| e.json()).collect()),
+        ),
+    ])
+}
+
+pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
+    // (m, n, blocks): the last full shape is the ISSUE's acceptance shape
+    let shapes: &[(usize, usize, usize)] = if opts.quick {
+        &[(256, 96, 2)]
+    } else {
+        &[(512, 128, 2), (2048, 512, 4), (4096, 1024, 8)]
+    };
+    let target = Duration::from_millis(if opts.quick { 12 } else { 120 });
+    let threads = WorkerPool::new(opts.threads).threads();
+
+    let mut entries: Vec<Entry> = Vec::new();
+    for &(m, n, blocks) in shapes {
+        eprintln!("# shape m={m} n={n} blocks={blocks}");
+        let mut rng = Rng::seed_from(42);
+        let mut a = Matrix::zeros(m, n);
+        rng.fill_normal_f32(&mut a.data);
+        let view = a.view();
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        // `cols` is the column count the op actually ran on (the gram
+        // entry benches one feature block, not the full matrix)
+        let mut push = |name, cols: usize, base_ns, opt_ns| {
+            entries.push(Entry {
+                name,
+                m,
+                n: cols,
+                blocks,
+                baseline_ns: base_ns,
+                optimized_ns: opt_ns,
+            });
+        };
+
+        // matvec: y = A x
+        let mut y = vec![0.0f32; m];
+        let b0 = bench("matvec_naive", target, || {
+            kernels::matvec_naive(&view, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let b1 = bench("matvec_tiled", target, || {
+            kernels::matvec(&view, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        push("matvec", n, b0.median_ns, b1.median_ns);
+
+        // matvec_t: y = A^T v (the per-iteration data-touching op)
+        let mut yt = vec![0.0f32; n];
+        let b0 = bench("matvec_t_naive", target, || {
+            kernels::matvec_t_naive(&view, &v, &mut yt);
+            std::hint::black_box(&yt);
+        });
+        let b1 = bench("matvec_t_tiled", target, || {
+            kernels::matvec_t(&view, &v, &mut yt);
+            std::hint::black_box(&yt);
+        });
+        push("matvec_t", n, b0.median_ns, b1.median_ns);
+
+        // gram on one feature block (setup-time op), read in place
+        let bw = n / blocks;
+        let bview = a.column_block_view(0, bw);
+        let mut g = vec![0.0f32; bw * bw];
+        let b0 = bench("gram_naive", target, || {
+            g.fill(0.0);
+            kernels::gram_naive(&bview, &mut g);
+            std::hint::black_box(&g);
+        });
+        let b1 = bench("gram_tiled", target, || {
+            g.fill(0.0);
+            kernels::gram(&bview, &mut g);
+            std::hint::black_box(&g);
+        });
+        push("gram", bw, b0.median_ns, b1.median_ns);
+
+        // multi-RHS matmul: 8 class columns at once vs 8 re-runs
+        let k = 8;
+        let xk: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let mut yk = vec![0.0f32; k * m];
+        let b0 = bench("matmul_naive_k8", target, || {
+            kernels::matmul_naive(&view, &xk, k, &mut yk);
+            std::hint::black_box(&yk);
+        });
+        let b1 = bench("matmul_tiled_k8", target, || {
+            kernels::matmul(&view, &xk, k, &mut yk);
+            std::hint::black_box(&yk);
+        });
+        push("matmul_k8", n, b0.median_ns, b1.median_ns);
+
+        // block sweep: serial vs pooled (CG mode keeps the data-touching
+        // kernels dominant, like the artifact path)
+        let ds = SyntheticSpec::regression(n, m, 1).generate();
+        let plan = FeaturePlan::new(n, blocks, usize::MAX >> 1);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.1,
+        };
+        let mode = SolveMode::Cg { iters: 8 };
+        let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let z: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| vec![0.1; w]).collect();
+        let u: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| vec![0.0; w]).collect();
+        let mut xb: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| vec![0.0; w]).collect();
+        let mut pb: Vec<Vec<f32>> = plan.ranges.iter().map(|_| vec![0.0; m]).collect();
+        let mut serial =
+            NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode).with_threads(1);
+        let mut pooled = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode)
+            .with_threads(threads);
+        let b0 = bench("sweep_serial", target, || {
+            serial.block_sweep(params, 1, &corr, &z, &u, &mut xb, &mut pb);
+        });
+        let b1 = bench("sweep_pooled", target, || {
+            pooled.block_sweep(params, 1, &corr, &z, &u, &mut xb, &mut pb);
+        });
+        push("block_sweep", n, b0.median_ns, b1.median_ns);
+    }
+
+    // ---- emit ------------------------------------------------------------
+    let json = report_json(&entries, opts.quick, threads);
+    std::fs::write(&opts.json, format!("{json}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.json))?;
+    eprintln!("wrote {}", opts.json);
+
+    let mut table = CsvTable::new(&[
+        "kernel",
+        "m",
+        "n",
+        "blocks",
+        "baseline_ns",
+        "optimized_ns",
+        "speedup",
+    ]);
+    for e in &entries {
+        table.row(vec![
+            e.name.to_string(),
+            e.m.to_string(),
+            e.n.to_string(),
+            e.blocks.to_string(),
+            format!("{:.0}", e.baseline_ns),
+            format!("{:.0}", e.optimized_ns),
+            format!("{:.2}", e.speedup()),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let entries = vec![Entry {
+            name: "matvec",
+            m: 64,
+            n: 16,
+            blocks: 2,
+            baseline_ns: 200.0,
+            optimized_ns: 100.0,
+        }];
+        let j = report_json(&entries, true, 4);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("quick").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("threads").unwrap().as_usize(), Some(4));
+        let arr = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("matvec"));
+        assert_eq!(arr[0].get("speedup").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn speedup_handles_zero_denominator() {
+        let e = Entry {
+            name: "x",
+            m: 1,
+            n: 1,
+            blocks: 1,
+            baseline_ns: 10.0,
+            optimized_ns: 0.0,
+        };
+        assert_eq!(e.speedup(), 0.0);
+    }
+}

@@ -13,15 +13,18 @@
 //! | [`fig3`] | Figure 3       | same, in per-node samples                  |
 //! | [`fig4`] | Figure 4       | transfer time grows with n; flat-ish in m  |
 //! | [`straggler`] | (new)     | async coordination hides a 1x-16x straggler|
+//! | [`kernels`] | (new)       | tiled kernels / pooled sweeps beat naive   |
 
 pub mod fig1;
 pub mod fig4;
+pub mod kernels;
 pub mod scaling;
 pub mod straggler;
 pub mod table1;
 
 pub use fig1::fig1;
 pub use fig4::fig4;
+pub use kernels::kernels;
 pub use scaling::{fig2, fig3};
 pub use straggler::straggler;
 pub use table1::table1;

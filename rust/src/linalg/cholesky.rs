@@ -69,6 +69,20 @@ impl Cholesky {
         }
     }
 
+    /// Solve A X = B for `k` right-hand sides in place, amortizing one
+    /// factorization across all columns (the multiclass block solve:
+    /// `B = [b_0 | b_1 | ... | b_{k-1}]`, each column contiguous).
+    ///
+    /// Each column is solved with exactly the same substitution order as
+    /// [`Cholesky::solve`], so a `k == 1` call is bit-identical to the
+    /// single-vector path.
+    pub fn solve_multi(&self, b: &mut [f64], k: usize) {
+        assert_eq!(b.len(), k * self.n);
+        for col in b.chunks_exact_mut(self.n) {
+            self.solve(col);
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }
@@ -123,6 +137,23 @@ mod tests {
             for (x, y) in b.iter().zip(&x_true) {
                 assert!((x - y).abs() < 1e-8, "n={n}");
             }
+        }
+    }
+
+    #[test]
+    fn solve_multi_matches_columnwise_solve() {
+        let mut rng = Rng::seed_from(7);
+        let n = 6;
+        let k = 3;
+        let a = random_spd(&mut rng, n);
+        let ch = Cholesky::factor(&a, n).unwrap();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut multi = b.clone();
+        ch.solve_multi(&mut multi, k);
+        for c in 0..k {
+            let mut single = b[c * n..(c + 1) * n].to_vec();
+            ch.solve(&mut single);
+            assert_eq!(&multi[c * n..(c + 1) * n], &single[..]);
         }
     }
 

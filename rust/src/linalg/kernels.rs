@@ -1,0 +1,436 @@
+//! Cache-tiled, unroll-by-4 f32 kernels for the data-touching ops of the
+//! inner sweep: `A_j^T corr` (transposed matvec), `A_j x_j` (matvec), the
+//! multi-vector forms of both (all class columns at once), and the Gram
+//! setup `A_j^T A_j`.  Each kernel has a naive reference twin used by the
+//! property tests and the `psfit bench` harness.
+//!
+//! Every kernel is stride-aware: it reads its operand through a borrowed
+//! [`ColumnBlockView`], so a feature block of a shard is consumed **in
+//! place** — no packed per-block copy (the paper's feature decomposition
+//! becomes a view, not a memcpy; `backend::native` reports the bytes this
+//! saves in its transfer ledger).
+//!
+//! Determinism contract: kernels are single-threaded and their summation
+//! order is a fixed function of the view shape, so results are
+//! bit-identical from run to run and at any worker-pool width (threading
+//! happens per *block* in `util::pool`, above this layer, never inside a
+//! kernel).  The multi-vector kernels visit each output element in the
+//! same order as their single-vector counterparts, so the `k == 1` case
+//! is bit-identical to `matvec` / `matvec_t`.
+
+/// Borrowed view of the contiguous column range `[col0, col0 + cols)` of a
+/// row-major matrix — the paper's feature block `A_j`, read in place.  A
+/// whole matrix is the special case `row_stride == cols`, `col0 == 0`.
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnBlockView<'a> {
+    /// Parent storage, offset so row `i` starts at `i * row_stride`.
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> ColumnBlockView<'a> {
+    /// View columns `[col0, col0 + cols)` of a row-major buffer with
+    /// `row_stride` elements per row.
+    pub fn new(
+        data: &'a [f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+        col0: usize,
+    ) -> ColumnBlockView<'a> {
+        assert!(col0 + cols <= row_stride, "column range exceeds stride");
+        if rows == 0 {
+            return ColumnBlockView {
+                data: &data[..0],
+                rows: 0,
+                cols,
+                row_stride,
+            };
+        }
+        assert!(
+            data.len() >= (rows - 1) * row_stride + col0 + cols,
+            "buffer too short for {rows} rows of stride {row_stride}"
+        );
+        ColumnBlockView {
+            data: &data[col0..],
+            rows,
+            cols,
+            row_stride,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i` of the viewed block (length `cols`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+}
+
+/// Unroll-by-4 dot product with four independent accumulators.  The fixed
+/// reduction order `((a0 + a1) + (a2 + a3)) + tail` is part of the
+/// determinism contract.
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (a4, b4) in (&mut ca).zip(&mut cb) {
+        acc[0] += a4[0] * b4[0];
+        acc[1] += a4[1] * b4[1];
+        acc[2] += a4[2] * b4[2];
+        acc[3] += a4[3] * b4[3];
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
+}
+
+// ------------------------------------------------------------------ matvec
+
+/// y = A x — naive reference (plain per-row dot, single accumulator).
+pub fn matvec_naive(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    for (i, yi) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (&aij, &xj) in a.row(i).iter().zip(x) {
+            acc += aij * xj;
+        }
+        *yi = acc;
+    }
+}
+
+/// y = A x — unroll-by-4 per-row dot.
+pub fn matvec(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot4(a.row(i), x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides — naive reference (k naive matvecs).
+/// `x` is `k` vectors of length `cols` stored contiguously (class-major);
+/// `y` is `k` vectors of length `rows`.
+pub fn matmul_naive(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    for r in 0..k {
+        matvec_naive(a, &x[r * n..(r + 1) * n], &mut y[r * m..(r + 1) * m]);
+    }
+}
+
+/// Y = A X for `k` right-hand sides — each A row is loaded once and dotted
+/// against all `k` vectors while hot (the multi-class batching the
+/// softmax path uses instead of re-running per class column).
+pub fn matmul(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    for i in 0..m {
+        let row = a.row(i);
+        for r in 0..k {
+            y[r * m + i] = dot4(row, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- matvec_t
+
+/// y = A^T v — naive reference (per-row axpy with the historical
+/// skip-zero branch).
+pub fn matvec_t_naive(a: &ColumnBlockView, v: &[f32], y: &mut [f32]) {
+    assert_eq!(v.len(), a.rows());
+    assert_eq!(y.len(), a.cols());
+    y.fill(0.0);
+    for (i, &vi) in v.iter().enumerate() {
+        if vi == 0.0 {
+            continue;
+        }
+        for (yj, &aij) in y.iter_mut().zip(a.row(i)) {
+            *yj += aij * vi;
+        }
+    }
+}
+
+/// y = A^T v — 4-row tiles, branch-free: four A rows stay hot while `y`
+/// accumulates their combined contribution in one pass.
+pub fn matvec_t(a: &ColumnBlockView, v: &[f32], y: &mut [f32]) {
+    matmul_t(a, v, 1, y)
+}
+
+/// Y = A^T V for `k` vectors — naive reference (k naive matvec_t).
+/// `v` is `k` vectors of length `rows` stored contiguously; `y` is `k`
+/// vectors of length `cols`.
+pub fn matmul_t_naive(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    for r in 0..k {
+        matvec_t_naive(a, &v[r * m..(r + 1) * m], &mut y[r * n..(r + 1) * n]);
+    }
+}
+
+/// Y = A^T V for `k` vectors — 4-row tiles shared across all `k`
+/// accumulations, so each A row is read once per tile instead of once per
+/// class column.
+pub fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    y.fill(0.0);
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, r1, r2, r3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        for r in 0..k {
+            let vr = &v[r * m..(r + 1) * m];
+            let (v0, v1, v2, v3) = (vr[i], vr[i + 1], vr[i + 2], vr[i + 3]);
+            let yr = &mut y[r * n..(r + 1) * n];
+            for j in 0..n {
+                yr[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for r in 0..k {
+            let vi = v[r * m + i];
+            let yr = &mut y[r * n..(r + 1) * n];
+            for j in 0..n {
+                yr[j] += row[j] * vi;
+            }
+        }
+        i += 1;
+    }
+}
+
+// -------------------------------------------------------------------- gram
+
+/// G += A^T A — naive reference (rank-1 row accumulation with the
+/// historical per-element skip-zero branch; upper triangle mirrored).
+pub fn gram_naive(a: &ColumnBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    assert_eq!(g.len(), n * n);
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        for (j, &aj) in row.iter().enumerate() {
+            if aj == 0.0 {
+                continue;
+            }
+            let grow = &mut g[j * n..(j + 1) * n];
+            for (k, &ak) in row.iter().enumerate().skip(j) {
+                grow[k] += aj * ak;
+            }
+        }
+    }
+    mirror_upper(g, n);
+}
+
+/// G += A^T A — 4-row tiles, no per-element zero branch (on dense data the
+/// branch mispredicts almost always and defeats vectorization).  Upper
+/// triangle computed, then mirrored; accumulating across calls composes
+/// (the mirror step only copies upper to lower).
+pub fn gram(a: &ColumnBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    assert_eq!(g.len(), n * n);
+    let m = a.rows();
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, r1, r2, r3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        for j in 0..n {
+            let (a0, a1, a2, a3) = (r0[j], r1[j], r2[j], r3[j]);
+            let grow = &mut g[j * n..(j + 1) * n];
+            for k in j..n {
+                grow[k] += a0 * r0[k] + a1 * r1[k] + a2 * r2[k] + a3 * r3[k];
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for j in 0..n {
+            let aj = row[j];
+            let grow = &mut g[j * n..(j + 1) * n];
+            for k in j..n {
+                grow[k] += aj * row[k];
+            }
+        }
+        i += 1;
+    }
+    mirror_upper(g, n);
+}
+
+fn mirror_upper(g: &mut [f32], n: usize) {
+    for j in 0..n {
+        for k in (j + 1)..n {
+            g[k * n + j] = g[j * n + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal_f32(&mut v);
+        v
+    }
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let scale = 1.0f32.max(x.abs()).max(y.abs());
+            assert!((x - y).abs() <= 1e-5 * scale, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matvec_tiled_matches_naive_odd_shapes() {
+        let mut rng = Rng::seed_from(1);
+        // deliberately not multiples of the unroll width
+        for (m, n) in [(1, 1), (3, 5), (7, 9), (18, 13), (33, 1)] {
+            let data = rand_buf(&mut rng, m * n);
+            let a = ColumnBlockView::new(&data, m, n, n, 0);
+            let x = rand_buf(&mut rng, n);
+            let mut y0 = vec![0.0f32; m];
+            let mut y1 = vec![0.0f32; m];
+            matvec_naive(&a, &x, &mut y0);
+            matvec(&a, &x, &mut y1);
+            close(&y0, &y1);
+        }
+    }
+
+    #[test]
+    fn matvec_t_tiled_matches_naive_with_zeros() {
+        let mut rng = Rng::seed_from(2);
+        for (m, n) in [(2, 3), (6, 4), (11, 7), (16, 16)] {
+            let data = rand_buf(&mut rng, m * n);
+            let a = ColumnBlockView::new(&data, m, n, n, 0);
+            let mut v = rand_buf(&mut rng, m);
+            v[0] = 0.0; // exercise the naive skip-zero branch
+            let mut y0 = vec![0.0f32; n];
+            let mut y1 = vec![0.0f32; n];
+            matvec_t_naive(&a, &v, &mut y0);
+            matvec_t(&a, &v, &mut y1);
+            close(&y0, &y1);
+        }
+    }
+
+    #[test]
+    fn multi_vector_kernels_match_naive() {
+        let mut rng = Rng::seed_from(3);
+        let (m, n, k) = (14, 6, 3);
+        let data = rand_buf(&mut rng, m * n);
+        let a = ColumnBlockView::new(&data, m, n, n, 0);
+        let x = rand_buf(&mut rng, k * n);
+        let v = rand_buf(&mut rng, k * m);
+        let mut y0 = vec![0.0f32; k * m];
+        let mut y1 = vec![0.0f32; k * m];
+        matmul_naive(&a, &x, k, &mut y0);
+        matmul(&a, &x, k, &mut y1);
+        close(&y0, &y1);
+        let mut z0 = vec![0.0f32; k * n];
+        let mut z1 = vec![0.0f32; k * n];
+        matmul_t_naive(&a, &v, k, &mut z0);
+        matmul_t(&a, &v, k, &mut z1);
+        close(&z0, &z1);
+    }
+
+    #[test]
+    fn multi_vector_k1_is_bit_identical_to_single() {
+        let mut rng = Rng::seed_from(4);
+        let (m, n) = (13, 9);
+        let data = rand_buf(&mut rng, m * n);
+        let a = ColumnBlockView::new(&data, m, n, n, 0);
+        let x = rand_buf(&mut rng, n);
+        let v = rand_buf(&mut rng, m);
+        let mut y0 = vec![0.0f32; m];
+        let mut y1 = vec![0.0f32; m];
+        matvec(&a, &x, &mut y0);
+        matmul(&a, &x, 1, &mut y1);
+        assert_eq!(y0, y1);
+        let mut z0 = vec![0.0f32; n];
+        let mut z1 = vec![0.0f32; n];
+        matvec_t(&a, &v, &mut z0);
+        matmul_t(&a, &v, 1, &mut z1);
+        assert_eq!(z0, z1);
+    }
+
+    #[test]
+    fn gram_tiled_matches_naive_and_accumulates() {
+        let mut rng = Rng::seed_from(5);
+        for (m, n) in [(1, 3), (5, 4), (10, 6), (19, 8)] {
+            let data = rand_buf(&mut rng, m * n);
+            let a = ColumnBlockView::new(&data, m, n, n, 0);
+            let mut g0 = vec![0.0f32; n * n];
+            let mut g1 = vec![0.0f32; n * n];
+            gram_naive(&a, &mut g0);
+            gram(&a, &mut g1);
+            close(&g0, &g1);
+            // accumulating a second pass doubles every entry
+            gram(&a, &mut g1);
+            let doubled: Vec<f32> = g0.iter().map(|&x| 2.0 * x).collect();
+            close(&doubled, &g1);
+        }
+    }
+
+    #[test]
+    fn strided_view_reads_column_block_in_place() {
+        let mut rng = Rng::seed_from(6);
+        let (m, n) = (9, 11);
+        let data = rand_buf(&mut rng, m * n);
+        let (col0, w) = (3, 5);
+        // packed copy of columns [3, 8)
+        let packed: Vec<f32> = (0..m)
+            .flat_map(|i| data[i * n + col0..i * n + col0 + w].to_vec())
+            .collect();
+        let full = ColumnBlockView::new(&packed, m, w, w, 0);
+        let view = ColumnBlockView::new(&data, m, w, n, col0);
+        let x = rand_buf(&mut rng, w);
+        let mut y0 = vec![0.0f32; m];
+        let mut y1 = vec![0.0f32; m];
+        matvec(&full, &x, &mut y0);
+        matvec(&view, &x, &mut y1);
+        assert_eq!(y0, y1);
+        let mut g0 = vec![0.0f32; w * w];
+        let mut g1 = vec![0.0f32; w * w];
+        gram(&full, &mut g0);
+        gram(&view, &mut g1);
+        assert_eq!(g0, g1);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let data: Vec<f32> = Vec::new();
+        let a = ColumnBlockView::new(&data, 0, 4, 4, 0);
+        let x = [1.0f32; 4];
+        let mut y: Vec<f32> = Vec::new();
+        matvec(&a, &x, &mut y);
+        matvec_naive(&a, &x, &mut y);
+        let mut z = [9.0f32; 4];
+        matvec_t(&a, &[], &mut z);
+        assert_eq!(z, [0.0; 4]); // zero rows: A^T v is the zero vector
+        let mut g = vec![0.0f32; 16];
+        gram(&a, &mut g);
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+}

@@ -2,6 +2,13 @@
 //! needs: matvec, transposed matvec, Gram accumulation, column-block
 //! extraction (the paper's feature decomposition) and row-tile packing (the
 //! host->device staging copy of the GPU backend).
+//!
+//! The arithmetic lives in [`super::kernels`] (cache-tiled, unroll-by-4);
+//! the methods here are thin wrappers over a whole-matrix
+//! [`ColumnBlockView`], so every caller — packed block or in-place view —
+//! goes through the same deterministic summation order.
+
+use super::kernels::{self, ColumnBlockView};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -46,66 +53,43 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Borrowed whole-matrix view for the kernel layer.
+    pub fn view(&self) -> ColumnBlockView<'_> {
+        ColumnBlockView::new(&self.data, self.rows, self.cols, self.cols, 0)
+    }
+
+    /// Borrowed view of columns `[col0, col0 + width)` — the feature block
+    /// `A_j` read in place, with no packing copy (contrast
+    /// [`Matrix::column_block`]).
+    pub fn column_block_view(&self, col0: usize, width: usize) -> ColumnBlockView<'_> {
+        assert!(col0 + width <= self.cols);
+        ColumnBlockView::new(&self.data, self.rows, width, self.cols, col0)
+    }
+
     /// y = A x  (accumulates in f32, matching the XLA artifacts).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.cols);
-        assert_eq!(y.len(), self.rows);
-        for (i, yi) in y.iter_mut().enumerate() {
-            let row = self.row(i);
-            let mut acc = 0.0f32;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            *yi = acc;
-        }
+        kernels::matvec(&self.view(), x, y);
     }
 
     /// y = A^T v.
     pub fn matvec_t(&self, v: &[f32], y: &mut [f32]) {
-        assert_eq!(v.len(), self.rows);
-        assert_eq!(y.len(), self.cols);
-        y.fill(0.0);
-        for (i, &vi) in v.iter().enumerate() {
-            if vi == 0.0 {
-                continue;
-            }
-            let row = self.row(i);
-            for (yj, &aij) in y.iter_mut().zip(row) {
-                *yj += aij * vi;
-            }
-        }
+        kernels::matvec_t(&self.view(), v, y);
     }
 
     /// G += A^T A, writing into a `cols x cols` row-major buffer.
     ///
-    /// Rank-1 accumulation over rows; upper triangle computed then
-    /// mirrored.  This is the setup-time op — the per-iteration path only
-    /// does matvecs.
+    /// Tiled row accumulation; upper triangle computed then mirrored.
+    /// This is the setup-time op — the per-iteration path only does
+    /// matvecs.
     pub fn gram_accumulate(&self, g: &mut [f32]) {
-        let n = self.cols;
-        assert_eq!(g.len(), n * n);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (j, &aj) in row.iter().enumerate() {
-                if aj == 0.0 {
-                    continue;
-                }
-                let grow = &mut g[j * n..(j + 1) * n];
-                for (k, &ak) in row.iter().enumerate().skip(j) {
-                    grow[k] += aj * ak;
-                }
-            }
-        }
-        // mirror upper -> lower
-        for j in 0..n {
-            for k in (j + 1)..n {
-                g[k * n + j] = g[j * n + k];
-            }
-        }
+        kernels::gram(&self.view(), g);
     }
 
     /// Extract the column block `[col0, col0+width)` as a packed matrix.
     /// This is the paper's feature decomposition: block j of `A_i`.
+    /// The XLA backend needs the packed (padded) copy for staging; the
+    /// native backend reads the shard in place via
+    /// [`Matrix::column_block_view`] instead.
     pub fn column_block(&self, col0: usize, width: usize) -> Matrix {
         assert!(col0 + width <= self.cols);
         let mut out = Matrix::zeros(self.rows, width);
@@ -214,6 +198,24 @@ mod tests {
         assert_eq!(b.rows, 4);
         assert_eq!(b.cols, 2);
         assert_eq!(b.row(2), &[8.0, 10.0]);
+    }
+
+    #[test]
+    fn column_block_view_matches_packed_copy() {
+        let a = sample();
+        let packed = a.column_block(1, 2);
+        let view = a.column_block_view(1, 2);
+        let x = [0.5f32, -2.0];
+        let mut y0 = vec![0.0f32; 4];
+        let mut y1 = vec![0.0f32; 4];
+        packed.matvec(&x, &mut y0);
+        kernels::matvec(&view, &x, &mut y1);
+        assert_eq!(y0, y1);
+        let mut g0 = vec![0.0f32; 4];
+        let mut g1 = vec![0.0f32; 4];
+        packed.gram_accumulate(&mut g0);
+        kernels::gram(&view, &mut g1);
+        assert_eq!(g0, g1);
     }
 
     #[test]

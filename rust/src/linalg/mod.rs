@@ -7,9 +7,11 @@
 
 pub mod cg;
 pub mod cholesky;
+pub mod kernels;
 pub mod matrix;
 pub mod ops;
 
 pub use cg::conjugate_gradient;
 pub use cholesky::Cholesky;
+pub use kernels::ColumnBlockView;
 pub use matrix::Matrix;

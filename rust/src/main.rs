@@ -8,6 +8,8 @@
 //!   fig3    — regenerate Figure 3 (sample scaling)
 //!   fig4    — regenerate Figure 4 (CPU<->GPU transfer time)
 //!   straggler — sync vs async coordination under a 1x-16x slow node
+//!   bench   — kernel-layer micro-benchmarks (naive vs tiled, serial vs
+//!             pooled); writes BENCH_kernels.json
 //!   info    — print artifact manifest + platform info
 //!
 //! Scaled-down grids by default; `--full` switches to the paper's sizes.
@@ -93,18 +95,35 @@ fn run() -> anyhow::Result<()> {
             let table = harness::straggler(&opts)?;
             harness::emit(&table, opts.out.as_deref())
         }
+        Some("bench") => {
+            let opts = harness::kernels::KernelBenchOpts {
+                quick: args.flag("quick"),
+                threads: args.get("threads", 0)?,
+                json: args
+                    .opt("json")
+                    .unwrap_or("BENCH_kernels.json")
+                    .to_string(),
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::kernels(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
         Some("info") => info(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (try: train, fig1..fig4, table1, straggler, info)"
+                "unknown subcommand `{other}` (try: train, fig1..fig4, table1, straggler, bench, info)"
             )
         }
         None => {
-            eprintln!("usage: psfit <train|fig1|fig2|fig3|fig4|table1|straggler|info> [options]");
+            eprintln!(
+                "usage: psfit <train|fig1|fig2|fig3|fig4|table1|straggler|bench|info> [options]"
+            );
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
+            eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
             eprintln!("        psfit train --coordination async --quorum 0.75 --staleness 2");
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
-            eprintln!("        psfit straggler --out results/straggler.csv");
+            eprintln!("        psfit bench --quick                 (writes BENCH_kernels.json)");
             Ok(())
         }
     }
@@ -128,6 +147,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     cfg.platform.nodes = nodes;
     cfg.platform.backend = backend;
     cfg.platform.devices_per_node = args.get("devices", cfg.platform.devices_per_node)?;
+    cfg.platform.threads = args.get("threads", cfg.platform.threads)?;
     cfg.solver.rho_c = args.get("rho-c", cfg.solver.rho_c)?;
     cfg.solver.rho_b = args.get("rho-b", cfg.solver.rho_b)?;
     cfg.solver.rho_l = args.get("rho-l", cfg.solver.rho_l)?;
@@ -186,6 +206,12 @@ fn train(args: &Args) -> anyhow::Result<()> {
         res.transfers.net_up_bytes as f64 / 1e6,
         res.transfers.net_down_bytes as f64 / 1e6,
     );
+    if res.transfers.host_copy_saved_bytes > 0 {
+        println!(
+            "             {:.1} MB of block packing avoided (in-place column views)",
+            res.transfers.host_copy_saved_bytes as f64 / 1e6,
+        );
+    }
     if let Some(stats) = &res.coordination {
         println!("coordination: {}", stats.summary());
     }

@@ -25,6 +25,11 @@ pub struct TransferLedger {
     /// nodes (async coordination only; counted separately from the round
     /// broadcasts so the protocol overhead of staleness is visible)
     pub net_resync_bytes: u64,
+    /// host-side packing bytes *avoided* by reading feature blocks in
+    /// place through stride-aware column views instead of eagerly copying
+    /// each block at backend construction (native backend; informational —
+    /// not counted in `h2d_bytes`/`d2h_bytes`)
+    pub host_copy_saved_bytes: u64,
 }
 
 impl TransferLedger {
@@ -45,6 +50,7 @@ impl TransferLedger {
         self.net_up_bytes += other.net_up_bytes;
         self.net_down_bytes += other.net_down_bytes;
         self.net_resync_bytes += other.net_resync_bytes;
+        self.host_copy_saved_bytes += other.host_copy_saved_bytes;
     }
 
     /// Modeled PCIe seconds for the recorded volume: bytes / bandwidth +
@@ -312,9 +318,13 @@ mod tests {
         a.net_down_bytes = 100;
         let mut b = TransferLedger::default();
         b.net_resync_bytes = 40;
+        b.host_copy_saved_bytes = 16;
         a.merge(&b);
         assert_eq!(a.net_down_bytes, 100);
         assert_eq!(a.net_resync_bytes, 40);
+        assert_eq!(a.host_copy_saved_bytes, 16);
+        // informational note: never folded into the transfer volume
+        assert_eq!(a.h2d_bytes + a.d2h_bytes, 0);
     }
 
     #[test]

@@ -75,7 +75,7 @@ pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStats {
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = times.iter().sum::<f64>() / times.len() as f64;
-    let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let pct = |p: f64| percentile(&times, p);
     BenchStats {
         name: name.to_string(),
         iters: samples * calls_per_sample,
@@ -84,6 +84,16 @@ pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStats {
         p10_ns: pct(0.1),
         p90_ns: pct(0.9),
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample: index
+/// `round((len - 1) * p)`.  Truncating instead of rounding (the old
+/// behavior) biased every percentile low — p90 of 16 samples read sample
+/// 13 rather than 14.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Time a single invocation (for expensive end-to-end runs).
@@ -110,6 +120,18 @@ mod tests {
         assert!(stats.p10_ns <= stats.median_ns);
         assert!(stats.median_ns <= stats.p90_ns + 1.0);
         assert!(stats.iters >= 16);
+    }
+
+    #[test]
+    fn percentile_rounds_to_nearest_rank() {
+        let v: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        // regression: (len-1)*p truncated gave 13 / 1 / 7 for these
+        assert_eq!(percentile(&v, 0.9), 14.0); // round(13.5)
+        assert_eq!(percentile(&v, 0.1), 2.0); // round(1.5)
+        assert_eq!(percentile(&v, 0.5), 8.0); // round(7.5)
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 1.0), 15.0);
+        assert_eq!(percentile(&[42.0], 0.9), 42.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Small self-contained substrates: PRNG, JSON, CLI parsing, bench/test kits.
+//! Small self-contained substrates: PRNG, JSON, CLI parsing, bench/test
+//! kits, and the block-sweep worker pool.
 //!
 //! The build environment is fully offline with only the `xla` crate's
 //! dependency closure vendored, so the usual ecosystem crates (rand, serde,
@@ -9,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod testkit;
 

@@ -1,0 +1,137 @@
+//! Dependency-free worker pool for the per-block inner sweeps — the CPU
+//! analogue of the paper's per-GPU block queues.
+//!
+//! [`WorkerPool::run`] executes a batch of jobs on up to `threads` OS
+//! threads.  Workers are scoped to the call (`std::thread::scope`), so
+//! jobs may borrow the caller's block state without `'static` bounds; the
+//! pool object itself is the persistent part — it carries the thread-count
+//! policy for a backend's whole lifetime and is the single place a
+//! `--threads` knob lands.
+//!
+//! Determinism contract (see DESIGN.md §Kernel-layer): the pool only
+//! decides *which thread* runs a job, never the work inside it.  Jobs must
+//! write disjoint outputs (block `j` owns `x_j`, `pred_j`, and its own
+//! scratch), and any reduction over job outputs happens in the caller
+//! after `run` returns, in a fixed order.  Under that contract solver
+//! results are bit-identical at any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub struct WorkerPool {
+    threads: usize,
+    /// Batches dispatched (introspection / tests).
+    runs: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// `threads == 0` selects the host's available parallelism;
+    /// `threads == 1` runs every batch inline (no spawns at all).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        WorkerPool {
+            threads,
+            runs: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn runs(&self) -> usize {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    /// Run all `jobs` to completion.  Jobs are claimed from a shared
+    /// counter, so a straggling job never blocks an idle worker; a
+    /// panicking job propagates when the scope joins.
+    pub fn run<F: FnOnce() + Send>(&self, jobs: Vec<F>) {
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        if self.threads <= 1 || jobs.len() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(slots.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(slot) = slots.get(i) else { break };
+                    let job = slot.lock().unwrap().take().expect("job claimed twice");
+                    job();
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..37)
+            .map(|_| {
+                || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(count.load(Ordering::Relaxed), 37);
+        assert_eq!(pool.runs(), 1);
+    }
+
+    #[test]
+    fn disjoint_writes_match_serial_at_any_width() {
+        let run_with = |threads: usize| -> Vec<usize> {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![0usize; 48];
+            let jobs: Vec<_> = out
+                .chunks_mut(6)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    move || {
+                        for (k, c) in chunk.iter_mut().enumerate() {
+                            *c = i * 100 + k;
+                        }
+                    }
+                })
+                .collect();
+            pool.run(jobs);
+            out
+        };
+        let serial = run_with(1);
+        for threads in [2, 3, 8] {
+            assert_eq!(run_with(threads), serial);
+        }
+    }
+
+    #[test]
+    fn zero_threads_means_available_parallelism() {
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert_eq!(WorkerPool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<fn()> = Vec::new();
+        pool.run(jobs);
+        assert_eq!(pool.runs(), 1);
+    }
+}

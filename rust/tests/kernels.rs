@@ -1,0 +1,172 @@
+//! Kernel-layer invariants: tiled kernels match their naive reference
+//! twins across random shapes (including non-multiple-of-tile dims and
+//! empty/zero-row edge cases), stride views match packed copies, and
+//! whole solves are bit-identical at any worker-pool width.
+
+use psfit::config::Config;
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::linalg::kernels::{self, ColumnBlockView};
+use psfit::linalg::Matrix;
+use psfit::util::rng::Rng;
+use psfit::util::testkit::{assert_close_f32, run_prop, PropConfig};
+
+fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal_f32(&mut m.data);
+    m
+}
+
+fn randvec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+/// Random shape with deliberate edge cases: zero rows, single row/col,
+/// and sizes straddling the unroll width of 4.
+fn rand_shape(rng: &mut Rng, size: usize) -> (usize, usize) {
+    let rows = rng.below(2 * size + 3); // 0 included
+    let cols = 1 + rng.below(size + 6);
+    (rows, cols)
+}
+
+#[test]
+fn prop_tiled_matvec_matches_naive() {
+    run_prop("matvec_tiled", PropConfig::default(), |rng, size| {
+        let (rows, cols) = rand_shape(rng, size);
+        let a = randmat(rng, rows, cols);
+        let x = randvec(rng, cols);
+        let mut y0 = vec![0.0f32; rows];
+        let mut y1 = vec![0.0f32; rows];
+        kernels::matvec_naive(&a.view(), &x, &mut y0);
+        kernels::matvec(&a.view(), &x, &mut y1);
+        assert_close_f32(&y0, &y1, 1e-5)
+    });
+}
+
+#[test]
+fn prop_tiled_matvec_t_matches_naive() {
+    run_prop("matvec_t_tiled", PropConfig::default(), |rng, size| {
+        let (rows, cols) = rand_shape(rng, size);
+        let a = randmat(rng, rows, cols);
+        let mut v = randvec(rng, rows);
+        if !v.is_empty() {
+            v[0] = 0.0; // exercise the naive skip-zero branch
+        }
+        let mut y0 = vec![0.0f32; cols];
+        let mut y1 = vec![0.0f32; cols];
+        kernels::matvec_t_naive(&a.view(), &v, &mut y0);
+        kernels::matvec_t(&a.view(), &v, &mut y1);
+        assert_close_f32(&y0, &y1, 1e-5)
+    });
+}
+
+#[test]
+fn prop_tiled_gram_matches_naive_on_stride_views() {
+    run_prop("gram_tiled", PropConfig::default(), |rng, size| {
+        let (rows, cols) = rand_shape(rng, size);
+        let a = randmat(rng, rows, cols);
+        // random column block, read in place vs packed
+        let w = 1 + rng.below(cols);
+        let col0 = rng.below(cols - w + 1);
+        let mut g0 = vec![0.0f32; w * w];
+        let mut g1 = vec![0.0f32; w * w];
+        kernels::gram_naive(&a.column_block(col0, w).view(), &mut g0);
+        kernels::gram(&a.column_block_view(col0, w), &mut g1);
+        assert_close_f32(&g0, &g1, 1e-5)
+    });
+}
+
+#[test]
+fn prop_multi_vector_kernels_match_naive() {
+    run_prop("matmul_tiled", PropConfig::default(), |rng, size| {
+        let (rows, cols) = rand_shape(rng, size);
+        let k = 1 + rng.below(5);
+        let a = randmat(rng, rows, cols);
+        let x = randvec(rng, k * cols);
+        let v = randvec(rng, k * rows);
+        let mut y0 = vec![0.0f32; k * rows];
+        let mut y1 = vec![0.0f32; k * rows];
+        kernels::matmul_naive(&a.view(), &x, k, &mut y0);
+        kernels::matmul(&a.view(), &x, k, &mut y1);
+        assert_close_f32(&y0, &y1, 1e-5)?;
+        let mut z0 = vec![0.0f32; k * cols];
+        let mut z1 = vec![0.0f32; k * cols];
+        kernels::matmul_t_naive(&a.view(), &v, k, &mut z0);
+        kernels::matmul_t(&a.view(), &v, k, &mut z1);
+        assert_close_f32(&z0, &z1, 1e-5)
+    });
+}
+
+#[test]
+fn zero_row_views_produce_zero_results() {
+    let data: Vec<f32> = Vec::new();
+    let a = ColumnBlockView::new(&data, 0, 3, 3, 0);
+    let mut y = vec![7.0f32; 3];
+    kernels::matvec_t(&a, &[], &mut y);
+    assert_eq!(y, vec![0.0; 3]);
+    let mut g = vec![0.0f32; 9];
+    kernels::gram(&a, &mut g);
+    kernels::gram_naive(&a, &mut g);
+    assert!(g.iter().all(|&v| v == 0.0));
+}
+
+/// The acceptance pin: solver output is bit-identical between
+/// `--threads 1` and `--threads N`.
+#[test]
+fn solver_output_bit_identical_across_thread_counts() {
+    let ds = SyntheticSpec::regression(48, 160, 2).generate();
+    let mut cfg = Config::default();
+    cfg.solver.kappa = 10;
+    cfg.solver.max_iters = 20;
+    cfg.platform.devices_per_node = 4; // several blocks per node queue
+
+    cfg.platform.threads = 1;
+    let serial = driver::fit(&ds, &cfg).unwrap();
+    for threads in [2, 4] {
+        cfg.platform.threads = threads;
+        let pooled = driver::fit(&ds, &cfg).unwrap();
+        assert_eq!(serial.z, pooled.z, "threads={threads}");
+        assert_eq!(serial.x, pooled.x, "threads={threads}");
+        assert_eq!(serial.support, pooled.support, "threads={threads}");
+        assert_eq!(serial.iters, pooled.iters, "threads={threads}");
+    }
+}
+
+/// Multiclass (softmax) goes through the batched multi-RHS path; pin the
+/// same determinism there.
+#[test]
+fn multiclass_solve_bit_identical_across_thread_counts() {
+    use psfit::data::Task;
+    use psfit::losses::LossKind;
+    let mut spec = SyntheticSpec::regression(24, 90, 2);
+    spec.task = Task::Multiclass { k: 3 };
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.loss = LossKind::Softmax;
+    cfg.classes = 3;
+    cfg.solver.kappa = 6;
+    cfg.solver.max_iters = 8;
+    cfg.platform.devices_per_node = 3;
+
+    cfg.platform.threads = 1;
+    let serial = driver::fit(&ds, &cfg).unwrap();
+    cfg.platform.threads = 4;
+    let pooled = driver::fit(&ds, &cfg).unwrap();
+    assert_eq!(serial.z, pooled.z);
+    assert_eq!(serial.x, pooled.x);
+}
+
+/// The in-place column views must leave a non-zero savings note in the
+/// ledger for native solves.
+#[test]
+fn native_solve_reports_packing_bytes_saved() {
+    let ds = SyntheticSpec::regression(16, 60, 2).generate();
+    let mut cfg = Config::default();
+    cfg.solver.kappa = 4;
+    cfg.solver.max_iters = 3;
+    let res = driver::fit(&ds, &cfg).unwrap();
+    // every node reports its full shard: sum_i m_i * n * 4 bytes
+    assert_eq!(res.transfers.host_copy_saved_bytes, 60 * 16 * 4);
+}
