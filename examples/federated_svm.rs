@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     let raw_bytes: u64 = ds
         .shards
         .iter()
-        .map(|s| (s.a.data.len() + s.labels.len()) as u64 * 4)
+        .map(|s| (s.rows() * s.data.cols() + s.labels.len()) as u64 * 4)
         .sum();
     println!(
         "raw data kept on-node:  {:.2} MB (never transmitted)",

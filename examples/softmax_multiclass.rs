@@ -20,8 +20,9 @@ fn accuracy(ds: &Dataset, x: &[f64]) -> f64 {
     let mut correct = 0;
     let mut total = 0;
     for shard in &ds.shards {
-        for r in 0..shard.a.rows {
-            let row = shard.a.row(r);
+        let a = shard.data.to_dense();
+        for r in 0..a.rows {
+            let row = a.row(r);
             let mut best = (0usize, f64::NEG_INFINITY);
             for c in 0..K {
                 let score: f64 = row

@@ -19,21 +19,18 @@ fn split_holdout(ds: &Dataset, every: usize) -> (Dataset, Dataset) {
             .shards
             .iter()
             .map(|s| {
-                let rows: Vec<usize> = (0..s.a.rows)
+                let full = s.data.to_dense();
+                let rows: Vec<usize> = (0..full.rows)
                     .filter(|r| (r % every == 0) == test)
                     .collect();
-                let mut a = Matrix::zeros(rows.len(), s.a.cols);
+                let mut a = Matrix::zeros(rows.len(), full.cols);
                 let mut labels = Vec::with_capacity(rows.len() * s.width);
                 for (new_r, &r) in rows.iter().enumerate() {
-                    a.data[new_r * s.a.cols..(new_r + 1) * s.a.cols]
-                        .copy_from_slice(s.a.row(r));
+                    a.data[new_r * full.cols..(new_r + 1) * full.cols]
+                        .copy_from_slice(full.row(r));
                     labels.extend_from_slice(&s.labels[r * s.width..(r + 1) * s.width]);
                 }
-                Shard {
-                    a: std::sync::Arc::new(a),
-                    labels,
-                    width: s.width,
-                }
+                Shard::dense(a, labels, s.width)
             })
             .collect();
         Dataset {
@@ -52,8 +49,9 @@ fn accuracy(ds: &Dataset, x: &[f64]) -> f64 {
     let mut correct = 0usize;
     let mut total = 0usize;
     for shard in &ds.shards {
-        for r in 0..shard.a.rows {
-            let row = shard.a.row(r);
+        let a = shard.data.to_dense();
+        for r in 0..a.rows {
+            let row = a.row(r);
             let score: f64 = row.iter().zip(x).map(|(&a, &w)| a as f64 * w).sum();
             let pred = if score >= 0.0 { 1.0 } else { -1.0 };
             correct += usize::from(pred == shard.labels[r] as f64);

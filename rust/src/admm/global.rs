@@ -100,11 +100,13 @@ impl GlobalState {
         sparsity::bilinear_g(&self.z, &self.s, self.t)
     }
 
-    /// Residuals (Eq. 14).  `xs` are the collected x_i^{k+1}.
-    pub fn residuals(&self, xs: &[Vec<f64>], rho_c: f64, iter: usize, wall: f64) -> IterRecord {
+    /// Residuals (Eq. 14).  `xs` are the collected x_i^{k+1}, borrowed
+    /// from the transport's reply buffers (the solver recycles those
+    /// buffers after this call instead of consuming them).
+    pub fn residuals(&self, xs: &[&[f64]], rho_c: f64, iter: usize, wall: f64) -> IterRecord {
         let primal: f64 = xs
             .iter()
-            .map(|x| ops::dist2(x, &self.z).sqrt())
+            .map(|&x| ops::dist2(x, &self.z).sqrt())
             .sum();
         let dual =
             (xs.len() as f64).sqrt() * rho_c * ops::dist2(&self.z, &self.z_prev).sqrt();
@@ -201,7 +203,7 @@ mod tests {
     fn residual_record_shapes() {
         let mut g = GlobalState::new(2);
         g.z = vec![1.0, 0.0];
-        let xs = vec![vec![1.0, 0.0], vec![0.0, 0.0]];
+        let xs: Vec<&[f64]> = vec![&[1.0, 0.0], &[0.0, 0.0]];
         let rec = g.residuals(&xs, 2.0, 7, 0.5);
         assert_eq!(rec.iter, 7);
         assert!((rec.primal - 1.0).abs() < 1e-12); // ||x_2 - z|| = 1

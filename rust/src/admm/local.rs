@@ -299,7 +299,7 @@ mod tests {
         prox.solve(&z, &u, params, 200, &mut x);
 
         // exact solution via dense normal equations
-        let a = &shard.a;
+        let a = shard.data.as_dense().unwrap();
         let n = 20;
         let mut h = vec![0.0f64; n * n];
         let mut g32 = vec![0.0f32; n * n];
@@ -368,7 +368,7 @@ mod tests {
         prox.solve(&z, &u, params, 30, &mut x);
 
         // prediction == A x (sum of block predictions)
-        let a = &ds.shards[0].a;
+        let a = ds.shards[0].data.as_dense().unwrap();
         let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
         let mut want = vec![0.0f32; 16];
         a.matvec(&xf, &mut want);

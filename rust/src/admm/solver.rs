@@ -6,7 +6,7 @@
 //! recovered support).
 
 use crate::config::Config;
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardData};
 use crate::linalg::ops;
 use crate::losses::LossKind;
 use crate::metrics::{Trace, TransferLedger};
@@ -112,9 +112,14 @@ pub fn solve(
         // (g(z^{k+1}, s^k, t^{k+1}) — the quantity the rho_b penalty acts
         // on; the closed-form s-update that follows zeroes g whenever the
         // target is reachable, so measuring after it would be trivially 0)
-        let xs: Vec<Vec<f64>> = replies.into_iter().map(|r| r.x).collect();
-        let mut rec = global.residuals(&xs, sc.rho_c, k, watch.elapsed_secs());
+        let mut rec = {
+            let xs: Vec<&[f64]> = replies.iter().map(|r| r.x.as_slice()).collect();
+            global.residuals(&xs, sc.rho_c, k, watch.elapsed_secs())
+        };
         rec.max_lag = max_lag;
+        // hand the reply buffers back to the transport for reuse — the
+        // next round's Collect fills them in place instead of allocating
+        cluster.recycle(replies);
 
         global.s_update(sc.kappa);
         global.v_update();
@@ -182,14 +187,38 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
     // d/dx of 1/(2 gamma) ||x||^2 is x / gamma
     let reg = 1.0 / gamma;
 
-    // rhs = 2 A_S^T b ; operator v -> 2 A_S^T A_S v + reg v
+    // column -> support-slot map so CSR rows join the support by index
+    // probe instead of scanning it per entry
+    let mut slot = vec![usize::MAX; x.len()];
+    for (si, &col) in support.iter().enumerate() {
+        slot[col] = si;
+    }
+
+    // rhs = 2 A_S^T b ; operator v -> 2 A_S^T A_S v + reg v, both
+    // dispatched on shard storage (dense rows vs stored entries)
     let mut rhs = vec![0.0f64; s];
     for shard in &ds.shards {
-        for r in 0..shard.a.rows {
-            let row = shard.a.row(r);
-            let b = shard.labels[r] as f64;
-            for (si, &col) in support.iter().enumerate() {
-                rhs[si] += 2.0 * row[col] as f64 * b;
+        match &shard.data {
+            ShardData::Dense(a) => {
+                for r in 0..a.rows {
+                    let row = a.row(r);
+                    let b = shard.labels[r] as f64;
+                    for (si, &col) in support.iter().enumerate() {
+                        rhs[si] += 2.0 * row[col] as f64 * b;
+                    }
+                }
+            }
+            ShardData::Csr(csr) => {
+                for r in 0..csr.rows {
+                    let b = shard.labels[r] as f64;
+                    let (cols, vals) = csr.row(r);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        let si = slot[c as usize];
+                        if si != usize::MAX {
+                            rhs[si] += 2.0 * v as f64 * b;
+                        }
+                    }
+                }
             }
         }
     }
@@ -197,14 +226,39 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
     let apply = |v: &[f64], out: &mut [f64]| {
         out.iter_mut().for_each(|o| *o = 0.0);
         for shard in &ds.shards {
-            for r in 0..shard.a.rows {
-                let row = shard.a.row(r);
-                let mut av = 0.0f64;
-                for (si, &col) in support.iter().enumerate() {
-                    av += row[col] as f64 * v[si];
+            match &shard.data {
+                ShardData::Dense(a) => {
+                    for r in 0..a.rows {
+                        let row = a.row(r);
+                        let mut av = 0.0f64;
+                        for (si, &col) in support.iter().enumerate() {
+                            av += row[col] as f64 * v[si];
+                        }
+                        for (si, &col) in support.iter().enumerate() {
+                            out[si] += 2.0 * row[col] as f64 * av;
+                        }
+                    }
                 }
-                for (si, &col) in support.iter().enumerate() {
-                    out[si] += 2.0 * row[col] as f64 * av;
+                ShardData::Csr(csr) => {
+                    for r in 0..csr.rows {
+                        let (cols, vals) = csr.row(r);
+                        let mut av = 0.0f64;
+                        for (&c, &val) in cols.iter().zip(vals) {
+                            let si = slot[c as usize];
+                            if si != usize::MAX {
+                                av += val as f64 * v[si];
+                            }
+                        }
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for (&c, &val) in cols.iter().zip(vals) {
+                            let si = slot[c as usize];
+                            if si != usize::MAX {
+                                out[si] += 2.0 * val as f64 * av;
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -224,18 +278,25 @@ pub fn objective(ds: &Dataset, loss: &dyn crate::losses::Loss, gamma: f64, x: &[
     let width = loss.width();
     let n = ds.n_features;
     let mut total = 0.0;
+    // reusable scratch hoisted out of the shard/class loops (the old code
+    // allocated a fresh prediction column per class per shard)
+    let mut xc = vec![0.0f32; n];
+    let mut col: Vec<f32> = Vec::new();
+    let mut pred: Vec<f32> = Vec::new();
     for shard in &ds.shards {
-        let m = shard.a.rows;
-        let mut pred = vec![0.0f32; m * width];
+        let m = shard.rows();
+        pred.resize(m * width, 0.0);
+        col.resize(m, 0.0);
         for c in 0..width {
-            let xc: Vec<f32> = (0..n).map(|i| x[c * n + i] as f32).collect();
-            let mut col = vec![0.0f32; m];
-            shard.a.matvec(&xc, &mut col);
+            for (i, xi) in xc.iter_mut().enumerate() {
+                *xi = x[c * n + i] as f32;
+            }
+            shard.data.matvec(&xc, &mut col);
             for r in 0..m {
                 pred[r * width + c] = col[r];
             }
         }
-        total += loss.value(&pred, &shard.labels);
+        total += loss.value(&pred[..m * width], &shard.labels);
     }
     total + ops::dot(x, x) / (2.0 * gamma)
 }

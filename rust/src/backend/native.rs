@@ -1,12 +1,16 @@
 //! Native Rust backend — the paper's "CPU backend".
 //!
 //! Per feature block it caches the Gram matrix `G_j = A_j^T A_j` (f64) at
-//! construction, computed **in place** from the shard through a
-//! stride-aware [`ColumnBlockView`] — no packed per-block copy (the bytes
-//! the old eager `column_block` packing would have cost are reported via
-//! `TransferLedger::host_copy_saved_bytes`).  Each block step is then one
-//! `A_j^T corr` kernel call over the shared shard plus a
-//! coefficient-space solve.  Two solver modes:
+//! construction, computed **in place** from the shard — through a
+//! stride-aware [`crate::linalg::ColumnBlockView`] on dense storage, or a
+//! per-block [`crate::linalg::CsrBlockView`] on CSR storage (the density-adaptive
+//! sparse data path; see `data::ShardData`).  No packed per-block copy
+//! either way (the bytes the old eager `column_block` packing would have
+//! cost are reported via `TransferLedger::host_copy_saved_bytes`).  Each
+//! block step is then one `A_j^T corr` kernel call over the shared shard
+//! plus a coefficient-space solve; the data-touching kernels dispatch on
+//! the storage kind per block, so sparse shards do O(nnz) work where the
+//! dense path does O(m n).  Two solver modes:
 //!
 //!   * `Cg { iters }` — identical iteration structure to the XLA artifact
 //!     (used by the parity tests and the honest CPU-vs-GPU comparison);
@@ -27,12 +31,11 @@
 //!     Cholesky/CG solve, one `A_j X` prediction refresh — instead of
 //!     re-running the granular step per class column.
 
-use std::sync::Arc;
-
 use super::{BlockParams, NodeBackend};
-use crate::data::{FeaturePlan, Shard};
-use crate::linalg::kernels::{self, ColumnBlockView};
-use crate::linalg::{conjugate_gradient, Cholesky, Matrix};
+use crate::data::{FeaturePlan, Shard, ShardData};
+use crate::linalg::csr;
+use crate::linalg::kernels;
+use crate::linalg::{conjugate_gradient, Cholesky};
 use crate::losses::Loss;
 use crate::metrics::TransferLedger;
 use crate::util::pool::WorkerPool;
@@ -59,9 +62,14 @@ struct Scratch {
 
 struct Block {
     /// Column range `[start, start + width)` of the shard — the feature
-    /// block `A_j`, read in place through `ColumnBlockView`.
+    /// block `A_j`, read in place through `ColumnBlockView` (dense) or
+    /// `CsrBlockView` (CSR).
     start: usize,
     width: usize,
+    /// Per-row entry subranges of the block within the parent CSR
+    /// (`Some` iff the shard storage is CSR; computed once here so every
+    /// sweep reuses them).
+    csr_ranges: Option<Vec<(usize, usize)>>,
     /// Cached Gram (width x width), f64.
     gram: Vec<f64>,
     /// Cached Cholesky of rho_l G + reg I (Direct mode only).
@@ -72,9 +80,10 @@ struct Block {
 }
 
 pub struct NativeBackend {
-    /// The node's full design matrix, shared with the dataset shard (Arc —
-    /// construction copies no feature data).
-    a: Arc<Matrix>,
+    /// The node's full design matrix, shared with the dataset shard (Arc
+    /// inside either storage variant — construction copies no feature
+    /// data).  Kernels dispatch on the variant per block.
+    a: ShardData,
     blocks: Vec<Block>,
     labels: Vec<f32>,
     loss: Box<dyn Loss>,
@@ -88,19 +97,32 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(shard: &Shard, plan: &FeaturePlan, loss: Box<dyn Loss>, mode: SolveMode) -> Self {
         assert_eq!(shard.width, loss.width(), "label width mismatch");
-        let a = shard.a.clone();
+        let a = shard.data.clone();
+        let rows = a.rows();
         let mut saved = 0u64;
         let blocks = plan
             .ranges
             .iter()
             .map(|&(start, width)| {
-                let view = a.column_block_view(start, width);
                 let mut gram32 = vec![0.0f32; width * width];
-                kernels::gram(&view, &mut gram32);
-                saved += (a.rows * width * std::mem::size_of::<f32>()) as u64;
+                let csr_ranges = match &a {
+                    ShardData::Dense(mat) => {
+                        let view = mat.column_block_view(start, width);
+                        kernels::gram(&view, &mut gram32);
+                        None
+                    }
+                    ShardData::Csr(c) => {
+                        let ranges = c.block_ranges(start, width);
+                        let view = c.block_view(&ranges, start, width);
+                        csr::gram_sparse(&view, &mut gram32);
+                        Some(ranges)
+                    }
+                };
+                saved += (rows * width * std::mem::size_of::<f32>()) as u64;
                 Block {
                     start,
                     width,
+                    csr_ranges,
                     gram: gram32.iter().map(|&v| v as f64).collect(),
                     chol: None,
                     chol_params: None,
@@ -109,7 +131,7 @@ impl NativeBackend {
             })
             .collect();
         NativeBackend {
-            m: a.rows,
+            m: rows,
             a,
             blocks,
             labels: shard.labels.clone(),
@@ -118,6 +140,11 @@ impl NativeBackend {
             pool: WorkerPool::new(1),
             inplace_saved_bytes: saved,
         }
+    }
+
+    /// Storage kind actually backing the data path ("dense" | "csr").
+    pub fn storage(&self) -> &'static str {
+        self.a.storage_name()
     }
 
     /// Set the worker-pool width for the block sweep: `1` = serial
@@ -155,7 +182,7 @@ fn ensure_chol(block: &mut Block, params: BlockParams) {
 /// granular `block_step` (`width == 1`) and the pooled `block_sweep`, so
 /// the two paths are bit-identical.
 fn solve_block(
-    a: &Matrix,
+    a: &ShardData,
     mode: SolveMode,
     block: &mut Block,
     params: BlockParams,
@@ -167,24 +194,36 @@ fn solve_block(
     pred_j: &mut [f32],
 ) {
     let n = block.width;
-    let m = a.rows;
+    let m = a.rows();
     debug_assert_eq!(corr.len(), width * m);
     debug_assert_eq!(x_j.len(), width * n);
     debug_assert_eq!(pred_j.len(), width * m);
-    let view = a.column_block_view(block.start, n);
 
     if matches!(mode, SolveMode::Direct) {
         ensure_chol(block, params);
     }
     let gram = &block.gram;
     let chol = &block.chol;
+    let start = block.start;
+    let csr_ranges = &block.csr_ranges;
     let s = &mut block.scratch;
     s.qt.resize(width * n, 0.0);
     s.rhs.resize(width * n, 0.0);
     s.x.resize(width * n, 0.0);
 
-    // Q = A_j^T C for all class columns at once (the data-touching op)
-    kernels::matmul_t(&view, corr, width, &mut s.qt);
+    // Q = A_j^T C for all class columns at once (the data-touching op,
+    // dispatched on the storage kind)
+    match (a, csr_ranges) {
+        (ShardData::Dense(mat), _) => {
+            let view = mat.column_block_view(start, n);
+            kernels::matmul_t(&view, corr, width, &mut s.qt);
+        }
+        (ShardData::Csr(c), Some(ranges)) => {
+            let view = c.block_view(ranges, start, n);
+            csr::spmm_t(&view, corr, width, &mut s.qt);
+        }
+        (ShardData::Csr(_), None) => unreachable!("csr shard without block ranges"),
+    }
 
     // rhs_c = rho_l (G x_c + q_c) + rho_c (z_c - u_c); warm-start x_c
     for c in 0..width {
@@ -237,7 +276,17 @@ fn solve_block(
         *o = v as f32;
     }
     // pred_j = A_j X for all class columns
-    kernels::matmul(&view, x_j, width, pred_j);
+    match (a, csr_ranges) {
+        (ShardData::Dense(mat), _) => {
+            let view = mat.column_block_view(start, n);
+            kernels::matmul(&view, x_j, width, pred_j);
+        }
+        (ShardData::Csr(c), Some(ranges)) => {
+            let view = c.block_view(ranges, start, n);
+            csr::spmm(&view, x_j, width, pred_j);
+        }
+        (ShardData::Csr(_), None) => unreachable!("csr shard without block ranges"),
+    }
 }
 
 impl NodeBackend for NativeBackend {
@@ -329,15 +378,18 @@ impl NodeBackend for NativeBackend {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
-    use crate::data::{FeaturePlan, SyntheticSpec};
+    use crate::data::{FeaturePlan, SparseMode, SyntheticSpec};
+    use crate::linalg::Matrix;
     use crate::losses::Squared;
     use crate::util::rng::Rng;
 
     fn setup(mode: SolveMode) -> (NativeBackend, FeaturePlan, usize, Arc<Matrix>) {
         let ds = SyntheticSpec::regression(24, 60, 1).generate();
         let plan = FeaturePlan::new(24, 2, 512);
-        let a = ds.shards[0].a.clone();
+        let a = ds.shards[0].data.as_dense().unwrap().clone();
         let be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
         (be, plan, 60, a)
     }
@@ -505,5 +557,72 @@ mod tests {
         let l = be.ledger();
         assert_eq!(l.host_copy_saved_bytes, (m * a.cols * 4) as u64);
         assert_eq!(l.h2d_bytes, 0);
+    }
+
+    /// The CSR data path must agree with the dense path on the same data
+    /// to kernel tolerance, for both solver modes and any thread count.
+    #[test]
+    fn csr_sweep_matches_dense_sweep() {
+        for mode in [SolveMode::Direct, SolveMode::Cg { iters: 24 }] {
+            let mut spec = SyntheticSpec::regression(24, 60, 1);
+            spec.density = 0.15;
+            let ds = spec.generate();
+            let plan = FeaturePlan::new(24, 4, 512);
+            let mut rng = Rng::seed_from(9);
+            let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, 60, 1);
+
+            let dense_shard = ds.shards[0].with_storage_policy(SparseMode::Never, 0.0);
+            let csr_shard = ds.shards[0].with_storage_policy(SparseMode::Always, 0.0);
+            assert_eq!(csr_shard.data.storage_name(), "csr");
+
+            let mut results = Vec::new();
+            for (shard, threads) in [(&dense_shard, 1), (&csr_shard, 1), (&csr_shard, 4)] {
+                let mut be = NativeBackend::new(shard, &plan, Box::new(Squared), mode)
+                    .with_threads(threads);
+                let mut x = x0.clone();
+                let mut p = p0.clone();
+                be.block_sweep(params(), 1, &corr, &z, &u, &mut x, &mut p);
+                results.push((x, p));
+            }
+            // dense vs csr: kernel tolerance (summation orders differ)
+            for (xb, pb) in [(&results[0].0, &results[1].0), (&results[0].1, &results[1].1)] {
+                for (va, vb) in xb.iter().zip(pb) {
+                    for (x, y) in va.iter().zip(vb) {
+                        let scale = 1.0f32.max(x.abs()).max(y.abs());
+                        assert!((x - y).abs() <= 1e-4 * scale, "{mode:?}: {x} vs {y}");
+                    }
+                }
+            }
+            // csr serial vs csr pooled: bit-identical
+            assert_eq!(results[1], results[2], "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn csr_multiclass_batches_match_dense() {
+        let width = 3;
+        let mut spec = SyntheticSpec::regression(18, 40, 1);
+        spec.density = 0.2;
+        let ds = spec.generate();
+        let plan = FeaturePlan::new(18, 3, 512);
+        let mut rng = Rng::seed_from(10);
+        let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, 40, width);
+
+        let mut out = Vec::new();
+        for mode in [SparseMode::Never, SparseMode::Always] {
+            let shard = ds.shards[0].with_storage_policy(mode, 0.0);
+            let mut be =
+                NativeBackend::new(&shard, &plan, Box::new(Squared), SolveMode::Direct);
+            let mut x = x0.clone();
+            let mut p = p0.clone();
+            be.block_sweep(params(), width, &corr, &z, &u, &mut x, &mut p);
+            out.push(x);
+        }
+        for (va, vb) in out[0].iter().zip(&out[1]) {
+            for (x, y) in va.iter().zip(vb) {
+                let scale = 1.0f32.max(x.abs()).max(y.abs());
+                assert!((x - y).abs() <= 1e-4 * scale, "{x} vs {y}");
+            }
+        }
     }
 }

@@ -95,7 +95,11 @@ impl XlaBackend {
                 man.classes
             );
         }
-        let m = shard.a.rows;
+        // The staging path packs dense row tiles into PJRT literals; CSR
+        // shards are densified once here (device-side sparse formats are
+        // the seam `ShardData` leaves open, not yet an artifact).
+        let a = shard.data.to_dense();
+        let m = a.rows;
         let tiles = m.div_ceil(tile_m);
         let mut ledger = TransferLedger::default();
 
@@ -114,7 +118,7 @@ impl XlaBackend {
                 // pack rows [row0, row0+count) of columns [start, start+width)
                 tile_buf.fill(0.0);
                 for r in 0..count {
-                    let src = &shard.a.row(row0 + r)[start..start + width];
+                    let src = &a.row(row0 + r)[start..start + width];
                     tile_buf[r * block_n..r * block_n + width].copy_from_slice(src);
                 }
                 let (tensor, secs) = rt.stage(&tile_buf, &[tile_m, block_n])?;

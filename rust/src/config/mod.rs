@@ -2,6 +2,7 @@
 //! validated builders and JSON file loading (`psfit train --config x.json`).
 
 use crate::coordinator::fault::FaultSpec;
+use crate::data::SparseMode;
 use crate::losses::LossKind;
 use crate::util::json::Json;
 
@@ -199,6 +200,15 @@ pub struct PlatformConfig {
     /// (`1` = serial, `0` = all available cores).  Results are
     /// bit-identical at any value — see `util::pool`.
     pub threads: usize,
+    /// Shard storage policy: `auto` (density-adaptive, the default),
+    /// `always` (force CSR), `never` (force dense).  See
+    /// `data::ShardData` and `psfit train --sparse`.
+    pub sparse: SparseMode,
+    /// Density at or below which `auto` picks CSR storage.  0.25 by
+    /// default: the crossover measured by `psfit bench` sits between the
+    /// 0.25 and 1.0 sweep points on the acceptance shape, and below it
+    /// the O(nnz) kernels win on both FLOPs and memory traffic.
+    pub sparse_threshold: f64,
     pub backend: BackendKind,
     /// Optional synthetic PCIe model for the transfer ledger: seconds =
     /// bytes / (gbps * 1e9 / 8) + latency.  `None` records measured copy
@@ -213,12 +223,28 @@ pub struct PlatformConfig {
     pub share_runtime: bool,
 }
 
+impl PlatformConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.sparse_threshold.is_nan()
+            || !(0.0..=1.0).contains(&self.sparse_threshold)
+        {
+            anyhow::bail!(
+                "platform.sparse_threshold must be in [0, 1], got {}",
+                self.sparse_threshold
+            );
+        }
+        Ok(())
+    }
+}
+
 impl Default for PlatformConfig {
     fn default() -> Self {
         PlatformConfig {
             nodes: 4,
             devices_per_node: 2,
             threads: 1,
+            sparse: SparseMode::Auto,
+            sparse_threshold: 0.25,
             backend: BackendKind::Native,
             pcie_gbps: None,
             pcie_latency_us: 10.0,
@@ -319,6 +345,17 @@ impl Config {
                                 cfg.platform.threads = v
                                     .as_usize()
                                     .ok_or_else(|| anyhow::anyhow!("platform.threads: int"))?
+                            }
+                            "sparse" => {
+                                cfg.platform.sparse = SparseMode::parse(
+                                    v.as_str()
+                                        .ok_or_else(|| anyhow::anyhow!("platform.sparse: str"))?,
+                                )?
+                            }
+                            "sparse_threshold" => {
+                                cfg.platform.sparse_threshold = v.as_f64().ok_or_else(|| {
+                                    anyhow::anyhow!("platform.sparse_threshold: num")
+                                })?
                             }
                             "backend" => {
                                 cfg.platform.backend = BackendKind::parse(
@@ -437,6 +474,7 @@ impl Config {
         }
         cfg.solver.validate()?;
         cfg.coordinator.validate()?;
+        cfg.platform.validate()?;
         Ok(cfg)
     }
 }
@@ -474,7 +512,8 @@ mod tests {
     fn json_roundtrip() {
         let src = r#"{
             "solver": {"rho_c": 2.0, "kappa": 10, "polish": false},
-            "platform": {"nodes": 8, "backend": "xla", "threads": 4},
+            "platform": {"nodes": 8, "backend": "xla", "threads": 4,
+                         "sparse": "always", "sparse_threshold": 0.1},
             "loss": "logistic"
         }"#;
         let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
@@ -484,9 +523,13 @@ mod tests {
         assert_eq!(cfg.platform.nodes, 8);
         assert_eq!(cfg.platform.backend, BackendKind::Xla);
         assert_eq!(cfg.platform.threads, 4);
+        assert_eq!(cfg.platform.sparse, SparseMode::Always);
+        assert_eq!(cfg.platform.sparse_threshold, 0.1);
         assert_eq!(cfg.loss, LossKind::Logistic);
-        // default stays serial
+        // defaults stay serial / density-adaptive
         assert_eq!(Config::default().platform.threads, 1);
+        assert_eq!(Config::default().platform.sparse, SparseMode::Auto);
+        assert_eq!(Config::default().platform.sparse_threshold, 0.25);
     }
 
     #[test]
@@ -501,6 +544,16 @@ mod tests {
     fn invalid_values_rejected() {
         let src = r#"{"solver": {"rho_c": -1.0}}"#;
         assert!(Config::from_json(&Json::parse(src).unwrap()).is_err());
+        for bad in [
+            r#"{"platform": {"sparse": "sometimes"}}"#,
+            r#"{"platform": {"sparse_threshold": 1.5}}"#,
+            r#"{"platform": {"sparse_threshold": -0.1}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
     }
 
     #[test]

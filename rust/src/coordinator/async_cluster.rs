@@ -23,7 +23,7 @@ use super::fault::FaultInjector;
 use super::scheduler::{ReplyAction, RoundScheduler};
 use crate::config::CoordinatorConfig;
 use crate::metrics::{CoordinationStats, TransferLedger};
-use crate::network::{Cluster, NodeReply, NodeWorker};
+use crate::network::{refresh_payload, Cluster, NodeReply, NodeWorker};
 
 enum Command {
     Round { round: usize, z: Arc<Vec<f64>> },
@@ -240,8 +240,12 @@ impl Cluster for AsyncCluster {
     }
 
     fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
-        let payload = Arc::new(z.to_vec());
-        self.current_z = Some(payload.clone());
+        // one shared payload per round; refilled in place when no
+        // straggler still holds last round's copy
+        let (payload, reused) = refresh_payload(&mut self.current_z, z);
+        if reused {
+            self.scheduler.net.net_alloc_saved_bytes += (z.len() * 8) as u64;
+        }
         let (k, targets) = self.scheduler.begin_round();
         for node in targets {
             self.push_z(node, k, payload.clone(), false);

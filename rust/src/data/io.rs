@@ -1,5 +1,6 @@
 //! Dataset persistence: a simple self-describing binary format (PSF1) for
-//! distributed datasets, plus a dense-CSV loader for real data.
+//! distributed datasets, a dense-CSV loader, and a LIBSVM/SVMLight reader
+//! for real sparse data (text, one-hot, genomics).
 //!
 //! Layout (little-endian):
 //!   magic "PSF1" | u32 nodes | u32 n_features | u32 width
@@ -8,14 +9,17 @@
 //!
 //! `support_true` is re-derived from `x_true` on load, so the file stays
 //! minimal.  Used by the examples to cache generated workloads and by
-//! users to bring their own data (`load_csv` builds a single-shard
-//! dataset that `partition::shard_sizes` can re-split).
+//! users to bring their own data (`load_csv` / `load_libsvm` build a
+//! single-shard dataset that `partition::shard_sizes` can re-split).
+//! PSF1 is a dense format: CSR shards are densified on save and the
+//! storage policy re-decides the format after load.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use super::partition::ShardData;
 use super::{Dataset, Shard};
-use crate::linalg::Matrix;
+use crate::linalg::{CsrMatrix, Matrix};
 
 const MAGIC: &[u8; 4] = b"PSF1";
 
@@ -59,8 +63,9 @@ pub fn save(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
         w.write_all(&v.to_le_bytes())?;
     }
     for shard in &ds.shards {
-        write_u32(&mut w, shard.a.rows as u32)?;
-        write_f32s(&mut w, &shard.a.data)?;
+        let a = shard.data.to_dense();
+        write_u32(&mut w, a.rows as u32)?;
+        write_f32s(&mut w, &a.data)?;
         write_f32s(&mut w, &shard.labels)?;
     }
     w.flush()?;
@@ -90,11 +95,11 @@ pub fn load(path: &Path) -> anyhow::Result<Dataset> {
         let data = read_f32s(&mut r, rows * n)?;
         let labels = read_f32s(&mut r, rows * width)?;
         shards.push(Shard {
-            a: std::sync::Arc::new(Matrix {
+            data: ShardData::Dense(std::sync::Arc::new(Matrix {
                 rows,
                 cols: n,
                 data,
-            }),
+            })),
             labels,
             width,
         });
@@ -145,8 +150,83 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
     );
     let a = Matrix::from_rows(rows);
     Ok(Dataset {
+        shards: vec![Shard::dense(a, labels, 1)],
+        x_true: vec![0.0; n],
+        support_true: Vec::new(),
+        n_features: n,
+        width: 1,
+    })
+}
+
+/// Load a LIBSVM/SVMLight file (`label idx:val ...`, 1-based ascending
+/// indices, `#` comments) as a single-shard dataset stored in CSR — the
+/// natural format for these files, which are overwhelmingly sparse.  The
+/// feature count is the largest index seen unless `n_features` pins it
+/// (needed when train/test splits see different tails).  No ground truth.
+pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad label", lineno + 1))?;
+        let mut entries: Vec<(u32, f32)> = Vec::new();
+        for tok in parts {
+            if tok.starts_with("qid:") {
+                continue; // ranking qualifier: not a feature
+            }
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected idx:val, got `{tok}`", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad index `{idx}`", lineno + 1))?;
+            anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
+            anyhow::ensure!(
+                idx <= u32::MAX as usize,
+                "line {}: index {idx} exceeds the u32 column limit",
+                lineno + 1
+            );
+            let val: f32 = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?;
+            let col = idx - 1;
+            if let Some(&(prev, _)) = entries.last() {
+                anyhow::ensure!(
+                    col as u32 > prev,
+                    "line {}: indices must be strictly increasing",
+                    lineno + 1
+                );
+            }
+            max_col = max_col.max(col + 1);
+            entries.push((col as u32, val));
+        }
+        labels.push(label);
+        rows.push(entries);
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty libsvm file");
+    let n = match n_features {
+        Some(n) => {
+            anyhow::ensure!(n >= max_col, "n_features {n} < largest index {max_col}");
+            n
+        }
+        None => max_col,
+    };
+    anyhow::ensure!(n > 0, "no features in libsvm file");
+    let csr = CsrMatrix::from_rows(n, rows);
+    Ok(Dataset {
         shards: vec![Shard {
-            a: std::sync::Arc::new(a),
+            data: ShardData::Csr(std::sync::Arc::new(csr)),
             labels,
             width: 1,
         }],
@@ -155,6 +235,29 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
         n_features: n,
         width: 1,
     })
+}
+
+/// Write a width-1 dataset in LIBSVM format (1-based indices, nonzeros
+/// only) — the round-trip partner of [`load_libsvm`].
+pub fn save_libsvm(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(ds.width == 1, "libsvm export is scalar-label only");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for shard in &ds.shards {
+        let csr = shard.data.to_csr();
+        for r in 0..csr.rows {
+            write!(w, "{}", shard.labels[r])?;
+            let (cols, vals) = csr.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                write!(w, " {}:{}", c + 1, v)?;
+            }
+            writeln!(w)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -173,7 +276,7 @@ mod tests {
         assert_eq!(back.x_true, ds.x_true);
         assert_eq!(back.support_true, ds.support_true);
         for (a, b) in back.shards.iter().zip(&ds.shards) {
-            assert_eq!(a.a.data, b.a.data);
+            assert_eq!(a.data.to_dense().data, b.data.to_dense().data);
             assert_eq!(a.labels, b.labels);
         }
     }
@@ -195,6 +298,87 @@ mod tests {
         let path = std::env::temp_dir().join("psfit_io_garbage.psf");
         std::fs::write(&path, b"not a dataset").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn libsvm_loader_parses_sparse_rows() {
+        let path = std::env::temp_dir().join("psfit_io_test.svm");
+        std::fs::write(
+            &path,
+            "# header comment\n1 1:0.5 3:-2.0  # trailing comment\n-1 2:1.5\n1\n",
+        )
+        .unwrap();
+        let ds = load_libsvm(&path, None).unwrap();
+        assert_eq!(ds.n_features, 3);
+        assert_eq!(ds.total_samples(), 3);
+        assert_eq!(ds.shards[0].labels, vec![1.0, -1.0, 1.0]);
+        let csr = ds.shards[0].data.as_csr().unwrap();
+        assert_eq!(csr.nnz(), 3);
+        let dense = csr.to_dense();
+        assert_eq!(dense.row(0), &[0.5, 0.0, -2.0]);
+        assert_eq!(dense.row(1), &[0.0, 1.5, 0.0]);
+        assert_eq!(dense.row(2), &[0.0, 0.0, 0.0]); // empty row is legal
+
+        // pinned feature count pads the tail
+        let ds = load_libsvm(&path, Some(5)).unwrap();
+        assert_eq!(ds.n_features, 5);
+        assert!(load_libsvm(&path, Some(2)).is_err(), "too-small pin");
+    }
+
+    #[test]
+    fn libsvm_roundtrip_preserves_values() {
+        let mut spec = SyntheticSpec::regression(15, 40, 2);
+        spec.density = 0.2;
+        let mut ds = spec.generate();
+        ds.apply_storage(crate::data::SparseMode::Always, 0.0);
+        let path = std::env::temp_dir().join("psfit_io_roundtrip.svm");
+        save_libsvm(&ds, &path).unwrap();
+        let back = load_libsvm(&path, Some(15)).unwrap();
+        assert_eq!(back.total_samples(), 40);
+        let (a0, l0) = ds.stacked();
+        let (a1, l1) = back.stacked();
+        assert_eq!(l0, l1);
+        for (x, y) in a0.data.iter().zip(&a1.data) {
+            // values survive the decimal text round-trip to f32 accuracy
+            assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn resplit_distributes_loaded_shard_preserving_rows() {
+        let path = std::env::temp_dir().join("psfit_io_resplit.svm");
+        std::fs::write(
+            &path,
+            "1 1:1.0\n-1 2:2.0\n1 3:3.0\n-1 1:4.0\n1 2:5.0\n",
+        )
+        .unwrap();
+        let ds = load_libsvm(&path, None).unwrap();
+        let split = ds.resplit(2);
+        assert_eq!(split.nodes(), 2);
+        let sizes: Vec<usize> = split.shards.iter().map(|s| s.rows()).collect();
+        assert_eq!(sizes, vec![3, 2]);
+        // storage kind preserved, row order and content intact
+        assert!(split.shards.iter().all(|s| s.data.is_csr()));
+        let (a0, l0) = ds.stacked();
+        let (a1, l1) = split.stacked();
+        assert_eq!(a0.data, a1.data);
+        assert_eq!(l0, l1);
+
+        // dense datasets resplit densely
+        let dense = SyntheticSpec::regression(6, 10, 1).generate();
+        let split = dense.resplit(3);
+        assert_eq!(split.nodes(), 3);
+        assert!(split.shards.iter().all(|s| !s.data.is_csr()));
+        assert_eq!(dense.stacked().0.data, split.stacked().0.data);
+    }
+
+    #[test]
+    fn libsvm_rejects_malformed_lines() {
+        let path = std::env::temp_dir().join("psfit_io_bad.svm");
+        for bad in ["1 3:0.5 2:0.5\n", "1 0:1.0\n", "1 x:1.0\n", "abc 1:1.0\n", ""] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(load_libsvm(&path, None).is_err(), "accepted: {bad:?}");
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ pub mod io;
 pub mod partition;
 pub mod synthetic;
 
-pub use partition::{FeaturePlan, Shard};
+pub use partition::{FeaturePlan, Shard, ShardData, SparseMode};
 pub use synthetic::{SyntheticSpec, Task};
 
 use crate::linalg::Matrix;
@@ -26,26 +26,133 @@ pub struct Dataset {
 
 impl Dataset {
     pub fn total_samples(&self) -> usize {
-        self.shards.iter().map(|s| s.a.rows).sum()
+        self.shards.iter().map(|s| s.rows()).sum()
     }
 
     pub fn nodes(&self) -> usize {
         self.shards.len()
     }
 
+    /// Stored-entry fraction over all shards (weighting each by size).
+    pub fn density(&self) -> f64 {
+        let size: usize = self.shards.iter().map(|s| s.rows() * s.data.cols()).sum();
+        if size == 0 {
+            return 1.0;
+        }
+        let nnz: usize = self.shards.iter().map(|s| s.data.nnz()).sum();
+        nnz as f64 / size as f64
+    }
+
+    /// Convert every shard's storage per the policy (see
+    /// [`ShardData::with_policy`]) — the "partition time" storage decision
+    /// the `--sparse` CLI and `platform.sparse_threshold` config drive.
+    pub fn apply_storage(&mut self, mode: SparseMode, threshold: f64) {
+        for shard in self.shards.iter_mut() {
+            shard.data = shard.data.with_policy(mode, threshold);
+        }
+    }
+
+    /// Re-split all samples into `nodes` row shards, as evenly as
+    /// possible, preserving row order and storage kind (CSR stays CSR
+    /// when every source shard is CSR; otherwise the result is dense).
+    /// This is how a single-shard dataset from `io::load_libsvm` /
+    /// `io::load_csv` becomes a distributed one.
+    pub fn resplit(&self, nodes: usize) -> Dataset {
+        let total = self.total_samples();
+        assert!(nodes > 0, "need at least one node");
+        assert!(total >= nodes, "cannot split {total} samples across {nodes} nodes");
+        let n = self.n_features;
+        let sizes = partition::shard_sizes(total, nodes);
+        let all_csr = self.shards.iter().all(|s| s.data.is_csr());
+        // dense row access is only materialized when the output is dense
+        let dense_src: Vec<Option<std::sync::Arc<Matrix>>> = self
+            .shards
+            .iter()
+            .map(|s| if all_csr { None } else { Some(s.data.to_dense()) })
+            .collect();
+        // prefix offsets of source shards for global-row lookup
+        let mut src_off = vec![0usize];
+        for s in &self.shards {
+            src_off.push(src_off.last().unwrap() + s.rows());
+        }
+        let locate = |g: usize| -> (usize, usize) {
+            let si = src_off.partition_point(|&o| o <= g) - 1;
+            (si, g - src_off[si])
+        };
+        let mut shards_out = Vec::with_capacity(nodes);
+        let mut g0 = 0usize;
+        for &count in &sizes {
+            let g1 = g0 + count;
+            let mut labels = Vec::with_capacity(count * self.width);
+            if all_csr {
+                let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(count);
+                for g in g0..g1 {
+                    let (si, r) = locate(g);
+                    let csr = self.shards[si].data.as_csr().unwrap();
+                    let (cols, vals) = csr.row(r);
+                    rows.push(cols.iter().copied().zip(vals.iter().copied()).collect());
+                    labels.extend_from_slice(
+                        &self.shards[si].labels[r * self.width..(r + 1) * self.width],
+                    );
+                }
+                shards_out.push(Shard {
+                    data: ShardData::Csr(std::sync::Arc::new(
+                        crate::linalg::CsrMatrix::from_rows(n, rows),
+                    )),
+                    labels,
+                    width: self.width,
+                });
+            } else {
+                let mut a = Matrix::zeros(count, n);
+                for (out_r, g) in (g0..g1).enumerate() {
+                    let (si, r) = locate(g);
+                    let src = dense_src[si].as_ref().unwrap();
+                    a.data[out_r * n..(out_r + 1) * n].copy_from_slice(src.row(r));
+                    labels.extend_from_slice(
+                        &self.shards[si].labels[r * self.width..(r + 1) * self.width],
+                    );
+                }
+                shards_out.push(Shard::dense(a, labels, self.width));
+            }
+            g0 = g1;
+        }
+        Dataset {
+            shards: shards_out,
+            x_true: self.x_true.clone(),
+            support_true: self.support_true.clone(),
+            n_features: n,
+            width: self.width,
+        }
+    }
+
     /// Stack all shards back into one (m_total, n) matrix + labels —
-    /// used by the centralized baselines (Lasso, MIP, IHT).
+    /// used by the centralized baselines (Lasso, MIP, IHT).  CSR shards
+    /// scatter their stored entries directly into the output (no dense
+    /// intermediate).
     pub fn stacked(&self) -> (Matrix, Vec<f32>) {
         let m_total = self.total_samples();
-        let mut a = Matrix::zeros(m_total, self.n_features);
+        let n = self.n_features;
+        let mut a = Matrix::zeros(m_total, n);
         let mut labels = Vec::with_capacity(m_total * self.width);
         let mut row = 0;
         for shard in &self.shards {
-            let bytes = shard.a.rows * self.n_features;
-            a.data[row * self.n_features..row * self.n_features + bytes]
-                .copy_from_slice(&shard.a.data);
+            match &shard.data {
+                ShardData::Dense(d) => {
+                    let bytes = d.rows * n;
+                    a.data[row * n..row * n + bytes].copy_from_slice(&d.data);
+                }
+                ShardData::Csr(c) => {
+                    for r in 0..c.rows {
+                        let (cols, vals) = c.row(r);
+                        let dst = &mut a.data[(row + r) * n..(row + r + 1) * n];
+                        for (&cc, &v) in cols.iter().zip(vals) {
+                            dst[cc as usize] = v;
+                        }
+                    }
+                }
+            }
             labels.extend_from_slice(&shard.labels);
-            row += shard.a.rows;
+            row += shard.rows();
         }
         (a, labels)
     }

@@ -8,20 +8,203 @@
 
 use std::sync::Arc;
 
-use crate::linalg::Matrix;
+use crate::linalg::{CsrMatrix, Matrix};
+
+/// Storage-format policy for shard design matrices (config
+/// `platform.sparse` / `psfit train --sparse {auto,always,never}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Pick CSR when the measured density is at or below the threshold.
+    Auto,
+    /// Force CSR storage regardless of density.
+    Always,
+    /// Force dense storage (the historical behaviour).
+    Never,
+}
+
+impl SparseMode {
+    pub fn parse(s: &str) -> anyhow::Result<SparseMode> {
+        match s {
+            "auto" => Ok(SparseMode::Auto),
+            "always" | "csr" => Ok(SparseMode::Always),
+            "never" | "dense" => Ok(SparseMode::Never),
+            other => anyhow::bail!("unknown sparse mode `{other}` (auto|always|never)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparseMode::Auto => "auto",
+            SparseMode::Always => "always",
+            SparseMode::Never => "never",
+        }
+    }
+}
+
+/// A shard's design matrix in one of the supported storage formats — the
+/// repo's first storage abstraction, the seam later device-side sparse
+/// formats (CSC, blocked-ELL) plug into.  Reference-counted either way so
+/// backends hold the data without copying.
+#[derive(Debug, Clone)]
+pub enum ShardData {
+    /// Row-major dense — read in place through stride-aware
+    /// [`crate::linalg::ColumnBlockView`]s.
+    Dense(Arc<Matrix>),
+    /// Compressed sparse rows — read in place through per-column-block
+    /// [`crate::linalg::CsrBlockView`]s.
+    Csr(Arc<CsrMatrix>),
+}
+
+impl ShardData {
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardData::Dense(a) => a.rows,
+            ShardData::Csr(c) => c.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            ShardData::Dense(a) => a.cols,
+            ShardData::Csr(c) => c.cols,
+        }
+    }
+
+    /// Nonzero count (dense storage counts on demand).
+    pub fn nnz(&self) -> usize {
+        match self {
+            ShardData::Dense(a) => a.data.iter().filter(|&&v| v != 0.0).count(),
+            ShardData::Csr(c) => c.nnz(),
+        }
+    }
+
+    /// Nonzero fraction in [0, 1] (1.0 for empty shapes, so the storage
+    /// policy never picks CSR for degenerate data).
+    pub fn density(&self) -> f64 {
+        let size = self.rows() * self.cols();
+        if size == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / size as f64
+        }
+    }
+
+    pub fn is_csr(&self) -> bool {
+        matches!(self, ShardData::Csr(_))
+    }
+
+    pub fn storage_name(&self) -> &'static str {
+        match self {
+            ShardData::Dense(_) => "dense",
+            ShardData::Csr(_) => "csr",
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&Arc<Matrix>> {
+        match self {
+            ShardData::Dense(a) => Some(a),
+            ShardData::Csr(_) => None,
+        }
+    }
+
+    pub fn as_csr(&self) -> Option<&Arc<CsrMatrix>> {
+        match self {
+            ShardData::Csr(c) => Some(c),
+            ShardData::Dense(_) => None,
+        }
+    }
+
+    /// Dense view of the data: a cheap `Arc` clone for dense storage, a
+    /// materialization for CSR (the XLA staging path and the centralized
+    /// baselines need packed rows).
+    pub fn to_dense(&self) -> Arc<Matrix> {
+        match self {
+            ShardData::Dense(a) => a.clone(),
+            ShardData::Csr(c) => Arc::new(c.to_dense()),
+        }
+    }
+
+    /// CSR view of the data: a cheap `Arc` clone for CSR storage, a
+    /// compression for dense.
+    pub fn to_csr(&self) -> Arc<CsrMatrix> {
+        match self {
+            ShardData::Dense(a) => Arc::new(CsrMatrix::from_dense(a)),
+            ShardData::Csr(c) => c.clone(),
+        }
+    }
+
+    /// y = A x, dispatched on storage kind.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            ShardData::Dense(a) => a.matvec(x, y),
+            ShardData::Csr(c) => c.spmv(x, y),
+        }
+    }
+
+    /// y = A^T v, dispatched on storage kind.
+    pub fn matvec_t(&self, v: &[f32], y: &mut [f32]) {
+        match self {
+            ShardData::Dense(a) => a.matvec_t(v, y),
+            ShardData::Csr(c) => c.spmv_t(v, y),
+        }
+    }
+
+    /// The storage the policy picks for this data (cheap `Arc` clone when
+    /// no conversion is needed).  `Auto` compares the measured density
+    /// against `threshold` (CSR at or below it).
+    pub fn with_policy(&self, mode: SparseMode, threshold: f64) -> ShardData {
+        let want_csr = match mode {
+            SparseMode::Always => true,
+            SparseMode::Never => false,
+            SparseMode::Auto => self.density() <= threshold,
+        };
+        if want_csr {
+            ShardData::Csr(self.to_csr())
+        } else {
+            ShardData::Dense(self.to_dense())
+        }
+    }
+}
 
 /// One node's local data.
 ///
 /// The design matrix is reference-counted so backends can hold it without
 /// copying: the native backend reads its feature blocks in place through
-/// stride-aware [`crate::linalg::ColumnBlockView`]s (the paper's "delayed"
-/// decomposition becomes a view, not a packing copy).
+/// stride-aware [`crate::linalg::ColumnBlockView`]s (dense storage) or
+/// per-block [`crate::linalg::CsrBlockView`]s (CSR storage) — the paper's
+/// "delayed" decomposition is a view either way, not a packing copy.
 #[derive(Debug, Clone)]
 pub struct Shard {
-    pub a: Arc<Matrix>,
+    pub data: ShardData,
     /// Row-major (rows, width) labels.
     pub labels: Vec<f32>,
     pub width: usize,
+}
+
+impl Shard {
+    /// Dense-backed shard (the historical constructor shape).
+    pub fn dense(a: Matrix, labels: Vec<f32>, width: usize) -> Shard {
+        Shard {
+            data: ShardData::Dense(Arc::new(a)),
+            labels,
+            width,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// This shard with its storage converted per the policy (labels are
+    /// cloned; the design matrix is `Arc`-shared when no conversion is
+    /// needed).
+    pub fn with_storage_policy(&self, mode: SparseMode, threshold: f64) -> Shard {
+        Shard {
+            data: self.data.with_policy(mode, threshold),
+            labels: self.labels.clone(),
+            width: self.width,
+        }
+    }
 }
 
 /// The feature-decomposition plan for one node: M column blocks.
@@ -135,6 +318,50 @@ mod tests {
         // the caller asked for 1.
         let plan = FeaturePlan::new(1000, 1, 512);
         assert!(plan.blocks >= 2);
+    }
+
+    #[test]
+    fn shard_data_policy_picks_storage_by_density() {
+        // 2 nonzeros in 8 entries: density 0.25
+        let a = Matrix::from_rows(vec![vec![1.0, 0.0, 0.0, 0.0], vec![0.0, 0.0, 2.0, 0.0]]);
+        let d = ShardData::Dense(Arc::new(a));
+        assert!((d.density() - 0.25).abs() < 1e-12);
+        assert!(d.with_policy(SparseMode::Auto, 0.25).is_csr());
+        assert!(!d.with_policy(SparseMode::Auto, 0.2).is_csr());
+        assert!(d.with_policy(SparseMode::Always, 0.0).is_csr());
+        let back = d
+            .with_policy(SparseMode::Always, 0.0)
+            .with_policy(SparseMode::Never, 0.0);
+        assert_eq!(back.to_dense().data, d.to_dense().data);
+        assert_eq!(back.storage_name(), "dense");
+    }
+
+    #[test]
+    fn shard_data_matvec_dispatches_identically() {
+        let a = Matrix::from_rows(vec![vec![1.0, 0.0, 3.0], vec![0.0, -2.0, 0.0]]);
+        let dense = ShardData::Dense(Arc::new(a));
+        let csr = dense.with_policy(SparseMode::Always, 0.0);
+        let x = [1.0f32, 2.0, -1.0];
+        let v = [0.5f32, 4.0];
+        let (mut y0, mut y1) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        dense.matvec(&x, &mut y0);
+        csr.matvec(&x, &mut y1);
+        assert_eq!(y0, vec![-2.0, -4.0]);
+        assert_eq!(y0, y1);
+        let (mut z0, mut z1) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        dense.matvec_t(&v, &mut z0);
+        csr.matvec_t(&v, &mut z1);
+        assert_eq!(z0, vec![0.5, -8.0, 1.5]);
+        assert_eq!(z0, z1);
+    }
+
+    #[test]
+    fn sparse_mode_parses() {
+        assert_eq!(SparseMode::parse("auto").unwrap(), SparseMode::Auto);
+        assert_eq!(SparseMode::parse("always").unwrap(), SparseMode::Always);
+        assert_eq!(SparseMode::parse("dense").unwrap(), SparseMode::Never);
+        assert!(SparseMode::parse("maybe").is_err());
+        assert_eq!(SparseMode::Never.name(), "never");
     }
 
     #[test]

@@ -78,17 +78,26 @@ pub fn build_workers(ds: &Dataset, cfg: &Config) -> anyhow::Result<Vec<NodeWorke
     for (i, shard) in ds.shards.iter().enumerate() {
         let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
         let backend: Box<dyn crate::backend::NodeBackend> = match cfg.platform.backend {
-            BackendKind::Native => Box::new(
-                NativeBackend::new(
-                    shard,
-                    &plan,
-                    loss,
-                    SolveMode::Cg {
-                        iters: cfg.solver.cg_iters,
-                    },
+            BackendKind::Native => {
+                // partition-time storage decision: the configured policy
+                // (`--sparse` / platform.sparse_threshold) picks dense or
+                // CSR per shard; `Auto` measures the actual density
+                let shard = shard.with_storage_policy(
+                    cfg.platform.sparse,
+                    cfg.platform.sparse_threshold,
+                );
+                Box::new(
+                    NativeBackend::new(
+                        &shard,
+                        &plan,
+                        loss,
+                        SolveMode::Cg {
+                            iters: cfg.solver.cg_iters,
+                        },
+                    )
+                    .with_threads(cfg.platform.threads),
                 )
-                .with_threads(cfg.platform.threads),
-            ),
+            }
             BackendKind::Xla => {
                 let rt = match &shared_rt {
                     Some(rt) => rt.clone(),

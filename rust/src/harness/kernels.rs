@@ -1,5 +1,7 @@
-//! `psfit bench` — kernel-layer micro-benchmarks: naive vs tiled kernels
-//! and serial vs pooled block sweeps across problem shapes.
+//! `psfit bench` — kernel-layer micro-benchmarks: naive vs tiled kernels,
+//! serial vs pooled block sweeps, and the dense-vs-CSR sparse data path
+//! swept across densities (0.01, 0.05, 0.25, 1.0) so the report records
+//! the storage crossover that calibrates `platform.sparse_threshold`.
 //!
 //! Prints the usual pretty table / optional CSV and always writes a
 //! machine-readable `BENCH_kernels.json` (validated by the CI smoke step
@@ -10,8 +12,8 @@ use std::time::Duration;
 
 use crate::backend::native::{NativeBackend, SolveMode};
 use crate::backend::{BlockParams, NodeBackend};
-use crate::data::{FeaturePlan, SyntheticSpec};
-use crate::linalg::{kernels, Matrix};
+use crate::data::{FeaturePlan, SparseMode, SyntheticSpec};
+use crate::linalg::{csr, kernels, CsrMatrix, Matrix};
 use crate::losses::Squared;
 use crate::metrics::CsvTable;
 use crate::util::bench::bench;
@@ -35,6 +37,8 @@ struct Entry {
     m: usize,
     n: usize,
     blocks: usize,
+    /// Design-matrix nonzero fraction the entry ran on (1.0 = dense).
+    density: f64,
     baseline_ns: f64,
     optimized_ns: f64,
 }
@@ -54,6 +58,7 @@ impl Entry {
             ("m", Json::Num(self.m as f64)),
             ("n", Json::Num(self.n as f64)),
             ("blocks", Json::Num(self.blocks as f64)),
+            ("density", Json::Num(self.density)),
             ("baseline_ns", Json::Num(self.baseline_ns)),
             ("optimized_ns", Json::Num(self.optimized_ns)),
             ("speedup", Json::Num(self.speedup())),
@@ -63,7 +68,7 @@ impl Entry {
 
 fn report_json(entries: &[Entry], quick: bool, threads: usize) -> Json {
     Json::obj(vec![
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("generated_by", Json::Str("psfit bench".to_string())),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -81,6 +86,8 @@ pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
     } else {
         &[(512, 128, 2), (2048, 512, 4), (4096, 1024, 8)]
     };
+    // sparse-path density sweep (recorded per entry in the report)
+    const DENSITIES: &[f64] = &[0.01, 0.05, 0.25, 1.0];
     let target = Duration::from_millis(if opts.quick { 12 } else { 120 });
     let threads = WorkerPool::new(opts.threads).threads();
 
@@ -101,6 +108,7 @@ pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
                 m,
                 n: cols,
                 blocks,
+                density: 1.0,
                 baseline_ns: base_ns,
                 optimized_ns: opt_ns,
             });
@@ -186,6 +194,108 @@ pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
             pooled.block_sweep(params, 1, &corr, &z, &u, &mut xb, &mut pb);
         });
         push("block_sweep", n, b0.median_ns, b1.median_ns);
+
+        // ---- sparse data path: dense tiled vs CSR, swept over density --
+        // (records the storage crossover; at density 1.0 CSR loses, which
+        // is exactly what `platform.sparse_threshold` encodes)
+        for &density in DENSITIES {
+            eprintln!("#   density {density}");
+            let mut srng = Rng::seed_from(7);
+            let mut ad = Matrix::zeros(m, n);
+            srng.fill_normal_f32(&mut ad.data);
+            if density < 1.0 {
+                for vv in ad.data.iter_mut() {
+                    if srng.uniform() >= density {
+                        *vv = 0.0;
+                    }
+                }
+            }
+            let sp = CsrMatrix::from_dense(&ad);
+            let dview = ad.view();
+
+            // spmv_t: the per-iteration data-touching op
+            let vm: Vec<f32> = (0..m).map(|_| srng.normal_f32()).collect();
+            let ranges = sp.block_ranges(0, n);
+            let sview = sp.block_view(&ranges, 0, n);
+            let mut ys = vec![0.0f32; n];
+            let b0 = bench("spmv_t_dense", target, || {
+                kernels::matvec_t(&dview, &vm, &mut ys);
+                std::hint::black_box(&ys);
+            });
+            let b1 = bench("spmv_t_csr", target, || {
+                csr::spmv_t(&sview, &vm, &mut ys);
+                std::hint::black_box(&ys);
+            });
+            entries.push(Entry {
+                name: "spmv_t",
+                m,
+                n,
+                blocks,
+                density,
+                baseline_ns: b0.median_ns,
+                optimized_ns: b1.median_ns,
+            });
+
+            // gram on one feature block (setup-time op), both in place
+            let sbw = n / blocks;
+            let branges = sp.block_ranges(0, sbw);
+            let bsview = sp.block_view(&branges, 0, sbw);
+            let bdview = ad.column_block_view(0, sbw);
+            let mut gs = vec![0.0f32; sbw * sbw];
+            let b0 = bench("gram_dense", target, || {
+                gs.fill(0.0);
+                kernels::gram(&bdview, &mut gs);
+                std::hint::black_box(&gs);
+            });
+            let b1 = bench("gram_csr", target, || {
+                gs.fill(0.0);
+                csr::gram_sparse(&bsview, &mut gs);
+                std::hint::black_box(&gs);
+            });
+            entries.push(Entry {
+                name: "gram_sparse",
+                m,
+                n: sbw,
+                blocks,
+                density,
+                baseline_ns: b0.median_ns,
+                optimized_ns: b1.median_ns,
+            });
+
+            // whole inner-sweep step 3 on a planted sparse dataset:
+            // dense tiled backend vs CSR backend, storage the only delta
+            let mut sspec = SyntheticSpec::regression(n, m, 1);
+            sspec.density = density;
+            let sds = sspec.generate();
+            let dense_shard = sds.shards[0].with_storage_policy(SparseMode::Never, 0.0);
+            let csr_shard = sds.shards[0].with_storage_policy(SparseMode::Always, 0.0);
+            let scorr: Vec<f32> = (0..m).map(|_| srng.normal_f32()).collect();
+            let sz: Vec<Vec<f32>> =
+                plan.ranges.iter().map(|&(_, w)| vec![0.1; w]).collect();
+            let su: Vec<Vec<f32>> =
+                plan.ranges.iter().map(|&(_, w)| vec![0.0; w]).collect();
+            let mut sxb: Vec<Vec<f32>> =
+                plan.ranges.iter().map(|&(_, w)| vec![0.0; w]).collect();
+            let mut spb: Vec<Vec<f32>> = plan.ranges.iter().map(|_| vec![0.0; m]).collect();
+            let mut dense_be =
+                NativeBackend::new(&dense_shard, &plan, Box::new(Squared), mode);
+            let mut csr_be = NativeBackend::new(&csr_shard, &plan, Box::new(Squared), mode);
+            let b0 = bench("sweep_dense", target, || {
+                dense_be.block_sweep(params, 1, &scorr, &sz, &su, &mut sxb, &mut spb);
+            });
+            let b1 = bench("sweep_csr", target, || {
+                csr_be.block_sweep(params, 1, &scorr, &sz, &su, &mut sxb, &mut spb);
+            });
+            entries.push(Entry {
+                name: "sparse_block_sweep",
+                m,
+                n,
+                blocks,
+                density,
+                baseline_ns: b0.median_ns,
+                optimized_ns: b1.median_ns,
+            });
+        }
     }
 
     // ---- emit ------------------------------------------------------------
@@ -199,6 +309,7 @@ pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
         "m",
         "n",
         "blocks",
+        "density",
         "baseline_ns",
         "optimized_ns",
         "speedup",
@@ -209,6 +320,7 @@ pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
             e.m.to_string(),
             e.n.to_string(),
             e.blocks.to_string(),
+            format!("{}", e.density),
             format!("{:.0}", e.baseline_ns),
             format!("{:.0}", e.optimized_ns),
             format!("{:.2}", e.speedup()),
@@ -228,16 +340,19 @@ mod tests {
             m: 64,
             n: 16,
             blocks: 2,
+            density: 0.05,
             baseline_ns: 200.0,
             optimized_ns: 100.0,
         }];
         let j = report_json(&entries, true, 4);
         let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("quick").unwrap().as_bool(), Some(true));
         assert_eq!(parsed.get("threads").unwrap().as_usize(), Some(4));
         let arr = parsed.get("entries").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("name").unwrap().as_str(), Some("matvec"));
+        assert_eq!(arr[0].get("density").unwrap().as_f64(), Some(0.05));
         assert_eq!(arr[0].get("speedup").unwrap().as_f64(), Some(2.0));
     }
 
@@ -248,6 +363,7 @@ mod tests {
             m: 1,
             n: 1,
             blocks: 1,
+            density: 1.0,
             baseline_ns: 10.0,
             optimized_ns: 0.0,
         };

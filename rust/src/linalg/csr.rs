@@ -1,0 +1,639 @@
+//! Compressed-sparse-row storage and kernels for the sparse data path.
+//!
+//! The paper's target workloads (text, one-hot, genomics) are
+//! overwhelmingly zero-valued, so the dense kernels in [`super::kernels`]
+//! burn O(m n) work regardless of density.  [`CsrMatrix`] stores only the
+//! nonzeros; the kernels here are the sparse twins of the dense layer:
+//!
+//!   * `spmv`        — y = A x          (twin of `kernels::matvec`)
+//!   * `spmv_t`      — y = A^T v        (twin of `kernels::matvec_t`)
+//!   * `spmm`        — Y = A X, k RHS   (twin of `kernels::matmul`)
+//!   * `spmm_t`      — Y = A^T V, k RHS (twin of `kernels::matmul_t`)
+//!   * `gram_sparse` — G += A^T A       (twin of `kernels::gram`)
+//!
+//! Each has a `_naive` reference twin mirroring the `kernels.rs` contract,
+//! pinned against it by the property tests and timed by `psfit bench`.
+//!
+//! Feature blocks are read **in place** through [`CsrBlockView`] — the
+//! sparse twin of [`super::kernels::ColumnBlockView`].  Because column
+//! indices are sorted within each row, the entries of a contiguous column
+//! block `[col0, col0 + width)` form one contiguous subrange of every
+//! row's entry list; a block view is just those per-row subranges,
+//! computed once (binary search per row) and reused for every sweep.
+//!
+//! Determinism contract: identical to the dense layer — kernels are
+//! single-threaded, their summation order is a fixed function of the
+//! stored entry order, so results are bit-identical from run to run and
+//! at any worker-pool width.  (Sparse and *dense* kernels sum in
+//! different orders, so cross-storage agreement is to rounding, not bits
+//! — the parity tests use 1e-5 like the tiled-vs-naive pins.)
+
+use super::matrix::Matrix;
+
+/// Row-major compressed sparse rows: row `i`'s entries live at
+/// `col_idx[row_ptr[i]..row_ptr[i+1]]` / `vals[..]`, column indices
+/// strictly increasing within a row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `col_idx` / `vals`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (column, value) entry lists.  Entries must have
+    /// strictly increasing columns within each row; zeros may be stored
+    /// explicitly (the LIBSVM reader keeps whatever the file says).
+    pub fn from_rows(cols: usize, rows: Vec<Vec<(u32, f32)>>) -> CsrMatrix {
+        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+        row_ptr.push(0usize);
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for row in &rows {
+            let mut prev: Option<u32> = None;
+            for &(c, v) in row {
+                assert!((c as usize) < cols, "column {c} out of range {cols}");
+                if let Some(p) = prev {
+                    assert!(c > p, "columns must increase within a row");
+                }
+                prev = Some(c);
+                col_idx.push(c);
+                vals.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix {
+            rows: rows.len(),
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Compress a dense matrix (exact: every nonzero entry kept).
+    pub fn from_dense(a: &Matrix) -> CsrMatrix {
+        let mut row_ptr = Vec::with_capacity(a.rows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..a.rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix {
+            rows: a.rows,
+            cols: a.cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Expand back to dense (bit-exact: values are copied, not recomputed).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let row = &mut out.data[i * self.cols..(i + 1) * self.cols];
+            for (&c, &v) in cols.iter().zip(vals) {
+                row[c as usize] = v;
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Stored-entry fraction in [0, 1] (1.0 for an empty matrix so the
+    /// storage policy never picks CSR for degenerate shapes).
+    pub fn density(&self) -> f64 {
+        let size = self.rows * self.cols;
+        if size == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / size as f64
+        }
+    }
+
+    /// Row `i`'s entries: (column indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Per-row entry subranges covering columns `[col0, col0 + width)` —
+    /// the precomputation behind [`CsrBlockView`].  O(rows log nnz_row),
+    /// done once per feature block at backend construction.
+    pub fn block_ranges(&self, col0: usize, width: usize) -> Vec<(usize, usize)> {
+        assert!(col0 + width <= self.cols, "column block out of range");
+        let (lo, hi) = (col0 as u32, (col0 + width) as u32);
+        (0..self.rows)
+            .map(|i| {
+                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let cols = &self.col_idx[s..e];
+                let a = s + cols.partition_point(|&c| c < lo);
+                let b = s + cols.partition_point(|&c| c < hi);
+                (a, b)
+            })
+            .collect()
+    }
+
+    /// Borrowed view of the column block `[col0, col0 + width)` through
+    /// precomputed `ranges` (from [`CsrMatrix::block_ranges`] with the
+    /// same `col0` / `width`).
+    pub fn block_view<'a>(
+        &'a self,
+        ranges: &'a [(usize, usize)],
+        col0: usize,
+        width: usize,
+    ) -> CsrBlockView<'a> {
+        assert_eq!(ranges.len(), self.rows);
+        assert!(col0 + width <= self.cols);
+        CsrBlockView {
+            rows: self.rows,
+            cols: width,
+            col0: col0 as u32,
+            ranges,
+            col_idx: &self.col_idx,
+            vals: &self.vals,
+        }
+    }
+
+    /// y = A x over the whole matrix (convenience for the storage enum).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cols, vals) = self.row(i);
+            *yi = dot_sparse(cols, vals, 0, x);
+        }
+    }
+
+    /// y = A^T v over the whole matrix.
+    pub fn spmv_t(&self, v: &[f32], y: &mut [f32]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for (i, &vi) in v.iter().enumerate() {
+            let (cols, vals) = self.row(i);
+            for (&c, &a) in cols.iter().zip(vals) {
+                y[c as usize] += a * vi;
+            }
+        }
+    }
+}
+
+/// Borrowed view of the contiguous column block `[col0, col0 + cols)` of a
+/// [`CsrMatrix`] — the sparse twin of `ColumnBlockView`.  Column indices
+/// are rebased by `col0` on read, so kernels see block-local columns.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrBlockView<'a> {
+    rows: usize,
+    cols: usize,
+    col0: u32,
+    /// Per-row `[start, end)` into `col_idx` / `vals`.
+    ranges: &'a [(usize, usize)],
+    col_idx: &'a [u32],
+    vals: &'a [f32],
+}
+
+impl<'a> CsrBlockView<'a> {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i`'s entries within the block: (parent column indices, values).
+    /// Subtract [`CsrBlockView::col0`] for block-local columns.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = self.ranges[i];
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    #[inline]
+    pub fn col0(&self) -> u32 {
+        self.col0
+    }
+
+    /// Stored entries inside the block.
+    pub fn nnz(&self) -> usize {
+        self.ranges.iter().map(|&(s, e)| e - s).sum()
+    }
+}
+
+/// Sparse dot of one row's block entries against a dense vector indexed by
+/// block-local column.  Four independent accumulators, fixed reduction
+/// order `((a0 + a1) + (a2 + a3)) + tail` — the sparse analogue of the
+/// dense `dot4` determinism contract.
+#[inline]
+fn dot_sparse(cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut cc = cols.chunks_exact(4);
+    let mut cv = vals.chunks_exact(4);
+    for (c4, v4) in (&mut cc).zip(&mut cv) {
+        acc[0] += v4[0] * x[(c4[0] - col0) as usize];
+        acc[1] += v4[1] * x[(c4[1] - col0) as usize];
+        acc[2] += v4[2] * x[(c4[2] - col0) as usize];
+        acc[3] += v4[3] * x[(c4[3] - col0) as usize];
+    }
+    let mut tail = 0.0f32;
+    for (&c, &v) in cc.remainder().iter().zip(cv.remainder()) {
+        tail += v * x[(c - col0) as usize];
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
+}
+
+// ------------------------------------------------------------------- spmv
+
+/// y = A x — naive reference (plain per-entry accumulation, single
+/// accumulator, mirroring `matvec_naive`).
+pub fn spmv_naive(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    let col0 = a.col0();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = a.row(i);
+        let mut acc = 0.0f32;
+        for (&c, &v) in cols.iter().zip(vals) {
+            acc += v * x[(c - col0) as usize];
+        }
+        *yi = acc;
+    }
+}
+
+/// y = A x — unroll-by-4 sparse row dot.
+pub fn spmv(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    let col0 = a.col0();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = a.row(i);
+        *yi = dot_sparse(cols, vals, col0, x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides — naive reference (k naive spmv).
+/// Layouts match the dense twins: `x` is `k` class-major vectors of
+/// length `cols`, `y` is `k` vectors of length `rows`.
+pub fn spmm_naive(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    for r in 0..k {
+        spmv_naive(a, &x[r * n..(r + 1) * n], &mut y[r * m..(r + 1) * m]);
+    }
+}
+
+/// Y = A X for `k` right-hand sides — each row's entries are loaded once
+/// and dotted against all `k` vectors while hot (the sparse analogue of
+/// the multiclass batching in `matmul`).
+pub fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    let col0 = a.col0();
+    for i in 0..m {
+        let (cols, vals) = a.row(i);
+        for r in 0..k {
+            y[r * m + i] = dot_sparse(cols, vals, col0, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- spmv_t
+
+/// y = A^T v — naive reference (per-row scatter with the historical
+/// skip-zero branch, mirroring `matvec_t_naive`).
+pub fn spmv_t_naive(a: &CsrBlockView, v: &[f32], y: &mut [f32]) {
+    assert_eq!(v.len(), a.rows());
+    assert_eq!(y.len(), a.cols());
+    let col0 = a.col0();
+    y.fill(0.0);
+    for (i, &vi) in v.iter().enumerate() {
+        if vi == 0.0 {
+            continue;
+        }
+        let (cols, vals) = a.row(i);
+        for (&c, &aij) in cols.iter().zip(vals) {
+            y[(c - col0) as usize] += aij * vi;
+        }
+    }
+}
+
+/// y = A^T v — branch-free per-row scatter (the per-iteration
+/// data-touching op of the inner sweep on sparse shards).
+pub fn spmv_t(a: &CsrBlockView, v: &[f32], y: &mut [f32]) {
+    spmm_t(a, v, 1, y)
+}
+
+/// Y = A^T V for `k` vectors — naive reference (k naive spmv_t).
+pub fn spmm_t_naive(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    for r in 0..k {
+        spmv_t_naive(a, &v[r * m..(r + 1) * m], &mut y[r * n..(r + 1) * n]);
+    }
+}
+
+/// Y = A^T V for `k` vectors — each row's entries are read once and
+/// scattered into all `k` accumulations.
+pub fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    let col0 = a.col0();
+    y.fill(0.0);
+    for i in 0..m {
+        let (cols, vals) = a.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        for r in 0..k {
+            let vi = v[r * m + i];
+            let yr = &mut y[r * n..(r + 1) * n];
+            for (&c, &aij) in cols.iter().zip(vals) {
+                yr[(c - col0) as usize] += aij * vi;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ gram_sparse
+
+/// G += A^T A — naive reference (per-row pair accumulation with the
+/// historical skip-zero branch; upper triangle mirrored, composing across
+/// calls exactly like `gram_naive`).
+pub fn gram_sparse_naive(a: &CsrBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    assert_eq!(g.len(), n * n);
+    let col0 = a.col0();
+    for i in 0..a.rows() {
+        let (cols, vals) = a.row(i);
+        for (p, &cp) in cols.iter().enumerate() {
+            let ap = vals[p];
+            if ap == 0.0 {
+                continue;
+            }
+            let j = (cp - col0) as usize;
+            let grow = &mut g[j * n..(j + 1) * n];
+            for (&cq, &aq) in cols[p..].iter().zip(&vals[p..]) {
+                grow[(cq - col0) as usize] += ap * aq;
+            }
+        }
+    }
+    mirror_upper(g, n);
+}
+
+/// G += A^T A — branch-free per-row pair accumulation.  Each stored row
+/// contributes O(nnz_row^2) work instead of the dense O(n^2); upper
+/// triangle computed then mirrored (mirroring only copies, so
+/// accumulating across calls composes).
+pub fn gram_sparse(a: &CsrBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    assert_eq!(g.len(), n * n);
+    let col0 = a.col0();
+    for i in 0..a.rows() {
+        let (cols, vals) = a.row(i);
+        for (p, &cp) in cols.iter().enumerate() {
+            let ap = vals[p];
+            let j = (cp - col0) as usize;
+            let grow = &mut g[j * n..(j + 1) * n];
+            for (&cq, &aq) in cols[p..].iter().zip(&vals[p..]) {
+                grow[(cq - col0) as usize] += ap * aq;
+            }
+        }
+    }
+    mirror_upper(g, n);
+}
+
+fn mirror_upper(g: &mut [f32], n: usize) {
+    for j in 0..n {
+        for k in (j + 1)..n {
+            g[k * n + j] = g[j * n + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernels;
+    use crate::util::rng::Rng;
+
+    /// Random dense matrix with ~`density` nonzero fraction.
+    fn rand_sparse(rng: &mut Rng, m: usize, n: usize, density: f64) -> Matrix {
+        let mut a = Matrix::zeros(m, n);
+        rng.fill_normal_f32(&mut a.data);
+        for v in a.data.iter_mut() {
+            if rng.uniform() >= density {
+                *v = 0.0;
+            }
+        }
+        a
+    }
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let scale = 1.0f32.max(x.abs()).max(y.abs());
+            assert!((x - y).abs() <= 1e-5 * scale, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_is_exact() {
+        let mut rng = Rng::seed_from(1);
+        for (m, n, d) in [(7, 9, 0.3), (4, 4, 0.0), (5, 3, 1.0), (0, 6, 0.5)] {
+            let a = rand_sparse(&mut rng, m, n, d);
+            let c = CsrMatrix::from_dense(&a);
+            assert_eq!(c.to_dense(), a);
+            assert_eq!(c.nnz(), a.data.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+
+    #[test]
+    fn density_counts_stored_entries() {
+        let a = Matrix::from_rows(vec![vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let c = CsrMatrix::from_dense(&a);
+        assert!((c.density() - 0.5).abs() < 1e-12);
+        let empty = CsrMatrix::from_dense(&Matrix::zeros(0, 3));
+        assert_eq!(empty.density(), 1.0);
+    }
+
+    #[test]
+    fn whole_matrix_spmv_matches_dense() {
+        let mut rng = Rng::seed_from(2);
+        let a = rand_sparse(&mut rng, 13, 7, 0.4);
+        let c = CsrMatrix::from_dense(&a);
+        let x: Vec<f32> = (0..7).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..13).map(|_| rng.normal_f32()).collect();
+        let (mut y0, mut y1) = (vec![0.0f32; 13], vec![0.0f32; 13]);
+        a.matvec(&x, &mut y0);
+        c.spmv(&x, &mut y1);
+        close(&y0, &y1);
+        let (mut z0, mut z1) = (vec![0.0f32; 7], vec![0.0f32; 7]);
+        a.matvec_t(&v, &mut z0);
+        c.spmv_t(&v, &mut z1);
+        close(&z0, &z1);
+    }
+
+    #[test]
+    fn block_kernels_match_dense_views() {
+        let mut rng = Rng::seed_from(3);
+        // non-multiple-of-4 shapes; includes an empty (zero-entry) block
+        for (m, n, col0, w, d) in [
+            (9, 11, 3, 5, 0.3),
+            (6, 7, 0, 7, 0.1),
+            (14, 10, 4, 3, 0.0),
+            (5, 8, 6, 2, 1.0),
+        ] {
+            let a = rand_sparse(&mut rng, m, n, d);
+            let c = CsrMatrix::from_dense(&a);
+            let ranges = c.block_ranges(col0, w);
+            let sv = c.block_view(&ranges, col0, w);
+            let dv = a.column_block_view(col0, w);
+
+            let x: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let (mut y0, mut y1) = (vec![0.0f32; m], vec![0.0f32; m]);
+            kernels::matvec(&dv, &x, &mut y0);
+            spmv(&sv, &x, &mut y1);
+            close(&y0, &y1);
+            spmv_naive(&sv, &x, &mut y1);
+            close(&y0, &y1);
+
+            let (mut z0, mut z1) = (vec![0.0f32; w], vec![0.0f32; w]);
+            kernels::matvec_t(&dv, &v, &mut z0);
+            spmv_t(&sv, &v, &mut z1);
+            close(&z0, &z1);
+            spmv_t_naive(&sv, &v, &mut z1);
+            close(&z0, &z1);
+
+            let (mut g0, mut g1) = (vec![0.0f32; w * w], vec![0.0f32; w * w]);
+            kernels::gram(&dv, &mut g0);
+            gram_sparse(&sv, &mut g1);
+            close(&g0, &g1);
+            g1.fill(0.0);
+            gram_sparse_naive(&sv, &mut g1);
+            close(&g0, &g1);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_naive_and_k1_is_bit_identical() {
+        let mut rng = Rng::seed_from(4);
+        let (m, n, k) = (14, 6, 3);
+        let a = rand_sparse(&mut rng, m, n, 0.35);
+        let c = CsrMatrix::from_dense(&a);
+        let ranges = c.block_ranges(0, n);
+        let sv = c.block_view(&ranges, 0, n);
+        let x: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+
+        let (mut y0, mut y1) = (vec![0.0f32; k * m], vec![0.0f32; k * m]);
+        spmm_naive(&sv, &x, k, &mut y0);
+        spmm(&sv, &x, k, &mut y1);
+        close(&y0, &y1);
+        let (mut z0, mut z1) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        spmm_t_naive(&sv, &v, k, &mut z0);
+        spmm_t(&sv, &v, k, &mut z1);
+        close(&z0, &z1);
+
+        // k == 1 bit-identical to the single-vector kernels
+        let (mut s0, mut s1) = (vec![0.0f32; m], vec![0.0f32; m]);
+        spmv(&sv, &x[..n], &mut s0);
+        spmm(&sv, &x[..n], 1, &mut s1);
+        assert_eq!(s0, s1);
+        let (mut t0, mut t1) = (vec![0.0f32; n], vec![0.0f32; n]);
+        spmv_t(&sv, &v[..m], &mut t0);
+        spmm_t(&sv, &v[..m], 1, &mut t1);
+        assert_eq!(t0, t1);
+    }
+
+    #[test]
+    fn gram_accumulates_across_calls() {
+        let mut rng = Rng::seed_from(5);
+        let a = rand_sparse(&mut rng, 10, 6, 0.4);
+        let c = CsrMatrix::from_dense(&a);
+        let ranges = c.block_ranges(0, 6);
+        let sv = c.block_view(&ranges, 0, 6);
+        let mut g1 = vec![0.0f32; 36];
+        gram_sparse(&sv, &mut g1);
+        let once = g1.clone();
+        gram_sparse(&sv, &mut g1);
+        let doubled: Vec<f32> = once.iter().map(|&x| 2.0 * x).collect();
+        close(&doubled, &g1);
+    }
+
+    #[test]
+    fn all_zero_rows_and_columns() {
+        // row 1 and column 2 entirely zero
+        let a = Matrix::from_rows(vec![
+            vec![1.0, 0.0, 0.0, 2.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![0.0, 3.0, 0.0, -1.0],
+        ]);
+        let c = CsrMatrix::from_dense(&a);
+        let ranges = c.block_ranges(0, 4);
+        let sv = c.block_view(&ranges, 0, 4);
+        let mut y = vec![9.0f32; 3];
+        spmv(&sv, &[1.0, 1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 0.0, 2.0]);
+        let mut z = vec![9.0f32; 4];
+        spmv_t(&sv, &[1.0, 1.0, 1.0], &mut z);
+        assert_eq!(z, vec![1.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_matrix_is_degenerate_but_defined() {
+        let c = CsrMatrix::from_dense(&Matrix::zeros(0, 4));
+        let ranges = c.block_ranges(0, 4);
+        let sv = c.block_view(&ranges, 0, 4);
+        let x = [1.0f32; 4];
+        let mut y: Vec<f32> = Vec::new();
+        spmv(&sv, &x, &mut y);
+        let mut z = [9.0f32; 4];
+        spmv_t(&sv, &[], &mut z);
+        assert_eq!(z, [0.0; 4]);
+        let mut g = vec![0.0f32; 16];
+        gram_sparse(&sv, &mut g);
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn block_ranges_cover_disjointly() {
+        let mut rng = Rng::seed_from(6);
+        let a = rand_sparse(&mut rng, 12, 10, 0.5);
+        let c = CsrMatrix::from_dense(&a);
+        // blocks [0,4), [4,7), [7,10) must partition every row's entries
+        let r0 = c.block_ranges(0, 4);
+        let r1 = c.block_ranges(4, 3);
+        let r2 = c.block_ranges(7, 3);
+        for i in 0..12 {
+            assert_eq!(r0[i].0, c.row_ptr[i]);
+            assert_eq!(r0[i].1, r1[i].0);
+            assert_eq!(r1[i].1, r2[i].0);
+            assert_eq!(r2[i].1, c.row_ptr[i + 1]);
+        }
+    }
+}

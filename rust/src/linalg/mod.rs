@@ -7,11 +7,13 @@
 
 pub mod cg;
 pub mod cholesky;
+pub mod csr;
 pub mod kernels;
 pub mod matrix;
 pub mod ops;
 
 pub use cg::conjugate_gradient;
 pub use cholesky::Cholesky;
+pub use csr::{CsrBlockView, CsrMatrix};
 pub use kernels::ColumnBlockView;
 pub use matrix::Matrix;

@@ -15,7 +15,7 @@
 //! Scaled-down grids by default; `--full` switches to the paper's sizes.
 
 use psfit::config::{BackendKind, Config, CoordinationKind};
-use psfit::data::{SyntheticSpec, Task};
+use psfit::data::{SparseMode, SyntheticSpec, Task};
 use psfit::driver;
 use psfit::harness;
 use psfit::losses::LossKind;
@@ -122,6 +122,8 @@ fn run() -> anyhow::Result<()> {
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
             eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
             eprintln!("        psfit train --coordination async --quorum 0.75 --staleness 2");
+            eprintln!("        psfit train --density 0.02 --sparse auto    (CSR data path)");
+            eprintln!("        psfit train --libsvm data.svm --kappa 50    (real sparse data)");
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
             eprintln!("        psfit bench --quick                 (writes BENCH_kernels.json)");
             Ok(())
@@ -148,6 +150,12 @@ fn train(args: &Args) -> anyhow::Result<()> {
     cfg.platform.backend = backend;
     cfg.platform.devices_per_node = args.get("devices", cfg.platform.devices_per_node)?;
     cfg.platform.threads = args.get("threads", cfg.platform.threads)?;
+    if let Some(mode) = args.opt("sparse") {
+        cfg.platform.sparse = SparseMode::parse(mode)?;
+    }
+    cfg.platform.sparse_threshold =
+        args.get("sparse-threshold", cfg.platform.sparse_threshold)?;
+    cfg.platform.validate()?;
     cfg.solver.rho_c = args.get("rho-c", cfg.solver.rho_c)?;
     cfg.solver.rho_b = args.get("rho-b", cfg.solver.rho_b)?;
     cfg.solver.rho_l = args.get("rho-l", cfg.solver.rho_l)?;
@@ -162,6 +170,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
 
     let mut spec = SyntheticSpec::regression(n, m, nodes);
     spec.sparsity_level = sparsity;
+    spec.density = args.get("density", 1.0)?;
     spec.seed = args.get("seed", 42)?;
     spec.task = match loss {
         LossKind::Squared => Task::Regression,
@@ -169,17 +178,55 @@ fn train(args: &Args) -> anyhow::Result<()> {
         LossKind::Softmax => Task::Multiclass { k: classes },
     };
     cfg.solver.kappa = args.get("kappa", spec.kappa())?;
+    let libsvm = args.opt("libsvm").map(String::from);
     let trace_out = args.opt("trace").map(String::from);
     args.reject_unknown()?;
 
+    let ds = match &libsvm {
+        Some(path) => {
+            anyhow::ensure!(
+                loss != LossKind::Softmax,
+                "--libsvm files are scalar-label (use squared/logistic/hinge)"
+            );
+            let mut ds = psfit::data::io::load_libsvm(std::path::Path::new(path), None)?;
+            // the file loads as one shard; honor --nodes by re-splitting
+            // its rows across the requested cluster
+            if nodes > 1 {
+                anyhow::ensure!(
+                    ds.total_samples() >= nodes,
+                    "{path}: {} samples cannot fill {nodes} nodes",
+                    ds.total_samples()
+                );
+                ds = ds.resplit(nodes);
+            }
+            cfg.platform.nodes = ds.nodes();
+            cfg.solver.kappa = cfg.solver.kappa.min(ds.n_features * ds.width).max(1);
+            eprintln!(
+                "loaded {path}: {} samples x {} features, density {:.4}",
+                ds.total_samples(),
+                ds.n_features,
+                ds.density()
+            );
+            ds
+        }
+        None => spec.generate(),
+    };
     eprintln!(
-        "training {} (n={n}, m={m}, N={nodes}, kappa={}, backend={}, coordination={})",
+        "training {} (n={}, m={}, N={}, kappa={}, backend={}, coordination={})",
         loss_name(loss),
+        ds.n_features,
+        ds.total_samples(),
+        ds.nodes(),
         cfg.solver.kappa,
         backend.name(),
         cfg.coordinator.coordination.name()
     );
-    let ds = spec.generate();
+    eprintln!(
+        "storage:     policy {} (threshold {}), data density {:.4}",
+        cfg.platform.sparse.name(),
+        cfg.platform.sparse_threshold,
+        ds.density()
+    );
     let run = harness::run_timed(&ds, &cfg, true)?;
     let res = &run.result;
 
@@ -210,6 +257,12 @@ fn train(args: &Args) -> anyhow::Result<()> {
         println!(
             "             {:.1} MB of block packing avoided (in-place column views)",
             res.transfers.host_copy_saved_bytes as f64 / 1e6,
+        );
+    }
+    if res.transfers.net_alloc_saved_bytes > 0 {
+        println!(
+            "             {:.1} MB of round-trip allocations avoided (reused buffers)",
+            res.transfers.net_alloc_saved_bytes as f64 / 1e6,
         );
     }
     if let Some(stats) = &res.coordination {

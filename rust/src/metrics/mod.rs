@@ -30,6 +30,11 @@ pub struct TransferLedger {
     /// each block at backend construction (native backend; informational —
     /// not counted in `h2d_bytes`/`d2h_bytes`)
     pub host_copy_saved_bytes: u64,
+    /// per-round allocation bytes *avoided* by the transport layer:
+    /// broadcast payloads refilled in place (one shared `Arc` per round)
+    /// and node reply buffers recycled by the solver instead of
+    /// re-allocated (informational, like `host_copy_saved_bytes`)
+    pub net_alloc_saved_bytes: u64,
 }
 
 impl TransferLedger {
@@ -51,6 +56,7 @@ impl TransferLedger {
         self.net_down_bytes += other.net_down_bytes;
         self.net_resync_bytes += other.net_resync_bytes;
         self.host_copy_saved_bytes += other.host_copy_saved_bytes;
+        self.net_alloc_saved_bytes += other.net_alloc_saved_bytes;
     }
 
     /// Modeled PCIe seconds for the recorded volume: bytes / bandwidth +
@@ -319,10 +325,12 @@ mod tests {
         let mut b = TransferLedger::default();
         b.net_resync_bytes = 40;
         b.host_copy_saved_bytes = 16;
+        b.net_alloc_saved_bytes = 24;
         a.merge(&b);
         assert_eq!(a.net_down_bytes, 100);
         assert_eq!(a.net_resync_bytes, 40);
         assert_eq!(a.host_copy_saved_bytes, 16);
+        assert_eq!(a.net_alloc_saved_bytes, 24);
         // informational note: never folded into the transfer volume
         assert_eq!(a.h2d_bytes + a.d2h_bytes, 0);
     }

@@ -50,9 +50,11 @@ impl NodeWorker {
         }
     }
 
-    /// One outer round: receive z^k, refresh the dual (Eq. 9), evaluate the
-    /// prox (7a)/(10), and return (x_i^{k+1}, u_i^k) for the Collect step.
-    pub fn round(&mut self, z: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    /// One outer round: receive z^k, refresh the dual (Eq. 9), evaluate
+    /// the prox (7a)/(10), and write (x_i^{k+1}, u_i^k) for the Collect
+    /// step into caller-owned buffers — the transport recycles those
+    /// across rounds instead of cloning fresh vectors every time.
+    pub fn round_into(&mut self, z: &[f64], x_out: &mut Vec<f64>, u_out: &mut Vec<f64>) {
         if self.first_round {
             self.first_round = false;
         } else {
@@ -61,11 +63,21 @@ impl NodeWorker {
                 self.u[i] += self.x[i] - z[i];
             }
         }
-        let u_used = self.u.clone();
+        u_out.clear();
+        u_out.extend_from_slice(&self.u);
         let mut x_new = std::mem::take(&mut self.x);
         self.prox.solve(z, &self.u, self.params, self.sweeps, &mut x_new);
         self.x = x_new;
-        (self.x.clone(), u_used)
+        x_out.clear();
+        x_out.extend_from_slice(&self.x);
+    }
+
+    /// [`NodeWorker::round_into`] with freshly allocated reply vectors —
+    /// the channel-based clusters need owned values on the wire.
+    pub fn round(&mut self, z: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (mut x, mut u) = (Vec::new(), Vec::new());
+        self.round_into(z, &mut x, &mut u);
+        (x, u)
     }
 
     pub fn loss_value(&mut self) -> f64 {
@@ -104,10 +116,35 @@ pub trait Cluster {
     fn loss_value(&mut self) -> anyhow::Result<f64>;
     /// Merged transfer + network ledger (best-effort over live nodes).
     fn ledger(&mut self) -> TransferLedger;
+    /// Hand a consumed round's replies back so the transport can refill
+    /// their buffers in place next round (default: drop them).  The
+    /// `net_alloc_saved_bytes` ledger entry records what reuse avoided.
+    fn recycle(&mut self, _replies: Vec<NodeReply>) {}
     /// Async-protocol accounting, if this cluster keeps any.
     fn coordination(&self) -> Option<CoordinationStats> {
         None
     }
+}
+
+/// Refill a broadcast payload in place when the slot holds the only
+/// remaining reference (every worker is done with last round's copy);
+/// allocate fresh otherwise.  Returns the payload and whether the buffer
+/// was reused — the single `Arc<Vec<f64>>` every node of a round shares.
+pub(crate) fn refresh_payload(
+    slot: &mut Option<Arc<Vec<f64>>>,
+    z: &[f64],
+) -> (Arc<Vec<f64>>, bool) {
+    if let Some(mut arc) = slot.take() {
+        if let Some(buf) = Arc::get_mut(&mut arc) {
+            buf.clear();
+            buf.extend_from_slice(z);
+            *slot = Some(arc.clone());
+            return (arc, true);
+        }
+    }
+    let arc = Arc::new(z.to_vec());
+    *slot = Some(arc.clone());
+    (arc, false)
 }
 
 // ---------------------------------------------------------------------
@@ -119,6 +156,9 @@ pub struct SequentialCluster {
     net: TransferLedger,
     dim: usize,
     round: usize,
+    /// Recycled reply objects whose buffers the next round refills in
+    /// place (see [`Cluster::recycle`]).
+    spare: Vec<NodeReply>,
 }
 
 impl SequentialCluster {
@@ -128,6 +168,7 @@ impl SequentialCluster {
             net: TransferLedger::default(),
             dim,
             round: 0,
+            spare: Vec::new(),
         }
     }
 }
@@ -144,15 +185,23 @@ impl Cluster for SequentialCluster {
         let mut replies = Vec::with_capacity(self.workers.len());
         for w in self.workers.iter_mut() {
             self.net.net_down_bytes += bytes;
-            let (x, u) = w.round(z);
-            self.net.net_up_bytes += 2 * bytes;
-            replies.push(NodeReply {
-                node: w.id,
-                round,
+            let mut rep = self.spare.pop().unwrap_or_else(|| NodeReply {
+                node: 0,
+                round: 0,
                 lag: 0,
-                x,
-                u,
+                x: Vec::new(),
+                u: Vec::new(),
             });
+            if rep.x.capacity() >= self.dim && rep.u.capacity() >= self.dim {
+                // both reply vectors refill in place — no allocation
+                self.net.net_alloc_saved_bytes += 2 * bytes;
+            }
+            w.round_into(z, &mut rep.x, &mut rep.u);
+            rep.node = w.id;
+            rep.round = round;
+            rep.lag = 0;
+            self.net.net_up_bytes += 2 * bytes;
+            replies.push(rep);
         }
         Ok(replies)
     }
@@ -167,6 +216,10 @@ impl Cluster for SequentialCluster {
             total.merge(&w.ledger());
         }
         total
+    }
+
+    fn recycle(&mut self, mut replies: Vec<NodeReply>) {
+        self.spare.append(&mut replies);
     }
 }
 
@@ -194,6 +247,8 @@ pub struct ThreadedCluster {
     dim: usize,
     n: usize,
     round: usize,
+    /// Broadcast payload reused across rounds (see [`refresh_payload`]).
+    payload: Option<Arc<Vec<f64>>>,
 }
 
 impl ThreadedCluster {
@@ -237,6 +292,7 @@ impl ThreadedCluster {
             dim,
             n,
             round: 0,
+            payload: None,
         }
     }
 }
@@ -247,7 +303,10 @@ impl Cluster for ThreadedCluster {
     }
 
     fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
-        let payload = Arc::new(z.to_vec());
+        let (payload, reused) = refresh_payload(&mut self.payload, z);
+        if reused {
+            self.net.net_alloc_saved_bytes += self.dim as u64 * 8;
+        }
         let bytes = self.dim as u64 * 8;
         let round = self.round;
         self.round += 1;
@@ -383,6 +442,32 @@ mod tests {
         // 2 rounds x 2 nodes x dim x 8 bytes down; twice that up
         assert_eq!(l.net_down_bytes, 2 * 2 * dim as u64 * 8);
         assert_eq!(l.net_up_bytes, 2 * 2 * 2 * dim as u64 * 8);
+    }
+
+    #[test]
+    fn recycled_reply_buffers_and_payload_are_reused() {
+        let (w, dim) = make_workers(2);
+        let mut seq = SequentialCluster::new(w, dim);
+        let z = vec![0.0; dim];
+        let r1 = seq.round(&z).unwrap();
+        assert_eq!(
+            seq.ledger().net_alloc_saved_bytes,
+            0,
+            "first round has no buffers to reuse"
+        );
+        seq.recycle(r1);
+        let r2 = seq.round(&z).unwrap();
+        // 2 nodes x (x + u) x dim x 8 bytes refilled in place
+        assert_eq!(seq.ledger().net_alloc_saved_bytes, 2 * 2 * dim as u64 * 8);
+        assert!(r2.iter().all(|r| r.x.len() == dim && r.u.len() == dim));
+
+        // the threaded transport reuses the one shared broadcast Arc:
+        // workers drop their clones before replying, so round 2 refills it
+        let (w, dim) = make_workers(2);
+        let mut thr = ThreadedCluster::new(w, dim);
+        thr.round(&z).unwrap();
+        thr.round(&z).unwrap();
+        assert_eq!(thr.ledger().net_alloc_saved_bytes, dim as u64 * 8);
     }
 
     #[test]

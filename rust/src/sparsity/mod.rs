@@ -4,7 +4,8 @@
 //!     x^T s = t,   ||x||_1 <= t,   ||s||_1 <= kappa,   ||s||_inf <= 1.
 //!
 //! This module provides the three geometric operations the coordinator
-//! needs, each exact and O(n log n):
+//! needs, each exact (the projections run in expected O(n) via partial
+//! selection, with sort-based `_sorted` reference twins):
 //!
 //!   * [`project_l1_ball`]      — projection onto {w : ||w||_1 <= r}
 //!   * [`project_l1_epigraph`]  — projection onto {(z,t) : ||z||_1 <= t}
@@ -18,7 +19,9 @@
 pub mod projections;
 pub mod support;
 
-pub use projections::{project_l1_ball, project_l1_epigraph};
+pub use projections::{
+    project_l1_ball, project_l1_ball_sorted, project_l1_epigraph, project_l1_epigraph_sorted,
+};
 pub use support::{hard_threshold, support_f1, support_of, top_k_indices};
 
 /// Closed-form s-update (Eq. 12): minimize (z^T s - tau)^2 over S^kappa.

@@ -1,11 +1,81 @@
 //! Exact Euclidean projections onto the l1 ball and the l1-norm epigraph.
 //!
-//! Both are sort-based O(n log n) algorithms; correctness is checked by
-//! first-order optimality properties in the proptest suite (feasibility,
-//! idempotence, and distance-dominance against random feasible points).
+//! The public entry points find their soft-threshold multiplier by
+//! `select_nth_unstable_by`-based partial selection over a geometrically
+//! shrinking candidate window — expected O(n) total, no full sort.  The
+//! historical sort-based O(n log n) versions are kept as `_sorted`
+//! reference oracles; the proptest suite pins fast == sorted on random
+//! inputs (ties included) on top of the first-order optimality properties
+//! (feasibility, idempotence, distance-dominance).
+//!
+//! Both searches exploit the same prefix property: with magnitudes
+//! `a_(1) >= a_(2) >= ...` and prefix sums `S_k`, the predicate
+//! `a_(k) > (S_k - r) / k` (ball; `(S_k - s) / (k + 1)` for the
+//! epigraph) is monotone in `k` — `h(k) = k a_(k) - S_k + r` decreases
+//! because `h(k+1) - h(k) = k (a_(k+1) - a_(k)) <= 0` — so the active
+//! count is found by bisection, and each probe only needs a partial
+//! selection inside the still-undecided window.
 
-/// Project `v` onto `{w : ||w||_1 <= r}` (Duchi et al. 2008).
+/// Find the active count `k* = max {k : a_(k) > (S_k - r*) / (k + d)}`
+/// and return `(S_{k*}, k*)`.  `d` is the denominator shift (0 for the
+/// ball, 1 for the epigraph).  `mags` is permuted in place; on return
+/// `mags[..k*]` are the `k*` largest magnitudes.  Requires the predicate
+/// to hold at k = 1 (both callers guarantee it).
+fn active_prefix(mags: &mut [f64], r: f64, d: usize) -> (f64, usize) {
+    let n = mags.len();
+    let desc = |a: &f64, b: &f64| b.partial_cmp(a).unwrap();
+    // invariant: predicate true at `lo` (0 = vacuous), false at `hi`
+    // (n + 1 = vacuous); mags[..lo] are the lo largest with sum `acc`,
+    // and the undecided candidates live in mags[lo..min(hi, n)]
+    let (mut lo, mut hi) = (0usize, n + 1);
+    let mut acc = 0.0f64;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        let win = hi.min(n);
+        // place the (mid - lo) largest of the window at its front
+        mags[lo..win].select_nth_unstable_by(mid - lo - 1, desc);
+        let s_mid = acc + mags[lo..mid].iter().sum::<f64>();
+        let a_mid = mags[mid - 1];
+        if a_mid > (s_mid - r) / (mid + d) as f64 {
+            lo = mid;
+            acc = s_mid;
+        } else {
+            hi = mid;
+        }
+    }
+    if lo == 0 {
+        // fp-degenerate scale (r below a_(1)'s ulp can defeat the k = 1
+        // predicate): treat the single largest magnitude as active, which
+        // is what the exact arithmetic would conclude
+        let mx = mags.iter().cloned().fold(0.0f64, f64::max);
+        return (mx, 1);
+    }
+    (acc, lo)
+}
+
+/// Project `v` onto `{w : ||w||_1 <= r}` (Duchi et al. 2008), with the
+/// threshold found by expected-O(n) partial selection.
 pub fn project_l1_ball(v: &[f64], r: f64) -> Vec<f64> {
+    assert!(r >= 0.0, "radius must be non-negative");
+    let l1: f64 = v.iter().map(|x| x.abs()).sum();
+    if l1 <= r {
+        return v.to_vec();
+    }
+    if r == 0.0 {
+        return vec![0.0; v.len()];
+    }
+    let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+    // k = 1 predicate: a_(1) > a_(1) - r  <=>  r > 0 (guaranteed above)
+    let (cumsum, k) = active_prefix(&mut mags, r, 0);
+    let theta = (cumsum - r) / k as f64;
+    v.iter()
+        .map(|&x| x.signum() * (x.abs() - theta).max(0.0))
+        .collect()
+}
+
+/// Sort-based reference implementation of [`project_l1_ball`] — the
+/// proptest oracle (kept verbatim from the historical O(n log n) path).
+pub fn project_l1_ball_sorted(v: &[f64], r: f64) -> Vec<f64> {
     assert!(r >= 0.0, "radius must be non-negative");
     let l1: f64 = v.iter().map(|x| x.abs()).sum();
     if l1 <= r {
@@ -38,8 +108,38 @@ pub fn project_l1_ball(v: &[f64], r: f64) -> Vec<f64> {
 /// `lam >= 0` solving `phi(lam) = ||soft(v, lam)||_1 - s - lam = 0`
 /// (phi is strictly decreasing with slope <= -1).  Special cases:
 /// feasible input (lam = 0) and total collapse to the origin
-/// (s <= -max|v|).
+/// (s <= -max|v|).  The multiplier is found by the same expected-O(n)
+/// partial selection as [`project_l1_ball`], with the epigraph's shifted
+/// denominator (`j + 1` active terms plus the `t` slope).
 pub fn project_l1_epigraph(v: &[f64], s: f64) -> (Vec<f64>, f64) {
+    let l1: f64 = v.iter().map(|x| x.abs()).sum();
+    if l1 <= s {
+        return (v.to_vec(), s); // already feasible
+    }
+    let vmax = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    if s <= -vmax {
+        return (vec![0.0; v.len()], 0.0); // projection is the apex
+    }
+    let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+    // k = 1 predicate: a_(1) > (a_(1) - s) / 2  <=>  s > -a_(1) = -vmax
+    // (guaranteed above)
+    let (cumsum, k) = active_prefix(&mut mags, s, 1);
+    let lam = (cumsum - s) / (k + 1) as f64;
+    if lam <= 0.0 {
+        // the input sits on the boundary to within fp (l1 ~= s): the
+        // projection is the point itself
+        return (v.to_vec(), s.max(l1));
+    }
+    let z: Vec<f64> = v
+        .iter()
+        .map(|&x| x.signum() * (x.abs() - lam).max(0.0))
+        .collect();
+    (z, s + lam)
+}
+
+/// Sort-based reference implementation of [`project_l1_epigraph`] — the
+/// proptest oracle (kept verbatim from the historical O(n log n) path).
+pub fn project_l1_epigraph_sorted(v: &[f64], s: f64) -> (Vec<f64>, f64) {
     let l1: f64 = v.iter().map(|x| x.abs()).sum();
     if l1 <= s {
         return (v.to_vec(), s); // already feasible
@@ -202,6 +302,36 @@ mod tests {
                     d_star <= d + 1e-8,
                     "found better feasible point: {d} < {d_star}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_selection_matches_sorted_reference() {
+        let mut rng = Rng::seed_from(13);
+        for case in 0..200usize {
+            let n = 1 + case % 17;
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+            if case % 3 == 0 {
+                // plant exact magnitude ties with mixed signs
+                for i in 1..n {
+                    if i % 2 == 0 {
+                        v[i] = -v[i - 1];
+                    }
+                }
+            }
+            let r = rng.uniform() * 3.0;
+            let a = project_l1_ball(&v, r);
+            let b = project_l1_ball_sorted(&v, r);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-10, "ball: {x} vs {y}");
+            }
+            let s = rng.normal();
+            let (za, ta) = project_l1_epigraph(&v, s);
+            let (zb, tb) = project_l1_epigraph_sorted(&v, s);
+            assert!((ta - tb).abs() < 1e-10, "epigraph t: {ta} vs {tb}");
+            for (x, y) in za.iter().zip(&zb) {
+                assert!((x - y).abs() < 1e-10, "epigraph: {x} vs {y}");
             }
         }
     }

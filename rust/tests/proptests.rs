@@ -69,6 +69,38 @@ fn prop_l1_ball_projection_dominates_random_feasible_points() {
 }
 
 #[test]
+fn prop_partial_selection_projections_match_sorted_oracle() {
+    // the fast projections find their multiplier by select_nth-based
+    // partial selection; the retired full-sort implementations remain as
+    // the reference oracle
+    run_prop(
+        "projection_partial_selection",
+        PropConfig::default(),
+        |rng, size| {
+            let mut v = randvec(rng, size, 3.0);
+            if size >= 2 && rng.below(2) == 0 {
+                // plant exact magnitude ties with mixed signs
+                for i in (1..size).step_by(2) {
+                    v[i] = -v[i - 1];
+                }
+            }
+            let r = rng.uniform() * 4.0;
+            let fast = project_l1_ball(&v, r);
+            let oracle = sparsity::project_l1_ball_sorted(&v, r);
+            assert_close(&fast, &oracle, 1e-9)?;
+            let s = rng.normal() * 2.0;
+            let (zf, tf) = project_l1_epigraph(&v, s);
+            let (zo, to) = sparsity::project_l1_epigraph_sorted(&v, s);
+            assert_close(&zf, &zo, 1e-9)?;
+            if (tf - to).abs() > 1e-9 {
+                return Err(format!("t mismatch: {tf} vs {to}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_epigraph_projection_feasible_idempotent_dominant() {
     run_prop("epigraph", PropConfig::default(), |rng, size| {
         let v = randvec(rng, size, 2.0);
@@ -374,7 +406,8 @@ fn prop_residual_definitions_match_paper() {
         g.z = randvec(rng, n, 1.0);
         let xs: Vec<Vec<f64>> = (0..nodes).map(|_| randvec(rng, n, 1.0)).collect();
         let rho_c = 0.5 + rng.uniform() * 3.0;
-        let rec = g.residuals(&xs, rho_c, 3, 0.0);
+        let xs_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let rec = g.residuals(&xs_refs, rho_c, 3, 0.0);
         // p_r = sum_i ||x_i - z||
         let want_p: f64 = xs.iter().map(|x| ops::dist2(x, &g.z).sqrt()).sum();
         if (rec.primal - want_p).abs() > 1e-12 * (1.0 + want_p) {

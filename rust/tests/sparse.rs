@@ -1,0 +1,163 @@
+//! Sparse data path: CSR kernels pinned against the dense layer across
+//! random densities (all-zero rows/columns, empty blocks, and
+//! non-multiple-of-4 shapes included), and end-to-end solver parity —
+//! `--sparse always` and `--sparse never` must recover identical supports
+//! and matching objectives on a synthetic sparse dataset.
+
+use psfit::admm::solver::objective;
+use psfit::config::Config;
+use psfit::data::{SparseMode, SyntheticSpec};
+use psfit::driver;
+use psfit::linalg::{csr, kernels, CsrMatrix, Matrix};
+use psfit::losses::Squared;
+use psfit::util::rng::Rng;
+use psfit::util::testkit::{assert_close_f32, run_prop, PropConfig};
+
+/// Random dense matrix with ~`density` nonzero fraction; `density` 0.0
+/// yields the all-zero matrix (every row and column empty).
+fn rand_sparse(rng: &mut Rng, m: usize, n: usize, density: f64) -> Matrix {
+    let mut a = Matrix::zeros(m, n);
+    for v in a.data.iter_mut() {
+        if rng.uniform() < density {
+            *v = rng.normal_f32();
+        }
+    }
+    a
+}
+
+#[test]
+fn prop_csr_kernels_match_dense_kernels() {
+    run_prop(
+        "csr_vs_dense",
+        PropConfig {
+            cases: 96,
+            max_size: 24,
+            ..Default::default()
+        },
+        |rng, size| {
+            // deliberately not multiples of 4; size 1 gives 1x1
+            let m = 1 + size;
+            let n = 1 + (size * 7) % 19;
+            // sweep all-zero through dense, with zero-heavy emphasis
+            let density = match rng.below(4) {
+                0 => 0.0,
+                1 => 0.05,
+                2 => rng.uniform(),
+                _ => 1.0,
+            };
+            let a = rand_sparse(rng, m, n, density);
+            let c = CsrMatrix::from_dense(&a);
+            if c.to_dense() != a {
+                return Err("from_dense/to_dense roundtrip drifted".into());
+            }
+
+            // random column block, including width-0 neighborhood edges
+            let col0 = rng.below(n);
+            let w = 1 + rng.below(n - col0);
+            let ranges = c.block_ranges(col0, w);
+            let sv = c.block_view(&ranges, col0, w);
+            let dv = a.column_block_view(col0, w);
+
+            let k = 1 + rng.below(3);
+            let x: Vec<f32> = (0..k * w).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+
+            let (mut y0, mut y1) = (vec![0.0f32; k * m], vec![0.0f32; k * m]);
+            kernels::matmul(&dv, &x, k, &mut y0);
+            csr::spmm(&sv, &x, k, &mut y1);
+            assert_close_f32(&y0, &y1, 1e-5)?;
+            csr::spmm_naive(&sv, &x, k, &mut y1);
+            assert_close_f32(&y0, &y1, 1e-5)?;
+
+            let (mut z0, mut z1) = (vec![0.0f32; k * w], vec![0.0f32; k * w]);
+            kernels::matmul_t(&dv, &v, k, &mut z0);
+            csr::spmm_t(&sv, &v, k, &mut z1);
+            assert_close_f32(&z0, &z1, 1e-5)?;
+            csr::spmm_t_naive(&sv, &v, k, &mut z1);
+            assert_close_f32(&z0, &z1, 1e-5)?;
+
+            let (mut g0, mut g1) = (vec![0.0f32; w * w], vec![0.0f32; w * w]);
+            kernels::gram(&dv, &mut g0);
+            csr::gram_sparse(&sv, &mut g1);
+            assert_close_f32(&g0, &g1, 1e-5)?;
+            g1.fill(0.0);
+            csr::gram_sparse_naive(&sv, &mut g1);
+            assert_close_f32(&g0, &g1, 1e-5)?;
+
+            // single-vector twins agree with the multi-RHS k = 1 case
+            let (mut s0, mut s1) = (vec![0.0f32; m], vec![0.0f32; m]);
+            csr::spmv(&sv, &x[..w], &mut s0);
+            csr::spmv_naive(&sv, &x[..w], &mut s1);
+            assert_close_f32(&s0, &s1, 1e-5)?;
+            let (mut t0, mut t1) = (vec![0.0f32; w], vec![0.0f32; w]);
+            csr::spmv_t(&sv, &v[..m], &mut t0);
+            csr::spmv_t_naive(&sv, &v[..m], &mut t1);
+            assert_close_f32(&t0, &t1, 1e-5)?;
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance gate: forcing CSR and forcing dense storage must walk
+/// the solver to the same answer on a genuinely sparse planted problem —
+/// identical supports, matching objectives.
+#[test]
+fn sparse_always_and_never_recover_identical_supports() {
+    let mut spec = SyntheticSpec::regression(60, 480, 2);
+    spec.sparsity_level = 0.8; // kappa = 12
+    spec.density = 0.05;
+    spec.noise_std = 0.02;
+    let ds = spec.generate();
+
+    let mut results = Vec::new();
+    for mode in [SparseMode::Always, SparseMode::Never] {
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = 300;
+        cfg.platform.sparse = mode;
+        let res = driver::fit(&ds, &cfg).unwrap();
+        let obj = objective(&ds, &Squared, cfg.solver.gamma, &res.x);
+        results.push((res, obj));
+    }
+    let (csr_res, csr_obj) = &results[0];
+    let (dense_res, dense_obj) = &results[1];
+    assert_eq!(
+        csr_res.support, dense_res.support,
+        "storage format changed the recovered support"
+    );
+    assert_eq!(csr_res.support.len(), spec.kappa());
+    let scale = dense_obj.abs().max(1.0);
+    assert!(
+        (csr_obj - dense_obj).abs() <= 1e-5 * scale,
+        "objectives diverged: {csr_obj} vs {dense_obj}"
+    );
+}
+
+/// `Auto` with the default 0.25 threshold must route a density-0.05
+/// dataset to CSR and a dense dataset to dense storage, and both runs
+/// must still converge to the planted support.
+#[test]
+fn auto_policy_routes_by_density_and_still_recovers() {
+    let mut spec = SyntheticSpec::regression(40, 400, 2);
+    spec.sparsity_level = 0.8;
+    spec.density = 0.05;
+    spec.noise_std = 0.02;
+    let ds = spec.generate();
+    assert!(ds.density() < 0.25, "planted dataset should be sparse");
+    let shard = ds.shards[0].with_storage_policy(SparseMode::Auto, 0.25);
+    assert_eq!(shard.data.storage_name(), "csr");
+
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 300;
+    let res = driver::fit(&ds, &cfg).unwrap();
+    let f1 = psfit::sparsity::support_f1(&res.support, &ds.support_true);
+    assert!(f1 > 0.9, "support F1 = {f1} on the CSR auto path");
+
+    // dense data stays dense under auto
+    let dense_ds = SyntheticSpec::regression(20, 80, 1).generate();
+    let shard = dense_ds.shards[0].with_storage_policy(SparseMode::Auto, 0.25);
+    assert_eq!(shard.data.storage_name(), "dense");
+}
