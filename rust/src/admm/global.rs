@@ -8,17 +8,28 @@ use crate::metrics::IterRecord;
 use crate::sparsity::{self, project_l1_epigraph};
 
 /// Global variables (z, t, s, v) plus the previous z for the dual residual.
-#[derive(Debug, Clone)]
+///
+/// The struct is `Clone` and all fields are public so the path subsystem
+/// can snapshot it between path points (warm starts) and the checkpoint
+/// layer can serialize it bit-exactly — see `path::checkpoint`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct GlobalState {
+    /// Consensus iterate z (class-major flattened, length n * width).
     pub z: Vec<f64>,
+    /// Epigraph variable t (the l1-norm surrogate, Eq. 7b).
     pub t: f64,
+    /// Bi-linear certificate s in S^kappa (Eq. 7c/12).
     pub s: Vec<f64>,
     /// Scaled bilinear multiplier v = lambda / rho_b (Eq. 11/13).
     pub v: f64,
-    z_prev: Vec<f64>,
+    /// z at the previous iteration — the dual residual (Eq. 14) measures
+    /// `rho_c ||z - z_prev||`.  Serialized with the rest of the state so a
+    /// resumed solve reports the same first-round residuals.
+    pub z_prev: Vec<f64>,
 }
 
 impl GlobalState {
+    /// Fresh (cold-start) state: every variable zero.
     pub fn new(dim: usize) -> GlobalState {
         GlobalState {
             z: vec![0.0; dim],
@@ -96,6 +107,7 @@ impl GlobalState {
         self.v += self.bilinear_residual_signed();
     }
 
+    /// Signed value of the bilinear constraint g(z, s, t) = z^T s - t.
     pub fn bilinear_residual_signed(&self) -> f64 {
         sparsity::bilinear_g(&self.z, &self.s, self.t)
     }

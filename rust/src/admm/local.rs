@@ -21,6 +21,8 @@
 use crate::backend::{BlockParams, NodeBackend};
 use crate::data::FeaturePlan;
 
+/// Node-level proximal-operator evaluator: owns a [`NodeBackend`] plus the
+/// warm-started inner sharing-ADMM state (Algorithm 2).
 pub struct LocalProx {
     backend: Box<dyn NodeBackend>,
     plan: FeaturePlan,
@@ -51,6 +53,7 @@ pub struct LocalProx {
 }
 
 impl LocalProx {
+    /// Build the evaluator over a backend; all inner state starts at zero.
     pub fn new(backend: Box<dyn NodeBackend>, plan: FeaturePlan, width: usize) -> LocalProx {
         let m = backend.samples();
         let blocks = backend.blocks();
@@ -86,8 +89,42 @@ impl LocalProx {
         }
     }
 
+    /// Flattened coefficient dimension n * width.
     pub fn dim(&self) -> usize {
         self.plan.n * self.width
+    }
+
+    /// Clone out the inner sharing-ADMM state `(omega, nu, preds)` for a
+    /// warm-start snapshot (see `network::WarmState`).
+    pub fn warm_parts(&self) -> (Vec<f32>, Vec<f32>, Vec<Vec<f32>>) {
+        (self.omega.clone(), self.nu.clone(), self.preds.clone())
+    }
+
+    /// Restore the inner state from a warm snapshot: scatter the flattened
+    /// `x` back into per-block coefficients (bit-exact — the f64s were
+    /// cast from those very f32s) and copy omega, nu, and the per-block
+    /// predictions.  Panics on any shape mismatch: a warm state must come
+    /// from an identically-partitioned problem.
+    pub fn reseed(&mut self, x: &[f64], omega: &[f32], nu: &[f32], preds: &[Vec<f32>]) {
+        let n = self.plan.n;
+        let width = self.width;
+        assert_eq!(x.len(), n * width, "warm x has the wrong dimension");
+        assert_eq!(omega.len(), self.m * width, "warm omega shape mismatch");
+        assert_eq!(nu.len(), self.m * width, "warm nu shape mismatch");
+        assert_eq!(preds.len(), self.preds.len(), "warm block count mismatch");
+        for (j, &(start, bw)) in self.plan.ranges.iter().enumerate() {
+            for c in 0..width {
+                for i in 0..bw {
+                    self.x_blocks[j][c * bw + i] = x[c * n + start + i] as f32;
+                }
+            }
+        }
+        self.omega.copy_from_slice(omega);
+        self.nu.copy_from_slice(nu);
+        for (dst, src) in self.preds.iter_mut().zip(preds) {
+            assert_eq!(dst.len(), src.len(), "warm prediction length mismatch");
+            dst.copy_from_slice(src);
+        }
     }
 
     fn compute_wbar(&mut self) {
@@ -263,6 +300,7 @@ impl LocalProx {
         self.backend.loss_value(&scratch)
     }
 
+    /// The backend's transfer/byte ledger (staging copies, reuse counters).
     pub fn ledger(&self) -> crate::metrics::TransferLedger {
         self.backend.ledger()
     }

@@ -14,10 +14,13 @@
 //! are flattened class-major — entry `(class c, feature i)` lives at
 //! `c * n + i`.  Width is 1 for the scalar losses, `k` for softmax.
 
+/// Coordinator-side (z, t, s, v) updates and residuals.
 pub mod global;
+/// Node-side Algorithm 2: the feature-decomposed inner sharing-ADMM.
 pub mod local;
+/// Algorithm 1: the outer consensus loop with resumable state.
 pub mod solver;
 
 pub use global::GlobalState;
 pub use local::LocalProx;
-pub use solver::{solve, SolveOptions, SolveResult};
+pub use solver::{solve, solve_from, SolveOptions, SolveResult, SolverState};

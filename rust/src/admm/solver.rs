@@ -10,11 +10,40 @@ use crate::data::{Dataset, ShardData};
 use crate::linalg::ops;
 use crate::losses::LossKind;
 use crate::metrics::{Trace, TransferLedger};
-use crate::network::Cluster;
+use crate::network::{Cluster, WarmState};
 use crate::sparsity::{hard_threshold, support_of};
 use crate::util::Stopwatch;
 
 use super::global::GlobalState;
+
+/// Complete resumable solver state: the coordinator's global variables
+/// plus every node's warm-start snapshot.
+///
+/// This is the unit the path subsystem hands from one path point to the
+/// next (warm starts) and what `path::checkpoint` serializes so a killed
+/// sweep resumes bit-identically at the last completed point.  Capturing
+/// and re-injecting it through [`Cluster::export_warm`] /
+/// [`Cluster::reseed`] is the *only* state transfer between path points,
+/// so a resumed run and an uninterrupted run see exactly the same inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverState {
+    /// Coordinator-side (z, t, s, v, z_prev).
+    pub global: GlobalState,
+    /// Per-node (x_i, u_i) plus the inner sharing-ADMM state, sorted by
+    /// node id.
+    pub nodes: Vec<WarmState>,
+}
+
+impl SolverState {
+    /// Snapshot the full solver state after a solve: the given global
+    /// variables plus the warm state exported from every node.
+    pub fn capture(cluster: &mut dyn Cluster, global: &GlobalState) -> anyhow::Result<SolverState> {
+        Ok(SolverState {
+            global: global.clone(),
+            nodes: cluster.export_warm()?,
+        })
+    }
+}
 
 /// Options orthogonal to the math: transport and reporting.
 #[derive(Debug, Clone)]
@@ -34,6 +63,7 @@ impl Default for SolveOptions {
     }
 }
 
+/// Everything a finished Bi-cADMM solve reports back.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
     /// Dense consensus iterate at termination.
@@ -44,16 +74,21 @@ pub struct SolveResult {
     pub x: Vec<f64>,
     /// Support of `x` (sorted indices into the flattened coefficients).
     pub support: Vec<usize>,
+    /// Per-iteration residual records (Eq. 14).
     pub trace: Trace,
+    /// Merged transfer + network byte ledger over all nodes.
     pub transfers: TransferLedger,
+    /// Outer iterations executed.
     pub iters: usize,
+    /// Whether the residual thresholds were met before `max_iters`.
     pub converged: bool,
+    /// Wall-clock seconds spent in the outer loop.
     pub wall_seconds: f64,
     /// Training loss at the final iterate (if tracked or cheap).
     pub final_loss: Option<f64>,
 }
 
-/// Run Bi-cADMM over an already-built cluster.
+/// Run Bi-cADMM over an already-built cluster, cold-started.
 ///
 /// `dim` = n_features * width.  The polish step (squared loss only)
 /// re-fits a ridge on the recovered support using the dataset.
@@ -64,11 +99,29 @@ pub fn solve(
     dataset: Option<&Dataset>,
     opts: &SolveOptions,
 ) -> anyhow::Result<SolveResult> {
+    let mut global = GlobalState::new(dim);
+    solve_from(cluster, &mut global, cfg, dataset, opts)
+}
+
+/// Run Bi-cADMM starting from the given global state (warm start).
+///
+/// This is [`solve`] with the monolithic loop's state extracted: the
+/// caller owns `global`, which is read as the starting point and left at
+/// the final iterate, so consecutive solves over a [`Cluster`] that was
+/// re-seeded with matching node state continue one trajectory.  The path
+/// subsystem drives its budget/penalty sweeps through here.
+pub fn solve_from(
+    cluster: &mut dyn Cluster,
+    global: &mut GlobalState,
+    cfg: &Config,
+    dataset: Option<&Dataset>,
+    opts: &SolveOptions,
+) -> anyhow::Result<SolveResult> {
     cfg.solver.validate()?;
     let sc = &cfg.solver;
     let watch = Stopwatch::start();
 
-    let mut global = GlobalState::new(dim);
+    let dim = global.z.len();
     let mut trace = Trace::default();
     let mut c = vec![0.0f64; dim];
     let mut converged = false;
@@ -162,7 +215,7 @@ pub fn solve(
     // coordination snapshot should include
     let transfers = cluster.ledger();
     Ok(SolveResult {
-        z: global.z,
+        z: global.z.clone(),
         coordination: cluster.coordination(),
         x,
         support,

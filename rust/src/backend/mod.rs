@@ -13,6 +13,7 @@
 //! prerequisite for the backend-parity tests).
 
 pub mod native;
+/// XLA-artifact backend executed through PJRT.
 pub mod xla;
 
 use crate::metrics::TransferLedger;
@@ -112,8 +113,10 @@ pub trait NodeBackend: Send {
     /// objective reporting only, not on the iteration hot path.
     fn loss_value(&self, pred: &[f32]) -> f64;
 
-    /// Staging-copy ledger (zeroes on the native backend).
+    /// Staging-copy ledger plus the factorization-reuse counters (the
+    /// native backend records no staging bytes, only the counters).
     fn ledger(&self) -> TransferLedger;
+    /// Zero the ledger (between timed phases of a harness).
     fn reset_ledger(&mut self);
 
     /// Fused Algorithm-2 path: run `sweeps` inner iterations over ALL

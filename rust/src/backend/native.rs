@@ -40,6 +40,7 @@ use crate::losses::Loss;
 use crate::metrics::TransferLedger;
 use crate::util::pool::WorkerPool;
 
+/// How the per-block coefficient solve is performed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SolveMode {
     /// Fixed-iteration CG on the cached Gram operator (artifact-parallel).
@@ -60,6 +61,10 @@ struct Scratch {
     x: Vec<f64>,
 }
 
+/// Most distinct penalty sets a block keeps factors for — generous for
+/// any realistic rho ladder while bounding memory on a runaway sweep.
+const CHOL_CACHE_CAP: usize = 16;
+
 struct Block {
     /// Column range `[start, start + width)` of the shard — the feature
     /// block `A_j`, read in place through `ColumnBlockView` (dense) or
@@ -72,13 +77,28 @@ struct Block {
     csr_ranges: Option<Vec<(usize, usize)>>,
     /// Cached Gram (width x width), f64.
     gram: Vec<f64>,
-    /// Cached Cholesky of rho_l G + reg I (Direct mode only).
-    chol: Option<Cholesky>,
-    /// Penalties the factorization was built for.
-    chol_params: Option<BlockParams>,
+    /// Cholesky factors of `rho_l G + reg I`, keyed by the penalties they
+    /// were built for (Direct mode only).  The path subsystem's rho
+    /// ladder revisits penalty sets; a keyed cache turns each revisit
+    /// into a lookup instead of an O(w^3) refactorization.
+    chol_cache: Vec<(BlockParams, Cholesky)>,
+    /// Penalties of the most recent Direct-mode step.  Steady-state calls
+    /// (unchanged penalties) touch neither counter below, so the counters
+    /// measure *transitions*: factors built vs. revisits served from the
+    /// cache.
+    chol_last: Option<BlockParams>,
+    /// Cache index of the factor for `chol_last` — `solve_block` reads it
+    /// directly so the per-step access stays O(1) (no cache scan on the
+    /// hot path; only penalty *transitions* search the cache).
+    chol_active: usize,
+    /// Distinct factorizations computed.
+    chol_factored: u64,
+    /// Penalty revisits that found their factor in the cache.
+    chol_reused: u64,
     scratch: Scratch,
 }
 
+/// Dependency-free Rust backend (the paper's "CPU backend").
 pub struct NativeBackend {
     /// The node's full design matrix, shared with the dataset shard (Arc
     /// inside either storage variant — construction copies no feature
@@ -95,6 +115,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build the backend over one shard: per-block Gram matrices are
+    /// computed here (in place, through views), everything else lazily.
     pub fn new(shard: &Shard, plan: &FeaturePlan, loss: Box<dyn Loss>, mode: SolveMode) -> Self {
         assert_eq!(shard.width, loss.width(), "label width mismatch");
         let a = shard.data.clone();
@@ -124,8 +146,11 @@ impl NativeBackend {
                     width,
                     csr_ranges,
                     gram: gram32.iter().map(|&v| v as f64).collect(),
-                    chol: None,
-                    chol_params: None,
+                    chol_cache: Vec::new(),
+                    chol_last: None,
+                    chol_active: 0,
+                    chol_factored: 0,
+                    chol_reused: 0,
                     scratch: Scratch::default(),
                 }
             })
@@ -155,25 +180,41 @@ impl NativeBackend {
         self
     }
 
+    /// Worker threads the block sweep uses.
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
 }
 
+/// Make sure the block's keyed cache holds a factor for `params`.
+/// Steady-state calls (same penalties as the previous step) return
+/// immediately; a penalty *transition* either reuses a cached factor
+/// (rho-ladder revisit) or computes and caches a new one.
 fn ensure_chol(block: &mut Block, params: BlockParams) {
-    if block.chol_params == Some(params) && block.chol.is_some() {
-        return;
+    if block.chol_last == Some(params) {
+        return; // steady state: chol_active already points at the factor
     }
-    let n = block.width;
-    let mut h = vec![0.0f64; n * n];
-    for i in 0..n {
-        for j in 0..n {
-            h[i * n + j] = params.rho_l * block.gram[i * n + j];
+    if let Some(idx) = block.chol_cache.iter().position(|(p, _)| *p == params) {
+        block.chol_reused += 1;
+        block.chol_active = idx;
+    } else {
+        let n = block.width;
+        let mut h = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                h[i * n + j] = params.rho_l * block.gram[i * n + j];
+            }
+            h[i * n + i] += params.reg;
         }
-        h[i * n + i] += params.reg;
+        let chol = Cholesky::factor(&h, n).expect("block normal matrix is SPD");
+        if block.chol_cache.len() >= CHOL_CACHE_CAP {
+            block.chol_cache.remove(0); // evict the oldest penalty set
+        }
+        block.chol_cache.push((params, chol));
+        block.chol_active = block.chol_cache.len() - 1;
+        block.chol_factored += 1;
     }
-    block.chol = Some(Cholesky::factor(&h, n).expect("block normal matrix is SPD"));
-    block.chol_params = Some(params);
+    block.chol_last = Some(params);
 }
 
 /// The block x-update (Eq. 23) + prediction refresh for all `width` class
@@ -203,7 +244,15 @@ fn solve_block(
         ensure_chol(block, params);
     }
     let gram = &block.gram;
-    let chol = &block.chol;
+    let chol = block.chol_cache.get(block.chol_active).map(|(_, c)| c);
+    debug_assert!(
+        matches!(mode, SolveMode::Cg { .. })
+            || block
+                .chol_cache
+                .get(block.chol_active)
+                .is_some_and(|(p, _)| *p == params),
+        "active cholesky factor does not match the step's penalties"
+    );
     let start = block.start;
     let csr_ranges = &block.csr_ranges;
     let s = &mut block.scratch;
@@ -268,7 +317,8 @@ fn solve_block(
         }
         SolveMode::Direct => {
             s.x.copy_from_slice(&s.rhs);
-            chol.as_ref().unwrap().solve_multi(&mut s.x, width);
+            chol.expect("ensure_chol populated the cache")
+                .solve_multi(&mut s.x, width);
         }
     }
 
@@ -367,10 +417,17 @@ impl NodeBackend for NativeBackend {
 
     fn ledger(&self) -> TransferLedger {
         // no staging copies on the native path — only the packing note
-        TransferLedger {
+        // plus the factorization-reuse counters the path subsystem reads
+        let mut l = TransferLedger {
             host_copy_saved_bytes: self.inplace_saved_bytes,
+            gram_builds: self.blocks.len() as u64,
             ..Default::default()
+        };
+        for b in &self.blocks {
+            l.chol_factorizations += b.chol_factored;
+            l.chol_reuses += b.chol_reused;
         }
+        l
     }
 
     fn reset_ledger(&mut self) {}
@@ -458,7 +515,7 @@ mod tests {
     }
 
     #[test]
-    fn chol_refactors_on_param_change() {
+    fn chol_cache_keys_by_params_and_reuses_on_revisit() {
         let (mut be, plan, m, _) = setup(SolveMode::Direct);
         let n0 = plan.ranges[0].1;
         let corr = vec![0.0f32; m];
@@ -469,9 +526,57 @@ mod tests {
         let p1 = BlockParams { rho_l: 1.0, rho_c: 1.0, reg: 1.0 };
         let p2 = BlockParams { rho_l: 9.0, rho_c: 1.0, reg: 4.0 };
         be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_params, Some(p1));
+        assert_eq!(be.blocks[0].chol_cache.len(), 1);
+        assert_eq!(be.blocks[0].chol_factored, 1);
+        // steady state: repeating the same penalties touches no counter
+        be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
+        assert_eq!(be.blocks[0].chol_factored, 1);
+        assert_eq!(be.blocks[0].chol_reused, 0);
+        // new penalties: a second factor joins the cache
         be.block_step(0, p2, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_params, Some(p2));
+        assert_eq!(be.blocks[0].chol_cache.len(), 2);
+        assert_eq!(be.blocks[0].chol_factored, 2);
+        // revisiting p1 (the rho-ladder pattern) reuses the cached factor
+        be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
+        assert_eq!(be.blocks[0].chol_cache.len(), 2);
+        assert_eq!(be.blocks[0].chol_factored, 2);
+        assert_eq!(be.blocks[0].chol_reused, 1);
+        let ledger = be.ledger();
+        // 2 blocks in the plan: block 0 factored twice, block 1 never hit
+        assert_eq!(ledger.chol_factorizations, 2);
+        assert_eq!(ledger.chol_reuses, 1);
+        assert_eq!(ledger.gram_builds, 2);
+    }
+
+    /// A revisited penalty set must solve with the *same* factor bits as
+    /// the first visit — a cache hit returns identical solutions.
+    #[test]
+    fn chol_cache_revisit_solves_identically() {
+        let mut rng = Rng::seed_from(11);
+        let (mut be_a, plan, m, _) = setup(SolveMode::Direct);
+        let (mut be_b, _, _, _) = setup(SolveMode::Direct);
+        let n0 = plan.ranges[0].1;
+        let corr: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let z: Vec<f32> = (0..n0).map(|_| rng.normal_f32()).collect();
+        let u = vec![0.0f32; n0];
+        let p1 = BlockParams { rho_l: 2.0, rho_c: 1.0, reg: 1.5 };
+        let p2 = BlockParams { rho_l: 5.0, rho_c: 1.0, reg: 2.5 };
+        let mut pred = vec![0.0f32; m];
+
+        // reference: p1 solved on a backend that only ever sees p1
+        let mut x_ref = vec![0.0f32; n0];
+        be_a.block_step(0, p1, &corr, &z, &u, &mut x_ref, &mut pred);
+
+        // cache path: p1, then p2, then p1 again (served from the cache)
+        let mut x0 = vec![0.0f32; n0];
+        be_b.block_step(0, p1, &corr, &z, &u, &mut x0, &mut pred);
+        let mut x_scratch = vec![0.0f32; n0];
+        be_b.block_step(0, p2, &corr, &z, &u, &mut x_scratch, &mut pred);
+        let mut x_revisit = vec![0.0f32; n0];
+        be_b.block_step(0, p1, &corr, &z, &u, &mut x_revisit, &mut pred);
+
+        assert_eq!(be_b.blocks[0].chol_reused, 1, "revisit must hit the cache");
+        assert_eq!(x_ref, x_revisit);
     }
 
     /// Random per-(block, class) inputs for sweep tests.
@@ -557,6 +662,8 @@ mod tests {
         let l = be.ledger();
         assert_eq!(l.host_copy_saved_bytes, (m * a.cols * 4) as u64);
         assert_eq!(l.h2d_bytes, 0);
+        assert_eq!(l.gram_builds, 2, "one Gram per feature block");
+        assert_eq!(l.chol_factorizations, 0, "no Direct step has run yet");
     }
 
     /// The CSR data path must agree with the dense path on the same data

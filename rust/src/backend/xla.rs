@@ -38,6 +38,9 @@ struct FusedSweep {
     sweeps: usize,
 }
 
+/// AOT-artifact backend executed through PJRT (the paper's "GPU
+/// backend"): per-block tiles and Grams stay device-resident, every
+/// staging copy is ledgered.
 pub struct XlaBackend {
     rt: std::rc::Rc<XlaRuntime>,
     blocks: Vec<XBlock>,
@@ -73,6 +76,8 @@ pub struct XlaBackend {
 unsafe impl Send for XlaBackend {}
 
 impl XlaBackend {
+    /// Stage one shard's tiles + Grams on the runtime's device and bind
+    /// the artifact set the plan requires.
     pub fn new(
         rt: std::rc::Rc<XlaRuntime>,
         shard: &Shard,

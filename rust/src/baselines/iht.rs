@@ -6,13 +6,19 @@
 use crate::linalg::Matrix;
 use crate::sparsity::hard_threshold;
 
+/// What an IHT run returns.
 #[derive(Debug, Clone)]
 pub struct IhtResult {
+    /// The kappa-sparse iterate at termination.
     pub x: Vec<f64>,
+    /// Nonzero indices of `x`.
     pub support: Vec<usize>,
+    /// Gradient steps taken.
     pub iters: usize,
 }
 
+/// Run IHT on the stacked problem until the iterate moves less than
+/// `tol` in l-infinity or `max_iters` is hit.
 pub fn iht(
     a: &Matrix,
     b: &[f32],

@@ -12,10 +12,14 @@
 
 use crate::linalg::Matrix;
 
+/// A Lasso path solution.
 #[derive(Debug, Clone)]
 pub struct LassoResult {
+    /// Coefficients at the returned lambda.
     pub x: Vec<f64>,
+    /// The lambda the path stopped at.
     pub lambda: f64,
+    /// Coordinate-descent sweeps spent in total.
     pub sweeps: usize,
     /// Support (|x_i| > 0) at the returned solution.
     pub support: Vec<usize>,

@@ -19,20 +19,29 @@ use crate::linalg::{Cholesky, Matrix};
 use crate::sparsity::top_k_indices;
 use crate::util::Stopwatch;
 
+/// How a branch-and-bound run ended.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BnbStatus {
+    /// Proved optimal within the budget.
     Optimal,
     /// Time budget exhausted — incumbent returned (paper: "cut off").
     CutOff,
 }
 
+/// What a branch-and-bound run returns.
 #[derive(Debug, Clone)]
 pub struct BnbResult {
+    /// Best kappa-sparse solution found.
     pub x: Vec<f64>,
+    /// Objective value of `x`.
     pub objective: f64,
+    /// Nonzero indices of `x`.
     pub support: Vec<usize>,
+    /// Optimal or cut off.
     pub status: BnbStatus,
+    /// Branch-and-bound nodes expanded.
     pub nodes_explored: usize,
+    /// Wall-clock seconds spent.
     pub wall_seconds: f64,
 }
 

@@ -13,8 +13,11 @@
 //! All baselines are *centralized*: they see the stacked dataset, exactly
 //! like the paper runs Gurobi and glmnet on a single machine.
 
+/// Iterative hard thresholding.
 pub mod iht;
+/// Lasso via FISTA on the stacked problem.
 pub mod lasso;
+/// Best-subset branch-and-bound (the Gurobi stand-in).
 pub mod mip;
 
 pub use iht::iht;

@@ -4,6 +4,7 @@
 use crate::coordinator::fault::FaultSpec;
 use crate::data::SparseMode;
 use crate::losses::LossKind;
+use crate::path::PathConfig;
 use crate::util::json::Json;
 
 /// Which compute backend executes the node-level data path.
@@ -17,6 +18,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a CLI/JSON backend name.
     pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
         match s {
             "native" | "cpu" => Ok(BackendKind::Native),
@@ -25,6 +27,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical name (inverse of [`BackendKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
@@ -54,9 +57,11 @@ pub struct SolverConfig {
     /// CG iterations per block solve (must match the artifact's baked
     /// count on the XLA path).
     pub cg_iters: usize,
-    /// Termination tolerances on the residuals (Eq. 14).
+    /// Termination tolerance on the primal residual (Eq. 14).
     pub tol_primal: f64,
+    /// Termination tolerance on the dual residual.
     pub tol_dual: f64,
+    /// Termination tolerance on the bilinear residual.
     pub tol_bilinear: f64,
     /// Projected-gradient iterations for the (z,t)-update (7b).
     pub zt_iters: usize,
@@ -85,6 +90,7 @@ impl Default for SolverConfig {
 }
 
 impl SolverConfig {
+    /// Defaults with the given cardinality bound.
     pub fn with_kappa(kappa: usize) -> SolverConfig {
         SolverConfig {
             kappa,
@@ -98,6 +104,7 @@ impl SolverConfig {
         self
     }
 
+    /// Reject non-positive penalties and degenerate iteration counts.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.rho_c <= 0.0 || self.rho_b <= 0.0 || self.rho_l <= 0.0 {
             anyhow::bail!("penalties must be positive");
@@ -131,6 +138,7 @@ pub enum CoordinationKind {
 }
 
 impl CoordinationKind {
+    /// Parse a CLI/JSON coordination name.
     pub fn parse(s: &str) -> anyhow::Result<CoordinationKind> {
         match s {
             "sync" => Ok(CoordinationKind::Sync),
@@ -139,6 +147,7 @@ impl CoordinationKind {
         }
     }
 
+    /// Canonical name (inverse of [`CoordinationKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             CoordinationKind::Sync => "sync",
@@ -154,6 +163,7 @@ impl CoordinationKind {
 /// clusters bit-for-bit — the convergence guardrail the parity tests pin.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Which protocol drives the outer rounds.
     pub coordination: CoordinationKind,
     /// Fraction of active nodes whose replies commit a round, in (0, 1].
     pub quorum: f64,
@@ -179,6 +189,7 @@ impl Default for CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
+    /// Reject out-of-range quorum/heartbeat settings.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.quorum.is_nan() || self.quorum <= 0.0 || self.quorum > 1.0 {
             anyhow::bail!("coordinator.quorum must be in (0, 1], got {}", self.quorum);
@@ -193,6 +204,7 @@ impl CoordinatorConfig {
 /// Platform topology: node count, devices per node, transfer cost model.
 #[derive(Clone, Debug)]
 pub struct PlatformConfig {
+    /// Computational nodes N (row shards).
     pub nodes: usize,
     /// Device (simulated GPU) queues per node = the feature-block count M.
     pub devices_per_node: usize,
@@ -209,11 +221,13 @@ pub struct PlatformConfig {
     /// 0.25 and 1.0 sweep points on the acceptance shape, and below it
     /// the O(nnz) kernels win on both FLOPs and memory traffic.
     pub sparse_threshold: f64,
+    /// Which compute backend the nodes run.
     pub backend: BackendKind,
     /// Optional synthetic PCIe model for the transfer ledger: seconds =
     /// bytes / (gbps * 1e9 / 8) + latency.  `None` records measured copy
     /// time only.
     pub pcie_gbps: Option<f64>,
+    /// Per-transfer latency of the synthetic PCIe model (microseconds).
     pub pcie_latency_us: f64,
     /// Share one PJRT runtime (and its compiled-executable cache) across
     /// all node backends.  Compiles each artifact once per process instead
@@ -224,6 +238,7 @@ pub struct PlatformConfig {
 }
 
 impl PlatformConfig {
+    /// Reject out-of-range storage-policy settings.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.sparse_threshold.is_nan()
             || !(0.0..=1.0).contains(&self.sparse_threshold)
@@ -256,11 +271,19 @@ impl Default for PlatformConfig {
 /// Complete experiment configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Bi-cADMM solver parameters.
     pub solver: SolverConfig,
+    /// Platform topology and storage policy.
     pub platform: PlatformConfig,
+    /// Coordination protocol settings.
     pub coordinator: CoordinatorConfig,
+    /// Which loss the nodes minimize.
     pub loss: LossKind,
+    /// Class count for the softmax loss (ignored by scalar losses).
     pub classes: usize,
+    /// Sparsity-path sweep settings (`psfit path`; empty budgets means
+    /// no path is configured).
+    pub path: PathConfig,
 }
 
 impl Default for Config {
@@ -271,6 +294,7 @@ impl Default for Config {
             coordinator: CoordinatorConfig::default(),
             loss: LossKind::Squared,
             classes: 2,
+            path: PathConfig::default(),
         }
     }
 }
@@ -283,6 +307,7 @@ impl Config {
         Self::from_json(&Json::parse(&text)?)
     }
 
+    /// Parse a JSON config object; unknown keys are rejected.
     pub fn from_json(v: &Json) -> anyhow::Result<Config> {
         let mut cfg = Config::default();
         let obj = v
@@ -458,6 +483,64 @@ impl Config {
                         }
                     }
                 }
+                "path" => {
+                    let p = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("path must be an object"))?;
+                    for (k, v) in p {
+                        match k.as_str() {
+                            "budgets" => {
+                                let arr = v
+                                    .as_arr()
+                                    .ok_or_else(|| anyhow::anyhow!("path.budgets: array"))?;
+                                cfg.path.budgets = arr
+                                    .iter()
+                                    .map(|x| {
+                                        x.as_usize().ok_or_else(|| {
+                                            anyhow::anyhow!("path.budgets entries must be integers")
+                                        })
+                                    })
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
+                            "rho_ladder" => {
+                                let arr = v
+                                    .as_arr()
+                                    .ok_or_else(|| anyhow::anyhow!("path.rho_ladder: array"))?;
+                                cfg.path.rho_ladder = arr
+                                    .iter()
+                                    .map(|x| {
+                                        x.as_f64().ok_or_else(|| {
+                                            anyhow::anyhow!("path.rho_ladder entries must be numbers")
+                                        })
+                                    })
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
+                            "warm_start" => {
+                                cfg.path.warm_start = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("path.warm_start: bool"))?
+                            }
+                            "checkpoint" => {
+                                cfg.path.checkpoint = Some(
+                                    v.as_str()
+                                        .ok_or_else(|| anyhow::anyhow!("path.checkpoint: str"))?
+                                        .to_string(),
+                                )
+                            }
+                            "direct" => {
+                                cfg.path.direct = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("path.direct: bool"))?
+                            }
+                            other => anyhow::bail!("unknown path key `{other}`"),
+                        }
+                    }
+                    // semantic validation (descending budgets etc.) is
+                    // deliberately deferred to `path::run_path` / the
+                    // `psfit path` command: a config may carry a partial
+                    // "path" section (e.g. only a ladder) that the CLI
+                    // completes, and non-path subcommands never use it
+                }
                 "loss" => {
                     cfg.loss = LossKind::parse(
                         val.as_str()
@@ -580,6 +663,55 @@ mod tests {
         assert_eq!(cfg.coordinator.faults.stragglers.len(), 1);
         assert_eq!(cfg.coordinator.faults.stragglers[0].node, 0);
         assert_eq!(cfg.coordinator.faults.crashes[0].round, 5);
+    }
+
+    #[test]
+    fn path_section_roundtrip() {
+        let src = r#"{
+            "path": {
+                "budgets": [200, 100, 50],
+                "rho_ladder": [2.0, 1.0, 0.5],
+                "warm_start": true,
+                "checkpoint": "sweep.psc",
+                "direct": false
+            }
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.path.budgets, vec![200, 100, 50]);
+        assert_eq!(cfg.path.rho_ladder, vec![2.0, 1.0, 0.5]);
+        assert!(cfg.path.warm_start);
+        assert_eq!(cfg.path.checkpoint.as_deref(), Some("sweep.psc"));
+        assert!(!cfg.path.direct);
+        // defaults: no path configured, warm + direct when one is
+        let d = Config::default();
+        assert!(d.path.budgets.is_empty());
+        assert!(d.path.warm_start);
+        assert!(d.path.direct);
+    }
+
+    #[test]
+    fn path_section_rejects_bad_types_but_defers_semantics() {
+        // type errors and typos fail at parse time
+        for bad in [
+            r#"{"path": {"budgets": [8, 4], "typo": 1}}"#,
+            r#"{"path": {"budgets": "50"}}"#,
+            r#"{"path": {"budgets": [8, "x"]}}"#,
+            r#"{"path": {"warm_start": 1}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // semantic problems load fine (a partial section the CLI may
+        // complete) and are caught by PathConfig::validate at run time
+        let src = r#"{"path": {"budgets": [10, 20], "rho_ladder": [0.0]}}"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert!(cfg.path.validate().is_err());
+        let src = r#"{"path": {"rho_ladder": [2.0, 1.0]}}"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert!(cfg.path.budgets.is_empty());
+        assert_eq!(cfg.path.rho_ladder, vec![2.0, 1.0]);
     }
 
     #[test]

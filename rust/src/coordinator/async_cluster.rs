@@ -21,15 +21,18 @@ use std::time::Duration;
 
 use super::fault::FaultInjector;
 use super::scheduler::{ReplyAction, RoundScheduler};
+use crate::backend::BlockParams;
 use crate::config::CoordinatorConfig;
 use crate::metrics::{CoordinationStats, TransferLedger};
-use crate::network::{refresh_payload, Cluster, NodeReply, NodeWorker};
+use crate::network::{refresh_payload, Cluster, NodeReply, NodeWorker, WarmState};
 
 enum Command {
     Round { round: usize, z: Arc<Vec<f64>> },
     Ping,
     Loss,
     Ledger,
+    Export,
+    Reseed(Arc<Vec<WarmState>>, BlockParams),
     Stop,
 }
 
@@ -47,6 +50,14 @@ enum Reply {
     Ledger {
         node: usize,
         ledger: TransferLedger,
+    },
+    Warm {
+        node: usize,
+        state: Box<WarmState>,
+    },
+    Reseeded {
+        node: usize,
+        ok: bool,
     },
 }
 
@@ -92,12 +103,32 @@ fn spawn_worker(
                         return;
                     }
                 }
+                Command::Export => {
+                    let state = Box::new(w.export_warm());
+                    if out.send(Reply::Warm { node, state }).is_err() {
+                        return;
+                    }
+                }
+                Command::Reseed(states, params) => {
+                    let ok = match states.iter().find(|s| s.node == w.id) {
+                        Some(ws) => {
+                            w.reseed(ws, params);
+                            true
+                        }
+                        None => false,
+                    };
+                    if out.send(Reply::Reseeded { node, ok }).is_err() {
+                        return;
+                    }
+                }
                 Command::Stop => return,
             }
         }
     })
 }
 
+/// Partial-barrier cluster: one thread per node, quorum commits, bounded
+/// staleness, elastic membership, seeded fault injection.
 pub struct AsyncCluster {
     links: Vec<NodeLink>,
     reply_tx: mpsc::Sender<Reply>,
@@ -109,6 +140,8 @@ pub struct AsyncCluster {
 }
 
 impl AsyncCluster {
+    /// Spawn one worker thread per node under the given coordination
+    /// settings (quorum, staleness bound, heartbeat, fault model).
     pub fn new(workers: Vec<NodeWorker>, dim: usize, cfg: &CoordinatorConfig) -> AsyncCluster {
         let n = workers.len();
         let injector = FaultInjector::new(cfg.faults.clone());
@@ -360,6 +393,83 @@ impl Cluster for AsyncCluster {
 
     fn coordination(&self) -> Option<CoordinationStats> {
         Some(self.scheduler.stats.clone())
+    }
+
+    /// Best-effort warm export over the *reachable* roster.  Commands
+    /// queue behind any in-flight round on each node, so the snapshot is
+    /// taken after the node finishes its outstanding work; stray round
+    /// replies surfacing meanwhile free their slots without folding.
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        let mut pending = Vec::new();
+        for node in self.scheduler.membership.reachable_nodes() {
+            let ok = match &self.links[node].sender {
+                Some(tx) => tx.send(Command::Export).is_ok(),
+                None => false,
+            };
+            if ok {
+                pending.push(node);
+            } else {
+                self.reap(node);
+            }
+        }
+        anyhow::ensure!(!pending.is_empty(), "no reachable node to export from");
+        let mut out: Vec<WarmState> = Vec::with_capacity(pending.len());
+        while !pending.is_empty() {
+            match self.replies.recv_timeout(self.heartbeat) {
+                Ok(Reply::Warm { node, state }) => {
+                    if pending.contains(&node) {
+                        pending.retain(|&n| n != node);
+                        out.push(*state);
+                    }
+                }
+                Ok(Reply::Round { node, .. }) => {
+                    self.scheduler.on_stray_reply(node);
+                }
+                Ok(_) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => self.prune_dead(&mut pending),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all node workers disconnected during the warm-state export");
+                }
+            }
+        }
+        out.sort_by_key(|s| s.node);
+        Ok(out)
+    }
+
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        let shared = Arc::new(states.to_vec());
+        let mut pending = Vec::new();
+        for node in self.scheduler.membership.reachable_nodes() {
+            let ok = match &self.links[node].sender {
+                Some(tx) => tx.send(Command::Reseed(shared.clone(), params)).is_ok(),
+                None => false,
+            };
+            if ok {
+                pending.push(node);
+            } else {
+                self.reap(node);
+            }
+        }
+        anyhow::ensure!(!pending.is_empty(), "no reachable node to re-seed");
+        while !pending.is_empty() {
+            match self.replies.recv_timeout(self.heartbeat) {
+                Ok(Reply::Reseeded { node, ok }) => {
+                    if pending.contains(&node) {
+                        pending.retain(|&n| n != node);
+                        anyhow::ensure!(ok, "no warm state for node {node}");
+                    }
+                }
+                Ok(Reply::Round { node, .. }) => {
+                    self.scheduler.on_stray_reply(node);
+                }
+                Ok(_) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => self.prune_dead(&mut pending),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all node workers disconnected during the re-seed");
+                }
+            }
+        }
+        Ok(())
     }
 }
 

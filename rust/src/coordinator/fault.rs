@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 /// A node that takes extra wall-clock time per round.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StragglerSpec {
+    /// Which node is slow.
     pub node: usize,
     /// Extra milliseconds added to every round this node computes.
     pub delay_ms: f64,
@@ -23,7 +24,9 @@ pub struct StragglerSpec {
 /// A node that dies when it picks up work for `round` (or any later one).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CrashSpec {
+    /// Which node dies.
     pub node: usize,
+    /// First round at which picking up work kills it.
     pub round: usize,
 }
 
@@ -34,7 +37,9 @@ pub struct FaultSpec {
     pub seed: u64,
     /// Uniform jitter in [0, jitter_ms) added on top of straggler delays.
     pub jitter_ms: f64,
+    /// Slow nodes.
     pub stragglers: Vec<StragglerSpec>,
+    /// Crashing nodes.
     pub crashes: Vec<CrashSpec>,
 }
 
@@ -56,6 +61,7 @@ impl FaultSpec {
         self
     }
 
+    /// Reject negative delays/jitter.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.jitter_ms < 0.0 {
             anyhow::bail!("fault jitter_ms must be >= 0");
@@ -76,10 +82,12 @@ pub struct FaultInjector {
 }
 
 impl FaultInjector {
+    /// Wrap a spec for evaluation.
     pub fn new(spec: FaultSpec) -> FaultInjector {
         FaultInjector { spec }
     }
 
+    /// The model being evaluated.
     pub fn spec(&self) -> &FaultSpec {
         &self.spec
     }

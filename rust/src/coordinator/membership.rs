@@ -37,6 +37,7 @@ pub struct Membership {
 }
 
 impl Membership {
+    /// Fresh roster of `nodes` active slots.
     pub fn new(nodes: usize) -> Membership {
         Membership {
             states: vec![NodeState::Active; nodes],
@@ -48,10 +49,12 @@ impl Membership {
         self.states.len()
     }
 
+    /// True when no slot was ever allocated.
     pub fn is_empty(&self) -> bool {
         self.states.is_empty()
     }
 
+    /// Current lifecycle state of a slot.
     pub fn state(&self, node: usize) -> NodeState {
         self.states[node]
     }
@@ -66,6 +69,7 @@ impl Membership {
         matches!(self.states[node], NodeState::Active | NodeState::Joining)
     }
 
+    /// Number of Active slots (the quorum denominator).
     pub fn active_count(&self) -> usize {
         self.states
             .iter()
@@ -73,6 +77,7 @@ impl Membership {
             .count()
     }
 
+    /// Slots that should receive broadcasts, in id order.
     pub fn reachable_nodes(&self) -> Vec<usize> {
         (0..self.states.len())
             .filter(|&i| self.is_reachable(i))

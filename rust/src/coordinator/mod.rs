@@ -27,9 +27,13 @@
 //! [`crate::network::SequentialCluster`] **bit-for-bit** (pinned by the
 //! parity tests in `tests/coordinator.rs`).
 
+/// The event-driven transport shell (threads + channels).
 pub mod async_cluster;
+/// Deterministic, seeded straggler + crash models.
 pub mod fault;
+/// The elastic roster (Active / Joining / Dead / Left).
 pub mod membership;
+/// The pure round state machine: dispatch, quorum, staleness.
 pub mod scheduler;
 
 pub use async_cluster::AsyncCluster;

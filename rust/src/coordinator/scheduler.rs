@@ -47,6 +47,8 @@ pub enum ReplyAction {
     Ignored,
 }
 
+/// The pure round state machine of the async coordinator: who was
+/// dispatched what, which replies are cached, and what commits a round.
 pub struct RoundScheduler {
     dim: usize,
     quorum_frac: f64,
@@ -55,7 +57,9 @@ pub struct RoundScheduler {
     started: bool,
     dispatch: Vec<Dispatch>,
     cache: Vec<Option<CachedReply>>,
+    /// The elastic roster.
     pub membership: Membership,
+    /// Protocol accounting (rounds, folds, drops, deaths, joins).
     pub stats: CoordinationStats,
     /// Network accounting (coordinator side): round broadcasts in
     /// `net_down_bytes`, resyncs in `net_resync_bytes`, replies in
@@ -64,6 +68,7 @@ pub struct RoundScheduler {
 }
 
 impl RoundScheduler {
+    /// Scheduler over `nodes` slots broadcasting `dim`-length vectors.
     pub fn new(nodes: usize, dim: usize, quorum_frac: f64, max_staleness: usize) -> RoundScheduler {
         RoundScheduler {
             dim,
@@ -83,10 +88,12 @@ impl RoundScheduler {
         self.dim as u64 * 8
     }
 
+    /// Index of the round currently being collected.
     pub fn current_round(&self) -> usize {
         self.round
     }
 
+    /// The staleness bound replies are folded under.
     pub fn max_staleness(&self) -> usize {
         self.max_staleness
     }
@@ -139,6 +146,7 @@ impl RoundScheduler {
         fresh
     }
 
+    /// Whether `node` owes a reply for some dispatched round.
     pub fn is_busy(&self, node: usize) -> bool {
         matches!(self.dispatch[node], Dispatch::Busy(_))
     }

@@ -49,6 +49,8 @@ fn read_f32s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f32>> {
         .collect())
 }
 
+/// Write a dataset in the PSF1 binary format (dense; CSR shards are
+/// densified row-wise).
 pub fn save(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -72,6 +74,8 @@ pub fn save(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Read a PSF1 dataset back (storage starts dense; apply a policy to
+/// re-decide the format).
 pub fn load(path: &Path) -> anyhow::Result<Dataset> {
     let mut r = BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 4];
@@ -163,6 +167,22 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
 /// natural format for these files, which are overwhelmingly sparse.  The
 /// feature count is the largest index seen unless `n_features` pins it
 /// (needed when train/test splits see different tails).  No ground truth.
+///
+/// Re-split the loaded single shard with [`Dataset::resplit`] to
+/// distribute it across a cluster (`psfit train --libsvm f.svm --nodes 4`
+/// does exactly that).
+///
+/// ```
+/// let path = std::env::temp_dir().join("psfit_doc_libsvm.svm");
+/// std::fs::write(&path, "1 1:0.5 3:-2.0  # a sparse row\n-1 2:1.5\n").unwrap();
+/// let ds = psfit::data::io::load_libsvm(&path, None).unwrap();
+/// assert_eq!(ds.n_features, 3);
+/// assert_eq!(ds.total_samples(), 2);
+/// assert_eq!(ds.shards[0].labels, vec![1.0, -1.0]);
+/// assert!(ds.shards[0].data.is_csr());
+/// let spread = ds.resplit(2);
+/// assert_eq!(spread.nodes(), 2);
+/// ```
 pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dataset> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;

@@ -2,7 +2,9 @@
 //! decomposition across nodes, and the delayed feature-decomposition plan.
 
 pub mod io;
+/// Sample decomposition, shard storage, and the feature plan.
 pub mod partition;
+/// Synthetic dataset generators (paper §4).
 pub mod synthetic;
 
 pub use partition::{FeaturePlan, Shard, ShardData, SparseMode};
@@ -14,21 +16,25 @@ use crate::linalg::Matrix;
 /// truth used for recovery metrics.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// One shard per computational node.
     pub shards: Vec<Shard>,
     /// Planted coefficients, flattened (n * width).
     pub x_true: Vec<f64>,
     /// Planted support (indices into the flattened coefficient vector).
     pub support_true: Vec<usize>,
+    /// Feature count n (columns of every shard).
     pub n_features: usize,
     /// Label / prediction width (1, or k for softmax).
     pub width: usize,
 }
 
 impl Dataset {
+    /// Total samples over all shards.
     pub fn total_samples(&self) -> usize {
         self.shards.iter().map(|s| s.rows()).sum()
     }
 
+    /// Number of shards (computational nodes).
     pub fn nodes(&self) -> usize {
         self.shards.len()
     }

@@ -23,6 +23,7 @@ pub enum SparseMode {
 }
 
 impl SparseMode {
+    /// Parse a CLI/JSON storage-mode name.
     pub fn parse(s: &str) -> anyhow::Result<SparseMode> {
         match s {
             "auto" => Ok(SparseMode::Auto),
@@ -32,6 +33,7 @@ impl SparseMode {
         }
     }
 
+    /// Canonical name (the inverse of [`SparseMode::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             SparseMode::Auto => "auto",
@@ -56,6 +58,7 @@ pub enum ShardData {
 }
 
 impl ShardData {
+    /// Row count, independent of storage kind.
     pub fn rows(&self) -> usize {
         match self {
             ShardData::Dense(a) => a.rows,
@@ -63,6 +66,7 @@ impl ShardData {
         }
     }
 
+    /// Column count, independent of storage kind.
     pub fn cols(&self) -> usize {
         match self {
             ShardData::Dense(a) => a.cols,
@@ -89,10 +93,12 @@ impl ShardData {
         }
     }
 
+    /// Whether the shard is CSR-backed.
     pub fn is_csr(&self) -> bool {
         matches!(self, ShardData::Csr(_))
     }
 
+    /// "dense" or "csr" — for reports and tests.
     pub fn storage_name(&self) -> &'static str {
         match self {
             ShardData::Dense(_) => "dense",
@@ -100,6 +106,7 @@ impl ShardData {
         }
     }
 
+    /// The dense storage, if that is the active kind.
     pub fn as_dense(&self) -> Option<&Arc<Matrix>> {
         match self {
             ShardData::Dense(a) => Some(a),
@@ -107,6 +114,7 @@ impl ShardData {
         }
     }
 
+    /// The CSR storage, if that is the active kind.
     pub fn as_csr(&self) -> Option<&Arc<CsrMatrix>> {
         match self {
             ShardData::Csr(c) => Some(c),
@@ -175,9 +183,11 @@ impl ShardData {
 /// "delayed" decomposition is a view either way, not a packing copy.
 #[derive(Debug, Clone)]
 pub struct Shard {
+    /// The design matrix in its chosen storage format.
     pub data: ShardData,
     /// Row-major (rows, width) labels.
     pub labels: Vec<f32>,
+    /// Label width (1, or k for softmax).
     pub width: usize,
 }
 
@@ -191,6 +201,7 @@ impl Shard {
         }
     }
 
+    /// Samples in this shard.
     pub fn rows(&self) -> usize {
         self.data.rows()
     }
@@ -210,6 +221,7 @@ impl Shard {
 /// The feature-decomposition plan for one node: M column blocks.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FeaturePlan {
+    /// Total features covered by the plan.
     pub n: usize,
     /// Number of blocks (devices engaged).
     pub blocks: usize,

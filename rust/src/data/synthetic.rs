@@ -9,6 +9,7 @@ use super::Dataset;
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
+/// Label-generation recipe.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Task {
     /// b = A x_true + noise  (SLS, Eq. 24)
@@ -19,10 +20,14 @@ pub enum Task {
     Multiclass { k: usize },
 }
 
+/// Everything that defines a synthetic experiment instance.
 #[derive(Debug, Clone)]
 pub struct SyntheticSpec {
+    /// Feature count n.
     pub n_features: usize,
+    /// Total samples across all nodes.
     pub m_total: usize,
+    /// Node (shard) count N.
     pub nodes: usize,
     /// Paper's s_l in (0, 1): fraction of zero coefficients.
     /// kappa = round(n * (1 - s_l)).
@@ -34,12 +39,16 @@ pub struct SyntheticSpec {
     /// one-hot / genomics style).  Storage stays dense here; the
     /// `--sparse` policy decides the format at partition time.
     pub density: f64,
+    /// Label noise standard deviation.
     pub noise_std: f64,
+    /// Label-generation recipe.
     pub task: Task,
+    /// Seed for every random draw (bit-exact reproduction).
     pub seed: u64,
 }
 
 impl SyntheticSpec {
+    /// Paper-default regression spec (sparsity 0.8, dense design).
     pub fn regression(n: usize, m_total: usize, nodes: usize) -> SyntheticSpec {
         SyntheticSpec {
             n_features: n,
@@ -53,11 +62,13 @@ impl SyntheticSpec {
         }
     }
 
+    /// The planted cardinality `round(n * (1 - s_l))`, clamped to [1, n].
     pub fn kappa(&self) -> usize {
         let k = (self.n_features as f64 * (1.0 - self.sparsity_level)).round() as usize;
         k.clamp(1, self.n_features)
     }
 
+    /// Label width the task implies (1, or k for multiclass).
     pub fn width(&self) -> usize {
         match self.task {
             Task::Multiclass { k } => k,

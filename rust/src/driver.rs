@@ -63,6 +63,26 @@ pub fn plan_for(ds: &Dataset, cfg: &Config, artifacts: &Path) -> anyhow::Result<
 /// `fit_with_options`).  With `share_runtime = false`, every node gets a
 /// private runtime and may run on its own thread.
 pub fn build_workers(ds: &Dataset, cfg: &Config) -> anyhow::Result<Vec<NodeWorker>> {
+    build_workers_mode(
+        ds,
+        cfg,
+        SolveMode::Cg {
+            iters: cfg.solver.cg_iters,
+        },
+    )
+}
+
+/// [`build_workers`] with an explicit native block-solve mode.
+///
+/// The default fit path keeps the artifact-parallel CG mode; the path
+/// subsystem passes `SolveMode::Direct` so its keyed Cholesky cache pays
+/// off across penalty revisits.  The XLA backend ignores `mode` (its
+/// iteration count is baked into the artifacts).
+pub fn build_workers_mode(
+    ds: &Dataset,
+    cfg: &Config,
+    mode: SolveMode,
+) -> anyhow::Result<Vec<NodeWorker>> {
     let artifacts = default_artifacts_dir();
     let plan = plan_for(ds, cfg, &artifacts)?;
     let params = BlockParams {
@@ -87,15 +107,8 @@ pub fn build_workers(ds: &Dataset, cfg: &Config) -> anyhow::Result<Vec<NodeWorke
                     cfg.platform.sparse_threshold,
                 );
                 Box::new(
-                    NativeBackend::new(
-                        &shard,
-                        &plan,
-                        loss,
-                        SolveMode::Cg {
-                            iters: cfg.solver.cg_iters,
-                        },
-                    )
-                    .with_threads(cfg.platform.threads),
+                    NativeBackend::new(&shard, &plan, loss, mode)
+                        .with_threads(cfg.platform.threads),
                 )
             }
             BackendKind::Xla => {
@@ -157,6 +170,8 @@ pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
     fit_with_options(ds, cfg, &SolveOptions::default(), true)
 }
 
+/// [`fit`] with explicit solve options and transport choice (`threaded =
+/// false` forces the deterministic sequential cluster).
 pub fn fit_with_options(
     ds: &Dataset,
     cfg: &Config,

@@ -10,10 +10,15 @@ use crate::config::{BackendKind, Config};
 use crate::data::SyntheticSpec;
 use crate::metrics::CsvTable;
 
+/// Options of the Figure-1 harness.
 pub struct Fig1Opts {
+    /// Paper-size grid instead of the scaled default.
     pub full: bool,
+    /// Outer iterations to trace.
     pub iters: usize,
+    /// Backend the nodes run.
     pub backend: BackendKind,
+    /// Optional CSV output path.
     pub out: Option<String>,
 }
 
@@ -28,6 +33,7 @@ impl Default for Fig1Opts {
     }
 }
 
+/// Regenerate Figure 1 (residual convergence vs rho_b).
 pub fn fig1(opts: &Fig1Opts) -> anyhow::Result<CsvTable> {
     let (n, m) = if opts.full { (4000, 10_000) } else { (500, 2_000) };
     let nodes = 4;

@@ -11,10 +11,15 @@
 
 use crate::metrics::CsvTable;
 
+/// Options of the Figure-4 harness.
 pub struct Fig4Opts {
+    /// Paper-size grid instead of the scaled default.
     pub full: bool,
+    /// Outer iterations to time.
     pub iters: usize,
+    /// Synthetic PCIe bandwidth for the transfer model (Gbps).
     pub pcie_gbps: Option<f64>,
+    /// Optional CSV output path.
     pub out: Option<String>,
 }
 
@@ -29,6 +34,7 @@ impl Default for Fig4Opts {
     }
 }
 
+/// Regenerate Figure 4 (CPU<->GPU transfer time vs n and m).
 pub fn fig4(opts: &Fig4Opts) -> anyhow::Result<CsvTable> {
     let mut table = CsvTable::new(&[
         "scenario",

@@ -21,6 +21,7 @@ use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 
+/// Options of the `psfit bench` kernel harness.
 pub struct KernelBenchOpts {
     /// Small shapes + short timing windows (CI smoke).
     pub quick: bool,
@@ -79,6 +80,7 @@ fn report_json(entries: &[Entry], quick: bool, threads: usize) -> Json {
     ])
 }
 
+/// Run the kernel micro-benchmarks and write `BENCH_kernels.json`.
 pub fn kernels(opts: &KernelBenchOpts) -> anyhow::Result<CsvTable> {
     // (m, n, blocks): the last full shape is the ISSUE's acceptance shape
     let shapes: &[(usize, usize, usize)] = if opts.quick {

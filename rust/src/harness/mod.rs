@@ -14,17 +14,27 @@
 //! | [`fig4`] | Figure 4       | transfer time grows with n; flat-ish in m  |
 //! | [`straggler`] | (new)     | async coordination hides a 1x-16x straggler|
 //! | [`kernels`] | (new)       | tiled kernels / pooled sweeps beat naive   |
+//! | [`path`]    | (new)       | warm path sweep beats cold-started sequence|
 
+/// Figure 1: residual convergence vs rho_b.
 pub mod fig1;
+/// Figure 4: CPU<->GPU transfer time.
 pub mod fig4;
+/// Kernel-layer micro-benchmarks (`psfit bench`).
 pub mod kernels;
+/// Warm-vs-cold sparsity-path benchmark (`psfit pathbench`).
+pub mod path;
+/// Figures 2 and 3: feature/sample scaling.
 pub mod scaling;
+/// Sync-vs-async coordination under a straggler.
 pub mod straggler;
+/// Table 1: Bi-cADMM vs MIP vs Lasso.
 pub mod table1;
 
 pub use fig1::fig1;
 pub use fig4::fig4;
 pub use kernels::kernels;
+pub use path::path_bench;
 pub use scaling::{fig2, fig3};
 pub use straggler::straggler;
 pub use table1::table1;
@@ -39,11 +49,15 @@ use crate::util::Stopwatch;
 /// from the iteration loop — Table 1 and the scaling figures time the
 /// iteration loop, like the paper times the solver (not data loading).
 pub struct TimedRun {
+    /// The finished solve.
     pub result: SolveResult,
+    /// Seconds spent building workers + cluster (staging, compiles).
     pub setup_seconds: f64,
+    /// Seconds spent in the iteration loop.
     pub solve_seconds: f64,
 }
 
+/// Fit `ds` under `cfg`, timing setup and solve separately.
 pub fn run_timed(ds: &Dataset, cfg: &Config, threaded: bool) -> anyhow::Result<TimedRun> {
     let watch = Stopwatch::start();
     let workers = driver::build_workers(ds, cfg)?;

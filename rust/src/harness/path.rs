@@ -1,0 +1,256 @@
+//! `psfit pathbench` — warm-started sparsity paths vs. the equivalent
+//! cold-started sequence of independent solves, swept across the density
+//! grid from the sparse-data-path PR ({0.01, 0.05, 0.25, 1.0}).
+//!
+//! For each density the same planted dataset is solved over a descending
+//! budget ladder twice:
+//!
+//!   * **cold** — one independent run per budget, each rebuilding its
+//!     cluster (Gram recompute, fresh factorizations, zero state), i.e.
+//!     exactly a sequence of `psfit train` runs;
+//!   * **warm** — one `path::run_path` sweep: a single cluster, per-block
+//!     Gram computed once, Cholesky factors cached, and every point
+//!     warm-started from the previous [`crate::admm::SolverState`].
+//!
+//! The machine-readable report (`BENCH_path.json`, schema 1) records
+//! wall-clock, summed outer iterations, and the reuse counters per entry;
+//! a CI smoke step validates the schema and that the warm sweep never
+//! needs more iterations than the cold sequence.
+
+use crate::admm::SolveOptions;
+use crate::config::Config;
+use crate::data::SyntheticSpec;
+use crate::metrics::CsvTable;
+use crate::path::run_path;
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+
+/// Options of the `psfit pathbench` harness.
+pub struct PathBenchOpts {
+    /// Small shapes + short ladders (the CI smoke configuration).
+    pub quick: bool,
+    /// Where to write the JSON report.
+    pub json: String,
+    /// Optional CSV path (same convention as the figure harnesses).
+    pub out: Option<String>,
+}
+
+struct Entry {
+    n: usize,
+    m: usize,
+    nodes: usize,
+    density: f64,
+    budgets: Vec<usize>,
+    cold_seconds: f64,
+    warm_seconds: f64,
+    cold_iters: usize,
+    warm_iters: usize,
+    gram_builds_cold: u64,
+    gram_builds_warm: u64,
+    chol_reuses_warm: u64,
+}
+
+impl Entry {
+    fn speedup(&self) -> f64 {
+        if self.warm_seconds > 0.0 {
+            self.cold_seconds / self.warm_seconds
+        } else {
+            0.0
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("density", Json::Num(self.density)),
+            (
+                "budgets",
+                Json::Arr(self.budgets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("cold_seconds", Json::Num(self.cold_seconds)),
+            ("warm_seconds", Json::Num(self.warm_seconds)),
+            ("speedup", Json::Num(self.speedup())),
+            ("cold_iters", Json::Num(self.cold_iters as f64)),
+            ("warm_iters", Json::Num(self.warm_iters as f64)),
+            ("gram_builds_cold", Json::Num(self.gram_builds_cold as f64)),
+            ("gram_builds_warm", Json::Num(self.gram_builds_warm as f64)),
+            ("chol_reuses_warm", Json::Num(self.chol_reuses_warm as f64)),
+        ])
+    }
+}
+
+fn report_json(entries: &[Entry], quick: bool) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("generated_by", Json::Str("psfit pathbench".to_string())),
+        ("quick", Json::Bool(quick)),
+        (
+            "entries",
+            Json::Arr(entries.iter().map(|e| e.json()).collect()),
+        ),
+    ])
+}
+
+/// Run the warm-vs-cold path benchmark and write `BENCH_path.json`.
+pub fn path_bench(opts: &PathBenchOpts) -> anyhow::Result<CsvTable> {
+    // (n, m, nodes, budgets): the full shape matches the acceptance
+    // criterion (3+ budgets); quick is the CI smoke configuration
+    let (n, m, nodes, budgets): (usize, usize, usize, Vec<usize>) = if opts.quick {
+        (96, 384, 2, vec![24, 12, 6])
+    } else {
+        (1024, 4096, 4, vec![200, 100, 50])
+    };
+    let densities: &[f64] = if opts.quick {
+        &[0.05, 1.0]
+    } else {
+        &[0.01, 0.05, 0.25, 1.0]
+    };
+
+    let mut entries = Vec::new();
+    for &density in densities {
+        eprintln!("# density {density}: budgets {budgets:?}");
+        let mut spec = SyntheticSpec::regression(n, m, nodes);
+        spec.density = density;
+        spec.sparsity_level = 1.0 - budgets[0] as f64 / n as f64;
+        let ds = spec.generate();
+
+        let mut cfg = Config::default();
+        cfg.platform.nodes = nodes;
+        cfg.path.budgets = budgets.clone();
+
+        // ---- cold: one independent single-point run per budget ---------
+        let watch = Stopwatch::start();
+        let mut cold_iters = 0usize;
+        let mut gram_builds_cold = 0u64;
+        for &k in &budgets {
+            let mut ck = cfg.clone();
+            ck.path.budgets = vec![k];
+            let outcome = run_path(&ds, &ck, &SolveOptions::default(), true)?;
+            cold_iters += outcome.trace.total_iters();
+            gram_builds_cold += outcome.trace.points.iter().map(|p| p.gram_builds).sum::<u64>();
+        }
+        let cold_seconds = watch.elapsed_secs();
+
+        // ---- warm: one sweep, one cluster, shared factorizations -------
+        let watch = Stopwatch::start();
+        let outcome = run_path(&ds, &cfg, &SolveOptions::default(), true)?;
+        let warm_seconds = watch.elapsed_secs();
+        let warm_iters = outcome.trace.total_iters();
+        let gram_builds_warm: u64 = outcome.trace.points.iter().map(|p| p.gram_builds).sum();
+        let chol_reuses_warm: u64 = outcome.trace.points.iter().map(|p| p.chol_reuses).sum();
+
+        eprintln!(
+            "#   cold {cold_seconds:.3}s / {cold_iters} iters, warm {warm_seconds:.3}s / {warm_iters} iters"
+        );
+        entries.push(Entry {
+            n,
+            m,
+            nodes,
+            density,
+            budgets: budgets.clone(),
+            cold_seconds,
+            warm_seconds,
+            cold_iters,
+            warm_iters,
+            gram_builds_cold,
+            gram_builds_warm,
+            chol_reuses_warm,
+        });
+    }
+
+    // ---- emit ------------------------------------------------------------
+    let json = report_json(&entries, opts.quick);
+    std::fs::write(&opts.json, format!("{json}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.json))?;
+    eprintln!("wrote {}", opts.json);
+
+    let mut table = CsvTable::new(&[
+        "n",
+        "m",
+        "nodes",
+        "density",
+        "budgets",
+        "cold_s",
+        "warm_s",
+        "speedup",
+        "cold_iters",
+        "warm_iters",
+        "chol_reuses_warm",
+    ]);
+    for e in &entries {
+        let budgets = e
+            .budgets
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join("|");
+        table.row(vec![
+            e.n.to_string(),
+            e.m.to_string(),
+            e.nodes.to_string(),
+            format!("{}", e.density),
+            budgets,
+            format!("{:.3}", e.cold_seconds),
+            format!("{:.3}", e.warm_seconds),
+            format!("{:.2}", e.speedup()),
+            e.cold_iters.to_string(),
+            e.warm_iters.to_string(),
+            e.chol_reuses_warm.to_string(),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let entries = vec![Entry {
+            n: 96,
+            m: 384,
+            nodes: 2,
+            density: 0.05,
+            budgets: vec![24, 12, 6],
+            cold_seconds: 3.0,
+            warm_seconds: 1.5,
+            cold_iters: 300,
+            warm_iters: 150,
+            gram_builds_cold: 12,
+            gram_builds_warm: 4,
+            chol_reuses_warm: 8,
+        }];
+        let j = report_json(&entries, true);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("quick").unwrap().as_bool(), Some(true));
+        let arr = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        let e = &arr[0];
+        assert_eq!(e.get("speedup").unwrap().as_f64(), Some(2.0));
+        assert_eq!(e.get("budgets").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(e.get("warm_iters").unwrap().as_usize(), Some(150));
+    }
+
+    #[test]
+    fn speedup_handles_zero_denominator() {
+        let e = Entry {
+            n: 1,
+            m: 1,
+            nodes: 1,
+            density: 1.0,
+            budgets: vec![1],
+            cold_seconds: 1.0,
+            warm_seconds: 0.0,
+            cold_iters: 1,
+            warm_iters: 1,
+            gram_builds_cold: 0,
+            gram_builds_warm: 0,
+            chol_reuses_warm: 0,
+        };
+        assert_eq!(e.speedup(), 0.0);
+    }
+}

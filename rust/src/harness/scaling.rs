@@ -9,10 +9,13 @@ use crate::config::{BackendKind, Config};
 use crate::data::SyntheticSpec;
 use crate::metrics::CsvTable;
 
+/// Options shared by the Figure-2/Figure-3 scaling harnesses.
 pub struct ScalingOpts {
+    /// Paper-size grid instead of the scaled default.
     pub full: bool,
     /// Outer iterations to time (fixed horizon for comparability).
     pub iters: usize,
+    /// Optional CSV output path.
     pub out: Option<String>,
 }
 

@@ -17,7 +17,9 @@ use crate::data::SyntheticSpec;
 use crate::driver;
 use crate::metrics::{CoordinationStats, CsvTable};
 
+/// Options of the straggler harness.
 pub struct StragglerOpts {
+    /// Larger factor sweep.
     pub full: bool,
     /// Cluster size; node 0 is the straggler.
     pub nodes: usize,
@@ -29,6 +31,7 @@ pub struct StragglerOpts {
     pub quorum: f64,
     /// Async-mode staleness bound (rounds).
     pub max_staleness: usize,
+    /// Optional CSV output path.
     pub out: Option<String>,
 }
 
@@ -48,8 +51,11 @@ impl Default for StragglerOpts {
 
 /// One (factor, mode) measurement.
 pub struct StragglerPoint {
+    /// Wall-clock of the fixed-horizon fit.
     pub wall_seconds: f64,
+    /// Primal residual at the horizon.
     pub final_primal: f64,
+    /// Coordination accounting of the run.
     pub stats: CoordinationStats,
 }
 

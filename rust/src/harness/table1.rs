@@ -14,11 +14,15 @@ use crate::metrics::CsvTable;
 use crate::sparsity::support_f1;
 use crate::util::Stopwatch;
 
+/// Options of the Table-1 harness.
 pub struct Table1Opts {
+    /// Paper-size grid instead of the scaled default.
     pub full: bool,
+    /// Backend the Bi-cADMM column runs on.
     pub backend: BackendKind,
     /// BnB time budget in seconds (paper: 1800).
     pub mip_budget: f64,
+    /// Optional CSV output path.
     pub out: Option<String>,
 }
 
@@ -33,6 +37,7 @@ impl Default for Table1Opts {
     }
 }
 
+/// Regenerate Table 1 (Bi-cADMM vs MIP vs Lasso).
 pub fn table1(opts: &Table1Opts) -> anyhow::Result<CsvTable> {
     // paper grid: m in {1e5, 2e5, 3e5}, n in {2000, 4000}
     let (ms, ns, mip_budget) = if opts.full {

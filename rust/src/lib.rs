@@ -12,19 +12,46 @@
 //!     elastic membership, and deterministic fault injection
 //!   * [`baselines`]— Lasso, best-subset branch-and-bound (Gurobi
 //!     stand-in), IHT
+//!   * [`path`]     — warm-started sparsity-path sweeps with
+//!     checkpoint/resume (model selection along a budget ladder)
 //!   * [`driver`]   — high-level fit API used by the CLI and examples
+//!
+//! New here?  Start with `docs/GUIDE.md` (user guide: install,
+//! quickstart, every CLI knob) and the runnable programs in `examples/`.
+#![warn(missing_docs)]
+
+/// The Bi-cADMM algorithm: coordinator updates, node-level inner ADMM,
+/// and the outer consensus loop.
 pub mod admm;
+/// Native and XLA compute backends for the node-level data path.
 pub mod backend;
+/// Centralized baselines: Lasso (FISTA), best-subset branch-and-bound,
+/// and IHT.
 pub mod baselines;
+/// Validated configuration structs + JSON config-file loading.
 pub mod config;
+/// Asynchronous coordination: bounded staleness, elastic membership,
+/// fault injection.
 pub mod coordinator;
+/// Dataset substrate: synthetic generators, partitioning, persistence.
 pub mod data;
+/// High-level fit/“solve this dataset under this config” entry points.
 pub mod driver;
+/// Experiment harnesses regenerating the paper's tables and figures.
 pub mod harness;
+/// Dense + CSR linear-algebra kernels (dependency-free Rust).
 pub mod linalg;
+/// The paper's model zoo: squared, logistic, hinge, and softmax losses.
 pub mod losses;
+/// Transfer/byte ledgers, iteration traces, and CSV emission.
 pub mod metrics;
+/// Simulated distributed layer: node workers, clusters, collectives.
 pub mod network;
+/// Warm-started sparsity-path sweeps with checkpoint/resume.
+pub mod path;
+/// PJRT loader/executor for the AOT-compiled XLA artifacts.
 pub mod runtime;
+/// Sparsity machinery: l1 projections, s-update, hard thresholding.
 pub mod sparsity;
+/// Self-contained substrates: PRNG, JSON, CLI, bench/test kits, pool.
 pub mod util;

@@ -12,8 +12,12 @@ pub struct Cholesky {
     l: Vec<f64>,
 }
 
+/// Factorization error: the matrix was not positive definite.
 #[derive(Debug)]
-pub struct NotPositiveDefinite(pub usize);
+pub struct NotPositiveDefinite(
+    /// Pivot index at which factorization failed.
+    pub usize,
+);
 
 impl std::fmt::Display for NotPositiveDefinite {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -83,6 +87,7 @@ impl Cholesky {
         }
     }
 
+    /// Dimension of the factored matrix.
     pub fn n(&self) -> usize {
         self.n
     }

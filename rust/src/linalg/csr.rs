@@ -35,11 +35,15 @@ use super::matrix::Matrix;
 /// strictly increasing within a row.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count (logical width; trailing all-zero columns allowed).
     pub cols: usize,
     /// `rows + 1` offsets into `col_idx` / `vals`.
     pub row_ptr: Vec<usize>,
+    /// Column index of every stored entry, strictly increasing per row.
     pub col_idx: Vec<u32>,
+    /// Value of every stored entry (explicit zeros allowed).
     pub vals: Vec<f32>,
 }
 
@@ -112,6 +116,7 @@ impl CsrMatrix {
         out
     }
 
+    /// Stored entries (including any explicit zeros).
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }
@@ -211,11 +216,13 @@ pub struct CsrBlockView<'a> {
 }
 
 impl<'a> CsrBlockView<'a> {
+    /// Rows of the viewed block (same as the parent matrix).
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Columns (block width) of the viewed block.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
@@ -229,6 +236,8 @@ impl<'a> CsrBlockView<'a> {
         (&self.col_idx[s..e], &self.vals[s..e])
     }
 
+    /// First parent column of the block (subtract from `row` indices for
+    /// block-local columns).
     #[inline]
     pub fn col0(&self) -> u32 {
         self.col0

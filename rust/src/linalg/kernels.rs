@@ -17,6 +17,14 @@
 //! kernel).  The multi-vector kernels visit each output element in the
 //! same order as their single-vector counterparts, so the `k == 1` case
 //! is bit-identical to `matvec` / `matvec_t`.
+//!
+//! The `_naive` twin convention: every optimized kernel `foo` ships with
+//! a `foo_naive` reference implementing the same contract with the
+//! simplest possible loop.  The twins use *different* summation orders,
+//! so they agree only to rounding — the property tests (and the CSR
+//! kernels in [`super::csr`], which follow the same convention) pin
+//! `|optimized - naive| <= 1e-5 * max(1, |value|)` element-wise, the
+//! crate-wide kernel tolerance.
 
 /// Borrowed view of the contiguous column range `[col0, col0 + cols)` of a
 /// row-major matrix — the paper's feature block `A_j`, read in place.  A
@@ -61,11 +69,13 @@ impl<'a> ColumnBlockView<'a> {
         }
     }
 
+    /// Rows of the viewed block.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Columns of the viewed block.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols

@@ -10,15 +10,19 @@
 
 use super::kernels::{self, ColumnBlockView};
 
+/// Row-major dense f32 matrix (the data-path precision).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
     /// Row-major storage: element (i, j) at `data[i * cols + j]`.
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix {
             rows,
@@ -27,6 +31,7 @@ impl Matrix {
         }
     }
 
+    /// Build from row vectors (all rows must have equal length).
     pub fn from_rows(rows: Vec<Vec<f32>>) -> Matrix {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -38,16 +43,19 @@ impl Matrix {
         }
     }
 
+    /// Element (i, j).
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
+    /// Mutable element (i, j).
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         &mut self.data[i * self.cols + j]
     }
 
+    /// Row `i` as a slice (length `cols`).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]

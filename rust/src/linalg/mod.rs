@@ -6,10 +6,15 @@
 //! is dependency-free Rust; the "GPU" path goes through `runtime::` instead.
 
 pub mod cg;
+/// Dense Cholesky factorization of SPD block normal matrices.
 pub mod cholesky;
+/// Compressed-sparse-row storage + kernels (the sparse data path).
 pub mod csr;
+/// Cache-tiled dense kernels with naive reference twins.
 pub mod kernels;
+/// Row-major dense matrix type.
 pub mod matrix;
+/// Vector operations shared by both precisions.
 pub mod ops;
 
 pub use cg::conjugate_gradient;

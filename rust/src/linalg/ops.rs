@@ -1,11 +1,13 @@
 //! Vector operations (f32 data path + f64 coordinator path).
 
+/// Dot product (f64 coordinator path).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Dot product (f32 data path).
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -21,6 +23,7 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// y += alpha * x (f32 data path).
 #[inline]
 pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -29,6 +32,7 @@ pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// x *= alpha in place.
 #[inline]
 pub fn scale(alpha: f64, x: &mut [f64]) {
     for v in x.iter_mut() {
@@ -46,26 +50,32 @@ pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
     }
 }
 
+/// Euclidean norm.
 pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
+/// Euclidean norm of an f32 slice, accumulated in f64.
 pub fn norm2_f32(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
 }
 
+/// l1 norm.
 pub fn norm1(x: &[f64]) -> f64 {
     x.iter().map(|v| v.abs()).sum()
 }
 
+/// l-infinity norm.
 pub fn norm_inf(x: &[f64]) -> f64 {
     x.iter().fold(0.0, |m, v| m.max(v.abs()))
 }
 
+/// Widen an f32 slice to a fresh f64 vector.
 pub fn to_f64(x: &[f32]) -> Vec<f64> {
     x.iter().map(|&v| v as f64).collect()
 }
 
+/// Narrow an f64 slice to a fresh f32 vector.
 pub fn to_f32(x: &[f64]) -> Vec<f32> {
     x.iter().map(|&v| v as f32).collect()
 }

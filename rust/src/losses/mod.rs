@@ -13,20 +13,27 @@
 //! (values, or ±1 for classification), `k` one-hot columns for softmax.
 
 pub mod scalar;
+/// Multinomial softmax loss (SSR).
 pub mod softmax;
 
 pub use scalar::{Hinge, Logistic, Squared};
 pub use softmax::Softmax;
 
+/// Which of the paper's four losses a run minimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LossKind {
+    /// Squared loss — sparse linear regression (SLS).
     Squared,
+    /// Logistic loss — sparse logistic regression (SLogR).
     Logistic,
+    /// Hinge loss — sparse SVM (SSVM).
     Hinge,
+    /// Softmax cross-entropy — sparse softmax regression (SSR).
     Softmax,
 }
 
 impl LossKind {
+    /// Parse a CLI/JSON loss name (paper aliases accepted).
     pub fn parse(name: &str) -> anyhow::Result<LossKind> {
         match name {
             "squared" | "sls" | "linreg" => Ok(LossKind::Squared),
@@ -38,8 +45,12 @@ impl LossKind {
     }
 }
 
+/// A separable convex loss `sum_i phi(pred_i; b_i)` with the three
+/// operations the stack needs.
 pub trait Loss: Send + Sync {
+    /// Which loss this is.
     fn kind(&self) -> LossKind;
+    /// Human-readable name for reports.
     fn name(&self) -> &'static str;
     /// Columns of the prediction matrix (1, or k for softmax).
     fn width(&self) -> usize;

@@ -17,6 +17,7 @@
 
 use super::{Loss, LossKind};
 
+/// Squared loss `(p - b)^2` — sparse linear regression (SLS).
 pub struct Squared;
 
 impl Loss for Squared {
@@ -55,6 +56,7 @@ impl Loss for Squared {
     }
 }
 
+/// Logistic loss `log(1 + exp(-b p))` — sparse logistic regression.
 pub struct Logistic;
 
 pub(crate) const LOGISTIC_NEWTON_ITERS: usize = 12;
@@ -110,6 +112,7 @@ impl Loss for Logistic {
     }
 }
 
+/// Hinge loss `max(0, 1 - b p)` — sparse SVM.
 pub struct Hinge;
 
 impl Loss for Hinge {

@@ -5,11 +5,13 @@
 
 use super::{Loss, LossKind};
 
+/// Softmax cross-entropy over `k` classes — sparse softmax regression.
 pub struct Softmax {
     k: usize,
 }
 
 impl Softmax {
+    /// Softmax loss over `k >= 2` classes.
     pub fn new(k: usize) -> Softmax {
         assert!(k >= 2, "softmax needs >= 2 classes");
         Softmax { k }

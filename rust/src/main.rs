@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train   — fit a sparse model on a synthetic distributed dataset
+//!   path    — warm-started sparsity-path sweep over descending budgets
+//!             (checkpoint/resume via --checkpoint)
 //!   fig1    — regenerate Figure 1 (residual convergence vs rho_b)
 //!   table1  — regenerate Table 1 (Bi-cADMM vs MIP vs Lasso)
 //!   fig2    — regenerate Figure 2 (feature scaling, CPU vs GPU backend)
@@ -10,15 +12,20 @@
 //!   straggler — sync vs async coordination under a 1x-16x slow node
 //!   bench   — kernel-layer micro-benchmarks (naive vs tiled, serial vs
 //!             pooled); writes BENCH_kernels.json
+//!   pathbench — warm vs cold path sweeps across the density grid;
+//!             writes BENCH_path.json
 //!   info    — print artifact manifest + platform info
 //!
 //! Scaled-down grids by default; `--full` switches to the paper's sizes.
+//! See docs/GUIDE.md for a walkthrough of every knob.
 
+use psfit::admm::SolveOptions;
 use psfit::config::{BackendKind, Config, CoordinationKind};
-use psfit::data::{SparseMode, SyntheticSpec, Task};
+use psfit::data::{Dataset, SparseMode, SyntheticSpec, Task};
 use psfit::driver;
 use psfit::harness;
 use psfit::losses::LossKind;
+use psfit::path;
 use psfit::sparsity::support_f1;
 use psfit::util::cli::Args;
 
@@ -33,6 +40,17 @@ fn run() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
+        Some("path") => path_cmd(&args),
+        Some("pathbench") => {
+            let opts = harness::path::PathBenchOpts {
+                quick: args.flag("quick"),
+                json: args.opt("json").unwrap_or("BENCH_path.json").to_string(),
+                out: args.opt("out").map(String::from),
+            };
+            args.reject_unknown()?;
+            let table = harness::path_bench(&opts)?;
+            harness::emit(&table, opts.out.as_deref())
+        }
         Some("fig1") => {
             let opts = harness::fig1::Fig1Opts {
                 full: args.flag("full"),
@@ -112,26 +130,33 @@ fn run() -> anyhow::Result<()> {
         Some("info") => info(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (try: train, fig1..fig4, table1, straggler, bench, info)"
+                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, info)"
             )
         }
         None => {
             eprintln!(
-                "usage: psfit <train|fig1|fig2|fig3|fig4|table1|straggler|bench|info> [options]"
+                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|info> [options]"
             );
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
             eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
             eprintln!("        psfit train --coordination async --quorum 0.75 --staleness 2");
             eprintln!("        psfit train --density 0.02 --sparse auto    (CSR data path)");
             eprintln!("        psfit train --libsvm data.svm --kappa 50    (real sparse data)");
+            eprintln!("        psfit path --budgets 200,100,50     (warm-started sparsity path)");
+            eprintln!("        psfit path --budgets 64,32 --rho-ladder 2.0,1.0 --checkpoint run.psc");
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
             eprintln!("        psfit bench --quick                 (writes BENCH_kernels.json)");
+            eprintln!("        psfit pathbench --quick             (writes BENCH_path.json)");
             Ok(())
         }
     }
 }
 
-fn train(args: &Args) -> anyhow::Result<()> {
+/// Parse the flags `train` and `path` share: problem shape, storage
+/// policy, solver penalties, coordination, and the optional LIBSVM
+/// source.  Returns the configured run plus the synthetic spec used when
+/// no real data file was given.
+fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<String>)> {
     let n: usize = args.get("n", 1000)?;
     let m: usize = args.get("m", 8000)?;
     let nodes: usize = args.get("nodes", 4)?;
@@ -177,20 +202,28 @@ fn train(args: &Args) -> anyhow::Result<()> {
         LossKind::Logistic | LossKind::Hinge => Task::Binary,
         LossKind::Softmax => Task::Multiclass { k: classes },
     };
-    cfg.solver.kappa = args.get("kappa", spec.kappa())?;
     let libsvm = args.opt("libsvm").map(String::from);
-    let trace_out = args.opt("trace").map(String::from);
-    args.reject_unknown()?;
+    Ok((cfg, spec, libsvm))
+}
 
-    let ds = match &libsvm {
+/// Materialize the dataset: load + re-split the LIBSVM file when one was
+/// given (updating `cfg.platform.nodes` to the actual shard count),
+/// otherwise generate the synthetic spec.
+fn build_dataset(
+    cfg: &mut Config,
+    spec: &SyntheticSpec,
+    libsvm: Option<&str>,
+) -> anyhow::Result<Dataset> {
+    match libsvm {
         Some(path) => {
             anyhow::ensure!(
-                loss != LossKind::Softmax,
+                cfg.loss != LossKind::Softmax,
                 "--libsvm files are scalar-label (use squared/logistic/hinge)"
             );
             let mut ds = psfit::data::io::load_libsvm(std::path::Path::new(path), None)?;
             // the file loads as one shard; honor --nodes by re-splitting
             // its rows across the requested cluster
+            let nodes = cfg.platform.nodes;
             if nodes > 1 {
                 anyhow::ensure!(
                     ds.total_samples() >= nodes,
@@ -200,20 +233,32 @@ fn train(args: &Args) -> anyhow::Result<()> {
                 ds = ds.resplit(nodes);
             }
             cfg.platform.nodes = ds.nodes();
-            cfg.solver.kappa = cfg.solver.kappa.min(ds.n_features * ds.width).max(1);
             eprintln!(
                 "loaded {path}: {} samples x {} features, density {:.4}",
                 ds.total_samples(),
                 ds.n_features,
                 ds.density()
             );
-            ds
+            Ok(ds)
         }
-        None => spec.generate(),
-    };
+        None => Ok(spec.generate()),
+    }
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let (mut cfg, spec, libsvm) = shared_config(args)?;
+    cfg.solver.kappa = args.get("kappa", spec.kappa())?;
+    let trace_out = args.opt("trace").map(String::from);
+    args.reject_unknown()?;
+
+    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref())?;
+    if libsvm.is_some() {
+        cfg.solver.kappa = cfg.solver.kappa.min(ds.n_features * ds.width).max(1);
+    }
+    let backend = cfg.platform.backend;
     eprintln!(
         "training {} (n={}, m={}, N={}, kappa={}, backend={}, coordination={})",
-        loss_name(loss),
+        loss_name(cfg.loss),
         ds.n_features,
         ds.total_samples(),
         ds.nodes(),
@@ -253,17 +298,10 @@ fn train(args: &Args) -> anyhow::Result<()> {
         res.transfers.net_up_bytes as f64 / 1e6,
         res.transfers.net_down_bytes as f64 / 1e6,
     );
-    if res.transfers.host_copy_saved_bytes > 0 {
-        println!(
-            "             {:.1} MB of block packing avoided (in-place column views)",
-            res.transfers.host_copy_saved_bytes as f64 / 1e6,
-        );
-    }
-    if res.transfers.net_alloc_saved_bytes > 0 {
-        println!(
-            "             {:.1} MB of round-trip allocations avoided (reused buffers)",
-            res.transfers.net_alloc_saved_bytes as f64 / 1e6,
-        );
+    // each savings counter prints only when it actually fired — an
+    // untouched ledger must not fabricate "0.0 MB avoided" lines
+    for line in res.transfers.savings_lines() {
+        println!("             {line}");
     }
     if let Some(stats) = &res.coordination {
         println!("coordination: {}", stats.summary());
@@ -273,6 +311,109 @@ fn train(args: &Args) -> anyhow::Result<()> {
             std::fs::create_dir_all(parent)?;
         }
         std::fs::write(&path, res.trace.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated list like `200,100,50`.
+fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> anyhow::Result<Vec<T>> {
+    raw.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid {what} entry `{tok}`"))
+        })
+        .collect()
+}
+
+fn path_cmd(args: &Args) -> anyhow::Result<()> {
+    let (mut cfg, spec, libsvm) = shared_config(args)?;
+    if let Some(b) = args.opt("budgets") {
+        cfg.path.budgets = parse_list(b, "--budgets")?;
+    }
+    if let Some(r) = args.opt("rho-ladder") {
+        cfg.path.rho_ladder = parse_list(r, "--rho-ladder")?;
+    }
+    if args.flag("cold") {
+        cfg.path.warm_start = false;
+    }
+    if args.flag("cg") {
+        cfg.path.direct = false;
+    }
+    if let Some(ck) = args.opt("checkpoint") {
+        cfg.path.checkpoint = Some(ck.to_string());
+    }
+    let out = args.opt("out").map(String::from);
+    args.reject_unknown()?;
+    anyhow::ensure!(
+        !cfg.path.budgets.is_empty(),
+        "psfit path needs --budgets k1,k2,... (strictly descending) or a config with a \"path\" section"
+    );
+    cfg.path.validate()?;
+
+    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref())?;
+    eprintln!(
+        "sparsity path over {} (n={}, m={}, N={}): {} budget(s) x {} rho rung(s), {}, {} solver",
+        loss_name(cfg.loss),
+        ds.n_features,
+        ds.total_samples(),
+        ds.nodes(),
+        cfg.path.budgets.len(),
+        cfg.path.rho_ladder.len().max(1),
+        if cfg.path.warm_start { "warm-started" } else { "cold-started" },
+        if cfg.path.direct { "direct" } else { "cg" },
+    );
+    if let Some(ck) = &cfg.path.checkpoint {
+        eprintln!("checkpoint:  {ck} (saved after every point; resumes automatically)");
+    }
+
+    let outcome = path::run_path(&ds, &cfg, &SolveOptions::default(), true)?;
+    if outcome.resumed_points > 0 {
+        eprintln!(
+            "resumed:     {} point(s) restored from checkpoint",
+            outcome.resumed_points
+        );
+    }
+
+    println!(
+        "{:>7} {:>8} {:>5} {:>6} {:>10} {:>12} {:>8} {:>9} {:>7}",
+        "kappa", "rho_c", "warm", "iters", "converged", "objective", "support", "wall_s", "reuse"
+    );
+    for p in &outcome.trace.points {
+        println!(
+            "{:>7} {:>8.3} {:>5} {:>6} {:>10} {:>12.4e} {:>8} {:>9.3} {:>7}",
+            p.kappa,
+            p.rho_c,
+            p.warm,
+            p.iters,
+            p.converged,
+            p.objective,
+            p.support.len(),
+            p.wall_seconds,
+            p.chol_reuses,
+        );
+    }
+    println!(
+        "total:       {} outer iterations over {} point(s)",
+        outcome.trace.total_iters(),
+        outcome.trace.points.len()
+    );
+    if let Some(res) = &outcome.final_result {
+        println!(
+            "support F1:  {:.3} at the final point (kappa={})",
+            support_f1(&res.support, &ds.support_true),
+            outcome.trace.last().map(|p| p.kappa).unwrap_or(0),
+        );
+        for line in res.transfers.savings_lines() {
+            println!("             {line}");
+        }
+    }
+    if let Some(path) = out {
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, outcome.trace.to_csv())?;
         eprintln!("wrote {path}");
     }
     Ok(())

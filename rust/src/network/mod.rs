@@ -23,8 +23,35 @@ use crate::admm::LocalProx;
 use crate::backend::BlockParams;
 use crate::metrics::{CoordinationStats, TransferLedger};
 
+/// Serializable warm-start snapshot of one node's solver state.
+///
+/// Everything a node needs to continue a Bi-cADMM trajectory: the outer
+/// consensus pair (x_i, u_i) in f64 and the inner sharing-ADMM state
+/// (omega-bar, nu, per-block predictions) in f32.  The per-block
+/// coefficients are *not* stored — they are recovered exactly by
+/// scattering `x` back into blocks (the f64s were cast from those very
+/// f32s, so the round trip is bit-exact).  Produced by
+/// [`Cluster::export_warm`], consumed by [`Cluster::reseed`], and
+/// serialized verbatim by `path::checkpoint`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WarmState {
+    /// Node id this snapshot belongs to.
+    pub node: usize,
+    /// Local estimate x_i (class-major flattened, length n * width).
+    pub x: Vec<f64>,
+    /// Scaled consensus dual u_i (same layout as `x`).
+    pub u: Vec<f64>,
+    /// Inner omega-bar, class-major (width, m_i).
+    pub omega: Vec<f32>,
+    /// Inner scaled dual nu, class-major (width, m_i).
+    pub nu: Vec<f32>,
+    /// Per-block predictions A_j x_j, class-major (width, m_i) each.
+    pub preds: Vec<Vec<f32>>,
+}
+
 /// One computational node's full state for the outer loop.
 pub struct NodeWorker {
+    /// Roster id (position in the cluster; stable across rounds).
     pub id: usize,
     prox: LocalProx,
     /// Local estimate x_i (class-major flattened).
@@ -37,6 +64,8 @@ pub struct NodeWorker {
 }
 
 impl NodeWorker {
+    /// Node `id` over a prox evaluator, with the penalties and inner
+    /// sweep count the outer loop will use.
     pub fn new(id: usize, prox: LocalProx, params: BlockParams, sweeps: usize) -> NodeWorker {
         let dim = prox.dim();
         NodeWorker {
@@ -80,17 +109,46 @@ impl NodeWorker {
         (x, u)
     }
 
+    /// Training loss at this node's current inner state (reporting).
     pub fn loss_value(&mut self) -> f64 {
         self.prox.loss_value()
     }
 
+    /// This node's transfer/byte ledger (delegates to the backend).
     pub fn ledger(&self) -> TransferLedger {
         self.prox.ledger()
+    }
+
+    /// Snapshot this node's complete warm-start state (path subsystem).
+    pub fn export_warm(&self) -> WarmState {
+        let (omega, nu, preds) = self.prox.warm_parts();
+        WarmState {
+            node: self.id,
+            x: self.x.clone(),
+            u: self.u.clone(),
+            omega,
+            nu,
+            preds,
+        }
+    }
+
+    /// Restore a warm-start snapshot and swap in the next path point's
+    /// penalties.  The next [`NodeWorker::round_into`] then continues the
+    /// consensus protocol (dual refresh first) instead of cold-starting.
+    pub fn reseed(&mut self, ws: &WarmState, params: BlockParams) {
+        assert_eq!(ws.x.len(), self.x.len(), "warm x dimension mismatch");
+        assert_eq!(ws.u.len(), self.u.len(), "warm u dimension mismatch");
+        self.x.copy_from_slice(&ws.x);
+        self.u.copy_from_slice(&ws.u);
+        self.prox.reseed(&ws.x, &ws.omega, &ws.nu, &ws.preds);
+        self.first_round = false;
+        self.params = params;
     }
 }
 
 /// Reply from one node's round.
 pub struct NodeReply {
+    /// Which node produced the reply.
     pub node: usize,
     /// Coordinator round the reply's `z` belonged to.  Synchronous
     /// clusters always tag the current round; the async coordinator may
@@ -99,10 +157,17 @@ pub struct NodeReply {
     /// Staleness in rounds, as judged by the cluster that produced the
     /// snapshot (always 0 for synchronous clusters).
     pub lag: usize,
+    /// The node's x_i^{k+1} (class-major flattened).
     pub x: Vec<f64>,
+    /// The node's scaled dual u_i^k (same layout as `x`).
     pub u: Vec<f64>,
 }
 
+/// Transport abstraction over a set of node workers — the MPI stand-in.
+///
+/// Implementations: [`SequentialCluster`] (in-process loop),
+/// [`ThreadedCluster`] (one OS thread per node), and
+/// [`crate::coordinator::AsyncCluster`] (partial-barrier rounds).
 pub trait Cluster {
     /// Total roster size (including degraded members, for threshold
     /// scaling — the solver weights its averages by actual replies).
@@ -123,6 +188,20 @@ pub trait Cluster {
     /// Async-protocol accounting, if this cluster keeps any.
     fn coordination(&self) -> Option<CoordinationStats> {
         None
+    }
+    /// Export every node's warm-start state, sorted by node id — the path
+    /// subsystem's handoff between path points.  Transports override this;
+    /// the default refuses so exotic clusters fail loudly rather than
+    /// silently cold-start.
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        anyhow::bail!("this transport does not support warm-state export")
+    }
+    /// Restore every node from the given warm states (matched by node id)
+    /// and swap in new block penalties — the inverse of
+    /// [`Cluster::export_warm`].  `states` must cover every node.
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        let _ = (states, params);
+        anyhow::bail!("this transport does not support warm re-seeding")
     }
 }
 
@@ -151,6 +230,7 @@ pub(crate) fn refresh_payload(
 // Sequential (in-process) cluster
 // ---------------------------------------------------------------------
 
+/// In-process full-barrier cluster — deterministic, the test baseline.
 pub struct SequentialCluster {
     workers: Vec<NodeWorker>,
     net: TransferLedger,
@@ -162,6 +242,7 @@ pub struct SequentialCluster {
 }
 
 impl SequentialCluster {
+    /// Wrap the workers; `dim` sizes the byte ledger entries.
     pub fn new(workers: Vec<NodeWorker>, dim: usize) -> SequentialCluster {
         SequentialCluster {
             workers,
@@ -221,6 +302,23 @@ impl Cluster for SequentialCluster {
     fn recycle(&mut self, mut replies: Vec<NodeReply>) {
         self.spare.append(&mut replies);
     }
+
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        let mut out: Vec<WarmState> = self.workers.iter().map(|w| w.export_warm()).collect();
+        out.sort_by_key(|s| s.node);
+        Ok(out)
+    }
+
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        for w in self.workers.iter_mut() {
+            let ws = states
+                .iter()
+                .find(|s| s.node == w.id)
+                .ok_or_else(|| anyhow::anyhow!("no warm state for node {}", w.id))?;
+            w.reseed(ws, params);
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -231,14 +329,22 @@ enum Command {
     Round(Arc<Vec<f64>>),
     Loss,
     Ledger,
+    Export,
+    /// Full warm-state set (each worker picks its own by id) + penalties.
+    Reseed(Arc<Vec<WarmState>>, BlockParams),
 }
 
 enum Reply {
     Round(NodeReply),
     Loss(f64),
     Ledger(TransferLedger),
+    Warm(Box<WarmState>),
+    Reseeded(usize),
+    ReseedFailed(usize),
 }
 
+/// One OS thread per node with channel Bcast/Collect — the MPI stand-in
+/// the benchmarks use.
 pub struct ThreadedCluster {
     senders: Vec<mpsc::Sender<Command>>,
     replies: mpsc::Receiver<Reply>,
@@ -252,6 +358,7 @@ pub struct ThreadedCluster {
 }
 
 impl ThreadedCluster {
+    /// Spawn one worker thread per node.
     pub fn new(workers: Vec<NodeWorker>, dim: usize) -> ThreadedCluster {
         let n = workers.len();
         let (reply_tx, replies) = mpsc::channel::<Reply>();
@@ -277,6 +384,16 @@ impl ThreadedCluster {
                         }
                         Command::Loss => Reply::Loss(w.loss_value()),
                         Command::Ledger => Reply::Ledger(w.ledger()),
+                        Command::Export => Reply::Warm(Box::new(w.export_warm())),
+                        Command::Reseed(states, params) => {
+                            match states.iter().find(|s| s.node == w.id) {
+                                Some(ws) => {
+                                    w.reseed(ws, params);
+                                    Reply::Reseeded(w.id)
+                                }
+                                None => Reply::ReseedFailed(w.id),
+                            }
+                        }
                     };
                     if out.send(reply).is_err() {
                         break;
@@ -367,6 +484,44 @@ impl Cluster for ThreadedCluster {
             }
         }
         total
+    }
+
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        for (i, tx) in self.senders.iter().enumerate() {
+            if tx.send(Command::Export).is_err() {
+                anyhow::bail!("node {i} died before the warm-state export");
+            }
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            match self.replies.recv() {
+                Ok(Reply::Warm(ws)) => out.push(*ws),
+                Ok(_) => anyhow::bail!("protocol violation: non-warm reply to export"),
+                Err(_) => anyhow::bail!("a node worker died during the warm-state export"),
+            }
+        }
+        out.sort_by_key(|s| s.node);
+        Ok(out)
+    }
+
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        let shared = Arc::new(states.to_vec());
+        for (i, tx) in self.senders.iter().enumerate() {
+            if tx.send(Command::Reseed(shared.clone(), params)).is_err() {
+                anyhow::bail!("node {i} died before the re-seed");
+            }
+        }
+        for _ in 0..self.n {
+            match self.replies.recv() {
+                Ok(Reply::Reseeded(_)) => {}
+                Ok(Reply::ReseedFailed(node)) => {
+                    anyhow::bail!("no warm state for node {node}")
+                }
+                Ok(_) => anyhow::bail!("protocol violation: non-reseed reply to re-seed"),
+                Err(_) => anyhow::bail!("a node worker died during the re-seed"),
+            }
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,536 @@
+//! PSC1 — the on-disk checkpoint format for sparsity-path sweeps.
+//!
+//! Written after every completed path point, so a killed sweep resumes at
+//! the last completed point with a **bit-identical** remaining trajectory
+//! (the resume sees exactly the [`SolverState`] an uninterrupted run
+//! would hand to the next point).  Everything is little-endian and
+//! round-trips floats through `to_le_bytes`, so the restore is bit-exact
+//! by construction.
+//!
+//! Layout:
+//!
+//! ```text
+//! magic "PSC1" | u32 version | u64 problem_hash
+//! | u32 completed_points | per point:
+//!     u32 kappa | f64 rho_c | f64 rho_b | u8 warm | u32 iters
+//!     | u8 converged | f64 objective | f64 wall_seconds
+//!     | u64 gram_builds | u64 chol_factorizations | u64 chol_reuses
+//!     | u32 support_len | support_len x u32
+//! | u8 has_state | (when 1) SolverState:
+//!     global: u32 dim | dim x f64 z | f64 t | dim x f64 s | f64 v
+//!             | dim x f64 z_prev
+//!     nodes:  u32 count | per node:
+//!         u32 node | u32 dim | dim x f64 x | dim x f64 u
+//!         | u32 mw | mw x f32 omega | mw x f32 nu
+//!         | u32 blocks | per block: u32 len | len x f32 pred
+//! ```
+//!
+//! The `problem_hash` fingerprints the dataset shape, solver settings,
+//! and the expanded point list; [`load`]ing a checkpoint whose hash does
+//! not match the current run is rejected by `path::run_path` so a stale
+//! file can never silently seed a different sweep.  Writes go through a
+//! temp file + rename, so a kill mid-write leaves the previous checkpoint
+//! intact.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{PathPoint, PathPointRecord};
+use crate::admm::{GlobalState, SolverState};
+use crate::config::Config;
+use crate::data::Dataset;
+use crate::network::WarmState;
+
+const MAGIC: &[u8; 4] = b"PSC1";
+const VERSION: u32 = 1;
+
+/// Everything a resumed sweep needs: the records of completed points and
+/// the warm state to seed the next one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Fingerprint of the run this checkpoint belongs to.
+    pub problem_hash: u64,
+    /// Records of every completed path point, in solve order.
+    pub completed: Vec<PathPointRecord>,
+    /// Warm state after the last completed point.  `None` for cold-mode
+    /// sweeps (which resume by position only) and for degraded async
+    /// sweeps whose export did not cover the full roster (a resume then
+    /// cold-starts its next point instead of failing on reseed).
+    pub state: Option<SolverState>,
+}
+
+// ---------------------------------------------------------------- hashing
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+/// FNV-1a fingerprint of the quantities that must match for a checkpoint
+/// to be resumable: dataset shape *and contents* (strided value samples,
+/// all labels, the planted truth — a different seed/density/file on the
+/// same shape changes the hash with overwhelming probability), every
+/// trajectory-shaping setting (loss, classes, solver tolerances and
+/// iteration counts, backend, storage policy, feature-plan width,
+/// coordination), the path mode, and the expanded point list.
+pub fn problem_hash(ds: &Dataset, cfg: &Config, points: &[PathPoint]) -> u64 {
+    let mut h = Fnv::new();
+    // dataset shape
+    h.u64(ds.n_features as u64);
+    h.u64(ds.width as u64);
+    h.u64(ds.nodes() as u64);
+    h.u64(ds.total_samples() as u64);
+    // dataset contents (cheap fingerprint)
+    for &x in &ds.x_true {
+        h.f64(x);
+    }
+    for &i in &ds.support_true {
+        h.u64(i as u64);
+    }
+    for shard in &ds.shards {
+        h.u64(shard.rows() as u64);
+        h.u64(shard.data.nnz() as u64);
+        for &l in &shard.labels {
+            h.f32(l);
+        }
+        match &shard.data {
+            crate::data::ShardData::Dense(a) => {
+                let step = (a.data.len() / 1024).max(1);
+                for &v in a.data.iter().step_by(step) {
+                    h.f32(v);
+                }
+            }
+            crate::data::ShardData::Csr(c) => {
+                let step = (c.vals.len() / 1024).max(1);
+                for &v in c.vals.iter().step_by(step) {
+                    h.f32(v);
+                }
+            }
+        }
+    }
+    // trajectory-shaping solver / platform / coordination settings
+    h.f64(cfg.solver.rho_l);
+    h.f64(cfg.solver.gamma);
+    h.u64(cfg.solver.max_iters as u64);
+    h.u64(cfg.solver.inner_iters as u64);
+    h.u64(cfg.solver.cg_iters as u64);
+    h.u64(cfg.solver.zt_iters as u64);
+    h.u64(cfg.solver.polish as u64);
+    h.f64(cfg.solver.tol_primal);
+    h.f64(cfg.solver.tol_dual);
+    h.f64(cfg.solver.tol_bilinear);
+    h.u64(cfg.loss as u64);
+    h.u64(cfg.classes as u64);
+    h.u64(cfg.platform.backend as u64);
+    h.u64(cfg.platform.sparse as u64);
+    h.f64(cfg.platform.sparse_threshold);
+    h.u64(cfg.platform.devices_per_node as u64);
+    h.u64(cfg.coordinator.coordination as u64);
+    h.f64(cfg.coordinator.quorum);
+    h.u64(cfg.coordinator.max_staleness as u64);
+    // the path itself
+    h.u64(cfg.path.warm_start as u64);
+    h.u64(cfg.path.direct as u64);
+    h.u64(points.len() as u64);
+    for p in points {
+        h.u64(p.kappa as u64);
+        h.f64(p.rho_c);
+        h.f64(p.rho_b);
+    }
+    h.0
+}
+
+// ------------------------------------------------------------ primitives
+
+fn w_u8<W: Write>(w: &mut W, v: u8) -> std::io::Result<()> {
+    w.write_all(&[v])
+}
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u64<W: Write>(w: &mut W, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_f64<W: Write>(w: &mut W, v: f64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_f64s<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
+    w_u32(w, xs.len() as u32)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn w_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    w_u32(w, xs.len() as u32)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u8<R: Read>(r: &mut R) -> std::io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn r_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64<R: Read>(r: &mut R) -> std::io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Bound an element count read from the file by what the file could
+/// possibly hold (`elem` = minimum bytes per element), so a corrupt
+/// count field yields a clean error instead of a huge allocation.
+fn bounded(n: usize, elem: u64, file_len: u64, what: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        (n as u64).saturating_mul(elem) <= file_len,
+        "corrupt checkpoint: {what} count {n} exceeds the file size"
+    );
+    Ok(n)
+}
+
+fn r_f64s<R: Read>(r: &mut R, file_len: u64) -> anyhow::Result<Vec<f64>> {
+    let n = bounded(r_u32(r)? as usize, 8, file_len, "f64 vector")?;
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+fn r_f32s<R: Read>(r: &mut R, file_len: u64) -> anyhow::Result<Vec<f32>> {
+    let n = bounded(r_u32(r)? as usize, 4, file_len, "f32 vector")?;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------------------ save
+
+/// Atomically persist a checkpoint: written to `<path>.tmp`, then renamed
+/// over `path`, so a kill mid-write leaves the previous file intact.
+pub fn save(path: &Path, ck: &Checkpoint) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = path.with_extension("psc1.tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        w_u32(&mut w, VERSION)?;
+        w_u64(&mut w, ck.problem_hash)?;
+        w_u32(&mut w, ck.completed.len() as u32)?;
+        for p in &ck.completed {
+            w_u32(&mut w, p.kappa as u32)?;
+            w_f64(&mut w, p.rho_c)?;
+            w_f64(&mut w, p.rho_b)?;
+            w_u8(&mut w, p.warm as u8)?;
+            w_u32(&mut w, p.iters as u32)?;
+            w_u8(&mut w, p.converged as u8)?;
+            w_f64(&mut w, p.objective)?;
+            w_f64(&mut w, p.wall_seconds)?;
+            w_u64(&mut w, p.gram_builds)?;
+            w_u64(&mut w, p.chol_factorizations)?;
+            w_u64(&mut w, p.chol_reuses)?;
+            w_u32(&mut w, p.support.len() as u32)?;
+            for &i in &p.support {
+                w_u32(&mut w, i as u32)?;
+            }
+        }
+        match &ck.state {
+            None => w_u8(&mut w, 0)?,
+            Some(st) => {
+                w_u8(&mut w, 1)?;
+                w_f64s(&mut w, &st.global.z)?;
+                w_f64(&mut w, st.global.t)?;
+                w_f64s(&mut w, &st.global.s)?;
+                w_f64(&mut w, st.global.v)?;
+                w_f64s(&mut w, &st.global.z_prev)?;
+                w_u32(&mut w, st.nodes.len() as u32)?;
+                for ws in &st.nodes {
+                    w_u32(&mut w, ws.node as u32)?;
+                    w_f64s(&mut w, &ws.x)?;
+                    w_f64s(&mut w, &ws.u)?;
+                    w_f32s(&mut w, &ws.omega)?;
+                    w_f32s(&mut w, &ws.nu)?;
+                    w_u32(&mut w, ws.preds.len() as u32)?;
+                    for p in &ws.preds {
+                        w_f32s(&mut w, p)?;
+                    }
+                }
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("committing checkpoint {}: {e}", path.display()))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------ load
+
+/// Read a checkpoint back, bit-exactly.  Fails cleanly on a bad
+/// magic/version, a truncated file, or count fields exceeding what the
+/// file could hold; hash compatibility is the *caller's* check (the
+/// loader cannot know which run the bytes were meant for).
+pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening checkpoint {}: {e}", path.display()))?;
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a PSC1 checkpoint file");
+    let version = r_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let problem_hash = r_u64(&mut r)?;
+    // a point record is >= 70 bytes on disk
+    let n_points = bounded(r_u32(&mut r)? as usize, 70, file_len, "path point")?;
+    let mut completed = Vec::with_capacity(n_points);
+    for _ in 0..n_points {
+        let kappa = r_u32(&mut r)? as usize;
+        let rho_c = r_f64(&mut r)?;
+        let rho_b = r_f64(&mut r)?;
+        let warm = r_u8(&mut r)? != 0;
+        let iters = r_u32(&mut r)? as usize;
+        let converged = r_u8(&mut r)? != 0;
+        let objective = r_f64(&mut r)?;
+        let wall_seconds = r_f64(&mut r)?;
+        let gram_builds = r_u64(&mut r)?;
+        let chol_factorizations = r_u64(&mut r)?;
+        let chol_reuses = r_u64(&mut r)?;
+        let s_len = bounded(r_u32(&mut r)? as usize, 4, file_len, "support entry")?;
+        let mut support = Vec::with_capacity(s_len);
+        for _ in 0..s_len {
+            support.push(r_u32(&mut r)? as usize);
+        }
+        completed.push(PathPointRecord {
+            kappa,
+            rho_c,
+            rho_b,
+            warm,
+            iters,
+            converged,
+            objective,
+            support,
+            wall_seconds,
+            gram_builds,
+            chol_factorizations,
+            chol_reuses,
+        });
+    }
+    let state = match r_u8(&mut r)? {
+        0 => None,
+        _ => {
+            let z = r_f64s(&mut r, file_len)?;
+            let t = r_f64(&mut r)?;
+            let s = r_f64s(&mut r, file_len)?;
+            let v = r_f64(&mut r)?;
+            let z_prev = r_f64s(&mut r, file_len)?;
+            anyhow::ensure!(
+                z.len() == s.len() && z.len() == z_prev.len(),
+                "corrupt checkpoint: global vector lengths disagree"
+            );
+            // a node snapshot is >= 24 bytes on disk; a block >= 4
+            let n_nodes = bounded(r_u32(&mut r)? as usize, 24, file_len, "node state")?;
+            let mut nodes = Vec::with_capacity(n_nodes);
+            for _ in 0..n_nodes {
+                let node = r_u32(&mut r)? as usize;
+                let x = r_f64s(&mut r, file_len)?;
+                let u = r_f64s(&mut r, file_len)?;
+                let omega = r_f32s(&mut r, file_len)?;
+                let nu = r_f32s(&mut r, file_len)?;
+                let n_blocks = bounded(r_u32(&mut r)? as usize, 4, file_len, "block")?;
+                let mut preds = Vec::with_capacity(n_blocks);
+                for _ in 0..n_blocks {
+                    preds.push(r_f32s(&mut r, file_len)?);
+                }
+                nodes.push(WarmState {
+                    node,
+                    x,
+                    u,
+                    omega,
+                    nu,
+                    preds,
+                });
+            }
+            Some(SolverState {
+                global: GlobalState {
+                    z,
+                    t,
+                    s,
+                    v,
+                    z_prev,
+                },
+                nodes,
+            })
+        }
+    };
+    Ok(Checkpoint {
+        problem_hash,
+        completed,
+        state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            problem_hash: 0xDEAD_BEEF_CAFE_F00D,
+            completed: vec![PathPointRecord {
+                kappa: 8,
+                rho_c: 1.5,
+                rho_b: 0.75,
+                warm: true,
+                iters: 42,
+                converged: true,
+                objective: -3.25e-2,
+                support: vec![1, 4, 9],
+                wall_seconds: 0.125,
+                gram_builds: 4,
+                chol_factorizations: 2,
+                chol_reuses: 1,
+            }],
+            state: Some(SolverState {
+                global: GlobalState {
+                    z: vec![0.1, -0.2, 3.0e-17],
+                    t: 2.5,
+                    s: vec![1.0, 0.0, -1.0],
+                    v: -0.625,
+                    z_prev: vec![0.0, 0.25, f64::MIN_POSITIVE],
+                },
+                nodes: vec![WarmState {
+                    node: 1,
+                    x: vec![0.5, 0.25, -0.125],
+                    u: vec![-1.0, 2.0, 0.0],
+                    omega: vec![0.5f32, -0.25],
+                    nu: vec![1.5f32, 0.0],
+                    preds: vec![vec![0.125f32], vec![-2.5f32]],
+                }],
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ck = sample_checkpoint();
+        let path = std::env::temp_dir().join("psfit_ck_roundtrip.psc");
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn roundtrip_without_state() {
+        let mut ck = sample_checkpoint();
+        ck.state = None;
+        let path = std::env::temp_dir().join("psfit_ck_nostate.psc");
+        save(&path, &ck).unwrap();
+        assert_eq!(load(&path).unwrap(), ck);
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_version() {
+        let path = std::env::temp_dir().join("psfit_ck_garbage.psc");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(load(&path).is_err());
+        let mut bytes = b"PSC1".to_vec();
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_oversized_count_fields_cleanly() {
+        // a corrupt count must be a clean error, not a huge allocation
+        let path = std::env::temp_dir().join("psfit_ck_huge.psc");
+        let mut bytes = b"PSC1".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // hash
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd point count
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("exceeds the file size"), "{err}");
+    }
+
+    #[test]
+    fn hash_is_sensitive_to_points_and_shape() {
+        let ds = crate::data::SyntheticSpec::regression(10, 30, 2).generate();
+        let mut cfg = Config::default();
+        cfg.path.budgets = vec![4, 2];
+        let pts = cfg.path.points(&cfg.solver);
+        let h0 = problem_hash(&ds, &cfg, &pts);
+        assert_eq!(h0, problem_hash(&ds, &cfg, &pts), "hash is deterministic");
+
+        let mut cfg2 = cfg.clone();
+        cfg2.path.budgets = vec![4, 3];
+        let pts2 = cfg2.path.points(&cfg2.solver);
+        assert_ne!(h0, problem_hash(&ds, &cfg2, &pts2), "budgets change the hash");
+
+        let ds2 = crate::data::SyntheticSpec::regression(11, 30, 2).generate();
+        assert_ne!(h0, problem_hash(&ds2, &cfg, &pts), "shape changes the hash");
+
+        // same shape, different contents (seed) — must still differ
+        let mut spec3 = crate::data::SyntheticSpec::regression(10, 30, 2);
+        spec3.seed = 7;
+        let ds3 = spec3.generate();
+        assert_ne!(h0, problem_hash(&ds3, &cfg, &pts), "contents change the hash");
+
+        // trajectory-shaping settings — must differ
+        let mut cfg4 = cfg.clone();
+        cfg4.loss = crate::losses::LossKind::Logistic;
+        assert_ne!(h0, problem_hash(&ds, &cfg4, &pts), "loss changes the hash");
+        let mut cfg5 = cfg.clone();
+        cfg5.solver.tol_primal = 1e-6;
+        assert_ne!(h0, problem_hash(&ds, &cfg5, &pts), "tolerances change the hash");
+    }
+}

@@ -1,0 +1,486 @@
+//! Warm-started sparsity-path subsystem: one incremental sweep instead of
+//! N cold solves.
+//!
+//! The paper's experiments treat every (kappa, rho) cell of Table 1 /
+//! Fig. 4 as an independent cold-started run, yet ADMM-family methods
+//! amortize almost all of their cost across nearby problems via warm
+//! starts (Deng et al., arXiv:1312.3040) and exact-sparse solvers branch
+//! over budgets the same way (Anh-Nguyen & Uribe).  This module drives a
+//! **descending** sequence of cardinality budgets kappa_1 > kappa_2 > ...
+//! (optionally crossed with a rho ladder), warm-starting each solve from
+//! the previous point's full [`SolverState`]:
+//!
+//!   * the coordinator's (z, t, s, v) continue their trajectory — a solve
+//!     at kappa_{i+1} starts from the kappa_i optimum, which is already
+//!     nearly feasible for the tighter budget;
+//!   * every node's (x_i, u_i) and inner sharing-ADMM state carry over
+//!     through [`crate::network::Cluster::reseed`];
+//!   * the per-block Gram matrices are computed **once** for the whole
+//!     sweep (they depend only on the data), and Cholesky factors are
+//!     cached keyed by (block, penalties), so a rho-ladder revisit is a
+//!     lookup instead of an O(w^3) refactorization — the reuse counters
+//!     land in each [`PathPointRecord`].
+//!
+//! The handoff between points always goes through the serializable
+//! [`SolverState`], which is exactly what [`checkpoint`] persists after
+//! every completed point: a killed sweep resumes at the last completed
+//! path point with a bit-identical remaining trajectory (pinned by
+//! `tests/path.rs`).
+//!
+//! Entry points: `psfit path` (CLI), the JSON `"path"` config section,
+//! and [`run_path`] for library users; `psfit pathbench` benchmarks warm
+//! vs. cold across the density grid into `BENCH_path.json`.
+
+pub mod checkpoint;
+
+use crate::admm::{self, GlobalState, SolveOptions, SolveResult, SolverState};
+use crate::backend::native::SolveMode;
+use crate::backend::BlockParams;
+use crate::config::{Config, SolverConfig};
+use crate::data::Dataset;
+use crate::driver;
+use crate::losses::make_loss;
+use crate::metrics::TransferLedger;
+use crate::network::Cluster;
+use crate::util::Stopwatch;
+
+/// One (kappa, rho) node of a sparsity-path sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathPoint {
+    /// Cardinality budget at this point.
+    pub kappa: usize,
+    /// Consensus penalty rho_c at this point.
+    pub rho_c: f64,
+    /// Bi-linear penalty rho_b at this point (the base config's
+    /// rho_b/rho_c ratio is preserved along the ladder).
+    pub rho_b: f64,
+}
+
+/// Configuration of the sparsity-path subsystem (JSON `"path"` section,
+/// `psfit path` CLI flags).
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// Cardinality budgets, strictly descending (e.g. `[200, 100, 50]`).
+    pub budgets: Vec<usize>,
+    /// Optional rho_c ladder; each rung sweeps every budget.  Empty means
+    /// a single rung at the base config's rho_c.
+    pub rho_ladder: Vec<f64>,
+    /// Warm-start each point from the previous one (the whole point of a
+    /// path); `false` re-builds everything per point — the cold baseline
+    /// `psfit pathbench` measures against.
+    pub warm_start: bool,
+    /// Checkpoint file: written after every completed point, resumed from
+    /// automatically when it exists and matches the problem.
+    pub checkpoint: Option<String>,
+    /// Stop after this many completed points (test/benchmark hook that
+    /// simulates a killed sweep; `None` runs the full path).
+    pub limit: Option<usize>,
+    /// Use the direct (cached-Cholesky) native solver so the keyed
+    /// factorization cache pays off across rho revisits; `false` keeps
+    /// the artifact-parallel CG mode.
+    pub direct: bool,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            budgets: Vec::new(),
+            rho_ladder: Vec::new(),
+            warm_start: true,
+            checkpoint: None,
+            limit: None,
+            direct: true,
+        }
+    }
+}
+
+impl PathConfig {
+    /// Reject empty, non-descending, or degenerate sweeps.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.budgets.is_empty(),
+            "path.budgets must list at least one cardinality budget"
+        );
+        for &k in &self.budgets {
+            anyhow::ensure!(k >= 1, "path budgets must be >= 1");
+        }
+        for w in self.budgets.windows(2) {
+            anyhow::ensure!(
+                w[0] > w[1],
+                "path.budgets must be strictly descending (got {} then {})",
+                w[0],
+                w[1]
+            );
+        }
+        for &r in &self.rho_ladder {
+            anyhow::ensure!(
+                r.is_finite() && r > 0.0,
+                "path.rho_ladder entries must be positive, got {r}"
+            );
+        }
+        if let Some(l) = self.limit {
+            anyhow::ensure!(l >= 1, "path.limit must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Expand the sweep: for every ladder rung (outer, in the given
+    /// order) solve every budget (inner, descending).  The base config's
+    /// rho_b/rho_c ratio (the paper's alpha rule) is preserved per rung.
+    pub fn points(&self, base: &SolverConfig) -> Vec<PathPoint> {
+        let ratio = base.rho_b / base.rho_c;
+        let rungs: Vec<f64> = if self.rho_ladder.is_empty() {
+            vec![base.rho_c]
+        } else {
+            self.rho_ladder.clone()
+        };
+        let mut out = Vec::with_capacity(rungs.len() * self.budgets.len());
+        for &rho in &rungs {
+            for &kappa in &self.budgets {
+                out.push(PathPoint {
+                    kappa,
+                    rho_c: rho,
+                    rho_b: rho * ratio,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Everything one completed path point reports: the model-selection
+/// quantities (support, objective) plus the reuse accounting that shows
+/// what warm-starting saved.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PathPointRecord {
+    /// Cardinality budget of this point.
+    pub kappa: usize,
+    /// Consensus penalty used at this point.
+    pub rho_c: f64,
+    /// Bi-linear penalty used at this point.
+    pub rho_b: f64,
+    /// Whether this point was warm-started from the previous one.
+    pub warm: bool,
+    /// Outer Bi-cADMM iterations the point needed.
+    pub iters: usize,
+    /// Whether the residual thresholds were met.
+    pub converged: bool,
+    /// Full regularized objective (Eq. 1) of the extracted solution.
+    pub objective: f64,
+    /// Recovered support (sorted flattened coefficient indices).
+    pub support: Vec<usize>,
+    /// Wall-clock seconds for this point (including any rebuild).
+    pub wall_seconds: f64,
+    /// Per-block Gram matrices computed for this point (0 on every
+    /// warm point after the first — the sweep reuses them).
+    pub gram_builds: u64,
+    /// Cholesky factorizations computed at this point.
+    pub chol_factorizations: u64,
+    /// Cholesky factors served from the keyed cache at this point.
+    pub chol_reuses: u64,
+}
+
+/// The full trace of a sparsity-path sweep, one record per completed
+/// point in solve order.
+///
+/// ```
+/// use psfit::path::{PathPointRecord, PathTrace};
+/// let mut trace = PathTrace::default();
+/// trace.points.push(PathPointRecord {
+///     kappa: 8,
+///     iters: 12,
+///     support: vec![1, 5, 7],
+///     ..Default::default()
+/// });
+/// let csv = trace.to_csv();
+/// assert!(csv.starts_with("kappa,rho_c,rho_b,warm,iters"));
+/// assert_eq!(csv.lines().count(), 2, "header + one point");
+/// assert_eq!(trace.total_iters(), 12);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PathTrace {
+    /// Completed points in solve order (ladder-major, budgets descending).
+    pub points: Vec<PathPointRecord>,
+}
+
+impl PathTrace {
+    /// Sum of outer iterations over all completed points — the quantity a
+    /// warm sweep shrinks relative to a cold sequence.
+    pub fn total_iters(&self) -> usize {
+        self.points.iter().map(|p| p.iters).sum()
+    }
+
+    /// The last completed point, if any.
+    pub fn last(&self) -> Option<&PathPointRecord> {
+        self.points.last()
+    }
+
+    /// CSV rendering with header
+    /// `kappa,rho_c,rho_b,warm,iters,converged,objective,support_size,wall_seconds,gram_builds,chol_factorizations,chol_reuses`.
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from(
+            "kappa,rho_c,rho_b,warm,iters,converged,objective,support_size,\
+             wall_seconds,gram_builds,chol_factorizations,chol_reuses\n",
+        );
+        for p in &self.points {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{:.6e},{},{:.6e},{},{},{}",
+                p.kappa,
+                p.rho_c,
+                p.rho_b,
+                p.warm,
+                p.iters,
+                p.converged,
+                p.objective,
+                p.support.len(),
+                p.wall_seconds,
+                p.gram_builds,
+                p.chol_factorizations,
+                p.chol_reuses
+            );
+        }
+        out
+    }
+}
+
+/// What [`run_path`] hands back.
+pub struct PathOutcome {
+    /// One record per completed point (checkpoint-restored points
+    /// included, so the trace always covers the whole sweep so far).
+    pub trace: PathTrace,
+    /// The last point actually solved in this process (`None` when the
+    /// checkpoint already covered every requested point).
+    pub final_result: Option<SolveResult>,
+    /// Points skipped because a matching checkpoint already covered them.
+    pub resumed_points: usize,
+}
+
+/// Run the configured sparsity path over a dataset.
+///
+/// Builds the cluster once (warm mode) and hands the serializable
+/// [`SolverState`] from each point to the next; with `cfg.path.checkpoint`
+/// set, the state and trace are persisted after every completed point and
+/// a matching checkpoint file is resumed from automatically.  `threaded`
+/// selects the transport exactly like [`driver::fit_with_options`].
+pub fn run_path(
+    ds: &Dataset,
+    cfg: &Config,
+    opts: &SolveOptions,
+    threaded: bool,
+) -> anyhow::Result<PathOutcome> {
+    let pcfg = &cfg.path;
+    pcfg.validate()?;
+    cfg.solver.validate()?;
+    let points = pcfg.points(&cfg.solver);
+    let dim = ds.n_features * ds.width;
+    for p in &points {
+        anyhow::ensure!(
+            p.kappa <= dim,
+            "path budget {} exceeds the coefficient dimension {dim}",
+            p.kappa
+        );
+    }
+    let hash = checkpoint::problem_hash(ds, cfg, &points);
+
+    // ---- resume: a matching checkpoint skips its completed points ------
+    let mut completed: Vec<PathPointRecord> = Vec::new();
+    let mut state: Option<SolverState> = None;
+    if let Some(ck_path) = &pcfg.checkpoint {
+        let p = std::path::Path::new(ck_path);
+        if p.exists() {
+            let ck = checkpoint::load(p)?;
+            anyhow::ensure!(
+                ck.problem_hash == hash,
+                "checkpoint {ck_path} was written for a different path run \
+                 (dataset, budgets, ladder, or solver settings changed)"
+            );
+            completed = ck.completed;
+            state = ck.state;
+        }
+    }
+    let resumed_points = completed.len();
+
+    let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
+    let mode = if pcfg.direct {
+        SolveMode::Direct
+    } else {
+        SolveMode::Cg {
+            iters: cfg.solver.cg_iters,
+        }
+    };
+
+    let mut cluster: Option<Box<dyn Cluster>> = None;
+    let mut prev_ledger = TransferLedger::default();
+    let mut final_result = None;
+    let end = pcfg.limit.map(|l| l.min(points.len())).unwrap_or(points.len());
+
+    for pt in points.iter().take(end).skip(resumed_points) {
+        let watch = Stopwatch::start();
+        let mut pc = cfg.clone();
+        pc.solver.kappa = pt.kappa;
+        pc.solver.rho_c = pt.rho_c;
+        pc.solver.rho_b = pt.rho_b;
+        let params = BlockParams {
+            rho_l: pc.solver.rho_l,
+            rho_c: pc.solver.rho_c,
+            reg: pc.solver.block_reg(ds.nodes()),
+        };
+
+        // warm mode keeps one cluster for the whole sweep; cold mode
+        // re-builds per point (Gram recompute and all), like a sequence
+        // of independent `psfit train` runs
+        if cluster.is_none() || !pcfg.warm_start {
+            let workers = driver::build_workers_mode(ds, &pc, mode)?;
+            cluster = Some(driver::build_cluster(workers, dim, &pc, threaded)?);
+            prev_ledger = TransferLedger::default();
+        }
+        let cl = cluster.as_mut().unwrap().as_mut();
+
+        let warm = pcfg.warm_start && state.is_some();
+        let mut global = match (&state, warm) {
+            (Some(s), true) => {
+                cl.reseed(&s.nodes, params)?;
+                s.global.clone()
+            }
+            _ => GlobalState::new(dim),
+        };
+        let res = admm::solve_from(cl, &mut global, &pc, Some(ds), opts)?;
+
+        let ledger = res.transfers.clone();
+        let objective = admm::solver::objective(ds, loss.as_ref(), pc.solver.gamma, &res.x);
+        completed.push(PathPointRecord {
+            kappa: pt.kappa,
+            rho_c: pt.rho_c,
+            rho_b: pt.rho_b,
+            warm,
+            iters: res.iters,
+            converged: res.converged,
+            objective,
+            support: res.support.clone(),
+            wall_seconds: watch.elapsed_secs(),
+            gram_builds: ledger.gram_builds.saturating_sub(prev_ledger.gram_builds),
+            chol_factorizations: ledger
+                .chol_factorizations
+                .saturating_sub(prev_ledger.chol_factorizations),
+            chol_reuses: ledger.chol_reuses.saturating_sub(prev_ledger.chol_reuses),
+        });
+        prev_ledger = ledger;
+
+        // the ONLY state transfer between points: capture the serializable
+        // snapshot (also what the checkpoint persists, so resume sees
+        // exactly what an uninterrupted run would)
+        state = if pcfg.warm_start {
+            Some(SolverState::capture(cl, &global)?)
+        } else {
+            None
+        };
+        if let Some(ck_path) = &pcfg.checkpoint {
+            // a degraded (async) cluster can export fewer states than the
+            // full roster; such a partial snapshot could never re-seed the
+            // fresh full cluster a resume builds, so persist it only when
+            // it covers every node — a resume from a degraded sweep then
+            // cold-starts its next point instead of failing on reseed
+            let complete = match &state {
+                None => true,
+                Some(s) => {
+                    s.nodes.len() == ds.nodes()
+                        && (0..ds.nodes()).all(|i| s.nodes.iter().any(|w| w.node == i))
+                }
+            };
+            checkpoint::save(
+                std::path::Path::new(ck_path),
+                &checkpoint::Checkpoint {
+                    problem_hash: hash,
+                    completed: completed.clone(),
+                    state: if complete { state.clone() } else { None },
+                },
+            )?;
+        }
+        final_result = Some(res);
+    }
+
+    Ok(PathOutcome {
+        trace: PathTrace { points: completed },
+        final_result,
+        resumed_points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_bad_sweeps() {
+        let mut p = PathConfig::default();
+        assert!(p.validate().is_err(), "empty budgets");
+        p.budgets = vec![10, 10];
+        assert!(p.validate().is_err(), "non-descending");
+        p.budgets = vec![10, 20];
+        assert!(p.validate().is_err(), "ascending");
+        p.budgets = vec![10, 5, 0];
+        assert!(p.validate().is_err(), "zero budget");
+        p.budgets = vec![10, 5, 2];
+        p.validate().unwrap();
+        p.rho_ladder = vec![1.0, -2.0];
+        assert!(p.validate().is_err(), "negative rho");
+        p.rho_ladder = vec![2.0, 1.0];
+        p.validate().unwrap();
+        p.limit = Some(0);
+        assert!(p.validate().is_err(), "zero limit");
+    }
+
+    #[test]
+    fn points_cross_ladder_with_budgets_preserving_alpha() {
+        let mut pcfg = PathConfig::default();
+        pcfg.budgets = vec![8, 4];
+        pcfg.rho_ladder = vec![2.0, 0.5];
+        let base = SolverConfig {
+            rho_c: 1.0,
+            rho_b: 0.5, // alpha = 0.5
+            ..Default::default()
+        };
+        let pts = pcfg.points(&base);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0], PathPoint { kappa: 8, rho_c: 2.0, rho_b: 1.0 });
+        assert_eq!(pts[1], PathPoint { kappa: 4, rho_c: 2.0, rho_b: 1.0 });
+        assert_eq!(pts[2], PathPoint { kappa: 8, rho_c: 0.5, rho_b: 0.25 });
+        assert_eq!(pts[3], PathPoint { kappa: 4, rho_c: 0.5, rho_b: 0.25 });
+    }
+
+    #[test]
+    fn points_default_to_base_rho_without_ladder() {
+        let mut pcfg = PathConfig::default();
+        pcfg.budgets = vec![6, 3];
+        let base = SolverConfig::default();
+        let pts = pcfg.points(&base);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].rho_c, base.rho_c);
+        assert_eq!(pts[0].rho_b, base.rho_b);
+    }
+
+    #[test]
+    fn trace_csv_shape_and_totals() {
+        let mut t = PathTrace::default();
+        t.points.push(PathPointRecord {
+            kappa: 8,
+            iters: 10,
+            support: vec![0, 2],
+            ..Default::default()
+        });
+        t.points.push(PathPointRecord {
+            kappa: 4,
+            iters: 3,
+            warm: true,
+            ..Default::default()
+        });
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("8,"));
+        assert!(csv.lines().nth(2).unwrap().contains(",true,"));
+        assert_eq!(t.total_iters(), 13);
+        assert_eq!(t.last().unwrap().kappa, 4);
+    }
+}

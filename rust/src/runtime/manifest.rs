@@ -7,43 +7,62 @@ use std::path::Path;
 
 use crate::util::json::Json;
 
+/// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element type name (e.g. "float32").
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One compiled artifact: its HLO file and I/O contract.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// HLO text file name inside the artifact directory.
     pub file: String,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// The whole `manifest.json`: shared shape constants + artifact table.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Hash of the compile settings that produced the artifacts.
     pub fingerprint: String,
+    /// Row-tile height the artifacts were compiled for.
     pub tile_m: usize,
+    /// Feature-block width (columns) baked into the artifacts.
     pub block_n: usize,
+    /// Pallas tile rows within a block program.
     pub bm: usize,
+    /// CG iterations baked into the block-solve artifact.
     pub cg_iters: usize,
+    /// Newton iterations baked into the omega artifacts.
     pub newton_iters: usize,
+    /// Class count the softmax artifacts were compiled for.
     pub classes: usize,
     /// Algorithm-2 sweeps baked into each `node_sweep_*` artifact.
     pub inner_sweeps: usize,
     /// Lowering mode of the tile programs ("xla" or "pallas").
     pub mode: String,
+    /// Length of the shared scalar-parameter vector.
     pub param_size: usize,
+    /// Artifact table keyed by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Read + parse `manifest.json`.
     pub fn load(path: &Path) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(path).map_err(|e| {
             anyhow::anyhow!(
@@ -54,6 +73,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> anyhow::Result<Manifest> {
         let v = Json::parse(text)?;
         let usize_of = |key: &str| -> anyhow::Result<usize> {

@@ -9,7 +9,9 @@
 //! resident on GPU j — while per-iteration vectors go through the
 //! transfer-ledger-accounted staging path.
 
+/// The `manifest.json` contract with the AOT compiler.
 pub mod manifest;
+/// The shared scalar-parameter device buffer.
 pub mod params;
 
 pub use manifest::{ArtifactSpec, Manifest};
@@ -40,7 +42,9 @@ pub struct XlaRuntime {
 
 /// A persistent device-resident tensor.
 pub struct DeviceTensor {
+    /// The device-resident PJRT buffer.
     pub buffer: xla::PjRtBuffer,
+    /// Element count (f32).
     pub elems: usize,
 }
 
@@ -58,6 +62,7 @@ impl XlaRuntime {
         })
     }
 
+    /// The manifest the artifacts were compiled against.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

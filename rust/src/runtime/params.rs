@@ -4,9 +4,13 @@
 use super::{DeviceTensor, XlaRuntime};
 use crate::backend::BlockParams;
 
+/// Slot of the block count M.
 pub const P_MBLOCKS: usize = 0;
+/// Slot of the inner penalty rho_l.
 pub const P_RHO_L: usize = 1;
+/// Slot of the consensus penalty rho_c.
 pub const P_RHO_C: usize = 2;
+/// Slot of the block curvature reg.
 pub const P_REG: usize = 3;
 
 /// Device-resident parameter vector, re-staged only when values change.
@@ -17,6 +21,7 @@ pub struct ParamsBuffer {
 }
 
 impl ParamsBuffer {
+    /// Empty buffer of `size` scalar slots.
     pub fn new(size: usize) -> ParamsBuffer {
         ParamsBuffer {
             tensor: None,

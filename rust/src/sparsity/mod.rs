@@ -17,6 +17,7 @@
 //! and the solution-polish step.
 
 pub mod projections;
+/// Hard-thresholding and support utilities.
 pub mod support;
 
 pub use projections::{

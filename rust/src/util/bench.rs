@@ -6,21 +6,30 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing statistics of one benchmarked closure.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Label for reports.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: usize,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds per iteration.
     pub median_ns: f64,
+    /// 10th-percentile nanoseconds.
     pub p10_ns: f64,
+    /// 90th-percentile nanoseconds.
     pub p90_ns: f64,
 }
 
 impl BenchStats {
+    /// Mean in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
 
+    /// Uniform one-line report.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
@@ -34,6 +43,7 @@ impl BenchStats {
     }
 }
 
+/// Human-scale formatting of a nanosecond figure.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

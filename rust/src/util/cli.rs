@@ -6,8 +6,10 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand + `--key value` options + flags.
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// First positional token, when present.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -15,6 +17,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse an explicit token stream (tests, embedding).
     pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
         let mut it = args.into_iter().peekable();
         let mut subcommand = None;
@@ -50,20 +53,24 @@ impl Args {
         })
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn parse_env() -> anyhow::Result<Args> {
         Args::parse_from(std::env::args().skip(1))
     }
 
+    /// Whether a bare `--name` flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.consumed.borrow_mut().push(name.to_string());
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of `--name value`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.consumed.borrow_mut().push(name.to_string());
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Parse `--name value` into `T`, or return `default` when absent.
     pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
         match self.opt(name) {
             None => Ok(default),
@@ -73,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Like [`Args::opt`] but an error when missing.
     pub fn require(&self, name: &str) -> anyhow::Result<&str> {
         self.opt(name)
             .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))

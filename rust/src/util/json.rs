@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64; ints round-trip exactly up to 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Where and why parsing failed.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable reason.
     pub msg: String,
 }
 
@@ -35,6 +45,7 @@ impl std::error::Error for ParseError {}
 impl Json {
     // ------------------------------------------------------------ accessors
 
+    /// Object member lookup (None on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +59,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key `{key}`"))
     }
 
+    /// The number, if this is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
@@ -62,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -69,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -76,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The array elements, if this is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -83,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The object map, if this is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -92,16 +109,19 @@ impl Json {
 
     // ------------------------------------------------------------ builders
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // ------------------------------------------------------------ parsing
 
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let mut p = Parser {
             bytes: text.as_bytes(),

@@ -8,10 +8,15 @@
 //! property-testing kit, exercised heavily by `rust/tests/proptests.rs`.
 
 pub mod bench;
+/// Tiny CLI argument parser (clap stand-in).
 pub mod cli;
+/// Minimal JSON parser + writer (serde stand-in).
 pub mod json;
+/// Scoped worker pool for the block sweep.
 pub mod pool;
+/// Seeded PRNG (rand stand-in).
 pub mod rng;
+/// Property-testing kit (proptest stand-in).
 pub mod testkit;
 
 /// Wall-clock stopwatch used by the metrics ledger and the bench kit.
@@ -19,12 +24,15 @@ pub mod testkit;
 pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(std::time::Instant::now())
     }
+    /// Seconds since `start`.
     pub fn elapsed_secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
+    /// Milliseconds since `start`.
     pub fn elapsed_ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }

@@ -18,6 +18,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Thread-count policy + scoped job runner for block sweeps.
 pub struct WorkerPool {
     threads: usize,
     /// Batches dispatched (introspection / tests).
@@ -41,10 +42,12 @@ impl WorkerPool {
         }
     }
 
+    /// Resolved worker count.
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Batches dispatched so far.
     pub fn runs(&self) -> usize {
         self.runs.load(Ordering::Relaxed)
     }

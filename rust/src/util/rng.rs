@@ -23,6 +23,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the 256-bit state via SplitMix64.
     pub fn seed_from(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -39,6 +40,7 @@ impl Rng {
         Rng::seed_from(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -101,6 +103,7 @@ impl Rng {
         }
     }
 
+    /// Standard normal, narrowed to f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }

@@ -10,7 +10,9 @@ use super::rng::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct PropConfig {
+    /// Random cases to run.
     pub cases: usize,
+    /// Root seed (each case derives its own).
     pub seed: u64,
     /// Maximum size hint passed to the generator (e.g. vector length).
     pub max_size: usize,
@@ -70,6 +72,7 @@ pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
     Ok(())
 }
 
+/// Assert two f32 slices are element-wise close (relative tolerance).
 pub fn assert_close_f32(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
     if a.len() != b.len() {
         return Err(format!("length mismatch {} vs {}", a.len(), b.len()));

@@ -1,0 +1,293 @@
+//! Integration tests of the sparsity-path subsystem: warm-vs-cold
+//! parity, checkpoint kill/resume, factorization-reuse accounting, and
+//! the warm-state plumbing on every transport.
+
+use psfit::admm::SolveOptions;
+use psfit::backend::native::{NativeBackend, SolveMode};
+use psfit::backend::BlockParams;
+use psfit::config::Config;
+use psfit::coordinator::AsyncCluster;
+use psfit::data::{FeaturePlan, SyntheticSpec};
+use psfit::losses::Squared;
+use psfit::network::{Cluster, NodeWorker, SequentialCluster, ThreadedCluster};
+use psfit::path::run_path;
+use psfit::sparsity::support_f1;
+use psfit::util::testkit::{run_prop, PropConfig};
+
+fn opts() -> SolveOptions {
+    SolveOptions::default()
+}
+
+fn planted(n: usize, nodes: usize, seed: u64) -> (SyntheticSpec, Config) {
+    let mut spec = SyntheticSpec::regression(n, 10 * n, nodes);
+    spec.sparsity_level = 0.85;
+    spec.noise_std = 0.01;
+    spec.seed = seed;
+    let mut cfg = Config::default();
+    cfg.platform.nodes = nodes;
+    cfg.solver.max_iters = 400;
+    (spec, cfg)
+}
+
+/// Warm-started solve at kappa must reach the same support and objective
+/// (within tolerance) as a cold solve at the same kappa — the path is a
+/// faster route to the same models, not different models.
+#[test]
+fn warm_path_matches_cold_solve_prop() {
+    run_prop(
+        "warm_path_parity",
+        PropConfig {
+            cases: 5,
+            seed: 0xA7,
+            max_size: 12,
+        },
+        |rng, size| {
+            let n = 18 + size;
+            let (mut spec, mut cfg) = planted(n, 2, 0);
+            spec.seed = rng.next_u64();
+            let ds = spec.generate();
+            let k2 = spec.kappa();
+            let k1 = (2 * k2).min(n - 1);
+
+            cfg.path.budgets = vec![k1, k2];
+            let warm = run_path(&ds, &cfg, &opts(), false).map_err(|e| e.to_string())?;
+            let mut cfg_cold = cfg.clone();
+            cfg_cold.path.budgets = vec![k2];
+            let cold = run_path(&ds, &cfg_cold, &opts(), false).map_err(|e| e.to_string())?;
+
+            let pw = warm.trace.last().unwrap();
+            let pc = cold.trace.last().unwrap();
+            assert_eq!(pw.kappa, k2);
+            if !pw.warm {
+                return Err("second path point was not warm-started".into());
+            }
+            let f1 = support_f1(&pw.support, &pc.support);
+            if f1 < 0.9 {
+                return Err(format!("supports diverged: f1 {f1} (n {n}, k {k2})"));
+            }
+            let scale = 1.0f64.max(pc.objective.abs());
+            if (pw.objective - pc.objective).abs() > 2e-2 * scale {
+                return Err(format!(
+                    "objectives diverged: warm {} vs cold {}",
+                    pw.objective, pc.objective
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Kill the sweep after point 1 (via the limit hook), resume from the
+/// checkpoint, and require the remaining trace to be bit-identical to an
+/// uninterrupted run: same iteration counts, supports, and objective
+/// *bits* (wall-clock and rebuild counters are exempt — a resumed process
+/// re-factors what the killed one held in memory).
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    let (spec, mut cfg) = planted(30, 2, 7);
+    let ds = spec.generate();
+    let k = spec.kappa();
+    cfg.path.budgets = vec![(3 * k).min(29), (2 * k).min(28), k];
+
+    // uninterrupted reference (no checkpoint file involved)
+    let full = run_path(&ds, &cfg, &opts(), false).unwrap();
+    assert_eq!(full.trace.points.len(), 3);
+
+    // killed sweep: stop after the first completed point
+    let ck = std::env::temp_dir().join("psfit_path_resume.psc");
+    let _ = std::fs::remove_file(&ck);
+    cfg.path.checkpoint = Some(ck.to_string_lossy().into_owned());
+    let mut cfg_kill = cfg.clone();
+    cfg_kill.path.limit = Some(1);
+    let part = run_path(&ds, &cfg_kill, &opts(), false).unwrap();
+    assert_eq!(part.trace.points.len(), 1);
+    assert!(ck.exists(), "checkpoint must be written after each point");
+
+    // resume: skips point 1, replays points 2..3 from the saved state
+    let resumed = run_path(&ds, &cfg, &opts(), false).unwrap();
+    assert_eq!(resumed.resumed_points, 1);
+    assert_eq!(resumed.trace.points.len(), 3);
+    for (a, b) in full.trace.points.iter().zip(&resumed.trace.points) {
+        assert_eq!(a.kappa, b.kappa);
+        assert_eq!(a.rho_c, b.rho_c);
+        assert_eq!(a.warm, b.warm);
+        assert_eq!(a.iters, b.iters, "kappa {}: iteration counts differ", a.kappa);
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.support, b.support, "kappa {}: supports differ", a.kappa);
+        assert!(
+            a.objective.to_bits() == b.objective.to_bits(),
+            "kappa {}: objective bits differ ({} vs {})",
+            a.kappa,
+            a.objective,
+            b.objective
+        );
+    }
+
+    // a second resume finds everything done: no points are re-solved
+    let done = run_path(&ds, &cfg, &opts(), false).unwrap();
+    assert_eq!(done.resumed_points, 3);
+    assert!(done.final_result.is_none());
+    assert_eq!(done.trace.points.len(), 3);
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// A checkpoint written for different budgets (or any other trajectory-
+/// shaping setting) must be rejected, not silently resumed.
+#[test]
+fn checkpoint_rejects_mismatched_problem() {
+    let (spec, mut cfg) = planted(24, 2, 9);
+    let ds = spec.generate();
+    let k = spec.kappa();
+    let ck = std::env::temp_dir().join("psfit_path_mismatch.psc");
+    let _ = std::fs::remove_file(&ck);
+    cfg.path.budgets = vec![2 * k, k];
+    cfg.path.checkpoint = Some(ck.to_string_lossy().into_owned());
+    cfg.path.limit = Some(1);
+    run_path(&ds, &cfg, &opts(), false).unwrap();
+
+    let mut other = cfg.clone();
+    other.path.limit = None;
+    other.path.budgets = vec![2 * k + 1, k];
+    let err = run_path(&ds, &other, &opts(), false).unwrap_err().to_string();
+    assert!(err.contains("different path run"), "{err}");
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// Reuse accounting: a warm sweep computes its Grams once and its rho
+/// revisits hit the factorization cache; a cold sweep rebuilds per point.
+#[test]
+fn warm_sweep_reuses_grams_and_factorizations() {
+    let (spec, mut cfg) = planted(24, 2, 11);
+    let ds = spec.generate();
+    let k = spec.kappa();
+    cfg.path.budgets = vec![2 * k, k];
+    // revisit rho 1.0 after 0.5: the third rung must reuse cached factors
+    cfg.path.rho_ladder = vec![1.0, 0.5, 1.0];
+
+    let warm = run_path(&ds, &cfg, &opts(), false).unwrap();
+    assert_eq!(warm.trace.points.len(), 6);
+    assert!(warm.trace.points[0].gram_builds > 0, "first point builds Grams");
+    assert!(
+        warm.trace.points[1..].iter().all(|p| p.gram_builds == 0),
+        "a warm sweep never rebuilds a Gram: {:?}",
+        warm.trace.points.iter().map(|p| p.gram_builds).collect::<Vec<_>>()
+    );
+    let reuses: u64 = warm.trace.points.iter().map(|p| p.chol_reuses).sum();
+    assert!(reuses > 0, "the rho-ladder revisit must hit the cholesky cache");
+
+    let mut cfg_cold = cfg.clone();
+    cfg_cold.path.warm_start = false;
+    let cold = run_path(&ds, &cfg_cold, &opts(), false).unwrap();
+    assert!(
+        cold.trace.points.iter().all(|p| p.gram_builds > 0),
+        "a cold sweep rebuilds Grams at every point"
+    );
+    // across a rho ladder the warm trajectory may pay a little at each
+    // rho switch, but the sweep as a whole must stay in the cold run's
+    // ballpark (the pure budget-descent win is pinned by `psfit
+    // pathbench` in CI, where no ladder is involved)
+    let warm_iters = warm.trace.total_iters();
+    let cold_iters = cold.trace.total_iters();
+    assert!(
+        warm_iters <= cold_iters + cold_iters / 4,
+        "warm sweep took far more iterations ({warm_iters}) than cold ({cold_iters})"
+    );
+}
+
+// ---------------------------------------------------------------------
+// warm-state plumbing across the transports
+// ---------------------------------------------------------------------
+
+fn make_workers(nodes: usize, seed: u64) -> (Vec<NodeWorker>, usize) {
+    let mut spec = SyntheticSpec::regression(12, 40 * nodes, nodes);
+    spec.seed = seed;
+    let ds = spec.generate();
+    let plan = FeaturePlan::new(12, 2, 512);
+    let params = BlockParams {
+        rho_l: 2.0,
+        rho_c: 1.0,
+        reg: 1.0 / (nodes as f64 * 10.0) + 1.0,
+    };
+    let workers = ds
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            let be = NativeBackend::new(shard, &plan, Box::new(Squared), SolveMode::Direct);
+            NodeWorker::new(
+                i,
+                psfit::admm::LocalProx::new(Box::new(be), plan.clone(), 1),
+                params,
+                6,
+            )
+        })
+        .collect();
+    (workers, 12)
+}
+
+/// Export from one cluster, re-seed a *fresh* cluster with it, and the
+/// fresh cluster must continue the trajectory bit-for-bit — the property
+/// the checkpoint format relies on.
+#[test]
+fn export_reseed_roundtrip_continues_bitwise() {
+    let params = BlockParams {
+        rho_l: 2.0,
+        rho_c: 1.0,
+        reg: 1.0 / (2.0 * 10.0) + 1.0,
+    };
+    let (w1, dim) = make_workers(2, 5);
+    let mut original = SequentialCluster::new(w1, dim);
+    let z = vec![0.05; dim];
+    for _ in 0..3 {
+        original.round(&z).unwrap();
+    }
+    let states = original.export_warm().unwrap();
+    assert_eq!(states.len(), 2);
+    assert_eq!(states[0].node, 0);
+
+    let (w2, _) = make_workers(2, 5);
+    let mut fresh = SequentialCluster::new(w2, dim);
+    fresh.reseed(&states, params).unwrap();
+
+    let a = original.round(&z).unwrap();
+    let b = fresh.round(&z).unwrap();
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.node, rb.node);
+        assert_eq!(ra.x, rb.x, "x must continue bit-for-bit");
+        assert_eq!(ra.u, rb.u, "u must continue bit-for-bit");
+    }
+}
+
+/// The threaded and async transports must answer export/reseed like the
+/// sequential one (same states, usable for a continued round).
+#[test]
+fn threaded_and_async_transports_support_warm_state() {
+    let params = BlockParams {
+        rho_l: 2.0,
+        rho_c: 1.0,
+        reg: 1.0 / (2.0 * 10.0) + 1.0,
+    };
+    let z = vec![0.02; 12];
+
+    let (w, dim) = make_workers(2, 6);
+    let mut seq = SequentialCluster::new(w, dim);
+    seq.round(&z).unwrap();
+    let want = seq.export_warm().unwrap();
+
+    let (w, _) = make_workers(2, 6);
+    let mut thr = ThreadedCluster::new(w, dim);
+    thr.round(&z).unwrap();
+    let got = thr.export_warm().unwrap();
+    assert_eq!(got, want, "threaded export must match sequential");
+    thr.reseed(&got, params).unwrap();
+    thr.round(&z).unwrap();
+
+    let (w, _) = make_workers(2, 6);
+    let cfg = psfit::config::CoordinatorConfig::default();
+    let mut asy = AsyncCluster::new(w, dim, &cfg);
+    asy.round(&z).unwrap();
+    let got = asy.export_warm().unwrap();
+    assert_eq!(got, want, "async export must match sequential");
+    asy.reseed(&got, params).unwrap();
+    asy.round(&z).unwrap();
+}
