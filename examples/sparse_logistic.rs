@@ -26,8 +26,7 @@ fn split_holdout(ds: &Dataset, every: usize) -> (Dataset, Dataset) {
                 let mut a = Matrix::zeros(rows.len(), full.cols);
                 let mut labels = Vec::with_capacity(rows.len() * s.width);
                 for (new_r, &r) in rows.iter().enumerate() {
-                    a.data[new_r * full.cols..(new_r + 1) * full.cols]
-                        .copy_from_slice(full.row(r));
+                    a.row_mut(new_r).copy_from_slice(full.row(r));
                     labels.extend_from_slice(&s.labels[r * s.width..(r + 1) * s.width]);
                 }
                 Shard::dense(a, labels, s.width)

@@ -37,7 +37,7 @@ fn main() {
         println!("\n== linalg ==");
         let a = {
             let mut m = Matrix::zeros(2048, 512);
-            rng.fill_normal_f32(&mut m.data);
+            m.for_each_mut(|v| *v = rng.normal_f32());
             m
         };
         let x: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();

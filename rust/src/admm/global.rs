@@ -112,23 +112,26 @@ impl GlobalState {
         sparsity::bilinear_g(&self.z, &self.s, self.t)
     }
 
-    /// Residuals (Eq. 14).  `xs` are the collected x_i^{k+1}, borrowed
+    /// Residuals (Eq. 14).  `xs` yields the collected x_i^{k+1}, borrowed
     /// from the transport's reply buffers (the solver recycles those
-    /// buffers after this call instead of consuming them).
-    pub fn residuals(&self, xs: &[&[f64]], rho_c: f64, iter: usize, wall: f64) -> IterRecord {
-        let primal: f64 = xs
-            .iter()
-            .map(|&x| ops::dist2(x, &self.z).sqrt())
-            .sum();
+    /// buffers after this call instead of consuming them).  Taking an
+    /// iterator lets the solver stream straight out of the reply list —
+    /// no per-round `Vec<&[f64]>` marshalling allocation.
+    pub fn residuals<'a, I>(&self, xs: I, rho_c: f64, iter: usize, wall: f64) -> IterRecord
+    where
+        I: ExactSizeIterator<Item = &'a [f64]>,
+    {
+        let participants = xs.len();
+        let primal: f64 = xs.map(|x| ops::dist2(x, &self.z).sqrt()).sum();
         let dual =
-            (xs.len() as f64).sqrt() * rho_c * ops::dist2(&self.z, &self.z_prev).sqrt();
+            (participants as f64).sqrt() * rho_c * ops::dist2(&self.z, &self.z_prev).sqrt();
         IterRecord {
             iter,
             primal,
             dual,
             bilinear: self.bilinear_residual_signed().abs(),
             wall,
-            participants: xs.len(),
+            participants,
             max_lag: 0,
         }
     }
@@ -216,7 +219,7 @@ mod tests {
         let mut g = GlobalState::new(2);
         g.z = vec![1.0, 0.0];
         let xs: Vec<&[f64]> = vec![&[1.0, 0.0], &[0.0, 0.0]];
-        let rec = g.residuals(&xs, 2.0, 7, 0.5);
+        let rec = g.residuals(xs.iter().copied(), 2.0, 7, 0.5);
         assert_eq!(rec.iter, 7);
         assert!((rec.primal - 1.0).abs() < 1e-12); // ||x_2 - z|| = 1
         // dual: z_prev = 0 -> sqrt(2) * 2 * 1 = 2 sqrt 2

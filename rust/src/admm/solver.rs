@@ -45,6 +45,59 @@ impl SolverState {
     }
 }
 
+/// Reusable allocation pool for the solver's per-round and per-call
+/// temporaries (the consensus average, the extraction/polish buffers, and
+/// the objective's prediction marshalling).
+///
+/// One solve allocates each buffer once; reusing the scratch across
+/// solves — the path subsystem holds one for its whole budget sweep —
+/// turns every later solve's temporary into a `resize` on warm capacity.
+/// The bytes this avoids are recorded and surfaced through
+/// [`crate::metrics::TransferLedger::net_alloc_saved_bytes`], alongside
+/// the transport-layer reuse counters.
+#[derive(Debug, Default)]
+pub struct SolveScratch {
+    /// Consensus average c = mean_i(x_i + u_i), length dim.
+    c: Vec<f64>,
+    /// Support-slot map of the polish step (length dim, usize::MAX = off
+    /// support).
+    slot: Vec<usize>,
+    /// Polish right-hand side / iterate (length |support|).
+    rhs: Vec<f64>,
+    /// Polish CG iterate (length |support|).
+    w: Vec<f64>,
+    /// Objective: one class column of x in f32 (length n).
+    obj_xc: Vec<f32>,
+    /// Objective: one shard's prediction column (length m_i).
+    obj_col: Vec<f32>,
+    /// Objective: one shard's row-major prediction block (m_i * width).
+    obj_pred: Vec<f32>,
+    /// Allocation bytes avoided by reuse since construction (drained into
+    /// the solve ledger by `solve_from_with`).
+    saved_bytes: u64,
+}
+
+impl SolveScratch {
+    /// Resize `buf` to `len` zeros, crediting an avoided allocation when
+    /// the capacity was already there.
+    fn reuse_f64(buf: &mut Vec<f64>, len: usize, saved: &mut u64) {
+        if buf.capacity() >= len && len > 0 {
+            *saved += (len * std::mem::size_of::<f64>()) as u64;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+
+    /// f32 twin of [`SolveScratch::reuse_f64`].
+    fn reuse_f32(buf: &mut Vec<f32>, len: usize, saved: &mut u64) {
+        if buf.capacity() >= len && len > 0 {
+            *saved += (len * std::mem::size_of::<f32>()) as u64;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+}
+
 /// Options orthogonal to the math: transport and reporting.
 #[derive(Debug, Clone)]
 pub struct SolveOptions {
@@ -117,13 +170,29 @@ pub fn solve_from(
     dataset: Option<&Dataset>,
     opts: &SolveOptions,
 ) -> anyhow::Result<SolveResult> {
+    let mut scratch = SolveScratch::default();
+    solve_from_with(cluster, global, cfg, dataset, opts, &mut scratch)
+}
+
+/// [`solve_from`] with a caller-owned [`SolveScratch`], so consecutive
+/// solves (the path subsystem's budget sweep) reuse every temporary
+/// instead of re-allocating it per point.
+pub fn solve_from_with(
+    cluster: &mut dyn Cluster,
+    global: &mut GlobalState,
+    cfg: &Config,
+    dataset: Option<&Dataset>,
+    opts: &SolveOptions,
+    scratch: &mut SolveScratch,
+) -> anyhow::Result<SolveResult> {
     cfg.solver.validate()?;
     let sc = &cfg.solver;
     let watch = Stopwatch::start();
 
     let dim = global.z.len();
     let mut trace = Trace::default();
-    let mut c = vec![0.0f64; dim];
+    SolveScratch::reuse_f64(&mut scratch.c, dim, &mut scratch.saved_bytes);
+    let c = &mut scratch.c;
     let mut converged = false;
     let mut iters = 0;
 
@@ -159,16 +228,21 @@ pub fn solve_from(
         for ci in c.iter_mut() {
             *ci *= inv;
         }
-        global.zt_update(&c, participants, sc.rho_c, sc.rho_b, sc.zt_iters);
+        global.zt_update(c, participants, sc.rho_c, sc.rho_b, sc.zt_iters);
 
         // ---- residuals (14): bilinear measured against the PREVIOUS s ---
         // (g(z^{k+1}, s^k, t^{k+1}) — the quantity the rho_b penalty acts
         // on; the closed-form s-update that follows zeroes g whenever the
         // target is reachable, so measuring after it would be trivially 0)
-        let mut rec = {
-            let xs: Vec<&[f64]> = replies.iter().map(|r| r.x.as_slice()).collect();
-            global.residuals(&xs, sc.rho_c, k, watch.elapsed_secs())
-        };
+        // The replies stream straight into the residual computation — no
+        // per-round `Vec<&[f64]>` marshalling at all (streaming needs no
+        // ledger credit: there is simply nothing left to allocate).
+        let mut rec = global.residuals(
+            replies.iter().map(|r| r.x.as_slice()),
+            sc.rho_c,
+            k,
+            watch.elapsed_secs(),
+        );
         rec.max_lag = max_lag;
         // hand the reply buffers back to the transport for reuse — the
         // next round's Collect fills them in place instead of allocating
@@ -201,7 +275,7 @@ pub fn solve_from(
     let support = support_of(&x, 0.0);
     if sc.polish && cfg.loss == LossKind::Squared {
         if let Some(ds) = dataset {
-            polish_ridge(ds, &support, sc.gamma, &mut x);
+            polish_ridge_with(ds, &support, sc.gamma, &mut x, scratch);
         }
     }
 
@@ -213,7 +287,10 @@ pub fn solve_from(
 
     // ledger first: collecting it can surface deaths that the
     // coordination snapshot should include
-    let transfers = cluster.ledger();
+    let mut transfers = cluster.ledger();
+    // fold in the solver-side reuse: scratch buffers that were served
+    // from warm capacity this solve instead of freshly allocated
+    transfers.net_alloc_saved_bytes += std::mem::take(&mut scratch.saved_bytes);
     Ok(SolveResult {
         z: global.z.clone(),
         coordination: cluster.coordination(),
@@ -233,6 +310,18 @@ pub fn solve_from(
 /// solved by CG on the normal equations with per-shard matvecs (never
 /// materializes the stacked data).
 pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) {
+    polish_ridge_with(ds, support, gamma, x, &mut SolveScratch::default())
+}
+
+/// [`polish_ridge`] with caller-owned scratch (the slot map, right-hand
+/// side, and CG iterate reuse the solve's allocation pool).
+pub fn polish_ridge_with(
+    ds: &Dataset,
+    support: &[usize],
+    gamma: f64,
+    x: &mut [f64],
+    scratch: &mut SolveScratch,
+) {
     let s = support.len();
     if s == 0 {
         return;
@@ -242,14 +331,20 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
 
     // column -> support-slot map so CSR rows join the support by index
     // probe instead of scanning it per entry
-    let mut slot = vec![usize::MAX; x.len()];
+    if scratch.slot.capacity() >= x.len() && !x.is_empty() {
+        scratch.saved_bytes += (x.len() * std::mem::size_of::<usize>()) as u64;
+    }
+    scratch.slot.clear();
+    scratch.slot.resize(x.len(), usize::MAX);
+    let slot = &mut scratch.slot;
     for (si, &col) in support.iter().enumerate() {
         slot[col] = si;
     }
 
     // rhs = 2 A_S^T b ; operator v -> 2 A_S^T A_S v + reg v, both
     // dispatched on shard storage (dense rows vs stored entries)
-    let mut rhs = vec![0.0f64; s];
+    SolveScratch::reuse_f64(&mut scratch.rhs, s, &mut scratch.saved_bytes);
+    let rhs = &mut scratch.rhs;
     for shard in &ds.shards {
         match &shard.data {
             ShardData::Dense(a) => {
@@ -275,7 +370,12 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
             }
         }
     }
-    let mut w: Vec<f64> = support.iter().map(|&i| x[i]).collect();
+    SolveScratch::reuse_f64(&mut scratch.w, s, &mut scratch.saved_bytes);
+    let w = &mut scratch.w;
+    for (wi, &i) in w.iter_mut().zip(support) {
+        *wi = x[i];
+    }
+    let slot = &scratch.slot;
     let apply = |v: &[f64], out: &mut [f64]| {
         out.iter_mut().for_each(|o| *o = 0.0);
         for shard in &ds.shards {
@@ -319,7 +419,7 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
             *o += reg * vv;
         }
     };
-    crate::linalg::conjugate_gradient(apply, &rhs, &mut w, 2 * s.min(200), 1e-10);
+    crate::linalg::conjugate_gradient(apply, rhs, w, 2 * s.min(200), 1e-10);
     for (si, &i) in support.iter().enumerate() {
         x[i] = w[si];
     }
@@ -328,23 +428,39 @@ pub fn polish_ridge(ds: &Dataset, support: &[usize], gamma: f64, x: &mut [f64]) 
 /// Full regularized objective (Eq. 1) of a candidate solution — used by the
 /// experiment harnesses to compare methods.
 pub fn objective(ds: &Dataset, loss: &dyn crate::losses::Loss, gamma: f64, x: &[f64]) -> f64 {
+    objective_with(ds, loss, gamma, x, &mut SolveScratch::default())
+}
+
+/// [`objective`] with caller-owned scratch: the per-class coefficient
+/// cast, the per-shard prediction column, and the row-major prediction
+/// block all come from the solve's allocation pool, so repeated
+/// evaluations (harness sweeps, the solver benchmark) allocate nothing
+/// after the first call.
+pub fn objective_with(
+    ds: &Dataset,
+    loss: &dyn crate::losses::Loss,
+    gamma: f64,
+    x: &[f64],
+    scratch: &mut SolveScratch,
+) -> f64 {
     let width = loss.width();
     let n = ds.n_features;
     let mut total = 0.0;
-    // reusable scratch hoisted out of the shard/class loops (the old code
-    // allocated a fresh prediction column per class per shard)
-    let mut xc = vec![0.0f32; n];
-    let mut col: Vec<f32> = Vec::new();
-    let mut pred: Vec<f32> = Vec::new();
+    SolveScratch::reuse_f32(&mut scratch.obj_xc, n, &mut scratch.saved_bytes);
+    let xc = &mut scratch.obj_xc;
+    let col = &mut scratch.obj_col;
+    let pred = &mut scratch.obj_pred;
     for shard in &ds.shards {
         let m = shard.rows();
+        pred.clear();
         pred.resize(m * width, 0.0);
+        col.clear();
         col.resize(m, 0.0);
         for c in 0..width {
             for (i, xi) in xc.iter_mut().enumerate() {
                 *xi = x[c * n + i] as f32;
             }
-            shard.data.matvec(&xc, &mut col);
+            shard.data.matvec(xc, col);
             for r in 0..m {
                 pred[r * width + c] = col[r];
             }
@@ -459,6 +575,48 @@ mod tests {
         assert_eq!(res.iters, 5);
         let per_round_down = 2 * 10 * 8; // nodes * dim * 8
         assert_eq!(res.transfers.net_down_bytes, (5 * per_round_down) as u64);
+    }
+
+    /// The scratch pool must (a) leave results identical to fresh
+    /// allocation and (b) credit reused bytes to the solve ledger.
+    #[test]
+    fn solve_scratch_reuse_is_ledgered_and_bit_identical() {
+        let spec = SyntheticSpec::regression(12, 80, 2);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 3;
+        cfg.solver.max_iters = 6;
+        cfg.solver.tol_primal = 0.0; // fixed rounds
+
+        let run = |scratch: &mut SolveScratch| {
+            let mut cluster = build_cluster(&ds, &cfg, 2);
+            let mut global = GlobalState::new(12);
+            solve_from_with(
+                &mut cluster,
+                &mut global,
+                &cfg,
+                Some(&ds),
+                &SolveOptions::default(),
+                scratch,
+            )
+            .unwrap()
+        };
+        let mut fresh = SolveScratch::default();
+        let first = run(&mut fresh);
+        // a warm scratch reuses the consensus/polish buffers
+        let second = run(&mut fresh);
+        assert!(
+            second.transfers.net_alloc_saved_bytes
+                >= first.transfers.net_alloc_saved_bytes + (12 * 8) as u64,
+            "warm scratch reuse not credited: {} vs {}",
+            second.transfers.net_alloc_saved_bytes,
+            first.transfers.net_alloc_saved_bytes
+        );
+        // and the math is untouched by the pooling
+        assert_eq!(first.z, second.z);
+        assert_eq!(first.x, second.x);
+        assert_eq!(first.support, second.support);
     }
 
     #[test]

@@ -10,7 +10,12 @@
 //! block step is then one `A_j^T corr` kernel call over the shared shard
 //! plus a coefficient-space solve; the data-touching kernels dispatch on
 //! the storage kind per block, so sparse shards do O(nnz) work where the
-//! dense path does O(m n).  Two solver modes:
+//! dense path does O(m n).  Every kernel call additionally routes through
+//! the runtime ISA dispatch table (`linalg::simd`): on an AVX2 or NEON
+//! host the block sweep runs the explicit-SIMD variants over the shard's
+//! 64-byte-aligned padded-stride storage, with the tiled-scalar kernels
+//! as the guaranteed fallback (`platform.isa` / `PSFIT_ISA` pin a
+//! variant).  Two solver modes:
 //!
 //!   * `Cg { iters }` — identical iteration structure to the XLA artifact
 //!     (used by the parity tests and the honest CPU-vs-GPU comparison);

@@ -3,6 +3,7 @@
 
 use crate::coordinator::fault::FaultSpec;
 use crate::data::SparseMode;
+use crate::linalg::simd::IsaChoice;
 use crate::losses::LossKind;
 use crate::path::PathConfig;
 use crate::util::json::Json;
@@ -223,6 +224,13 @@ pub struct PlatformConfig {
     pub sparse_threshold: f64,
     /// Which compute backend the nodes run.
     pub backend: BackendKind,
+    /// Kernel instruction-set variant for the native backend:
+    /// `auto` (default; widest the host supports), `scalar` (tiled
+    /// fallback, bit-identical to the historical kernels), `avx2`, or
+    /// `neon`.  Applied process-wide at CLI startup via
+    /// `linalg::simd::select`; also overridable with `PSFIT_ISA` for
+    /// testing.  Forcing a variant the host lacks is a startup error.
+    pub isa: IsaChoice,
     /// Optional synthetic PCIe model for the transfer ledger: seconds =
     /// bytes / (gbps * 1e9 / 8) + latency.  `None` records measured copy
     /// time only.
@@ -261,6 +269,7 @@ impl Default for PlatformConfig {
             sparse: SparseMode::Auto,
             sparse_threshold: 0.25,
             backend: BackendKind::Native,
+            isa: IsaChoice::Auto,
             pcie_gbps: None,
             pcie_latency_us: 10.0,
             share_runtime: true,
@@ -386,6 +395,12 @@ impl Config {
                                 cfg.platform.backend = BackendKind::parse(
                                     v.as_str()
                                         .ok_or_else(|| anyhow::anyhow!("platform.backend: str"))?,
+                                )?
+                            }
+                            "isa" => {
+                                cfg.platform.isa = IsaChoice::parse(
+                                    v.as_str()
+                                        .ok_or_else(|| anyhow::anyhow!("platform.isa: str"))?,
                                 )?
                             }
                             "pcie_gbps" => cfg.platform.pcie_gbps = v.as_f64(),
@@ -596,7 +611,8 @@ mod tests {
         let src = r#"{
             "solver": {"rho_c": 2.0, "kappa": 10, "polish": false},
             "platform": {"nodes": 8, "backend": "xla", "threads": 4,
-                         "sparse": "always", "sparse_threshold": 0.1},
+                         "sparse": "always", "sparse_threshold": 0.1,
+                         "isa": "scalar"},
             "loss": "logistic"
         }"#;
         let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
@@ -608,11 +624,16 @@ mod tests {
         assert_eq!(cfg.platform.threads, 4);
         assert_eq!(cfg.platform.sparse, SparseMode::Always);
         assert_eq!(cfg.platform.sparse_threshold, 0.1);
+        assert_eq!(
+            cfg.platform.isa,
+            IsaChoice::Force(crate::linalg::simd::Isa::Scalar)
+        );
         assert_eq!(cfg.loss, LossKind::Logistic);
-        // defaults stay serial / density-adaptive
+        // defaults stay serial / density-adaptive / auto-ISA
         assert_eq!(Config::default().platform.threads, 1);
         assert_eq!(Config::default().platform.sparse, SparseMode::Auto);
         assert_eq!(Config::default().platform.sparse_threshold, 0.25);
+        assert_eq!(Config::default().platform.isa, IsaChoice::Auto);
     }
 
     #[test]
@@ -631,6 +652,7 @@ mod tests {
             r#"{"platform": {"sparse": "sometimes"}}"#,
             r#"{"platform": {"sparse_threshold": 1.5}}"#,
             r#"{"platform": {"sparse_threshold": -0.1}}"#,
+            r#"{"platform": {"isa": "sse9"}}"#,
         ] {
             assert!(
                 Config::from_json(&Json::parse(bad).unwrap()).is_err(),

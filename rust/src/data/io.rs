@@ -67,7 +67,10 @@ pub fn save(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
     for shard in &ds.shards {
         let a = shard.data.to_dense();
         write_u32(&mut w, a.rows as u32)?;
-        write_f32s(&mut w, &a.data)?;
+        // logical rows only: alignment padding is never serialized
+        for r in 0..a.rows {
+            write_f32s(&mut w, a.row(r))?;
+        }
         write_f32s(&mut w, &shard.labels)?;
     }
     w.flush()?;
@@ -99,11 +102,7 @@ pub fn load(path: &Path) -> anyhow::Result<Dataset> {
         let data = read_f32s(&mut r, rows * n)?;
         let labels = read_f32s(&mut r, rows * width)?;
         shards.push(Shard {
-            data: ShardData::Dense(std::sync::Arc::new(Matrix {
-                rows,
-                cols: n,
-                data,
-            })),
+            data: ShardData::Dense(std::sync::Arc::new(Matrix::from_flat(rows, n, &data))),
             labels,
             width,
         });
@@ -296,7 +295,7 @@ mod tests {
         assert_eq!(back.x_true, ds.x_true);
         assert_eq!(back.support_true, ds.support_true);
         for (a, b) in back.shards.iter().zip(&ds.shards) {
-            assert_eq!(a.data.to_dense().data, b.data.to_dense().data);
+            assert_eq!(*a.data.to_dense(), *b.data.to_dense());
             assert_eq!(a.labels, b.labels);
         }
     }
@@ -358,7 +357,7 @@ mod tests {
         let (a0, l0) = ds.stacked();
         let (a1, l1) = back.stacked();
         assert_eq!(l0, l1);
-        for (x, y) in a0.data.iter().zip(&a1.data) {
+        for (x, y) in a0.to_vec().iter().zip(&a1.to_vec()) {
             // values survive the decimal text round-trip to f32 accuracy
             assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0), "{x} vs {y}");
         }
@@ -381,7 +380,7 @@ mod tests {
         assert!(split.shards.iter().all(|s| s.data.is_csr()));
         let (a0, l0) = ds.stacked();
         let (a1, l1) = split.stacked();
-        assert_eq!(a0.data, a1.data);
+        assert_eq!(a0, a1);
         assert_eq!(l0, l1);
 
         // dense datasets resplit densely
@@ -389,7 +388,7 @@ mod tests {
         let split = dense.resplit(3);
         assert_eq!(split.nodes(), 3);
         assert!(split.shards.iter().all(|s| !s.data.is_csr()));
-        assert_eq!(dense.stacked().0.data, split.stacked().0.data);
+        assert_eq!(dense.stacked().0, split.stacked().0);
     }
 
     #[test]

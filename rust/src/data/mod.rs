@@ -113,7 +113,7 @@ impl Dataset {
                 for (out_r, g) in (g0..g1).enumerate() {
                     let (si, r) = locate(g);
                     let src = dense_src[si].as_ref().unwrap();
-                    a.data[out_r * n..(out_r + 1) * n].copy_from_slice(src.row(r));
+                    a.row_mut(out_r).copy_from_slice(src.row(r));
                     labels.extend_from_slice(
                         &self.shards[si].labels[r * self.width..(r + 1) * self.width],
                     );
@@ -144,13 +144,14 @@ impl Dataset {
         for shard in &self.shards {
             match &shard.data {
                 ShardData::Dense(d) => {
-                    let bytes = d.rows * n;
-                    a.data[row * n..row * n + bytes].copy_from_slice(&d.data);
+                    for r in 0..d.rows {
+                        a.row_mut(row + r).copy_from_slice(d.row(r));
+                    }
                 }
                 ShardData::Csr(c) => {
                     for r in 0..c.rows {
                         let (cols, vals) = c.row(r);
-                        let dst = &mut a.data[(row + r) * n..(row + r + 1) * n];
+                        let dst = a.row_mut(row + r);
                         for (&cc, &v) in cols.iter().zip(vals) {
                             dst[cc as usize] = v;
                         }

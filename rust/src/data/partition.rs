@@ -77,7 +77,9 @@ impl ShardData {
     /// Nonzero count (dense storage counts on demand).
     pub fn nnz(&self) -> usize {
         match self {
-            ShardData::Dense(a) => a.data.iter().filter(|&&v| v != 0.0).count(),
+            ShardData::Dense(a) => (0..a.rows)
+                .map(|i| a.row(i).iter().filter(|&&v| v != 0.0).count())
+                .sum(),
             ShardData::Csr(c) => c.nnz(),
         }
     }
@@ -344,7 +346,7 @@ mod tests {
         let back = d
             .with_policy(SparseMode::Always, 0.0)
             .with_policy(SparseMode::Never, 0.0);
-        assert_eq!(back.to_dense().data, d.to_dense().data);
+        assert_eq!(*back.to_dense(), *d.to_dense());
         assert_eq!(back.storage_name(), "dense");
     }
 

@@ -13,7 +13,8 @@
 //! | [`fig3`] | Figure 3       | same, in per-node samples                  |
 //! | [`fig4`] | Figure 4       | transfer time grows with n; flat-ish in m  |
 //! | [`straggler`] | (new)     | async coordination hides a 1x-16x straggler|
-//! | [`kernels`] | (new)       | tiled kernels / pooled sweeps beat naive   |
+//! | [`kernels`] | (new)       | SIMD kernels / pooled sweeps beat scalar   |
+//! | [`solver`]  | (new)       | end-to-end rounds/sec + time-to-tolerance  |
 //! | [`path`]    | (new)       | warm path sweep beats cold-started sequence|
 
 /// Figure 1: residual convergence vs rho_b.
@@ -26,6 +27,8 @@ pub mod kernels;
 pub mod path;
 /// Figures 2 and 3: feature/sample scaling.
 pub mod scaling;
+/// End-to-end solver benchmark (`psfit bench --solver`).
+pub mod solver;
 /// Sync-vs-async coordination under a straggler.
 pub mod straggler;
 /// Table 1: Bi-cADMM vs MIP vs Lasso.
@@ -36,6 +39,7 @@ pub use fig4::fig4;
 pub use kernels::kernels;
 pub use path::path_bench;
 pub use scaling::{fig2, fig3};
+pub use solver::solver_bench;
 pub use straggler::straggler;
 pub use table1::table1;
 

@@ -1,0 +1,321 @@
+//! `psfit bench --solver` — the end-to-end solver benchmark: whole
+//! Bi-cADMM solves timed as ADMM rounds/sec (fixed-round runs, scalar vs
+//! SIMD) plus time-to-tolerance runs that also *verify* the cross-ISA
+//! contract (identical final supports, objectives within 1e-5).
+//!
+//! Writes `BENCH_solver.json` (repo root by convention; schema-validated
+//! by the CI smoke step), starting the repo's *end-to-end* perf
+//! trajectory — the kernel microbenchmarks say how fast a matvec is,
+//! this file says how fast the solver actually got.
+//!
+//! Two entry kinds per problem shape:
+//!
+//!   * `solver_rounds` — `max_iters` forced rounds under the scalar and
+//!     the widest-supported ISA; reports rounds/sec for both and the
+//!     speedup (the honest end-to-end win of the SIMD backend: consensus
+//!     updates, projections, and transport dilute the kernel speedup).
+//!   * `time_to_tol`  — default tolerances under both ISAs; reports wall
+//!     seconds, iterations, convergence, whether the recovered supports
+//!     match exactly, and the relative objective gap.
+//!
+//! The benchmark flips the process-wide ISA with `simd::select` between
+//! runs (single-threaded A/B timing, exactly what that knob is for) and
+//! restores the previously active ISA on exit.
+
+use crate::admm::solver as admm_solver;
+use crate::config::Config;
+use crate::data::SyntheticSpec;
+use crate::linalg::simd::{self, Isa, IsaChoice};
+use crate::losses::make_loss;
+use crate::metrics::CsvTable;
+use crate::util::json::Json;
+
+/// Options of the `psfit bench --solver` harness.
+pub struct SolverBenchOpts {
+    /// Small shapes + short runs (CI smoke).
+    pub quick: bool,
+    /// Where to write the JSON report.
+    pub json: String,
+    /// Optional CSV path (same convention as the figure harnesses).
+    pub out: Option<String>,
+}
+
+struct RoundsEntry {
+    n: usize,
+    m: usize,
+    nodes: usize,
+    density: f64,
+    rounds: usize,
+    scalar_rounds_per_sec: f64,
+    simd_rounds_per_sec: f64,
+    scalar_wall_seconds: f64,
+    simd_wall_seconds: f64,
+}
+
+struct TolEntry {
+    n: usize,
+    m: usize,
+    nodes: usize,
+    density: f64,
+    scalar_wall_seconds: f64,
+    simd_wall_seconds: f64,
+    scalar_iters: usize,
+    simd_iters: usize,
+    converged: bool,
+    support_match: bool,
+    objective_rel_diff: f64,
+}
+
+fn ratio(a: f64, b: f64) -> f64 {
+    if b > 0.0 {
+        a / b
+    } else {
+        0.0
+    }
+}
+
+fn report_json(rounds: &[RoundsEntry], tol: &[TolEntry], quick: bool, isa: Isa) -> Json {
+    let mut entries: Vec<Json> = Vec::new();
+    for e in rounds {
+        entries.push(Json::obj(vec![
+            ("name", Json::Str("solver_rounds".to_string())),
+            ("n", Json::Num(e.n as f64)),
+            ("m", Json::Num(e.m as f64)),
+            ("nodes", Json::Num(e.nodes as f64)),
+            ("density", Json::Num(e.density)),
+            ("rounds", Json::Num(e.rounds as f64)),
+            ("scalar_rounds_per_sec", Json::Num(e.scalar_rounds_per_sec)),
+            ("simd_rounds_per_sec", Json::Num(e.simd_rounds_per_sec)),
+            ("scalar_wall_seconds", Json::Num(e.scalar_wall_seconds)),
+            ("simd_wall_seconds", Json::Num(e.simd_wall_seconds)),
+            (
+                "speedup",
+                Json::Num(ratio(e.simd_rounds_per_sec, e.scalar_rounds_per_sec)),
+            ),
+        ]));
+    }
+    for e in tol {
+        entries.push(Json::obj(vec![
+            ("name", Json::Str("time_to_tol".to_string())),
+            ("n", Json::Num(e.n as f64)),
+            ("m", Json::Num(e.m as f64)),
+            ("nodes", Json::Num(e.nodes as f64)),
+            ("density", Json::Num(e.density)),
+            ("scalar_wall_seconds", Json::Num(e.scalar_wall_seconds)),
+            ("simd_wall_seconds", Json::Num(e.simd_wall_seconds)),
+            ("scalar_iters", Json::Num(e.scalar_iters as f64)),
+            ("simd_iters", Json::Num(e.simd_iters as f64)),
+            ("converged", Json::Bool(e.converged)),
+            ("support_match", Json::Bool(e.support_match)),
+            ("objective_rel_diff", Json::Num(e.objective_rel_diff)),
+            (
+                "speedup",
+                Json::Num(ratio(e.scalar_wall_seconds, e.simd_wall_seconds)),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("generated_by", Json::Str("psfit bench --solver".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("isa", Json::Str(isa.name().to_string())),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Run the end-to-end solver benchmark and write `BENCH_solver.json`.
+pub fn solver_bench(opts: &SolverBenchOpts) -> anyhow::Result<CsvTable> {
+    let prev = simd::active();
+    let result = run(opts);
+    // restore whatever was active before the A/B flipping
+    let _ = simd::select(IsaChoice::Force(prev));
+    result
+}
+
+fn run(opts: &SolverBenchOpts) -> anyhow::Result<CsvTable> {
+    // honor the pinned selection (`--isa` / `PSFIT_ISA`): the "simd" arm
+    // is whatever the process selected at startup, so pinning scalar
+    // really does time scalar against scalar (speedup ~1.0)
+    let wide = simd::active();
+    if wide == Isa::Scalar {
+        eprintln!("# scalar isa selected/available: both sides time the scalar kernels");
+    }
+
+    // (n, m, nodes, density, forced rounds) for the rounds/sec entries
+    let rounds_shapes: &[(usize, usize, usize, f64, usize)] = if opts.quick {
+        &[(96, 768, 2, 1.0, 8)]
+    } else {
+        &[
+            (512, 4096, 4, 1.0, 30),
+            (512, 4096, 4, 0.05, 30),
+            (1024, 8192, 4, 1.0, 12),
+        ]
+    };
+    // (n, m, nodes) for the time-to-tolerance entries — the first shape
+    // mirrors the solver test pinned to converge under default
+    // tolerances in 400 iterations
+    let tol_shapes: &[(usize, usize, usize)] = if opts.quick {
+        &[(30, 240, 3)]
+    } else {
+        &[(30, 240, 3), (96, 1600, 4)]
+    };
+
+    let mut rounds_entries = Vec::new();
+    for &(n, m, nodes, density, rounds) in rounds_shapes {
+        eprintln!("# solver rounds/sec: n={n} m={m} nodes={nodes} density={density}");
+        let mut spec = SyntheticSpec::regression(n, m, nodes);
+        spec.density = density;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = nodes;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = rounds;
+        cfg.solver.tol_primal = 0.0; // force every round: fixed work per ISA
+
+        let mut walls = [0.0f64; 2];
+        for (slot, isa) in [Isa::Scalar, wide].into_iter().enumerate() {
+            simd::select(IsaChoice::Force(isa))?;
+            let run = super::run_timed(&ds, &cfg, true)?;
+            anyhow::ensure!(run.result.iters == rounds, "fixed-round run terminated early");
+            walls[slot] = run.solve_seconds;
+        }
+        rounds_entries.push(RoundsEntry {
+            n,
+            m,
+            nodes,
+            density,
+            rounds,
+            scalar_rounds_per_sec: ratio(rounds as f64, walls[0]),
+            simd_rounds_per_sec: ratio(rounds as f64, walls[1]),
+            scalar_wall_seconds: walls[0],
+            simd_wall_seconds: walls[1],
+        });
+    }
+
+    let mut tol_entries = Vec::new();
+    for &(n, m, nodes) in tol_shapes {
+        eprintln!("# solver time-to-tolerance: n={n} m={m} nodes={nodes}");
+        let mut spec = SyntheticSpec::regression(n, m, nodes);
+        spec.sparsity_level = 0.9;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = nodes;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = 400;
+
+        let loss = make_loss(cfg.loss, ds.width);
+        let mut results = Vec::new();
+        for isa in [Isa::Scalar, wide] {
+            simd::select(IsaChoice::Force(isa))?;
+            let run = super::run_timed(&ds, &cfg, true)?;
+            let objective =
+                admm_solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &run.result.x);
+            results.push((run, objective));
+        }
+        let (scalar_run, scalar_obj) = &results[0];
+        let (simd_run, simd_obj) = &results[1];
+        let rel = (scalar_obj - simd_obj).abs() / scalar_obj.abs().max(1.0);
+        tol_entries.push(TolEntry {
+            n,
+            m,
+            nodes,
+            density: 1.0,
+            scalar_wall_seconds: scalar_run.solve_seconds,
+            simd_wall_seconds: simd_run.solve_seconds,
+            scalar_iters: scalar_run.result.iters,
+            simd_iters: simd_run.result.iters,
+            converged: scalar_run.result.converged && simd_run.result.converged,
+            support_match: scalar_run.result.support == simd_run.result.support,
+            objective_rel_diff: rel,
+        });
+    }
+
+    // ---- emit ------------------------------------------------------------
+    let json = report_json(&rounds_entries, &tol_entries, opts.quick, wide);
+    std::fs::write(&opts.json, format!("{json}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.json))?;
+    eprintln!("wrote {}", opts.json);
+
+    let mut table = CsvTable::new(&[
+        "entry", "n", "m", "nodes", "density", "scalar", "simd", "speedup", "note",
+    ]);
+    for e in &rounds_entries {
+        table.row(vec![
+            "solver_rounds".to_string(),
+            e.n.to_string(),
+            e.m.to_string(),
+            e.nodes.to_string(),
+            format!("{}", e.density),
+            format!("{:.1} rounds/s", e.scalar_rounds_per_sec),
+            format!("{:.1} rounds/s", e.simd_rounds_per_sec),
+            format!("{:.2}", ratio(e.simd_rounds_per_sec, e.scalar_rounds_per_sec)),
+            format!("{} rounds", e.rounds),
+        ]);
+    }
+    for e in &tol_entries {
+        table.row(vec![
+            "time_to_tol".to_string(),
+            e.n.to_string(),
+            e.m.to_string(),
+            e.nodes.to_string(),
+            format!("{}", e.density),
+            format!("{:.3} s / {} it", e.scalar_wall_seconds, e.scalar_iters),
+            format!("{:.3} s / {} it", e.simd_wall_seconds, e.simd_iters),
+            format!("{:.2}", ratio(e.scalar_wall_seconds, e.simd_wall_seconds)),
+            format!(
+                "converged={} support_match={} obj_rel={:.1e}",
+                e.converged, e.support_match, e.objective_rel_diff
+            ),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let rounds = vec![RoundsEntry {
+            n: 96,
+            m: 768,
+            nodes: 2,
+            density: 1.0,
+            rounds: 8,
+            scalar_rounds_per_sec: 100.0,
+            simd_rounds_per_sec: 250.0,
+            scalar_wall_seconds: 0.08,
+            simd_wall_seconds: 0.032,
+        }];
+        let tol = vec![TolEntry {
+            n: 40,
+            m: 400,
+            nodes: 2,
+            density: 1.0,
+            scalar_wall_seconds: 0.5,
+            simd_wall_seconds: 0.25,
+            scalar_iters: 120,
+            simd_iters: 121,
+            converged: true,
+            support_match: true,
+            objective_rel_diff: 3e-7,
+        }];
+        let parsed = Json::parse(&report_json(&rounds, &tol, true, Isa::Avx2).to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("isa").unwrap().as_str(), Some("avx2"));
+        let arr = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("solver_rounds"));
+        assert_eq!(arr[0].get("speedup").unwrap().as_f64(), Some(2.5));
+        assert_eq!(arr[1].get("name").unwrap().as_str(), Some("time_to_tol"));
+        assert_eq!(arr[1].get("support_match").unwrap().as_bool(), Some(true));
+        assert_eq!(arr[1].get("speedup").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn ratio_handles_zero_denominator() {
+        assert_eq!(ratio(1.0, 0.0), 0.0);
+        assert_eq!(ratio(6.0, 3.0), 2.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! 64-byte-aligned `f32` storage for the SIMD kernel backend.
+//!
+//! [`AlignedVec`] is a fixed-length `f32` buffer whose first element sits
+//! on a 64-byte boundary (one full AVX-512 lane, two AVX2 lanes, four NEON
+//! lanes, and exactly one x86 cache line).  Combined with the padded row
+//! stride of [`super::Matrix`] — every row rounded up to [`LANE_F32`]
+//! elements — each *row start* of a dense matrix is 64-byte aligned, so
+//! vector loads in the hot kernels never straddle a cache line at the row
+//! head.
+//!
+//! The buffer is built from `#[repr(align(64))]` chunks of a plain `Vec`,
+//! so the only `unsafe` here is the two `from_raw_parts` casts exposing the
+//! chunk storage as a contiguous `&[f32]` — length and provenance both come
+//! straight from the owning `Vec`.  Padding elements (between the logical
+//! length and the chunk capacity) are always zero-initialized and are
+//! *storage only*: they are never serialized, compared, or handed to
+//! callers (`as_slice` stops at the logical length).
+
+/// f32 elements per 64-byte alignment unit.
+pub const LANE_F32: usize = 16;
+
+/// One 64-byte alignment unit.
+#[repr(align(64))]
+#[derive(Clone, Copy, Debug)]
+struct Lane([f32; LANE_F32]);
+
+/// Fixed-length, 64-byte-aligned `f32` buffer (see the module docs).
+#[derive(Clone, Debug)]
+pub struct AlignedVec {
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl AlignedVec {
+    /// Zero-filled buffer of `len` elements (padding included).
+    pub fn zeroed(len: usize) -> AlignedVec {
+        AlignedVec {
+            lanes: vec![Lane([0.0; LANE_F32]); len.div_ceil(LANE_F32)],
+            len,
+        }
+    }
+
+    /// Copy of `src` in aligned storage.
+    pub fn from_slice(src: &[f32]) -> AlignedVec {
+        let mut v = AlignedVec::zeroed(src.len());
+        v.as_mut_slice().copy_from_slice(src);
+        v
+    }
+
+    /// Logical element count (excludes alignment padding).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no logical elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The logical elements as a slice (padding excluded).
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // Safety: `lanes` owns `len.div_ceil(LANE_F32) * LANE_F32 >= len`
+        // contiguous f32s; `Lane` is a plain f32 array with no interior
+        // padding, so the cast preserves layout and provenance.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr() as *const f32, self.len) }
+    }
+
+    /// The logical elements as a mutable slice (padding excluded).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // Safety: as in `as_slice`, with unique access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+impl std::ops::Deref for AlignedVec {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for AlignedVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl PartialEq for AlignedVec {
+    fn eq(&self, other: &AlignedVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_is_64_byte_aligned() {
+        for len in [0usize, 1, 15, 16, 17, 1000] {
+            let v = AlignedVec::zeroed(len);
+            assert_eq!(v.as_slice().as_ptr() as usize % 64, 0, "len {len}");
+            assert_eq!(v.len(), len);
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip_excludes_padding() {
+        let src: Vec<f32> = (0..21).map(|i| i as f32).collect();
+        let v = AlignedVec::from_slice(&src);
+        assert_eq!(v.as_slice(), &src[..]);
+        assert_eq!(v.len(), 21);
+        let w = v.clone();
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn mutation_via_deref() {
+        let mut v = AlignedVec::zeroed(5);
+        v[3] = 2.5;
+        assert_eq!(v.as_slice(), &[0.0, 0.0, 0.0, 2.5, 0.0]);
+    }
+}

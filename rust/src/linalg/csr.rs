@@ -13,6 +13,26 @@
 //!
 //! Each has a `_naive` reference twin mirroring the `kernels.rs` contract,
 //! pinned against it by the property tests and timed by `psfit bench`.
+//! Like the dense layer, `spmv`/`spmm`/`spmv_t`/`spmm_t` are
+//! runtime-ISA-dispatched (`foo_isa` pins a variant, `foo` routes through
+//! [`super::simd::active`]); `gram_sparse` is a setup-time op and stays
+//! scalar.
+//!
+//! # Padded value runs (SIMD layout)
+//!
+//! Internally each row's entry run is padded to a multiple of
+//! [`SIMD_PAD`] entries with *storage-only* padding: value `0.0`, column
+//! index equal to the row's last real column.  A padded run can be
+//! consumed in full vector lanes with no tail handling — the zero values
+//! contribute nothing and the duplicate in-range columns keep gathers in
+//! bounds.  The padding is invisible outside the kernels: [`CsrMatrix::row`],
+//! [`CsrMatrix::nnz`], [`CsrMatrix::values`], equality, and every
+//! serializer see only the real entries, so LIBSVM round-trips and PSC1
+//! checkpoint hashes are unchanged.  `CsrBlockView::row_lanes` hands the
+//! padded run to a kernel only when its block range covers the row's full
+//! real run (always true for full-width views and for rows whose entries
+//! all fall inside the block); partial mid-row ranges fall back to the
+//! exact subrange plus the shared scalar tail.
 //!
 //! Feature blocks are read **in place** through [`CsrBlockView`] — the
 //! sparse twin of [`super::kernels::ColumnBlockView`].  Because column
@@ -22,29 +42,106 @@
 //! computed once (binary search per row) and reused for every sweep.
 //!
 //! Determinism contract: identical to the dense layer — kernels are
-//! single-threaded, their summation order is a fixed function of the
-//! stored entry order, so results are bit-identical from run to run and
-//! at any worker-pool width.  (Sparse and *dense* kernels sum in
-//! different orders, so cross-storage agreement is to rounding, not bits
-//! — the parity tests use 1e-5 like the tiled-vs-naive pins.)
+//! single-threaded and, per ISA, their summation order is a fixed
+//! function of the stored entry order, so results are bit-identical from
+//! run to run and at any worker-pool width.  (Sparse and *dense* kernels
+//! sum in different orders, so cross-storage agreement is to rounding,
+//! not bits — the parity tests use 1e-5 like the tiled-vs-naive pins.)
 
 use super::matrix::Matrix;
+use super::simd::{self, Isa};
 
-/// Row-major compressed sparse rows: row `i`'s entries live at
-/// `col_idx[row_ptr[i]..row_ptr[i+1]]` / `vals[..]`, column indices
-/// strictly increasing within a row.
-#[derive(Clone, Debug, PartialEq)]
+/// Entries per padded row run (covers both the AVX2 8-lane and NEON
+/// 4-lane kernels).
+pub const SIMD_PAD: usize = 8;
+
+/// Row-major compressed sparse rows with padded per-row runs (see the
+/// module docs): row `i`'s *real* entries live at
+/// `col_idx[row_ptr[i]..row_ptr[i] + row_len[i]]` / `vals[..]`, column
+/// indices strictly increasing within a row; the rest of the allocated
+/// run `[.., row_ptr[i + 1])` is storage-only padding.
+#[derive(Clone, Debug)]
 pub struct CsrMatrix {
     /// Row count.
     pub rows: usize,
     /// Column count (logical width; trailing all-zero columns allowed).
     pub cols: usize,
-    /// `rows + 1` offsets into `col_idx` / `vals`.
-    pub row_ptr: Vec<usize>,
-    /// Column index of every stored entry, strictly increasing per row.
-    pub col_idx: Vec<u32>,
-    /// Value of every stored entry (explicit zeros allowed).
-    pub vals: Vec<f32>,
+    /// `rows + 1` offsets bounding each row's *allocated* (padded) run.
+    row_ptr: Vec<usize>,
+    /// Real entries per row (`<= row_ptr[i+1] - row_ptr[i]`).
+    row_len: Vec<usize>,
+    /// Column index of every stored entry (padding duplicates the row's
+    /// last real column, keeping per-row order non-decreasing).
+    col_idx: Vec<u32>,
+    /// Value of every stored entry (padding is 0.0; explicit real zeros
+    /// allowed).
+    vals: Vec<f32>,
+    /// Total real entries (cached sum of `row_len`).
+    nnz: usize,
+}
+
+impl PartialEq for CsrMatrix {
+    /// Logical equality: shape plus real entries; padding is ignored.
+    fn eq(&self, other: &CsrMatrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && (0..self.rows).all(|i| self.row(i) == other.row(i))
+    }
+}
+
+/// Builder accumulating padded runs row by row.
+struct CsrBuilder {
+    row_ptr: Vec<usize>,
+    row_len: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+    nnz: usize,
+}
+
+impl CsrBuilder {
+    fn new(rows_hint: usize) -> CsrBuilder {
+        CsrBuilder {
+            row_ptr: {
+                let mut v = Vec::with_capacity(rows_hint + 1);
+                v.push(0);
+                v
+            },
+            row_len: Vec::with_capacity(rows_hint),
+            col_idx: Vec::new(),
+            vals: Vec::new(),
+            nnz: 0,
+        }
+    }
+
+    /// Close the current row: record its real length and pad the run.
+    fn finish_row(&mut self) {
+        let start = *self.row_ptr.last().unwrap();
+        let len = self.col_idx.len() - start;
+        self.row_len.push(len);
+        self.nnz += len;
+        if len > 0 {
+            let pad_col = *self.col_idx.last().unwrap();
+            let padded = len.div_ceil(SIMD_PAD) * SIMD_PAD;
+            for _ in len..padded {
+                self.col_idx.push(pad_col);
+                self.vals.push(0.0);
+            }
+        }
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    fn build(self, rows: usize, cols: usize) -> CsrMatrix {
+        debug_assert_eq!(self.row_len.len(), rows);
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: self.row_ptr,
+            row_len: self.row_len,
+            col_idx: self.col_idx,
+            vals: self.vals,
+            nnz: self.nnz,
+        }
+    }
 }
 
 impl CsrMatrix {
@@ -52,11 +149,8 @@ impl CsrMatrix {
     /// strictly increasing columns within each row; zeros may be stored
     /// explicitly (the LIBSVM reader keeps whatever the file says).
     pub fn from_rows(cols: usize, rows: Vec<Vec<(u32, f32)>>) -> CsrMatrix {
-        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
-        row_ptr.push(0usize);
-        let nnz: usize = rows.iter().map(|r| r.len()).sum();
-        let mut col_idx = Vec::with_capacity(nnz);
-        let mut vals = Vec::with_capacity(nnz);
+        let n_rows = rows.len();
+        let mut b = CsrBuilder::new(n_rows);
         for row in &rows {
             let mut prev: Option<u32> = None;
             for &(c, v) in row {
@@ -65,42 +159,27 @@ impl CsrMatrix {
                     assert!(c > p, "columns must increase within a row");
                 }
                 prev = Some(c);
-                col_idx.push(c);
-                vals.push(v);
+                b.col_idx.push(c);
+                b.vals.push(v);
             }
-            row_ptr.push(col_idx.len());
+            b.finish_row();
         }
-        CsrMatrix {
-            rows: rows.len(),
-            cols,
-            row_ptr,
-            col_idx,
-            vals,
-        }
+        b.build(n_rows, cols)
     }
 
     /// Compress a dense matrix (exact: every nonzero entry kept).
     pub fn from_dense(a: &Matrix) -> CsrMatrix {
-        let mut row_ptr = Vec::with_capacity(a.rows + 1);
-        row_ptr.push(0usize);
-        let mut col_idx = Vec::new();
-        let mut vals = Vec::new();
+        let mut b = CsrBuilder::new(a.rows);
         for i in 0..a.rows {
             for (j, &v) in a.row(i).iter().enumerate() {
                 if v != 0.0 {
-                    col_idx.push(j as u32);
-                    vals.push(v);
+                    b.col_idx.push(j as u32);
+                    b.vals.push(v);
                 }
             }
-            row_ptr.push(col_idx.len());
+            b.finish_row();
         }
-        CsrMatrix {
-            rows: a.rows,
-            cols: a.cols,
-            row_ptr,
-            col_idx,
-            vals,
-        }
+        b.build(a.rows, a.cols)
     }
 
     /// Expand back to dense (bit-exact: values are copied, not recomputed).
@@ -108,7 +187,7 @@ impl CsrMatrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         for i in 0..self.rows {
             let (cols, vals) = self.row(i);
-            let row = &mut out.data[i * self.cols..(i + 1) * self.cols];
+            let row = out.row_mut(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 row[c as usize] = v;
             }
@@ -116,9 +195,10 @@ impl CsrMatrix {
         out
     }
 
-    /// Stored entries (including any explicit zeros).
+    /// Stored real entries (including any explicit zeros; padding never
+    /// counted).
     pub fn nnz(&self) -> usize {
-        self.vals.len()
+        self.nnz
     }
 
     /// Stored-entry fraction in [0, 1] (1.0 for an empty matrix so the
@@ -132,11 +212,26 @@ impl CsrMatrix {
         }
     }
 
-    /// Row `i`'s entries: (column indices, values).
+    /// Row `i`'s real entries: (column indices, values).
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
-        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        let (s, e) = self.row_bounds(i);
         (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Absolute bounds `[start, end)` of row `i`'s *real* entries within
+    /// the entry arrays (what [`CsrMatrix::block_ranges`] partitions).
+    #[inline]
+    pub fn row_bounds(&self, i: usize) -> (usize, usize) {
+        let s = self.row_ptr[i];
+        (s, s + self.row_len[i])
+    }
+
+    /// All real stored values in row-major entry order (the checkpoint
+    /// problem hash samples these; padding excluded, so the hash matches
+    /// the historical unpadded layout).
+    pub fn values(&self) -> impl Iterator<Item = f32> + '_ {
+        (0..self.rows).flat_map(|i| self.row(i).1.iter().copied())
     }
 
     /// Per-row entry subranges covering columns `[col0, col0 + width)` —
@@ -147,7 +242,7 @@ impl CsrMatrix {
         let (lo, hi) = (col0 as u32, (col0 + width) as u32);
         (0..self.rows)
             .map(|i| {
-                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let (s, e) = self.row_bounds(i);
                 let cols = &self.col_idx[s..e];
                 let a = s + cols.partition_point(|&c| c < lo);
                 let b = s + cols.partition_point(|&c| c < hi);
@@ -168,26 +263,37 @@ impl CsrMatrix {
         assert_eq!(ranges.len(), self.rows);
         assert!(col0 + width <= self.cols);
         CsrBlockView {
-            rows: self.rows,
+            mat: self,
             cols: width,
             col0: col0 as u32,
             ranges,
-            col_idx: &self.col_idx,
-            vals: &self.vals,
         }
     }
 
-    /// y = A x over the whole matrix (convenience for the storage enum).
+    /// y = A x over the whole matrix (convenience for the storage enum;
+    /// dispatched like the block kernels — whole rows always qualify for
+    /// the padded fast path, read straight off the allocated runs, so no
+    /// block-range precomputation (or allocation) is needed).
     pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
+        let isa = simd::active();
         for (i, yi) in y.iter_mut().enumerate() {
-            let (cols, vals) = self.row(i);
-            *yi = dot_sparse(cols, vals, 0, x);
+            let (cols, vals) = if isa == Isa::Scalar {
+                self.row(i)
+            } else {
+                // full padded run: lane-multiple length, zero-value tail
+                let (s, pe) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                (&self.col_idx[s..pe], &self.vals[s..pe])
+            };
+            *yi = row_dot_isa(isa, cols, vals, 0, x);
         }
     }
 
-    /// y = A^T v over the whole matrix.
+    /// y = A^T v over the whole matrix.  Stays scalar on every ISA: the
+    /// transposed product is a per-entry scatter, and neither AVX2 nor
+    /// NEON has scatter stores (the block-level [`spmm_t`] vectorizes
+    /// only the value scaling, a marginal win the convenience path skips).
     pub fn spmv_t(&self, v: &[f32], y: &mut [f32]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(y.len(), self.cols);
@@ -206,20 +312,19 @@ impl CsrMatrix {
 /// are rebased by `col0` on read, so kernels see block-local columns.
 #[derive(Clone, Copy, Debug)]
 pub struct CsrBlockView<'a> {
-    rows: usize,
+    mat: &'a CsrMatrix,
     cols: usize,
     col0: u32,
-    /// Per-row `[start, end)` into `col_idx` / `vals`.
+    /// Per-row `[start, end)` into the parent's entry arrays (real
+    /// entries only).
     ranges: &'a [(usize, usize)],
-    col_idx: &'a [u32],
-    vals: &'a [f32],
 }
 
 impl<'a> CsrBlockView<'a> {
     /// Rows of the viewed block (same as the parent matrix).
     #[inline]
     pub fn rows(&self) -> usize {
-        self.rows
+        self.mat.rows
     }
 
     /// Columns (block width) of the viewed block.
@@ -228,12 +333,30 @@ impl<'a> CsrBlockView<'a> {
         self.cols
     }
 
-    /// Row `i`'s entries within the block: (parent column indices, values).
-    /// Subtract [`CsrBlockView::col0`] for block-local columns.
+    /// Row `i`'s real entries within the block: (parent column indices,
+    /// values).  Subtract [`CsrBlockView::col0`] for block-local columns.
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
         let (s, e) = self.ranges[i];
-        (&self.col_idx[s..e], &self.vals[s..e])
+        (&self.mat.col_idx[s..e], &self.mat.vals[s..e])
+    }
+
+    /// Row `i`'s entries for a vector kernel: the padded run (length a
+    /// multiple of [`SIMD_PAD`], zero-value tail, in-range duplicate
+    /// columns) whenever the block range covers the row's full real run,
+    /// otherwise the exact real subrange (the kernel then takes the
+    /// shared scalar tail).  The extra entries contribute exactly 0 to
+    /// any dot product, so both returns denote the same row.
+    #[inline]
+    pub(crate) fn row_lanes(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = self.ranges[i];
+        let (rs, re) = self.mat.row_bounds(i);
+        if s == rs && e == re {
+            let pe = self.mat.row_ptr[i + 1];
+            (&self.mat.col_idx[s..pe], &self.mat.vals[s..pe])
+        } else {
+            (&self.mat.col_idx[s..e], &self.mat.vals[s..e])
+        }
     }
 
     /// First parent column of the block (subtract from `row` indices for
@@ -243,9 +366,37 @@ impl<'a> CsrBlockView<'a> {
         self.col0
     }
 
-    /// Stored entries inside the block.
+    /// Stored real entries inside the block.
     pub fn nnz(&self) -> usize {
         self.ranges.iter().map(|&(s, e)| e - s).sum()
+    }
+}
+
+/// Scalar remainder of a sparse dot — the shared tail helper of the
+/// sparse paths (the unroll-by-4 scalar kernel and every SIMD variant
+/// finish here, in the same left-to-right order).
+#[inline]
+pub(crate) fn dot_sparse_tail(cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
+    let mut tail = 0.0f32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        tail += v * x[(c - col0) as usize];
+    }
+    tail
+}
+
+/// One sparse row dot under a pinned ISA (shared by the whole-matrix
+/// [`CsrMatrix::spmv`] and, through the block kernels, every dispatched
+/// spmv/spmm path).
+#[inline]
+fn row_dot_isa(isa: Isa, cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::sparse_dot(cols, vals, col0, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::sparse_dot(cols, vals, col0, x) },
+        Isa::Scalar => dot_sparse(cols, vals, col0, x),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
     }
 }
 
@@ -264,10 +415,7 @@ fn dot_sparse(cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
         acc[2] += v4[2] * x[(c4[2] - col0) as usize];
         acc[3] += v4[3] * x[(c4[3] - col0) as usize];
     }
-    let mut tail = 0.0f32;
-    for (&c, &v) in cc.remainder().iter().zip(cv.remainder()) {
-        tail += v * x[(c - col0) as usize];
-    }
+    let tail = dot_sparse_tail(cc.remainder(), cv.remainder(), col0, x);
     ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
 }
 
@@ -289,15 +437,33 @@ pub fn spmv_naive(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// y = A x — unroll-by-4 sparse row dot.
-pub fn spmv(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
-    assert_eq!(x.len(), a.cols());
-    assert_eq!(y.len(), a.rows());
+/// y = A x — tiled-scalar variant (unroll-by-4 sparse row dot).
+fn spmv_scalar(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
     let col0 = a.col0();
     for (i, yi) in y.iter_mut().enumerate() {
         let (cols, vals) = a.row(i);
         *yi = dot_sparse(cols, vals, col0, x);
     }
+}
+
+/// y = A x under a pinned ISA variant.
+pub fn spmv_isa(isa: Isa, a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::spmv(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::spmv(a, x, y) },
+        Isa::Scalar => spmv_scalar(a, x, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// y = A x — dispatched to the active ISA.
+pub fn spmv(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    spmv_isa(simd::active(), a, x, y)
 }
 
 /// Y = A X for `k` right-hand sides — naive reference (k naive spmv).
@@ -312,13 +478,11 @@ pub fn spmm_naive(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
     }
 }
 
-/// Y = A X for `k` right-hand sides — each row's entries are loaded once
+/// Y = A X — tiled-scalar variant: each row's entries are loaded once
 /// and dotted against all `k` vectors while hot (the sparse analogue of
 /// the multiclass batching in `matmul`).
-pub fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+fn spmm_scalar(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
     let (m, n) = (a.rows(), a.cols());
-    assert_eq!(x.len(), k * n);
-    assert_eq!(y.len(), k * m);
     let col0 = a.col0();
     for i in 0..m {
         let (cols, vals) = a.row(i);
@@ -326,6 +490,27 @@ pub fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
             y[r * m + i] = dot_sparse(cols, vals, col0, &x[r * n..(r + 1) * n]);
         }
     }
+}
+
+/// Y = A X for `k` right-hand sides under a pinned ISA variant.
+pub fn spmm_isa(isa: Isa, a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::spmm(a, x, k, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::spmm(a, x, k, y) },
+        Isa::Scalar => spmm_scalar(a, x, k, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// Y = A X for `k` right-hand sides — dispatched to the active ISA.
+pub fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    spmm_isa(simd::active(), a, x, k, y)
 }
 
 // ----------------------------------------------------------------- spmv_t
@@ -348,10 +533,16 @@ pub fn spmv_t_naive(a: &CsrBlockView, v: &[f32], y: &mut [f32]) {
     }
 }
 
-/// y = A^T v — branch-free per-row scatter (the per-iteration
+/// y = A^T v under a pinned ISA variant (shared with [`spmm_t_isa`], so
+/// `k == 1` stays bit-identical).
+pub fn spmv_t_isa(isa: Isa, a: &CsrBlockView, v: &[f32], y: &mut [f32]) {
+    spmm_t_isa(isa, a, v, 1, y)
+}
+
+/// y = A^T v — dispatched to the active ISA (the per-iteration
 /// data-touching op of the inner sweep on sparse shards).
 pub fn spmv_t(a: &CsrBlockView, v: &[f32], y: &mut [f32]) {
-    spmm_t(a, v, 1, y)
+    spmm_t_isa(simd::active(), a, v, 1, y)
 }
 
 /// Y = A^T V for `k` vectors — naive reference (k naive spmv_t).
@@ -364,12 +555,10 @@ pub fn spmm_t_naive(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
     }
 }
 
-/// Y = A^T V for `k` vectors — each row's entries are read once and
+/// Y = A^T V — tiled-scalar variant: each row's entries are read once and
 /// scattered into all `k` accumulations.
-pub fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+fn spmm_t_scalar(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
     let (m, n) = (a.rows(), a.cols());
-    assert_eq!(v.len(), k * m);
-    assert_eq!(y.len(), k * n);
     let col0 = a.col0();
     y.fill(0.0);
     for i in 0..m {
@@ -385,6 +574,27 @@ pub fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
             }
         }
     }
+}
+
+/// Y = A^T V for `k` vectors under a pinned ISA variant.
+pub fn spmm_t_isa(isa: Isa, a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::spmm_t(a, v, k, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::spmm_t(a, v, k, y) },
+        Isa::Scalar => spmm_t_scalar(a, v, k, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// Y = A^T V for `k` vectors — dispatched to the active ISA.
+pub fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    spmm_t_isa(simd::active(), a, v, k, y)
 }
 
 // ------------------------------------------------------------ gram_sparse
@@ -416,7 +626,8 @@ pub fn gram_sparse_naive(a: &CsrBlockView, g: &mut [f32]) {
 /// G += A^T A — branch-free per-row pair accumulation.  Each stored row
 /// contributes O(nnz_row^2) work instead of the dense O(n^2); upper
 /// triangle computed then mirrored (mirroring only copies, so
-/// accumulating across calls composes).
+/// accumulating across calls composes).  Setup-time op: scalar on every
+/// ISA.
 pub fn gram_sparse(a: &CsrBlockView, g: &mut [f32]) {
     let n = a.cols();
     assert_eq!(g.len(), n * n);
@@ -452,12 +663,12 @@ mod tests {
     /// Random dense matrix with ~`density` nonzero fraction.
     fn rand_sparse(rng: &mut Rng, m: usize, n: usize, density: f64) -> Matrix {
         let mut a = Matrix::zeros(m, n);
-        rng.fill_normal_f32(&mut a.data);
-        for v in a.data.iter_mut() {
+        a.for_each_mut(|v| *v = rng.normal_f32());
+        a.for_each_mut(|v| {
             if rng.uniform() >= density {
                 *v = 0.0;
             }
-        }
+        });
         a
     }
 
@@ -476,8 +687,34 @@ mod tests {
             let a = rand_sparse(&mut rng, m, n, d);
             let c = CsrMatrix::from_dense(&a);
             assert_eq!(c.to_dense(), a);
-            assert_eq!(c.nnz(), a.data.iter().filter(|&&v| v != 0.0).count());
+            let logical = a.to_vec();
+            assert_eq!(c.nnz(), logical.iter().filter(|&&v| v != 0.0).count());
         }
+    }
+
+    #[test]
+    fn padding_is_storage_only() {
+        // 3 entries in one row: run padded to SIMD_PAD, but every logical
+        // accessor sees exactly the 3 real entries
+        let c = CsrMatrix::from_rows(4, vec![
+            vec![(1, 1.0), (3, -2.0)],
+            vec![(0, 5.0), (1, 6.0), (3, 7.0)],
+            vec![],
+            vec![(2, 9.0)],
+        ]);
+        assert_eq!(c.nnz(), 6);
+        assert_eq!(c.row(1), (&[0u32, 1, 3][..], &[5.0f32, 6.0, 7.0][..]));
+        assert_eq!(c.row(2), (&[][..], &[][..]));
+        assert_eq!(c.values().collect::<Vec<_>>(), vec![1.0, -2.0, 5.0, 6.0, 7.0, 9.0]);
+        // allocated runs are lane multiples with zero-value padding
+        let (s1, e1) = c.row_bounds(1);
+        assert_eq!(e1 - s1, 3);
+        assert_eq!(c.row_ptr[2] - s1, SIMD_PAD);
+        assert!(c.vals[e1..c.row_ptr[2]].iter().all(|&v| v == 0.0));
+        assert!(c.col_idx[e1..c.row_ptr[2]].iter().all(|&cc| cc == 3));
+        // equality ignores padding: a logically-equal matrix built from
+        // the dense expansion compares equal
+        assert_eq!(CsrMatrix::from_dense(&c.to_dense()), c);
     }
 
     #[test]
@@ -507,14 +744,15 @@ mod tests {
     }
 
     #[test]
-    fn block_kernels_match_dense_views() {
+    fn block_kernels_match_dense_views_on_every_isa() {
         let mut rng = Rng::seed_from(3);
-        // non-multiple-of-4 shapes; includes an empty (zero-entry) block
+        // non-multiple-of-lane shapes; includes an empty (zero-entry) block
         for (m, n, col0, w, d) in [
             (9, 11, 3, 5, 0.3),
             (6, 7, 0, 7, 0.1),
             (14, 10, 4, 3, 0.0),
             (5, 8, 6, 2, 1.0),
+            (11, 40, 0, 40, 0.6),
         ] {
             let a = rand_sparse(&mut rng, m, n, d);
             let c = CsrMatrix::from_dense(&a);
@@ -524,22 +762,25 @@ mod tests {
 
             let x: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
             let v: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
-            let (mut y0, mut y1) = (vec![0.0f32; m], vec![0.0f32; m]);
-            kernels::matvec(&dv, &x, &mut y0);
-            spmv(&sv, &x, &mut y1);
-            close(&y0, &y1);
+            let mut y0 = vec![0.0f32; m];
+            kernels::matvec_naive(&dv, &x, &mut y0);
+            let mut z0 = vec![0.0f32; w];
+            kernels::matvec_t_naive(&dv, &v, &mut z0);
+            let mut g0 = vec![0.0f32; w * w];
+            kernels::gram_naive(&dv, &mut g0);
+
+            for isa in crate::linalg::simd::supported() {
+                let mut y1 = vec![0.0f32; m];
+                spmv_isa(isa, &sv, &x, &mut y1);
+                close(&y0, &y1);
+                let mut z1 = vec![0.0f32; w];
+                spmv_t_isa(isa, &sv, &v, &mut z1);
+                close(&z0, &z1);
+            }
+            let mut y1 = vec![0.0f32; m];
             spmv_naive(&sv, &x, &mut y1);
             close(&y0, &y1);
-
-            let (mut z0, mut z1) = (vec![0.0f32; w], vec![0.0f32; w]);
-            kernels::matvec_t(&dv, &v, &mut z0);
-            spmv_t(&sv, &v, &mut z1);
-            close(&z0, &z1);
-            spmv_t_naive(&sv, &v, &mut z1);
-            close(&z0, &z1);
-
-            let (mut g0, mut g1) = (vec![0.0f32; w * w], vec![0.0f32; w * w]);
-            kernels::gram(&dv, &mut g0);
+            let mut g1 = vec![0.0f32; w * w];
             gram_sparse(&sv, &mut g1);
             close(&g0, &g1);
             g1.fill(0.0);
@@ -559,24 +800,29 @@ mod tests {
         let x: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
         let v: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
 
-        let (mut y0, mut y1) = (vec![0.0f32; k * m], vec![0.0f32; k * m]);
+        let mut y0 = vec![0.0f32; k * m];
         spmm_naive(&sv, &x, k, &mut y0);
-        spmm(&sv, &x, k, &mut y1);
-        close(&y0, &y1);
-        let (mut z0, mut z1) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        let mut z0 = vec![0.0f32; k * n];
         spmm_t_naive(&sv, &v, k, &mut z0);
-        spmm_t(&sv, &v, k, &mut z1);
-        close(&z0, &z1);
 
-        // k == 1 bit-identical to the single-vector kernels
-        let (mut s0, mut s1) = (vec![0.0f32; m], vec![0.0f32; m]);
-        spmv(&sv, &x[..n], &mut s0);
-        spmm(&sv, &x[..n], 1, &mut s1);
-        assert_eq!(s0, s1);
-        let (mut t0, mut t1) = (vec![0.0f32; n], vec![0.0f32; n]);
-        spmv_t(&sv, &v[..m], &mut t0);
-        spmm_t(&sv, &v[..m], 1, &mut t1);
-        assert_eq!(t0, t1);
+        for isa in crate::linalg::simd::supported() {
+            let mut y1 = vec![0.0f32; k * m];
+            spmm_isa(isa, &sv, &x, k, &mut y1);
+            close(&y0, &y1);
+            let mut z1 = vec![0.0f32; k * n];
+            spmm_t_isa(isa, &sv, &v, k, &mut z1);
+            close(&z0, &z1);
+
+            // k == 1 bit-identical to the single-vector kernels
+            let (mut s0, mut s1) = (vec![0.0f32; m], vec![0.0f32; m]);
+            spmv_isa(isa, &sv, &x[..n], &mut s0);
+            spmm_isa(isa, &sv, &x[..n], 1, &mut s1);
+            assert_eq!(s0, s1, "{}", isa.name());
+            let (mut t0, mut t1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            spmv_t_isa(isa, &sv, &v[..m], &mut t0);
+            spmm_t_isa(isa, &sv, &v[..m], 1, &mut t1);
+            assert_eq!(t0, t1, "{}", isa.name());
+        }
     }
 
     #[test]
@@ -605,12 +851,14 @@ mod tests {
         let c = CsrMatrix::from_dense(&a);
         let ranges = c.block_ranges(0, 4);
         let sv = c.block_view(&ranges, 0, 4);
-        let mut y = vec![9.0f32; 3];
-        spmv(&sv, &[1.0, 1.0, 1.0, 1.0], &mut y);
-        assert_eq!(y, vec![3.0, 0.0, 2.0]);
-        let mut z = vec![9.0f32; 4];
-        spmv_t(&sv, &[1.0, 1.0, 1.0], &mut z);
-        assert_eq!(z, vec![1.0, 3.0, 0.0, 1.0]);
+        for isa in crate::linalg::simd::supported() {
+            let mut y = vec![9.0f32; 3];
+            spmv_isa(isa, &sv, &[1.0, 1.0, 1.0, 1.0], &mut y);
+            assert_eq!(y, vec![3.0, 0.0, 2.0], "{}", isa.name());
+            let mut z = vec![9.0f32; 4];
+            spmv_t_isa(isa, &sv, &[1.0, 1.0, 1.0], &mut z);
+            assert_eq!(z, vec![1.0, 3.0, 0.0, 1.0], "{}", isa.name());
+        }
     }
 
     #[test]
@@ -634,15 +882,47 @@ mod tests {
         let mut rng = Rng::seed_from(6);
         let a = rand_sparse(&mut rng, 12, 10, 0.5);
         let c = CsrMatrix::from_dense(&a);
-        // blocks [0,4), [4,7), [7,10) must partition every row's entries
+        // blocks [0,4), [4,7), [7,10) must partition every row's real
+        // entries (padding sits outside the covered bounds)
         let r0 = c.block_ranges(0, 4);
         let r1 = c.block_ranges(4, 3);
         let r2 = c.block_ranges(7, 3);
         for i in 0..12 {
-            assert_eq!(r0[i].0, c.row_ptr[i]);
+            let (rs, re) = c.row_bounds(i);
+            assert_eq!(r0[i].0, rs);
             assert_eq!(r0[i].1, r1[i].0);
             assert_eq!(r1[i].1, r2[i].0);
-            assert_eq!(r2[i].1, c.row_ptr[i + 1]);
+            assert_eq!(r2[i].1, re);
+        }
+    }
+
+    #[test]
+    fn row_lanes_pads_full_runs_and_not_partial_ones() {
+        let mut rng = Rng::seed_from(7);
+        let a = rand_sparse(&mut rng, 6, 20, 0.9);
+        let c = CsrMatrix::from_dense(&a);
+        // full-width view: every row qualifies for the padded fast path
+        let full = c.block_ranges(0, 20);
+        let sv = c.block_view(&full, 0, 20);
+        for i in 0..6 {
+            let (cols, vals) = sv.row_lanes(i);
+            let real = sv.row(i).0.len();
+            if real > 0 {
+                assert_eq!(cols.len() % SIMD_PAD, 0, "row {i}");
+                assert!(vals[real..].iter().all(|&v| v == 0.0));
+            }
+        }
+        // a mid-row block gets the exact subrange
+        let part = c.block_ranges(5, 6);
+        let pv = c.block_view(&part, 5, 6);
+        for i in 0..6 {
+            let lanes = pv.row_lanes(i).0.len();
+            let real = pv.row(i).0.len();
+            let (rs, re) = c.row_bounds(i);
+            let covers_full_run = part[i] == (rs, re);
+            if !covers_full_run {
+                assert_eq!(lanes, real, "row {i}");
+            }
         }
     }
 }

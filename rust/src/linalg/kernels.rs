@@ -1,22 +1,34 @@
-//! Cache-tiled, unroll-by-4 f32 kernels for the data-touching ops of the
-//! inner sweep: `A_j^T corr` (transposed matvec), `A_j x_j` (matvec), the
-//! multi-vector forms of both (all class columns at once), and the Gram
-//! setup `A_j^T A_j`.  Each kernel has a naive reference twin used by the
-//! property tests and the `psfit bench` harness.
+//! Dense f32 kernels for the data-touching ops of the inner sweep:
+//! `A_j^T corr` (transposed matvec), `A_j x_j` (matvec), the multi-vector
+//! forms of both (all class columns at once), and the Gram setup
+//! `A_j^T A_j`.
+//!
+//! Every public kernel is a **runtime-ISA-dispatched** entry point: it
+//! routes through [`super::simd::active`] to an explicit AVX2+FMA or NEON
+//! variant when the host (and the `platform.isa` / `PSFIT_ISA` knobs)
+//! allow, and otherwise to the cache-tiled unroll-by-4 scalar kernels in
+//! this file — the guaranteed fallback, bit-identical to the historical
+//! implementation.  `foo_isa(isa, ...)` pins a specific variant (the
+//! parity tests and `psfit bench` time them side by side); `foo(...)` is
+//! `foo_isa(active(), ...)`.
 //!
 //! Every kernel is stride-aware: it reads its operand through a borrowed
 //! [`ColumnBlockView`], so a feature block of a shard is consumed **in
 //! place** — no packed per-block copy (the paper's feature decomposition
 //! becomes a view, not a memcpy; `backend::native` reports the bytes this
-//! saves in its transfer ledger).
+//! saves in its transfer ledger).  Since the aligned-storage change,
+//! `Matrix` rows are padded to 64-byte lanes, so whole-matrix views carry
+//! a `row_stride >= cols` and every row start is cache-line aligned.
 //!
-//! Determinism contract: kernels are single-threaded and their summation
-//! order is a fixed function of the view shape, so results are
+//! Determinism contract: kernels are single-threaded and, *per ISA*, their
+//! summation order is a fixed function of the view shape, so results are
 //! bit-identical from run to run and at any worker-pool width (threading
 //! happens per *block* in `util::pool`, above this layer, never inside a
 //! kernel).  The multi-vector kernels visit each output element in the
 //! same order as their single-vector counterparts, so the `k == 1` case
-//! is bit-identical to `matvec` / `matvec_t`.
+//! is bit-identical to `matvec` / `matvec_t` under the same ISA.
+//! *Across* ISAs the summation orders differ (and FMA fuses the rounding),
+//! so cross-ISA agreement is the 1e-5 contract below, like the twins.
 //!
 //! The `_naive` twin convention: every optimized kernel `foo` ships with
 //! a `foo_naive` reference implementing the same contract with the
@@ -26,9 +38,12 @@
 //! `|optimized - naive| <= 1e-5 * max(1, |value|)` element-wise, the
 //! crate-wide kernel tolerance.
 
+use super::simd::{self, Isa};
+
 /// Borrowed view of the contiguous column range `[col0, col0 + cols)` of a
 /// row-major matrix — the paper's feature block `A_j`, read in place.  A
-/// whole matrix is the special case `row_stride == cols`, `col0 == 0`.
+/// whole matrix is the case `col0 == 0` with `row_stride` equal to the
+/// matrix's (padded) stride.
 #[derive(Clone, Copy, Debug)]
 pub struct ColumnBlockView<'a> {
     /// Parent storage, offset so row `i` starts at `i * row_stride`.
@@ -81,11 +96,30 @@ impl<'a> ColumnBlockView<'a> {
         self.cols
     }
 
+    /// Elements per stored row of the parent buffer.
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
     /// Row `i` of the viewed block (length `cols`).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.row_stride..i * self.row_stride + self.cols]
     }
+}
+
+/// Scalar remainder dot product — the single shared tail helper for every
+/// dense path (the unroll-by-4 scalar kernels and the SIMD variants both
+/// finish their sub-lane remainders here, in the same left-to-right
+/// order, instead of re-implementing the loop per kernel).
+#[inline]
+pub(crate) fn dot_tail(a: &[f32], b: &[f32]) -> f32 {
+    let mut tail = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        tail += x * y;
+    }
+    tail
 }
 
 /// Unroll-by-4 dot product with four independent accumulators.  The fixed
@@ -102,10 +136,7 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
         acc[2] += a4[2] * b4[2];
         acc[3] += a4[3] * b4[3];
     }
-    let mut tail = 0.0f32;
-    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
+    let tail = dot_tail(ca.remainder(), cb.remainder());
     ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
 }
 
@@ -124,13 +155,32 @@ pub fn matvec_naive(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// y = A x — unroll-by-4 per-row dot.
-pub fn matvec(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
-    assert_eq!(x.len(), a.cols());
-    assert_eq!(y.len(), a.rows());
+/// y = A x — tiled-scalar variant (unroll-by-4 per-row dot).
+fn matvec_scalar(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
     for (i, yi) in y.iter_mut().enumerate() {
         *yi = dot4(a.row(i), x);
     }
+}
+
+/// y = A x under a pinned ISA variant (panics if `isa` is unavailable on
+/// this host — iterate [`simd::supported`] when probing).
+pub fn matvec_isa(isa: Isa, a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::matvec(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::matvec(a, x, y) },
+        Isa::Scalar => matvec_scalar(a, x, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// y = A x — dispatched to the active ISA.
+pub fn matvec(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    matvec_isa(simd::active(), a, x, y)
 }
 
 /// Y = A X for `k` right-hand sides — naive reference (k naive matvecs).
@@ -145,19 +195,40 @@ pub fn matmul_naive(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
     }
 }
 
-/// Y = A X for `k` right-hand sides — each A row is loaded once and dotted
+/// Y = A X — tiled-scalar variant: each A row is loaded once and dotted
 /// against all `k` vectors while hot (the multi-class batching the
 /// softmax path uses instead of re-running per class column).
-pub fn matmul(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+fn matmul_scalar(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
     let (m, n) = (a.rows(), a.cols());
-    assert_eq!(x.len(), k * n);
-    assert_eq!(y.len(), k * m);
     for i in 0..m {
         let row = a.row(i);
         for r in 0..k {
             y[r * m + i] = dot4(row, &x[r * n..(r + 1) * n]);
         }
     }
+}
+
+/// Y = A X for `k` right-hand sides under a pinned ISA variant.
+pub fn matmul_isa(isa: Isa, a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k * n);
+    assert_eq!(y.len(), k * m);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::matmul(a, x, k, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::matmul(a, x, k, y) },
+        Isa::Scalar => matmul_scalar(a, x, k, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// Y = A X for `k` right-hand sides — dispatched to the active ISA.  The
+/// `k == 1` case is bit-identical to [`matvec`] under every ISA (shared
+/// per-row dot).
+pub fn matmul(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    matmul_isa(simd::active(), a, x, k, y)
 }
 
 // ---------------------------------------------------------------- matvec_t
@@ -178,10 +249,15 @@ pub fn matvec_t_naive(a: &ColumnBlockView, v: &[f32], y: &mut [f32]) {
     }
 }
 
-/// y = A^T v — 4-row tiles, branch-free: four A rows stay hot while `y`
-/// accumulates their combined contribution in one pass.
+/// y = A^T v under a pinned ISA variant (4-row tiles shared with
+/// [`matmul_t_isa`], so `k == 1` stays bit-identical).
+pub fn matvec_t_isa(isa: Isa, a: &ColumnBlockView, v: &[f32], y: &mut [f32]) {
+    matmul_t_isa(isa, a, v, 1, y)
+}
+
+/// y = A^T v — dispatched to the active ISA.
 pub fn matvec_t(a: &ColumnBlockView, v: &[f32], y: &mut [f32]) {
-    matmul_t(a, v, 1, y)
+    matmul_t_isa(simd::active(), a, v, 1, y)
 }
 
 /// Y = A^T V for `k` vectors — naive reference (k naive matvec_t).
@@ -196,13 +272,11 @@ pub fn matmul_t_naive(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
     }
 }
 
-/// Y = A^T V for `k` vectors — 4-row tiles shared across all `k`
+/// Y = A^T V — tiled-scalar variant: 4-row tiles shared across all `k`
 /// accumulations, so each A row is read once per tile instead of once per
 /// class column.
-pub fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+fn matmul_t_scalar(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
     let (m, n) = (a.rows(), a.cols());
-    assert_eq!(v.len(), k * m);
-    assert_eq!(y.len(), k * n);
     y.fill(0.0);
     let mut i = 0;
     while i + 4 <= m {
@@ -230,6 +304,27 @@ pub fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
     }
 }
 
+/// Y = A^T V for `k` vectors under a pinned ISA variant.
+pub fn matmul_t_isa(isa: Isa, a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(v.len(), k * m);
+    assert_eq!(y.len(), k * n);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::matmul_t(a, v, k, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::matmul_t(a, v, k, y) },
+        Isa::Scalar => matmul_t_scalar(a, v, k, y),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// Y = A^T V for `k` vectors — dispatched to the active ISA.
+pub fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    matmul_t_isa(simd::active(), a, v, k, y)
+}
+
 // -------------------------------------------------------------------- gram
 
 /// G += A^T A — naive reference (rank-1 row accumulation with the
@@ -252,13 +347,12 @@ pub fn gram_naive(a: &ColumnBlockView, g: &mut [f32]) {
     mirror_upper(g, n);
 }
 
-/// G += A^T A — 4-row tiles, no per-element zero branch (on dense data the
-/// branch mispredicts almost always and defeats vectorization).  Upper
-/// triangle computed, then mirrored; accumulating across calls composes
-/// (the mirror step only copies upper to lower).
-pub fn gram(a: &ColumnBlockView, g: &mut [f32]) {
+/// G += A^T A — tiled-scalar variant: 4-row tiles, no per-element zero
+/// branch (on dense data the branch mispredicts almost always and defeats
+/// vectorization).  Upper triangle computed, then mirrored; accumulating
+/// across calls composes (the mirror step only copies upper to lower).
+fn gram_scalar(a: &ColumnBlockView, g: &mut [f32]) {
     let n = a.cols();
-    assert_eq!(g.len(), n * n);
     let m = a.rows();
     let mut i = 0;
     while i + 4 <= m {
@@ -286,7 +380,29 @@ pub fn gram(a: &ColumnBlockView, g: &mut [f32]) {
     mirror_upper(g, n);
 }
 
-fn mirror_upper(g: &mut [f32], n: usize) {
+/// G += A^T A under a pinned ISA variant.
+pub fn gram_isa(isa: Isa, a: &ColumnBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    assert_eq!(g.len(), n * n);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::avx2::gram(a, g) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::neon::gram(a, g) },
+        Isa::Scalar => gram_scalar(a, g),
+        #[allow(unreachable_patterns)]
+        other => panic!("isa {} not available on this host", other.name()),
+    }
+}
+
+/// G += A^T A — dispatched to the active ISA.
+pub fn gram(a: &ColumnBlockView, g: &mut [f32]) {
+    gram_isa(simd::active(), a, g)
+}
+
+/// Copy the computed upper triangle onto the lower one (shared by the
+/// scalar and SIMD gram variants; copying only, so accumulation composes).
+pub(crate) fn mirror_upper(g: &mut [f32], n: usize) {
     for j in 0..n {
         for k in (j + 1)..n {
             g[k * n + j] = g[j * n + k];
@@ -314,34 +430,38 @@ mod tests {
     }
 
     #[test]
-    fn matvec_tiled_matches_naive_odd_shapes() {
+    fn matvec_all_isas_match_naive_odd_shapes() {
         let mut rng = Rng::seed_from(1);
-        // deliberately not multiples of the unroll width
-        for (m, n) in [(1, 1), (3, 5), (7, 9), (18, 13), (33, 1)] {
+        // deliberately not multiples of any lane width
+        for (m, n) in [(1, 1), (3, 5), (7, 9), (18, 13), (33, 1), (5, 37)] {
             let data = rand_buf(&mut rng, m * n);
             let a = ColumnBlockView::new(&data, m, n, n, 0);
             let x = rand_buf(&mut rng, n);
             let mut y0 = vec![0.0f32; m];
-            let mut y1 = vec![0.0f32; m];
             matvec_naive(&a, &x, &mut y0);
-            matvec(&a, &x, &mut y1);
-            close(&y0, &y1);
+            for isa in crate::linalg::simd::supported() {
+                let mut y1 = vec![0.0f32; m];
+                matvec_isa(isa, &a, &x, &mut y1);
+                close(&y0, &y1);
+            }
         }
     }
 
     #[test]
-    fn matvec_t_tiled_matches_naive_with_zeros() {
+    fn matvec_t_all_isas_match_naive_with_zeros() {
         let mut rng = Rng::seed_from(2);
-        for (m, n) in [(2, 3), (6, 4), (11, 7), (16, 16)] {
+        for (m, n) in [(2, 3), (6, 4), (11, 7), (16, 16), (9, 33)] {
             let data = rand_buf(&mut rng, m * n);
             let a = ColumnBlockView::new(&data, m, n, n, 0);
             let mut v = rand_buf(&mut rng, m);
             v[0] = 0.0; // exercise the naive skip-zero branch
             let mut y0 = vec![0.0f32; n];
-            let mut y1 = vec![0.0f32; n];
             matvec_t_naive(&a, &v, &mut y0);
-            matvec_t(&a, &v, &mut y1);
-            close(&y0, &y1);
+            for isa in crate::linalg::simd::supported() {
+                let mut y1 = vec![0.0f32; n];
+                matvec_t_isa(isa, &a, &v, &mut y1);
+                close(&y0, &y1);
+            }
         }
     }
 
@@ -354,52 +474,58 @@ mod tests {
         let x = rand_buf(&mut rng, k * n);
         let v = rand_buf(&mut rng, k * m);
         let mut y0 = vec![0.0f32; k * m];
-        let mut y1 = vec![0.0f32; k * m];
         matmul_naive(&a, &x, k, &mut y0);
-        matmul(&a, &x, k, &mut y1);
-        close(&y0, &y1);
         let mut z0 = vec![0.0f32; k * n];
-        let mut z1 = vec![0.0f32; k * n];
         matmul_t_naive(&a, &v, k, &mut z0);
-        matmul_t(&a, &v, k, &mut z1);
-        close(&z0, &z1);
+        for isa in crate::linalg::simd::supported() {
+            let mut y1 = vec![0.0f32; k * m];
+            matmul_isa(isa, &a, &x, k, &mut y1);
+            close(&y0, &y1);
+            let mut z1 = vec![0.0f32; k * n];
+            matmul_t_isa(isa, &a, &v, k, &mut z1);
+            close(&z0, &z1);
+        }
     }
 
     #[test]
-    fn multi_vector_k1_is_bit_identical_to_single() {
+    fn multi_vector_k1_is_bit_identical_to_single_per_isa() {
         let mut rng = Rng::seed_from(4);
         let (m, n) = (13, 9);
         let data = rand_buf(&mut rng, m * n);
         let a = ColumnBlockView::new(&data, m, n, n, 0);
         let x = rand_buf(&mut rng, n);
         let v = rand_buf(&mut rng, m);
-        let mut y0 = vec![0.0f32; m];
-        let mut y1 = vec![0.0f32; m];
-        matvec(&a, &x, &mut y0);
-        matmul(&a, &x, 1, &mut y1);
-        assert_eq!(y0, y1);
-        let mut z0 = vec![0.0f32; n];
-        let mut z1 = vec![0.0f32; n];
-        matvec_t(&a, &v, &mut z0);
-        matmul_t(&a, &v, 1, &mut z1);
-        assert_eq!(z0, z1);
+        for isa in crate::linalg::simd::supported() {
+            let mut y0 = vec![0.0f32; m];
+            let mut y1 = vec![0.0f32; m];
+            matvec_isa(isa, &a, &x, &mut y0);
+            matmul_isa(isa, &a, &x, 1, &mut y1);
+            assert_eq!(y0, y1, "{}", isa.name());
+            let mut z0 = vec![0.0f32; n];
+            let mut z1 = vec![0.0f32; n];
+            matvec_t_isa(isa, &a, &v, &mut z0);
+            matmul_t_isa(isa, &a, &v, 1, &mut z1);
+            assert_eq!(z0, z1, "{}", isa.name());
+        }
     }
 
     #[test]
-    fn gram_tiled_matches_naive_and_accumulates() {
+    fn gram_all_isas_match_naive_and_accumulate() {
         let mut rng = Rng::seed_from(5);
-        for (m, n) in [(1, 3), (5, 4), (10, 6), (19, 8)] {
+        for (m, n) in [(1, 3), (5, 4), (10, 6), (19, 8), (23, 21)] {
             let data = rand_buf(&mut rng, m * n);
             let a = ColumnBlockView::new(&data, m, n, n, 0);
             let mut g0 = vec![0.0f32; n * n];
-            let mut g1 = vec![0.0f32; n * n];
             gram_naive(&a, &mut g0);
-            gram(&a, &mut g1);
-            close(&g0, &g1);
-            // accumulating a second pass doubles every entry
-            gram(&a, &mut g1);
-            let doubled: Vec<f32> = g0.iter().map(|&x| 2.0 * x).collect();
-            close(&doubled, &g1);
+            for isa in crate::linalg::simd::supported() {
+                let mut g1 = vec![0.0f32; n * n];
+                gram_isa(isa, &a, &mut g1);
+                close(&g0, &g1);
+                // accumulating a second pass doubles every entry
+                gram_isa(isa, &a, &mut g1);
+                let doubled: Vec<f32> = g0.iter().map(|&x| 2.0 * x).collect();
+                close(&doubled, &g1);
+            }
         }
     }
 
@@ -415,17 +541,21 @@ mod tests {
             .collect();
         let full = ColumnBlockView::new(&packed, m, w, w, 0);
         let view = ColumnBlockView::new(&data, m, w, n, col0);
+        assert_eq!(view.row_stride(), n);
         let x = rand_buf(&mut rng, w);
-        let mut y0 = vec![0.0f32; m];
-        let mut y1 = vec![0.0f32; m];
-        matvec(&full, &x, &mut y0);
-        matvec(&view, &x, &mut y1);
-        assert_eq!(y0, y1);
-        let mut g0 = vec![0.0f32; w * w];
-        let mut g1 = vec![0.0f32; w * w];
-        gram(&full, &mut g0);
-        gram(&view, &mut g1);
-        assert_eq!(g0, g1);
+        for isa in crate::linalg::simd::supported() {
+            // packed vs strided view: same kernel, same order — exact
+            let mut y0 = vec![0.0f32; m];
+            let mut y1 = vec![0.0f32; m];
+            matvec_isa(isa, &full, &x, &mut y0);
+            matvec_isa(isa, &view, &x, &mut y1);
+            assert_eq!(y0, y1, "{}", isa.name());
+            let mut g0 = vec![0.0f32; w * w];
+            let mut g1 = vec![0.0f32; w * w];
+            gram_isa(isa, &full, &mut g0);
+            gram_isa(isa, &view, &mut g1);
+            assert_eq!(g0, g1, "{}", isa.name());
+        }
     }
 
     #[test]
@@ -434,13 +564,15 @@ mod tests {
         let a = ColumnBlockView::new(&data, 0, 4, 4, 0);
         let x = [1.0f32; 4];
         let mut y: Vec<f32> = Vec::new();
-        matvec(&a, &x, &mut y);
         matvec_naive(&a, &x, &mut y);
-        let mut z = [9.0f32; 4];
-        matvec_t(&a, &[], &mut z);
-        assert_eq!(z, [0.0; 4]); // zero rows: A^T v is the zero vector
-        let mut g = vec![0.0f32; 16];
-        gram(&a, &mut g);
-        assert!(g.iter().all(|&v| v == 0.0));
+        for isa in crate::linalg::simd::supported() {
+            matvec_isa(isa, &a, &x, &mut y);
+            let mut z = [9.0f32; 4];
+            matvec_t_isa(isa, &a, &[], &mut z);
+            assert_eq!(z, [0.0; 4]); // zero rows: A^T v is the zero vector
+            let mut g = vec![0.0f32; 16];
+            gram_isa(isa, &a, &mut g);
+            assert!(g.iter().all(|&v| v == 0.0));
+        }
     }
 }

@@ -3,31 +3,65 @@
 //! extraction (the paper's feature decomposition) and row-tile packing (the
 //! host->device staging copy of the GPU backend).
 //!
-//! The arithmetic lives in [`super::kernels`] (cache-tiled, unroll-by-4);
-//! the methods here are thin wrappers over a whole-matrix
-//! [`ColumnBlockView`], so every caller — packed block or in-place view —
-//! goes through the same deterministic summation order.
+//! The arithmetic lives in [`super::kernels`] (runtime-ISA-dispatched SIMD
+//! with a cache-tiled scalar fallback); the methods here are thin wrappers
+//! over a whole-matrix [`ColumnBlockView`], so every caller — packed block
+//! or in-place view — goes through the same deterministic summation order.
+//!
+//! # Storage layout: 64-byte-aligned, padded stride
+//!
+//! Rows are stored at a *stride* of `cols` rounded up to
+//! [`super::aligned::LANE_F32`] elements in an [`AlignedVec`], so every row
+//! start is 64-byte aligned and full vector lanes never straddle a row
+//! boundary.  The padding is storage only — it is always zero, is never
+//! serialized (PSF1 / LIBSVM writers walk logical rows), never compared
+//! (`PartialEq` walks logical rows), and never read by the kernels (views
+//! carry the logical `cols`).  Dataset generation fills logical elements
+//! in row-major order, so padded storage draws the exact same RNG sequence
+//! as the historical contiguous layout — seeds reproduce bit-for-bit.
 
+use super::aligned::{AlignedVec, LANE_F32};
 use super::kernels::{self, ColumnBlockView};
 
-/// Row-major dense f32 matrix (the data-path precision).
-#[derive(Clone, Debug, PartialEq)]
+/// Row-major dense f32 matrix (the data-path precision) with 64-byte
+/// aligned, stride-padded rows — see the module docs for the layout.
+#[derive(Clone, Debug)]
 pub struct Matrix {
     /// Row count.
     pub rows: usize,
-    /// Column count.
+    /// Column count (logical; the storage stride is padded — see
+    /// [`Matrix::stride`]).
     pub cols: usize,
-    /// Row-major storage: element (i, j) at `data[i * cols + j]`.
-    pub data: Vec<f32>,
+    /// Elements per stored row: `cols` rounded up to a 64-byte lane.
+    stride: usize,
+    /// Aligned storage: element (i, j) at `data[i * stride + j]`.
+    data: AlignedVec,
+}
+
+impl PartialEq for Matrix {
+    /// Logical equality: shape plus row contents; alignment padding is
+    /// ignored.
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && (0..self.rows).all(|i| self.row(i) == other.row(i))
+    }
+}
+
+/// The padded row stride for a logical column count.
+fn padded_stride(cols: usize) -> usize {
+    cols.div_ceil(LANE_F32).max(1) * LANE_F32
 }
 
 impl Matrix {
     /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        let stride = padded_stride(cols);
         Matrix {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            stride,
+            data: AlignedVec::zeroed(rows * stride),
         }
     }
 
@@ -36,34 +70,82 @@ impl Matrix {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
         assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
-        Matrix {
-            rows: r,
-            cols: c,
-            data: rows.into_iter().flatten().collect(),
+        let mut out = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(row);
         }
+        out
+    }
+
+    /// Build from a contiguous row-major buffer of `rows * cols` elements
+    /// (the PSF1 wire layout; repacked into padded storage here).
+    pub fn from_flat(rows: usize, cols: usize, flat: &[f32]) -> Matrix {
+        assert_eq!(flat.len(), rows * cols, "flat buffer shape mismatch");
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(&flat[i * cols..(i + 1) * cols]);
+        }
+        out
+    }
+
+    /// Elements per stored row (`>= cols`, a multiple of the 64-byte
+    /// lane).  This is the `row_stride` every [`ColumnBlockView`] over
+    /// this matrix carries.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
     }
 
     /// Element (i, j).
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
-        self.data[i * self.cols + j]
+        self.data[i * self.stride + j]
     }
 
     /// Mutable element (i, j).
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
-        &mut self.data[i * self.cols + j]
+        &mut self.data[i * self.stride + j]
     }
 
-    /// Row `i` as a slice (length `cols`).
+    /// Row `i` as a slice (length `cols`; padding excluded).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Mutable row `i` (length `cols`; padding excluded).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let s = self.stride;
+        &mut self.data[i * s..i * s + self.cols]
+    }
+
+    /// Apply `f` to every logical element in row-major order (padding
+    /// untouched).  Dataset generators fill and mask through this, so the
+    /// RNG draw order is identical to the historical contiguous layout.
+    pub fn for_each_mut<F: FnMut(&mut f32)>(&mut self, mut f: F) {
+        for i in 0..self.rows {
+            for v in self.row_mut(i) {
+                f(v);
+            }
+        }
+    }
+
+    /// Contiguous row-major copy of the logical elements (no padding) —
+    /// the serialization layout of PSF1 and the shape the XLA staging
+    /// tiles expect.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            out.extend_from_slice(self.row(i));
+        }
+        out
     }
 
     /// Borrowed whole-matrix view for the kernel layer.
     pub fn view(&self) -> ColumnBlockView<'_> {
-        ColumnBlockView::new(&self.data, self.rows, self.cols, self.cols, 0)
+        ColumnBlockView::new(&self.data, self.rows, self.cols, self.stride, 0)
     }
 
     /// Borrowed view of columns `[col0, col0 + width)` — the feature block
@@ -71,7 +153,7 @@ impl Matrix {
     /// [`Matrix::column_block`]).
     pub fn column_block_view(&self, col0: usize, width: usize) -> ColumnBlockView<'_> {
         assert!(col0 + width <= self.cols);
-        ColumnBlockView::new(&self.data, self.rows, width, self.cols, col0)
+        ColumnBlockView::new(&self.data, self.rows, width, self.stride, col0)
     }
 
     /// y = A x  (accumulates in f32, matching the XLA artifacts).
@@ -86,9 +168,8 @@ impl Matrix {
 
     /// G += A^T A, writing into a `cols x cols` row-major buffer.
     ///
-    /// Tiled row accumulation; upper triangle computed then mirrored.
-    /// This is the setup-time op — the per-iteration path only does
-    /// matvecs.
+    /// Upper triangle computed then mirrored.  This is the setup-time op —
+    /// the per-iteration path only does matvecs.
     pub fn gram_accumulate(&self, g: &mut [f32]) {
         kernels::gram(&self.view(), g);
     }
@@ -103,21 +184,23 @@ impl Matrix {
         let mut out = Matrix::zeros(self.rows, width);
         for i in 0..self.rows {
             let src = &self.row(i)[col0..col0 + width];
-            out.data[i * width..(i + 1) * width].copy_from_slice(src);
+            out.row_mut(i).copy_from_slice(src);
         }
         out
     }
 
-    /// Pack rows `[row0, row0+count)` into `buf` (zero-padded to
-    /// `buf.len() / cols` rows).  This is the staging copy a real GPU
-    /// backend performs host->device; the transfer ledger measures it.
+    /// Pack rows `[row0, row0+count)` into `buf` (contiguous `cols`-wide
+    /// rows, zero-padded to `buf.len() / cols` rows).  This is the staging
+    /// copy a real GPU backend performs host->device; the transfer ledger
+    /// measures it.
     pub fn pack_row_tile(&self, row0: usize, count: usize, buf: &mut [f32]) {
         let tile_rows = buf.len() / self.cols;
         assert!(count <= tile_rows);
         assert!(row0 + count <= self.rows);
-        let bytes = count * self.cols;
-        buf[..bytes].copy_from_slice(&self.data[row0 * self.cols..row0 * self.cols + bytes]);
-        buf[bytes..].fill(0.0);
+        for r in 0..count {
+            buf[r * self.cols..(r + 1) * self.cols].copy_from_slice(self.row(row0 + r));
+        }
+        buf[count * self.cols..].fill(0.0);
     }
 
     /// Normalize each column to unit l2 norm (paper §4); returns the norms.
@@ -133,7 +216,7 @@ impl Matrix {
             .map(|&s| if s > 0.0 { (s.sqrt()) as f32 } else { 1.0 })
             .collect();
         for i in 0..self.rows {
-            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            let row = self.row_mut(i);
             for (v, &nrm) in row.iter_mut().zip(&norms) {
                 *v /= nrm;
             }
@@ -153,6 +236,42 @@ mod tests {
             vec![7.0, 8.0, 10.0],
             vec![0.5, -1.0, 2.0],
         ])
+    }
+
+    #[test]
+    fn storage_is_aligned_and_padded() {
+        let a = sample();
+        assert_eq!(a.stride(), LANE_F32);
+        assert_eq!(a.row(0).as_ptr() as usize % 64, 0);
+        assert_eq!(a.row(1).as_ptr() as usize % 64, 0);
+        // wider than one lane: stride rounds up to the next lane
+        let b = Matrix::zeros(2, LANE_F32 + 1);
+        assert_eq!(b.stride(), 2 * LANE_F32);
+        // logical serialization layout is unpadded
+        assert_eq!(a.to_vec().len(), 12);
+        assert_eq!(&a.to_vec()[3..6], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn equality_ignores_padding() {
+        let a = sample();
+        let b = Matrix::from_flat(4, 3, &a.to_vec());
+        assert_eq!(a, b);
+        let mut c = b.clone();
+        *c.at_mut(2, 1) += 1.0;
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn for_each_mut_walks_row_major(){
+        let mut a = Matrix::zeros(2, 3);
+        let mut k = 0.0f32;
+        a.for_each_mut(|v| {
+            *v = k;
+            k += 1.0;
+        });
+        assert_eq!(a.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(a.row(1), &[3.0, 4.0, 5.0]);
     }
 
     #[test]

@@ -5,20 +5,26 @@
 //! and solver-level scalar work run in `f64` for stability.  Everything here
 //! is dependency-free Rust; the "GPU" path goes through `runtime::` instead.
 
+/// 64-byte-aligned f32 storage for the SIMD kernel backend.
+pub mod aligned;
 pub mod cg;
 /// Dense Cholesky factorization of SPD block normal matrices.
 pub mod cholesky;
 /// Compressed-sparse-row storage + kernels (the sparse data path).
 pub mod csr;
-/// Cache-tiled dense kernels with naive reference twins.
+/// Runtime-ISA-dispatched dense kernels with naive reference twins.
 pub mod kernels;
-/// Row-major dense matrix type.
+/// Row-major dense matrix type (aligned, padded-stride storage).
 pub mod matrix;
 /// Vector operations shared by both precisions.
 pub mod ops;
+/// Runtime ISA dispatch + explicit AVX2/NEON kernel variants.
+pub mod simd;
 
+pub use aligned::AlignedVec;
 pub use cg::conjugate_gradient;
 pub use cholesky::Cholesky;
 pub use csr::{CsrBlockView, CsrMatrix};
 pub use kernels::ColumnBlockView;
 pub use matrix::Matrix;
+pub use simd::{Isa, IsaChoice};

@@ -1,0 +1,355 @@
+//! AVX2 + FMA kernel variants (256-bit lanes, 8 f32 per vector).
+//!
+//! Every function here carries `#[target_feature(enable = "avx2,fma")]`
+//! and is therefore `unsafe` to call: the dispatched entry points in
+//! [`crate::linalg::kernels`] / [`crate::linalg::csr`] only route here
+//! after [`super::available`] confirmed the host (so the only obligation
+//! on callers is the feature check, which `super::active()` guarantees).
+//! All memory access is through slice-bounds-checked indices or raw loads
+//! whose ranges are proven by the surrounding `while i + LANES <= n`
+//! loops.
+//!
+//! Determinism: fixed lane counts, fixed accumulator splits, and the
+//! shared scalar tail helpers give every kernel a fixed summation order —
+//! bit-identical run-to-run, with the `k == 1` multi-RHS cases sharing
+//! the single-vector code paths.  FMA contracts multiply-add into one
+//! rounding, so agreement with the scalar variants is the crate-wide
+//! 1e-5 contract, not bit equality.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use crate::linalg::csr::{dot_sparse_tail, CsrBlockView};
+use crate::linalg::kernels::{dot_tail, mirror_upper, ColumnBlockView};
+
+/// Horizontal sum of one 256-bit accumulator, fixed reduction order:
+/// (low128 + high128), then pairwise within the 128-bit half.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+    _mm_cvtss_f32(s)
+}
+
+/// 8-wide FMA dot product with four independent accumulators (32 elements
+/// per iteration), reduced `((a0 + a1) + (a2 + a3))` then the shared
+/// scalar tail.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 16)),
+            _mm256_loadu_ps(pb.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 24)),
+            _mm256_loadu_ps(pb.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    hsum(acc) + dot_tail(&a[i..], &b[i..])
+}
+
+/// y = A x.
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matvec(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides (each row dotted against all `k`
+/// vectors while hot; shares [`dot`] with [`matvec`], so `k == 1` is
+/// bit-identical).
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matmul(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    for i in 0..m {
+        let row = a.row(i);
+        for r in 0..k {
+            y[r * m + i] = dot(row, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// yr[j..] += r0 v0 + r1 v1 + r2 v2 + r3 v3 over one row quad, 8-wide
+/// with a scalar tail (shared by the tiled loop of [`matmul_t`]).
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy4(yr: &mut [f32], rows: [&[f32]; 4], vs: [f32; 4]) {
+    let n = yr.len();
+    let b0 = _mm256_set1_ps(vs[0]);
+    let b1 = _mm256_set1_ps(vs[1]);
+    let b2 = _mm256_set1_ps(vs[2]);
+    let b3 = _mm256_set1_ps(vs[3]);
+    let py = yr.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let mut t = _mm256_loadu_ps(py.add(j) as *const f32);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[0].as_ptr().add(j)), b0, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[1].as_ptr().add(j)), b1, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[2].as_ptr().add(j)), b2, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[3].as_ptr().add(j)), b3, t);
+        _mm256_storeu_ps(py.add(j), t);
+        j += 8;
+    }
+    while j < n {
+        yr[j] += rows[0][j] * vs[0] + rows[1][j] * vs[1] + rows[2][j] * vs[2] + rows[3][j] * vs[3];
+        j += 1;
+    }
+}
+
+/// Y = A^T V for `k` vectors (4-row tiles shared across all `k`
+/// accumulations; `matvec_t` is the `k == 1` case).
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    y.fill(0.0);
+    let mut i = 0;
+    while i + 4 <= m {
+        let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        for r in 0..k {
+            let vr = &v[r * m..(r + 1) * m];
+            let vs = [vr[i], vr[i + 1], vr[i + 2], vr[i + 3]];
+            axpy4(&mut y[r * n..(r + 1) * n], rows, vs);
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for r in 0..k {
+            let vi = v[r * m + i];
+            let b = _mm256_set1_ps(vi);
+            let yr = &mut y[r * n..(r + 1) * n];
+            let py = yr.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let t = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                    b,
+                    _mm256_loadu_ps(py.add(j) as *const f32),
+                );
+                _mm256_storeu_ps(py.add(j), t);
+                j += 8;
+            }
+            while j < n {
+                yr[j] += row[j] * vi;
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// G += A^T A (upper triangle computed 8-wide then mirrored; accumulation
+/// across calls composes exactly like the scalar variant).
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn gram(a: &ColumnBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    let m = a.rows();
+    let mut i = 0;
+    while i + 4 <= m {
+        let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        for j in 0..n {
+            let vs = [rows[0][j], rows[1][j], rows[2][j], rows[3][j]];
+            axpy4_from(&mut g[j * n..(j + 1) * n], j, rows, vs);
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for j in 0..n {
+            let aj = row[j];
+            let b = _mm256_set1_ps(aj);
+            let grow = &mut g[j * n..(j + 1) * n];
+            let pg = grow.as_mut_ptr();
+            let mut kk = j;
+            while kk + 8 <= n {
+                let t = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(kk)),
+                    b,
+                    _mm256_loadu_ps(pg.add(kk) as *const f32),
+                );
+                _mm256_storeu_ps(pg.add(kk), t);
+                kk += 8;
+            }
+            while kk < n {
+                grow[kk] += aj * row[kk];
+                kk += 1;
+            }
+        }
+        i += 1;
+    }
+    mirror_upper(g, n);
+}
+
+/// [`axpy4`] starting at column `j0` (the triangular gram inner loop).
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy4_from(grow: &mut [f32], j0: usize, rows: [&[f32]; 4], vs: [f32; 4]) {
+    let n = grow.len();
+    let b0 = _mm256_set1_ps(vs[0]);
+    let b1 = _mm256_set1_ps(vs[1]);
+    let b2 = _mm256_set1_ps(vs[2]);
+    let b3 = _mm256_set1_ps(vs[3]);
+    let pg = grow.as_mut_ptr();
+    let mut kk = j0;
+    while kk + 8 <= n {
+        let mut t = _mm256_loadu_ps(pg.add(kk) as *const f32);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[0].as_ptr().add(kk)), b0, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[1].as_ptr().add(kk)), b1, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[2].as_ptr().add(kk)), b2, t);
+        t = _mm256_fmadd_ps(_mm256_loadu_ps(rows[3].as_ptr().add(kk)), b3, t);
+        _mm256_storeu_ps(pg.add(kk), t);
+        kk += 8;
+    }
+    while kk < n {
+        grow[kk] +=
+            rows[0][kk] * vs[0] + rows[1][kk] * vs[1] + rows[2][kk] * vs[2] + rows[3][kk] * vs[3];
+        kk += 1;
+    }
+}
+
+// ---------------------------------------------------------------- CSR
+
+/// Gather-based sparse row dot: 8 column indices loaded, rebased by
+/// `col0`, gathered from `x`, FMA'd against the stored values.  On padded
+/// runs (see `CsrBlockView::row_lanes`) the loop consumes the zero-value
+/// padding in full lanes and the shared tail is empty.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn sparse_dot(cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
+    let n = cols.len();
+    debug_assert_eq!(n, vals.len());
+    let c0 = _mm256_set1_epi32(col0 as i32);
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let idx = _mm256_loadu_si256(cols.as_ptr().add(i) as *const __m256i);
+        let idx = _mm256_sub_epi32(idx, c0);
+        let xv = _mm256_i32gather_ps::<4>(x.as_ptr(), idx);
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(vals.as_ptr().add(i)), xv, acc);
+        i += 8;
+    }
+    hsum(acc) + dot_sparse_tail(&cols[i..], &vals[i..], col0, x)
+}
+
+/// y = A x over a CSR block view.
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn spmv(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    let col0 = a.col0();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = a.row_lanes(i);
+        *yi = sparse_dot(cols, vals, col0, x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides (shares [`sparse_dot`] with [`spmv`],
+/// so `k == 1` is bit-identical).
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    let col0 = a.col0();
+    for i in 0..m {
+        let (cols, vals) = a.row_lanes(i);
+        for r in 0..k {
+            y[r * m + i] = sparse_dot(cols, vals, col0, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// Y = A^T V for `k` vectors: values scaled 8 at a time, then scattered
+/// (AVX2 has gathers but no scatters, so the stores stay scalar — the
+/// products are what vectorizes).
+///
+/// # Safety
+/// The host must support AVX2 and FMA — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    let col0 = a.col0();
+    y.fill(0.0);
+    let mut prod = [0.0f32; 8];
+    for i in 0..m {
+        let (cols, vals) = a.row(i);
+        let len = cols.len();
+        if len == 0 {
+            continue;
+        }
+        for r in 0..k {
+            let vi = v[r * m + i];
+            let b = _mm256_set1_ps(vi);
+            let yr = &mut y[r * n..(r + 1) * n];
+            let mut j = 0usize;
+            while j + 8 <= len {
+                let p = _mm256_mul_ps(_mm256_loadu_ps(vals.as_ptr().add(j)), b);
+                _mm256_storeu_ps(prod.as_mut_ptr(), p);
+                for (t, &pt) in prod.iter().enumerate() {
+                    yr[(cols[j + t] - col0) as usize] += pt;
+                }
+                j += 8;
+            }
+            while j < len {
+                yr[(cols[j] - col0) as usize] += vals[j] * vi;
+                j += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Runtime ISA dispatch for the explicit-SIMD kernel backend.
+//!
+//! The data-touching kernels of the inner sweep (`matvec`, `matvec_t`,
+//! `matmul`, `matmul_t`, `gram`, and the CSR `spmv` family) each exist in
+//! up to three variants:
+//!
+//!   * **scalar** — the cache-tiled unroll-by-4 kernels of
+//!     [`crate::linalg::kernels`] / [`crate::linalg::csr`]: the guaranteed
+//!     fallback, bit-identical to the historical implementation;
+//!   * **avx2** — 256-bit AVX2 + FMA (`std::arch::x86_64`), selected at
+//!     runtime via `is_x86_feature_detected!`;
+//!   * **neon** — 128-bit NEON (`std::arch::aarch64`), always available on
+//!     aarch64 (NEON is architecturally mandatory there).
+//!
+//! # Selection
+//!
+//! The active ISA is resolved **once** per process, in priority order:
+//!
+//!   1. a forced override installed by [`select`] — the `platform.isa`
+//!      JSON knob / `psfit --isa` CLI flag route here;
+//!   2. the `PSFIT_ISA` environment variable (`auto|scalar|avx2|neon`,
+//!      read once; unusable values warn on stderr and fall back to auto) —
+//!      the CI matrix and the forced-ISA parity tests use this;
+//!   3. auto-detection: the widest variant the host supports.
+//!
+//! Every dispatched kernel entry point reads [`active`] (one relaxed
+//! atomic load), so a process never mixes ISAs mid-solve unless [`select`]
+//! is explicitly called between solves (the solver benchmark does exactly
+//! that to time scalar vs SIMD in one process).
+//!
+//! # Determinism and tolerance
+//!
+//! Each variant has a fixed internal summation order, so any *single* ISA
+//! is bit-identical run-to-run, at any worker-pool width, and between the
+//! `k == 1` multi-RHS case and its single-vector kernel.  *Across* ISAs
+//! the orders differ (and FMA contracts `a*b + c` into one rounding), so
+//! cross-ISA agreement is the crate-wide kernel contract
+//! `|a - b| <= 1e-5 * max(1, |value|)` — the same tolerance as the
+//! `_naive` twins, pinned by `tests/simd.rs`.
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// An instruction-set variant of the kernel backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Cache-tiled unroll-by-4 scalar kernels (the guaranteed fallback).
+    Scalar,
+    /// 256-bit AVX2 + FMA (x86_64 only, runtime-detected).
+    Avx2,
+    /// 128-bit NEON (aarch64 only).
+    Neon,
+}
+
+impl Isa {
+    /// Canonical lowercase name (inverse of [`Isa::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse an ISA name (`scalar|avx2|neon`).
+    pub fn parse(s: &str) -> anyhow::Result<Isa> {
+        match s {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "neon" => Ok(Isa::Neon),
+            other => anyhow::bail!("unknown isa `{other}` (scalar|avx2|neon)"),
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Isa> {
+        match v {
+            1 => Some(Isa::Scalar),
+            2 => Some(Isa::Avx2),
+            3 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The `platform.isa` / `PSFIT_ISA` setting: pick automatically or force
+/// one variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IsaChoice {
+    /// Use the widest variant the host supports (the default).
+    #[default]
+    Auto,
+    /// Force the named variant; [`select`] rejects it when unavailable.
+    Force(Isa),
+}
+
+impl IsaChoice {
+    /// Parse a choice (`auto|scalar|avx2|neon`).
+    pub fn parse(s: &str) -> anyhow::Result<IsaChoice> {
+        if s == "auto" {
+            Ok(IsaChoice::Auto)
+        } else {
+            Ok(IsaChoice::Force(Isa::parse(s).map_err(|_| {
+                anyhow::anyhow!("unknown isa `{s}` (auto|scalar|avx2|neon)")
+            })?))
+        }
+    }
+
+    /// Canonical name (inverse of [`IsaChoice::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsaChoice::Auto => "auto",
+            IsaChoice::Force(isa) => isa.name(),
+        }
+    }
+}
+
+/// Whether this host can execute the given variant.
+pub fn available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// The widest variant the host supports.
+pub fn detect_best() -> Isa {
+    if available(Isa::Avx2) {
+        Isa::Avx2
+    } else if available(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Every variant this host can execute (always includes `Scalar`) — the
+/// iteration set of the forced-ISA parity tests.
+pub fn supported() -> Vec<Isa> {
+    let mut out = vec![Isa::Scalar];
+    for isa in [Isa::Avx2, Isa::Neon] {
+        if available(isa) {
+            out.push(isa);
+        }
+    }
+    out
+}
+
+/// Forced override installed by [`select`]: 0 = none, else `Isa + 1`.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The `PSFIT_ISA` / auto-detected baseline, resolved once per process.
+static BASELINE: OnceLock<Isa> = OnceLock::new();
+
+fn baseline() -> Isa {
+    *BASELINE.get_or_init(|| match std::env::var("PSFIT_ISA") {
+        Err(_) => detect_best(),
+        Ok(raw) => match IsaChoice::parse(&raw) {
+            Ok(IsaChoice::Auto) => detect_best(),
+            Ok(IsaChoice::Force(isa)) if available(isa) => isa,
+            Ok(IsaChoice::Force(isa)) => {
+                eprintln!(
+                    "warning: PSFIT_ISA={} is not available on this host; using {}",
+                    isa.name(),
+                    detect_best().name()
+                );
+                detect_best()
+            }
+            Err(_) => {
+                eprintln!(
+                    "warning: invalid PSFIT_ISA value `{raw}` (auto|scalar|avx2|neon); using {}",
+                    detect_best().name()
+                );
+                detect_best()
+            }
+        },
+    })
+}
+
+/// The ISA the dispatched kernel entry points currently route to.
+#[inline]
+pub fn active() -> Isa {
+    match Isa::from_u8(OVERRIDE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => baseline(),
+    }
+}
+
+/// Install the process-wide ISA choice (the `platform.isa` knob).
+///
+/// `Auto` clears any previous override, restoring the `PSFIT_ISA` /
+/// auto-detect baseline.  Forcing an unavailable variant is an error and
+/// leaves the current selection untouched.  Returns the now-active ISA.
+///
+/// This is a process-global switch intended for startup (the CLI calls it
+/// once after parsing config) and for single-threaded A/B timing (the
+/// solver benchmark); it is not meant to be raced against in-flight
+/// solves.
+pub fn select(choice: IsaChoice) -> anyhow::Result<Isa> {
+    match choice {
+        IsaChoice::Auto => {
+            OVERRIDE.store(0, Ordering::Relaxed);
+            Ok(baseline())
+        }
+        IsaChoice::Force(isa) => {
+            anyhow::ensure!(
+                available(isa),
+                "isa `{}` is not available on this host (supported: {})",
+                isa.name(),
+                supported()
+                    .iter()
+                    .map(|i| i.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            OVERRIDE.store(isa.to_u8(), Ordering::Relaxed);
+            Ok(isa)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["scalar", "avx2", "neon"] {
+            assert_eq!(Isa::parse(s).unwrap().name(), s);
+        }
+        assert!(Isa::parse("sse9").is_err());
+        assert_eq!(IsaChoice::parse("auto").unwrap(), IsaChoice::Auto);
+        assert_eq!(
+            IsaChoice::parse("scalar").unwrap(),
+            IsaChoice::Force(Isa::Scalar)
+        );
+        assert!(IsaChoice::parse("wide").is_err());
+        assert_eq!(IsaChoice::default().name(), "auto");
+    }
+
+    #[test]
+    fn scalar_is_always_supported() {
+        assert!(available(Isa::Scalar));
+        assert!(supported().contains(&Isa::Scalar));
+        assert!(supported().contains(&detect_best()));
+    }
+
+    // select()/active() plumbing is pinned in tests/simd.rs, which owns a
+    // mutex around the process-global override; unit tests here leave the
+    // global state untouched so parallel in-crate tests stay deterministic.
+}

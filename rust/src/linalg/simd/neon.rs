@@ -1,0 +1,280 @@
+//! NEON kernel variants (128-bit lanes, 4 f32 per vector; aarch64 only).
+//!
+//! NEON is architecturally mandatory on aarch64, so [`super::available`]
+//! always reports it there and these functions are selected by default.
+//! The structure mirrors [`super::avx2`] at half the lane width: fixed
+//! accumulator splits, shared scalar tail helpers, and `k == 1` multi-RHS
+//! cases sharing the single-vector code paths — same determinism contract,
+//! same 1e-5 cross-variant tolerance (`vfmaq_f32` is a fused
+//! multiply-add, like FMA3).
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use crate::linalg::csr::{dot_sparse_tail, CsrBlockView};
+use crate::linalg::kernels::{dot_tail, mirror_upper, ColumnBlockView};
+
+/// 4-wide FMA dot product with four independent accumulators (16 elements
+/// per iteration), reduced `((a0 + a1) + (a2 + a3))` then the shared
+/// scalar tail.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        i += 4;
+    }
+    let acc = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+    vaddvq_f32(acc) + dot_tail(&a[i..], &b[i..])
+}
+
+/// y = A x.
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn matvec(a: &ColumnBlockView, x: &[f32], y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides (shares [`dot`] with [`matvec`], so
+/// `k == 1` is bit-identical).
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn matmul(a: &ColumnBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    for i in 0..m {
+        let row = a.row(i);
+        for r in 0..k {
+            y[r * m + i] = dot(row, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// yr[j..] += r0 v0 + r1 v1 + r2 v2 + r3 v3 over one row quad, 4-wide
+/// with a scalar tail.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn axpy4_from(yr: &mut [f32], j0: usize, rows: [&[f32]; 4], vs: [f32; 4]) {
+    let n = yr.len();
+    let b0 = vdupq_n_f32(vs[0]);
+    let b1 = vdupq_n_f32(vs[1]);
+    let b2 = vdupq_n_f32(vs[2]);
+    let b3 = vdupq_n_f32(vs[3]);
+    let py = yr.as_mut_ptr();
+    let mut j = j0;
+    while j + 4 <= n {
+        let mut t = vld1q_f32(py.add(j) as *const f32);
+        t = vfmaq_f32(t, vld1q_f32(rows[0].as_ptr().add(j)), b0);
+        t = vfmaq_f32(t, vld1q_f32(rows[1].as_ptr().add(j)), b1);
+        t = vfmaq_f32(t, vld1q_f32(rows[2].as_ptr().add(j)), b2);
+        t = vfmaq_f32(t, vld1q_f32(rows[3].as_ptr().add(j)), b3);
+        vst1q_f32(py.add(j), t);
+        j += 4;
+    }
+    while j < n {
+        yr[j] += rows[0][j] * vs[0] + rows[1][j] * vs[1] + rows[2][j] * vs[2] + rows[3][j] * vs[3];
+        j += 1;
+    }
+}
+
+/// yr[j0..] += row * v, 4-wide with a scalar tail.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn axpy1_from(yr: &mut [f32], j0: usize, row: &[f32], v: f32) {
+    let n = yr.len();
+    let b = vdupq_n_f32(v);
+    let py = yr.as_mut_ptr();
+    let mut j = j0;
+    while j + 4 <= n {
+        let t = vfmaq_f32(vld1q_f32(py.add(j) as *const f32), vld1q_f32(row.as_ptr().add(j)), b);
+        vst1q_f32(py.add(j), t);
+        j += 4;
+    }
+    while j < n {
+        yr[j] += row[j] * v;
+        j += 1;
+    }
+}
+
+/// Y = A^T V for `k` vectors (4-row tiles shared across all `k`
+/// accumulations; `matvec_t` is the `k == 1` case).
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn matmul_t(a: &ColumnBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    y.fill(0.0);
+    let mut i = 0;
+    while i + 4 <= m {
+        let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        for r in 0..k {
+            let vr = &v[r * m..(r + 1) * m];
+            let vs = [vr[i], vr[i + 1], vr[i + 2], vr[i + 3]];
+            axpy4_from(&mut y[r * n..(r + 1) * n], 0, rows, vs);
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for r in 0..k {
+            axpy1_from(&mut y[r * n..(r + 1) * n], 0, row, v[r * m + i]);
+        }
+        i += 1;
+    }
+}
+
+/// G += A^T A (upper triangle computed 4-wide then mirrored; accumulation
+/// across calls composes exactly like the scalar variant).
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn gram(a: &ColumnBlockView, g: &mut [f32]) {
+    let n = a.cols();
+    let m = a.rows();
+    let mut i = 0;
+    while i + 4 <= m {
+        let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        for j in 0..n {
+            let vs = [rows[0][j], rows[1][j], rows[2][j], rows[3][j]];
+            axpy4_from(&mut g[j * n..(j + 1) * n], j, rows, vs);
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = a.row(i);
+        for j in 0..n {
+            axpy1_from(&mut g[j * n..(j + 1) * n], j, row, row[j]);
+        }
+        i += 1;
+    }
+    mirror_upper(g, n);
+}
+
+// ---------------------------------------------------------------- CSR
+
+/// Sparse row dot with a manual 4-entry gather (NEON has no hardware
+/// gather): values loaded as one lane, the four `x` operands assembled on
+/// the stack, FMA'd, shared tail for the remainder.  Padded runs (see
+/// `CsrBlockView::row_lanes`) land entirely in full lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn sparse_dot(cols: &[u32], vals: &[f32], col0: u32, x: &[f32]) -> f32 {
+    let n = cols.len();
+    debug_assert_eq!(n, vals.len());
+    let mut acc = vdupq_n_f32(0.0);
+    let mut gather = [0.0f32; 4];
+    let mut i = 0usize;
+    while i + 4 <= n {
+        gather[0] = x[(cols[i] - col0) as usize];
+        gather[1] = x[(cols[i + 1] - col0) as usize];
+        gather[2] = x[(cols[i + 2] - col0) as usize];
+        gather[3] = x[(cols[i + 3] - col0) as usize];
+        acc = vfmaq_f32(acc, vld1q_f32(vals.as_ptr().add(i)), vld1q_f32(gather.as_ptr()));
+        i += 4;
+    }
+    vaddvq_f32(acc) + dot_sparse_tail(&cols[i..], &vals[i..], col0, x)
+}
+
+/// y = A x over a CSR block view.
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn spmv(a: &CsrBlockView, x: &[f32], y: &mut [f32]) {
+    let col0 = a.col0();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = a.row_lanes(i);
+        *yi = sparse_dot(cols, vals, col0, x);
+    }
+}
+
+/// Y = A X for `k` right-hand sides (shares [`sparse_dot`] with [`spmv`],
+/// so `k == 1` is bit-identical).
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn spmm(a: &CsrBlockView, x: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    let col0 = a.col0();
+    for i in 0..m {
+        let (cols, vals) = a.row_lanes(i);
+        for r in 0..k {
+            y[r * m + i] = sparse_dot(cols, vals, col0, &x[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// Y = A^T V for `k` vectors: values scaled 4 at a time, scattered with
+/// scalar stores (no scatter instruction on NEON either).
+///
+/// # Safety
+/// The host must support NEON — guaranteed when routed here by the
+/// dispatchers after a [`super::available`] check; assert it yourself on
+/// direct calls.
+#[target_feature(enable = "neon")]
+pub unsafe fn spmm_t(a: &CsrBlockView, v: &[f32], k: usize, y: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    let col0 = a.col0();
+    y.fill(0.0);
+    let mut prod = [0.0f32; 4];
+    for i in 0..m {
+        let (cols, vals) = a.row(i);
+        let len = cols.len();
+        if len == 0 {
+            continue;
+        }
+        for r in 0..k {
+            let vi = v[r * m + i];
+            let b = vdupq_n_f32(vi);
+            let yr = &mut y[r * n..(r + 1) * n];
+            let mut j = 0usize;
+            while j + 4 <= len {
+                vst1q_f32(prod.as_mut_ptr(), vmulq_f32(vld1q_f32(vals.as_ptr().add(j)), b));
+                for (t, &pt) in prod.iter().enumerate() {
+                    yr[(cols[j + t] - col0) as usize] += pt;
+                }
+                j += 4;
+            }
+            while j < len {
+                yr[(cols[j] - col0) as usize] += vals[j] * vi;
+                j += 1;
+            }
+        }
+    }
+}

@@ -10,8 +10,10 @@
 //!   fig3    — regenerate Figure 3 (sample scaling)
 //!   fig4    — regenerate Figure 4 (CPU<->GPU transfer time)
 //!   straggler — sync vs async coordination under a 1x-16x slow node
-//!   bench   — kernel-layer micro-benchmarks (naive vs tiled, serial vs
-//!             pooled); writes BENCH_kernels.json
+//!   bench   — kernel micro-benchmarks (scalar vs SIMD, serial vs
+//!             pooled); writes BENCH_kernels.json.  With --solver:
+//!             end-to-end ADMM rounds/sec + time-to-tolerance; writes
+//!             BENCH_solver.json
 //!   pathbench — warm vs cold path sweeps across the density grid;
 //!             writes BENCH_path.json
 //!   info    — print artifact manifest + platform info
@@ -114,6 +116,22 @@ fn run() -> anyhow::Result<()> {
             harness::emit(&table, opts.out.as_deref())
         }
         Some("bench") => {
+            if let Some(isa) = args.opt("isa") {
+                let active =
+                    psfit::linalg::simd::select(psfit::linalg::simd::IsaChoice::parse(isa)?)?;
+                eprintln!("kernel isa:  {} (requested {isa})", active.name());
+            }
+            if args.flag("solver") {
+                // end-to-end solver benchmark -> BENCH_solver.json
+                let opts = harness::solver::SolverBenchOpts {
+                    quick: args.flag("quick"),
+                    json: args.opt("json").unwrap_or("BENCH_solver.json").to_string(),
+                    out: args.opt("out").map(String::from),
+                };
+                args.reject_unknown()?;
+                let table = harness::solver_bench(&opts)?;
+                return harness::emit(&table, opts.out.as_deref());
+            }
             let opts = harness::kernels::KernelBenchOpts {
                 quick: args.flag("quick"),
                 threads: args.get("threads", 0)?,
@@ -144,8 +162,10 @@ fn run() -> anyhow::Result<()> {
             eprintln!("        psfit train --libsvm data.svm --kappa 50    (real sparse data)");
             eprintln!("        psfit path --budgets 200,100,50     (warm-started sparsity path)");
             eprintln!("        psfit path --budgets 64,32 --rho-ladder 2.0,1.0 --checkpoint run.psc");
+            eprintln!("        psfit train --isa scalar            (pin the kernel ISA; also PSFIT_ISA)");
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
             eprintln!("        psfit bench --quick                 (writes BENCH_kernels.json)");
+            eprintln!("        psfit bench --solver --quick        (writes BENCH_solver.json)");
             eprintln!("        psfit pathbench --quick             (writes BENCH_path.json)");
             Ok(())
         }
@@ -180,6 +200,12 @@ fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<S
     }
     cfg.platform.sparse_threshold =
         args.get("sparse-threshold", cfg.platform.sparse_threshold)?;
+    if let Some(isa) = args.opt("isa") {
+        cfg.platform.isa = psfit::linalg::simd::IsaChoice::parse(isa)?;
+    }
+    // install the process-wide kernel ISA now — "selected once at startup"
+    let active = psfit::linalg::simd::select(cfg.platform.isa)?;
+    eprintln!("kernel isa:  {} (requested {})", active.name(), cfg.platform.isa.name());
     cfg.platform.validate()?;
     cfg.solver.rho_c = args.get("rho-c", cfg.solver.rho_c)?;
     cfg.solver.rho_b = args.get("rho-b", cfg.solver.rho_b)?;

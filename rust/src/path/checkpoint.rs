@@ -113,14 +113,16 @@ pub fn problem_hash(ds: &Dataset, cfg: &Config, points: &[PathPoint]) -> u64 {
         }
         match &shard.data {
             crate::data::ShardData::Dense(a) => {
-                let step = (a.data.len() / 1024).max(1);
-                for &v in a.data.iter().step_by(step) {
+                // logical row-major elements (padding excluded), so the
+                // hash matches the historical contiguous layout bit-exactly
+                let step = ((a.rows * a.cols) / 1024).max(1);
+                for &v in (0..a.rows).flat_map(|i| a.row(i)).step_by(step) {
                     h.f32(v);
                 }
             }
             crate::data::ShardData::Csr(c) => {
-                let step = (c.vals.len() / 1024).max(1);
-                for &v in c.vals.iter().step_by(step) {
+                let step = (c.nnz() / 1024).max(1);
+                for v in c.values().step_by(step) {
                     h.f32(v);
                 }
             }

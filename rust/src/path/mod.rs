@@ -314,6 +314,10 @@ pub fn run_path(
     let mut cluster: Option<Box<dyn Cluster>> = None;
     let mut prev_ledger = TransferLedger::default();
     let mut final_result = None;
+    // one allocation pool for the whole sweep: every point after the
+    // first reuses the solver's consensus/polish/objective temporaries
+    // (the avoided bytes ride each solve's net_alloc_saved_bytes)
+    let mut scratch = admm::SolveScratch::default();
     let end = pcfg.limit.map(|l| l.min(points.len())).unwrap_or(points.len());
 
     for pt in points.iter().take(end).skip(resumed_points) {
@@ -346,10 +350,11 @@ pub fn run_path(
             }
             _ => GlobalState::new(dim),
         };
-        let res = admm::solve_from(cl, &mut global, &pc, Some(ds), opts)?;
+        let res = admm::solve_from_with(cl, &mut global, &pc, Some(ds), opts, &mut scratch)?;
 
         let ledger = res.transfers.clone();
-        let objective = admm::solver::objective(ds, loss.as_ref(), pc.solver.gamma, &res.x);
+        let objective =
+            admm::solver::objective_with(ds, loss.as_ref(), pc.solver.gamma, &res.x, &mut scratch);
         completed.push(PathPointRecord {
             kappa: pt.kappa,
             rho_c: pt.rho_c,

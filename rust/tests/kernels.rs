@@ -13,7 +13,7 @@ use psfit::util::testkit::{assert_close_f32, run_prop, PropConfig};
 
 fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     let mut m = Matrix::zeros(rows, cols);
-    rng.fill_normal_f32(&mut m.data);
+    m.for_each_mut(|v| *v = rng.normal_f32());
     m
 }
 

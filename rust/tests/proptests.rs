@@ -259,19 +259,13 @@ fn prop_row_tile_padding_preserves_products() {
         let m = size + 2;
         let n = 1 + rng.below(16);
         let mut a = Matrix::zeros(m, n);
-        for v in a.data.iter_mut() {
-            *v = rng.normal_f32();
-        }
+        a.for_each_mut(|v| *v = rng.normal_f32());
         let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
         // padded tile
         let tile_rows = m + rng.below(8) + 1;
         let mut buf = vec![f32::NAN; tile_rows * n];
         a.pack_row_tile(0, m, &mut buf);
-        let padded = Matrix {
-            rows: tile_rows,
-            cols: n,
-            data: buf,
-        };
+        let padded = Matrix::from_flat(tile_rows, n, &buf);
         let mut y_pad = vec![0.0f32; tile_rows];
         padded.matvec(&x, &mut y_pad);
         let mut y = vec![0.0f32; m];

@@ -1,0 +1,281 @@
+//! SIMD kernel backend invariants.
+//!
+//! * Forced-ISA parity: every supported variant (scalar tiled, AVX2,
+//!   NEON) agrees with the `_naive` reference twins — and with every
+//!   other variant — within the crate-wide 1e-5 contract, across
+//!   unaligned tails, non-multiple-of-lane widths, empty and strided
+//!   blocks, and dense-vs-CSR storage.
+//! * Dispatch plumbing: the `platform.isa` / `PSFIT_ISA` override knob
+//!   (`simd::select`) actually selects the named path, rejects variants
+//!   the host lacks, and `auto` restores the baseline.
+//! * End-to-end: whole solves under each ISA recover the identical
+//!   support and objectives within the same contract.
+//!
+//! Tests that flip the process-global ISA override serialize on a local
+//! mutex and restore the previous selection; everything else pins
+//! variants through the side-effect-free `*_isa` entry points.
+
+use std::sync::Mutex;
+
+use psfit::config::Config;
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::linalg::csr::{self, CsrMatrix};
+use psfit::linalg::kernels;
+use psfit::linalg::simd::{self, Isa, IsaChoice};
+use psfit::linalg::Matrix;
+use psfit::util::rng::Rng;
+use psfit::util::testkit::{assert_close_f32, run_prop, PropConfig};
+
+/// Serializes the tests that mutate the process-global ISA override.
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores the pre-test ISA selection on drop (panic-safe).
+struct IsaGuard(Isa);
+
+impl IsaGuard {
+    fn hold() -> IsaGuard {
+        IsaGuard(simd::active())
+    }
+}
+
+impl Drop for IsaGuard {
+    fn drop(&mut self) {
+        let _ = simd::select(IsaChoice::Force(self.0));
+    }
+}
+
+fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    m.for_each_mut(|v| *v = rng.normal_f32());
+    m
+}
+
+fn randvec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+/// Shapes that deliberately straddle every lane width in play (4-wide
+/// scalar unroll, 4-wide NEON, 8/32-wide AVX2): zero rows included.
+fn rand_shape(rng: &mut Rng, size: usize) -> (usize, usize) {
+    let rows = rng.below(2 * size + 5); // 0 included
+    let cols = 1 + rng.below(size + 37); // crosses the 8- and 32-lane edges
+    (rows, cols)
+}
+
+#[test]
+fn prop_forced_isa_dense_kernels_match_naive() {
+    run_prop("simd_dense_parity", PropConfig::default(), |rng, size| {
+        let (rows, cols) = rand_shape(rng, size);
+        let a = randmat(rng, rows, cols);
+        // random strided sub-block, so SIMD rows start at unaligned
+        // offsets of the parent stride
+        let w = 1 + rng.below(cols);
+        let col0 = rng.below(cols - w + 1);
+        let view = a.column_block_view(col0, w);
+        let k = 1 + rng.below(3);
+
+        let x = randvec(rng, w);
+        let v = randvec(rng, rows);
+        let xk = randvec(rng, k * w);
+        let vk = randvec(rng, k * rows);
+
+        let mut y_ref = vec![0.0f32; rows];
+        kernels::matvec_naive(&view, &x, &mut y_ref);
+        let mut yt_ref = vec![0.0f32; w];
+        kernels::matvec_t_naive(&view, &v, &mut yt_ref);
+        let mut g_ref = vec![0.0f32; w * w];
+        kernels::gram_naive(&view, &mut g_ref);
+        let mut yk_ref = vec![0.0f32; k * rows];
+        kernels::matmul_naive(&view, &xk, k, &mut yk_ref);
+        let mut vk_ref = vec![0.0f32; k * w];
+        kernels::matmul_t_naive(&view, &vk, k, &mut vk_ref);
+
+        for isa in simd::supported() {
+            let mut y = vec![0.0f32; rows];
+            kernels::matvec_isa(isa, &view, &x, &mut y);
+            assert_close_f32(&y_ref, &y, 1e-5).map_err(|e| format!("{} matvec: {e}", isa.name()))?;
+            let mut yt = vec![0.0f32; w];
+            kernels::matvec_t_isa(isa, &view, &v, &mut yt);
+            assert_close_f32(&yt_ref, &yt, 1e-5)
+                .map_err(|e| format!("{} matvec_t: {e}", isa.name()))?;
+            let mut g = vec![0.0f32; w * w];
+            kernels::gram_isa(isa, &view, &mut g);
+            assert_close_f32(&g_ref, &g, 1e-5).map_err(|e| format!("{} gram: {e}", isa.name()))?;
+            let mut yk = vec![0.0f32; k * rows];
+            kernels::matmul_isa(isa, &view, &xk, k, &mut yk);
+            assert_close_f32(&yk_ref, &yk, 1e-5)
+                .map_err(|e| format!("{} matmul: {e}", isa.name()))?;
+            let mut vk_out = vec![0.0f32; k * w];
+            kernels::matmul_t_isa(isa, &view, &vk, k, &mut vk_out);
+            assert_close_f32(&vk_ref, &vk_out, 1e-5)
+                .map_err(|e| format!("{} matmul_t: {e}", isa.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forced_isa_csr_kernels_match_dense_scalar() {
+    run_prop(
+        "simd_csr_parity",
+        PropConfig {
+            cases: 96,
+            max_size: 32,
+            ..Default::default()
+        },
+        |rng, size| {
+            let (rows, cols) = rand_shape(rng, size);
+            let density = [0.0, 0.05, 0.3, 1.0][rng.below(4)];
+            let mut a = randmat(rng, rows, cols);
+            a.for_each_mut(|v| {
+                if rng.uniform() >= density {
+                    *v = 0.0;
+                }
+            });
+            let c = CsrMatrix::from_dense(&a);
+            let w = 1 + rng.below(cols);
+            let col0 = rng.below(cols - w + 1);
+            let ranges = c.block_ranges(col0, w);
+            let sv = c.block_view(&ranges, col0, w);
+            let dv = a.column_block_view(col0, w);
+            let k = 1 + rng.below(3);
+
+            let x = randvec(rng, k * w);
+            let v = randvec(rng, k * rows);
+            let mut y_ref = vec![0.0f32; k * rows];
+            kernels::matmul_naive(&dv, &x, k, &mut y_ref);
+            let mut z_ref = vec![0.0f32; k * w];
+            kernels::matmul_t_naive(&dv, &v, k, &mut z_ref);
+
+            for isa in simd::supported() {
+                let mut y = vec![0.0f32; k * rows];
+                csr::spmm_isa(isa, &sv, &x, k, &mut y);
+                assert_close_f32(&y_ref, &y, 1e-5)
+                    .map_err(|e| format!("{} spmm: {e}", isa.name()))?;
+                let mut z = vec![0.0f32; k * w];
+                csr::spmm_t_isa(isa, &sv, &v, k, &mut z);
+                assert_close_f32(&z_ref, &z, 1e-5)
+                    .map_err(|e| format!("{} spmm_t: {e}", isa.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The override knob must actually select the named path.
+#[test]
+fn dispatch_override_selects_named_path() {
+    let _lock = ISA_LOCK.lock().unwrap();
+    let _guard = IsaGuard::hold();
+
+    // forcing scalar always works, on any host
+    assert_eq!(simd::select(IsaChoice::Force(Isa::Scalar)).unwrap(), Isa::Scalar);
+    assert_eq!(simd::active(), Isa::Scalar);
+
+    // every supported variant is selectable and becomes the active path
+    for isa in simd::supported() {
+        assert_eq!(simd::select(IsaChoice::Force(isa)).unwrap(), isa);
+        assert_eq!(simd::active(), isa);
+    }
+
+    // an unavailable variant is rejected and leaves the selection alone
+    let before = simd::active();
+    for isa in [Isa::Avx2, Isa::Neon] {
+        if !simd::available(isa) {
+            assert!(simd::select(IsaChoice::Force(isa)).is_err());
+            assert_eq!(simd::active(), before);
+        }
+    }
+
+    // auto clears the override: active falls back to the env/auto
+    // baseline, which is always one of the supported variants
+    let auto = simd::select(IsaChoice::Auto).unwrap();
+    assert_eq!(simd::active(), auto);
+    assert!(simd::supported().contains(&auto));
+}
+
+/// Whole solves under every ISA must recover the identical support and
+/// agree on the objective within the kernel contract.
+#[test]
+fn solver_support_and_objective_identical_across_isas() {
+    let _lock = ISA_LOCK.lock().unwrap();
+    let _guard = IsaGuard::hold();
+
+    let mut spec = SyntheticSpec::regression(40, 400, 2);
+    spec.sparsity_level = 0.8;
+    spec.noise_std = 0.02;
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 300;
+
+    let loss = psfit::losses::make_loss(cfg.loss, ds.width);
+    let mut results = Vec::new();
+    for isa in simd::supported() {
+        simd::select(IsaChoice::Force(isa)).unwrap();
+        let res = driver::fit(&ds, &cfg).unwrap();
+        let obj = psfit::admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &res.x);
+        results.push((isa, res, obj));
+    }
+    let (_, ref_res, ref_obj) = &results[0];
+    for (isa, res, obj) in &results[1..] {
+        assert_eq!(
+            &ref_res.support, &res.support,
+            "support differs under {}",
+            isa.name()
+        );
+        let scale = ref_obj.abs().max(1.0);
+        assert!(
+            (ref_obj - obj).abs() <= 1e-5 * scale,
+            "objective under {}: {obj} vs {ref_obj}",
+            isa.name()
+        );
+    }
+}
+
+/// Forcing the scalar ISA reproduces the historical tiled kernels
+/// bit-for-bit end to end (the "guaranteed fallback" contract): two
+/// scalar solves of the same problem are bit-identical, and a CSR-stored
+/// solve matches the dense one to kernel tolerance under every ISA.
+#[test]
+fn scalar_fallback_is_deterministic_and_csr_agrees() {
+    let _lock = ISA_LOCK.lock().unwrap();
+    let _guard = IsaGuard::hold();
+
+    let mut spec = SyntheticSpec::regression(30, 300, 2);
+    spec.density = 0.15;
+    spec.noise_std = 0.02;
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 40;
+
+    simd::select(IsaChoice::Force(Isa::Scalar)).unwrap();
+    let a = driver::fit(&ds, &cfg).unwrap();
+    let b = driver::fit(&ds, &cfg).unwrap();
+    assert_eq!(a.z, b.z, "scalar path must be bit-deterministic");
+    assert_eq!(a.x, b.x);
+
+    // converged dense-vs-CSR runs agree on the support under every ISA
+    cfg.solver.max_iters = 300;
+    for isa in simd::supported() {
+        simd::select(IsaChoice::Force(isa)).unwrap();
+        let mut dense_cfg = cfg.clone();
+        dense_cfg.platform.sparse = psfit::data::SparseMode::Never;
+        let mut csr_cfg = cfg.clone();
+        csr_cfg.platform.sparse = psfit::data::SparseMode::Always;
+        let dense = driver::fit(&ds, &dense_cfg).unwrap();
+        let sparse = driver::fit(&ds, &csr_cfg).unwrap();
+        assert_eq!(
+            dense.support,
+            sparse.support,
+            "{}: dense vs csr support",
+            isa.name()
+        );
+    }
+}

@@ -17,11 +17,11 @@ use psfit::util::testkit::{assert_close_f32, run_prop, PropConfig};
 /// yields the all-zero matrix (every row and column empty).
 fn rand_sparse(rng: &mut Rng, m: usize, n: usize, density: f64) -> Matrix {
     let mut a = Matrix::zeros(m, n);
-    for v in a.data.iter_mut() {
+    a.for_each_mut(|v| {
         if rng.uniform() < density {
             *v = rng.normal_f32();
         }
-    }
+    });
     a
 }
 
