@@ -37,6 +37,40 @@ impl BackendKind {
     }
 }
 
+/// Which transport carries the consensus rounds between the coordinator
+/// and the node workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process workers (sequential, threaded, or async per the
+    /// coordination setting) — the default, and the only transport the
+    /// XLA backend supports.
+    #[default]
+    Local,
+    /// Standalone `psfit worker` processes reached over TCP or Unix
+    /// sockets (`network::socket::SocketCluster`); requires
+    /// `platform.workers` addresses.
+    Socket,
+}
+
+impl TransportKind {
+    /// Parse a CLI/JSON transport name.
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        match s {
+            "local" => Ok(TransportKind::Local),
+            "socket" | "tcp" => Ok(TransportKind::Socket),
+            other => anyhow::bail!("unknown transport `{other}` (local|socket)"),
+        }
+    }
+
+    /// Canonical name (inverse of [`TransportKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
 /// Bi-cADMM solver parameters (Eq. 7 and Algorithm 2).
 #[derive(Clone, Debug)]
 pub struct SolverConfig {
@@ -243,10 +277,25 @@ pub struct PlatformConfig {
     /// `Rc` graph must stay on one thread).  Default true for the XLA
     /// backend benchmarks.
     pub share_runtime: bool,
+    /// Which transport carries the consensus rounds: `local` in-process
+    /// workers (default) or `socket` worker processes.
+    pub transport: TransportKind,
+    /// Worker addresses for the socket transport, one per node in roster
+    /// order (`host:port` or `unix:/path`); ignored by `local`.
+    pub workers: Vec<String>,
+    /// Socket transport: per-attempt connect timeout in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Socket transport: read timeout per reply in milliseconds; a worker
+    /// silent for longer is declared dead and the round degrades.  `0`
+    /// waits forever.
+    pub read_timeout_ms: u64,
+    /// Socket transport: connect retries after the first attempt (linear
+    /// backoff), absorbing workers that are still binding at startup.
+    pub connect_retries: u32,
 }
 
 impl PlatformConfig {
-    /// Reject out-of-range storage-policy settings.
+    /// Reject out-of-range storage-policy and transport settings.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.sparse_threshold.is_nan()
             || !(0.0..=1.0).contains(&self.sparse_threshold)
@@ -255,6 +304,9 @@ impl PlatformConfig {
                 "platform.sparse_threshold must be in [0, 1], got {}",
                 self.sparse_threshold
             );
+        }
+        if self.transport == TransportKind::Socket && self.connect_timeout_ms == 0 {
+            anyhow::bail!("platform.connect_timeout_ms must be >= 1 for the socket transport");
         }
         Ok(())
     }
@@ -273,6 +325,11 @@ impl Default for PlatformConfig {
             pcie_gbps: None,
             pcie_latency_us: 10.0,
             share_runtime: true,
+            transport: TransportKind::Local,
+            workers: Vec::new(),
+            connect_timeout_ms: 3000,
+            read_timeout_ms: 30_000,
+            connect_retries: 3,
         }
     }
 }
@@ -413,6 +470,43 @@ impl Config {
                                 cfg.platform.pcie_latency_us = v
                                     .as_f64()
                                     .ok_or_else(|| anyhow::anyhow!("pcie_latency_us: num"))?
+                            }
+                            "transport" => {
+                                cfg.platform.transport = TransportKind::parse(
+                                    v.as_str().ok_or_else(|| {
+                                        anyhow::anyhow!("platform.transport: str")
+                                    })?,
+                                )?
+                            }
+                            "workers" => {
+                                let arr = v
+                                    .as_arr()
+                                    .ok_or_else(|| anyhow::anyhow!("platform.workers: array"))?;
+                                cfg.platform.workers = arr
+                                    .iter()
+                                    .map(|x| {
+                                        x.as_str().map(str::to_string).ok_or_else(|| {
+                                            anyhow::anyhow!("platform.workers entries: str")
+                                        })
+                                    })
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
+                            "connect_timeout_ms" => {
+                                cfg.platform.connect_timeout_ms =
+                                    v.as_usize().ok_or_else(|| {
+                                        anyhow::anyhow!("platform.connect_timeout_ms: int")
+                                    })? as u64
+                            }
+                            "read_timeout_ms" => {
+                                cfg.platform.read_timeout_ms = v.as_usize().ok_or_else(|| {
+                                    anyhow::anyhow!("platform.read_timeout_ms: int")
+                                })? as u64
+                            }
+                            "connect_retries" => {
+                                cfg.platform.connect_retries =
+                                    v.as_usize().ok_or_else(|| {
+                                        anyhow::anyhow!("platform.connect_retries: int")
+                                    })? as u32
                             }
                             other => anyhow::bail!("unknown platform key `{other}`"),
                         }
@@ -575,6 +669,113 @@ impl Config {
         cfg.platform.validate()?;
         Ok(cfg)
     }
+
+    /// Serialize to a JSON object that [`Config::from_json`] parses back to
+    /// an equivalent config.  The socket transport relies on this to ship
+    /// the coordinator's exact settings to `psfit worker` processes, so the
+    /// solver math runs from identical parameters on both sides of the wire.
+    ///
+    /// `path.limit` is a process-local test hook with no JSON key and is
+    /// deliberately not serialized.
+    pub fn to_json(&self) -> Json {
+        let s = &self.solver;
+        let solver = Json::obj(vec![
+            ("rho_c", Json::Num(s.rho_c)),
+            ("rho_b", Json::Num(s.rho_b)),
+            ("rho_l", Json::Num(s.rho_l)),
+            ("gamma", Json::Num(s.gamma)),
+            ("kappa", Json::Num(s.kappa as f64)),
+            ("max_iters", Json::Num(s.max_iters as f64)),
+            ("inner_iters", Json::Num(s.inner_iters as f64)),
+            ("cg_iters", Json::Num(s.cg_iters as f64)),
+            ("tol_primal", Json::Num(s.tol_primal)),
+            ("tol_dual", Json::Num(s.tol_dual)),
+            ("tol_bilinear", Json::Num(s.tol_bilinear)),
+            ("zt_iters", Json::Num(s.zt_iters as f64)),
+            ("polish", Json::Bool(s.polish)),
+        ]);
+        let p = &self.platform;
+        let mut platform = vec![
+            ("nodes", Json::Num(p.nodes as f64)),
+            ("devices_per_node", Json::Num(p.devices_per_node as f64)),
+            ("threads", Json::Num(p.threads as f64)),
+            ("sparse", Json::Str(p.sparse.name().to_string())),
+            ("sparse_threshold", Json::Num(p.sparse_threshold)),
+            ("backend", Json::Str(p.backend.name().to_string())),
+            ("isa", Json::Str(p.isa.name().to_string())),
+            ("pcie_latency_us", Json::Num(p.pcie_latency_us)),
+            ("share_runtime", Json::Bool(p.share_runtime)),
+            ("transport", Json::Str(p.transport.name().to_string())),
+            (
+                "workers",
+                Json::Arr(p.workers.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+            ("connect_timeout_ms", Json::Num(p.connect_timeout_ms as f64)),
+            ("read_timeout_ms", Json::Num(p.read_timeout_ms as f64)),
+            ("connect_retries", Json::Num(p.connect_retries as f64)),
+        ];
+        if let Some(gbps) = p.pcie_gbps {
+            platform.push(("pcie_gbps", Json::Num(gbps)));
+        }
+        let c = &self.coordinator;
+        let mut coordinator = vec![
+            ("coordination", Json::Str(c.coordination.name().to_string())),
+            ("quorum", Json::Num(c.quorum)),
+            ("max_staleness", Json::Num(c.max_staleness as f64)),
+            ("heartbeat_ms", Json::Num(c.heartbeat_ms as f64)),
+            ("seed", Json::Num(c.faults.seed as f64)),
+            ("jitter_ms", Json::Num(c.faults.jitter_ms)),
+        ];
+        if !c.faults.stragglers.is_empty() {
+            let arr = c
+                .faults
+                .stragglers
+                .iter()
+                .map(|x| {
+                    Json::obj(vec![
+                        ("node", Json::Num(x.node as f64)),
+                        ("delay_ms", Json::Num(x.delay_ms)),
+                    ])
+                })
+                .collect();
+            coordinator.push(("stragglers", Json::Arr(arr)));
+        }
+        if !c.faults.crashes.is_empty() {
+            let arr = c
+                .faults
+                .crashes
+                .iter()
+                .map(|x| {
+                    Json::obj(vec![
+                        ("node", Json::Num(x.node as f64)),
+                        ("round", Json::Num(x.round as f64)),
+                    ])
+                })
+                .collect();
+            coordinator.push(("crashes", Json::Arr(arr)));
+        }
+        let pa = &self.path;
+        let mut path = vec![
+            (
+                "budgets",
+                Json::Arr(pa.budgets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("rho_ladder", Json::arr_f64(&pa.rho_ladder)),
+            ("warm_start", Json::Bool(pa.warm_start)),
+            ("direct", Json::Bool(pa.direct)),
+        ];
+        if let Some(ck) = &pa.checkpoint {
+            path.push(("checkpoint", Json::Str(ck.clone())));
+        }
+        Json::obj(vec![
+            ("solver", solver),
+            ("platform", Json::obj(platform)),
+            ("coordinator", Json::obj(coordinator)),
+            ("path", Json::obj(path)),
+            ("loss", Json::Str(self.loss.name().to_string())),
+            ("classes", Json::Num(self.classes as f64)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -734,6 +935,79 @@ mod tests {
         let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
         assert!(cfg.path.budgets.is_empty());
         assert_eq!(cfg.path.rho_ladder, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn transport_keys_roundtrip() {
+        let src = r#"{
+            "platform": {"transport": "socket",
+                         "workers": ["127.0.0.1:7001", "unix:/tmp/w2.sock"],
+                         "connect_timeout_ms": 500, "read_timeout_ms": 0,
+                         "connect_retries": 5}
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.platform.transport, TransportKind::Socket);
+        assert_eq!(cfg.platform.workers.len(), 2);
+        assert_eq!(cfg.platform.workers[1], "unix:/tmp/w2.sock");
+        assert_eq!(cfg.platform.connect_timeout_ms, 500);
+        assert_eq!(cfg.platform.read_timeout_ms, 0);
+        assert_eq!(cfg.platform.connect_retries, 5);
+        // defaults stay in-process with sane timeouts
+        let d = Config::default();
+        assert_eq!(d.platform.transport, TransportKind::Local);
+        assert!(d.platform.workers.is_empty());
+        assert_eq!(d.platform.connect_timeout_ms, 3000);
+        // bad values fail at parse/validate time
+        for bad in [
+            r#"{"platform": {"transport": "carrier-pigeon"}}"#,
+            r#"{"platform": {"workers": [1]}}"#,
+            r#"{"platform": {"transport": "socket", "connect_timeout_ms": 0}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn to_json_is_parsed_back_identically() {
+        // exercise every branch: non-default everything, faults, path,
+        // checkpoint, pcie model, socket transport
+        let mut cfg = Config::default();
+        cfg.solver.rho_c = 2.5;
+        cfg.solver.kappa = 7;
+        cfg.solver.polish = false;
+        cfg.platform.nodes = 3;
+        cfg.platform.threads = 2;
+        cfg.platform.sparse = SparseMode::Always;
+        cfg.platform.sparse_threshold = 0.5;
+        cfg.platform.isa = IsaChoice::Force(crate::linalg::simd::Isa::Scalar);
+        cfg.platform.pcie_gbps = Some(16.0);
+        cfg.platform.transport = TransportKind::Socket;
+        cfg.platform.workers = vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()];
+        cfg.platform.read_timeout_ms = 0;
+        cfg.coordinator.coordination = CoordinationKind::Async;
+        cfg.coordinator.quorum = 0.75;
+        cfg.coordinator.max_staleness = 2;
+        cfg.coordinator.faults = FaultSpec::default().straggler(0, 5.0).crash(1, 9);
+        cfg.loss = LossKind::Softmax;
+        cfg.classes = 4;
+        cfg.path.budgets = vec![50, 20];
+        cfg.path.rho_ladder = vec![2.0, 1.0];
+        cfg.path.checkpoint = Some("sweep.psc".into());
+        cfg.path.warm_start = false;
+
+        let text = cfg.to_json().to_string();
+        let back = Config::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(format!("{:?}", back), format!("{:?}", cfg));
+        // and serializing again is a fixed point
+        assert_eq!(back.to_json().to_string(), text);
+
+        // the default config round-trips too (empty fault/path arrays)
+        let d = Config::default();
+        let back = Config::from_json(&Json::parse(&d.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(format!("{:?}", back), format!("{:?}", d));
     }
 
     #[test]

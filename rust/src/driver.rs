@@ -22,10 +22,11 @@ use crate::admm::{self, LocalProx, SolveOptions, SolveResult};
 use crate::backend::native::{NativeBackend, SolveMode};
 use crate::backend::xla::XlaBackend;
 use crate::backend::BlockParams;
-use crate::config::{BackendKind, Config, CoordinationKind};
+use crate::config::{BackendKind, Config, CoordinationKind, TransportKind};
 use crate::coordinator::AsyncCluster;
 use crate::data::{Dataset, FeaturePlan};
 use crate::losses::make_loss;
+use crate::network::socket::SocketCluster;
 use crate::network::{Cluster, NodeWorker, SequentialCluster, ThreadedCluster};
 use crate::runtime::{Manifest, XlaRuntime};
 
@@ -164,6 +165,32 @@ pub fn build_cluster(
     })
 }
 
+/// Build the complete transport a config asks for, honoring
+/// `platform.transport`: `local` constructs in-process workers and hands
+/// them to [`build_cluster`]; `socket` connects a
+/// [`SocketCluster`] to the `platform.workers` fleet (shipping the shards
+/// over the wire).  The `psfit path` subsystem stays on the in-process
+/// transports — its per-point rebuild churn belongs next to the data.
+pub fn build_transport_cluster(
+    ds: &Dataset,
+    cfg: &Config,
+    threaded: bool,
+) -> anyhow::Result<Box<dyn Cluster>> {
+    match cfg.platform.transport {
+        TransportKind::Socket => {
+            anyhow::ensure!(
+                cfg.platform.backend == BackendKind::Native,
+                "transport `socket` runs workers on the native backend only"
+            );
+            Ok(Box::new(SocketCluster::connect(ds, cfg)?))
+        }
+        TransportKind::Local => {
+            let workers = build_workers(ds, cfg)?;
+            build_cluster(workers, ds.n_features * ds.width, cfg, threaded)
+        }
+    }
+}
+
 /// End-to-end fit: build the configured cluster, run Bi-cADMM, return
 /// the result.
 pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
@@ -171,15 +198,15 @@ pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
 }
 
 /// [`fit`] with explicit solve options and transport choice (`threaded =
-/// false` forces the deterministic sequential cluster).
+/// false` forces the deterministic sequential cluster on the local
+/// transport).
 pub fn fit_with_options(
     ds: &Dataset,
     cfg: &Config,
     opts: &SolveOptions,
     threaded: bool,
 ) -> anyhow::Result<SolveResult> {
-    let workers = build_workers(ds, cfg)?;
     let dim = ds.n_features * ds.width;
-    let mut cluster = build_cluster(workers, dim, cfg, threaded)?;
+    let mut cluster = build_transport_cluster(ds, cfg, threaded)?;
     admm::solve(cluster.as_mut(), dim, cfg, Some(ds), opts)
 }

@@ -16,6 +16,7 @@
 //! | [`kernels`] | (new)       | SIMD kernels / pooled sweeps beat scalar   |
 //! | [`solver`]  | (new)       | end-to-end rounds/sec + time-to-tolerance  |
 //! | [`path`]    | (new)       | warm path sweep beats cold-started sequence|
+//! | [`transport`] | (new)     | in-process vs localhost-socket round cost  |
 
 /// Figure 1: residual convergence vs rho_b.
 pub mod fig1;
@@ -33,6 +34,8 @@ pub mod solver;
 pub mod straggler;
 /// Table 1: Bi-cADMM vs MIP vs Lasso.
 pub mod table1;
+/// Transport round-latency benchmark (`psfit bench --transport`).
+pub mod transport;
 
 pub use fig1::fig1;
 pub use fig4::fig4;
@@ -42,6 +45,7 @@ pub use scaling::{fig2, fig3};
 pub use solver::solver_bench;
 pub use straggler::straggler;
 pub use table1::table1;
+pub use transport::transport_bench;
 
 use crate::admm::{SolveOptions, SolveResult};
 use crate::config::Config;
@@ -61,12 +65,13 @@ pub struct TimedRun {
     pub solve_seconds: f64,
 }
 
-/// Fit `ds` under `cfg`, timing setup and solve separately.
+/// Fit `ds` under `cfg`, timing setup and solve separately.  Honors
+/// `platform.transport`, so a benchmark config can point at a socket
+/// fleet; setup time then covers connect + shard shipping.
 pub fn run_timed(ds: &Dataset, cfg: &Config, threaded: bool) -> anyhow::Result<TimedRun> {
     let watch = Stopwatch::start();
-    let workers = driver::build_workers(ds, cfg)?;
     let dim = ds.n_features * ds.width;
-    let mut cluster = driver::build_cluster(workers, dim, cfg, threaded)?;
+    let mut cluster = driver::build_transport_cluster(ds, cfg, threaded)?;
     let setup_seconds = watch.elapsed_secs();
     let result = crate::admm::solve(
         cluster.as_mut(),

@@ -1,0 +1,281 @@
+//! `psfit bench --transport` — round latency and wire volume of the
+//! transports: the in-process sequential and threaded clusters against a
+//! localhost socket fleet.
+//!
+//! Every transport runs the *same* fixed-round solve on the same seed, so
+//! besides timing this doubles as a parity check (the socket run must
+//! recover the sequential baseline's support exactly).  Reported per
+//! entry: round latency, rounds/sec, and bytes per round in both
+//! directions.  For the in-process transports the bytes are the modeled
+//! protocol volume (z down, x+u up); for the socket transport they are
+//! the frames actually written to the wire, so the gap between the two is
+//! the real framing + setup overhead of going multi-process.
+//!
+//! Entries merge into the existing `BENCH_solver.json` under the name
+//! `transport_round`, preserving whatever `--solver` wrote there.
+
+use std::collections::BTreeMap;
+
+use crate::config::{Config, TransportKind};
+use crate::data::SyntheticSpec;
+use crate::metrics::CsvTable;
+use crate::network::socket::worker::spawn_local_worker;
+use crate::util::json::Json;
+
+/// Options of the `psfit bench --transport` harness.
+pub struct TransportBenchOpts {
+    /// Small shape + short runs (CI smoke).
+    pub quick: bool,
+    /// JSON report path (merged into, not overwritten).
+    pub json: String,
+    /// Optional CSV path.
+    pub out: Option<String>,
+}
+
+struct TransportEntry {
+    transport: &'static str,
+    n: usize,
+    m: usize,
+    nodes: usize,
+    rounds: usize,
+    wall_seconds: f64,
+    net_down_bytes: u64,
+    net_up_bytes: u64,
+    wire_frames: u64,
+    support_match: bool,
+}
+
+fn per_round(total: u64, rounds: usize) -> f64 {
+    if rounds > 0 {
+        total as f64 / rounds as f64
+    } else {
+        0.0
+    }
+}
+
+/// Run the transport benchmark and merge its entries into the report.
+pub fn transport_bench(opts: &TransportBenchOpts) -> anyhow::Result<CsvTable> {
+    let shapes: &[(usize, usize, usize, usize)] = if opts.quick {
+        &[(64, 512, 3, 6)]
+    } else {
+        &[(256, 2048, 3, 20), (512, 4096, 4, 12)]
+    };
+
+    let mut entries = Vec::new();
+    for &(n, m, nodes, rounds) in shapes {
+        let spec = SyntheticSpec::regression(n, m, nodes);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = nodes;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = rounds;
+        cfg.solver.tol_primal = 0.0; // force every round: fixed work per transport
+
+        let mut baseline_support: Option<Vec<usize>> = None;
+        for transport in ["sequential", "threaded", "socket"] {
+            eprintln!("# transport rounds: {transport} n={n} m={m} nodes={nodes}");
+            let mut run_cfg = cfg.clone();
+            let threaded = match transport {
+                "sequential" => false,
+                "threaded" => true,
+                _ => {
+                    run_cfg.platform.transport = TransportKind::Socket;
+                    run_cfg.platform.workers = (0..nodes)
+                        .map(|_| spawn_local_worker())
+                        .collect::<anyhow::Result<_>>()?;
+                    true
+                }
+            };
+            let run = super::run_timed(&ds, &run_cfg, threaded)?;
+            anyhow::ensure!(
+                run.result.iters == rounds,
+                "fixed-round run terminated early on {transport}"
+            );
+            let support_match = match &baseline_support {
+                None => {
+                    baseline_support = Some(run.result.support.clone());
+                    true
+                }
+                Some(base) => *base == run.result.support,
+            };
+            entries.push(TransportEntry {
+                transport,
+                n,
+                m,
+                nodes,
+                rounds,
+                wall_seconds: run.solve_seconds,
+                net_down_bytes: run.result.transfers.net_down_bytes,
+                net_up_bytes: run.result.transfers.net_up_bytes,
+                wire_frames: run.result.transfers.wire_frames,
+                support_match,
+            });
+        }
+    }
+
+    let json = merge_report(&opts.json, &entries, opts.quick);
+    std::fs::write(&opts.json, format!("{json}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.json))?;
+    eprintln!("wrote {}", opts.json);
+
+    let mut table = CsvTable::new(&[
+        "entry",
+        "transport",
+        "n",
+        "m",
+        "nodes",
+        "round_ms",
+        "down B/round",
+        "up B/round",
+        "frames",
+        "note",
+    ]);
+    for e in &entries {
+        table.row(vec![
+            "transport_round".to_string(),
+            e.transport.to_string(),
+            e.n.to_string(),
+            e.m.to_string(),
+            e.nodes.to_string(),
+            format!("{:.3}", 1000.0 * e.wall_seconds / e.rounds as f64),
+            format!("{:.0}", per_round(e.net_down_bytes, e.rounds)),
+            format!("{:.0}", per_round(e.net_up_bytes, e.rounds)),
+            e.wire_frames.to_string(),
+            format!("{} rounds, support_match={}", e.rounds, e.support_match),
+        ]);
+    }
+    if let Some(path) = &opts.out {
+        table.write_file(std::path::Path::new(path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(table)
+}
+
+/// Fold `transport_round` entries into the report at `path`: existing
+/// entries of every *other* kind survive untouched, previous
+/// `transport_round` entries are replaced.  A missing or unparseable
+/// report starts fresh.
+fn merge_report(path: &str, entries: &[TransportEntry], quick: bool) -> Json {
+    let mut report = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Obj(map)) => map,
+        _ => {
+            let mut map = BTreeMap::new();
+            map.insert("schema".to_string(), Json::Num(1.0));
+            map.insert("quick".to_string(), Json::Bool(quick));
+            map.insert(
+                "generated_by".to_string(),
+                Json::Str("psfit bench --transport".to_string()),
+            );
+            map
+        }
+    };
+    let mut kept: Vec<Json> = match report.remove("entries") {
+        Some(Json::Arr(arr)) => arr
+            .into_iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) != Some("transport_round"))
+            .collect(),
+        _ => Vec::new(),
+    };
+    for e in entries {
+        let dim_payload = 3.0 * (e.n as f64) * 8.0 * e.nodes as f64;
+        kept.push(Json::obj(vec![
+            ("name", Json::Str("transport_round".to_string())),
+            ("transport", Json::Str(e.transport.to_string())),
+            ("n", Json::Num(e.n as f64)),
+            ("m", Json::Num(e.m as f64)),
+            ("nodes", Json::Num(e.nodes as f64)),
+            ("rounds", Json::Num(e.rounds as f64)),
+            (
+                "round_ms",
+                Json::Num(1000.0 * e.wall_seconds / e.rounds as f64),
+            ),
+            (
+                "rounds_per_sec",
+                Json::Num(if e.wall_seconds > 0.0 {
+                    e.rounds as f64 / e.wall_seconds
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "net_down_bytes_per_round",
+                Json::Num(per_round(e.net_down_bytes, e.rounds)),
+            ),
+            (
+                "net_up_bytes_per_round",
+                Json::Num(per_round(e.net_up_bytes, e.rounds)),
+            ),
+            ("payload_bytes_per_round", Json::Num(dim_payload)),
+            ("wire_frames", Json::Num(e.wire_frames as f64)),
+            ("support_match", Json::Bool(e.support_match)),
+        ]));
+    }
+    report.insert("entries".to_string(), Json::Arr(kept));
+    Json::Obj(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(transport: &'static str) -> TransportEntry {
+        TransportEntry {
+            transport,
+            n: 64,
+            m: 512,
+            nodes: 3,
+            rounds: 6,
+            wall_seconds: 0.06,
+            net_down_bytes: 9_000,
+            net_up_bytes: 18_000,
+            wire_frames: 24,
+            support_match: true,
+        }
+    }
+
+    #[test]
+    fn merge_preserves_foreign_entries_and_replaces_stale_transport_rows() {
+        let dir = std::env::temp_dir().join(format!("psfit-tb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let path_str = path.to_str().unwrap();
+        std::fs::write(
+            &path,
+            r#"{"schema": 1, "quick": true, "isa": "scalar",
+               "entries": [{"name": "solver_rounds", "n": 96},
+                           {"name": "transport_round", "transport": "stale"}]}"#,
+        )
+        .unwrap();
+        let merged = merge_report(path_str, &[entry("sequential"), entry("socket")], true);
+        let arr = merged.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3, "solver entry kept, stale row replaced");
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("solver_rounds"));
+        let kinds: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("transport_round"))
+            .map(|e| e.get("transport").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(kinds, vec!["sequential", "socket"]);
+        // untouched top-level keys survive the merge
+        assert_eq!(merged.get("isa").unwrap().as_str(), Some("scalar"));
+        // round-trips as JSON with the expected derived fields
+        let parsed = Json::parse(&merged.to_string()).unwrap();
+        let e = &parsed.get("entries").unwrap().as_arr().unwrap()[1];
+        assert_eq!(e.get("round_ms").unwrap().as_f64(), Some(10.0));
+        assert_eq!(
+            e.get("payload_bytes_per_round").unwrap().as_f64(),
+            Some(3.0 * 64.0 * 8.0 * 3.0)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_starts_fresh_without_a_report() {
+        let merged = merge_report("/nonexistent/psfit/report.json", &[entry("threaded")], false);
+        assert_eq!(merged.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(merged.get("entries").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

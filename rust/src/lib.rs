@@ -7,7 +7,9 @@
 //!   * [`admm`]     — the Bi-cADMM algorithm (Algorithms 1 & 2)
 //!   * [`backend`]  — native ("CPU") and XLA-artifact ("GPU") data paths
 //!   * [`runtime`]  — PJRT loader/executor for the AOT artifacts
-//!   * [`network`]  — node workers + collectives (the MPI stand-in)
+//!   * [`network`]  — node workers + collectives; `network::socket` is
+//!     the real multi-process transport (`psfit worker`)
+//!   * [`serve`]    — multi-tenant fit/predict daemon over a worker fleet
 //!   * [`coordinator`] — async round scheduler with bounded staleness,
 //!     elastic membership, and deterministic fault injection
 //!   * [`baselines`]— Lasso, best-subset branch-and-bound (Gurobi
@@ -51,6 +53,8 @@ pub mod network;
 pub mod path;
 /// PJRT loader/executor for the AOT-compiled XLA artifacts.
 pub mod runtime;
+/// `psfit serve`: multi-tenant fit/predict daemon over a worker fleet.
+pub mod serve;
 /// Sparsity machinery: l1 projections, s-update, hard thresholding.
 pub mod sparsity;
 /// Self-contained substrates: PRNG, JSON, CLI, bench/test kits, pool.

@@ -43,6 +43,16 @@ impl LossKind {
             other => anyhow::bail!("unknown loss `{other}`"),
         }
     }
+
+    /// Canonical name (inverse of [`LossKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Squared => "squared",
+            LossKind::Logistic => "logistic",
+            LossKind::Hinge => "hinge",
+            LossKind::Softmax => "softmax",
+        }
+    }
 }
 
 /// A separable convex loss `sum_i phi(pred_i; b_i)` with the three

@@ -13,21 +13,29 @@
 //!   bench   — kernel micro-benchmarks (scalar vs SIMD, serial vs
 //!             pooled); writes BENCH_kernels.json.  With --solver:
 //!             end-to-end ADMM rounds/sec + time-to-tolerance; writes
-//!             BENCH_solver.json
+//!             BENCH_solver.json.  With --transport: in-process vs
+//!             localhost-socket round cost, merged into the same report
 //!   pathbench — warm vs cold path sweeps across the density grid;
 //!             writes BENCH_path.json
+//!   worker  — standalone node process; prints its bound address and
+//!             serves socket-transport coordinators until killed
+//!   serve   — multi-tenant fit/predict daemon over a worker fleet
+//!   submit / predict / jobs — client commands against `psfit serve`
 //!   info    — print artifact manifest + platform info
 //!
 //! Scaled-down grids by default; `--full` switches to the paper's sizes.
 //! See docs/GUIDE.md for a walkthrough of every knob.
 
-use psfit::admm::SolveOptions;
-use psfit::config::{BackendKind, Config, CoordinationKind};
+use psfit::admm::{SolveOptions, SolveResult};
+use psfit::config::{BackendKind, Config, CoordinationKind, TransportKind};
 use psfit::data::{Dataset, SparseMode, SyntheticSpec, Task};
 use psfit::driver;
 use psfit::harness;
 use psfit::losses::LossKind;
+use psfit::network::socket::wire::JobSpec;
+use psfit::network::socket::{run_worker, WorkerOpts};
 use psfit::path;
+use psfit::serve::{run_serve, JobPhase, ServeClient, ServeOpts};
 use psfit::sparsity::support_f1;
 use psfit::util::cli::Args;
 
@@ -43,6 +51,36 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
         Some("path") => path_cmd(&args),
+        Some("worker") => {
+            if let Some(isa) = args.opt("isa") {
+                let active =
+                    psfit::linalg::simd::select(psfit::linalg::simd::IsaChoice::parse(isa)?)?;
+                eprintln!("kernel isa:  {} (requested {isa})", active.name());
+            }
+            let opts = WorkerOpts {
+                listen: args.opt("listen").unwrap_or("127.0.0.1:0").to_string(),
+            };
+            args.reject_unknown()?;
+            run_worker(&opts)
+        }
+        Some("serve") => {
+            let opts = ServeOpts {
+                listen: args.opt("listen").unwrap_or("127.0.0.1:7700").to_string(),
+                workers: match args.opt("workers") {
+                    Some(w) => parse_list(w, "--workers")?,
+                    None => Vec::new(),
+                },
+                local_fleet: args.get("local-fleet", 0)?,
+                connect_timeout_ms: args.get("connect-timeout-ms", 3000)?,
+                read_timeout_ms: args.get("read-timeout-ms", 30_000)?,
+                connect_retries: args.get("connect-retries", 3)?,
+            };
+            args.reject_unknown()?;
+            run_serve(&opts)
+        }
+        Some("submit") => submit_cmd(&args),
+        Some("predict") => predict_cmd(&args),
+        Some("jobs") => jobs_cmd(&args),
         Some("pathbench") => {
             let opts = harness::path::PathBenchOpts {
                 quick: args.flag("quick"),
@@ -121,6 +159,17 @@ fn run() -> anyhow::Result<()> {
                     psfit::linalg::simd::select(psfit::linalg::simd::IsaChoice::parse(isa)?)?;
                 eprintln!("kernel isa:  {} (requested {isa})", active.name());
             }
+            if args.flag("transport") {
+                // transport round-cost benchmark -> merged into BENCH_solver.json
+                let opts = harness::transport::TransportBenchOpts {
+                    quick: args.flag("quick"),
+                    json: args.opt("json").unwrap_or("BENCH_solver.json").to_string(),
+                    out: args.opt("out").map(String::from),
+                };
+                args.reject_unknown()?;
+                let table = harness::transport_bench(&opts)?;
+                return harness::emit(&table, opts.out.as_deref());
+            }
             if args.flag("solver") {
                 // end-to-end solver benchmark -> BENCH_solver.json
                 let opts = harness::solver::SolverBenchOpts {
@@ -148,12 +197,12 @@ fn run() -> anyhow::Result<()> {
         Some("info") => info(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, info)"
+                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, worker, serve, submit, predict, jobs, info)"
             )
         }
         None => {
             eprintln!(
-                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|info> [options]"
+                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|worker|serve|submit|predict|jobs|info> [options]"
             );
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
             eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
@@ -166,7 +215,12 @@ fn run() -> anyhow::Result<()> {
             eprintln!("        psfit fig1 --out results/fig1.csv        (--full for paper sizes)");
             eprintln!("        psfit bench --quick                 (writes BENCH_kernels.json)");
             eprintln!("        psfit bench --solver --quick        (writes BENCH_solver.json)");
+            eprintln!("        psfit bench --transport --quick     (merges transport rounds into it)");
             eprintln!("        psfit pathbench --quick             (writes BENCH_path.json)");
+            eprintln!("        psfit worker --listen 127.0.0.1:0   (standalone node process)");
+            eprintln!("        psfit train --transport socket --workers host1:7777,host2:7777");
+            eprintln!("        psfit serve --local-fleet 2         (fit/predict daemon)");
+            eprintln!("        psfit submit --n 200 --m 1600 --wait && psfit predict --job 1 --features 3:0.5");
             Ok(())
         }
     }
@@ -203,6 +257,16 @@ fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<S
     if let Some(isa) = args.opt("isa") {
         cfg.platform.isa = psfit::linalg::simd::IsaChoice::parse(isa)?;
     }
+    if let Some(t) = args.opt("transport") {
+        cfg.platform.transport = TransportKind::parse(t)?;
+    }
+    if let Some(w) = args.opt("workers") {
+        cfg.platform.workers = parse_list(w, "--workers")?;
+    }
+    cfg.platform.connect_timeout_ms =
+        args.get("connect-timeout-ms", cfg.platform.connect_timeout_ms)?;
+    cfg.platform.read_timeout_ms = args.get("read-timeout-ms", cfg.platform.read_timeout_ms)?;
+    cfg.platform.connect_retries = args.get("connect-retries", cfg.platform.connect_retries)?;
     // install the process-wide kernel ISA now — "selected once at startup"
     let active = psfit::linalg::simd::select(cfg.platform.isa)?;
     eprintln!("kernel isa:  {} (requested {})", active.name(), cfg.platform.isa.name());
@@ -275,6 +339,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let (mut cfg, spec, libsvm) = shared_config(args)?;
     cfg.solver.kappa = args.get("kappa", spec.kappa())?;
     let trace_out = args.opt("trace").map(String::from);
+    let model_out = args.opt("model-out").map(String::from);
     args.reject_unknown()?;
 
     let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref())?;
@@ -338,6 +403,136 @@ fn train(args: &Args) -> anyhow::Result<()> {
         }
         std::fs::write(&path, res.trace.to_csv())?;
         eprintln!("wrote {path}");
+    }
+    if let Some(path) = model_out {
+        write_model(&path, &ds, res, &cfg)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Write the fitted model as deterministic JSON: support indices plus the
+/// exact f64 bit patterns of the objective and the support coefficients.
+/// Two runs that agree bit-for-bit produce byte-identical files, so CI
+/// checks socket-vs-local parity with a plain `cmp`.
+fn write_model(path: &str, ds: &Dataset, res: &SolveResult, cfg: &Config) -> anyhow::Result<()> {
+    let loss = psfit::losses::make_loss(cfg.loss, ds.width.max(cfg.classes));
+    let objective = psfit::admm::solver::objective(ds, loss.as_ref(), cfg.solver.gamma, &res.x);
+    let support: Vec<String> = res.support.iter().map(|s| s.to_string()).collect();
+    let x_bits: Vec<String> = res
+        .support
+        .iter()
+        .map(|&j| format!("\"{:016x}\"", res.x[j].to_bits()))
+        .collect();
+    let text = format!(
+        "{{\n  \"n_features\": {},\n  \"width\": {},\n  \"support\": [{}],\n  \
+         \"objective_bits\": \"{:016x}\",\n  \"x_bits\": [{}]\n}}\n",
+        ds.n_features,
+        ds.width,
+        support.join(", "),
+        objective.to_bits(),
+        x_bits.join(", ")
+    );
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// `psfit submit`: hand a fit job to a running `psfit serve` daemon.
+fn submit_cmd(args: &Args) -> anyhow::Result<()> {
+    let serve = args.opt("serve").unwrap_or("127.0.0.1:7700").to_string();
+    let name = args.opt("name").unwrap_or("cli").to_string();
+    let config = match args.opt("config") {
+        Some(path) => Config::from_json_file(std::path::Path::new(path))?
+            .to_json()
+            .to_string(),
+        None => String::new(),
+    };
+    let spec = JobSpec {
+        n: args.get("n", 200)?,
+        m: args.get("m", 1600)?,
+        nodes: args.get("nodes", 2)?,
+        sparsity: args.get("sparsity", 0.8)?,
+        density: args.get("density", 1.0)?,
+        noise_std: args.get("noise", 0.1)?,
+        seed: args.get("seed", 42)?,
+        kappa: args.get("kappa", 0)?,
+        config,
+    };
+    let wait = args.flag("wait");
+    let timeout: u64 = args.get("timeout-s", 300)?;
+    args.reject_unknown()?;
+    let mut client = ServeClient::connect(&serve)?;
+    let job = client.submit(&name, spec)?;
+    println!("job {job} submitted as `{name}`");
+    if wait {
+        let st = client.wait(job, std::time::Duration::from_secs(timeout))?;
+        println!(
+            "job {job} done: converged={} iters={} support={} objective={:.6e} wall={:.3}s",
+            st.converged, st.iters, st.support_len, st.objective, st.wall_seconds
+        );
+    }
+    Ok(())
+}
+
+/// Parse `--features 3:0.5,17:-1.2` into sparse (index, value) pairs.
+fn parse_features(raw: &str) -> anyhow::Result<Vec<(u32, f64)>> {
+    raw.split(',')
+        .filter(|tok| !tok.trim().is_empty())
+        .map(|tok| {
+            let (i, v) = tok
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("feature `{tok}` is not index:value"))?;
+            let idx = i
+                .trim()
+                .parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("bad feature index `{i}`"))?;
+            let val = v
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad feature value `{v}`"))?;
+            Ok((idx, val))
+        })
+        .collect()
+}
+
+/// `psfit predict`: score a sparse feature vector against a finished job.
+fn predict_cmd(args: &Args) -> anyhow::Result<()> {
+    let serve = args.opt("serve").unwrap_or("127.0.0.1:7700").to_string();
+    let job: u64 = args.get("job", 0)?;
+    let raw = args.require("features")?.to_string();
+    args.reject_unknown()?;
+    anyhow::ensure!(job > 0, "pass --job <id> (ids start at 1)");
+    let features = parse_features(&raw)?;
+    let mut client = ServeClient::connect(&serve)?;
+    let values = client.predict(job, &features)?;
+    for (c, v) in values.iter().enumerate() {
+        println!("class {c}: {v:.6e}");
+    }
+    Ok(())
+}
+
+/// `psfit jobs`: list every job the daemon knows, id ascending.
+fn jobs_cmd(args: &Args) -> anyhow::Result<()> {
+    let serve = args.opt("serve").unwrap_or("127.0.0.1:7700").to_string();
+    args.reject_unknown()?;
+    let mut client = ServeClient::connect(&serve)?;
+    let jobs = client.jobs()?;
+    if jobs.is_empty() {
+        println!("no jobs");
+        return Ok(());
+    }
+    println!("{:>5}  {:<8}  name", "job", "phase");
+    for j in &jobs {
+        println!(
+            "{:>5}  {:<8}  {}",
+            j.job,
+            JobPhase::from_code(j.phase)?.name(),
+            j.name
+        );
     }
     Ok(())
 }

@@ -9,7 +9,7 @@ use std::fmt::Write as _;
 /// every result pulled back is recorded here — the measured analogue of the
 /// paper's CPU<->GPU PCIe transfers.  An optional synthetic PCIe model
 /// (`pcie_gbps`) converts bytes to modeled seconds for Figure 4's shape.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TransferLedger {
     /// host -> device bytes (staging tiles, vectors into literals)
     pub h2d_bytes: u64,
@@ -47,6 +47,10 @@ pub struct TransferLedger {
     /// penalty revisits that *reused* a cached Cholesky factor instead of
     /// refactoring (the path subsystem's rho ladder; informational)
     pub chol_reuses: u64,
+    /// protocol frames actually put on a socket (both directions; zero
+    /// for the in-process transports, whose byte counters are modeled
+    /// rather than measured)
+    pub wire_frames: u64,
 }
 
 impl TransferLedger {
@@ -76,6 +80,7 @@ impl TransferLedger {
         self.gram_builds += other.gram_builds;
         self.chol_factorizations += other.chol_factorizations;
         self.chol_reuses += other.chol_reuses;
+        self.wire_frames += other.wire_frames;
     }
 
     /// Human-readable notes for the *avoided*-work counters, one line per
@@ -388,6 +393,7 @@ mod tests {
         b.gram_builds = 3;
         b.chol_factorizations = 2;
         b.chol_reuses = 5;
+        b.wire_frames = 9;
         a.merge(&b);
         assert_eq!(a.net_down_bytes, 100);
         assert_eq!(a.net_resync_bytes, 40);
@@ -396,6 +402,7 @@ mod tests {
         assert_eq!(a.gram_builds, 3);
         assert_eq!(a.chol_factorizations, 2);
         assert_eq!(a.chol_reuses, 5);
+        assert_eq!(a.wire_frames, 9);
         // informational note: never folded into the transfer volume
         assert_eq!(a.h2d_bytes + a.d2h_bytes, 0);
     }

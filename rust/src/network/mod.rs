@@ -7,13 +7,19 @@
 //!
 //!   * [`SequentialCluster`] — in-process loop (deterministic; tests)
 //!   * [`ThreadedCluster`]   — one OS thread per node with channel-based
-//!     Bcast/Collect, the MPI stand-in used by the benchmarks
+//!     Bcast/Collect, the in-process stand-in used by the benchmarks
 //!   * [`crate::coordinator::AsyncCluster`] — partial-barrier rounds with
 //!     bounded staleness, elastic membership, and fault injection
+//!   * [`socket::SocketCluster`] — real worker *processes* over TCP or
+//!     Unix sockets (the `psfit worker` / `psfit serve` transport)
 //!
 //! The byte ledger records exactly the paper's protocol volume per round:
 //! coordinator -> node: z (dim f64); node -> coordinator: x_i and u_i
-//! (2 x dim f64) — "Collect: Gather x_i and u_i from all nodes".
+//! (2 x dim f64) — "Collect: Gather x_i and u_i from all nodes".  The
+//! in-process transports *model* those bytes; the socket transport counts
+//! the frames it actually puts on the wire.
+
+pub mod socket;
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -326,7 +332,10 @@ impl Cluster for SequentialCluster {
 // ---------------------------------------------------------------------
 
 enum Command {
-    Round(Arc<Vec<f64>>),
+    /// Broadcast payload + the coordinator's round counter; the worker
+    /// echoes the counter in its reply so the coordinator can discard a
+    /// straggler's answer to a round that already timed out.
+    Round(Arc<Vec<f64>>, usize),
     Loss,
     Ledger,
     Export,
@@ -343,16 +352,25 @@ enum Reply {
     ReseedFailed(usize),
 }
 
-/// One OS thread per node with channel Bcast/Collect — the MPI stand-in
-/// the benchmarks use.
+/// One OS thread per node with channel Bcast/Collect — the in-process
+/// stand-in the benchmarks use.
+///
+/// A node whose channel is closed (thread panicked, or severed via the
+/// [`ThreadedCluster::kill_node`] chaos hook) is pruned from the roster
+/// and subsequent rounds degrade to the survivors, mirroring the socket
+/// transport's peer-death behavior; only losing *every* node is an error.
 pub struct ThreadedCluster {
-    senders: Vec<mpsc::Sender<Command>>,
+    /// Per-node command channel; `None` marks a node declared dead.
+    senders: Vec<Option<mpsc::Sender<Command>>>,
     replies: mpsc::Receiver<Reply>,
     handles: Vec<std::thread::JoinHandle<()>>,
     net: TransferLedger,
     dim: usize,
     n: usize,
     round: usize,
+    /// How long to wait for each query's replies before declaring the
+    /// silent nodes dead.
+    reply_timeout: Duration,
     /// Broadcast payload reused across rounds (see [`refresh_payload`]).
     payload: Option<Arc<Vec<f64>>>,
 }
@@ -367,16 +385,15 @@ impl ThreadedCluster {
         for mut w in workers {
             let (tx, rx) = mpsc::channel::<Command>();
             let out = reply_tx.clone();
-            senders.push(tx);
+            senders.push(Some(tx));
             handles.push(std::thread::spawn(move || {
                 while let Ok(cmd) = rx.recv() {
                     let reply = match cmd {
-                        Command::Round(z) => {
+                        Command::Round(z, round) => {
                             let (x, u) = w.round(&z);
-                            // the coordinator stamps the round tag on receipt
                             Reply::Round(NodeReply {
                                 node: w.id,
-                                round: 0,
+                                round,
                                 lag: 0,
                                 x,
                                 u,
@@ -409,8 +426,49 @@ impl ThreadedCluster {
             dim,
             n,
             round: 0,
+            reply_timeout: Duration::from_secs(60),
             payload: None,
         }
+    }
+
+    /// Override the per-query reply deadline (default 60 s): how long a
+    /// round waits for stragglers before declaring them dead.
+    pub fn with_reply_timeout(mut self, timeout: Duration) -> ThreadedCluster {
+        self.reply_timeout = timeout;
+        self
+    }
+
+    /// Chaos hook: sever node `node`'s command channel, as if its process
+    /// died mid-run.  The next round degrades to the survivors — the
+    /// deterministic way to exercise the quorum-degradation path in tests.
+    pub fn kill_node(&mut self, node: usize) {
+        if let Some(slot) = self.senders.get_mut(node) {
+            *slot = None;
+        }
+    }
+
+    /// Nodes still reachable.
+    pub fn live(&self) -> usize {
+        self.senders.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Send one command to every live node, pruning nodes whose channel
+    /// is closed.  Returns how many sends succeeded.
+    fn broadcast<F: Fn() -> Command>(&mut self, make: F, what: &str) -> usize {
+        let mut sent = 0;
+        for i in 0..self.senders.len() {
+            let ok = match &self.senders[i] {
+                Some(tx) => tx.send(make()).is_ok(),
+                None => continue,
+            };
+            if ok {
+                sent += 1;
+            } else {
+                eprintln!("[threaded] node {i} is gone; degrading before the {what}");
+                self.senders[i] = None;
+            }
+        }
+        sent
     }
 }
 
@@ -427,41 +485,75 @@ impl Cluster for ThreadedCluster {
         let bytes = self.dim as u64 * 8;
         let round = self.round;
         self.round += 1;
-        for (i, tx) in self.senders.iter().enumerate() {
-            if tx.send(Command::Round(payload.clone())).is_err() {
-                anyhow::bail!("node {i} died before the round-{round} broadcast");
+        let expected = self.broadcast(|| Command::Round(payload.clone(), round), "round broadcast");
+        anyhow::ensure!(expected > 0, "round {round}: every node worker is dead");
+        self.net.net_down_bytes += expected as u64 * bytes;
+        let mut replies = Vec::with_capacity(expected);
+        let deadline = std::time::Instant::now() + self.reply_timeout;
+        while replies.len() < expected {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
             }
-            self.net.net_down_bytes += bytes;
-        }
-        let mut replies = Vec::with_capacity(self.n);
-        for _ in 0..self.n {
-            match self.replies.recv() {
-                Ok(Reply::Round(mut r)) => {
+            match self.replies.recv_timeout(deadline - now) {
+                Ok(Reply::Round(r)) if r.round == round => {
                     self.net.net_up_bytes += 2 * bytes;
-                    r.round = round;
                     replies.push(r);
                 }
+                // a straggler's answer to a round that already timed out
+                Ok(Reply::Round(_)) => continue,
                 Ok(_) => anyhow::bail!("protocol violation: non-round reply in round {round}"),
-                Err(_) => anyhow::bail!("a node worker died during round {round}"),
+                Err(_) => break,
             }
         }
+        if replies.len() < expected {
+            // declare the silent nodes dead and degrade to the survivors
+            let mut saw = vec![false; self.n];
+            for r in &replies {
+                if r.node < self.n {
+                    saw[r.node] = true;
+                }
+            }
+            for i in 0..self.senders.len() {
+                if self.senders[i].is_some() && !saw[i] {
+                    eprintln!("[threaded] node {i} never replied to round {round}; degrading");
+                    self.senders[i] = None;
+                }
+            }
+        }
+        anyhow::ensure!(
+            !replies.is_empty(),
+            "round {round}: the cluster lost every node"
+        );
         replies.sort_by_key(|r| r.node);
         Ok(replies)
     }
 
     fn loss_value(&mut self) -> anyhow::Result<f64> {
-        for (i, tx) in self.senders.iter().enumerate() {
-            if tx.send(Command::Loss).is_err() {
-                anyhow::bail!("node {i} died before the loss query");
+        let expected = self.broadcast(|| Command::Loss, "loss query");
+        anyhow::ensure!(expected > 0, "loss query: every node worker is dead");
+        let mut total = 0.0;
+        let mut got = 0usize;
+        let deadline = std::time::Instant::now() + self.reply_timeout;
+        while got < expected {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.replies.recv_timeout(deadline - now) {
+                Ok(Reply::Loss(v)) => {
+                    total += v;
+                    got += 1;
+                }
+                // a straggler's answer to a round that already timed out
+                Ok(Reply::Round(_)) => continue,
+                Ok(_) => anyhow::bail!("protocol violation: non-loss reply to loss query"),
+                Err(_) => break,
             }
         }
-        let mut total = 0.0;
-        for _ in 0..self.n {
-            match self.replies.recv() {
-                Ok(Reply::Loss(v)) => total += v,
-                Ok(_) => anyhow::bail!("protocol violation: non-loss reply to loss query"),
-                Err(_) => anyhow::bail!("a node worker died during the loss query"),
-            }
+        anyhow::ensure!(got > 0, "loss query: no node replied");
+        if got < expected {
+            eprintln!("[threaded] loss query degraded to {got} of {expected} node(s)");
         }
         Ok(total)
     }
@@ -471,7 +563,7 @@ impl Cluster for ThreadedCluster {
         // the traffic it actually observed.
         let mut total = self.net.clone();
         let mut expected = 0;
-        for tx in &self.senders {
+        for tx in self.senders.iter().flatten() {
             if tx.send(Command::Ledger).is_ok() {
                 expected += 1;
             }
@@ -487,18 +579,29 @@ impl Cluster for ThreadedCluster {
     }
 
     fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
-        for (i, tx) in self.senders.iter().enumerate() {
-            if tx.send(Command::Export).is_err() {
-                anyhow::bail!("node {i} died before the warm-state export");
+        let expected = self.broadcast(|| Command::Export, "warm-state export");
+        anyhow::ensure!(expected > 0, "warm-state export: every node worker is dead");
+        let mut out = Vec::with_capacity(expected);
+        let deadline = std::time::Instant::now() + self.reply_timeout;
+        while out.len() < expected {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.replies.recv_timeout(deadline - now) {
+                Ok(Reply::Warm(ws)) => out.push(*ws),
+                // a straggler's answer to a round that already timed out
+                Ok(Reply::Round(_)) => continue,
+                Ok(_) => anyhow::bail!("protocol violation: non-warm reply to export"),
+                Err(_) => break,
             }
         }
-        let mut out = Vec::with_capacity(self.n);
-        for _ in 0..self.n {
-            match self.replies.recv() {
-                Ok(Reply::Warm(ws)) => out.push(*ws),
-                Ok(_) => anyhow::bail!("protocol violation: non-warm reply to export"),
-                Err(_) => anyhow::bail!("a node worker died during the warm-state export"),
-            }
+        anyhow::ensure!(!out.is_empty(), "warm-state export: no node replied");
+        if out.len() < expected {
+            eprintln!(
+                "[threaded] warm-state export degraded to {} of {expected} node(s)",
+                out.len()
+            );
         }
         out.sort_by_key(|s| s.node);
         Ok(out)
@@ -506,21 +609,27 @@ impl Cluster for ThreadedCluster {
 
     fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
         let shared = Arc::new(states.to_vec());
-        for (i, tx) in self.senders.iter().enumerate() {
-            if tx.send(Command::Reseed(shared.clone(), params)).is_err() {
-                anyhow::bail!("node {i} died before the re-seed");
+        let expected = self.broadcast(|| Command::Reseed(shared.clone(), params), "re-seed");
+        anyhow::ensure!(expected > 0, "re-seed: every node worker is dead");
+        let mut got = 0usize;
+        let deadline = std::time::Instant::now() + self.reply_timeout;
+        while got < expected {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
             }
-        }
-        for _ in 0..self.n {
-            match self.replies.recv() {
-                Ok(Reply::Reseeded(_)) => {}
+            match self.replies.recv_timeout(deadline - now) {
+                Ok(Reply::Reseeded(_)) => got += 1,
                 Ok(Reply::ReseedFailed(node)) => {
                     anyhow::bail!("no warm state for node {node}")
                 }
+                // a straggler's answer to a round that already timed out
+                Ok(Reply::Round(_)) => continue,
                 Ok(_) => anyhow::bail!("protocol violation: non-reseed reply to re-seed"),
-                Err(_) => anyhow::bail!("a node worker died during the re-seed"),
+                Err(_) => break,
             }
         }
+        anyhow::ensure!(got > 0, "re-seed: no node replied");
         Ok(())
     }
 }
@@ -623,6 +732,25 @@ mod tests {
         thr.round(&z).unwrap();
         thr.round(&z).unwrap();
         assert_eq!(thr.ledger().net_alloc_saved_bytes, dim as u64 * 8);
+    }
+
+    #[test]
+    fn threaded_degrades_when_a_node_is_killed() {
+        let (w, dim) = make_workers(3);
+        let mut thr = ThreadedCluster::new(w, dim).with_reply_timeout(Duration::from_secs(5));
+        let z = vec![0.0; dim];
+        assert_eq!(thr.round(&z).unwrap().len(), 3);
+        thr.kill_node(1);
+        assert_eq!(thr.live(), 2);
+        let r = thr.round(&z).unwrap();
+        assert_eq!(r.len(), 2, "dead node must degrade, not abort");
+        assert_eq!((r[0].node, r[1].node), (0, 2));
+        // degraded queries keep working over the survivors
+        assert!(thr.loss_value().unwrap().is_finite());
+        assert_eq!(thr.export_warm().unwrap().len(), 2);
+        thr.kill_node(0);
+        thr.kill_node(2);
+        assert!(thr.round(&z).is_err(), "zero survivors must be an error");
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! [`SocketCluster`]: the coordinator side of the socket transport.
+//!
+//! Connects to a roster of `psfit worker` addresses, ships each node its
+//! shard + config over the wire, and then drives the exact consensus
+//! protocol of the in-process clusters — Bcast z, Collect (x_i, u_i) —
+//! except the bytes are real.  Peer loss degrades the roster instead of
+//! aborting: a worker that errors, times out, or closes its connection is
+//! declared dead, the round commits with the survivors (the solver weights
+//! its averages by actual replies), and only losing *every* worker is an
+//! error.
+//!
+//! Byte accounting: `Round` request/reply frames land in
+//! `net_down_bytes` / `net_up_bytes` — the same entries the in-process
+//! transports model — while handshakes, setup, and control queries (loss,
+//! ledger, warm export, reseed) land in `net_resync_bytes`.  Every frame
+//! put on a socket increments `wire_frames`.  Unlike the modeled ledgers,
+//! these counts include the protocol's own framing overhead.
+
+use std::time::Duration;
+
+use crate::backend::BlockParams;
+use crate::config::{BackendKind, Config, TransportKind};
+use crate::data::Dataset;
+use crate::metrics::{CoordinationStats, TransferLedger};
+use crate::network::socket::wire::{self, Setup, WireCommand, WireShard};
+use crate::network::socket::{connect, Endpoint, SocketStream};
+use crate::network::{Cluster, NodeReply, WarmState};
+
+/// Connection settings for a [`SocketCluster`], normally derived from
+/// `platform.*` via [`SocketOptions::from_config`].
+#[derive(Debug, Clone)]
+pub struct SocketOptions {
+    /// Worker addresses, one per node in roster order.
+    pub workers: Vec<String>,
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// Read timeout per expected reply; `None` waits forever.
+    pub read_timeout: Option<Duration>,
+    /// Connect retries after the first attempt.
+    pub connect_retries: u32,
+}
+
+impl SocketOptions {
+    /// Derive the options a config's `platform` section implies.
+    pub fn from_config(cfg: &Config) -> SocketOptions {
+        SocketOptions {
+            workers: cfg.platform.workers.clone(),
+            connect_timeout: Duration::from_millis(cfg.platform.connect_timeout_ms.max(1)),
+            read_timeout: match cfg.platform.read_timeout_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            connect_retries: cfg.platform.connect_retries,
+        }
+    }
+}
+
+/// One live worker connection.
+struct Peer {
+    stream: SocketStream,
+    addr: String,
+}
+
+/// Coordinator-side cluster over `psfit worker` processes.
+///
+/// Implements [`Cluster`], so `admm::solve` drives it exactly like the
+/// in-process transports; on the same seed and ISA the supports and
+/// objectives match them bit-for-bit (all floats cross the wire via
+/// `to_le_bytes`).
+pub struct SocketCluster {
+    /// Slot per roster position; `None` = declared dead.
+    peers: Vec<Option<Peer>>,
+    /// Total roster size, including degraded members.
+    roster: usize,
+    /// Outer round counter (echoed by workers in every `RoundReply`).
+    round: u64,
+    /// Wire-side ledger: bytes and frames this coordinator actually put
+    /// on (or read off) its sockets.
+    net: TransferLedger,
+    /// Round/participation/death accounting, reported via
+    /// [`Cluster::coordination`].
+    stats: CoordinationStats,
+    /// Reusable encode buffer for the per-round broadcast.
+    scratch: Vec<u8>,
+}
+
+impl SocketCluster {
+    /// Connect to the fleet named by `cfg.platform.workers` and ship each
+    /// node its shard.  Fails (rather than degrades) when any worker is
+    /// unreachable or rejects its setup — a run should not *start* on a
+    /// partial roster.
+    pub fn connect(ds: &Dataset, cfg: &Config) -> anyhow::Result<SocketCluster> {
+        let opts = SocketOptions::from_config(cfg);
+        SocketCluster::connect_with(ds, cfg, &opts)
+    }
+
+    /// [`SocketCluster::connect`] with explicit connection settings.
+    pub fn connect_with(
+        ds: &Dataset,
+        cfg: &Config,
+        opts: &SocketOptions,
+    ) -> anyhow::Result<SocketCluster> {
+        anyhow::ensure!(
+            cfg.platform.backend == BackendKind::Native,
+            "the socket transport runs workers on the native backend only"
+        );
+        let roster = ds.nodes();
+        anyhow::ensure!(
+            opts.workers.len() >= roster,
+            "socket transport needs {roster} worker address(es), got {}",
+            opts.workers.len()
+        );
+        // Worker-side config: identical solver math, but local transport
+        // with an empty roster so a worker can never recursively dial the
+        // fleet it belongs to.
+        let mut wcfg = cfg.clone();
+        wcfg.platform.transport = TransportKind::Local;
+        wcfg.platform.workers.clear();
+        let config_text = wcfg.to_json().to_string();
+
+        let mut net = TransferLedger::default();
+        let mut peers = Vec::with_capacity(roster);
+        for (i, shard) in ds.shards.iter().take(roster).enumerate() {
+            let addr = opts.workers[i].clone();
+            let ep = Endpoint::parse(&addr);
+            let mut stream = connect(&ep, opts.connect_timeout, opts.connect_retries)?;
+            stream.set_read_timeout(opts.read_timeout)?;
+            net.net_resync_bytes += wire::client_handshake(&mut stream)? as u64;
+            // The storage policy is applied here, coordinator-side, so the
+            // worker reconstructs exactly the dense/CSR layout the
+            // in-process transports would have used.
+            let shard =
+                shard.with_storage_policy(cfg.platform.sparse, cfg.platform.sparse_threshold);
+            let setup = Setup {
+                node: i as u32,
+                nodes: roster as u32,
+                n_features: ds.n_features as u32,
+                width: ds.width as u32,
+                direct_mode: false,
+                config: config_text.clone(),
+                shard: WireShard::from_shard(&shard),
+            };
+            let sent = wire::write_frame(&mut stream, &WireCommand::Setup(Box::new(setup)))?;
+            net.net_resync_bytes += sent as u64;
+            net.wire_frames += 1;
+            match wire::read_frame(&mut stream)? {
+                Some((WireCommand::SetupOk { node }, got)) if node as usize == i => {
+                    net.net_resync_bytes += got as u64;
+                    net.wire_frames += 1;
+                }
+                Some((WireCommand::Error { message }, _)) => {
+                    anyhow::bail!("worker {addr} rejected setup for node {i}: {message}")
+                }
+                Some((other, _)) => {
+                    anyhow::bail!("worker {addr}: unexpected `{}` to setup", other.name())
+                }
+                None => anyhow::bail!("worker {addr} closed the connection during setup"),
+            }
+            peers.push(Some(Peer { stream, addr }));
+        }
+        Ok(SocketCluster {
+            peers,
+            roster,
+            round: 0,
+            net,
+            stats: CoordinationStats::new(roster),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Peers still connected.
+    pub fn live(&self) -> usize {
+        self.peers.iter().flatten().count()
+    }
+
+    /// Declare a peer dead: drop its connection, log, count the death.
+    fn kill(&mut self, node: usize, why: &str) {
+        if let Some(peer) = self.peers[node].take() {
+            eprintln!("[socket] node {node} ({}) lost: {why}; degrading", peer.addr);
+            self.stats.deaths += 1;
+        }
+    }
+}
+
+/// One request/reply control exchange with a peer, bytes ledgered as
+/// resync traffic.  An `Error` reply, a clean close, or any wire error
+/// becomes `Err` — callers kill the peer on that.
+fn query(
+    peer: &mut Peer,
+    cmd: &WireCommand,
+    net: &mut TransferLedger,
+) -> anyhow::Result<WireCommand> {
+    let sent = wire::write_frame(&mut peer.stream, cmd)?;
+    net.net_resync_bytes += sent as u64;
+    net.wire_frames += 1;
+    match wire::read_frame(&mut peer.stream)? {
+        Some((WireCommand::Error { message }, _)) => anyhow::bail!("{message}"),
+        Some((reply, got)) => {
+            net.net_resync_bytes += got as u64;
+            net.wire_frames += 1;
+            Ok(reply)
+        }
+        None => anyhow::bail!("connection closed mid-query"),
+    }
+}
+
+impl Cluster for SocketCluster {
+    fn nodes(&self) -> usize {
+        self.roster
+    }
+
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+        self.round += 1;
+        let round = self.round;
+        // encode once, write the same bytes to every live peer
+        let mut payload = std::mem::take(&mut self.scratch);
+        wire::encode_round_payload(round, z, &mut payload);
+        let mut sent = vec![false; self.peers.len()];
+        for i in 0..self.peers.len() {
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match wire::write_payload(&mut peer.stream, &payload) {
+                    Ok(n) => {
+                        self.net.net_down_bytes += n as u64;
+                        self.net.wire_frames += 1;
+                        sent[i] = true;
+                    }
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        self.scratch = payload;
+        // collect replies from everyone the broadcast reached
+        let mut replies = Vec::new();
+        for i in 0..self.peers.len() {
+            if !sent[i] {
+                continue;
+            }
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match wire::read_frame(&mut peer.stream) {
+                    Ok(Some((WireCommand::RoundReply { node, round: r, x, u }, got)))
+                        if node as usize == i && r == round =>
+                    {
+                        self.net.net_up_bytes += got as u64;
+                        self.net.wire_frames += 1;
+                        self.stats.record_fold(i, 0);
+                        replies.push(NodeReply {
+                            node: i,
+                            round: round as usize,
+                            lag: 0,
+                            x,
+                            u,
+                        });
+                    }
+                    Ok(Some((WireCommand::Error { message }, _))) => fail = Some(message),
+                    Ok(Some((other, _))) => {
+                        fail = Some(format!("unexpected `{}` to round {round}", other.name()))
+                    }
+                    Ok(None) => fail = Some(format!("connection closed during round {round}")),
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        self.stats.rounds += 1;
+        anyhow::ensure!(!replies.is_empty(), "round {round}: every socket worker is gone");
+        Ok(replies)
+    }
+
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        let mut total = 0.0;
+        let mut got = 0usize;
+        for i in 0..self.peers.len() {
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match query(peer, &WireCommand::Loss, &mut self.net) {
+                    Ok(WireCommand::LossReply { value }) => {
+                        total += value;
+                        got += 1;
+                    }
+                    Ok(other) => fail = Some(format!("unexpected `{}` to loss", other.name())),
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        anyhow::ensure!(got > 0, "loss: every socket worker is gone");
+        Ok(total)
+    }
+
+    fn ledger(&mut self) -> TransferLedger {
+        let mut worker_side = Vec::new();
+        for i in 0..self.peers.len() {
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match query(peer, &WireCommand::Ledger, &mut self.net) {
+                    Ok(WireCommand::LedgerReply(l)) => worker_side.push(*l),
+                    Ok(other) => fail = Some(format!("unexpected `{}` to ledger", other.name())),
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        // clone *after* the queries so their own bytes are included
+        let mut out = self.net.clone();
+        for l in &worker_side {
+            out.merge(l);
+        }
+        out
+    }
+
+    fn coordination(&self) -> Option<CoordinationStats> {
+        Some(self.stats.clone())
+    }
+
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        let mut states = Vec::new();
+        for i in 0..self.peers.len() {
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match query(peer, &WireCommand::Export, &mut self.net) {
+                    Ok(WireCommand::WarmReply(ws)) => states.push(*ws),
+                    Ok(other) => fail = Some(format!("unexpected `{}` to export", other.name())),
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        anyhow::ensure!(!states.is_empty(), "warm export: every socket worker is gone");
+        states.sort_by_key(|s| s.node);
+        Ok(states)
+    }
+
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        let mut got = 0usize;
+        for i in 0..self.peers.len() {
+            if self.peers[i].is_none() {
+                continue;
+            }
+            // each peer is shipped only its own state
+            let Some(state) = states.iter().find(|s| s.node == i) else {
+                anyhow::bail!("reseed: no warm state for node {i}");
+            };
+            let cmd = WireCommand::Reseed {
+                rho_l: params.rho_l,
+                rho_c: params.rho_c,
+                reg: params.reg,
+                states: vec![state.clone()],
+            };
+            let mut fail = None;
+            if let Some(peer) = self.peers[i].as_mut() {
+                match query(peer, &cmd, &mut self.net) {
+                    Ok(WireCommand::ReseedOk { node }) if node as usize == i => got += 1,
+                    Ok(other) => fail = Some(format!("unexpected `{}` to reseed", other.name())),
+                    Err(e) => fail = Some(e.to_string()),
+                }
+            }
+            if let Some(msg) = fail {
+                self.kill(i, &msg);
+            }
+        }
+        anyhow::ensure!(got > 0, "reseed: every socket worker is gone");
+        Ok(())
+    }
+}
+
+impl Drop for SocketCluster {
+    fn drop(&mut self) {
+        // best-effort clean close so worker sessions exit without noise
+        for peer in self.peers.iter_mut().flatten() {
+            let _ = wire::write_frame(&mut peer.stream, &WireCommand::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn connect_rejects_bad_rosters_before_dialing() {
+        let ds = SyntheticSpec::regression(40, 120, 2).generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.platform.transport = TransportKind::Socket;
+        // too few addresses
+        cfg.platform.workers = vec!["127.0.0.1:1".into()];
+        let err = SocketCluster::connect(&ds, &cfg).unwrap_err().to_string();
+        assert!(err.contains("worker address(es)"), "{err}");
+        // wrong backend
+        cfg.platform.workers = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        cfg.platform.backend = BackendKind::Xla;
+        let err = SocketCluster::connect(&ds, &cfg).unwrap_err().to_string();
+        assert!(err.contains("native backend"), "{err}");
+    }
+
+    #[test]
+    fn options_follow_the_config() {
+        let mut cfg = Config::default();
+        cfg.platform.connect_timeout_ms = 250;
+        cfg.platform.read_timeout_ms = 0;
+        cfg.platform.connect_retries = 7;
+        let opts = SocketOptions::from_config(&cfg);
+        assert_eq!(opts.connect_timeout, Duration::from_millis(250));
+        assert_eq!(opts.read_timeout, None);
+        assert_eq!(opts.connect_retries, 7);
+    }
+}

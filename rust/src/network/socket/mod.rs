@@ -1,0 +1,310 @@
+//! Socket transport: real multi-process clusters over TCP or Unix
+//! domain sockets.
+//!
+//! This subsystem replaces the in-process "MPI stand-in" with actual
+//! processes on an actual wire, while keeping the solver's view — the
+//! [`crate::network::Cluster`] trait — unchanged:
+//!
+//! - [`wire`]: the versioned, length-prefixed, checksummed binary
+//!   protocol every psfit socket speaks.
+//! - [`cluster`]: [`SocketCluster`], the coordinator side — connects to a
+//!   roster of worker addresses, ships each node its shard, and drives
+//!   consensus rounds over the wire with peer-death degradation.
+//! - [`worker`]: the `psfit worker` process — hosts one `NodeWorker` per
+//!   connection on a `NativeBackend`, so a single worker process serves
+//!   many concurrent jobs (the multiplexing `psfit serve` relies on).
+//!
+//! Addresses are `host:port` for TCP or `unix:/path/to.sock` for Unix
+//! domain sockets.  All floats cross the wire via `to_le_bytes`, so a
+//! localhost socket cluster reproduces the in-process transports'
+//! supports and objectives bit-for-bit on the same seed (asserted in
+//! `tests/socket.rs` and by the CI multi-process smoke job).
+
+pub mod cluster;
+pub mod wire;
+pub mod worker;
+
+pub use cluster::{SocketCluster, SocketOptions};
+pub use wire::{JobSpec, JobStatus, JobSummary, WireCommand};
+pub use worker::{run_worker, spawn_local_worker, WorkerOpts};
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A parsed socket address: TCP `host:port` or `unix:/path`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP endpoint in `host:port` form.
+    Tcp(String),
+    /// Unix-domain socket path.
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse an address string; a `unix:` prefix selects a Unix-domain
+    /// socket, anything else is treated as TCP `host:port`.
+    pub fn parse(s: &str) -> Endpoint {
+        match s.strip_prefix("unix:") {
+            Some(path) => Endpoint::Unix(PathBuf::from(path)),
+            None => Endpoint::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => f.write_str(addr),
+            Endpoint::Unix(path) => write!(f, "unix:{}", path.display()),
+        }
+    }
+}
+
+/// A connected stream over either socket family.  TCP streams run with
+/// `TCP_NODELAY` so the small per-round vectors are not Nagle-delayed.
+#[derive(Debug)]
+pub enum SocketStream {
+    /// TCP connection.
+    Tcp(TcpStream),
+    /// Unix-domain connection.
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl SocketStream {
+    /// Bound the blocking time of every subsequent read; `None` blocks
+    /// forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            SocketStream::Tcp(s) => s.set_read_timeout(timeout),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.set_read_timeout(timeout),
+        }
+    }
+}
+
+impl Read for SocketStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SocketStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            SocketStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listener over either socket family.
+#[derive(Debug)]
+pub enum SocketListener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener (the path is removed first so rebinding a
+    /// stale socket file works).
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener, PathBuf),
+}
+
+impl SocketListener {
+    /// Bind the endpoint.  TCP port `0` binds an ephemeral port; the
+    /// actual address is reported by [`SocketListener::local_endpoint`].
+    pub fn bind(ep: &Endpoint) -> anyhow::Result<SocketListener> {
+        match ep {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("cannot bind tcp {addr}: {e}"))?;
+                Ok(SocketListener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = std::os::unix::net::UnixListener::bind(path).map_err(|e| {
+                    anyhow::anyhow!("cannot bind unix socket {}: {e}", path.display())
+                })?;
+                Ok(SocketListener::Unix(l, path.clone()))
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(path) => {
+                anyhow::bail!(
+                    "unix-domain sockets are not supported on this platform ({})",
+                    path.display()
+                )
+            }
+        }
+    }
+
+    /// Accept one connection.
+    pub fn accept(&self) -> std::io::Result<SocketStream> {
+        match self {
+            SocketListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(SocketStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            SocketListener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(SocketStream::Unix(s))
+            }
+        }
+    }
+
+    /// The actually-bound address in the same syntax [`Endpoint::parse`]
+    /// accepts (resolves TCP port `0` to the assigned port).
+    pub fn local_endpoint(&self) -> String {
+        match self {
+            SocketListener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?:?".to_string()),
+            #[cfg(unix)]
+            SocketListener::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for SocketListener {
+    fn drop(&mut self) {
+        if let SocketListener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Connect to `ep` with a per-attempt timeout and bounded retry
+/// (`retries` additional attempts after the first, with linear backoff) —
+/// workers that are still binding their listener when the coordinator
+/// starts are absorbed here instead of failing the run.
+pub fn connect(ep: &Endpoint, timeout: Duration, retries: u32) -> anyhow::Result<SocketStream> {
+    let mut last_err = String::new();
+    for attempt in 0..=retries {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(50 * attempt as u64));
+        }
+        match connect_once(ep, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = e.to_string(),
+        }
+    }
+    anyhow::bail!(
+        "cannot connect to {ep} after {} attempt(s): {last_err}",
+        retries + 1
+    )
+}
+
+fn connect_once(ep: &Endpoint, timeout: Duration) -> anyhow::Result<SocketStream> {
+    match ep {
+        Endpoint::Tcp(addr) => {
+            let mut resolved = addr
+                .to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("cannot resolve {addr}: {e}"))?;
+            let sock = resolved
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{addr} resolves to no address"))?;
+            let s = TcpStream::connect_timeout(&sock, timeout)?;
+            let _ = s.set_nodelay(true);
+            Ok(SocketStream::Tcp(s))
+        }
+        #[cfg(unix)]
+        Endpoint::Unix(path) => {
+            let s = std::os::unix::net::UnixStream::connect(path)?;
+            Ok(SocketStream::Unix(s))
+        }
+        #[cfg(not(unix))]
+        Endpoint::Unix(path) => anyhow::bail!(
+            "unix-domain sockets are not supported on this platform ({})",
+            path.display()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parse_and_display() {
+        assert_eq!(
+            Endpoint::parse("127.0.0.1:7700"),
+            Endpoint::Tcp("127.0.0.1:7700".into())
+        );
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/w.sock"),
+            Endpoint::Unix(PathBuf::from("/tmp/w.sock"))
+        );
+        assert_eq!(Endpoint::parse("unix:/tmp/w.sock").to_string(), "unix:/tmp/w.sock");
+        assert_eq!(Endpoint::parse("h:1").to_string(), "h:1");
+    }
+
+    #[test]
+    fn tcp_listener_reports_ephemeral_port_and_talks() {
+        let l = SocketListener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+        let addr = l.local_endpoint();
+        assert!(!addr.ends_with(":0"), "port 0 must resolve: {addr}");
+        let t = std::thread::spawn(move || {
+            let mut s = l.accept().unwrap();
+            let mut b = [0u8; 2];
+            s.read_exact(&mut b).unwrap();
+            s.write_all(&b).unwrap();
+        });
+        let mut c = connect(&Endpoint::parse(&addr), Duration::from_secs(2), 2).unwrap();
+        c.write_all(b"hi").unwrap();
+        let mut back = [0u8; 2];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hi");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_to_dead_port_fails_cleanly() {
+        // bind-then-drop guarantees the port is closed
+        let l = SocketListener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+        let addr = l.local_endpoint();
+        drop(l);
+        let err = connect(&Endpoint::parse(&addr), Duration::from_millis(200), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot connect"), "{err}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_roundtrip() {
+        let path = std::env::temp_dir().join(format!("psfit-sock-test-{}", std::process::id()));
+        let ep = Endpoint::Unix(path.clone());
+        let l = SocketListener::bind(&ep).unwrap();
+        let t = std::thread::spawn(move || {
+            let mut s = l.accept().unwrap();
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).unwrap();
+            s.write_all(&[b[0] + 1]).unwrap();
+        });
+        let mut c = connect(&ep, Duration::from_secs(2), 0).unwrap();
+        c.write_all(&[41]).unwrap();
+        let mut back = [0u8; 1];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(back[0], 42);
+        t.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

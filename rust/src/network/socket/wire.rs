@@ -1,0 +1,1185 @@
+//! Versioned, length-prefixed binary wire protocol for the socket
+//! transport and the `psfit serve` daemon.
+//!
+//! Every connection starts with an 8-byte handshake in each direction
+//! (`b"PSFW"` magic + little-endian `u32` protocol version) so version
+//! skew and port confusion fail with a clean error instead of a garbled
+//! stream.  After the handshake, each message is one *frame*:
+//!
+//! ```text
+//! | u32 payload_len (LE) | payload bytes | u64 FNV-1a(payload) (LE) |
+//! ```
+//!
+//! The payload's first byte is the command tag; all integers are
+//! little-endian and floats are IEEE-754 `to_le_bytes`, so `f64`/`f32`
+//! values survive the wire bit-for-bit — the property behind the
+//! socket-vs-in-process parity oracle.  [`read_frame`] distinguishes a
+//! clean close (EOF exactly at a frame boundary → `Ok(None)`) from a
+//! truncated stream, and every decode path is bounds-checked: truncated
+//! frames, corrupted checksums, oversized lengths, and unknown tags all
+//! surface as errors, never panics or hangs (reads respect the stream's
+//! configured timeout).
+
+use crate::data::{Shard, ShardData};
+use crate::linalg::{CsrMatrix, Matrix};
+use crate::metrics::TransferLedger;
+use crate::network::WarmState;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// Handshake magic: "PSfit Wire".
+pub const MAGIC: &[u8; 4] = b"PSFW";
+/// Wire protocol version; bumped on any frame-layout change.
+pub const VERSION: u32 = 1;
+/// Upper bound on a frame payload (1 GiB) — rejects absurd lengths from a
+/// corrupted or hostile stream before any allocation happens.
+pub const MAX_FRAME: usize = 1 << 30;
+/// Per-frame overhead in bytes beyond the payload (length prefix +
+/// checksum trailer).
+pub const FRAME_OVERHEAD: usize = 4 + 8;
+/// Bytes exchanged by a complete two-way handshake.
+pub const HANDSHAKE_BYTES: usize = 16;
+
+// Command tags.  Coordinator -> worker: 1..=7; worker -> coordinator:
+// 16..=22; serve client -> daemon: 32..=35; daemon -> client: 48..=51.
+const TAG_SETUP: u8 = 1;
+const TAG_ROUND: u8 = 2;
+const TAG_LOSS: u8 = 3;
+const TAG_LEDGER: u8 = 4;
+const TAG_EXPORT: u8 = 5;
+const TAG_RESEED: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_SETUP_OK: u8 = 16;
+const TAG_ROUND_REPLY: u8 = 17;
+const TAG_LOSS_REPLY: u8 = 18;
+const TAG_LEDGER_REPLY: u8 = 19;
+const TAG_WARM_REPLY: u8 = 20;
+const TAG_RESEED_OK: u8 = 21;
+const TAG_ERROR: u8 = 22;
+const TAG_SUBMIT: u8 = 32;
+const TAG_STATUS: u8 = 33;
+const TAG_PREDICT: u8 = 34;
+const TAG_JOBS: u8 = 35;
+const TAG_SUBMITTED: u8 = 48;
+const TAG_STATUS_REPLY: u8 = 49;
+const TAG_PREDICT_REPLY: u8 = 50;
+const TAG_JOBS_REPLY: u8 = 51;
+
+/// FNV-1a 64-bit hash — the per-frame checksum (same constants as the
+/// checkpoint format's integrity hash).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A node's training shard in wire form; rebuilt into a [`Shard`] on the
+/// worker with bit-identical `f32` contents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireShard {
+    /// Per-sample labels (length = logical rows × label width).
+    pub labels: Vec<f32>,
+    /// Design-matrix payload in the storage layout the coordinator's
+    /// density policy selected.
+    pub data: WireShardData,
+}
+
+/// Storage layout of a [`WireShard`]'s design matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireShardData {
+    /// Row-major dense values.
+    Dense {
+        /// Logical row count.
+        rows: u32,
+        /// Column (feature) count.
+        cols: u32,
+        /// `rows * cols` values, row-major.
+        vals: Vec<f32>,
+    },
+    /// Compressed sparse rows as per-row `(column, value)` lists.
+    Csr {
+        /// Column (feature) count.
+        cols: u32,
+        /// One `(column, value)` list per row, columns ascending.
+        rows: Vec<Vec<(u32, f32)>>,
+    },
+}
+
+impl WireShard {
+    /// Capture a shard for shipment (after the coordinator's storage
+    /// policy has been applied, so worker and in-process backends see the
+    /// same representation).
+    pub fn from_shard(shard: &Shard) -> WireShard {
+        let data = match &shard.data {
+            ShardData::Dense(m) => WireShardData::Dense {
+                rows: m.rows as u32,
+                cols: m.cols as u32,
+                vals: m.to_vec(),
+            },
+            ShardData::Csr(c) => {
+                let mut rows = Vec::with_capacity(c.rows);
+                for i in 0..c.rows {
+                    let (idx, vals) = c.row(i);
+                    rows.push(idx.iter().copied().zip(vals.iter().copied()).collect());
+                }
+                WireShardData::Csr {
+                    cols: c.cols as u32,
+                    rows,
+                }
+            }
+        };
+        WireShard {
+            labels: shard.labels.clone(),
+            data,
+        }
+    }
+
+    /// Rebuild the shard on the worker side.  `width` is the label width
+    /// shipped in the `Setup` envelope.
+    pub fn to_shard(&self, width: usize) -> anyhow::Result<Shard> {
+        match &self.data {
+            WireShardData::Dense { rows, cols, vals } => {
+                let (rows, cols) = (*rows as usize, *cols as usize);
+                anyhow::ensure!(
+                    rows.checked_mul(cols) == Some(vals.len()),
+                    "dense shard shape {rows}x{cols} does not match {} value(s)",
+                    vals.len()
+                );
+                Ok(Shard::dense(
+                    Matrix::from_flat(rows, cols, vals),
+                    self.labels.clone(),
+                    width,
+                ))
+            }
+            WireShardData::Csr { cols, rows } => {
+                let cols = *cols as usize;
+                for (i, row) in rows.iter().enumerate() {
+                    for &(j, _) in row {
+                        anyhow::ensure!(
+                            (j as usize) < cols,
+                            "csr shard row {i} references column {j} >= {cols}"
+                        );
+                    }
+                }
+                Ok(Shard {
+                    data: ShardData::Csr(Arc::new(CsrMatrix::from_rows(cols, rows.clone()))),
+                    labels: self.labels.clone(),
+                    width,
+                })
+            }
+        }
+    }
+}
+
+/// The `Setup` envelope: everything a standalone worker process needs to
+/// reconstruct one node's `NodeWorker` exactly as `driver::build_workers`
+/// would in process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Setup {
+    /// This node's index in the cluster roster.
+    pub node: u32,
+    /// Cluster size (enters the block regularizer `1/(N*gamma) + rho_c`).
+    pub nodes: u32,
+    /// Global feature count.
+    pub n_features: u32,
+    /// Label width (1 for scalar losses, `k` for softmax).
+    pub width: u32,
+    /// `true` selects `SolveMode::Direct`; `false` selects CG with the
+    /// config's `cg_iters`.
+    pub direct_mode: bool,
+    /// Full solver/platform config as canonical JSON (`Config::to_json`).
+    pub config: String,
+    /// This node's training shard.
+    pub shard: WireShard,
+}
+
+/// A fit job description for `psfit serve`: a synthetic-problem shape
+/// plus the solver config to run it with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Feature count.
+    pub n: u32,
+    /// Total sample count (split across nodes).
+    pub m: u32,
+    /// Requested node count (clamped to the daemon's worker fleet).
+    pub nodes: u32,
+    /// Fraction of zero entries in the ground-truth weights.
+    pub sparsity: f64,
+    /// Design-matrix density in `(0, 1]`.
+    pub density: f64,
+    /// Label noise standard deviation.
+    pub noise_std: f64,
+    /// Data-generation seed.
+    pub seed: u64,
+    /// ℓ0 budget; `0` means "derive from the sparsity level".
+    pub kappa: u32,
+    /// Solver config as canonical JSON; empty selects the defaults.
+    pub config: String,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            n: 200,
+            m: 1600,
+            nodes: 2,
+            sparsity: 0.8,
+            density: 1.0,
+            noise_std: 0.1,
+            seed: 42,
+            kappa: 0,
+            config: String::new(),
+        }
+    }
+}
+
+/// A job's status snapshot as reported by the daemon.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatus {
+    /// Job id.
+    pub job: u64,
+    /// Lifecycle phase code (see `serve::JobPhase`).
+    pub phase: u8,
+    /// Whether the solver hit its tolerances.
+    pub converged: bool,
+    /// Outer iterations run.
+    pub iters: u64,
+    /// Support size of the fitted model.
+    pub support_len: u64,
+    /// Regularized objective at the fitted point.
+    pub objective: f64,
+    /// Solve wall time in seconds.
+    pub wall_seconds: f64,
+    /// Failure message when the phase is `Failed`, else empty.
+    pub message: String,
+}
+
+/// One row of the daemon's job listing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSummary {
+    /// Job id.
+    pub job: u64,
+    /// Lifecycle phase code (see `serve::JobPhase`).
+    pub phase: u8,
+    /// Client-supplied job name.
+    pub name: String,
+}
+
+/// Every message that crosses a psfit socket, as one codec.
+///
+/// Tags 1–7 flow coordinator→worker, 16–22 worker→coordinator, 32–35
+/// serve-client→daemon, and 48–51 daemon→client.  `Error` is valid in any
+/// reply position.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireCommand {
+    /// Ship a node its shard + config; must precede any `Round`.
+    Setup(Box<Setup>),
+    /// One consensus round: broadcast `z`, expect a `RoundReply`.
+    Round {
+        /// Coordinator round counter, echoed back in the reply.
+        round: u64,
+        /// The consensus iterate.
+        z: Vec<f64>,
+    },
+    /// Request the node's current loss value.
+    Loss,
+    /// Request the node's transfer ledger.
+    Ledger,
+    /// Request the node's warm state (sparsity-path checkpointing).
+    Export,
+    /// Reinstall warm state under new block penalties.
+    Reseed {
+        /// Local penalty `rho_l`.
+        rho_l: f64,
+        /// Consensus penalty `rho_c`.
+        rho_c: f64,
+        /// Block regularizer.
+        reg: f64,
+        /// Warm states; the worker picks the entry matching its node id.
+        states: Vec<WarmState>,
+    },
+    /// Close the session cleanly.
+    Shutdown,
+    /// Setup acknowledgement.
+    SetupOk {
+        /// The node that finished construction.
+        node: u32,
+    },
+    /// A node's round result.
+    RoundReply {
+        /// Replying node.
+        node: u32,
+        /// Echo of the request's round counter.
+        round: u64,
+        /// Local primal iterate.
+        x: Vec<f64>,
+        /// Scaled dual iterate.
+        u: Vec<f64>,
+    },
+    /// Loss response.
+    LossReply {
+        /// The node's local objective contribution.
+        value: f64,
+    },
+    /// Ledger response.
+    LedgerReply(Box<TransferLedger>),
+    /// Warm-state response.
+    WarmReply(Box<WarmState>),
+    /// Reseed acknowledgement.
+    ReseedOk {
+        /// The node that reinstalled its state.
+        node: u32,
+    },
+    /// Failure report; valid in any reply position.
+    Error {
+        /// Human-readable cause.
+        message: String,
+    },
+    /// Submit a fit job to the daemon.
+    Submit {
+        /// Client-chosen display name.
+        name: String,
+        /// Problem + config description.
+        spec: JobSpec,
+    },
+    /// Poll one job's status.
+    Status {
+        /// Job id.
+        job: u64,
+    },
+    /// Score a sparse feature vector against a fitted model.
+    Predict {
+        /// Job id of the fitted model.
+        job: u64,
+        /// `(feature index, value)` pairs, any order.
+        features: Vec<(u32, f64)>,
+    },
+    /// List all jobs.
+    Jobs,
+    /// Submission acknowledgement.
+    Submitted {
+        /// Assigned job id.
+        job: u64,
+    },
+    /// Status response.
+    StatusReply(Box<JobStatus>),
+    /// Prediction response: one score per class.
+    PredictReply {
+        /// `width` scores.
+        values: Vec<f64>,
+    },
+    /// Job-listing response.
+    JobsReply {
+        /// One row per job, id ascending.
+        jobs: Vec<JobSummary>,
+    },
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn w_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn w_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_str(out: &mut Vec<u8>, s: &str) {
+    w_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn w_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    w_u32(out, xs.len() as u32);
+    for &x in xs {
+        w_f64(out, x);
+    }
+}
+
+fn w_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    w_u32(out, xs.len() as u32);
+    for &x in xs {
+        w_f32(out, x);
+    }
+}
+
+fn w_warm(out: &mut Vec<u8>, s: &WarmState) {
+    w_u32(out, s.node as u32);
+    w_f64s(out, &s.x);
+    w_f64s(out, &s.u);
+    w_f32s(out, &s.omega);
+    w_f32s(out, &s.nu);
+    w_u32(out, s.preds.len() as u32);
+    for p in &s.preds {
+        w_f32s(out, p);
+    }
+}
+
+fn w_ledger(out: &mut Vec<u8>, l: &TransferLedger) {
+    w_u64(out, l.h2d_bytes);
+    w_u64(out, l.d2h_bytes);
+    w_f64(out, l.copy_seconds);
+    w_u64(out, l.net_up_bytes);
+    w_u64(out, l.net_down_bytes);
+    w_u64(out, l.net_resync_bytes);
+    w_u64(out, l.host_copy_saved_bytes);
+    w_u64(out, l.net_alloc_saved_bytes);
+    w_u64(out, l.gram_builds);
+    w_u64(out, l.chol_factorizations);
+    w_u64(out, l.chol_reuses);
+    w_u64(out, l.wire_frames);
+}
+
+/// Encode a `Round` payload straight from a borrowed iterate — the
+/// per-round hot path; the coordinator encodes once and writes the same
+/// bytes to every live peer.
+pub fn encode_round_payload(round: u64, z: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    w_u8(out, TAG_ROUND);
+    w_u64(out, round);
+    w_f64s(out, z);
+}
+
+impl WireCommand {
+    /// Short tag name for diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCommand::Setup(_) => "Setup",
+            WireCommand::Round { .. } => "Round",
+            WireCommand::Loss => "Loss",
+            WireCommand::Ledger => "Ledger",
+            WireCommand::Export => "Export",
+            WireCommand::Reseed { .. } => "Reseed",
+            WireCommand::Shutdown => "Shutdown",
+            WireCommand::SetupOk { .. } => "SetupOk",
+            WireCommand::RoundReply { .. } => "RoundReply",
+            WireCommand::LossReply { .. } => "LossReply",
+            WireCommand::LedgerReply(_) => "LedgerReply",
+            WireCommand::WarmReply(_) => "WarmReply",
+            WireCommand::ReseedOk { .. } => "ReseedOk",
+            WireCommand::Error { .. } => "Error",
+            WireCommand::Submit { .. } => "Submit",
+            WireCommand::Status { .. } => "Status",
+            WireCommand::Predict { .. } => "Predict",
+            WireCommand::Jobs => "Jobs",
+            WireCommand::Submitted { .. } => "Submitted",
+            WireCommand::StatusReply(_) => "StatusReply",
+            WireCommand::PredictReply { .. } => "PredictReply",
+            WireCommand::JobsReply { .. } => "JobsReply",
+        }
+    }
+
+    /// Serialize the payload (tag byte + fields) into `out` (cleared
+    /// first).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match self {
+            WireCommand::Setup(s) => {
+                w_u8(out, TAG_SETUP);
+                w_u32(out, s.node);
+                w_u32(out, s.nodes);
+                w_u32(out, s.n_features);
+                w_u32(out, s.width);
+                w_u8(out, s.direct_mode as u8);
+                w_str(out, &s.config);
+                w_f32s(out, &s.shard.labels);
+                match &s.shard.data {
+                    WireShardData::Dense { rows, cols, vals } => {
+                        w_u8(out, 0);
+                        w_u32(out, *rows);
+                        w_u32(out, *cols);
+                        w_f32s(out, vals);
+                    }
+                    WireShardData::Csr { cols, rows } => {
+                        w_u8(out, 1);
+                        w_u32(out, *cols);
+                        w_u32(out, rows.len() as u32);
+                        for row in rows {
+                            w_u32(out, row.len() as u32);
+                            for &(j, v) in row {
+                                w_u32(out, j);
+                                w_f32(out, v);
+                            }
+                        }
+                    }
+                }
+            }
+            WireCommand::Round { round, z } => encode_round_payload(*round, z, out),
+            WireCommand::Loss => w_u8(out, TAG_LOSS),
+            WireCommand::Ledger => w_u8(out, TAG_LEDGER),
+            WireCommand::Export => w_u8(out, TAG_EXPORT),
+            WireCommand::Reseed {
+                rho_l,
+                rho_c,
+                reg,
+                states,
+            } => {
+                w_u8(out, TAG_RESEED);
+                w_f64(out, *rho_l);
+                w_f64(out, *rho_c);
+                w_f64(out, *reg);
+                w_u32(out, states.len() as u32);
+                for s in states {
+                    w_warm(out, s);
+                }
+            }
+            WireCommand::Shutdown => w_u8(out, TAG_SHUTDOWN),
+            WireCommand::SetupOk { node } => {
+                w_u8(out, TAG_SETUP_OK);
+                w_u32(out, *node);
+            }
+            WireCommand::RoundReply { node, round, x, u } => {
+                w_u8(out, TAG_ROUND_REPLY);
+                w_u32(out, *node);
+                w_u64(out, *round);
+                w_f64s(out, x);
+                w_f64s(out, u);
+            }
+            WireCommand::LossReply { value } => {
+                w_u8(out, TAG_LOSS_REPLY);
+                w_f64(out, *value);
+            }
+            WireCommand::LedgerReply(l) => {
+                w_u8(out, TAG_LEDGER_REPLY);
+                w_ledger(out, l);
+            }
+            WireCommand::WarmReply(s) => {
+                w_u8(out, TAG_WARM_REPLY);
+                w_warm(out, s);
+            }
+            WireCommand::ReseedOk { node } => {
+                w_u8(out, TAG_RESEED_OK);
+                w_u32(out, *node);
+            }
+            WireCommand::Error { message } => {
+                w_u8(out, TAG_ERROR);
+                w_str(out, message);
+            }
+            WireCommand::Submit { name, spec } => {
+                w_u8(out, TAG_SUBMIT);
+                w_str(out, name);
+                w_u32(out, spec.n);
+                w_u32(out, spec.m);
+                w_u32(out, spec.nodes);
+                w_f64(out, spec.sparsity);
+                w_f64(out, spec.density);
+                w_f64(out, spec.noise_std);
+                w_u64(out, spec.seed);
+                w_u32(out, spec.kappa);
+                w_str(out, &spec.config);
+            }
+            WireCommand::Status { job } => {
+                w_u8(out, TAG_STATUS);
+                w_u64(out, *job);
+            }
+            WireCommand::Predict { job, features } => {
+                w_u8(out, TAG_PREDICT);
+                w_u64(out, *job);
+                w_u32(out, features.len() as u32);
+                for &(j, v) in features {
+                    w_u32(out, j);
+                    w_f64(out, v);
+                }
+            }
+            WireCommand::Jobs => w_u8(out, TAG_JOBS),
+            WireCommand::Submitted { job } => {
+                w_u8(out, TAG_SUBMITTED);
+                w_u64(out, *job);
+            }
+            WireCommand::StatusReply(s) => {
+                w_u8(out, TAG_STATUS_REPLY);
+                w_u64(out, s.job);
+                w_u8(out, s.phase);
+                w_u8(out, s.converged as u8);
+                w_u64(out, s.iters);
+                w_u64(out, s.support_len);
+                w_f64(out, s.objective);
+                w_f64(out, s.wall_seconds);
+                w_str(out, &s.message);
+            }
+            WireCommand::PredictReply { values } => {
+                w_u8(out, TAG_PREDICT_REPLY);
+                w_f64s(out, values);
+            }
+            WireCommand::JobsReply { jobs } => {
+                w_u8(out, TAG_JOBS_REPLY);
+                w_u32(out, jobs.len() as u32);
+                for j in jobs {
+                    w_u64(out, j.job);
+                    w_u8(out, j.phase);
+                    w_str(out, &j.name);
+                }
+            }
+        }
+    }
+
+    /// Decode a frame payload.  Every read is bounds-checked; truncated
+    /// input, unknown tags, and trailing garbage are errors.
+    pub fn decode(payload: &[u8]) -> anyhow::Result<WireCommand> {
+        let mut c = Cur::new(payload);
+        let tag = c.u8()?;
+        let cmd = match tag {
+            TAG_SETUP => {
+                let node = c.u32()?;
+                let nodes = c.u32()?;
+                let n_features = c.u32()?;
+                let width = c.u32()?;
+                let direct_mode = c.u8()? != 0;
+                let config = c.str()?;
+                let labels = c.f32s()?;
+                let data = match c.u8()? {
+                    0 => {
+                        let rows = c.u32()?;
+                        let cols = c.u32()?;
+                        let vals = c.f32s()?;
+                        WireShardData::Dense { rows, cols, vals }
+                    }
+                    1 => {
+                        let cols = c.u32()?;
+                        let n_rows = c.len()?;
+                        let mut rows = Vec::with_capacity(n_rows);
+                        for _ in 0..n_rows {
+                            let nnz = c.bounded_len(8)?;
+                            let mut row = Vec::with_capacity(nnz);
+                            for _ in 0..nnz {
+                                let j = c.u32()?;
+                                let v = c.f32()?;
+                                row.push((j, v));
+                            }
+                            rows.push(row);
+                        }
+                        WireShardData::Csr { cols, rows }
+                    }
+                    t => anyhow::bail!("unknown shard storage tag {t}"),
+                };
+                WireCommand::Setup(Box::new(Setup {
+                    node,
+                    nodes,
+                    n_features,
+                    width,
+                    direct_mode,
+                    config,
+                    shard: WireShard { labels, data },
+                }))
+            }
+            TAG_ROUND => {
+                let round = c.u64()?;
+                let z = c.f64s()?;
+                WireCommand::Round { round, z }
+            }
+            TAG_LOSS => WireCommand::Loss,
+            TAG_LEDGER => WireCommand::Ledger,
+            TAG_EXPORT => WireCommand::Export,
+            TAG_RESEED => {
+                let rho_l = c.f64()?;
+                let rho_c = c.f64()?;
+                let reg = c.f64()?;
+                let n = c.bounded_len(4)?;
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    states.push(c.warm()?);
+                }
+                WireCommand::Reseed {
+                    rho_l,
+                    rho_c,
+                    reg,
+                    states,
+                }
+            }
+            TAG_SHUTDOWN => WireCommand::Shutdown,
+            TAG_SETUP_OK => WireCommand::SetupOk { node: c.u32()? },
+            TAG_ROUND_REPLY => {
+                let node = c.u32()?;
+                let round = c.u64()?;
+                let x = c.f64s()?;
+                let u = c.f64s()?;
+                WireCommand::RoundReply { node, round, x, u }
+            }
+            TAG_LOSS_REPLY => WireCommand::LossReply { value: c.f64()? },
+            TAG_LEDGER_REPLY => {
+                let l = TransferLedger {
+                    h2d_bytes: c.u64()?,
+                    d2h_bytes: c.u64()?,
+                    copy_seconds: c.f64()?,
+                    net_up_bytes: c.u64()?,
+                    net_down_bytes: c.u64()?,
+                    net_resync_bytes: c.u64()?,
+                    host_copy_saved_bytes: c.u64()?,
+                    net_alloc_saved_bytes: c.u64()?,
+                    gram_builds: c.u64()?,
+                    chol_factorizations: c.u64()?,
+                    chol_reuses: c.u64()?,
+                    wire_frames: c.u64()?,
+                };
+                WireCommand::LedgerReply(Box::new(l))
+            }
+            TAG_WARM_REPLY => WireCommand::WarmReply(Box::new(c.warm()?)),
+            TAG_RESEED_OK => WireCommand::ReseedOk { node: c.u32()? },
+            TAG_ERROR => WireCommand::Error { message: c.str()? },
+            TAG_SUBMIT => {
+                let name = c.str()?;
+                let spec = JobSpec {
+                    n: c.u32()?,
+                    m: c.u32()?,
+                    nodes: c.u32()?,
+                    sparsity: c.f64()?,
+                    density: c.f64()?,
+                    noise_std: c.f64()?,
+                    seed: c.u64()?,
+                    kappa: c.u32()?,
+                    config: c.str()?,
+                };
+                WireCommand::Submit { name, spec }
+            }
+            TAG_STATUS => WireCommand::Status { job: c.u64()? },
+            TAG_PREDICT => {
+                let job = c.u64()?;
+                let n = c.bounded_len(12)?;
+                let mut features = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let j = c.u32()?;
+                    let v = c.f64()?;
+                    features.push((j, v));
+                }
+                WireCommand::Predict { job, features }
+            }
+            TAG_JOBS => WireCommand::Jobs,
+            TAG_SUBMITTED => WireCommand::Submitted { job: c.u64()? },
+            TAG_STATUS_REPLY => {
+                let s = JobStatus {
+                    job: c.u64()?,
+                    phase: c.u8()?,
+                    converged: c.u8()? != 0,
+                    iters: c.u64()?,
+                    support_len: c.u64()?,
+                    objective: c.f64()?,
+                    wall_seconds: c.f64()?,
+                    message: c.str()?,
+                };
+                WireCommand::StatusReply(Box::new(s))
+            }
+            TAG_PREDICT_REPLY => WireCommand::PredictReply { values: c.f64s()? },
+            TAG_JOBS_REPLY => {
+                let n = c.bounded_len(9)?;
+                let mut jobs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let job = c.u64()?;
+                    let phase = c.u8()?;
+                    let name = c.str()?;
+                    jobs.push(JobSummary { job, phase, name });
+                }
+                WireCommand::JobsReply { jobs }
+            }
+            t => anyhow::bail!("unknown wire command tag {t}"),
+        };
+        c.done()?;
+        Ok(cmd)
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("frame offset overflow"))?;
+        anyhow::ensure!(
+            end <= self.buf.len(),
+            "truncated frame: wanted {n} byte(s) at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// A `u32` element count, bounded by the bytes actually remaining at
+    /// `min_elem_bytes` per element — a corrupted count cannot trigger a
+    /// huge allocation.
+    fn bounded_len(&mut self, min_elem_bytes: usize) -> anyhow::Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        anyhow::ensure!(
+            n.saturating_mul(min_elem_bytes) <= remaining,
+            "truncated frame: {n} element(s) of >= {min_elem_bytes} byte(s) but only {remaining} remain"
+        );
+        Ok(n)
+    }
+
+    /// A `u32` element count for variable-size elements (each at least
+    /// one length prefix).
+    fn len(&mut self) -> anyhow::Result<usize> {
+        self.bounded_len(4)
+    }
+
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.bounded_len(1)?;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 in wire string"))?
+            .to_string())
+    }
+
+    fn f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.bounded_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.bounded_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn warm(&mut self) -> anyhow::Result<WarmState> {
+        let node = self.u32()? as usize;
+        let x = self.f64s()?;
+        let u = self.f64s()?;
+        let omega = self.f32s()?;
+        let nu = self.f32s()?;
+        let blocks = self.len()?;
+        let mut preds = Vec::with_capacity(blocks);
+        for _ in 0..blocks {
+            preds.push(self.f32s()?);
+        }
+        Ok(WarmState {
+            node,
+            x,
+            u,
+            omega,
+            nu,
+            preds,
+        })
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "trailing garbage: {} byte(s) after the decoded command",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// framing + handshake
+// ---------------------------------------------------------------------
+
+/// Write one frame from an already-encoded payload; returns the total
+/// bytes put on the wire (payload + [`FRAME_OVERHEAD`]).
+pub fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        !payload.is_empty() && payload.len() <= MAX_FRAME,
+        "frame payload length {} out of range",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&fnv1a(payload).to_le_bytes())?;
+    w.flush()?;
+    Ok(payload.len() + FRAME_OVERHEAD)
+}
+
+/// Encode and write one command; returns the bytes put on the wire.
+pub fn write_frame<W: Write>(w: &mut W, cmd: &WireCommand) -> anyhow::Result<usize> {
+    let mut payload = Vec::new();
+    cmd.encode(&mut payload);
+    write_payload(w, &payload)
+}
+
+/// Read one frame.  `Ok(None)` means the peer closed the connection
+/// cleanly at a frame boundary; mid-frame EOF, a bad length, a checksum
+/// mismatch, or an undecodable payload is an error.  Read timeouts
+/// configured on the stream surface as errors here, so a silent peer
+/// cannot hang the caller forever.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<(WireCommand, usize)>> {
+    let mut head = [0u8; 4];
+    if !read_full_or_eof(r, &mut head)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(head) as usize;
+    anyhow::ensure!(
+        len >= 1 && len <= MAX_FRAME,
+        "invalid frame length {len} (corrupted stream or protocol mismatch)"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("connection closed mid-frame: {e}"))?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)
+        .map_err(|e| anyhow::anyhow!("connection closed before frame checksum: {e}"))?;
+    anyhow::ensure!(
+        u64::from_le_bytes(sum) == fnv1a(&payload),
+        "frame checksum mismatch (corrupted stream)"
+    );
+    let cmd = WireCommand::decode(&payload)?;
+    Ok(Some((cmd, len + FRAME_OVERHEAD)))
+}
+
+/// Fill `buf` completely, or return `Ok(false)` when the stream is at EOF
+/// *before the first byte* (a clean close).  EOF after a partial read is
+/// an error.
+fn read_full_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> anyhow::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(false),
+            Ok(0) => anyhow::bail!("connection closed mid-frame header"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => anyhow::bail!("socket read failed: {e}"),
+        }
+    }
+    Ok(true)
+}
+
+fn handshake_bytes() -> [u8; 8] {
+    let mut b = [0u8; 8];
+    b[..4].copy_from_slice(MAGIC);
+    b[4..].copy_from_slice(&VERSION.to_le_bytes());
+    b
+}
+
+fn check_handshake(got: &[u8; 8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        &got[..4] == MAGIC,
+        "not a psfit wire endpoint (bad handshake magic)"
+    );
+    let peer = u32::from_le_bytes([got[4], got[5], got[6], got[7]]);
+    anyhow::ensure!(
+        peer == VERSION,
+        "wire protocol version mismatch: peer speaks v{peer}, this build speaks v{VERSION}"
+    );
+    Ok(())
+}
+
+/// Client side of the connection handshake: send ours, then validate the
+/// peer's.  Returns the total bytes exchanged ([`HANDSHAKE_BYTES`]).
+pub fn client_handshake<S: Read + Write>(s: &mut S) -> anyhow::Result<usize> {
+    s.write_all(&handshake_bytes())?;
+    s.flush()?;
+    let mut got = [0u8; 8];
+    s.read_exact(&mut got)
+        .map_err(|e| anyhow::anyhow!("peer closed during handshake: {e}"))?;
+    check_handshake(&got)?;
+    Ok(HANDSHAKE_BYTES)
+}
+
+/// Server side of the connection handshake: validate the peer's first,
+/// then send ours.  Returns the total bytes exchanged.
+pub fn server_handshake<S: Read + Write>(s: &mut S) -> anyhow::Result<usize> {
+    let mut got = [0u8; 8];
+    s.read_exact(&mut got)
+        .map_err(|e| anyhow::anyhow!("peer closed during handshake: {e}"))?;
+    check_handshake(&got)?;
+    s.write_all(&handshake_bytes())?;
+    s.flush()?;
+    Ok(HANDSHAKE_BYTES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(cmd: &WireCommand) {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, cmd).unwrap();
+        assert_eq!(n, buf.len());
+        let mut r = &buf[..];
+        let (back, m) = read_frame(&mut r).unwrap().expect("frame present");
+        assert_eq!(m, n);
+        assert_eq!(&back, cmd);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF after");
+    }
+
+    #[test]
+    fn simple_commands_roundtrip() {
+        roundtrip(&WireCommand::Loss);
+        roundtrip(&WireCommand::Ledger);
+        roundtrip(&WireCommand::Export);
+        roundtrip(&WireCommand::Shutdown);
+        roundtrip(&WireCommand::Jobs);
+        roundtrip(&WireCommand::SetupOk { node: 3 });
+        roundtrip(&WireCommand::ReseedOk { node: 1 });
+        roundtrip(&WireCommand::Submitted { job: 9 });
+        roundtrip(&WireCommand::Status { job: 2 });
+        roundtrip(&WireCommand::LossReply { value: -0.25 });
+        roundtrip(&WireCommand::Error {
+            message: "node 2 é gone".into(),
+        });
+    }
+
+    #[test]
+    fn round_payload_helper_matches_enum_encoding() {
+        let z = vec![1.5, -2.25, f64::MIN_POSITIVE];
+        let mut a = Vec::new();
+        encode_round_payload(7, &z, &mut a);
+        let mut b = Vec::new();
+        WireCommand::Round { round: 7, z }.encode(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn checksum_detects_corruption() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &WireCommand::LossReply { value: 1.0 }).unwrap();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        let err = read_frame(&mut &buf[..]).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("length"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &WireCommand::RoundReply {
+                node: 0,
+                round: 1,
+                x: vec![1.0; 8],
+                u: vec![2.0; 8],
+            },
+        )
+        .unwrap();
+        for cut in [1, 3, 5, buf.len() - 1] {
+            assert!(
+                read_frame(&mut &buf[..cut]).is_err(),
+                "cut at {cut} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut &buf[..]).unwrap_err().to_string();
+        assert!(err.contains("invalid frame length"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_garbage_rejected() {
+        assert!(WireCommand::decode(&[200]).is_err());
+        let mut payload = Vec::new();
+        WireCommand::Loss.encode(&mut payload);
+        payload.push(0);
+        let err = WireCommand::decode(&payload).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_inner_count_cannot_alloc_huge() {
+        // a Reseed frame whose state count claims 2^32-1 entries must be
+        // rejected by the bounded-count check, not attempted
+        let mut payload = Vec::new();
+        w_u8(&mut payload, TAG_RESEED);
+        w_f64(&mut payload, 1.0);
+        w_f64(&mut payload, 1.0);
+        w_f64(&mut payload, 1.0);
+        w_u32(&mut payload, u32::MAX);
+        let err = WireCommand::decode(&payload).unwrap_err().to_string();
+        assert!(err.contains("truncated frame"), "{err}");
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_mismatch() {
+        let b = handshake_bytes();
+        check_handshake(&b).unwrap();
+        let mut wrong_magic = b;
+        wrong_magic[0] = b'X';
+        assert!(check_handshake(&wrong_magic)
+            .unwrap_err()
+            .to_string()
+            .contains("magic"));
+        let mut wrong_version = b;
+        wrong_version[4] = 0xFF;
+        assert!(check_handshake(&wrong_version)
+            .unwrap_err()
+            .to_string()
+            .contains("version mismatch"));
+    }
+
+    #[test]
+    fn ledger_survives_the_wire() {
+        let mut l = TransferLedger::default();
+        l.h2d_bytes = 1;
+        l.d2h_bytes = 2;
+        l.copy_seconds = 0.125;
+        l.net_up_bytes = 3;
+        l.net_down_bytes = 4;
+        l.net_resync_bytes = 5;
+        l.host_copy_saved_bytes = 6;
+        l.net_alloc_saved_bytes = 7;
+        l.gram_builds = 8;
+        l.chol_factorizations = 9;
+        l.chol_reuses = 10;
+        l.wire_frames = 11;
+        roundtrip(&WireCommand::LedgerReply(Box::new(l)));
+    }
+}

@@ -1,0 +1,300 @@
+//! The `psfit worker` process: hosts node-level solver state behind a
+//! socket.
+//!
+//! A worker binds one listener and serves **one node session per
+//! connection**: the coordinator's `Setup` frame carries the shard, the
+//! config, and the node id, and every later frame on that connection
+//! drives that node.  Sessions run on their own threads, so a single
+//! worker process serves many concurrent jobs — the multiplexing
+//! `psfit serve` relies on to share a fleet between tenants.
+//!
+//! The node recipe here mirrors `driver::build_workers` exactly (same
+//! plan, penalties, loss, and solve mode, from the same config), which is
+//! what makes a localhost socket cluster bit-identical to the in-process
+//! transports.
+
+use std::io::Write as _;
+
+use crate::admm::LocalProx;
+use crate::backend::native::{NativeBackend, SolveMode};
+use crate::backend::BlockParams;
+use crate::config::Config;
+use crate::data::FeaturePlan;
+use crate::losses::make_loss;
+use crate::network::socket::wire::{self, Setup, WireCommand};
+use crate::network::socket::{Endpoint, SocketListener, SocketStream};
+use crate::network::NodeWorker;
+use crate::util::json::Json;
+
+/// Settings for a standalone worker process.
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Address to listen on (`host:port`, port `0` for ephemeral, or
+    /// `unix:/path`).
+    pub listen: String,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            listen: "127.0.0.1:0".to_string(),
+        }
+    }
+}
+
+/// Run a worker until the process is killed: bind, announce the bound
+/// address on stdout (`psfit worker listening on <addr>` — scripts and the
+/// CI smoke job parse this line), and serve sessions forever.
+pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
+    let listener = SocketListener::bind(&Endpoint::parse(&opts.listen))?;
+    println!("psfit worker listening on {}", listener.local_endpoint());
+    let _ = std::io::stdout().flush();
+    serve_connections(listener, None)
+}
+
+/// Spawn an in-process worker on an ephemeral localhost port and return
+/// its address.  The thread is detached and lives for the rest of the
+/// process — tests and `psfit serve --local-fleet` use this to stand up a
+/// fleet without child processes.
+pub fn spawn_local_worker() -> anyhow::Result<String> {
+    spawn_worker_thread(None)
+}
+
+/// [`spawn_local_worker`], except every session drops its connection
+/// without replying after serving `die_after_rounds` rounds — a simulated
+/// worker crash for the degradation tests.
+pub fn spawn_flaky_worker(die_after_rounds: usize) -> anyhow::Result<String> {
+    spawn_worker_thread(Some(die_after_rounds))
+}
+
+fn spawn_worker_thread(fault: Option<usize>) -> anyhow::Result<String> {
+    let listener = SocketListener::bind(&Endpoint::parse("127.0.0.1:0"))?;
+    let addr = listener.local_endpoint();
+    std::thread::Builder::new()
+        .name("psfit-worker".into())
+        .spawn(move || {
+            if let Err(e) = serve_connections(listener, fault) {
+                eprintln!("[worker] listener exited: {e}");
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("cannot spawn worker thread: {e}"))?;
+    Ok(addr)
+}
+
+fn serve_connections(listener: SocketListener, fault: Option<usize>) -> anyhow::Result<()> {
+    loop {
+        let stream = listener
+            .accept()
+            .map_err(|e| anyhow::anyhow!("accept failed: {e}"))?;
+        std::thread::spawn(move || {
+            // a session error is that session's problem, not the worker's:
+            // log it and keep accepting
+            if let Err(e) = session(stream, fault) {
+                eprintln!("[worker] session ended: {e}");
+            }
+        });
+    }
+}
+
+/// One connection = one node session.  Returns `Ok` on a clean close or
+/// `Shutdown`; protocol violations reply with an `Error` frame (when the
+/// socket still works) and end the session.
+fn session(mut stream: SocketStream, fault: Option<usize>) -> anyhow::Result<()> {
+    wire::server_handshake(&mut stream)?;
+    let mut node: Option<NodeWorker> = None;
+    let mut rounds_served = 0usize;
+    loop {
+        let Some((cmd, _)) = wire::read_frame(&mut stream)? else {
+            return Ok(());
+        };
+        match cmd {
+            WireCommand::Setup(setup) => match build_node(&setup) {
+                Ok(w) => {
+                    let id = w.id as u32;
+                    node = Some(w);
+                    wire::write_frame(&mut stream, &WireCommand::SetupOk { node: id })?;
+                }
+                Err(e) => return refuse(&mut stream, format!("setup failed: {e}")),
+            },
+            WireCommand::Round { round, z } => {
+                if fault.is_some_and(|limit| rounds_served >= limit) {
+                    // simulated crash: vanish mid-round without replying
+                    return Ok(());
+                }
+                let w = require(&mut node, &mut stream, "round")?;
+                let (x, u) = w.round(&z);
+                rounds_served += 1;
+                let reply = WireCommand::RoundReply {
+                    node: w.id as u32,
+                    round,
+                    x,
+                    u,
+                };
+                wire::write_frame(&mut stream, &reply)?;
+            }
+            WireCommand::Loss => {
+                let w = require(&mut node, &mut stream, "loss")?;
+                let value = w.loss_value();
+                wire::write_frame(&mut stream, &WireCommand::LossReply { value })?;
+            }
+            WireCommand::Ledger => {
+                let w = require(&mut node, &mut stream, "ledger")?;
+                let reply = WireCommand::LedgerReply(Box::new(w.ledger()));
+                wire::write_frame(&mut stream, &reply)?;
+            }
+            WireCommand::Export => {
+                let w = require(&mut node, &mut stream, "export")?;
+                let reply = WireCommand::WarmReply(Box::new(w.export_warm()));
+                wire::write_frame(&mut stream, &reply)?;
+            }
+            WireCommand::Reseed {
+                rho_l,
+                rho_c,
+                reg,
+                states,
+            } => {
+                let w = require(&mut node, &mut stream, "reseed")?;
+                let params = BlockParams { rho_l, rho_c, reg };
+                match states.iter().find(|s| s.node == w.id) {
+                    Some(ws) => {
+                        w.reseed(ws, params);
+                        let reply = WireCommand::ReseedOk { node: w.id as u32 };
+                        wire::write_frame(&mut stream, &reply)?;
+                    }
+                    None => {
+                        let id = w.id;
+                        return refuse(&mut stream, format!("reseed has no state for node {id}"));
+                    }
+                }
+            }
+            WireCommand::Shutdown => return Ok(()),
+            other => {
+                return refuse(
+                    &mut stream,
+                    format!("worker cannot handle `{}`", other.name()),
+                )
+            }
+        }
+    }
+}
+
+/// Reply with an `Error` frame (best-effort) and end the session with the
+/// same message.
+fn refuse(stream: &mut SocketStream, message: String) -> anyhow::Result<()> {
+    let _ = wire::write_frame(
+        stream,
+        &WireCommand::Error {
+            message: message.clone(),
+        },
+    );
+    anyhow::bail!("{message}")
+}
+
+/// The session's node, or an `Error` reply + session end when `cmd`
+/// arrived before `Setup`.
+fn require<'a>(
+    node: &'a mut Option<NodeWorker>,
+    stream: &mut SocketStream,
+    what: &str,
+) -> anyhow::Result<&'a mut NodeWorker> {
+    match node {
+        Some(w) => Ok(w),
+        None => {
+            let message = format!("`{what}` before setup");
+            let _ = wire::write_frame(stream, &WireCommand::Error { message: message.clone() });
+            anyhow::bail!("{message}")
+        }
+    }
+}
+
+/// Reconstruct one node exactly as `driver::build_workers` would have:
+/// same feature plan, block penalties, loss, solve mode, and thread
+/// count, all derived from the shipped config.  The shard arrives already
+/// storage-resolved (the coordinator applied the dense/CSR policy), so no
+/// policy runs here.
+fn build_node(setup: &Setup) -> anyhow::Result<NodeWorker> {
+    let cfg = Config::from_json(&Json::parse(&setup.config)?)?;
+    let width = setup.width as usize;
+    let shard = setup.shard.to_shard(width)?;
+    let plan = FeaturePlan::new(
+        setup.n_features as usize,
+        cfg.platform.devices_per_node,
+        usize::MAX >> 1,
+    );
+    let params = BlockParams {
+        rho_l: cfg.solver.rho_l,
+        rho_c: cfg.solver.rho_c,
+        reg: cfg.solver.block_reg(setup.nodes as usize),
+    };
+    let loss = make_loss(cfg.loss, width.max(cfg.classes));
+    let mode = if setup.direct_mode {
+        SolveMode::Direct
+    } else {
+        SolveMode::Cg {
+            iters: cfg.solver.cg_iters,
+        }
+    };
+    let backend: Box<dyn crate::backend::NodeBackend> = Box::new(
+        NativeBackend::new(&shard, &plan, loss, mode).with_threads(cfg.platform.threads),
+    );
+    Ok(NodeWorker::new(
+        setup.node as usize,
+        LocalProx::new(backend, plan, width),
+        params,
+        cfg.solver.inner_iters,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::socket::connect;
+    use std::io::Write;
+    use std::time::Duration;
+
+    fn dial(addr: &str) -> SocketStream {
+        let s = connect(&Endpoint::parse(addr), Duration::from_secs(2), 3).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    }
+
+    #[test]
+    fn commands_before_setup_get_a_clean_error() {
+        let addr = spawn_local_worker().unwrap();
+        let mut s = dial(&addr);
+        wire::client_handshake(&mut s).unwrap();
+        wire::write_frame(&mut s, &WireCommand::Loss).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Some((WireCommand::Error { message }, _)) => {
+                assert!(message.contains("before setup"), "{message}")
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn daemon_commands_are_refused_by_workers() {
+        let addr = spawn_local_worker().unwrap();
+        let mut s = dial(&addr);
+        wire::client_handshake(&mut s).unwrap();
+        wire::write_frame(&mut s, &WireCommand::Jobs).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Some((WireCommand::Error { message }, _)) => {
+                assert!(message.contains("cannot handle"), "{message}")
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_handshake_is_rejected_without_hanging() {
+        let addr = spawn_local_worker().unwrap();
+        let mut s = dial(&addr);
+        // wrong magic: the worker drops the session; our next read sees EOF
+        s.write_all(b"NOPEnope").unwrap();
+        s.flush().unwrap();
+        let mut buf = [0u8; 8];
+        let got = std::io::Read::read(&mut s, &mut buf).unwrap_or(0);
+        assert_eq!(got, 0, "worker should close on a bad handshake");
+    }
+}

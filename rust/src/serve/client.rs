@@ -1,0 +1,113 @@
+//! Client for a running `psfit serve` daemon: submit jobs, poll status,
+//! request predictions.  The CLI's `psfit submit` / `psfit predict` /
+//! `psfit jobs` subcommands and the integration tests all go through
+//! here.
+
+use std::time::{Duration, Instant};
+
+use crate::network::socket::wire::{self, JobSpec, JobStatus, JobSummary, WireCommand};
+use crate::network::socket::{connect, Endpoint, SocketStream};
+use crate::serve::JobPhase;
+
+/// A connected `psfit serve` client session.
+pub struct ServeClient {
+    stream: SocketStream,
+}
+
+impl ServeClient {
+    /// Connect with defaults: 3 s connect timeout, 3 retries, 120 s read
+    /// timeout (submissions reply instantly; only `wait` polls).
+    pub fn connect(addr: &str) -> anyhow::Result<ServeClient> {
+        ServeClient::connect_with(addr, Duration::from_secs(3), Some(Duration::from_secs(120)), 3)
+    }
+
+    /// [`ServeClient::connect`] with explicit timeouts and retry count.
+    pub fn connect_with(
+        addr: &str,
+        connect_timeout: Duration,
+        read_timeout: Option<Duration>,
+        retries: u32,
+    ) -> anyhow::Result<ServeClient> {
+        let mut stream = connect(&Endpoint::parse(addr), connect_timeout, retries)?;
+        stream.set_read_timeout(read_timeout)?;
+        wire::client_handshake(&mut stream)?;
+        Ok(ServeClient { stream })
+    }
+
+    /// One request/reply exchange.  An `Error` reply or a closed
+    /// connection is an error here.
+    fn call(&mut self, cmd: &WireCommand) -> anyhow::Result<WireCommand> {
+        wire::write_frame(&mut self.stream, cmd)?;
+        match wire::read_frame(&mut self.stream)? {
+            Some((WireCommand::Error { message }, _)) => anyhow::bail!("serve: {message}"),
+            Some((reply, _)) => Ok(reply),
+            None => anyhow::bail!("serve closed the connection"),
+        }
+    }
+
+    /// Submit a fit job; returns its job id immediately (the fit runs in
+    /// the daemon, poll with [`ServeClient::status`] or
+    /// [`ServeClient::wait`]).
+    pub fn submit(&mut self, name: &str, spec: JobSpec) -> anyhow::Result<u64> {
+        let cmd = WireCommand::Submit {
+            name: name.to_string(),
+            spec,
+        };
+        match self.call(&cmd)? {
+            WireCommand::Submitted { job } => Ok(job),
+            other => anyhow::bail!("unexpected `{}` to submit", other.name()),
+        }
+    }
+
+    /// Poll one job's status.
+    pub fn status(&mut self, job: u64) -> anyhow::Result<JobStatus> {
+        match self.call(&WireCommand::Status { job })? {
+            WireCommand::StatusReply(st) => Ok(*st),
+            other => anyhow::bail!("unexpected `{}` to status", other.name()),
+        }
+    }
+
+    /// Poll until the job finishes (done or failed) or `timeout` elapses.
+    /// A failed job is an error carrying the daemon's failure message.
+    pub fn wait(&mut self, job: u64, timeout: Duration) -> anyhow::Result<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let st = self.status(job)?;
+            match JobPhase::from_code(st.phase)? {
+                JobPhase::Done => return Ok(st),
+                JobPhase::Failed => {
+                    anyhow::bail!("job {job} failed: {}", st.message)
+                }
+                JobPhase::Queued | JobPhase::Running => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "job {job} still {} after {timeout:?}",
+                        JobPhase::from_code(st.phase)?.name()
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Score a sparse feature vector against a finished job's model;
+    /// returns one value per class.
+    pub fn predict(&mut self, job: u64, features: &[(u32, f64)]) -> anyhow::Result<Vec<f64>> {
+        let cmd = WireCommand::Predict {
+            job,
+            features: features.to_vec(),
+        };
+        match self.call(&cmd)? {
+            WireCommand::PredictReply { values } => Ok(values),
+            other => anyhow::bail!("unexpected `{}` to predict", other.name()),
+        }
+    }
+
+    /// List every job the daemon knows, id ascending.
+    pub fn jobs(&mut self) -> anyhow::Result<Vec<JobSummary>> {
+        match self.call(&WireCommand::Jobs)? {
+            WireCommand::JobsReply { jobs } => Ok(jobs),
+            other => anyhow::bail!("unexpected `{}` to jobs", other.name()),
+        }
+    }
+}

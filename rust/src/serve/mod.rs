@@ -1,0 +1,409 @@
+//! `psfit serve`: a multi-tenant fit/predict daemon over a shared worker
+//! fleet.
+//!
+//! The daemon listens for [`crate::network::socket::wire`] client frames
+//! (`Submit`, `Status`, `Predict`, `Jobs`) and runs each submitted fit on
+//! its own thread as a [`crate::network::socket::SocketCluster`] over the
+//! shared fleet of `psfit worker` processes.  Because a worker serves one
+//! *node session per connection*, concurrent jobs multiplex over the same
+//! fleet without stepping on each other's solver state — two tenants can
+//! fit different problems on the same three workers at the same time.
+//!
+//! Completed jobs keep only their [`FittedModel`] (the κ-sparse support),
+//! so the prediction endpoint answers support-only sparse dot products
+//! with latency independent of the training dimension and of any fit
+//! currently running.
+
+pub mod client;
+pub mod model;
+
+pub use client::ServeClient;
+pub use model::FittedModel;
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::admm::{self, SolveOptions};
+use crate::config::{BackendKind, Config, TransportKind};
+use crate::data::{SyntheticSpec, Task};
+use crate::losses::{make_loss, LossKind};
+use crate::network::socket::wire::{self, JobSpec, JobStatus, JobSummary, WireCommand};
+use crate::network::socket::{
+    spawn_local_worker, Endpoint, SocketCluster, SocketListener, SocketStream,
+};
+use crate::util::json::Json;
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Accepted, not yet running.
+    Queued,
+    /// Fitting on the worker fleet.
+    Running,
+    /// Finished; a fitted model is available.
+    Done,
+    /// Fit failed; see the status message.
+    Failed,
+}
+
+impl JobPhase {
+    /// Wire code (the `phase` byte of `JobStatus` / `JobSummary`).
+    pub fn code(&self) -> u8 {
+        match self {
+            JobPhase::Queued => 0,
+            JobPhase::Running => 1,
+            JobPhase::Done => 2,
+            JobPhase::Failed => 3,
+        }
+    }
+
+    /// Decode a wire phase byte.
+    pub fn from_code(code: u8) -> anyhow::Result<JobPhase> {
+        Ok(match code {
+            0 => JobPhase::Queued,
+            1 => JobPhase::Running,
+            2 => JobPhase::Done,
+            3 => JobPhase::Failed,
+            other => anyhow::bail!("unknown job phase code {other}"),
+        })
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Failed => "failed",
+        }
+    }
+}
+
+/// Daemon settings.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Client-facing listen address.
+    pub listen: String,
+    /// Addresses of already-running `psfit worker` processes.
+    pub workers: Vec<String>,
+    /// Additionally spawn this many in-process workers on ephemeral
+    /// localhost ports (single-machine quickstart; `psfit serve
+    /// --local-fleet 3` needs no separate worker processes).
+    pub local_fleet: usize,
+    /// Per-attempt worker connect timeout (milliseconds).
+    pub connect_timeout_ms: u64,
+    /// Worker read timeout per reply (milliseconds; 0 waits forever).
+    pub read_timeout_ms: u64,
+    /// Worker connect retries after the first attempt.
+    pub connect_retries: u32,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            listen: "127.0.0.1:7700".to_string(),
+            workers: Vec::new(),
+            local_fleet: 0,
+            connect_timeout_ms: 3000,
+            read_timeout_ms: 30_000,
+            connect_retries: 3,
+        }
+    }
+}
+
+/// One job's record: live status plus, once done, the fitted model.
+struct JobEntry {
+    name: String,
+    phase: JobPhase,
+    converged: bool,
+    iters: u64,
+    objective: f64,
+    wall_seconds: f64,
+    message: String,
+    model: Option<Arc<FittedModel>>,
+}
+
+/// Shared daemon state: the job table and the worker fleet.
+struct ServeState {
+    jobs: Mutex<BTreeMap<u64, JobEntry>>,
+    next_id: AtomicU64,
+    fleet: Vec<String>,
+    connect_timeout_ms: u64,
+    read_timeout_ms: u64,
+    connect_retries: u32,
+}
+
+impl ServeState {
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<u64, JobEntry>> {
+        // a poisoned table (a panicking job thread) must not take the
+        // daemon down with it
+        self.jobs.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Run the daemon until the process is killed: assemble the fleet, bind,
+/// announce `psfit serve listening on <addr> (<n> worker(s))` on stdout,
+/// and serve client sessions forever.
+pub fn run_serve(opts: &ServeOpts) -> anyhow::Result<()> {
+    let (listener, state) = bind_serve(opts)?;
+    println!(
+        "psfit serve listening on {} ({} worker(s))",
+        listener.local_endpoint(),
+        state.fleet.len()
+    );
+    let _ = std::io::stdout().flush();
+    serve_loop(listener, state)
+}
+
+/// Spawn an in-process daemon on an ephemeral localhost port, backed by
+/// `local_fleet` in-process workers, and return its address — the test
+/// harness's one-call cluster-in-a-process.
+pub fn spawn_local_serve(local_fleet: usize) -> anyhow::Result<String> {
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        local_fleet,
+        ..Default::default()
+    };
+    let (listener, state) = bind_serve(&opts)?;
+    let addr = listener.local_endpoint();
+    std::thread::Builder::new()
+        .name("psfit-serve".into())
+        .spawn(move || {
+            if let Err(e) = serve_loop(listener, state) {
+                eprintln!("[serve] listener exited: {e}");
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("cannot spawn serve thread: {e}"))?;
+    Ok(addr)
+}
+
+fn bind_serve(opts: &ServeOpts) -> anyhow::Result<(SocketListener, Arc<ServeState>)> {
+    let mut fleet = opts.workers.clone();
+    for _ in 0..opts.local_fleet {
+        fleet.push(spawn_local_worker()?);
+    }
+    anyhow::ensure!(
+        !fleet.is_empty(),
+        "psfit serve needs at least one worker (--workers or --local-fleet)"
+    );
+    let listener = SocketListener::bind(&Endpoint::parse(&opts.listen))?;
+    let state = Arc::new(ServeState {
+        jobs: Mutex::new(BTreeMap::new()),
+        next_id: AtomicU64::new(0),
+        fleet,
+        connect_timeout_ms: opts.connect_timeout_ms,
+        read_timeout_ms: opts.read_timeout_ms,
+        connect_retries: opts.connect_retries,
+    });
+    Ok((listener, state))
+}
+
+fn serve_loop(listener: SocketListener, state: Arc<ServeState>) -> anyhow::Result<()> {
+    loop {
+        let stream = listener
+            .accept()
+            .map_err(|e| anyhow::anyhow!("accept failed: {e}"))?;
+        let st = state.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = client_session(stream, st) {
+                eprintln!("[serve] client session ended: {e}");
+            }
+        });
+    }
+}
+
+/// One client connection.  Bad requests (unknown job, model not ready)
+/// get an `Error` reply but keep the session open; only wire-level
+/// failures and `Shutdown` end it.
+fn client_session(mut stream: SocketStream, state: Arc<ServeState>) -> anyhow::Result<()> {
+    wire::server_handshake(&mut stream)?;
+    loop {
+        let Some((cmd, _)) = wire::read_frame(&mut stream)? else {
+            return Ok(());
+        };
+        let reply = match cmd {
+            WireCommand::Submit { name, spec } => {
+                let job = submit_job(&state, name, spec);
+                WireCommand::Submitted { job }
+            }
+            WireCommand::Status { job } => match status_of(&state, job) {
+                Some(st) => WireCommand::StatusReply(Box::new(st)),
+                None => WireCommand::Error {
+                    message: format!("no such job {job}"),
+                },
+            },
+            WireCommand::Predict { job, features } => {
+                let model = state.lock().get(&job).and_then(|e| e.model.clone());
+                match model {
+                    Some(m) => WireCommand::PredictReply {
+                        values: m.predict_sparse(&features),
+                    },
+                    None => WireCommand::Error {
+                        message: format!("job {job} has no fitted model yet"),
+                    },
+                }
+            }
+            WireCommand::Jobs => {
+                let jobs = state
+                    .lock()
+                    .iter()
+                    .map(|(&job, e)| JobSummary {
+                        job,
+                        phase: e.phase.code(),
+                        name: e.name.clone(),
+                    })
+                    .collect();
+                WireCommand::JobsReply { jobs }
+            }
+            WireCommand::Shutdown => return Ok(()),
+            other => WireCommand::Error {
+                message: format!("psfit serve cannot handle `{}`", other.name()),
+            },
+        };
+        wire::write_frame(&mut stream, &reply)?;
+    }
+}
+
+/// Register a job and start fitting it on its own thread.
+fn submit_job(state: &Arc<ServeState>, name: String, spec: JobSpec) -> u64 {
+    let job = state.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+    state.lock().insert(
+        job,
+        JobEntry {
+            name,
+            phase: JobPhase::Queued,
+            converged: false,
+            iters: 0,
+            objective: f64::NAN,
+            wall_seconds: 0.0,
+            message: String::new(),
+            model: None,
+        },
+    );
+    let st = state.clone();
+    std::thread::spawn(move || {
+        if let Some(e) = st.lock().get_mut(&job) {
+            e.phase = JobPhase::Running;
+        }
+        match execute_job(&st, &spec) {
+            Ok(done) => {
+                if let Some(e) = st.lock().get_mut(&job) {
+                    e.phase = JobPhase::Done;
+                    e.converged = done.converged;
+                    e.iters = done.iters;
+                    e.objective = done.model.objective;
+                    e.wall_seconds = done.wall_seconds;
+                    e.model = Some(Arc::new(done.model));
+                }
+            }
+            Err(err) => {
+                if let Some(e) = st.lock().get_mut(&job) {
+                    e.phase = JobPhase::Failed;
+                    e.message = err.to_string();
+                }
+            }
+        }
+    });
+    job
+}
+
+fn status_of(state: &ServeState, job: u64) -> Option<JobStatus> {
+    state.lock().get(&job).map(|e| JobStatus {
+        job,
+        phase: e.phase.code(),
+        converged: e.converged,
+        iters: e.iters,
+        support_len: e.model.as_ref().map_or(0, |m| m.support.len() as u64),
+        objective: e.objective,
+        wall_seconds: e.wall_seconds,
+        message: e.message.clone(),
+    })
+}
+
+/// A finished fit, before it is folded into the job table.
+struct FinishedJob {
+    model: FittedModel,
+    converged: bool,
+    iters: u64,
+    wall_seconds: f64,
+}
+
+/// Run one fit over the shared fleet: build the synthetic problem the
+/// spec describes, connect a socket cluster to the first `spec.nodes`
+/// workers, solve, and reduce the solution to its support.
+fn execute_job(state: &ServeState, spec: &JobSpec) -> anyhow::Result<FinishedJob> {
+    let mut cfg = if spec.config.is_empty() {
+        Config::default()
+    } else {
+        Config::from_json(&Json::parse(&spec.config)?)?
+    };
+    let nodes = (spec.nodes as usize).clamp(1, state.fleet.len());
+    cfg.platform.nodes = nodes;
+    cfg.platform.backend = BackendKind::Native;
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.workers = state.fleet[..nodes].to_vec();
+    cfg.platform.connect_timeout_ms = state.connect_timeout_ms;
+    cfg.platform.read_timeout_ms = state.read_timeout_ms;
+    cfg.platform.connect_retries = state.connect_retries;
+
+    let mut sspec = SyntheticSpec::regression(spec.n as usize, spec.m as usize, nodes);
+    sspec.sparsity_level = spec.sparsity;
+    sspec.density = spec.density;
+    sspec.noise_std = spec.noise_std;
+    sspec.seed = spec.seed;
+    // the spec's loss (via its config) decides the label recipe
+    sspec.task = match cfg.loss {
+        LossKind::Squared => Task::Regression,
+        LossKind::Logistic | LossKind::Hinge => Task::Binary,
+        LossKind::Softmax => Task::Multiclass { k: cfg.classes },
+    };
+    cfg.solver.kappa = if spec.kappa > 0 {
+        spec.kappa as usize
+    } else {
+        sspec.kappa()
+    };
+    let ds = sspec.generate();
+    let dim = ds.n_features * ds.width;
+    let mut cluster = SocketCluster::connect(&ds, &cfg)?;
+    let res = admm::solve(&mut cluster, dim, &cfg, Some(&ds), &SolveOptions::default())?;
+    let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
+    let objective = admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &res.x);
+    let model = FittedModel::from_solution(ds.n_features, ds.width, res.support, &res.x, objective);
+    Ok(FinishedJob {
+        model,
+        converged: res.converged,
+        iters: res.iters as u64,
+        wall_seconds: res.wall_seconds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_phase_codes_roundtrip() {
+        for phase in [
+            JobPhase::Queued,
+            JobPhase::Running,
+            JobPhase::Done,
+            JobPhase::Failed,
+        ] {
+            assert_eq!(JobPhase::from_code(phase.code()).unwrap(), phase);
+            assert!(!phase.name().is_empty());
+        }
+        assert!(JobPhase::from_code(99).is_err());
+    }
+
+    #[test]
+    fn serve_refuses_an_empty_fleet() {
+        let opts = ServeOpts {
+            listen: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        };
+        let err = bind_serve(&opts).unwrap_err().to_string();
+        assert!(err.contains("at least one worker"), "{err}");
+    }
+}

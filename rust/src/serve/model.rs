@@ -1,0 +1,129 @@
+//! Fitted ℓ0 models and support-only prediction.
+//!
+//! A finished fit is κ-sparse by construction, so the daemon keeps only
+//! the support — per class, the `(feature, coefficient)` pairs — and
+//! scores sparse feature vectors with a two-pointer merge over sorted
+//! index lists.  Prediction cost is O(support + query nnz) per class,
+//! independent of the full feature dimension.
+
+/// A fitted model: the κ-sparse solution of one completed job, reduced
+/// to its support.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FittedModel {
+    /// Feature dimension n the model was trained on.
+    pub n_features: usize,
+    /// Prediction width (1, or k for softmax).
+    pub width: usize,
+    /// Support in the flattened class-major coefficient space (entry `j`
+    /// is class `j / n_features`, feature `j % n_features`), sorted.
+    pub support: Vec<usize>,
+    /// Final objective value (loss + Tikhonov term) at this solution.
+    pub objective: f64,
+    /// Per-class `(feature, coefficient)` pairs, sorted by feature.
+    per_class: Vec<Vec<(u32, f64)>>,
+}
+
+impl FittedModel {
+    /// Reduce a solver solution to its support.  `support` must be sorted
+    /// ascending (as `SolveResult::support` is) and `x` is the flattened
+    /// class-major coefficient vector of length `n_features * width`.
+    pub fn from_solution(
+        n_features: usize,
+        width: usize,
+        support: Vec<usize>,
+        x: &[f64],
+        objective: f64,
+    ) -> FittedModel {
+        let mut per_class = vec![Vec::new(); width];
+        for &j in &support {
+            let class = j / n_features;
+            let feature = (j % n_features) as u32;
+            if class < width {
+                per_class[class].push((feature, x[j]));
+            }
+        }
+        FittedModel {
+            n_features,
+            width,
+            support,
+            objective,
+            per_class,
+        }
+    }
+
+    /// Score one sparse feature vector: `width` raw scores (the linear
+    /// predictor per class; for width 1 this is the regression value or
+    /// the classification margin).  `features` is `(index, value)` pairs
+    /// in any order; duplicate indices contribute additively, indices
+    /// outside the trained dimension are ignored.
+    pub fn predict_sparse(&self, features: &[(u32, f64)]) -> Vec<f64> {
+        let mut q: Vec<(u32, f64)> = features.to_vec();
+        q.sort_by_key(|&(i, _)| i);
+        self.per_class
+            .iter()
+            .map(|coef| merge_dot(coef, &q))
+            .collect()
+    }
+}
+
+/// Sparse dot product of two index-sorted `(index, value)` lists.  `b`
+/// may contain duplicate indices (each matched occurrence contributes).
+fn merge_dot(a: &[(u32, f64)], b: &[(u32, f64)]) -> f64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f64);
+    while i < a.len() && j < b.len() {
+        match a[i].0.cmp(&b[j].0) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                acc += a[i].1 * b[j].1;
+                // advance only the query side so duplicate query indices
+                // each pair with the same coefficient
+                j += 1;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_only_prediction_matches_dense_dot() {
+        // width 2, n = 5: coefficients planted on features {1, 4} / {0, 2}
+        let n = 5;
+        let mut x = vec![0.0; 2 * n];
+        x[1] = 2.0; // class 0, feature 1
+        x[4] = -1.0; // class 0, feature 4
+        x[n] = 0.5; // class 1, feature 0
+        x[n + 2] = 3.0; // class 1, feature 2
+        let support = vec![1, 4, n, n + 2];
+        let m = FittedModel::from_solution(n, 2, support, &x, -1.25);
+        let dense = [1.0, 10.0, -2.0, 7.0, 0.5];
+        let sparse: Vec<(u32, f64)> = dense
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        let got = m.predict_sparse(&sparse);
+        let want0 = 2.0 * dense[1] + (-1.0) * dense[4];
+        let want1 = 0.5 * dense[0] + 3.0 * dense[2];
+        assert_eq!(got, vec![want0, want1]);
+        assert_eq!(m.objective, -1.25);
+    }
+
+    #[test]
+    fn prediction_handles_unsorted_dupes_and_out_of_range() {
+        let n = 4;
+        let mut x = vec![0.0; n];
+        x[2] = 1.5;
+        let m = FittedModel::from_solution(n, 1, vec![2], &x, 0.0);
+        // unsorted, duplicated index 2, and an index beyond n
+        let got = m.predict_sparse(&[(9, 100.0), (2, 2.0), (0, 5.0), (2, 1.0)]);
+        assert_eq!(got, vec![1.5 * 2.0 + 1.5 * 1.0]);
+        // empty query scores zero
+        assert_eq!(m.predict_sparse(&[]), vec![0.0]);
+    }
+}

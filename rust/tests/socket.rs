@@ -1,0 +1,463 @@
+//! Socket-transport integration tests: wire-codec roundtrips and
+//! rejection paths, localhost bit-parity against the in-process
+//! transports, peer-loss degradation, exact wire-byte accounting, the
+//! `psfit serve` daemon, and one real `psfit worker` subprocess.
+
+use std::io::Write;
+use std::time::Duration;
+
+use psfit::admm::SolveOptions;
+use psfit::config::{Config, TransportKind};
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::losses::make_loss;
+use psfit::metrics::TransferLedger;
+use psfit::network::socket::wire::{
+    self, JobSpec, JobStatus, JobSummary, Setup, WireCommand, WireShard, WireShardData,
+    FRAME_OVERHEAD,
+};
+use psfit::network::socket::worker::spawn_flaky_worker;
+use psfit::network::socket::{
+    connect, spawn_local_worker, Endpoint, SocketCluster, SocketListener,
+};
+use psfit::network::{Cluster, WarmState};
+use psfit::serve::{spawn_local_serve, FittedModel, ServeClient};
+use psfit::util::rng::Rng;
+use psfit::util::testkit::{run_prop, PropConfig};
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ------------------------------------------------------------- wire codec
+
+fn rand_f64s(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn rand_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn rand_name(rng: &mut Rng) -> String {
+    (0..rng.below(12))
+        .map(|_| char::from(b'a' + rng.below(26) as u8))
+        .collect()
+}
+
+fn rand_warm(rng: &mut Rng, size: usize) -> WarmState {
+    WarmState {
+        node: rng.below(8),
+        x: rand_f64s(rng, size),
+        u: rand_f64s(rng, size),
+        omega: rand_f32s(rng, rng.below(size + 1)),
+        nu: rand_f32s(rng, rng.below(size + 1)),
+        preds: (0..rng.below(3))
+            .map(|_| rand_f32s(rng, rng.below(size + 1)))
+            .collect(),
+    }
+}
+
+fn rand_shard(rng: &mut Rng, size: usize) -> WireShard {
+    let rows = 1 + rng.below(4);
+    let cols = 1 + rng.below(size.max(1));
+    let data = if rng.below(2) == 0 {
+        WireShardData::Dense {
+            rows: rows as u32,
+            cols: cols as u32,
+            vals: rand_f32s(rng, rows * cols),
+        }
+    } else {
+        let lists = (0..rows)
+            .map(|_| {
+                let mut idx = rng.choose_indices(cols, rng.below(cols + 1));
+                idx.sort_unstable();
+                idx.into_iter()
+                    .map(|j| (j as u32, rng.normal_f32()))
+                    .collect()
+            })
+            .collect();
+        WireShardData::Csr {
+            cols: cols as u32,
+            rows: lists,
+        }
+    };
+    WireShard {
+        labels: rand_f32s(rng, rows),
+        data,
+    }
+}
+
+fn rand_ledger(rng: &mut Rng) -> TransferLedger {
+    let mut l = TransferLedger::default();
+    l.h2d_bytes = rng.next_u64() >> 32;
+    l.d2h_bytes = rng.next_u64() >> 32;
+    l.copy_seconds = rng.uniform();
+    l.net_up_bytes = rng.next_u64() >> 32;
+    l.net_down_bytes = rng.next_u64() >> 32;
+    l.net_resync_bytes = rng.next_u64() >> 32;
+    l.host_copy_saved_bytes = rng.next_u64() >> 32;
+    l.net_alloc_saved_bytes = rng.next_u64() >> 32;
+    l.gram_builds = rng.next_u64() >> 48;
+    l.chol_factorizations = rng.next_u64() >> 48;
+    l.chol_reuses = rng.next_u64() >> 48;
+    l.wire_frames = rng.next_u64() >> 48;
+    l
+}
+
+fn rand_status(rng: &mut Rng) -> JobStatus {
+    JobStatus {
+        job: rng.next_u64(),
+        phase: rng.below(4) as u8,
+        converged: rng.below(2) == 0,
+        iters: rng.next_u64() >> 48,
+        support_len: rng.next_u64() >> 48,
+        objective: rng.normal(),
+        wall_seconds: rng.uniform(),
+        message: rand_name(rng),
+    }
+}
+
+fn rand_command(rng: &mut Rng, size: usize) -> WireCommand {
+    match rng.below(22) {
+        0 => WireCommand::Setup(Box::new(Setup {
+            node: rng.below(8) as u32,
+            nodes: 1 + rng.below(8) as u32,
+            n_features: 1 + rng.below(64) as u32,
+            width: 1 + rng.below(3) as u32,
+            direct_mode: rng.below(2) == 0,
+            config: rand_name(rng),
+            shard: rand_shard(rng, size),
+        })),
+        1 => WireCommand::Round {
+            round: rng.next_u64(),
+            z: rand_f64s(rng, size),
+        },
+        2 => WireCommand::Loss,
+        3 => WireCommand::Ledger,
+        4 => WireCommand::Export,
+        5 => WireCommand::Reseed {
+            rho_l: rng.normal(),
+            rho_c: rng.normal(),
+            reg: rng.normal(),
+            states: (0..1 + rng.below(3)).map(|_| rand_warm(rng, size)).collect(),
+        },
+        6 => WireCommand::Shutdown,
+        7 => WireCommand::SetupOk {
+            node: rng.below(8) as u32,
+        },
+        8 => WireCommand::RoundReply {
+            node: rng.below(8) as u32,
+            round: rng.next_u64(),
+            x: rand_f64s(rng, size),
+            u: rand_f64s(rng, size),
+        },
+        9 => WireCommand::LossReply { value: rng.normal() },
+        10 => WireCommand::LedgerReply(Box::new(rand_ledger(rng))),
+        11 => WireCommand::WarmReply(Box::new(rand_warm(rng, size))),
+        12 => WireCommand::ReseedOk {
+            node: rng.below(8) as u32,
+        },
+        13 => WireCommand::Error {
+            message: rand_name(rng),
+        },
+        14 => WireCommand::Submit {
+            name: rand_name(rng),
+            spec: JobSpec {
+                n: 1 + rng.below(256) as u32,
+                m: 1 + rng.below(2048) as u32,
+                nodes: 1 + rng.below(8) as u32,
+                sparsity: rng.uniform(),
+                density: rng.uniform().max(0.01),
+                noise_std: rng.uniform(),
+                seed: rng.next_u64(),
+                kappa: rng.below(64) as u32,
+                config: rand_name(rng),
+            },
+        },
+        15 => WireCommand::Status { job: rng.next_u64() },
+        16 => WireCommand::Predict {
+            job: rng.next_u64(),
+            features: (0..rng.below(6))
+                .map(|_| (rng.below(64) as u32, rng.normal()))
+                .collect(),
+        },
+        17 => WireCommand::Jobs,
+        18 => WireCommand::Submitted { job: rng.next_u64() },
+        19 => WireCommand::StatusReply(Box::new(rand_status(rng))),
+        20 => WireCommand::PredictReply {
+            values: rand_f64s(rng, rng.below(4)),
+        },
+        _ => WireCommand::JobsReply {
+            jobs: (0..rng.below(4))
+                .map(|_| JobSummary {
+                    job: rng.next_u64(),
+                    phase: rng.below(4) as u8,
+                    name: rand_name(rng),
+                })
+                .collect(),
+        },
+    }
+}
+
+#[test]
+fn prop_every_wire_command_roundtrips() {
+    let cfg = PropConfig {
+        cases: 96,
+        max_size: 24,
+        ..Default::default()
+    };
+    run_prop("wire_roundtrip", cfg, |rng, size| {
+        let cmd = rand_command(rng, size);
+        let mut buf = Vec::new();
+        let n = wire::write_frame(&mut buf, &cmd).map_err(|e| e.to_string())?;
+        if n != buf.len() {
+            return Err(format!("reported {n} bytes, wrote {}", buf.len()));
+        }
+        let mut r = &buf[..];
+        let (back, m) = wire::read_frame(&mut r)
+            .map_err(|e| e.to_string())?
+            .ok_or("missing frame")?;
+        if m != n {
+            return Err(format!("read reported {m} bytes, frame was {n}"));
+        }
+        if back != cmd {
+            return Err(format!("`{}` did not roundtrip", cmd.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_and_corrupted_frames_are_rejected() {
+    let cmd = WireCommand::Round {
+        round: 7,
+        z: vec![1.0, -2.0, 3.5],
+    };
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, &cmd).unwrap();
+    // clean EOF at a frame boundary is a `None`, not an error
+    assert!(wire::read_frame(&mut &buf[..0]).unwrap().is_none());
+    // every strict prefix is an error — truncation is never silent
+    for cut in 1..buf.len() {
+        assert!(wire::read_frame(&mut &buf[..cut]).is_err(), "prefix {cut}");
+    }
+    // flip one payload byte: the checksum catches it
+    let mut bad = buf.clone();
+    bad[6] ^= 0x40;
+    let err = wire::read_frame(&mut &bad[..]).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+    // corrupt the length header: rejected as a bad length or a short read
+    let mut bad_len = buf.clone();
+    bad_len[1] ^= 0xff;
+    assert!(wire::read_frame(&mut &bad_len[..]).is_err());
+}
+
+#[test]
+fn version_mismatch_handshake_is_rejected() {
+    let listener = SocketListener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+    let addr = listener.local_endpoint();
+    let server = std::thread::spawn(move || {
+        let mut s = listener.accept().unwrap();
+        wire::server_handshake(&mut s).unwrap_err().to_string()
+    });
+    let mut c = connect(&Endpoint::parse(&addr), Duration::from_secs(2), 1).unwrap();
+    let mut bad = [0u8; 8];
+    bad[..4].copy_from_slice(b"PSFW");
+    bad[4..].copy_from_slice(&99u32.to_le_bytes());
+    c.write_all(&bad).unwrap();
+    c.flush().unwrap();
+    let err = server.join().unwrap();
+    assert!(err.contains("version mismatch"), "{err}");
+}
+
+// --------------------------------------------------- cluster parity + faults
+
+#[test]
+fn socket_cluster_matches_sequential_bit_for_bit() {
+    let spec = SyntheticSpec::regression(48, 240, 3);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 3;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 30;
+    let base = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+
+    let mut scfg = cfg.clone();
+    scfg.platform.transport = TransportKind::Socket;
+    scfg.platform.workers = (0..3)
+        .map(|_| spawn_local_worker().unwrap())
+        .collect();
+    let sock = driver::fit_with_options(&ds, &scfg, &SolveOptions::default(), false).unwrap();
+
+    assert_eq!(base.iters, sock.iters);
+    assert_eq!(base.support, sock.support);
+    assert_eq!(bits(&base.x), bits(&sock.x));
+    assert_eq!(bits(&base.z), bits(&sock.z));
+    let stats = sock.coordination.expect("socket cluster reports stats");
+    assert_eq!(stats.deaths, 0);
+}
+
+#[test]
+fn losing_a_worker_mid_run_degrades_to_the_survivors() {
+    let spec = SyntheticSpec::regression(32, 180, 3);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 3;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 8;
+    cfg.solver.tol_primal = 0.0; // fixed rounds: the death must land mid-run
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.workers = vec![
+        spawn_local_worker().unwrap(),
+        spawn_local_worker().unwrap(),
+        spawn_flaky_worker(2).unwrap(),
+    ];
+    let res = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+    assert_eq!(res.iters, 8, "quorum path keeps iterating after the death");
+    let stats = res.coordination.expect("socket cluster reports stats");
+    assert_eq!(stats.deaths, 1);
+    let last = res.trace.records.last().unwrap();
+    assert_eq!(last.participants, 2, "final rounds fold the two survivors");
+}
+
+#[test]
+fn round_frames_are_ledgered_byte_for_byte() {
+    let spec = SyntheticSpec::regression(16, 90, 2);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.workers = vec![spawn_local_worker().unwrap(), spawn_local_worker().unwrap()];
+    let mut cluster = SocketCluster::connect(&ds, &cfg).unwrap();
+    let dim = ds.n_features * ds.width;
+    let z = vec![0.25; dim];
+    let rounds = 3usize;
+    for _ in 0..rounds {
+        let replies = cluster.round(&z).unwrap();
+        assert_eq!(replies.len(), 2);
+    }
+    let led = cluster.ledger();
+    // Round frame:      tag + round counter + z           (+ frame overhead)
+    // RoundReply frame: tag + node + round + x + u        (+ frame overhead)
+    let down_frame = FRAME_OVERHEAD + 1 + 8 + (4 + dim * 8);
+    let up_frame = FRAME_OVERHEAD + 1 + 4 + 8 + 2 * (4 + dim * 8);
+    assert_eq!(led.net_down_bytes, (rounds * 2 * down_frame) as u64);
+    assert_eq!(led.net_up_bytes, (rounds * 2 * up_frame) as u64);
+    assert!(led.net_resync_bytes > 0, "handshake + setup are ledgered");
+    assert!(led.wire_frames >= (rounds * 4) as u64);
+}
+
+// ------------------------------------------------------------- psfit serve
+
+#[test]
+fn serve_runs_concurrent_jobs_and_serves_bitexact_predictions() {
+    let addr = spawn_local_serve(2).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let spec_a = JobSpec {
+        n: 48,
+        m: 240,
+        nodes: 2,
+        ..JobSpec::default()
+    };
+    let spec_b = JobSpec {
+        n: 32,
+        m: 200,
+        nodes: 2,
+        seed: 7,
+        ..JobSpec::default()
+    };
+    // submit both before waiting on either: the two fits run concurrently
+    // over the same two-worker fleet
+    let a = client.submit("alpha", spec_a.clone()).unwrap();
+    let b = client.submit("beta", spec_b).unwrap();
+    let sa = client.wait(a, Duration::from_secs(120)).unwrap();
+    let sb = client.wait(b, Duration::from_secs(120)).unwrap();
+    assert!(sa.support_len > 0 && sb.support_len > 0);
+
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 2);
+    assert_eq!((jobs[0].job, jobs[0].name.as_str()), (a, "alpha"));
+    assert_eq!((jobs[1].job, jobs[1].name.as_str()), (b, "beta"));
+
+    // replicate job A locally (same synthetic recipe, default config) and
+    // hold the daemon's predictions to bit-exactness
+    let mut sspec = SyntheticSpec::regression(spec_a.n as usize, spec_a.m as usize, 2);
+    sspec.sparsity_level = spec_a.sparsity;
+    sspec.density = spec_a.density;
+    sspec.noise_std = spec_a.noise_std;
+    sspec.seed = spec_a.seed;
+    let ds = sspec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = sspec.kappa();
+    let res = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+    let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
+    let objective = psfit::admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &res.x);
+    let model = FittedModel::from_solution(
+        ds.n_features,
+        ds.width,
+        res.support.clone(),
+        &res.x,
+        objective,
+    );
+    assert_eq!(sa.objective.to_bits(), objective.to_bits());
+
+    let query = vec![(0u32, 1.0), (5, -2.0), (17, 0.5)];
+    let remote = client.predict(a, &query).unwrap();
+    let local = model.predict_sparse(&query);
+    assert_eq!(bits(&remote), bits(&local));
+
+    // unknown jobs error without poisoning the session
+    let err = client.predict(999, &query).unwrap_err().to_string();
+    assert!(err.contains("no fitted model"), "{err}");
+    let err = client.status(999).unwrap_err().to_string();
+    assert!(err.contains("no such job"), "{err}");
+    assert_eq!(client.jobs().unwrap().len(), 2, "session survives the error");
+}
+
+// ------------------------------------------------------- worker subprocess
+
+#[test]
+fn a_real_worker_process_serves_a_single_node_fit() {
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    struct Guard(Child);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_psfit"))
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn psfit worker");
+    let stdout = child.stdout.take().unwrap();
+    let guard = Guard(child);
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("psfit worker listening on ")
+        .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+        .to_string();
+
+    let spec = SyntheticSpec::regression(24, 120, 1);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 1;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 20;
+    let base = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.workers = vec![addr];
+    let sock = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+    assert_eq!(base.support, sock.support);
+    assert_eq!(bits(&base.x), bits(&sock.x));
+    drop(guard);
+}
