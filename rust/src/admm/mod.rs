@@ -24,5 +24,6 @@ pub mod solver;
 pub use global::GlobalState;
 pub use local::LocalProx;
 pub use solver::{
-    solve, solve_from, solve_from_with, SolveOptions, SolveResult, SolveScratch, SolverState,
+    solve, solve_checkpointed, solve_from, solve_from_with, SolveOptions, SolveResult,
+    SolveScratch, SolverState,
 };

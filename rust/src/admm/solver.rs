@@ -5,12 +5,14 @@
 //! extraction (hard threshold to kappa + optional ridge polish on the
 //! recovered support).
 
+use crate::backend::BlockParams;
 use crate::config::Config;
 use crate::data::{Dataset, ShardData};
 use crate::linalg::ops;
 use crate::losses::LossKind;
 use crate::metrics::{Trace, TransferLedger};
 use crate::network::{Cluster, WarmState};
+use crate::path::checkpoint::{self, FitCheckpoint};
 use crate::sparsity::{hard_threshold, support_of};
 use crate::util::Stopwatch;
 
@@ -185,16 +187,59 @@ pub fn solve_from_with(
     opts: &SolveOptions,
     scratch: &mut SolveScratch,
 ) -> anyhow::Result<SolveResult> {
+    solve_loop(cluster, global, cfg, dataset, opts, scratch, LoopCtl::default())
+}
+
+/// Mid-fit snapshot sink: where `solve_loop` writes PSF1 checkpoints,
+/// how often, and the problem fingerprint stamped into them.
+struct CkptSink<'a> {
+    path: &'a std::path::Path,
+    every: usize,
+    hash: u64,
+    /// Full roster size; a snapshot whose warm export does not cover
+    /// every node (degraded cluster) is skipped, because a resume builds
+    /// a fresh full cluster that such a partial state could never seed.
+    roster: usize,
+}
+
+/// Resume/checkpoint controls threaded through [`solve_loop`]; the
+/// default is a plain cold-started, non-checkpointing solve.
+#[derive(Default)]
+struct LoopCtl<'a> {
+    /// First outer iteration to run (`> 0` when resuming a checkpoint).
+    start: usize,
+    /// Records of iterations completed before `start`, prepended to the
+    /// returned trace.
+    trace: Trace,
+    /// Periodic snapshot sink, if checkpointing.
+    ckpt: Option<CkptSink<'a>>,
+}
+
+/// The shared outer loop behind [`solve_from_with`] and
+/// [`solve_checkpointed`].
+fn solve_loop(
+    cluster: &mut dyn Cluster,
+    global: &mut GlobalState,
+    cfg: &Config,
+    dataset: Option<&Dataset>,
+    opts: &SolveOptions,
+    scratch: &mut SolveScratch,
+    ctl: LoopCtl<'_>,
+) -> anyhow::Result<SolveResult> {
     cfg.solver.validate()?;
     let sc = &cfg.solver;
     let watch = Stopwatch::start();
 
     let dim = global.z.len();
-    let mut trace = Trace::default();
+    let LoopCtl {
+        start,
+        mut trace,
+        ckpt,
+    } = ctl;
     SolveScratch::reuse_f64(&mut scratch.c, dim, &mut scratch.saved_bytes);
     let c = &mut scratch.c;
     let mut converged = false;
-    let mut iters = 0;
+    let mut iters = start;
 
     // scaled termination thresholds (absolute tolerances scaled by the
     // problem dimension, Boyd §3.3 style); the primal threshold scales
@@ -203,7 +248,7 @@ pub fn solve_from_with(
     let d_thresh = sc.tol_dual * (dim as f64).sqrt().max(1.0);
     let b_thresh = sc.tol_bilinear;
 
-    for k in 0..sc.max_iters {
+    for k in start..sc.max_iters {
         iters = k + 1;
         // ---- Bcast z^k / Collect x_i^{k+1}, u_i^k -----------------------
         let replies = cluster.round(&global.z)?;
@@ -267,6 +312,28 @@ pub fn solve_from_with(
             converged = true;
             break;
         }
+        // ---- periodic mid-fit snapshot ----------------------------------
+        // Captured at the iteration boundary — exactly the state the next
+        // iteration reads — so a resume replays nothing and the remaining
+        // trace is bit-identical to an uninterrupted run.
+        if let Some(sink) = &ckpt {
+            if iters % sink.every == 0 {
+                let state = SolverState::capture(cluster, global)?;
+                let full = state.nodes.len() == sink.roster
+                    && (0..sink.roster).all(|i| state.nodes.iter().any(|w| w.node == i));
+                if full {
+                    checkpoint::save_fit(
+                        sink.path,
+                        &FitCheckpoint {
+                            problem_hash: sink.hash,
+                            iters_done: iters as u64,
+                            trace: trace.records.clone(),
+                            state,
+                        },
+                    )?;
+                }
+            }
+        }
     }
 
     // ---- solution extraction -------------------------------------------
@@ -303,6 +370,78 @@ pub fn solve_from_with(
         wall_seconds: watch.elapsed_secs(),
         final_loss,
     })
+}
+
+/// Run Bi-cADMM with mid-fit checkpointing (`psfit train --checkpoint`,
+/// serve jobs).
+///
+/// With `cfg.solver.checkpoint` empty this is exactly [`solve`].
+/// Otherwise the solve writes a PSF1 snapshot (full [`SolverState`] plus
+/// the trace so far) to that path every `cfg.solver.checkpoint_every`
+/// completed iterations, atomically; and when the file already holds a
+/// snapshot of the *same* problem (checked via
+/// [`checkpoint::problem_hash`] over the dataset and every
+/// trajectory-shaping setting), the fit resumes at the saved iteration
+/// instead of restarting.  Snapshots land on iteration boundaries, so
+/// the resumed run's remaining residual trace is bit-identical to an
+/// uninterrupted run's.  A checkpoint written for a different problem is
+/// rejected, never silently re-seeded.
+pub fn solve_checkpointed(
+    cluster: &mut dyn Cluster,
+    dim: usize,
+    cfg: &Config,
+    dataset: &Dataset,
+    opts: &SolveOptions,
+) -> anyhow::Result<SolveResult> {
+    cfg.solver.validate()?;
+    if cfg.solver.checkpoint.is_empty() {
+        return solve(cluster, dim, cfg, Some(dataset), opts);
+    }
+    let ck_path = std::path::Path::new(&cfg.solver.checkpoint);
+    // The iteration budget is deliberately excluded from the fingerprint:
+    // a checkpointed fit may legitimately resume with a larger max_iters
+    // (more budget), and a kill leaves the budget partially spent — only
+    // the trajectory-shaping settings must match.
+    let hash = {
+        let mut hcfg = cfg.clone();
+        hcfg.solver.max_iters = 0;
+        checkpoint::problem_hash(dataset, &hcfg, &[])
+    };
+    let mut global = GlobalState::new(dim);
+    let mut ctl = LoopCtl {
+        ckpt: Some(CkptSink {
+            path: ck_path,
+            every: cfg.solver.checkpoint_every.max(1),
+            hash,
+            roster: dataset.nodes(),
+        }),
+        ..LoopCtl::default()
+    };
+    if ck_path.exists() {
+        let ck = checkpoint::load_fit(ck_path)?;
+        anyhow::ensure!(
+            ck.problem_hash == hash,
+            "checkpoint {} was written for a different fit (hash mismatch); \
+             delete it or point solver.checkpoint elsewhere",
+            ck_path.display()
+        );
+        let params = BlockParams {
+            rho_l: cfg.solver.rho_l,
+            rho_c: cfg.solver.rho_c,
+            reg: cfg.solver.block_reg(dataset.nodes()),
+        };
+        cluster.reseed(&ck.state.nodes, params)?;
+        global = ck.state.global.clone();
+        ctl.start = ck.iters_done as usize;
+        ctl.trace.records = ck.trace;
+        eprintln!(
+            "[checkpoint] resuming fit at iteration {} from {}",
+            ctl.start,
+            ck_path.display()
+        );
+    }
+    let mut scratch = SolveScratch::default();
+    solve_loop(cluster, &mut global, cfg, Some(dataset), opts, &mut scratch, ctl)
 }
 
 /// Ridge re-fit on the recovered support (squared loss):
@@ -617,6 +756,65 @@ mod tests {
         assert_eq!(first.z, second.z);
         assert_eq!(first.x, second.x);
         assert_eq!(first.support, second.support);
+    }
+
+    /// A fit killed mid-run and resumed from its PSF1 checkpoint must
+    /// finish with a remaining trace bit-identical to an uninterrupted
+    /// run — the same invariant the path subsystem pins for sweeps.
+    #[test]
+    fn checkpointed_fit_resumes_bit_identically() {
+        let spec = SyntheticSpec::regression(16, 100, 2);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 4;
+        cfg.solver.max_iters = 12;
+        cfg.solver.tol_primal = 0.0; // fixed rounds: the full trace runs
+
+        // reference: one uninterrupted solve
+        let mut cluster = build_cluster(&ds, &cfg, 2);
+        let reference =
+            solve(&mut cluster, 16, &cfg, Some(&ds), &SolveOptions::default()).unwrap();
+        assert_eq!(reference.trace.iters(), 12);
+
+        // interrupted: checkpoint every 2 iterations, "kill" after 7 by
+        // capping the budget, then resume with the full budget
+        let path = std::env::temp_dir().join("psfit_solver_resume.psf");
+        let _ = std::fs::remove_file(&path);
+        let mut ck_cfg = cfg.clone();
+        ck_cfg.solver.checkpoint = path.to_string_lossy().into_owned();
+        ck_cfg.solver.checkpoint_every = 2;
+        let mut half = ck_cfg.clone();
+        half.solver.max_iters = 7;
+        let mut cluster = build_cluster(&ds, &half, 2);
+        let partial =
+            solve_checkpointed(&mut cluster, 16, &half, &ds, &SolveOptions::default()).unwrap();
+        assert!(!partial.converged);
+        assert!(path.exists(), "no checkpoint was written");
+
+        let mut cluster = build_cluster(&ds, &ck_cfg, 2);
+        let resumed =
+            solve_checkpointed(&mut cluster, 16, &ck_cfg, &ds, &SolveOptions::default()).unwrap();
+        assert_eq!(resumed.iters, 12);
+        assert_eq!(resumed.trace.iters(), reference.trace.iters());
+        for (a, b) in resumed.trace.records.iter().zip(&reference.trace.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.bilinear.to_bits(), b.bilinear.to_bits(), "iter {}", a.iter);
+        }
+        assert_eq!(resumed.z, reference.z);
+        assert_eq!(resumed.x, reference.x);
+        assert_eq!(resumed.support, reference.support);
+
+        // a snapshot of a *different* problem is rejected, not re-seeded
+        let other = SyntheticSpec::regression(16, 100, 3).generate();
+        let mut cluster = build_cluster(&other, &ck_cfg, 2);
+        let err = solve_checkpointed(&mut cluster, 16, &ck_cfg, &other, &SolveOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different fit"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -102,6 +102,14 @@ pub struct SolverConfig {
     pub zt_iters: usize,
     /// Re-fit the dense solution on the recovered support at the end.
     pub polish: bool,
+    /// Mid-fit checkpoint file (PSF1) for `psfit train --checkpoint` and
+    /// serve jobs; empty disables checkpointing.  When the file already
+    /// holds a compatible snapshot the fit resumes from it with a
+    /// bit-identical remaining trace.
+    pub checkpoint: String,
+    /// Outer iterations between checkpoint writes (>= 1 when
+    /// `checkpoint` is set).
+    pub checkpoint_every: usize,
 }
 
 impl Default for SolverConfig {
@@ -120,6 +128,8 @@ impl Default for SolverConfig {
             tol_bilinear: 1e-4,
             zt_iters: 80,
             polish: true,
+            checkpoint: String::new(),
+            checkpoint_every: 1,
         }
     }
 }
@@ -152,6 +162,9 @@ impl SolverConfig {
         }
         if self.max_iters == 0 || self.inner_iters == 0 || self.cg_iters == 0 {
             anyhow::bail!("iteration counts must be >= 1");
+        }
+        if !self.checkpoint.is_empty() && self.checkpoint_every == 0 {
+            anyhow::bail!("solver.checkpoint_every must be >= 1 when checkpointing");
         }
         Ok(())
     }
@@ -292,6 +305,14 @@ pub struct PlatformConfig {
     /// Socket transport: connect retries after the first attempt (linear
     /// backoff), absorbing workers that are still binding at startup.
     pub connect_retries: u32,
+    /// Socket transport: keep probing dead workers between rounds and
+    /// fold them back into the fleet (fresh `Setup` plus a warm-state
+    /// resync when one is cached).
+    pub rejoin: bool,
+    /// Socket transport: minimum live workers per round; a round with
+    /// fewer replies fails instead of degrading further.  `0` accepts
+    /// any non-empty quorum.
+    pub quorum: u64,
 }
 
 impl PlatformConfig {
@@ -330,6 +351,8 @@ impl Default for PlatformConfig {
             connect_timeout_ms: 3000,
             read_timeout_ms: 30_000,
             connect_retries: 3,
+            rejoin: false,
+            quorum: 0,
         }
     }
 }
@@ -412,6 +435,13 @@ impl Config {
                                     .as_bool()
                                     .ok_or_else(|| anyhow::anyhow!("solver.polish: bool"))?
                             }
+                            "checkpoint" => {
+                                cfg.solver.checkpoint = v
+                                    .as_str()
+                                    .ok_or_else(|| anyhow::anyhow!("solver.checkpoint: str"))?
+                                    .to_string()
+                            }
+                            "checkpoint_every" => cfg.solver.checkpoint_every = u()?,
                             other => anyhow::bail!("unknown solver key `{other}`"),
                         }
                     }
@@ -507,6 +537,16 @@ impl Config {
                                     v.as_usize().ok_or_else(|| {
                                         anyhow::anyhow!("platform.connect_retries: int")
                                     })? as u32
+                            }
+                            "rejoin" => {
+                                cfg.platform.rejoin = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("platform.rejoin: bool"))?
+                            }
+                            "quorum" => {
+                                cfg.platform.quorum = v.as_usize().ok_or_else(|| {
+                                    anyhow::anyhow!("platform.quorum: int")
+                                })? as u64
                             }
                             other => anyhow::bail!("unknown platform key `{other}`"),
                         }
@@ -679,7 +719,7 @@ impl Config {
     /// deliberately not serialized.
     pub fn to_json(&self) -> Json {
         let s = &self.solver;
-        let solver = Json::obj(vec![
+        let mut solver = vec![
             ("rho_c", Json::Num(s.rho_c)),
             ("rho_b", Json::Num(s.rho_b)),
             ("rho_l", Json::Num(s.rho_l)),
@@ -693,7 +733,11 @@ impl Config {
             ("tol_bilinear", Json::Num(s.tol_bilinear)),
             ("zt_iters", Json::Num(s.zt_iters as f64)),
             ("polish", Json::Bool(s.polish)),
-        ]);
+            ("checkpoint_every", Json::Num(s.checkpoint_every as f64)),
+        ];
+        if !s.checkpoint.is_empty() {
+            solver.push(("checkpoint", Json::Str(s.checkpoint.clone())));
+        }
         let p = &self.platform;
         let mut platform = vec![
             ("nodes", Json::Num(p.nodes as f64)),
@@ -713,6 +757,8 @@ impl Config {
             ("connect_timeout_ms", Json::Num(p.connect_timeout_ms as f64)),
             ("read_timeout_ms", Json::Num(p.read_timeout_ms as f64)),
             ("connect_retries", Json::Num(p.connect_retries as f64)),
+            ("rejoin", Json::Bool(p.rejoin)),
+            ("quorum", Json::Num(p.quorum as f64)),
         ];
         if let Some(gbps) = p.pcie_gbps {
             platform.push(("pcie_gbps", Json::Num(gbps)));
@@ -768,7 +814,7 @@ impl Config {
             path.push(("checkpoint", Json::Str(ck.clone())));
         }
         Json::obj(vec![
-            ("solver", solver),
+            ("solver", Json::obj(solver)),
             ("platform", Json::obj(platform)),
             ("coordinator", Json::obj(coordinator)),
             ("path", Json::obj(path)),
@@ -854,6 +900,7 @@ mod tests {
             r#"{"platform": {"sparse_threshold": 1.5}}"#,
             r#"{"platform": {"sparse_threshold": -0.1}}"#,
             r#"{"platform": {"isa": "sse9"}}"#,
+            r#"{"solver": {"checkpoint": "fit.psf", "checkpoint_every": 0}}"#,
         ] {
             assert!(
                 Config::from_json(&Json::parse(bad).unwrap()).is_err(),
@@ -943,7 +990,7 @@ mod tests {
             "platform": {"transport": "socket",
                          "workers": ["127.0.0.1:7001", "unix:/tmp/w2.sock"],
                          "connect_timeout_ms": 500, "read_timeout_ms": 0,
-                         "connect_retries": 5}
+                         "connect_retries": 5, "rejoin": true, "quorum": 2}
         }"#;
         let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
         assert_eq!(cfg.platform.transport, TransportKind::Socket);
@@ -952,6 +999,9 @@ mod tests {
         assert_eq!(cfg.platform.connect_timeout_ms, 500);
         assert_eq!(cfg.platform.read_timeout_ms, 0);
         assert_eq!(cfg.platform.connect_retries, 5);
+        assert!(cfg.platform.rejoin);
+        assert_eq!(cfg.platform.quorum, 2);
+        assert!(!Config::default().platform.rejoin);
         // defaults stay in-process with sane timeouts
         let d = Config::default();
         assert_eq!(d.platform.transport, TransportKind::Local);
@@ -978,7 +1028,11 @@ mod tests {
         cfg.solver.rho_c = 2.5;
         cfg.solver.kappa = 7;
         cfg.solver.polish = false;
+        cfg.solver.checkpoint = "fit.psf".into();
+        cfg.solver.checkpoint_every = 5;
         cfg.platform.nodes = 3;
+        cfg.platform.rejoin = true;
+        cfg.platform.quorum = 2;
         cfg.platform.threads = 2;
         cfg.platform.sparse = SparseMode::Always;
         cfg.platform.sparse_threshold = 0.5;

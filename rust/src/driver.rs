@@ -199,7 +199,9 @@ pub fn fit(ds: &Dataset, cfg: &Config) -> anyhow::Result<SolveResult> {
 
 /// [`fit`] with explicit solve options and transport choice (`threaded =
 /// false` forces the deterministic sequential cluster on the local
-/// transport).
+/// transport).  With `cfg.solver.checkpoint` set, the fit writes and —
+/// when the file already holds a compatible snapshot — resumes mid-fit
+/// PSF1 checkpoints via [`admm::solve_checkpointed`].
 pub fn fit_with_options(
     ds: &Dataset,
     cfg: &Config,
@@ -208,5 +210,9 @@ pub fn fit_with_options(
 ) -> anyhow::Result<SolveResult> {
     let dim = ds.n_features * ds.width;
     let mut cluster = build_transport_cluster(ds, cfg, threaded)?;
-    admm::solve(cluster.as_mut(), dim, cfg, Some(ds), opts)
+    if cfg.solver.checkpoint.is_empty() {
+        admm::solve(cluster.as_mut(), dim, cfg, Some(ds), opts)
+    } else {
+        admm::solve_checkpointed(cluster.as_mut(), dim, cfg, ds, opts)
+    }
 }

@@ -1,0 +1,183 @@
+//! `psfit chaos` — deterministic fault-injection harness for the socket
+//! transport.
+//!
+//! Stands up an in-process worker fleet, fits one reference problem over
+//! a clean socket cluster, then repeats the same fit twice with every
+//! worker connection routed through a seeded
+//! [`crate::network::socket::ChaosProxy`] while `platform.rejoin` heals
+//! the fleet between rounds.  Because each faulted run builds its own
+//! proxies, the per-connection fault schedules are identical across
+//! runs — the printed schedule fingerprint proves it — and the harness
+//! asserts that every faulted run that converges recovers **exactly**
+//! the clean run's support.  A run that loses its whole quorum is
+//! reported, not failed: losing everything is a legitimate outcome of a
+//! fault schedule, silently missing parity is not.
+
+use crate::config::{Config, TransportKind};
+use crate::data::SyntheticSpec;
+use crate::driver;
+use crate::network::socket::{spawn_local_worker, ChaosProxy, ChaosSpec};
+
+/// Settings for `psfit chaos`.
+#[derive(Debug, Clone)]
+pub struct ChaosOpts {
+    /// Smaller problem and iteration budget (CI smoke).
+    pub quick: bool,
+    /// Fault-schedule seed; overrides the spec default (and any `seed=`
+    /// inside `--faults`) when set to a non-default value.
+    pub seed: u64,
+    /// Compact fault spec (`drop=0.02,corrupt=0.02,...`); `None` uses a
+    /// mild mixed schedule that exercises every fault kind.
+    pub faults: Option<String>,
+    /// Worker fleet size.
+    pub nodes: usize,
+}
+
+/// The mild default schedule: a percent of frames die or arrive damaged
+/// (each one kills — and heals — a connection), a tenth arrive split or
+/// late — every decoder path gets hit without starving the fit of a
+/// quorum or resetting dual state faster than consensus re-equilibrates.
+const DEFAULT_FAULTS: &str = "drop=0.01,corrupt=0.01,split=0.10,delay=0.05:5";
+
+/// Run the harness; errors mean a parity violation (or a setup failure),
+/// so CI can gate on the exit code.
+pub fn chaos(opts: &ChaosOpts) -> anyhow::Result<()> {
+    anyhow::ensure!(opts.nodes >= 1, "psfit chaos needs at least one node");
+    let mut spec = ChaosSpec::parse(opts.faults.as_deref().unwrap_or(DEFAULT_FAULTS))?;
+    if opts.seed != ChaosSpec::default().seed {
+        spec.seed = opts.seed;
+    }
+
+    let (n, m, iters) = if opts.quick {
+        (40usize, 400usize, 800usize)
+    } else {
+        (64, 600, 1000)
+    };
+    // well-conditioned recovery instance at loose tolerances — the exact
+    // regime tests/integration.rs pins as converging comfortably.  The
+    // harness judges fault tolerance, not solver difficulty, and the
+    // generous iteration budget absorbs the re-equilibration rounds each
+    // death costs.
+    let mut sspec = SyntheticSpec::regression(n, m, opts.nodes);
+    sspec.sparsity_level = 0.9;
+    sspec.noise_std = 0.05;
+    let ds = sspec.generate();
+
+    let mut cfg = Config::default();
+    cfg.platform.nodes = opts.nodes;
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.rejoin = true;
+    cfg.platform.read_timeout_ms = 10_000;
+    cfg.solver.kappa = sspec.kappa();
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.solver.max_iters = iters;
+    cfg.solver.tol_primal = 1e-2;
+    cfg.solver.tol_dual = 1e-2;
+    cfg.solver.tol_bilinear = 1e-1;
+
+    // one shared fleet: a worker serves one node session per connection,
+    // so the clean run and both faulted runs multiplex over it safely
+    let fleet: Vec<String> = (0..opts.nodes)
+        .map(|_| spawn_local_worker())
+        .collect::<anyhow::Result<_>>()?;
+
+    let fingerprint = spec.schedule_fingerprint(2 * opts.nodes as u64, 64);
+    println!("fault spec:  {spec}");
+    println!("fingerprint: {fingerprint:#018x} (same seed => same schedule, every run)");
+
+    // ---- clean reference run -------------------------------------------
+    cfg.platform.workers = fleet.clone();
+    let clean = driver::fit(&ds, &cfg)?;
+    anyhow::ensure!(
+        clean.converged,
+        "the clean run did not converge in {iters} iterations; the chaos \
+         parity check needs a converged reference"
+    );
+    println!(
+        "clean run:   converged in {} iters, support {:?}",
+        clean.iters,
+        &clean.support
+    );
+
+    // ---- faulted runs ---------------------------------------------------
+    let mut converged_runs = 0usize;
+    for run in 1..=2u32 {
+        // fresh proxies per run: connection counters restart at 0, so
+        // this run faces the identical fault schedule as the last one
+        let proxies: Vec<ChaosProxy> = fleet
+            .iter()
+            .map(|w| ChaosProxy::spawn(w, &spec))
+            .collect::<anyhow::Result<_>>()?;
+        cfg.platform.workers = proxies.iter().map(|p| p.addr().to_string()).collect();
+        // periodic checkpoints keep the rejoin layer's warm cache fresh,
+        // so a killed connection resyncs at most 10 rounds stale instead
+        // of cold-restarting its dual state (a per-run file: each run
+        // must fit from scratch, never resume its predecessor)
+        let ck = std::env::temp_dir().join(format!("psfit_chaos_run{run}.psf"));
+        let _ = std::fs::remove_file(&ck);
+        cfg.solver.checkpoint = ck.to_string_lossy().into_owned();
+        cfg.solver.checkpoint_every = 10;
+        let outcome = driver::fit(&ds, &cfg);
+        let _ = std::fs::remove_file(&ck);
+        match outcome {
+            Ok(res) => {
+                let injected: u64 = proxies.iter().map(|p| p.injected_faults()).sum();
+                let coord = res
+                    .coordination
+                    .as_ref()
+                    .map(|c| c.summary())
+                    .unwrap_or_else(|| "no coordination stats".to_string());
+                println!(
+                    "chaos run {run}: converged={} iters={} faults_injected={injected}",
+                    res.converged, res.iters
+                );
+                println!("             {coord}");
+                if res.converged {
+                    converged_runs += 1;
+                    anyhow::ensure!(
+                        res.support == clean.support,
+                        "chaos run {run} converged to support {:?}, clean run \
+                         recovered {:?} — fault injection changed the answer",
+                        res.support,
+                        clean.support
+                    );
+                    println!("             support parity with the clean run: OK");
+                } else {
+                    println!(
+                        "             did not converge under faults; parity not checked"
+                    );
+                }
+            }
+            Err(e) => {
+                // quorum loss is a legitimate outcome of a fault schedule
+                println!("chaos run {run}: failed cleanly ({e:#})");
+            }
+        }
+    }
+    anyhow::ensure!(
+        converged_runs > 0,
+        "no faulted run converged — the schedule is too hostile for a \
+         meaningful parity check (try a tamer --faults)"
+    );
+    println!("chaos: {converged_runs}/2 faulted run(s) converged with support parity");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CI smoke path end-to-end, on a tiny problem: same seed, same
+    /// schedule, parity against the clean run.
+    #[test]
+    fn quick_chaos_run_passes_parity() {
+        let opts = ChaosOpts {
+            quick: true,
+            seed: ChaosSpec::default().seed,
+            faults: Some("split=0.10,delay=0.05:2".to_string()),
+            nodes: 2,
+        };
+        chaos(&opts).unwrap();
+    }
+}

@@ -18,6 +18,8 @@
 //! | [`path`]    | (new)       | warm path sweep beats cold-started sequence|
 //! | [`transport`] | (new)     | in-process vs localhost-socket round cost  |
 
+/// Deterministic fault-injection harness (`psfit chaos`).
+pub mod chaos;
 /// Figure 1: residual convergence vs rho_b.
 pub mod fig1;
 /// Figure 4: CPU<->GPU transfer time.
@@ -37,6 +39,7 @@ pub mod table1;
 /// Transport round-latency benchmark (`psfit bench --transport`).
 pub mod transport;
 
+pub use chaos::chaos;
 pub use fig1::fig1;
 pub use fig4::fig4;
 pub use kernels::kernels;
@@ -67,19 +70,20 @@ pub struct TimedRun {
 
 /// Fit `ds` under `cfg`, timing setup and solve separately.  Honors
 /// `platform.transport`, so a benchmark config can point at a socket
-/// fleet; setup time then covers connect + shard shipping.
+/// fleet; setup time then covers connect + shard shipping.  With
+/// `solver.checkpoint` set the solve writes (and resumes) mid-fit PSF1
+/// snapshots — `psfit train --checkpoint` lands here.
 pub fn run_timed(ds: &Dataset, cfg: &Config, threaded: bool) -> anyhow::Result<TimedRun> {
     let watch = Stopwatch::start();
     let dim = ds.n_features * ds.width;
     let mut cluster = driver::build_transport_cluster(ds, cfg, threaded)?;
     let setup_seconds = watch.elapsed_secs();
-    let result = crate::admm::solve(
-        cluster.as_mut(),
-        dim,
-        cfg,
-        Some(ds),
-        &SolveOptions::default(),
-    )?;
+    let opts = SolveOptions::default();
+    let result = if cfg.solver.checkpoint.is_empty() {
+        crate::admm::solve(cluster.as_mut(), dim, cfg, Some(ds), &opts)?
+    } else {
+        crate::admm::solve_checkpointed(cluster.as_mut(), dim, cfg, ds, &opts)?
+    };
     let solve_seconds = result.wall_seconds;
     Ok(TimedRun {
         result,

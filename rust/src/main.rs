@@ -19,6 +19,10 @@
 //!             writes BENCH_path.json
 //!   worker  — standalone node process; prints its bound address and
 //!             serves socket-transport coordinators until killed
+//!             (--reconnect re-binds a dead listener instead of exiting)
+//!   chaos   — deterministic fault-injection harness: runs socket fits
+//!             through a seeded chaos proxy and checks support parity
+//!             against a clean run
 //!   serve   — multi-tenant fit/predict daemon over a worker fleet
 //!   submit / predict / jobs — client commands against `psfit serve`
 //!   info    — print artifact manifest + platform info
@@ -59,9 +63,20 @@ fn run() -> anyhow::Result<()> {
             }
             let opts = WorkerOpts {
                 listen: args.opt("listen").unwrap_or("127.0.0.1:0").to_string(),
+                reconnect: args.flag("reconnect"),
             };
             args.reject_unknown()?;
             run_worker(&opts)
+        }
+        Some("chaos") => {
+            let opts = harness::chaos::ChaosOpts {
+                quick: args.flag("quick"),
+                seed: args.get("seed", 0xC4A05)?,
+                faults: args.opt("faults").map(String::from),
+                nodes: args.get("nodes", 3)?,
+            };
+            args.reject_unknown()?;
+            harness::chaos(&opts)
         }
         Some("serve") => {
             let opts = ServeOpts {
@@ -197,12 +212,12 @@ fn run() -> anyhow::Result<()> {
         Some("info") => info(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, worker, serve, submit, predict, jobs, info)"
+                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, worker, chaos, serve, submit, predict, jobs, info)"
             )
         }
         None => {
             eprintln!(
-                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|worker|serve|submit|predict|jobs|info> [options]"
+                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|worker|chaos|serve|submit|predict|jobs|info> [options]"
             );
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
             eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
@@ -218,7 +233,10 @@ fn run() -> anyhow::Result<()> {
             eprintln!("        psfit bench --transport --quick     (merges transport rounds into it)");
             eprintln!("        psfit pathbench --quick             (writes BENCH_path.json)");
             eprintln!("        psfit worker --listen 127.0.0.1:0   (standalone node process)");
+            eprintln!("        psfit worker --listen 127.0.0.1:7701 --reconnect   (self-healing worker)");
             eprintln!("        psfit train --transport socket --workers host1:7777,host2:7777");
+            eprintln!("        psfit train --transport socket --rejoin --min-workers 2 --checkpoint fit.psf");
+            eprintln!("        psfit chaos --quick                 (seeded fault-injection harness)");
             eprintln!("        psfit serve --local-fleet 2         (fit/predict daemon)");
             eprintln!("        psfit submit --n 200 --m 1600 --wait && psfit predict --job 1 --features 3:0.5");
             Ok(())
@@ -267,6 +285,12 @@ fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<S
         args.get("connect-timeout-ms", cfg.platform.connect_timeout_ms)?;
     cfg.platform.read_timeout_ms = args.get("read-timeout-ms", cfg.platform.read_timeout_ms)?;
     cfg.platform.connect_retries = args.get("connect-retries", cfg.platform.connect_retries)?;
+    if args.flag("rejoin") {
+        cfg.platform.rejoin = true;
+    }
+    // platform.quorum is a worker head-count; --quorum (a fraction) is the
+    // async coordinator's, so the socket knob gets its own flag name
+    cfg.platform.quorum = args.get("min-workers", cfg.platform.quorum)?;
     // install the process-wide kernel ISA now — "selected once at startup"
     let active = psfit::linalg::simd::select(cfg.platform.isa)?;
     eprintln!("kernel isa:  {} (requested {})", active.name(), cfg.platform.isa.name());
@@ -338,6 +362,10 @@ fn build_dataset(
 fn train(args: &Args) -> anyhow::Result<()> {
     let (mut cfg, spec, libsvm) = shared_config(args)?;
     cfg.solver.kappa = args.get("kappa", spec.kappa())?;
+    if let Some(ck) = args.opt("checkpoint") {
+        cfg.solver.checkpoint = ck.to_string();
+    }
+    cfg.solver.checkpoint_every = args.get("checkpoint-every", cfg.solver.checkpoint_every)?;
     let trace_out = args.opt("trace").map(String::from);
     let model_out = args.opt("model-out").map(String::from);
     args.reject_unknown()?;

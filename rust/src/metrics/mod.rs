@@ -125,7 +125,7 @@ impl TransferLedger {
 }
 
 /// One outer Bi-cADMM iteration's convergence record (Eq. 14 residuals).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IterRecord {
     /// Outer iteration index (0-based).
     pub iter: usize,
@@ -204,6 +204,9 @@ pub struct CoordinationStats {
     pub deaths: u64,
     /// Nodes that joined after construction.
     pub joins: u64,
+    /// Dead peers re-admitted mid-solve after a successful reconnect +
+    /// warm-state resync (socket transport's self-healing path).
+    pub rejoins: u64,
 }
 
 impl CoordinationStats {
@@ -239,14 +242,15 @@ impl CoordinationStats {
     /// One-line human summary for the CLI and harness logs.
     pub fn summary(&self) -> String {
         format!(
-            "rounds {} | staleness hist {:?} | participation {:?} | drops {} resyncs {} deaths {} joins {}",
+            "rounds {} | staleness hist {:?} | participation {:?} | drops {} resyncs {} deaths {} joins {} rejoins {}",
             self.rounds,
             self.staleness_hist,
             self.participation,
             self.drops,
             self.resyncs,
             self.deaths,
-            self.joins
+            self.joins,
+            self.rejoins
         )
     }
 }
@@ -380,6 +384,8 @@ mod tests {
         s.record_fold(5, 1);
         assert_eq!(s.participation.len(), 6);
         assert!(s.summary().contains("drops 0"));
+        s.rejoins = 1;
+        assert!(s.summary().contains("rejoins 1"));
     }
 
     #[test]

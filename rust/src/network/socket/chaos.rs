@@ -1,0 +1,480 @@
+//! Deterministic wire-fault injection: the engine behind `psfit chaos`.
+//!
+//! [`ChaosProxy`] sits between a coordinator and one worker address and
+//! forwards the PSFW byte stream *frame by frame*, injecting faults —
+//! dropped connections, delayed / split / truncated frames, corrupted
+//! checksums — according to a seeded [`ChaosSpec`].  Every fault decision
+//! is a pure function of `(spec.seed, connection index, direction, frame
+//! index)`, so a fixed seed reproduces the identical fault schedule on
+//! every run: the `psfit chaos` harness relies on this to run the same
+//! fault scenario twice and assert both runs converge to the clean run's
+//! support.
+//!
+//! The proxy is handshake-aware: the first 8 bytes in each direction (the
+//! `PSFW` magic + version) pass through untouched, and everything after is
+//! parsed as `len | payload | checksum` frames, so faults land on frame
+//! boundaries exactly where the real failure modes live (a corrupted
+//! checksum exercises the decoder's integrity path, a truncated frame the
+//! short-read path, a dropped connection the peer-death path).
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::network::socket::wire::{fnv1a, MAX_FRAME};
+use crate::network::socket::{connect, Endpoint, SocketListener, SocketStream};
+use crate::util::rng::Rng;
+
+/// A seeded fault schedule for one [`ChaosProxy`].
+///
+/// The five probabilities are per-frame and *mutually exclusive* (a frame
+/// suffers at most one fault), so they must sum to at most `1.0`.
+/// Parsed from the compact form `psfit chaos --faults` accepts, e.g.
+/// `"drop=0.02,corrupt=0.02,delay=0.1:5,split=0.1,truncate=0.01"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    /// Probability a frame kills the connection (both directions severed
+    /// before the frame is forwarded).
+    pub drop: f64,
+    /// Probability a frame is forwarded truncated (length prefix + half
+    /// the body) and the connection then severed — a mid-write crash.
+    pub truncate: f64,
+    /// Probability a frame's checksum trailer is corrupted in flight.
+    pub corrupt: f64,
+    /// Probability a frame is written in two separately-flushed halves —
+    /// exercises short-read reassembly on the receiver.
+    pub split: f64,
+    /// Probability a frame is delayed before forwarding.
+    pub delay: f64,
+    /// Upper bound (milliseconds) on an injected delay.
+    pub delay_ms: u64,
+    /// Schedule seed: same seed, same faults, every run.
+    pub seed: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            drop: 0.0,
+            truncate: 0.0,
+            corrupt: 0.0,
+            split: 0.0,
+            delay: 0.0,
+            delay_ms: 5,
+            seed: 0xC4A05,
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// Parse the compact `key=value,...` form.  Keys: `drop`, `truncate`,
+    /// `corrupt`, `split`, `seed`, and `delay` (either `delay=p` or
+    /// `delay=p:max_ms`).  Empty input is the all-quiet spec.
+    pub fn parse(s: &str) -> anyhow::Result<ChaosSpec> {
+        let mut spec = ChaosSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("chaos spec `{part}` is not key=value"))?;
+            let prob = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("chaos spec `{key}`: `{v}` is not a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "chaos spec `{key}`: probability {p} outside [0, 1]"
+                );
+                Ok(p)
+            };
+            match key {
+                "drop" => spec.drop = prob(value)?,
+                "truncate" => spec.truncate = prob(value)?,
+                "corrupt" => spec.corrupt = prob(value)?,
+                "split" => spec.split = prob(value)?,
+                "delay" => match value.split_once(':') {
+                    Some((p, ms)) => {
+                        spec.delay = prob(p)?;
+                        spec.delay_ms = ms.parse().map_err(|_| {
+                            anyhow::anyhow!("chaos spec `delay`: `{ms}` is not a millisecond count")
+                        })?;
+                    }
+                    None => spec.delay = prob(value)?,
+                },
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("chaos spec `seed`: `{value}` is not a u64"))?
+                }
+                other => anyhow::bail!("unknown chaos spec key `{other}`"),
+            }
+        }
+        let total = spec.drop + spec.truncate + spec.corrupt + spec.split + spec.delay;
+        anyhow::ensure!(
+            total <= 1.0 + 1e-12,
+            "chaos fault probabilities sum to {total}, which exceeds 1"
+        );
+        Ok(spec)
+    }
+
+    /// The fault (if any) frame number `frame` suffers on connection
+    /// `conn` in direction `dir` (0 = client→upstream, 1 = upstream→
+    /// client).  Pure in its arguments — this *is* the fault schedule.
+    pub fn fault_for(&self, conn: u64, dir: u8, frame: u64) -> Fault {
+        let mut key = [0u8; 25];
+        key[..8].copy_from_slice(&self.seed.to_le_bytes());
+        key[8..16].copy_from_slice(&conn.to_le_bytes());
+        key[16] = dir;
+        key[17..].copy_from_slice(&frame.to_le_bytes());
+        let mut rng = Rng::seed_from(fnv1a(&key));
+        let draw = rng.uniform();
+        let mut edge = self.drop;
+        if draw < edge {
+            return Fault::Drop;
+        }
+        edge += self.truncate;
+        if draw < edge {
+            return Fault::Truncate;
+        }
+        edge += self.corrupt;
+        if draw < edge {
+            return Fault::Corrupt;
+        }
+        edge += self.split;
+        if draw < edge {
+            return Fault::Split;
+        }
+        edge += self.delay;
+        if draw < edge {
+            return Fault::Delay(1 + rng.below(self.delay_ms.max(1)));
+        }
+        Fault::Forward
+    }
+
+    /// FNV-1a digest of the fault schedule's first `frames_per_conn`
+    /// decisions on the first `conns` connections (both directions) — the
+    /// value `psfit chaos` prints so two runs can prove they faced the
+    /// same schedule.
+    pub fn schedule_fingerprint(&self, conns: u64, frames_per_conn: u64) -> u64 {
+        let mut codes = Vec::with_capacity((conns * 2 * frames_per_conn) as usize);
+        for conn in 0..conns {
+            for dir in 0..2u8 {
+                for frame in 0..frames_per_conn {
+                    codes.push(match self.fault_for(conn, dir, frame) {
+                        Fault::Forward => 0u8,
+                        Fault::Drop => 1,
+                        Fault::Truncate => 2,
+                        Fault::Corrupt => 3,
+                        Fault::Split => 4,
+                        Fault::Delay(_) => 5,
+                    });
+                }
+            }
+        }
+        fnv1a(&codes)
+    }
+}
+
+impl std::fmt::Display for ChaosSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "drop={},truncate={},corrupt={},split={},delay={}:{},seed={}",
+            self.drop, self.truncate, self.corrupt, self.split, self.delay, self.delay_ms, self.seed
+        )
+    }
+}
+
+/// One frame's fate under a [`ChaosSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward untouched.
+    Forward,
+    /// Sever the connection without forwarding.
+    Drop,
+    /// Forward the length prefix and half the body, then sever.
+    Truncate,
+    /// Flip a byte of the checksum trailer and forward.
+    Corrupt,
+    /// Forward in two separately-flushed writes.
+    Split,
+    /// Sleep this many milliseconds, then forward.
+    Delay(u64),
+}
+
+/// A fault-injecting TCP/Unix proxy in front of one worker address.
+///
+/// Spawning binds an ephemeral localhost port; point the coordinator's
+/// roster entry at [`ChaosProxy::addr`] instead of the worker.  The
+/// accept loop lives for the rest of the process (like
+/// [`crate::network::socket::spawn_local_worker`]), and every accepted
+/// connection — including rejoin redials after an injected drop — gets
+/// the next connection index in the schedule.
+pub struct ChaosProxy {
+    addr: String,
+    injected: Arc<AtomicU64>,
+}
+
+impl ChaosProxy {
+    /// Stand up a proxy forwarding to `upstream` under `spec`.
+    pub fn spawn(upstream: &str, spec: &ChaosSpec) -> anyhow::Result<ChaosProxy> {
+        let listener = SocketListener::bind(&Endpoint::parse("127.0.0.1:0"))?;
+        let addr = listener.local_endpoint();
+        let injected = Arc::new(AtomicU64::new(0));
+        let counter = Arc::clone(&injected);
+        let spec = spec.clone();
+        let upstream = upstream.to_string();
+        std::thread::Builder::new()
+            .name("psfit-chaos".into())
+            .spawn(move || {
+                let mut conn = 0u64;
+                while let Ok(client) = listener.accept() {
+                    let up = match connect(
+                        &Endpoint::parse(&upstream),
+                        Duration::from_millis(2000),
+                        2,
+                    ) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("[chaos] upstream {upstream} unreachable: {e}");
+                            client.shutdown();
+                            continue;
+                        }
+                    };
+                    if let Err(e) = splice(client, up, &spec, conn, &counter) {
+                        eprintln!("[chaos] connection {conn}: {e}");
+                    }
+                    conn += 1;
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("cannot spawn chaos proxy thread: {e}"))?;
+        Ok(ChaosProxy { addr, injected })
+    }
+
+    /// The proxy's listen address — use this as the worker address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Faults actually injected so far (frames seen × schedule hits).
+    pub fn injected_faults(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+/// Wire `client ⇄ upstream` through two pump threads, one per direction.
+fn splice(
+    client: SocketStream,
+    upstream: SocketStream,
+    spec: &ChaosSpec,
+    conn: u64,
+    injected: &Arc<AtomicU64>,
+) -> anyhow::Result<()> {
+    let c2 = client.try_clone()?;
+    let u2 = upstream.try_clone()?;
+    for (from, to, dir) in [(client, upstream, 0u8), (u2, c2, 1u8)] {
+        let spec = spec.clone();
+        let injected = Arc::clone(injected);
+        std::thread::Builder::new()
+            .name(format!("psfit-chaos-{conn}-{dir}"))
+            .spawn(move || pump(from, to, &spec, conn, dir, &injected))
+            .map_err(|e| anyhow::anyhow!("cannot spawn pump thread: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Forward one direction frame-by-frame, applying the schedule.  Any read
+/// or write failure — including an injected sever from the other
+/// direction's pump — ends the pump and severs both underlying sockets.
+fn pump(
+    mut from: SocketStream,
+    mut to: SocketStream,
+    spec: &ChaosSpec,
+    conn: u64,
+    dir: u8,
+    injected: &Arc<AtomicU64>,
+) {
+    // The 8-byte handshake passes through verbatim: faulting it would test
+    // version negotiation, not the frame protocol.
+    let mut hs = [0u8; 8];
+    if from.read_exact(&mut hs).is_err() || to.write_all(&hs).is_err() || to.flush().is_err() {
+        sever(&from, &to);
+        return;
+    }
+    let mut frame = 0u64;
+    loop {
+        let mut lenb = [0u8; 4];
+        if from.read_exact(&mut lenb).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(lenb) as usize;
+        if len == 0 || len > MAX_FRAME {
+            break; // malformed upstream bytes: sever rather than forward junk
+        }
+        let mut body = vec![0u8; len + 8]; // payload + checksum trailer
+        if from.read_exact(&mut body).is_err() {
+            break;
+        }
+        let fault = spec.fault_for(conn, dir, frame);
+        frame += 1;
+        if fault != Fault::Forward {
+            injected.fetch_add(1, Ordering::Relaxed);
+        }
+        let forwarded = match fault {
+            Fault::Forward => forward(&mut to, &lenb, &body),
+            Fault::Drop => break,
+            Fault::Truncate => {
+                let _ = to.write_all(&lenb);
+                let _ = to.write_all(&body[..len / 2]);
+                let _ = to.flush();
+                break;
+            }
+            Fault::Corrupt => {
+                let last = body.len() - 1;
+                body[last] ^= 0xFF;
+                forward(&mut to, &lenb, &body)
+            }
+            Fault::Split => {
+                let mid = body.len() / 2;
+                to.write_all(&lenb)
+                    .and_then(|()| to.write_all(&body[..mid]))
+                    .and_then(|()| to.flush())
+                    .and_then(|()| {
+                        std::thread::sleep(Duration::from_millis(1));
+                        to.write_all(&body[mid..])
+                    })
+                    .and_then(|()| to.flush())
+            }
+            Fault::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                forward(&mut to, &lenb, &body)
+            }
+        };
+        if forwarded.is_err() {
+            break;
+        }
+    }
+    sever(&from, &to);
+}
+
+/// Write one intact frame.
+fn forward(to: &mut SocketStream, lenb: &[u8; 4], body: &[u8]) -> std::io::Result<()> {
+    to.write_all(lenb)?;
+    to.write_all(body)?;
+    to.flush()
+}
+
+/// Shut both sockets down so the opposite pump and both endpoints see the
+/// connection die — an injected drop must look like a real crash.
+fn sever(a: &SocketStream, b: &SocketStream) {
+    a.shutdown();
+    b.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::socket::wire::{self, WireCommand};
+    use crate::network::socket::{spawn_local_worker, Endpoint};
+
+    #[test]
+    fn spec_parses_the_compact_form_and_rejects_nonsense() {
+        let s = ChaosSpec::parse("drop=0.05, delay=0.1:20, corrupt=0.02,seed=9").unwrap();
+        assert_eq!(s.drop, 0.05);
+        assert_eq!(s.delay, 0.1);
+        assert_eq!(s.delay_ms, 20);
+        assert_eq!(s.corrupt, 0.02);
+        assert_eq!(s.seed, 9);
+        assert_eq!(ChaosSpec::parse("").unwrap(), ChaosSpec::default());
+        // display round-trips through parse
+        assert_eq!(ChaosSpec::parse(&s.to_string()).unwrap(), s);
+        for bad in [
+            "drop",
+            "drop=1.5",
+            "warp=0.1",
+            "delay=0.1:fast",
+            "drop=0.6,corrupt=0.6",
+        ] {
+            assert!(ChaosSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn fault_schedule_is_a_pure_function_of_the_seed() {
+        let spec = ChaosSpec::parse("drop=0.1,corrupt=0.2,split=0.2,delay=0.2:8,seed=7").unwrap();
+        for conn in 0..4 {
+            for dir in 0..2 {
+                for frame in 0..64 {
+                    assert_eq!(
+                        spec.fault_for(conn, dir, frame),
+                        spec.clone().fault_for(conn, dir, frame)
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            spec.schedule_fingerprint(8, 64),
+            spec.schedule_fingerprint(8, 64)
+        );
+        let reseeded = ChaosSpec { seed: 8, ..spec.clone() };
+        assert_ne!(
+            spec.schedule_fingerprint(8, 64),
+            reseeded.schedule_fingerprint(8, 64),
+            "different seeds must give different schedules"
+        );
+        // the all-quiet spec never faults
+        let quiet = ChaosSpec::default();
+        for frame in 0..64 {
+            assert_eq!(quiet.fault_for(0, 0, frame), Fault::Forward);
+        }
+        // a certain fault always fires
+        let all = ChaosSpec { corrupt: 1.0, ..ChaosSpec::default() };
+        assert_eq!(all.fault_for(3, 1, 17), Fault::Corrupt);
+    }
+
+    #[test]
+    fn a_quiet_proxy_is_transparent() {
+        let worker = spawn_local_worker().unwrap();
+        let proxy = ChaosProxy::spawn(&worker, &ChaosSpec::default()).unwrap();
+        let mut s = connect(
+            &Endpoint::parse(proxy.addr()),
+            Duration::from_secs(2),
+            3,
+        )
+        .unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        wire::client_handshake(&mut s).unwrap();
+        // Loss before Setup draws a clean protocol error through the proxy
+        wire::write_frame(&mut s, &WireCommand::Loss).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Some((WireCommand::Error { message }, _)) => {
+                assert!(message.contains("before setup"), "{message}")
+            }
+            other => panic!("expected error frame through the proxy, got {other:?}"),
+        }
+        assert_eq!(proxy.injected_faults(), 0);
+    }
+
+    #[test]
+    fn a_corrupting_proxy_breaks_the_stream_cleanly() {
+        let worker = spawn_local_worker().unwrap();
+        let spec = ChaosSpec { corrupt: 1.0, ..ChaosSpec::default() };
+        let proxy = ChaosProxy::spawn(&worker, &spec).unwrap();
+        let mut s = connect(
+            &Endpoint::parse(proxy.addr()),
+            Duration::from_secs(2),
+            3,
+        )
+        .unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        wire::client_handshake(&mut s).unwrap();
+        wire::write_frame(&mut s, &WireCommand::Loss).unwrap();
+        // the worker sees a corrupted checksum and kills the session; we
+        // observe either a clean close or an error, never a hang or panic
+        match wire::read_frame(&mut s) {
+            Ok(None) | Err(_) => {}
+            Ok(Some((cmd, _))) => panic!("corrupted frame still produced a reply: {cmd:?}"),
+        }
+        assert!(proxy.injected_faults() >= 1);
+    }
+}

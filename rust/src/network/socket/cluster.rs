@@ -6,8 +6,17 @@
 //! except the bytes are real.  Peer loss degrades the roster instead of
 //! aborting: a worker that errors, times out, or closes its connection is
 //! declared dead, the round commits with the survivors (the solver weights
-//! its averages by actual replies), and only losing *every* worker is an
-//! error.
+//! its averages by actual replies), and only dropping below the
+//! configured quorum (by default, losing *every* worker) is an error.
+//!
+//! With `platform.rejoin` on, degradation becomes self-healing: dead
+//! slots keep their address and setup envelope, get probed between
+//! rounds on a capped-exponential, seeded-jitter backoff
+//! ([`crate::util::backoff`]), and on answer are re-admitted with a
+//! fresh `Setup` plus — when a prior export cached one — a warm-state
+//! `Reseed`.  Rejoins and warm resyncs tick
+//! [`CoordinationStats::rejoins`]/`resyncs`, and all recovery traffic is
+//! ledgered as resync bytes.
 //!
 //! Byte accounting: `Round` request/reply frames land in
 //! `net_down_bytes` / `net_up_bytes` — the same entries the in-process
@@ -16,15 +25,16 @@
 //! put on a socket increments `wire_frames`.  Unlike the modeled ledgers,
 //! these counts include the protocol's own framing overhead.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::backend::BlockParams;
 use crate::config::{BackendKind, Config, TransportKind};
 use crate::data::Dataset;
 use crate::metrics::{CoordinationStats, TransferLedger};
 use crate::network::socket::wire::{self, Setup, WireCommand, WireShard};
-use crate::network::socket::{connect, Endpoint, SocketStream};
+use crate::network::socket::{connect, connect_backoff_seed, Endpoint, SocketStream};
 use crate::network::{Cluster, NodeReply, WarmState};
+use crate::util::backoff::Backoff;
 
 /// Connection settings for a [`SocketCluster`], normally derived from
 /// `platform.*` via [`SocketOptions::from_config`].
@@ -38,6 +48,13 @@ pub struct SocketOptions {
     pub read_timeout: Option<Duration>,
     /// Connect retries after the first attempt.
     pub connect_retries: u32,
+    /// Keep dead peers' addresses and probe them between rounds
+    /// (self-healing); off by default so degradation semantics and byte
+    /// ledgers stay exactly as configured runs expect.
+    pub rejoin: bool,
+    /// Minimum replies a round may commit with before the run fails
+    /// (`0` = any survivor, the pre-quorum behavior).
+    pub quorum: usize,
 }
 
 impl SocketOptions {
@@ -51,6 +68,8 @@ impl SocketOptions {
                 ms => Some(Duration::from_millis(ms)),
             },
             connect_retries: cfg.platform.connect_retries,
+            rejoin: cfg.platform.rejoin,
+            quorum: cfg.platform.quorum as usize,
         }
     }
 }
@@ -59,6 +78,39 @@ impl SocketOptions {
 struct Peer {
     stream: SocketStream,
     addr: String,
+}
+
+/// Reconnect state for one roster slot: where its worker lives and when
+/// the next probe is due.
+struct HealSlot {
+    /// The slot's worker address (kept even while the peer is dead).
+    addr: String,
+    /// Capped-exponential probe schedule, seeded per address.
+    backoff: Backoff,
+    /// Probes before this instant are skipped — dead slots cost a round
+    /// nothing until their backoff expires.
+    next_probe: Instant,
+}
+
+/// The self-healing layer: everything a [`SocketCluster`] needs to
+/// re-admit a dead peer mid-solve.  Built only when `platform.rejoin` is
+/// on (the retained [`Setup`] envelopes hold a copy of every shard).
+struct Heal {
+    /// Per-roster-slot reconnect state.
+    slots: Vec<HealSlot>,
+    /// The exact setup envelope each slot received at connect time — a
+    /// rejoining worker rebuilds its node from this, bit-identically.
+    setups: Vec<Setup>,
+    /// Last exported warm state per node (refreshed by every
+    /// `export_warm`/`reseed`, e.g. each fit-checkpoint write); a rejoin
+    /// with a cached state resyncs warm, otherwise the node cold-starts.
+    warm: Vec<Option<WarmState>>,
+    /// Block penalties shipped with a rejoin's warm `Reseed`.
+    params: BlockParams,
+    /// Per-probe connect timeout (one attempt per due slot per round).
+    timeout: Duration,
+    /// Read timeout applied to a re-admitted connection.
+    read_timeout: Option<Duration>,
 }
 
 /// Coordinator-side cluster over `psfit worker` processes.
@@ -82,6 +134,13 @@ pub struct SocketCluster {
     stats: CoordinationStats,
     /// Reusable encode buffer for the per-round broadcast.
     scratch: Vec<u8>,
+    /// Minimum replies a round may commit with (`0` behaves as `1`).
+    quorum: usize,
+    /// The most recent peer-loss reason, surfaced in quorum-failure
+    /// errors so a failed serve job reports *why* its fleet shrank.
+    last_error: String,
+    /// Self-healing state; `None` when `platform.rejoin` is off.
+    heal: Option<Heal>,
 }
 
 impl SocketCluster {
@@ -118,8 +177,14 @@ impl SocketCluster {
         wcfg.platform.workers.clear();
         let config_text = wcfg.to_json().to_string();
 
+        anyhow::ensure!(
+            opts.quorum <= roster,
+            "quorum {} exceeds the {roster}-node roster",
+            opts.quorum
+        );
         let mut net = TransferLedger::default();
         let mut peers = Vec::with_capacity(roster);
+        let mut setups = Vec::new();
         for (i, shard) in ds.shards.iter().take(roster).enumerate() {
             let addr = opts.workers[i].clone();
             let ep = Endpoint::parse(&addr);
@@ -140,6 +205,10 @@ impl SocketCluster {
                 config: config_text.clone(),
                 shard: WireShard::from_shard(&shard),
             };
+            if opts.rejoin {
+                // the rejoin path re-ships exactly this envelope later
+                setups.push(setup.clone());
+            }
             let sent = wire::write_frame(&mut stream, &WireCommand::Setup(Box::new(setup)))?;
             net.net_resync_bytes += sent as u64;
             net.wire_frames += 1;
@@ -158,6 +227,31 @@ impl SocketCluster {
             }
             peers.push(Some(Peer { stream, addr }));
         }
+        let heal = opts.rejoin.then(|| Heal {
+            slots: opts
+                .workers
+                .iter()
+                .take(roster)
+                .map(|addr| HealSlot {
+                    addr: addr.clone(),
+                    backoff: Backoff::new(
+                        Duration::from_millis(50),
+                        Duration::from_millis(2000),
+                        connect_backoff_seed(&Endpoint::parse(addr)),
+                    ),
+                    next_probe: Instant::now(),
+                })
+                .collect(),
+            setups,
+            warm: vec![None; roster],
+            params: BlockParams {
+                rho_l: cfg.solver.rho_l,
+                rho_c: cfg.solver.rho_c,
+                reg: cfg.solver.block_reg(roster),
+            },
+            timeout: opts.connect_timeout,
+            read_timeout: opts.read_timeout,
+        });
         Ok(SocketCluster {
             peers,
             roster,
@@ -165,6 +259,9 @@ impl SocketCluster {
             net,
             stats: CoordinationStats::new(roster),
             scratch: Vec::new(),
+            quorum: opts.quorum,
+            last_error: String::new(),
+            heal,
         })
     }
 
@@ -174,12 +271,134 @@ impl SocketCluster {
     }
 
     /// Declare a peer dead: drop its connection, log, count the death.
+    /// With self-healing on, the slot's rejoin probes start immediately
+    /// (the first probe fires before the next round).
     fn kill(&mut self, node: usize, why: &str) {
         if let Some(peer) = self.peers[node].take() {
             eprintln!("[socket] node {node} ({}) lost: {why}; degrading", peer.addr);
             self.stats.deaths += 1;
+            self.last_error = format!("node {node}: {why}");
+            if let Some(heal) = self.heal.as_mut() {
+                heal.slots[node].backoff.reset();
+                heal.slots[node].next_probe = Instant::now();
+            }
         }
     }
+
+    /// The most recent peer-loss reason, for error reporting.
+    fn last_error_or_none(&self) -> &str {
+        if self.last_error.is_empty() {
+            "none"
+        } else {
+            &self.last_error
+        }
+    }
+
+    /// Probe every dead slot whose backoff has expired and re-admit the
+    /// ones that answer: fresh `Setup` (bit-identical to the original),
+    /// then a warm `Reseed` when a cached export exists.  All traffic is
+    /// ledgered as resync bytes; each success ticks `rejoins` (and
+    /// `resyncs` when warm state was restored).  Called between rounds,
+    /// so a healing fleet never blocks a committed round.
+    fn try_rejoin(&mut self) {
+        let Some(heal) = self.heal.as_mut() else {
+            return;
+        };
+        for i in 0..self.peers.len() {
+            if self.peers[i].is_some() {
+                continue;
+            }
+            let slot = &mut heal.slots[i];
+            if Instant::now() < slot.next_probe {
+                continue;
+            }
+            let warm = heal.warm[i].as_ref();
+            match redial(
+                slot,
+                &heal.setups[i],
+                warm,
+                heal.params,
+                heal.timeout,
+                heal.read_timeout,
+                &mut self.net,
+            ) {
+                Ok(peer) => {
+                    eprintln!(
+                        "[socket] node {i} ({}) rejoined after {} probe(s) ({})",
+                        slot.addr,
+                        slot.backoff.attempts() + 1,
+                        if warm.is_some() {
+                            "warm resync"
+                        } else {
+                            "cold restart"
+                        }
+                    );
+                    slot.backoff.reset();
+                    self.peers[i] = Some(peer);
+                    self.stats.rejoins += 1;
+                    if warm.is_some() {
+                        self.stats.resyncs += 1;
+                    }
+                }
+                Err(_) => {
+                    // probes fail routinely while the worker is down;
+                    // stay quiet and wait out the (growing) backoff
+                    slot.next_probe = Instant::now() + slot.backoff.next_delay();
+                }
+            }
+        }
+    }
+}
+
+/// One rejoin attempt against a dead slot's address: dial, handshake,
+/// re-ship the original `Setup`, and — when a cached warm state exists —
+/// restore it with a `Reseed`.  Every byte lands in `net_resync_bytes`.
+fn redial(
+    slot: &HealSlot,
+    setup: &Setup,
+    warm: Option<&WarmState>,
+    params: BlockParams,
+    timeout: Duration,
+    read_timeout: Option<Duration>,
+    net: &mut TransferLedger,
+) -> anyhow::Result<Peer> {
+    let node = setup.node as usize;
+    // single attempt per probe: the between-probe pacing is the slot's
+    // backoff, not connect()'s retry loop
+    let mut stream = connect(&Endpoint::parse(&slot.addr), timeout, 0)?;
+    stream.set_read_timeout(read_timeout)?;
+    net.net_resync_bytes += wire::client_handshake(&mut stream)? as u64;
+    let sent = wire::write_frame(&mut stream, &WireCommand::Setup(Box::new(setup.clone())))?;
+    net.net_resync_bytes += sent as u64;
+    net.wire_frames += 1;
+    match wire::read_frame(&mut stream)? {
+        Some((WireCommand::SetupOk { node: got }, bytes)) if got as usize == node => {
+            net.net_resync_bytes += bytes as u64;
+            net.wire_frames += 1;
+        }
+        Some((WireCommand::Error { message }, _)) => {
+            anyhow::bail!("rejoin setup rejected: {message}")
+        }
+        Some((other, _)) => anyhow::bail!("unexpected `{}` to rejoin setup", other.name()),
+        None => anyhow::bail!("connection closed during rejoin setup"),
+    }
+    let mut peer = Peer {
+        stream,
+        addr: slot.addr.clone(),
+    };
+    if let Some(state) = warm {
+        let cmd = WireCommand::Reseed {
+            rho_l: params.rho_l,
+            rho_c: params.rho_c,
+            reg: params.reg,
+            states: vec![state.clone()],
+        };
+        match query(&mut peer, &cmd, net)? {
+            WireCommand::ReseedOk { node: got } if got as usize == node => {}
+            other => anyhow::bail!("unexpected `{}` to rejoin reseed", other.name()),
+        }
+    }
+    Ok(peer)
 }
 
 /// One request/reply control exchange with a peer, bytes ledgered as
@@ -210,6 +429,9 @@ impl Cluster for SocketCluster {
     }
 
     fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+        // heal before broadcasting, so a recovered worker participates in
+        // this very round
+        self.try_rejoin();
         self.round += 1;
         let round = self.round;
         // encode once, write the same bytes to every live peer
@@ -269,7 +491,24 @@ impl Cluster for SocketCluster {
             }
         }
         self.stats.rounds += 1;
-        anyhow::ensure!(!replies.is_empty(), "round {round}: every socket worker is gone");
+        if replies.is_empty() {
+            anyhow::bail!(
+                "round {round}: every socket worker is gone ({} death(s), last error: {})",
+                self.stats.deaths,
+                self.last_error_or_none()
+            );
+        }
+        let need = self.quorum.max(1);
+        if replies.len() < need {
+            anyhow::bail!(
+                "round {round}: quorum lost — {} of {} worker(s) replied, need {need} \
+                 ({} death(s), last error: {})",
+                replies.len(),
+                self.roster,
+                self.stats.deaths,
+                self.last_error_or_none()
+            );
+        }
         Ok(replies)
     }
 
@@ -340,6 +579,16 @@ impl Cluster for SocketCluster {
         }
         anyhow::ensure!(!states.is_empty(), "warm export: every socket worker is gone");
         states.sort_by_key(|s| s.node);
+        if let Some(heal) = self.heal.as_mut() {
+            // every export refreshes the rejoin cache — with periodic fit
+            // checkpoints this keeps warm resyncs at most one checkpoint
+            // interval stale
+            for s in &states {
+                if s.node < heal.warm.len() {
+                    heal.warm[s.node] = Some(s.clone());
+                }
+            }
+        }
         Ok(states)
     }
 
@@ -372,6 +621,15 @@ impl Cluster for SocketCluster {
             }
         }
         anyhow::ensure!(got > 0, "reseed: every socket worker is gone");
+        if let Some(heal) = self.heal.as_mut() {
+            // a reseed defines each node's state at least as authoritatively
+            // as an export: cache it for future rejoins
+            for s in states {
+                if s.node < heal.warm.len() {
+                    heal.warm[s.node] = Some(s.clone());
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -413,9 +671,25 @@ mod tests {
         cfg.platform.connect_timeout_ms = 250;
         cfg.platform.read_timeout_ms = 0;
         cfg.platform.connect_retries = 7;
+        cfg.platform.rejoin = true;
+        cfg.platform.quorum = 2;
         let opts = SocketOptions::from_config(&cfg);
         assert_eq!(opts.connect_timeout, Duration::from_millis(250));
         assert_eq!(opts.read_timeout, None);
         assert_eq!(opts.connect_retries, 7);
+        assert!(opts.rejoin);
+        assert_eq!(opts.quorum, 2);
+    }
+
+    #[test]
+    fn connect_rejects_an_unmeetable_quorum() {
+        let ds = SyntheticSpec::regression(40, 120, 2).generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.platform.transport = TransportKind::Socket;
+        cfg.platform.workers = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        cfg.platform.quorum = 3; // > roster: impossible before dialing
+        let err = SocketCluster::connect(&ds, &cfg).unwrap_err().to_string();
+        assert!(err.contains("quorum"), "{err}");
     }
 }

@@ -20,10 +20,13 @@
 //! supports and objectives bit-for-bit on the same seed (asserted in
 //! `tests/socket.rs` and by the CI multi-process smoke job).
 
+/// Deterministic fault-injection proxy (`psfit chaos`).
+pub mod chaos;
 pub mod cluster;
 pub mod wire;
 pub mod worker;
 
+pub use chaos::{ChaosProxy, ChaosSpec};
 pub use cluster::{SocketCluster, SocketOptions};
 pub use wire::{JobSpec, JobStatus, JobSummary, WireCommand};
 pub use worker::{run_worker, spawn_local_worker, WorkerOpts};
@@ -32,6 +35,8 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::time::Duration;
+
+use crate::util::backoff::Backoff;
 
 /// A parsed socket address: TCP `host:port` or `unix:/path`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -81,6 +86,30 @@ impl SocketStream {
             SocketStream::Tcp(s) => s.set_read_timeout(timeout),
             #[cfg(unix)]
             SocketStream::Unix(s) => s.set_read_timeout(timeout),
+        }
+    }
+
+    /// A second handle onto the same underlying socket — the chaos proxy
+    /// uses one handle per pump direction.
+    pub fn try_clone(&self) -> std::io::Result<SocketStream> {
+        match self {
+            SocketStream::Tcp(s) => s.try_clone().map(SocketStream::Tcp),
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.try_clone().map(SocketStream::Unix),
+        }
+    }
+
+    /// Best-effort shutdown of both directions, so every clone of this
+    /// socket — and the peer — sees the connection die immediately.
+    pub fn shutdown(&self) {
+        match self {
+            SocketStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            SocketStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
         }
     }
 }
@@ -192,14 +221,22 @@ impl Drop for SocketListener {
 }
 
 /// Connect to `ep` with a per-attempt timeout and bounded retry
-/// (`retries` additional attempts after the first, with linear backoff) —
-/// workers that are still binding their listener when the coordinator
-/// starts are absorbed here instead of failing the run.
+/// (`retries` additional attempts after the first, sleeping through the
+/// shared [`crate::util::backoff`] policy: capped exponential growth with
+/// seeded jitter) — workers that are still binding their listener when
+/// the coordinator starts are absorbed here instead of failing the run.
 pub fn connect(ep: &Endpoint, timeout: Duration, retries: u32) -> anyhow::Result<SocketStream> {
+    // seed from the address so two coordinators hammering the same dead
+    // worker still fan their retries apart deterministically
+    let mut backoff = Backoff::new(
+        Duration::from_millis(50),
+        Duration::from_millis(2000),
+        connect_backoff_seed(ep),
+    );
     let mut last_err = String::new();
     for attempt in 0..=retries {
         if attempt > 0 {
-            std::thread::sleep(Duration::from_millis(50 * attempt as u64));
+            crate::util::backoff::sleep_next(&mut backoff);
         }
         match connect_once(ep, timeout) {
             Ok(s) => return Ok(s),
@@ -210,6 +247,16 @@ pub fn connect(ep: &Endpoint, timeout: Duration, retries: u32) -> anyhow::Result
         "cannot connect to {ep} after {} attempt(s): {last_err}",
         retries + 1
     )
+}
+
+/// Deterministic per-address backoff seed (FNV-1a over the display form).
+pub(crate) fn connect_backoff_seed(ep: &Endpoint) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in ep.to_string().bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 fn connect_once(ep: &Endpoint, timeout: Duration) -> anyhow::Result<SocketStream> {

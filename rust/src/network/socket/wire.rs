@@ -930,8 +930,12 @@ impl<'a> Cur<'a> {
 /// bytes put on the wire (payload + [`FRAME_OVERHEAD`]).
 pub fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> anyhow::Result<usize> {
     anyhow::ensure!(
-        !payload.is_empty() && payload.len() <= MAX_FRAME,
-        "frame payload length {} out of range",
+        !payload.is_empty(),
+        "EmptyFrame: refusing to write a zero-length frame"
+    );
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME,
+        "FrameTooLarge: payload length {} exceeds the {MAX_FRAME}-byte frame limit",
         payload.len()
     );
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
@@ -959,9 +963,17 @@ pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<(WireCommand, usi
         return Ok(None);
     }
     let len = u32::from_le_bytes(head) as usize;
+    // validate the header BEFORE any allocation: a corrupted or hostile
+    // length prefix must surface as a named error, never as an attempted
+    // multi-GB allocation or a zero-length decode
     anyhow::ensure!(
-        len >= 1 && len <= MAX_FRAME,
-        "invalid frame length {len} (corrupted stream or protocol mismatch)"
+        len >= 1,
+        "EmptyFrame: zero-length frame header (corrupted stream or protocol mismatch)"
+    );
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "FrameTooLarge: frame length {len} exceeds the {MAX_FRAME}-byte limit \
+         (corrupted stream or protocol mismatch)"
     );
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)
@@ -1120,7 +1132,83 @@ mod tests {
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         buf.extend_from_slice(&[0u8; 16]);
         let err = read_frame(&mut &buf[..]).unwrap_err().to_string();
-        assert!(err.contains("invalid frame length"), "{err}");
+        assert!(err.contains("FrameTooLarge"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_header_is_a_named_error_not_a_panic() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 8]);
+        let err = read_frame(&mut &buf[..]).unwrap_err().to_string();
+        assert!(err.contains("EmptyFrame"), "{err}");
+        // the writer refuses to produce such a frame in the first place
+        let err = write_payload(&mut Vec::new(), &[]).unwrap_err().to_string();
+        assert!(err.contains("EmptyFrame"), "{err}");
+    }
+
+    /// Property: mutating any byte(s) of a valid frame never panics the
+    /// decoder — every outcome is `Ok` (mutation landed somewhere
+    /// semantically inert) or a clean error.
+    #[test]
+    fn prop_mutated_frames_never_panic_the_decoder() {
+        use crate::util::testkit::{run_prop, PropConfig};
+        let templates: Vec<Vec<u8>> = {
+            let cmds = vec![
+                WireCommand::Loss,
+                WireCommand::SetupOk { node: 3 },
+                WireCommand::Round {
+                    round: 9,
+                    z: vec![1.0, -2.5, 3.25],
+                },
+                WireCommand::RoundReply {
+                    node: 1,
+                    round: 9,
+                    x: vec![0.5; 6],
+                    u: vec![-0.5; 6],
+                },
+                WireCommand::Reseed {
+                    rho_l: 2.0,
+                    rho_c: 1.0,
+                    reg: 0.5,
+                    states: vec![WarmState {
+                        node: 0,
+                        x: vec![1.0, 2.0],
+                        u: vec![0.0, 0.1],
+                        omega: vec![0.5; 4],
+                        nu: vec![0.25; 4],
+                        preds: vec![vec![1.0; 4], vec![2.0; 4]],
+                    }],
+                },
+                WireCommand::Submit {
+                    name: "job".into(),
+                    spec: JobSpec::default(),
+                },
+                WireCommand::Error {
+                    message: "boom".into(),
+                },
+            ];
+            cmds.iter()
+                .map(|c| {
+                    let mut buf = Vec::new();
+                    write_frame(&mut buf, c).unwrap();
+                    buf
+                })
+                .collect()
+        };
+        run_prop("mutated_frames_never_panic", PropConfig::default(), |rng, _size| {
+            let mut frame = templates[rng.below(templates.len())].clone();
+            // 1..=4 arbitrary byte mutations anywhere in the frame,
+            // including the length prefix and the checksum trailer
+            let flips = 1 + rng.below(4);
+            for _ in 0..flips {
+                let at = rng.below(frame.len());
+                frame[at] ^= (1 + rng.below(255)) as u8;
+            }
+            // decoding must complete without panicking; errors are fine
+            let _ = read_frame(&mut &frame[..]);
+            Ok(())
+        });
     }
 
     #[test]

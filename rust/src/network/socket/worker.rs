@@ -32,24 +32,65 @@ pub struct WorkerOpts {
     /// Address to listen on (`host:port`, port `0` for ephemeral, or
     /// `unix:/path`).
     pub listen: String,
+    /// Survive listener-level failures: instead of exiting when the
+    /// listener dies (address yanked, fd exhaustion, transient OS error),
+    /// re-bind the same address under a capped backoff and keep serving.
+    /// Session-level drops — a coordinator crashing mid-fit — are always
+    /// survived regardless of this flag, because each connection is its
+    /// own session and the accept loop never stops.
+    pub reconnect: bool,
 }
 
 impl Default for WorkerOpts {
     fn default() -> Self {
         WorkerOpts {
             listen: "127.0.0.1:0".to_string(),
+            reconnect: false,
         }
     }
 }
 
 /// Run a worker until the process is killed: bind, announce the bound
 /// address on stdout (`psfit worker listening on <addr>` — scripts and the
-/// CI smoke job parse this line), and serve sessions forever.
+/// CI smoke job parse this line), and serve sessions forever.  With
+/// `opts.reconnect`, a dead listener is re-bound (capped backoff, seeded
+/// jitter) instead of taking the process down — pair it with a fixed
+/// port, since an ephemeral re-bind would land elsewhere.
 pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
-    let listener = SocketListener::bind(&Endpoint::parse(&opts.listen))?;
+    let ep = Endpoint::parse(&opts.listen);
+    let listener = SocketListener::bind(&ep)?;
     println!("psfit worker listening on {}", listener.local_endpoint());
     let _ = std::io::stdout().flush();
-    serve_connections(listener, None)
+    if !opts.reconnect {
+        return serve_connections(listener, None);
+    }
+    let mut listener = Some(listener);
+    let mut backoff = crate::util::backoff::Backoff::new(
+        std::time::Duration::from_millis(50),
+        std::time::Duration::from_secs(2),
+        crate::network::socket::connect_backoff_seed(&ep),
+    );
+    loop {
+        match listener.take() {
+            Some(l) => {
+                backoff.reset();
+                if let Err(err) = serve_connections(l, None) {
+                    eprintln!("[worker] listener died ({err}); re-binding {}", opts.listen);
+                }
+            }
+            None => match SocketListener::bind(&Endpoint::parse(&opts.listen)) {
+                Ok(l) => {
+                    println!("psfit worker listening on {}", l.local_endpoint());
+                    let _ = std::io::stdout().flush();
+                    listener = Some(l);
+                }
+                Err(e) => {
+                    eprintln!("[worker] re-bind failed ({e}); retrying");
+                    backoff.sleep_next();
+                }
+            },
+        }
+    }
 }
 
 /// Spawn an in-process worker on an ephemeral localhost port and return

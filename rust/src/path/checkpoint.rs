@@ -31,6 +31,19 @@
 //! file can never silently seed a different sweep.  Writes go through a
 //! temp file + rename, so a kill mid-write leaves the previous checkpoint
 //! intact.
+//!
+//! This module also defines **PSF1**, the sibling format for mid-fit
+//! snapshots of a *single* solve (`psfit train --checkpoint`, serve
+//! jobs).  It reuses the same `SolverState` block, preceded by the
+//! completed iteration count and the convergence trace so far:
+//!
+//! ```text
+//! magic "PSF1" | u32 version | u64 problem_hash | u64 iters_done
+//! | u32 records | per record:
+//!     u32 iter | f64 primal | f64 dual | f64 bilinear | f64 wall
+//!     | u32 participants | u32 max_lag
+//! | SolverState (same layout as PSC1's state block)
+//! ```
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -39,10 +52,14 @@ use super::{PathPoint, PathPointRecord};
 use crate::admm::{GlobalState, SolverState};
 use crate::config::Config;
 use crate::data::Dataset;
+use crate::metrics::IterRecord;
 use crate::network::WarmState;
 
 const MAGIC: &[u8; 4] = b"PSC1";
 const VERSION: u32 = 1;
+
+const FIT_MAGIC: &[u8; 4] = b"PSF1";
+const FIT_VERSION: u32 = 1;
 
 /// Everything a resumed sweep needs: the records of completed points and
 /// the warm state to seed the next one.
@@ -249,6 +266,74 @@ fn r_f32s<R: Read>(r: &mut R, file_len: u64) -> anyhow::Result<Vec<f32>> {
         .collect())
 }
 
+// -------------------------------------------------- solver-state block
+
+fn w_state<W: Write>(w: &mut W, st: &SolverState) -> std::io::Result<()> {
+    w_f64s(w, &st.global.z)?;
+    w_f64(w, st.global.t)?;
+    w_f64s(w, &st.global.s)?;
+    w_f64(w, st.global.v)?;
+    w_f64s(w, &st.global.z_prev)?;
+    w_u32(w, st.nodes.len() as u32)?;
+    for ws in &st.nodes {
+        w_u32(w, ws.node as u32)?;
+        w_f64s(w, &ws.x)?;
+        w_f64s(w, &ws.u)?;
+        w_f32s(w, &ws.omega)?;
+        w_f32s(w, &ws.nu)?;
+        w_u32(w, ws.preds.len() as u32)?;
+        for p in &ws.preds {
+            w_f32s(w, p)?;
+        }
+    }
+    Ok(())
+}
+
+fn r_state<R: Read>(r: &mut R, file_len: u64) -> anyhow::Result<SolverState> {
+    let z = r_f64s(r, file_len)?;
+    let t = r_f64(r)?;
+    let s = r_f64s(r, file_len)?;
+    let v = r_f64(r)?;
+    let z_prev = r_f64s(r, file_len)?;
+    anyhow::ensure!(
+        z.len() == s.len() && z.len() == z_prev.len(),
+        "corrupt checkpoint: global vector lengths disagree"
+    );
+    // a node snapshot is >= 24 bytes on disk; a block >= 4
+    let n_nodes = bounded(r_u32(r)? as usize, 24, file_len, "node state")?;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let node = r_u32(r)? as usize;
+        let x = r_f64s(r, file_len)?;
+        let u = r_f64s(r, file_len)?;
+        let omega = r_f32s(r, file_len)?;
+        let nu = r_f32s(r, file_len)?;
+        let n_blocks = bounded(r_u32(r)? as usize, 4, file_len, "block")?;
+        let mut preds = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            preds.push(r_f32s(r, file_len)?);
+        }
+        nodes.push(WarmState {
+            node,
+            x,
+            u,
+            omega,
+            nu,
+            preds,
+        });
+    }
+    Ok(SolverState {
+        global: GlobalState {
+            z,
+            t,
+            s,
+            v,
+            z_prev,
+        },
+        nodes,
+    })
+}
+
 // ------------------------------------------------------------------ save
 
 /// Atomically persist a checkpoint: written to `<path>.tmp`, then renamed
@@ -287,23 +372,7 @@ pub fn save(path: &Path, ck: &Checkpoint) -> anyhow::Result<()> {
             None => w_u8(&mut w, 0)?,
             Some(st) => {
                 w_u8(&mut w, 1)?;
-                w_f64s(&mut w, &st.global.z)?;
-                w_f64(&mut w, st.global.t)?;
-                w_f64s(&mut w, &st.global.s)?;
-                w_f64(&mut w, st.global.v)?;
-                w_f64s(&mut w, &st.global.z_prev)?;
-                w_u32(&mut w, st.nodes.len() as u32)?;
-                for ws in &st.nodes {
-                    w_u32(&mut w, ws.node as u32)?;
-                    w_f64s(&mut w, &ws.x)?;
-                    w_f64s(&mut w, &ws.u)?;
-                    w_f32s(&mut w, &ws.omega)?;
-                    w_f32s(&mut w, &ws.nu)?;
-                    w_u32(&mut w, ws.preds.len() as u32)?;
-                    for p in &ws.preds {
-                        w_f32s(&mut w, p)?;
-                    }
-                }
+                w_state(&mut w, st)?;
             }
         }
         w.flush()?;
@@ -367,54 +436,106 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
     }
     let state = match r_u8(&mut r)? {
         0 => None,
-        _ => {
-            let z = r_f64s(&mut r, file_len)?;
-            let t = r_f64(&mut r)?;
-            let s = r_f64s(&mut r, file_len)?;
-            let v = r_f64(&mut r)?;
-            let z_prev = r_f64s(&mut r, file_len)?;
-            anyhow::ensure!(
-                z.len() == s.len() && z.len() == z_prev.len(),
-                "corrupt checkpoint: global vector lengths disagree"
-            );
-            // a node snapshot is >= 24 bytes on disk; a block >= 4
-            let n_nodes = bounded(r_u32(&mut r)? as usize, 24, file_len, "node state")?;
-            let mut nodes = Vec::with_capacity(n_nodes);
-            for _ in 0..n_nodes {
-                let node = r_u32(&mut r)? as usize;
-                let x = r_f64s(&mut r, file_len)?;
-                let u = r_f64s(&mut r, file_len)?;
-                let omega = r_f32s(&mut r, file_len)?;
-                let nu = r_f32s(&mut r, file_len)?;
-                let n_blocks = bounded(r_u32(&mut r)? as usize, 4, file_len, "block")?;
-                let mut preds = Vec::with_capacity(n_blocks);
-                for _ in 0..n_blocks {
-                    preds.push(r_f32s(&mut r, file_len)?);
-                }
-                nodes.push(WarmState {
-                    node,
-                    x,
-                    u,
-                    omega,
-                    nu,
-                    preds,
-                });
-            }
-            Some(SolverState {
-                global: GlobalState {
-                    z,
-                    t,
-                    s,
-                    v,
-                    z_prev,
-                },
-                nodes,
-            })
-        }
+        _ => Some(r_state(&mut r, file_len)?),
     };
     Ok(Checkpoint {
         problem_hash,
         completed,
+        state,
+    })
+}
+
+// ------------------------------------------- fit checkpoints (PSF1)
+
+/// Mid-fit snapshot of a single solve, written every
+/// `solver.checkpoint_every` outer iterations by
+/// `admm::solve_checkpointed`.  Resuming replays nothing: the loop
+/// restarts at `iters_done` from the captured [`SolverState`], so the
+/// remaining trace is bit-identical to an uninterrupted run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitCheckpoint {
+    /// Fingerprint of the fit this snapshot belongs to — the same
+    /// [`problem_hash`] used by sweeps, taken with an empty point list.
+    pub problem_hash: u64,
+    /// Outer iterations completed when the snapshot was taken.
+    pub iters_done: u64,
+    /// Convergence records of the completed iterations, in order.
+    pub trace: Vec<IterRecord>,
+    /// Full solver state at the iteration boundary.
+    pub state: SolverState,
+}
+
+/// Atomically persist a mid-fit snapshot: written to `<path>.psf1.tmp`,
+/// then renamed over `path`, so a kill mid-write leaves the previous
+/// snapshot intact.
+pub fn save_fit(path: &Path, ck: &FitCheckpoint) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = path.with_extension("psf1.tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(FIT_MAGIC)?;
+        w_u32(&mut w, FIT_VERSION)?;
+        w_u64(&mut w, ck.problem_hash)?;
+        w_u64(&mut w, ck.iters_done)?;
+        w_u32(&mut w, ck.trace.len() as u32)?;
+        for r in &ck.trace {
+            w_u32(&mut w, r.iter as u32)?;
+            w_f64(&mut w, r.primal)?;
+            w_f64(&mut w, r.dual)?;
+            w_f64(&mut w, r.bilinear)?;
+            w_f64(&mut w, r.wall)?;
+            w_u32(&mut w, r.participants as u32)?;
+            w_u32(&mut w, r.max_lag as u32)?;
+        }
+        w_state(&mut w, &ck.state)?;
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("committing fit checkpoint {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Read a mid-fit snapshot back, bit-exactly.  Same failure contract as
+/// [`load`]: clean errors on a bad magic/version, truncation, or corrupt
+/// count fields; hash compatibility is the caller's check.
+pub fn load_fit(path: &Path) -> anyhow::Result<FitCheckpoint> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening fit checkpoint {}: {e}", path.display()))?;
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == FIT_MAGIC, "not a PSF1 fit-checkpoint file");
+    let version = r_u32(&mut r)?;
+    anyhow::ensure!(
+        version == FIT_VERSION,
+        "unsupported fit-checkpoint version {version}"
+    );
+    let problem_hash = r_u64(&mut r)?;
+    let iters_done = r_u64(&mut r)?;
+    // an iteration record is 44 bytes on disk
+    let n_recs = bounded(r_u32(&mut r)? as usize, 44, file_len, "iteration record")?;
+    let mut trace = Vec::with_capacity(n_recs);
+    for _ in 0..n_recs {
+        trace.push(IterRecord {
+            iter: r_u32(&mut r)? as usize,
+            primal: r_f64(&mut r)?,
+            dual: r_f64(&mut r)?,
+            bilinear: r_f64(&mut r)?,
+            wall: r_f64(&mut r)?,
+            participants: r_u32(&mut r)? as usize,
+            max_lag: r_u32(&mut r)? as usize,
+        });
+    }
+    let state = r_state(&mut r, file_len)?;
+    Ok(FitCheckpoint {
+        problem_hash,
+        iters_done,
+        trace,
         state,
     })
 }
@@ -501,6 +622,64 @@ mod tests {
         bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd point count
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("exceeds the file size"), "{err}");
+    }
+
+    #[test]
+    fn fit_roundtrip_is_bit_exact() {
+        let ck = FitCheckpoint {
+            problem_hash: 0x1234_5678_9ABC_DEF0,
+            iters_done: 17,
+            trace: vec![
+                IterRecord {
+                    iter: 0,
+                    primal: 1.5,
+                    dual: -2.5e-3,
+                    bilinear: 3.0e-17,
+                    wall: 0.25,
+                    participants: 4,
+                    max_lag: 0,
+                },
+                IterRecord {
+                    iter: 16,
+                    primal: f64::MIN_POSITIVE,
+                    dual: 0.0,
+                    bilinear: -0.0,
+                    wall: 1.125,
+                    participants: 3,
+                    max_lag: 2,
+                },
+            ],
+            state: sample_checkpoint().state.unwrap(),
+        };
+        let path = std::env::temp_dir().join("psfit_fit_roundtrip.psf");
+        save_fit(&path, &ck).unwrap();
+        let back = load_fit(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(
+            back.trace[1].primal.to_bits(),
+            ck.trace[1].primal.to_bits(),
+            "float payloads survive bit-exactly"
+        );
+    }
+
+    #[test]
+    fn fit_loader_rejects_garbage_and_foreign_formats() {
+        let path = std::env::temp_dir().join("psfit_fit_garbage.psf");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(load_fit(&path).is_err());
+        // a PSC1 sweep checkpoint is not a PSF1 fit checkpoint
+        save(&path, &sample_checkpoint()).unwrap();
+        let err = load_fit(&path).unwrap_err().to_string();
+        assert!(err.contains("PSF1"), "{err}");
+        // corrupt record counts fail cleanly, without a huge allocation
+        let mut bytes = b"PSF1".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_fit(&path).unwrap_err().to_string();
         assert!(err.contains("exceeds the file size"), "{err}");
     }
 

@@ -161,12 +161,18 @@ pub fn run_serve(opts: &ServeOpts) -> anyhow::Result<()> {
 /// `local_fleet` in-process workers, and return its address — the test
 /// harness's one-call cluster-in-a-process.
 pub fn spawn_local_serve(local_fleet: usize) -> anyhow::Result<String> {
-    let opts = ServeOpts {
+    spawn_serve(&ServeOpts {
         listen: "127.0.0.1:0".to_string(),
         local_fleet,
         ..Default::default()
-    };
-    let (listener, state) = bind_serve(&opts)?;
+    })
+}
+
+/// [`spawn_local_serve`] with full control over the daemon settings —
+/// the degradation tests point `opts.workers` at deliberately flaky
+/// fleets to watch jobs land in the `failed` phase.
+pub fn spawn_serve(opts: &ServeOpts) -> anyhow::Result<String> {
+    let (listener, state) = bind_serve(opts)?;
     let addr = listener.local_endpoint();
     std::thread::Builder::new()
         .name("psfit-serve".into())
@@ -367,7 +373,15 @@ fn execute_job(state: &ServeState, spec: &JobSpec) -> anyhow::Result<FinishedJob
     let ds = sspec.generate();
     let dim = ds.n_features * ds.width;
     let mut cluster = SocketCluster::connect(&ds, &cfg)?;
-    let res = admm::solve(&mut cluster, dim, &cfg, Some(&ds), &SolveOptions::default())?;
+    // a job whose config names a checkpoint file gets mid-fit snapshots
+    // (and resume-on-resubmit); quorum losses surface through the solve
+    // error — death count and last worker error included — and land in
+    // the job table as a `failed` status
+    let res = if cfg.solver.checkpoint.is_empty() {
+        admm::solve(&mut cluster, dim, &cfg, Some(&ds), &SolveOptions::default())?
+    } else {
+        admm::solve_checkpointed(&mut cluster, dim, &cfg, &ds, &SolveOptions::default())?
+    };
     let loss = make_loss(cfg.loss, ds.width.max(cfg.classes));
     let objective = admm::solver::objective(&ds, loss.as_ref(), cfg.solver.gamma, &res.x);
     let model = FittedModel::from_solution(ds.n_features, ds.width, res.support, &res.x, objective);

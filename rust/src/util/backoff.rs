@@ -1,0 +1,143 @@
+//! Capped exponential backoff with deterministic seeded jitter.
+//!
+//! One policy object serves every retry loop in the socket runtime: the
+//! initial `SocketCluster` connect, the between-round worker-rejoin
+//! probes, and any future reconnecting client.  Delays grow as
+//! `base * 2^attempt`, are capped, and carry multiplicative jitter drawn
+//! from the crate's seeded PRNG ([`crate::util::rng::Rng`]) — so two
+//! runs with the same seed schedule *identical* retry instants, which is
+//! what lets the chaos harness reproduce a fault scenario bit-for-bit.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Retry-delay policy: capped exponential growth plus seeded jitter.
+///
+/// Jitter is multiplicative over `[1 - jitter, 1 + jitter]`, so a 25%
+/// jitter on a 100 ms base yields delays in `[75, 125]` ms for the first
+/// attempt.  All state (the attempt counter and the PRNG) lives in the
+/// policy, so each retrying entity owns one `Backoff`.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    jitter: f64,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Default jitter fraction (±25% around the exponential delay).
+    pub const DEFAULT_JITTER: f64 = 0.25;
+
+    /// Policy starting at `base`, never exceeding `cap`, seeded for
+    /// deterministic jitter.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            jitter: Self::DEFAULT_JITTER,
+            attempt: 0,
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    /// Override the jitter fraction (`0.0` disables jitter entirely).
+    pub fn with_jitter(mut self, jitter: f64) -> Backoff {
+        self.jitter = jitter.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Attempts scheduled so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Delay to wait before the *next* attempt, advancing the counter.
+    ///
+    /// The first call returns roughly `base`, each subsequent call twice
+    /// the previous (pre-jitter), saturating at `cap`.
+    pub fn next_delay(&mut self) -> Duration {
+        // saturate the shift well before Duration arithmetic could
+        let exp = self.attempt.min(32);
+        self.attempt = self.attempt.saturating_add(1);
+        let raw = self
+            .base
+            .saturating_mul(1u32.checked_shl(exp).unwrap_or(u32::MAX))
+            .min(self.cap);
+        let scale = 1.0 + self.jitter * (2.0 * self.rng.uniform() - 1.0);
+        Duration::from_secs_f64((raw.as_secs_f64() * scale).max(0.0)).min(self.cap)
+    }
+
+    /// Reset the attempt counter (e.g. after a successful reconnect), so
+    /// the next failure starts the schedule from `base` again.  The PRNG
+    /// stream is *not* rewound — determinism is per-seed, not per-reset.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// Sleep through `backoff.next_delay()` — the helper retry loops call
+/// between attempts.
+pub fn sleep_next(backoff: &mut Backoff) {
+    std::thread::sleep(backoff.next_delay());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn delays_grow_exponentially_and_cap() {
+        let mut b = Backoff::new(ms(50), ms(400), 7).with_jitter(0.0);
+        let delays: Vec<u128> = (0..6).map(|_| b.next_delay().as_millis()).collect();
+        assert_eq!(delays, vec![50, 100, 200, 400, 400, 400]);
+        assert_eq!(b.attempts(), 6);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_seed_deterministic() {
+        let mut a = Backoff::new(ms(100), ms(10_000), 42);
+        let mut b = Backoff::new(ms(100), ms(10_000), 42);
+        let mut c = Backoff::new(ms(100), ms(10_000), 43);
+        let mut saw_different_seed_diverge = false;
+        for k in 0..8 {
+            let da = a.next_delay();
+            let db = b.next_delay();
+            let dc = c.next_delay();
+            assert_eq!(da, db, "same seed must schedule identical delays");
+            if da != dc {
+                saw_different_seed_diverge = true;
+            }
+            let nominal = 100.0 * f64::from(1u32 << k.min(6));
+            let lo = nominal * (1.0 - Backoff::DEFAULT_JITTER) - 1.0;
+            let hi = (nominal * (1.0 + Backoff::DEFAULT_JITTER) + 1.0).min(10_000.0);
+            let got = da.as_secs_f64() * 1e3;
+            assert!(got >= lo && got <= hi, "attempt {k}: {got} ms not in [{lo}, {hi}]");
+        }
+        assert!(saw_different_seed_diverge, "different seeds should jitter apart");
+    }
+
+    #[test]
+    fn reset_restarts_the_schedule() {
+        let mut b = Backoff::new(ms(10), ms(1000), 1).with_jitter(0.0);
+        let _ = b.next_delay();
+        let _ = b.next_delay();
+        assert_eq!(b.next_delay(), ms(40));
+        b.reset();
+        assert_eq!(b.next_delay(), ms(10));
+    }
+
+    #[test]
+    fn zero_cap_never_panics() {
+        let mut b = Backoff::new(ms(0), ms(0), 9);
+        for _ in 0..40 {
+            assert_eq!(b.next_delay(), ms(0));
+        }
+    }
+}

@@ -7,6 +7,8 @@
 //! this module.  Each is tested in its own unit-test block and, for the
 //! property-testing kit, exercised heavily by `rust/tests/proptests.rs`.
 
+/// Capped exponential retry backoff with seeded jitter.
+pub mod backoff;
 pub mod bench;
 /// Tiny CLI argument parser (clap stand-in).
 pub mod cli;

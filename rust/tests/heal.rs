@@ -1,0 +1,134 @@
+//! Self-healing integration tests: a dead worker rejoining mid-fit, a
+//! checkpointed fit resuming bit-identically over the socket transport,
+//! and a serve job landing in the `failed` phase — with death details —
+//! when its fleet collapses below quorum.
+
+use std::time::Duration;
+
+use psfit::admm::SolveOptions;
+use psfit::config::{Config, TransportKind};
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::network::socket::spawn_local_worker;
+use psfit::network::socket::wire::JobSpec;
+use psfit::network::socket::worker::spawn_flaky_worker;
+use psfit::serve::{spawn_serve, JobPhase, ServeClient, ServeOpts};
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn a_flaky_worker_rejoins_mid_fit_and_the_roster_heals() {
+    let spec = SyntheticSpec::regression(32, 180, 3);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 3;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 10;
+    cfg.solver.tol_primal = 0.0; // fixed horizon: deaths and rejoins land mid-run
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.rejoin = true;
+    cfg.platform.workers = vec![
+        spawn_local_worker().unwrap(),
+        spawn_local_worker().unwrap(),
+        spawn_flaky_worker(2).unwrap(),
+    ];
+    let res = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+    assert_eq!(res.iters, 10, "healing keeps the full horizon");
+    let stats = res.coordination.expect("socket cluster reports stats");
+    // the flaky worker's listener survives its session crashes, so every
+    // death is answered by a successful next-round redial — and the fresh
+    // session then dies again two rounds later, repeating the cycle
+    assert!(stats.deaths >= 2, "deaths: {}", stats.deaths);
+    assert!(stats.rejoins >= 2, "rejoins: {}", stats.rejoins);
+    let healed = res
+        .trace
+        .records
+        .iter()
+        .any(|r| r.iter > 2 && r.participants == 3);
+    assert!(healed, "no post-death round ran with the full roster");
+    assert!(
+        res.transfers.net_resync_bytes > 0,
+        "rejoin traffic is ledgered as resync bytes"
+    );
+}
+
+#[test]
+fn a_checkpointed_socket_fit_resumes_bit_identically() {
+    let spec = SyntheticSpec::regression(32, 160, 2);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 10;
+    cfg.solver.tol_primal = 0.0;
+    // uninterrupted reference on the local sequential transport (the
+    // socket transport matches it bit-for-bit; see tests/socket.rs)
+    let reference = driver::fit_with_options(&ds, &cfg, &SolveOptions::default(), false).unwrap();
+
+    let path = std::env::temp_dir().join("psfit_heal_resume.psf");
+    let _ = std::fs::remove_file(&path);
+    let fleet: Vec<String> = (0..2).map(|_| spawn_local_worker().unwrap()).collect();
+    let mut scfg = cfg.clone();
+    scfg.platform.transport = TransportKind::Socket;
+    scfg.platform.workers = fleet;
+    scfg.solver.checkpoint = path.to_string_lossy().into_owned();
+    scfg.solver.checkpoint_every = 3;
+
+    // "killed" coordinator: budget capped at 5 rounds, last snapshot at 3
+    let mut interrupted = scfg.clone();
+    interrupted.solver.max_iters = 5;
+    let partial =
+        driver::fit_with_options(&ds, &interrupted, &SolveOptions::default(), false).unwrap();
+    assert_eq!(partial.iters, 5);
+    assert!(path.exists(), "mid-fit snapshot written");
+
+    // resume with the full budget over fresh connections: picks up at
+    // iteration 3 and must replay the reference trajectory exactly
+    let resumed = driver::fit_with_options(&ds, &scfg, &SolveOptions::default(), false).unwrap();
+    assert_eq!(resumed.iters, 10);
+    assert_eq!(resumed.trace.records.len(), reference.trace.records.len());
+    for (a, b) in resumed.trace.records.iter().zip(&reference.trace.records) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.primal.to_bits(), b.primal.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.bilinear.to_bits(), b.bilinear.to_bits(), "iter {}", a.iter);
+    }
+    assert_eq!(bits(&resumed.x), bits(&reference.x));
+    assert_eq!(bits(&resumed.z), bits(&reference.z));
+    assert_eq!(resumed.support, reference.support);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn a_serve_job_fails_with_death_details_when_the_fleet_dies() {
+    // every worker drops its session after one round: the job cannot
+    // hold a quorum past round 2 and must land in the `failed` phase
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec![spawn_flaky_worker(1).unwrap(), spawn_flaky_worker(1).unwrap()],
+        ..Default::default()
+    };
+    let addr = spawn_serve(&opts).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let spec = JobSpec {
+        n: 24,
+        m: 120,
+        nodes: 2,
+        ..JobSpec::default()
+    };
+    let job = client.submit("doomed", spec).unwrap();
+    let err = client
+        .wait(job, Duration::from_secs(60))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("failed"), "{err}");
+    assert!(err.contains("death"), "{err}");
+    // the job table remembers the failure and its cause
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].phase, JobPhase::Failed.code());
+    let st = client.status(job).unwrap();
+    assert!(st.message.contains("death"), "{}", st.message);
+}
