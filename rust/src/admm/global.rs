@@ -59,6 +59,14 @@ impl GlobalState {
         let n_rho = n_nodes as f64 * rho_c;
         let s_sq = ops::dot(&self.s, &self.s);
         let lip = n_rho + rho_b * (s_sq + 1.0);
+        if !lip.is_finite() {
+            // penalty overflow: no usable step size exists.  Poison the
+            // iterate explicitly so the solver's divergence watchdog
+            // trips on the residuals, instead of freezing z in place and
+            // "converging" at a zero dual residual.
+            self.poison();
+            return;
+        }
         let step = 1.0 / lip;
 
         // FISTA state: y = extrapolated point
@@ -80,6 +88,13 @@ impl GlobalState {
                 zy[i] -= step * grad[i];
             }
             let t_cand = ty - step * gt;
+            if !t_cand.is_finite() || zy.iter().any(|v| !v.is_finite()) {
+                // mid-descent overflow (huge penalties, poisoned s):
+                // never feed non-finite values to the projection —
+                // poison the iterate for the watchdog instead
+                self.poison();
+                return;
+            }
             let (z_new, t_new) = project_l1_epigraph(&zy, t_cand);
 
             // FISTA extrapolation
@@ -95,6 +110,14 @@ impl GlobalState {
         }
         self.z = z_old;
         self.t = t_old;
+    }
+
+    /// Mark the iterate as numerically dead: the (z, t) pair becomes NaN
+    /// so every residual computed from it is NaN and the solver's
+    /// divergence watchdog trips on the next check.
+    fn poison(&mut self) {
+        self.z.iter_mut().for_each(|v| *v = f64::NAN);
+        self.t = f64::NAN;
     }
 
     /// The s-update (7c)/(12): closed form over S^kappa.
@@ -133,6 +156,7 @@ impl GlobalState {
             wall,
             participants,
             max_lag: 0,
+            restarts: 0,
         }
     }
 }

@@ -1,0 +1,261 @@
+//! Poison quarantine: numerical validation of node replies before they
+//! touch [`super::GlobalState`].
+//!
+//! One NaN in a reply would propagate through the consensus average into
+//! `z` and silently poison every later iterate, so [`ReplyGuard::screen`]
+//! checks every collected `(x_i, u_i)` for non-finite values and norm
+//! blowups *before* the fold.  A poisoned reply is quarantined — removed
+//! from the round exactly like a degraded peer under the
+//! participant-weighted averaging, with the count surfaced through
+//! [`crate::metrics::CoordinationStats::quarantined`] — and a node that
+//! stays poisoned for `platform.quarantine_limit` consecutive rounds is
+//! banished via [`Cluster::banish`]: a structured death that the socket
+//! transport's rejoin/resync machinery may later heal.
+
+use crate::network::{Cluster, NodeReply};
+
+/// Infinity-norm cap above which a finite reply still counts as poisoned.
+/// Anything past this is numerically meaningless for a consensus average
+/// (squaring it in a residual already overflows to infinity), but the cap
+/// is far beyond any legitimate iterate, so healthy solves never trip it.
+pub const NORM_CAP: f64 = 1e150;
+
+/// Why a reply was quarantined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonKind {
+    /// A NaN or infinity in `x` or `u`.
+    NonFinite,
+    /// Every value finite, but the infinity norm exceeds [`NORM_CAP`].
+    NormBlowup,
+}
+
+impl std::fmt::Display for PoisonKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoisonKind::NonFinite => write!(f, "non-finite value"),
+            PoisonKind::NormBlowup => write!(f, "norm blowup past {NORM_CAP:e}"),
+        }
+    }
+}
+
+/// Inspect one reply; `None` means clean.
+pub fn poison_of(reply: &NodeReply) -> Option<PoisonKind> {
+    let mut max = 0.0f64;
+    for v in reply.x.iter().chain(reply.u.iter()) {
+        if !v.is_finite() {
+            return Some(PoisonKind::NonFinite);
+        }
+        max = max.max(v.abs());
+    }
+    if max > NORM_CAP {
+        return Some(PoisonKind::NormBlowup);
+    }
+    None
+}
+
+/// Per-solve reply screen with consecutive-offense tracking.
+#[derive(Debug, Default)]
+pub struct ReplyGuard {
+    /// `platform.quarantine_limit`: consecutive poisoned replies that
+    /// banish a node.  `0` quarantines forever without banishing.
+    limit: u64,
+    /// Consecutive poisoned replies per node; a clean reply resets it.
+    offenses: Vec<u64>,
+    /// Total replies quarantined over the solve.
+    pub quarantined: u64,
+    /// Nodes banished for exceeding the limit.
+    pub banished: u64,
+}
+
+impl ReplyGuard {
+    /// Guard with the given consecutive-offense banish limit.
+    pub fn new(limit: u64) -> ReplyGuard {
+        ReplyGuard {
+            limit,
+            ..Default::default()
+        }
+    }
+
+    /// Screen a round's replies in place: clean replies stay (in order);
+    /// poisoned ones are pulled out, logged, counted, recycled back to
+    /// the transport, and — past the offense limit — get their node
+    /// banished.  Returns how many replies this round were quarantined.
+    pub fn screen(
+        &mut self,
+        round: usize,
+        replies: &mut Vec<NodeReply>,
+        cluster: &mut dyn Cluster,
+    ) -> usize {
+        // fast path: a healthy round scans once and moves nothing
+        if replies.iter().all(|r| poison_of(r).is_none()) {
+            for r in replies.iter() {
+                if let Some(o) = self.offenses.get_mut(r.node) {
+                    *o = 0;
+                }
+            }
+            return 0;
+        }
+        let mut poisoned = Vec::new();
+        let mut kept = Vec::with_capacity(replies.len());
+        for reply in replies.drain(..) {
+            match poison_of(&reply) {
+                None => {
+                    if let Some(o) = self.offenses.get_mut(reply.node) {
+                        *o = 0;
+                    }
+                    kept.push(reply);
+                }
+                Some(kind) => {
+                    if self.offenses.len() <= reply.node {
+                        self.offenses.resize(reply.node + 1, 0);
+                    }
+                    self.offenses[reply.node] += 1;
+                    self.quarantined += 1;
+                    let strikes = self.offenses[reply.node];
+                    eprintln!(
+                        "[guard] round {round}: node {} quarantined ({kind}; strike {strikes})",
+                        reply.node
+                    );
+                    if self.limit > 0 && strikes >= self.limit {
+                        let why = format!(
+                            "{strikes} consecutive poisoned replies (last: {kind})"
+                        );
+                        cluster.banish(reply.node, &why);
+                        self.banished += 1;
+                        self.offenses[reply.node] = 0;
+                    }
+                    poisoned.push(reply);
+                }
+            }
+        }
+        let n = poisoned.len();
+        *replies = kept;
+        // quarantined buffers go back to the transport like consumed ones
+        cluster.recycle(poisoned);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::WarmState;
+    use crate::backend::BlockParams;
+    use crate::metrics::TransferLedger;
+
+    /// Minimal cluster that records banish calls.
+    #[derive(Default)]
+    struct StubCluster {
+        banished: Vec<(usize, String)>,
+        recycled: usize,
+    }
+
+    impl Cluster for StubCluster {
+        fn nodes(&self) -> usize {
+            3
+        }
+        fn round(&mut self, _z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+            anyhow::bail!("unused")
+        }
+        fn loss_value(&mut self) -> anyhow::Result<f64> {
+            Ok(0.0)
+        }
+        fn ledger(&mut self) -> TransferLedger {
+            TransferLedger::default()
+        }
+        fn recycle(&mut self, replies: Vec<NodeReply>) {
+            self.recycled += replies.len();
+        }
+        fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+            anyhow::bail!("unused")
+        }
+        fn reseed(&mut self, _s: &[WarmState], _p: BlockParams) -> anyhow::Result<()> {
+            anyhow::bail!("unused")
+        }
+        fn banish(&mut self, node: usize, why: &str) {
+            self.banished.push((node, why.to_string()));
+        }
+    }
+
+    fn reply(node: usize, x: Vec<f64>) -> NodeReply {
+        NodeReply {
+            node,
+            round: 0,
+            lag: 0,
+            u: vec![0.0; x.len()],
+            x,
+        }
+    }
+
+    #[test]
+    fn poison_predicate_catches_nan_inf_and_blowup() {
+        assert_eq!(poison_of(&reply(0, vec![1.0, -2.0])), None);
+        assert_eq!(
+            poison_of(&reply(0, vec![1.0, f64::NAN])),
+            Some(PoisonKind::NonFinite)
+        );
+        assert_eq!(
+            poison_of(&reply(0, vec![f64::INFINITY])),
+            Some(PoisonKind::NonFinite)
+        );
+        assert_eq!(
+            poison_of(&reply(0, vec![1e300])),
+            Some(PoisonKind::NormBlowup)
+        );
+        // the dual is screened too
+        let mut r = reply(0, vec![0.0]);
+        r.u[0] = f64::NEG_INFINITY;
+        assert_eq!(poison_of(&r), Some(PoisonKind::NonFinite));
+    }
+
+    #[test]
+    fn screen_quarantines_recycles_and_keeps_order() {
+        let mut guard = ReplyGuard::new(0);
+        let mut cluster = StubCluster::default();
+        let mut replies = vec![
+            reply(0, vec![0.5]),
+            reply(1, vec![f64::NAN]),
+            reply(2, vec![-0.25]),
+        ];
+        let n = guard.screen(4, &mut replies, &mut cluster);
+        assert_eq!(n, 1);
+        assert_eq!(guard.quarantined, 1);
+        assert_eq!(
+            replies.iter().map(|r| r.node).collect::<Vec<_>>(),
+            vec![0, 2]
+        );
+        assert_eq!(cluster.recycled, 1, "poisoned buffers are recycled");
+        // limit 0 never banishes, however often a node offends
+        for round in 0..5 {
+            let mut rs = vec![reply(1, vec![f64::NAN])];
+            guard.screen(round, &mut rs, &mut cluster);
+        }
+        assert!(cluster.banished.is_empty());
+        assert_eq!(guard.banished, 0);
+    }
+
+    #[test]
+    fn repeat_offender_is_banished_and_a_clean_reply_resets_strikes() {
+        let mut guard = ReplyGuard::new(3);
+        let mut cluster = StubCluster::default();
+        // two strikes, then a clean round, then two more: never banished
+        for round in 0..2 {
+            let mut rs = vec![reply(1, vec![f64::INFINITY])];
+            guard.screen(round, &mut rs, &mut cluster);
+        }
+        let mut rs = vec![reply(1, vec![0.0])];
+        guard.screen(2, &mut rs, &mut cluster);
+        for round in 3..5 {
+            let mut rs = vec![reply(1, vec![f64::INFINITY])];
+            guard.screen(round, &mut rs, &mut cluster);
+        }
+        assert!(cluster.banished.is_empty(), "strikes must reset on clean");
+        // the third consecutive strike banishes
+        let mut rs = vec![reply(1, vec![f64::INFINITY])];
+        guard.screen(5, &mut rs, &mut cluster);
+        assert_eq!(cluster.banished.len(), 1);
+        assert_eq!(cluster.banished[0].0, 1);
+        assert!(cluster.banished[0].1.contains("3 consecutive"));
+        assert_eq!(guard.banished, 1);
+    }
+}

@@ -16,14 +16,17 @@
 
 /// Coordinator-side (z, t, s, v) updates and residuals.
 pub mod global;
+/// Poison quarantine: reply validation before the consensus fold.
+pub mod guard;
 /// Node-side Algorithm 2: the feature-decomposed inner sharing-ADMM.
 pub mod local;
 /// Algorithm 1: the outer consensus loop with resumable state.
 pub mod solver;
 
 pub use global::GlobalState;
+pub use guard::ReplyGuard;
 pub use local::LocalProx;
 pub use solver::{
-    solve, solve_checkpointed, solve_from, solve_from_with, SolveOptions, SolveResult,
-    SolveScratch, SolverState,
+    solve, solve_checkpointed, solve_from, solve_from_with, SolveError, SolveOptions,
+    SolveResult, SolveScratch, SolverState,
 };

@@ -17,6 +17,7 @@ use crate::sparsity::{hard_threshold, support_of};
 use crate::util::Stopwatch;
 
 use super::global::GlobalState;
+use super::guard::ReplyGuard;
 
 /// Complete resumable solver state: the coordinator's global variables
 /// plus every node's warm-start snapshot.
@@ -118,6 +119,47 @@ impl Default for SolveOptions {
     }
 }
 
+/// Structured outer-loop failures beyond transport errors, returned
+/// through `anyhow` so callers can `downcast_ref::<SolveError>()`.
+#[derive(Debug, Clone)]
+pub enum SolveError {
+    /// The divergence watchdog tripped (non-finite residuals, sustained
+    /// residual growth, or rounds in which every reply was quarantined)
+    /// and either exhausted its safeguarded restarts or never saw a
+    /// finite state to restart from.
+    Diverged {
+        /// Outer iteration at which the watchdog gave up.
+        round: usize,
+        /// Recent primal-residual window leading up to the trip.
+        residuals: Vec<f64>,
+        /// Safeguarded restarts performed before giving up.
+        restarts: usize,
+    },
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Diverged {
+                round,
+                residuals,
+                restarts,
+            } => {
+                let tail: Vec<String> =
+                    residuals.iter().map(|r| format!("{r:.3e}")).collect();
+                write!(
+                    f,
+                    "solve diverged at round {round} after {restarts} safeguarded \
+                     restart(s); recent primal residuals [{}]",
+                    tail.join(", ")
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
 /// Everything a finished Bi-cADMM solve reports back.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
@@ -137,6 +179,11 @@ pub struct SolveResult {
     pub iters: usize,
     /// Whether the residual thresholds were met before `max_iters`.
     pub converged: bool,
+    /// Whether `solver.deadline_ms` cut the solve off at a round boundary
+    /// (the result is then the best-so-far iterate, not a converged one).
+    pub timed_out: bool,
+    /// Safeguarded watchdog restarts performed during the solve.
+    pub restarts: usize,
     /// Wall-clock seconds spent in the outer loop.
     pub wall_seconds: f64,
     /// Training loss at the final iterate (if tracked or cheap).
@@ -239,7 +286,24 @@ fn solve_loop(
     SolveScratch::reuse_f64(&mut scratch.c, dim, &mut scratch.saved_bytes);
     let c = &mut scratch.c;
     let mut converged = false;
+    let mut timed_out = false;
     let mut iters = start;
+
+    // penalties are locals because the divergence watchdog rescales them
+    // on a safeguarded restart; everywhere below reads rc/rb, not config
+    let mut rc = sc.rho_c;
+    let mut rb = sc.rho_b;
+
+    // ---- numerical guardrails ------------------------------------------
+    // quarantine: every reply is screened for poison before the fold
+    let mut guard = ReplyGuard::new(cfg.platform.quarantine_limit);
+    // watchdog: windowed residual-growth trend + non-finite trips
+    let window = sc.watchdog_window;
+    let mut best_primal = f64::INFINITY;
+    let mut growth_streak = 0usize;
+    let mut recent: Vec<f64> = Vec::new();
+    let mut restarts_done = 0usize;
+    let mut last_finite: Option<SolverState> = None;
 
     // scaled termination thresholds (absolute tolerances scaled by the
     // problem dimension, Boyd §3.3 style); the primal threshold scales
@@ -249,13 +313,61 @@ fn solve_loop(
     let b_thresh = sc.tol_bilinear;
 
     for k in start..sc.max_iters {
+        // ---- deadline: abort cleanly at a round boundary ----------------
+        // Checked before the round (but never before the first), so a
+        // timed-out solve always carries at least one completed round of
+        // best-so-far state into extraction.
+        if sc.deadline_ms > 0
+            && k > start
+            && watch.elapsed_secs() * 1000.0 >= sc.deadline_ms as f64
+        {
+            timed_out = true;
+            eprintln!(
+                "[deadline] round {k}: solver.deadline_ms = {} exceeded; \
+                 returning best-so-far result",
+                sc.deadline_ms
+            );
+            break;
+        }
         iters = k + 1;
         // ---- Bcast z^k / Collect x_i^{k+1}, u_i^k -----------------------
-        let replies = cluster.round(&global.z)?;
-        anyhow::ensure!(
-            !replies.is_empty(),
-            "round {k}: no node replies (cluster lost its quorum)"
-        );
+        let mut replies = cluster.round(&global.z)?;
+        // ---- poison quarantine: screen before anything is folded --------
+        let quarantined_now = guard.screen(k, &mut replies, cluster);
+        if replies.is_empty() {
+            anyhow::ensure!(
+                quarantined_now > 0,
+                "round {k}: no node replies (cluster lost its quorum)"
+            );
+            // every reply this round was poisoned — nothing usable to
+            // fold.  That is a divergence signal, not a quorum loss:
+            // route it to the watchdog so a pathological config ends in
+            // a structured `Diverged`, never a transport error.
+            growth_streak += 1;
+            if window > 0 && growth_streak >= window.min(3) {
+                if watchdog_restart(
+                    cluster,
+                    global,
+                    sc,
+                    &last_finite,
+                    &mut rc,
+                    &mut rb,
+                    &mut restarts_done,
+                    k,
+                ) {
+                    best_primal = f64::INFINITY;
+                    growth_streak = 0;
+                    recent.clear();
+                    continue;
+                }
+                return Err(anyhow::Error::new(SolveError::Diverged {
+                    round: k,
+                    residuals: recent.clone(),
+                    restarts: restarts_done,
+                }));
+            }
+            continue;
+        }
 
         // ---- global updates (7b), (12), (13) ----------------------------
         // Averages are weighted by the nodes that actually participated
@@ -273,7 +385,7 @@ fn solve_loop(
         for ci in c.iter_mut() {
             *ci *= inv;
         }
-        global.zt_update(c, participants, sc.rho_c, sc.rho_b, sc.zt_iters);
+        global.zt_update(c, participants, rc, rb, sc.zt_iters);
 
         // ---- residuals (14): bilinear measured against the PREVIOUS s ---
         // (g(z^{k+1}, s^k, t^{k+1}) — the quantity the rho_b penalty acts
@@ -284,17 +396,31 @@ fn solve_loop(
         // ledger credit: there is simply nothing left to allocate).
         let mut rec = global.residuals(
             replies.iter().map(|r| r.x.as_slice()),
-            sc.rho_c,
+            rc,
             k,
             watch.elapsed_secs(),
         );
         rec.max_lag = max_lag;
+        rec.restarts = restarts_done;
         // hand the reply buffers back to the transport for reuse — the
         // next round's Collect fills them in place instead of allocating
         cluster.recycle(replies);
 
-        global.s_update(sc.kappa);
-        global.v_update();
+        // ---- divergence watchdog ----------------------------------------
+        // Trip immediately on any non-finite residual or iterate;
+        // otherwise trip after `window` consecutive rounds of the primal
+        // residual sitting 1e4x above the best one seen.
+        let finite = rec.primal.is_finite()
+            && rec.dual.is_finite()
+            && rec.bilinear.is_finite()
+            && global.z.iter().all(|v| v.is_finite());
+
+        // the closed-form s-update partial-sorts z, so a poisoned iterate
+        // must go straight to the watchdog, never into the sorter
+        if finite {
+            global.s_update(sc.kappa);
+            global.v_update();
+        }
 
         if opts.verbose {
             eprintln!(
@@ -302,8 +428,34 @@ fn solve_loop(
                 k, rec.primal, rec.dual, rec.bilinear
             );
         }
+        if finite {
+            if rec.primal > 1e4 * best_primal.max(1e-12) {
+                if growth_streak == 0
+                    && last_finite.is_none()
+                    && sc.watchdog_restarts > 0
+                    && window > 0
+                {
+                    // first warning of this streak: snapshot the still-
+                    // finite state so a restart has something to re-seed
+                    // from (clusters without warm export stay None and
+                    // the watchdog goes straight to Diverged)
+                    last_finite = SolverState::capture(cluster, global).ok();
+                }
+                growth_streak += 1;
+            } else {
+                growth_streak = 0;
+                best_primal = best_primal.min(rec.primal);
+            }
+            recent.push(rec.primal);
+            if recent.len() > window.max(1) {
+                recent.remove(0);
+            }
+        }
+        let tripped = window > 0 && (!finite || growth_streak >= window);
+
         let p_thresh = sc.tol_primal * ((participants * dim) as f64).sqrt().max(1.0);
-        let done = k > 0
+        let done = !tripped
+            && k > 0
             && rec.primal <= p_thresh
             && rec.dual <= d_thresh
             && rec.bilinear <= b_thresh;
@@ -311,6 +463,28 @@ fn solve_loop(
         if done {
             converged = true;
             break;
+        }
+        if tripped {
+            if watchdog_restart(
+                cluster,
+                global,
+                sc,
+                &last_finite,
+                &mut rc,
+                &mut rb,
+                &mut restarts_done,
+                k,
+            ) {
+                best_primal = f64::INFINITY;
+                growth_streak = 0;
+                recent.clear();
+                continue;
+            }
+            return Err(anyhow::Error::new(SolveError::Diverged {
+                round: k,
+                residuals: recent.clone(),
+                restarts: restarts_done,
+            }));
         }
         // ---- periodic mid-fit snapshot ----------------------------------
         // Captured at the iteration boundary — exactly the state the next
@@ -322,6 +496,12 @@ fn solve_loop(
                 let full = state.nodes.len() == sink.roster
                     && (0..sink.roster).all(|i| state.nodes.iter().any(|w| w.node == i));
                 if full {
+                    // reaching here means the round was finite (a tripped
+                    // round exits above), so this snapshot doubles as the
+                    // watchdog's restart seed — the freshest finite state
+                    if window > 0 && sc.watchdog_restarts > 0 {
+                        last_finite = Some(state.clone());
+                    }
                     checkpoint::save_fit(
                         sink.path,
                         &FitCheckpoint {
@@ -358,18 +538,73 @@ fn solve_loop(
     // fold in the solver-side reuse: scratch buffers that were served
     // from warm capacity this solve instead of freshly allocated
     transfers.net_alloc_saved_bytes += std::mem::take(&mut scratch.saved_bytes);
+    // fold the guard's quarantine count into the coordination stats,
+    // materializing them for synchronous transports that track none
+    let mut coordination = cluster.coordination();
+    if guard.quarantined > 0 {
+        coordination
+            .get_or_insert_with(|| crate::metrics::CoordinationStats::new(cluster.nodes()))
+            .quarantined += guard.quarantined;
+    }
     Ok(SolveResult {
         z: global.z.clone(),
-        coordination: cluster.coordination(),
+        coordination,
         x,
         support,
         trace,
         transfers,
         iters,
         converged,
+        timed_out,
+        restarts: restarts_done,
         wall_seconds: watch.elapsed_secs(),
         final_loss,
     })
+}
+
+/// Attempt one safeguarded watchdog restart: rescale the penalties a
+/// decade down, restore the last finite coordinator state, and re-seed
+/// every node from its matching warm snapshot.  Returns `false` (leaving
+/// the solve to report `SolveError::Diverged`) when the restart budget is
+/// spent, no finite state was ever captured, or the cluster cannot be
+/// re-seeded.
+#[allow(clippy::too_many_arguments)]
+fn watchdog_restart(
+    cluster: &mut dyn Cluster,
+    global: &mut GlobalState,
+    sc: &crate::config::SolverConfig,
+    last_finite: &Option<SolverState>,
+    rc: &mut f64,
+    rb: &mut f64,
+    restarts_done: &mut usize,
+    round: usize,
+) -> bool {
+    if *restarts_done >= sc.watchdog_restarts {
+        return false;
+    }
+    let Some(state) = last_finite else {
+        return false;
+    };
+    let rc_new = *rc / 10.0;
+    let rb_new = *rb / 10.0;
+    let params = BlockParams {
+        rho_l: sc.rho_l,
+        rho_c: rc_new,
+        reg: 1.0 / (cluster.nodes() as f64 * sc.gamma) + rc_new,
+    };
+    if cluster.reseed(&state.nodes, params).is_err() {
+        return false;
+    }
+    *global = state.global.clone();
+    *rc = rc_new;
+    *rb = rb_new;
+    *restarts_done += 1;
+    eprintln!(
+        "[watchdog] round {round}: divergence detected; safeguarded restart \
+         {}/{} with rho_c {rc_new:.3e} rho_b {rb_new:.3e}",
+        *restarts_done, sc.watchdog_restarts
+    );
+    true
 }
 
 /// Run Bi-cADMM with mid-fit checkpointing (`psfit train --checkpoint`,
@@ -815,6 +1050,172 @@ mod tests {
             .to_string();
         assert!(err.contains("different fit"), "{err}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Wrapper that scales every reply by a factor exploding 1e5x per
+    /// round inside `[grow_from, grow_until)` — a deterministic stand-in
+    /// for a numerically runaway trajectory.  The factors stay well below
+    /// the guard's 1e150 norm cap, so the replies pass quarantine and the
+    /// growth must be caught by the *watchdog's* residual trend.
+    struct GrowingCluster {
+        inner: SequentialCluster,
+        grow_from: usize,
+        grow_until: usize,
+        round: usize,
+    }
+
+    impl Cluster for GrowingCluster {
+        fn nodes(&self) -> usize {
+            self.inner.nodes()
+        }
+        fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<crate::network::NodeReply>> {
+            let mut replies = self.inner.round(z)?;
+            if self.round >= self.grow_from && self.round < self.grow_until {
+                let exp = 5 * (self.round - self.grow_from + 1) as i32;
+                let f = 10f64.powi(exp.min(280)).min(1e140);
+                for r in &mut replies {
+                    for v in &mut r.x {
+                        *v *= f;
+                    }
+                }
+            }
+            self.round += 1;
+            Ok(replies)
+        }
+        fn loss_value(&mut self) -> anyhow::Result<f64> {
+            self.inner.loss_value()
+        }
+        fn ledger(&mut self) -> TransferLedger {
+            self.inner.ledger()
+        }
+        fn recycle(&mut self, replies: Vec<crate::network::NodeReply>) {
+            self.inner.recycle(replies)
+        }
+        fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+            self.inner.export_warm()
+        }
+        fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+            self.inner.reseed(states, params)
+        }
+    }
+
+    fn growth_problem() -> (Dataset, Config) {
+        let mut spec = SyntheticSpec::regression(24, 160, 2);
+        spec.sparsity_level = 0.8;
+        spec.noise_std = 0.02;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.rho_c = 1.0;
+        cfg.solver.rho_b = 0.5;
+        cfg.solver.watchdog_window = 3;
+        (ds, cfg)
+    }
+
+    /// A penalty so large it overflows the coordinator's Lipschitz bound
+    /// must end in a structured `SolveError::Diverged` within the
+    /// watchdog window — never a silent full-budget run and never a panic
+    /// inside the projections.
+    #[test]
+    fn pathological_rho_returns_structured_diverged() {
+        let mut spec = SyntheticSpec::regression(20, 120, 2);
+        spec.sparsity_level = 0.8;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.rho_c = 1e308; // participants * rho_c overflows to inf
+        cfg.solver.max_iters = 400;
+        let mut cluster = build_cluster(&ds, &cfg, 2);
+        let err = solve(&mut cluster, 20, &cfg, Some(&ds), &SolveOptions::default()).unwrap_err();
+        let diverged = err
+            .downcast_ref::<SolveError>()
+            .unwrap_or_else(|| panic!("expected SolveError, got: {err:#}"));
+        let SolveError::Diverged {
+            round, restarts, ..
+        } = diverged;
+        assert!(
+            *round <= cfg.solver.watchdog_window,
+            "diverged at round {round}, after the watchdog window"
+        );
+        // no finite state was ever captured, so no restart was possible
+        assert_eq!(*restarts, 0);
+        assert!(err.to_string().contains("diverged"), "{err}");
+    }
+
+    /// Transient injected growth trips the watchdog once; the safeguarded
+    /// restart (rho/10, re-seed from the last finite state) lets the
+    /// solve continue, and the restart count lands in the result and in
+    /// every subsequent trace record.
+    #[test]
+    fn watchdog_restart_recovers_from_transient_growth() {
+        let (ds, mut cfg) = growth_problem();
+        cfg.solver.max_iters = 600;
+        let mut cluster = GrowingCluster {
+            inner: build_cluster(&ds, &cfg, 3),
+            grow_from: 1,
+            grow_until: 4, // rounds 1..=3 explode, then the fault clears
+            round: 0,
+        };
+        let res = solve(&mut cluster, 24, &cfg, Some(&ds), &SolveOptions::default()).unwrap();
+        assert_eq!(res.restarts, 1, "exactly one safeguarded restart");
+        assert!(res.iters > 4, "solve continued past the trip");
+        let last = res.trace.last().unwrap();
+        assert_eq!(last.restarts, 1, "trace records carry the restart count");
+        assert!(
+            res.trace.records.iter().any(|r| r.restarts == 0),
+            "pre-restart records show zero restarts"
+        );
+    }
+
+    /// Persistent growth exhausts the restart budget and ends in
+    /// `Diverged` carrying the number of restarts that were attempted.
+    #[test]
+    fn exhausted_restarts_end_in_structured_diverged() {
+        let (ds, mut cfg) = growth_problem();
+        cfg.solver.max_iters = 80;
+        cfg.solver.watchdog_restarts = 2;
+        let mut cluster = GrowingCluster {
+            inner: build_cluster(&ds, &cfg, 3),
+            grow_from: 1,
+            grow_until: usize::MAX, // the fault never clears
+            round: 0,
+        };
+        let err = solve(&mut cluster, 24, &cfg, Some(&ds), &SolveOptions::default()).unwrap_err();
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::Diverged {
+                restarts, round, ..
+            }) => {
+                assert_eq!(*restarts, 2, "both restarts were spent first");
+                assert!(*round < 40, "gave up at round {round}");
+            }
+            None => panic!("expected SolveError::Diverged, got: {err:#}"),
+        }
+    }
+
+    /// `solver.deadline_ms` cuts the solve at a round boundary: at least
+    /// one round always completes, the result carries the best-so-far
+    /// iterate (nonempty support, usable trace), and `timed_out` is set.
+    #[test]
+    fn deadline_returns_best_so_far_cleanly() {
+        let mut spec = SyntheticSpec::regression(20, 120, 2);
+        spec.sparsity_level = 0.8;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.tol_primal = 0.0; // never converges on tolerance
+        cfg.solver.max_iters = 2_000_000;
+        cfg.solver.deadline_ms = 1;
+        let mut cluster = build_cluster(&ds, &cfg, 2);
+        let res = solve(&mut cluster, 20, &cfg, Some(&ds), &SolveOptions::default()).unwrap();
+        assert!(res.timed_out, "deadline must trip");
+        assert!(!res.converged);
+        assert!(res.iters >= 1, "at least one round completes");
+        assert!(res.iters < 2_000_000, "deadline cut the budget");
+        assert_eq!(res.trace.iters(), res.iters);
+        assert!(!res.support.is_empty(), "best-so-far support is usable");
     }
 
     #[test]

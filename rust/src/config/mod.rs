@@ -110,6 +110,18 @@ pub struct SolverConfig {
     /// Outer iterations between checkpoint writes (>= 1 when
     /// `checkpoint` is set).
     pub checkpoint_every: usize,
+    /// Wall-clock budget in milliseconds; past it the solve stops cleanly
+    /// at the next round boundary and returns the best-so-far iterate
+    /// with `timed_out` set.  `0` (default) disables the deadline.
+    pub deadline_ms: u64,
+    /// Divergence-watchdog window: consecutive rounds of sustained
+    /// residual growth (or any non-finite residual) that trigger a
+    /// safeguarded restart.  `0` disables the watchdog.
+    pub watchdog_window: usize,
+    /// Safeguarded restarts (rescale rho_c/rho_b, re-seed from the last
+    /// finite state) the watchdog may attempt before the solve returns
+    /// `SolveError::Diverged`.
+    pub watchdog_restarts: usize,
 }
 
 impl Default for SolverConfig {
@@ -130,6 +142,9 @@ impl Default for SolverConfig {
             polish: true,
             checkpoint: String::new(),
             checkpoint_every: 1,
+            deadline_ms: 0,
+            watchdog_window: 25,
+            watchdog_restarts: 2,
         }
     }
 }
@@ -313,6 +328,11 @@ pub struct PlatformConfig {
     /// fewer replies fails instead of degrading further.  `0` accepts
     /// any non-empty quorum.
     pub quorum: u64,
+    /// Consecutive poisoned (non-finite / norm-blowup) replies after
+    /// which the reply guard banishes a node from the roster — a
+    /// structured death, eligible for `rejoin` on the socket transport.
+    /// `0` quarantines per round but never banishes.
+    pub quarantine_limit: u64,
 }
 
 impl PlatformConfig {
@@ -353,6 +373,7 @@ impl Default for PlatformConfig {
             connect_retries: 3,
             rejoin: false,
             quorum: 0,
+            quarantine_limit: 3,
         }
     }
 }
@@ -442,6 +463,9 @@ impl Config {
                                     .to_string()
                             }
                             "checkpoint_every" => cfg.solver.checkpoint_every = u()?,
+                            "deadline_ms" => cfg.solver.deadline_ms = u()? as u64,
+                            "watchdog_window" => cfg.solver.watchdog_window = u()?,
+                            "watchdog_restarts" => cfg.solver.watchdog_restarts = u()?,
                             other => anyhow::bail!("unknown solver key `{other}`"),
                         }
                     }
@@ -547,6 +571,12 @@ impl Config {
                                 cfg.platform.quorum = v.as_usize().ok_or_else(|| {
                                     anyhow::anyhow!("platform.quorum: int")
                                 })? as u64
+                            }
+                            "quarantine_limit" => {
+                                cfg.platform.quarantine_limit =
+                                    v.as_usize().ok_or_else(|| {
+                                        anyhow::anyhow!("platform.quarantine_limit: int")
+                                    })? as u64
                             }
                             other => anyhow::bail!("unknown platform key `{other}`"),
                         }
@@ -734,6 +764,9 @@ impl Config {
             ("zt_iters", Json::Num(s.zt_iters as f64)),
             ("polish", Json::Bool(s.polish)),
             ("checkpoint_every", Json::Num(s.checkpoint_every as f64)),
+            ("deadline_ms", Json::Num(s.deadline_ms as f64)),
+            ("watchdog_window", Json::Num(s.watchdog_window as f64)),
+            ("watchdog_restarts", Json::Num(s.watchdog_restarts as f64)),
         ];
         if !s.checkpoint.is_empty() {
             solver.push(("checkpoint", Json::Str(s.checkpoint.clone())));
@@ -759,6 +792,7 @@ impl Config {
             ("connect_retries", Json::Num(p.connect_retries as f64)),
             ("rejoin", Json::Bool(p.rejoin)),
             ("quorum", Json::Num(p.quorum as f64)),
+            ("quarantine_limit", Json::Num(p.quarantine_limit as f64)),
         ];
         if let Some(gbps) = p.pcie_gbps {
             platform.push(("pcie_gbps", Json::Num(gbps)));
@@ -1002,6 +1036,7 @@ mod tests {
         assert!(cfg.platform.rejoin);
         assert_eq!(cfg.platform.quorum, 2);
         assert!(!Config::default().platform.rejoin);
+        assert_eq!(Config::default().platform.quarantine_limit, 3);
         // defaults stay in-process with sane timeouts
         let d = Config::default();
         assert_eq!(d.platform.transport, TransportKind::Local);
@@ -1030,9 +1065,13 @@ mod tests {
         cfg.solver.polish = false;
         cfg.solver.checkpoint = "fit.psf".into();
         cfg.solver.checkpoint_every = 5;
+        cfg.solver.deadline_ms = 1500;
+        cfg.solver.watchdog_window = 12;
+        cfg.solver.watchdog_restarts = 1;
         cfg.platform.nodes = 3;
         cfg.platform.rejoin = true;
         cfg.platform.quorum = 2;
+        cfg.platform.quarantine_limit = 5;
         cfg.platform.threads = 2;
         cfg.platform.sparse = SparseMode::Always;
         cfg.platform.sparse_threshold = 0.5;
@@ -1062,6 +1101,25 @@ mod tests {
         let d = Config::default();
         let back = Config::from_json(&Json::parse(&d.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(format!("{:?}", back), format!("{:?}", d));
+    }
+
+    #[test]
+    fn guardrail_keys_roundtrip() {
+        let src = r#"{
+            "solver": {"deadline_ms": 2000, "watchdog_window": 8,
+                       "watchdog_restarts": 0},
+            "platform": {"quarantine_limit": 1}
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.solver.deadline_ms, 2000);
+        assert_eq!(cfg.solver.watchdog_window, 8);
+        assert_eq!(cfg.solver.watchdog_restarts, 0);
+        assert_eq!(cfg.platform.quarantine_limit, 1);
+        // defaults: no deadline, watchdog armed, three-strike quarantine
+        let d = Config::default();
+        assert_eq!(d.solver.deadline_ms, 0);
+        assert_eq!(d.solver.watchdog_window, 25);
+        assert_eq!(d.solver.watchdog_restarts, 2);
     }
 
     #[test]

@@ -124,10 +124,25 @@ pub fn load(path: &Path) -> anyhow::Result<Dataset> {
 
 /// Load a dense CSV (last column = label, others = features) as a
 /// single-shard regression/classification dataset.  No ground truth.
+///
+/// Rejects non-finite values (`nan`, `inf` — which `parse::<f32>`
+/// happily accepts) with a line-numbered error; see
+/// [`load_csv_sanitized`] to drop such rows instead.
 pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
+    load_csv_opts(path, false)
+}
+
+/// [`load_csv`] that drops rows containing non-finite values instead of
+/// erroring, reporting how many were dropped on stderr (`--sanitize`).
+pub fn load_csv_sanitized(path: &Path) -> anyhow::Result<Dataset> {
+    load_csv_opts(path, true)
+}
+
+fn load_csv_opts(path: &Path, sanitize: bool) -> anyhow::Result<Dataset> {
     let text = std::fs::read_to_string(path)?;
     let mut rows: Vec<Vec<f32>> = Vec::new();
     let mut labels = Vec::new();
+    let mut dropped = 0usize;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -142,8 +157,24 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
             })
             .collect::<anyhow::Result<_>>()?;
         anyhow::ensure!(cells.len() >= 2, "line {}: need >= 2 columns", lineno + 1);
+        if let Some(col) = cells.iter().position(|v| !v.is_finite()) {
+            if sanitize {
+                dropped += 1;
+                continue;
+            }
+            anyhow::bail!(
+                "line {}: non-finite value `{}` in column {} \
+                 (use --sanitize to drop such rows)",
+                lineno + 1,
+                cells[col],
+                col + 1
+            );
+        }
         labels.push(*cells.last().unwrap());
         rows.push(cells[..cells.len() - 1].to_vec());
+    }
+    if dropped > 0 {
+        eprintln!("[sanitize] dropped {dropped} csv row(s) with non-finite values");
     }
     anyhow::ensure!(!rows.is_empty(), "empty csv");
     let n = rows[0].len();
@@ -183,12 +214,28 @@ pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
 /// assert_eq!(spread.nodes(), 2);
 /// ```
 pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dataset> {
+    load_libsvm_opts(path, n_features, false)
+}
+
+/// [`load_libsvm`] that drops rows containing non-finite labels or
+/// values instead of erroring, reporting how many were dropped on stderr
+/// (`--sanitize`).
+pub fn load_libsvm_sanitized(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dataset> {
+    load_libsvm_opts(path, n_features, true)
+}
+
+fn load_libsvm_opts(
+    path: &Path,
+    n_features: Option<usize>,
+    sanitize: bool,
+) -> anyhow::Result<Dataset> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
     let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
     let mut labels: Vec<f32> = Vec::new();
     let mut max_col = 0usize;
-    for (lineno, raw) in text.lines().enumerate() {
+    let mut dropped = 0usize;
+    'lines: for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
@@ -199,6 +246,17 @@ pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dat
             .unwrap()
             .parse()
             .map_err(|_| anyhow::anyhow!("line {}: bad label", lineno + 1))?;
+        if !label.is_finite() {
+            if sanitize {
+                dropped += 1;
+                continue;
+            }
+            anyhow::bail!(
+                "line {}: non-finite label `{label}` \
+                 (use --sanitize to drop such rows)",
+                lineno + 1
+            );
+        }
         let mut entries: Vec<(u32, f32)> = Vec::new();
         for tok in parts {
             if tok.starts_with("qid:") {
@@ -219,6 +277,17 @@ pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dat
             let val: f32 = val
                 .parse()
                 .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?;
+            if !val.is_finite() {
+                if sanitize {
+                    dropped += 1;
+                    continue 'lines;
+                }
+                anyhow::bail!(
+                    "line {}: non-finite value `{val}` at index {idx} \
+                     (use --sanitize to drop such rows)",
+                    lineno + 1
+                );
+            }
             let col = idx - 1;
             if let Some(&(prev, _)) = entries.last() {
                 anyhow::ensure!(
@@ -227,11 +296,18 @@ pub fn load_libsvm(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dat
                     lineno + 1
                 );
             }
-            max_col = max_col.max(col + 1);
             entries.push((col as u32, val));
+        }
+        // column span committed only for rows that survive, so a dropped
+        // row never widens the feature space
+        if let Some(&(last, _)) = entries.last() {
+            max_col = max_col.max(last as usize + 1);
         }
         labels.push(label);
         rows.push(entries);
+    }
+    if dropped > 0 {
+        eprintln!("[sanitize] dropped {dropped} libsvm row(s) with non-finite values");
     }
     anyhow::ensure!(!rows.is_empty(), "empty libsvm file");
     let n = match n_features {
@@ -398,6 +474,49 @@ mod tests {
             std::fs::write(&path, bad).unwrap();
             assert!(load_libsvm(&path, None).is_err(), "accepted: {bad:?}");
         }
+    }
+
+    #[test]
+    fn loaders_reject_non_finite_values_with_line_numbers() {
+        let path = std::env::temp_dir().join("psfit_io_nonfinite.csv");
+        std::fs::write(&path, "1.0, 2.0, 3.5\n4.0, nan, -1.5\n").unwrap();
+        let err = load_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("non-finite"), "{err}");
+        assert!(err.contains("column 2"), "{err}");
+        std::fs::write(&path, "1.0, 2.0, inf\n").unwrap();
+        assert!(load_csv(&path).is_err(), "inf label accepted");
+
+        let path = std::env::temp_dir().join("psfit_io_nonfinite.svm");
+        std::fs::write(&path, "1 1:0.5\n-1 2:nan\n").unwrap();
+        let err = load_libsvm(&path, None).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("non-finite"), "{err}");
+        std::fs::write(&path, "inf 1:0.5\n").unwrap();
+        let err = load_libsvm(&path, None).unwrap_err().to_string();
+        assert!(err.contains("non-finite label"), "{err}");
+    }
+
+    #[test]
+    fn sanitized_loaders_drop_poisoned_rows() {
+        let path = std::env::temp_dir().join("psfit_io_sanitize.csv");
+        std::fs::write(&path, "1.0, 2.0, 3.5\n4.0, nan, -1.5\n5.0, 6.0, 0.5\n").unwrap();
+        let ds = load_csv_sanitized(&path).unwrap();
+        assert_eq!(ds.total_samples(), 2);
+        assert_eq!(ds.shards[0].labels, vec![3.5, 0.5]);
+
+        let path = std::env::temp_dir().join("psfit_io_sanitize.svm");
+        // the widest row is the poisoned one: dropping it must also drop
+        // its column span
+        std::fs::write(&path, "1 1:0.5 7:inf\n-1 2:1.5\nnan 3:1.0\n1 3:2.0\n").unwrap();
+        let ds = load_libsvm_sanitized(&path, None).unwrap();
+        assert_eq!(ds.total_samples(), 2);
+        assert_eq!(ds.shards[0].labels, vec![-1.0, 1.0]);
+        assert_eq!(ds.n_features, 3, "dropped row widened the feature space");
+
+        // an all-poisoned file still errors (nothing left to fit)
+        std::fs::write(&path, "nan 1:1.0\n").unwrap();
+        assert!(load_libsvm_sanitized(&path, None).is_err());
     }
 
     #[test]

@@ -20,6 +20,8 @@
 
 /// Deterministic fault-injection harness (`psfit chaos`).
 pub mod chaos;
+/// Deterministic numerical-poison harness (`psfit chaos --numerics`).
+pub mod numerics;
 /// Figure 1: residual convergence vs rho_b.
 pub mod fig1;
 /// Figure 4: CPU<->GPU transfer time.
@@ -41,6 +43,7 @@ pub mod transport;
 
 pub use chaos::chaos;
 pub use fig1::fig1;
+pub use numerics::numerics;
 pub use fig4::fig4;
 pub use kernels::kernels;
 pub use path::path_bench;

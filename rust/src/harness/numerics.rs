@@ -1,0 +1,436 @@
+//! `psfit chaos --numerics` — deterministic *numerical* fault injection.
+//!
+//! Where the wire-chaos harness damages frames, this one damages the
+//! math: a [`PoisonCluster`] wraps any transport and, on a pure seeded
+//! per-`(node, round)` schedule, overwrites one entry of a node's reply
+//! with `NaN`, `Inf`, or a `1e300` blowup *after* the transport delivers
+//! it — exactly the poison a faulting accelerator or a corrupted
+//! reduction would hand the coordinator.  The harness fits one clean
+//! reference problem, repeats it twice under the identical poison
+//! schedule (the printed fingerprint proves it), and asserts:
+//!
+//!   * every injected poison was quarantined by the reply guard before
+//!     folding (`quarantined == injected`, checked per run);
+//!   * no non-finite value ever reached `GlobalState` — the wrapper
+//!     rejects any broadcast `z` with a non-finite entry, so a guard
+//!     leak fails the run loudly instead of silently corrupting it;
+//!   * every poisoned run that converges recovers **exactly** the clean
+//!     run's support.
+
+use crate::backend::BlockParams;
+use crate::config::Config;
+use crate::data::SyntheticSpec;
+use crate::driver;
+use crate::metrics::{CoordinationStats, TransferLedger};
+use crate::network::socket::wire::fnv1a;
+use crate::network::{Cluster, NodeReply, WarmState};
+use crate::util::rng::Rng;
+
+/// A seeded poison schedule: per-(node, round) probabilities of each
+/// poison kind, mutually exclusive (a reply suffers at most one), so
+/// they must sum to at most `1.0`.  Parsed from the compact form `psfit
+/// chaos --numerics --faults` accepts, e.g. `"nan=0.02,inf=0.02,huge=0.05"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoisonSpec {
+    /// Probability a reply gets one entry overwritten with `NaN`.
+    pub nan: f64,
+    /// Probability a reply gets one entry overwritten with `+Inf`.
+    pub inf: f64,
+    /// Probability a reply gets one entry overwritten with `1e300` — a
+    /// finite norm blowup, the kind only the guard's cap can catch.
+    pub huge: f64,
+    /// Schedule seed: same seed, same poisons, every run.
+    pub seed: u64,
+}
+
+impl Default for PoisonSpec {
+    fn default() -> Self {
+        PoisonSpec {
+            nan: 0.0,
+            inf: 0.0,
+            huge: 0.0,
+            seed: 0xBADF1A,
+        }
+    }
+}
+
+/// One reply's fate under a [`PoisonSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Poison {
+    /// Deliver untouched.
+    Clean,
+    /// Overwrite one entry with `NaN`.
+    Nan,
+    /// Overwrite one entry with `+Inf`.
+    Inf,
+    /// Overwrite one entry with `1e300`.
+    Huge,
+}
+
+impl Poison {
+    /// The value this poison plants, if any.
+    pub fn value(self) -> Option<f64> {
+        match self {
+            Poison::Clean => None,
+            Poison::Nan => Some(f64::NAN),
+            Poison::Inf => Some(f64::INFINITY),
+            Poison::Huge => Some(1e300),
+        }
+    }
+}
+
+impl PoisonSpec {
+    /// Parse the compact `key=value,...` form.  Keys: `nan`, `inf`,
+    /// `huge`, `seed`.  Empty input is the all-quiet spec.
+    pub fn parse(s: &str) -> anyhow::Result<PoisonSpec> {
+        let mut spec = PoisonSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("poison spec `{part}` is not key=value"))?;
+            let prob = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("poison spec `{key}`: `{v}` is not a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "poison spec `{key}`: probability {p} outside [0, 1]"
+                );
+                Ok(p)
+            };
+            match key {
+                "nan" => spec.nan = prob(value)?,
+                "inf" => spec.inf = prob(value)?,
+                "huge" => spec.huge = prob(value)?,
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("poison spec `seed`: `{value}` is not a u64"))?
+                }
+                other => anyhow::bail!("unknown poison spec key `{other}`"),
+            }
+        }
+        let total = spec.nan + spec.inf + spec.huge;
+        anyhow::ensure!(
+            total <= 1.0 + 1e-12,
+            "poison probabilities sum to {total}, which exceeds 1"
+        );
+        Ok(spec)
+    }
+
+    /// The poison (if any) node `node`'s reply suffers in round `round`.
+    /// Pure in its arguments — this *is* the poison schedule.
+    pub fn fault_for(&self, node: u64, round: u64) -> Poison {
+        let mut key = [0u8; 24];
+        key[..8].copy_from_slice(&self.seed.to_le_bytes());
+        key[8..16].copy_from_slice(&node.to_le_bytes());
+        key[16..].copy_from_slice(&round.to_le_bytes());
+        let mut rng = Rng::seed_from(fnv1a(&key));
+        let draw = rng.uniform();
+        let mut edge = self.nan;
+        if draw < edge {
+            return Poison::Nan;
+        }
+        edge += self.inf;
+        if draw < edge {
+            return Poison::Inf;
+        }
+        edge += self.huge;
+        if draw < edge {
+            return Poison::Huge;
+        }
+        Poison::Clean
+    }
+
+    /// FNV-1a digest of the schedule's first `rounds` decisions for every
+    /// node — the value `psfit chaos --numerics` prints so two runs can
+    /// prove they faced the same schedule.
+    pub fn schedule_fingerprint(&self, nodes: u64, rounds: u64) -> u64 {
+        let mut codes = Vec::with_capacity((nodes * rounds) as usize);
+        for node in 0..nodes {
+            for round in 0..rounds {
+                codes.push(match self.fault_for(node, round) {
+                    Poison::Clean => 0u8,
+                    Poison::Nan => 1,
+                    Poison::Inf => 2,
+                    Poison::Huge => 3,
+                });
+            }
+        }
+        fnv1a(&codes)
+    }
+}
+
+impl std::fmt::Display for PoisonSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "nan={},inf={},huge={},seed={}",
+            self.nan, self.inf, self.huge, self.seed
+        )
+    }
+}
+
+/// A [`Cluster`] adapter that poisons replies on a [`PoisonSpec`]
+/// schedule and enforces the solver's cardinal numerical invariant: no
+/// broadcast `z` may ever carry a non-finite entry.  If the reply guard
+/// leaks a poisoned reply into the fold, the next `round()` here fails
+/// the run with a structured error instead of letting NaN propagate.
+pub struct PoisonCluster {
+    inner: Box<dyn Cluster>,
+    spec: PoisonSpec,
+    round_no: u64,
+    injected: u64,
+}
+
+impl PoisonCluster {
+    /// Wrap `inner`, poisoning its replies per `spec`.
+    pub fn new(inner: Box<dyn Cluster>, spec: PoisonSpec) -> PoisonCluster {
+        PoisonCluster {
+            inner,
+            spec,
+            round_no: 0,
+            injected: 0,
+        }
+    }
+
+    /// Poisons injected so far (one reply entry each).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+impl Cluster for PoisonCluster {
+    fn nodes(&self) -> usize {
+        self.inner.nodes()
+    }
+
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+        anyhow::ensure!(
+            z.iter().all(|v| v.is_finite()),
+            "round {}: broadcast z carries a non-finite entry — the reply \
+             guard leaked poison into GlobalState",
+            self.round_no
+        );
+        let mut replies = self.inner.round(z)?;
+        for reply in &mut replies {
+            if let Some(v) = self.spec.fault_for(reply.node as u64, self.round_no).value() {
+                let n = reply.x.len();
+                if n > 0 {
+                    reply.x[self.round_no as usize % n] = v;
+                    self.injected += 1;
+                }
+            }
+        }
+        self.round_no += 1;
+        Ok(replies)
+    }
+
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        self.inner.loss_value()
+    }
+
+    fn ledger(&mut self) -> TransferLedger {
+        self.inner.ledger()
+    }
+
+    fn recycle(&mut self, replies: Vec<NodeReply>) {
+        self.inner.recycle(replies)
+    }
+
+    fn coordination(&self) -> Option<CoordinationStats> {
+        self.inner.coordination()
+    }
+
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        self.inner.export_warm()
+    }
+
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        self.inner.reseed(states, params)
+    }
+
+    fn banish(&mut self, node: usize, why: &str) {
+        self.inner.banish(node, why)
+    }
+}
+
+/// Settings for `psfit chaos --numerics`.
+#[derive(Debug, Clone)]
+pub struct NumericsOpts {
+    /// Smaller problem and iteration budget (CI smoke).
+    pub quick: bool,
+    /// Poison-schedule seed; overrides the spec default (and any `seed=`
+    /// inside `--faults`) when set to a non-default value.
+    pub seed: u64,
+    /// Compact poison spec (`nan=0.02,inf=0.02,huge=0.05`); `None` uses
+    /// a mild mixed schedule that exercises every poison kind.
+    pub faults: Option<String>,
+    /// Node count (in-process threaded cluster).
+    pub nodes: usize,
+}
+
+/// The mild default schedule: a tenth of replies arrive poisoned, split
+/// across all three kinds so the guard's non-finite path *and* its norm
+/// cap both fire — frequent enough that quarantines land every run,
+/// rare enough that consensus re-equilibrates between them.
+const DEFAULT_FAULTS: &str = "nan=0.02,inf=0.02,huge=0.05";
+
+/// Run the harness; errors mean a guard leak or a parity violation (or a
+/// setup failure), so CI can gate on the exit code.
+pub fn numerics(opts: &NumericsOpts) -> anyhow::Result<()> {
+    anyhow::ensure!(opts.nodes >= 1, "psfit chaos --numerics needs at least one node");
+    let mut spec = PoisonSpec::parse(opts.faults.as_deref().unwrap_or(DEFAULT_FAULTS))?;
+    if opts.seed != PoisonSpec::default().seed {
+        spec.seed = opts.seed;
+    }
+
+    let (n, m, iters) = if opts.quick {
+        (40usize, 400usize, 800usize)
+    } else {
+        (64, 600, 1000)
+    };
+    // same well-conditioned recovery instance as the wire-chaos harness:
+    // this harness judges the guard, not solver difficulty
+    let mut sspec = SyntheticSpec::regression(n, m, opts.nodes);
+    sspec.sparsity_level = 0.9;
+    sspec.noise_std = 0.05;
+    let ds = sspec.generate();
+
+    let mut cfg = Config::default();
+    cfg.platform.nodes = opts.nodes;
+    // never banish: the poison schedule is i.i.d. per round, so a node
+    // that drew three strikes in a row is not actually broken — keep the
+    // roster intact so converged runs stay comparable to the clean one
+    // (escalation is covered by the guard's own tests and tests/heal.rs)
+    cfg.platform.quarantine_limit = 0;
+    cfg.solver.kappa = sspec.kappa();
+    cfg.solver.rho_c = 1.0;
+    cfg.solver.rho_b = 0.5;
+    cfg.solver.max_iters = iters;
+    cfg.solver.tol_primal = 1e-2;
+    cfg.solver.tol_dual = 1e-2;
+    cfg.solver.tol_bilinear = 1e-1;
+
+    let fingerprint = spec.schedule_fingerprint(opts.nodes as u64, iters as u64);
+    println!("poison spec: {spec}");
+    println!("fingerprint: {fingerprint:#018x} (same seed => same schedule, every run)");
+
+    // ---- clean reference run -------------------------------------------
+    let clean = driver::fit(&ds, &cfg)?;
+    anyhow::ensure!(
+        clean.converged,
+        "the clean run did not converge in {iters} iterations; the numerics \
+         parity check needs a converged reference"
+    );
+    println!(
+        "clean run:   converged in {} iters, support {:?}",
+        clean.iters, &clean.support
+    );
+
+    // ---- poisoned runs --------------------------------------------------
+    let dim = ds.n_features * ds.width;
+    let mut converged_runs = 0usize;
+    for run in 1..=2u32 {
+        // a fresh wrapper per run: the round counter restarts at 0, so
+        // this run faces the identical poison schedule as the last one
+        let inner = driver::build_transport_cluster(&ds, &cfg, true)?;
+        let mut cluster = PoisonCluster::new(inner, spec.clone());
+        let outcome = crate::admm::solve(
+            &mut cluster,
+            dim,
+            &cfg,
+            Some(&ds),
+            &crate::admm::SolveOptions::default(),
+        );
+        match outcome {
+            Ok(res) => {
+                let injected = cluster.injected();
+                let quarantined = res
+                    .coordination
+                    .as_ref()
+                    .map(|c| c.quarantined)
+                    .unwrap_or(0);
+                println!(
+                    "numerics run {run}: converged={} iters={} poisons_injected={injected} quarantined={quarantined}",
+                    res.converged, res.iters
+                );
+                anyhow::ensure!(
+                    quarantined == injected,
+                    "numerics run {run}: injected {injected} poison(s) but the \
+                     guard quarantined {quarantined} — a poisoned reply reached \
+                     the fold"
+                );
+                if res.converged {
+                    converged_runs += 1;
+                    anyhow::ensure!(
+                        res.support == clean.support,
+                        "numerics run {run} converged to support {:?}, clean run \
+                         recovered {:?} — poison injection changed the answer",
+                        res.support,
+                        clean.support
+                    );
+                    println!("             support parity with the clean run: OK");
+                } else {
+                    println!("             did not converge under poison; parity not checked");
+                }
+            }
+            Err(e) => {
+                // a watchdog trip is a legitimate outcome of a schedule
+                // hostile enough to starve whole rounds
+                println!("numerics run {run}: failed cleanly ({e:#})");
+            }
+        }
+    }
+    anyhow::ensure!(
+        converged_runs > 0,
+        "no poisoned run converged — the schedule is too hostile for a \
+         meaningful parity check (try a tamer --faults)"
+    );
+    println!("numerics: {converged_runs}/2 poisoned run(s) converged with support parity");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poison_schedule_is_pure_and_parses_round_trip() {
+        let spec = PoisonSpec::parse("nan=0.1,inf=0.2,huge=0.3,seed=7").unwrap();
+        assert_eq!(spec, PoisonSpec::parse(&spec.to_string()).unwrap());
+        for node in 0..4u64 {
+            for round in 0..32u64 {
+                assert_eq!(spec.fault_for(node, round), spec.fault_for(node, round));
+            }
+        }
+        assert_eq!(
+            spec.schedule_fingerprint(4, 32),
+            spec.schedule_fingerprint(4, 32)
+        );
+        // a different seed must move the fingerprint
+        let other = PoisonSpec {
+            seed: 8,
+            ..spec.clone()
+        };
+        assert_ne!(
+            spec.schedule_fingerprint(4, 32),
+            other.schedule_fingerprint(4, 32)
+        );
+        assert!(PoisonSpec::parse("nan=0.6,inf=0.6").is_err());
+        assert!(PoisonSpec::parse("gamma=0.1").is_err());
+    }
+
+    /// The CI smoke path end-to-end, on a tiny problem: same seed, same
+    /// schedule, every poison quarantined, parity against the clean run.
+    #[test]
+    fn quick_numerics_run_passes_parity() {
+        let opts = NumericsOpts {
+            quick: true,
+            seed: PoisonSpec::default().seed,
+            faults: Some(DEFAULT_FAULTS.to_string()),
+            nodes: 2,
+        };
+        numerics(&opts).unwrap();
+    }
+}

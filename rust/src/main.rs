@@ -22,7 +22,9 @@
 //!             (--reconnect re-binds a dead listener instead of exiting)
 //!   chaos   — deterministic fault-injection harness: runs socket fits
 //!             through a seeded chaos proxy and checks support parity
-//!             against a clean run
+//!             against a clean run.  With --numerics: poisons reply
+//!             vectors with NaN/Inf/1e300 on a seeded schedule and
+//!             asserts the reply guard quarantines every one
 //!   serve   — multi-tenant fit/predict daemon over a worker fleet
 //!   submit / predict / jobs — client commands against `psfit serve`
 //!   info    — print artifact manifest + platform info
@@ -69,6 +71,17 @@ fn run() -> anyhow::Result<()> {
             run_worker(&opts)
         }
         Some("chaos") => {
+            if args.flag("numerics") {
+                // numerical poison harness: NaN/Inf/1e300 in reply vectors
+                let opts = harness::numerics::NumericsOpts {
+                    quick: args.flag("quick"),
+                    seed: args.get("seed", 0xBADF1A)?,
+                    faults: args.opt("faults").map(String::from),
+                    nodes: args.get("nodes", 3)?,
+                };
+                args.reject_unknown()?;
+                return harness::numerics(&opts);
+            }
             let opts = harness::chaos::ChaosOpts {
                 quick: args.flag("quick"),
                 seed: args.get("seed", 0xC4A05)?,
@@ -237,6 +250,9 @@ fn run() -> anyhow::Result<()> {
             eprintln!("        psfit train --transport socket --workers host1:7777,host2:7777");
             eprintln!("        psfit train --transport socket --rejoin --min-workers 2 --checkpoint fit.psf");
             eprintln!("        psfit chaos --quick                 (seeded fault-injection harness)");
+            eprintln!("        psfit chaos --numerics --quick      (seeded NaN/Inf poison harness)");
+            eprintln!("        psfit train --deadline 5000         (abort cleanly after 5 s, best-so-far)");
+            eprintln!("        psfit train --libsvm data.svm --sanitize    (drop non-finite rows)");
             eprintln!("        psfit serve --local-fleet 2         (fit/predict daemon)");
             eprintln!("        psfit submit --n 200 --m 1600 --wait && psfit predict --job 1 --features 3:0.5");
             Ok(())
@@ -300,6 +316,7 @@ fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<S
     cfg.solver.rho_l = args.get("rho-l", cfg.solver.rho_l)?;
     cfg.solver.max_iters = args.get("iters", cfg.solver.max_iters)?;
     cfg.solver.inner_iters = args.get("inner-iters", cfg.solver.inner_iters)?;
+    cfg.solver.deadline_ms = args.get("deadline", cfg.solver.deadline_ms)?;
     if let Some(coord) = args.opt("coordination") {
         cfg.coordinator.coordination = CoordinationKind::parse(coord)?;
     }
@@ -327,6 +344,7 @@ fn build_dataset(
     cfg: &mut Config,
     spec: &SyntheticSpec,
     libsvm: Option<&str>,
+    sanitize: bool,
 ) -> anyhow::Result<Dataset> {
     match libsvm {
         Some(path) => {
@@ -334,7 +352,12 @@ fn build_dataset(
                 cfg.loss != LossKind::Softmax,
                 "--libsvm files are scalar-label (use squared/logistic/hinge)"
             );
-            let mut ds = psfit::data::io::load_libsvm(std::path::Path::new(path), None)?;
+            let path_ref = std::path::Path::new(path);
+            let mut ds = if sanitize {
+                psfit::data::io::load_libsvm_sanitized(path_ref, None)?
+            } else {
+                psfit::data::io::load_libsvm(path_ref, None)?
+            };
             // the file loads as one shard; honor --nodes by re-splitting
             // its rows across the requested cluster
             let nodes = cfg.platform.nodes;
@@ -368,9 +391,10 @@ fn train(args: &Args) -> anyhow::Result<()> {
     cfg.solver.checkpoint_every = args.get("checkpoint-every", cfg.solver.checkpoint_every)?;
     let trace_out = args.opt("trace").map(String::from);
     let model_out = args.opt("model-out").map(String::from);
+    let sanitize = args.flag("sanitize");
     args.reject_unknown()?;
 
-    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref())?;
+    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref(), sanitize)?;
     if libsvm.is_some() {
         cfg.solver.kappa = cfg.solver.kappa.min(ds.n_features * ds.width).max(1);
     }
@@ -395,6 +419,18 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let res = &run.result;
 
     println!("converged:   {} in {} iterations", res.converged, res.iters);
+    if res.timed_out {
+        println!(
+            "deadline:    solver.deadline_ms = {} hit; result is the best-so-far iterate",
+            cfg.solver.deadline_ms
+        );
+    }
+    if res.restarts > 0 {
+        println!(
+            "watchdog:    {} safeguarded restart(s) performed during the solve",
+            res.restarts
+        );
+    }
     println!("setup:       {:.3} s", run.setup_seconds);
     println!("solve:       {:.3} s", run.solve_seconds);
     if let Some(rec) = res.trace.last() {
@@ -594,6 +630,7 @@ fn path_cmd(args: &Args) -> anyhow::Result<()> {
         cfg.path.checkpoint = Some(ck.to_string());
     }
     let out = args.opt("out").map(String::from);
+    let sanitize = args.flag("sanitize");
     args.reject_unknown()?;
     anyhow::ensure!(
         !cfg.path.budgets.is_empty(),
@@ -601,7 +638,7 @@ fn path_cmd(args: &Args) -> anyhow::Result<()> {
     );
     cfg.path.validate()?;
 
-    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref())?;
+    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref(), sanitize)?;
     eprintln!(
         "sparsity path over {} (n={}, m={}, N={}): {} budget(s) x {} rho rung(s), {}, {} solver",
         loss_name(cfg.loss),

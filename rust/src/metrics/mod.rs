@@ -143,6 +143,9 @@ pub struct IterRecord {
     /// largest staleness (in rounds) among the folded replies (0 under
     /// synchronous coordination)
     pub max_lag: usize,
+    /// cumulative safeguarded watchdog restarts performed before this
+    /// iteration (0 for a run the divergence watchdog never touched)
+    pub restarts: usize,
 }
 
 /// Full convergence trace of one solve.
@@ -168,14 +171,16 @@ impl Trace {
         self.records.last()
     }
 
-    /// CSV with header: iter,primal,dual,bilinear,wall,participants,max_lag
+    /// CSV with header:
+    /// iter,primal,dual,bilinear,wall,participants,max_lag,restarts
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("iter,primal,dual,bilinear,wall,participants,max_lag\n");
+        let mut out =
+            String::from("iter,primal,dual,bilinear,wall,participants,max_lag,restarts\n");
         for r in &self.records {
             let _ = writeln!(
                 out,
-                "{},{:.6e},{:.6e},{:.6e},{:.6e},{},{}",
-                r.iter, r.primal, r.dual, r.bilinear, r.wall, r.participants, r.max_lag
+                "{},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{}",
+                r.iter, r.primal, r.dual, r.bilinear, r.wall, r.participants, r.max_lag, r.restarts
             );
         }
         out
@@ -207,6 +212,10 @@ pub struct CoordinationStats {
     /// Dead peers re-admitted mid-solve after a successful reconnect +
     /// warm-state resync (socket transport's self-healing path).
     pub rejoins: u64,
+    /// Replies rejected by the numerical guard (non-finite values or a
+    /// norm blowup) before folding; the node sat that round out exactly
+    /// like a degraded peer.
+    pub quarantined: u64,
 }
 
 impl CoordinationStats {
@@ -242,7 +251,7 @@ impl CoordinationStats {
     /// One-line human summary for the CLI and harness logs.
     pub fn summary(&self) -> String {
         format!(
-            "rounds {} | staleness hist {:?} | participation {:?} | drops {} resyncs {} deaths {} joins {} rejoins {}",
+            "rounds {} | staleness hist {:?} | participation {:?} | drops {} resyncs {} deaths {} joins {} rejoins {} quarantined {}",
             self.rounds,
             self.staleness_hist,
             self.participation,
@@ -250,7 +259,8 @@ impl CoordinationStats {
             self.resyncs,
             self.deaths,
             self.joins,
-            self.rejoins
+            self.rejoins,
+            self.quarantined
         )
     }
 }
@@ -364,11 +374,12 @@ mod tests {
             wall: 0.1,
             participants: 4,
             max_lag: 1,
+            restarts: 2,
         });
         let csv = t.to_csv();
-        assert!(csv.starts_with("iter,primal,dual,bilinear,wall,participants,max_lag\n"));
+        assert!(csv.starts_with("iter,primal,dual,bilinear,wall,participants,max_lag,restarts\n"));
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.lines().nth(1).unwrap().ends_with(",4,1"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",4,1,2"));
     }
 
     #[test]
@@ -386,6 +397,8 @@ mod tests {
         assert!(s.summary().contains("drops 0"));
         s.rejoins = 1;
         assert!(s.summary().contains("rejoins 1"));
+        s.quarantined = 3;
+        assert!(s.summary().contains("quarantined 3"));
     }
 
     #[test]

@@ -209,6 +209,15 @@ pub trait Cluster {
         let _ = (states, params);
         anyhow::bail!("this transport does not support warm re-seeding")
     }
+    /// Expel `node` from the roster as a structured death — the reply
+    /// guard's escalation for repeat numerical offenders.  The threaded
+    /// cluster severs the node's channel; the socket cluster kills the
+    /// peer (making it eligible for rejoin/resync); the sequential
+    /// cluster has no kill mechanism, so the default is a no-op and the
+    /// guard keeps excluding the node round by round instead.
+    fn banish(&mut self, node: usize, why: &str) {
+        let _ = (node, why);
+    }
 }
 
 /// Refill a broadcast payload in place when the slot holds the only
@@ -631,6 +640,11 @@ impl Cluster for ThreadedCluster {
         }
         anyhow::ensure!(got > 0, "re-seed: no node replied");
         Ok(())
+    }
+
+    fn banish(&mut self, node: usize, why: &str) {
+        eprintln!("[threaded] node {node} banished: {why}");
+        self.kill_node(node);
     }
 }
 

@@ -562,6 +562,15 @@ impl Cluster for SocketCluster {
         Some(self.stats.clone())
     }
 
+    fn banish(&mut self, node: usize, why: &str) {
+        // a structured death like any other peer loss: the slot degrades,
+        // and with self-healing on the worker may rejoin (fresh state,
+        // clean duals) once its rejoin probe answers
+        if node < self.peers.len() {
+            self.kill(node, why);
+        }
+    }
+
     fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
         let mut states = Vec::new();
         for i in 0..self.peers.len() {

@@ -59,7 +59,7 @@ const MAGIC: &[u8; 4] = b"PSC1";
 const VERSION: u32 = 1;
 
 const FIT_MAGIC: &[u8; 4] = b"PSF1";
-const FIT_VERSION: u32 = 1;
+const FIT_VERSION: u32 = 2;
 
 /// Everything a resumed sweep needs: the records of completed points and
 /// the warm state to seed the next one.
@@ -490,6 +490,7 @@ pub fn save_fit(path: &Path, ck: &FitCheckpoint) -> anyhow::Result<()> {
             w_f64(&mut w, r.wall)?;
             w_u32(&mut w, r.participants as u32)?;
             w_u32(&mut w, r.max_lag as u32)?;
+            w_u32(&mut w, r.restarts as u32)?;
         }
         w_state(&mut w, &ck.state)?;
         w.flush()?;
@@ -517,8 +518,8 @@ pub fn load_fit(path: &Path) -> anyhow::Result<FitCheckpoint> {
     );
     let problem_hash = r_u64(&mut r)?;
     let iters_done = r_u64(&mut r)?;
-    // an iteration record is 44 bytes on disk
-    let n_recs = bounded(r_u32(&mut r)? as usize, 44, file_len, "iteration record")?;
+    // an iteration record is 48 bytes on disk
+    let n_recs = bounded(r_u32(&mut r)? as usize, 48, file_len, "iteration record")?;
     let mut trace = Vec::with_capacity(n_recs);
     for _ in 0..n_recs {
         trace.push(IterRecord {
@@ -529,6 +530,7 @@ pub fn load_fit(path: &Path) -> anyhow::Result<FitCheckpoint> {
             wall: r_f64(&mut r)?,
             participants: r_u32(&mut r)? as usize,
             max_lag: r_u32(&mut r)? as usize,
+            restarts: r_u32(&mut r)? as usize,
         });
     }
     let state = r_state(&mut r, file_len)?;
@@ -639,6 +641,7 @@ mod tests {
                     wall: 0.25,
                     participants: 4,
                     max_lag: 0,
+                    restarts: 0,
                 },
                 IterRecord {
                     iter: 16,
@@ -648,6 +651,7 @@ mod tests {
                     wall: 1.125,
                     participants: 3,
                     max_lag: 2,
+                    restarts: 1,
                 },
             ],
             state: sample_checkpoint().state.unwrap(),

@@ -67,14 +67,16 @@ impl ServeClient {
         }
     }
 
-    /// Poll until the job finishes (done or failed) or `timeout` elapses.
-    /// A failed job is an error carrying the daemon's failure message.
+    /// Poll until the job finishes (done, timed out, or failed) or
+    /// `timeout` elapses.  A timed-out job is a terminal *success* here —
+    /// its best-so-far model is queryable; check the returned phase.  A
+    /// failed job is an error carrying the daemon's failure message.
     pub fn wait(&mut self, job: u64, timeout: Duration) -> anyhow::Result<JobStatus> {
         let deadline = Instant::now() + timeout;
         loop {
             let st = self.status(job)?;
             match JobPhase::from_code(st.phase)? {
-                JobPhase::Done => return Ok(st),
+                JobPhase::Done | JobPhase::TimedOut => return Ok(st),
                 JobPhase::Failed => {
                     anyhow::bail!("job {job} failed: {}", st.message)
                 }
@@ -91,8 +93,17 @@ impl ServeClient {
     }
 
     /// Score a sparse feature vector against a finished job's model;
-    /// returns one value per class.
+    /// returns one value per class.  Non-finite feature values are
+    /// rejected client-side — a NaN query would otherwise come back as a
+    /// NaN score with no hint of which input caused it.
     pub fn predict(&mut self, job: u64, features: &[(u32, f64)]) -> anyhow::Result<Vec<f64>> {
+        for &(idx, v) in features {
+            anyhow::ensure!(
+                v.is_finite(),
+                "predict: non-finite value {v} for feature {idx}; \
+                 queries must be finite"
+            );
+        }
         let cmd = WireCommand::Predict {
             job,
             features: features.to_vec(),

@@ -46,6 +46,10 @@ pub enum JobPhase {
     Done,
     /// Fit failed; see the status message.
     Failed,
+    /// `solver.deadline_ms` cut the fit off at a round boundary; the
+    /// best-so-far model and objective are available, like `Done`, but
+    /// the result is flagged as partial rather than converged.
+    TimedOut,
 }
 
 impl JobPhase {
@@ -56,6 +60,7 @@ impl JobPhase {
             JobPhase::Running => 1,
             JobPhase::Done => 2,
             JobPhase::Failed => 3,
+            JobPhase::TimedOut => 4,
         }
     }
 
@@ -66,6 +71,7 @@ impl JobPhase {
             1 => JobPhase::Running,
             2 => JobPhase::Done,
             3 => JobPhase::Failed,
+            4 => JobPhase::TimedOut,
             other => anyhow::bail!("unknown job phase code {other}"),
         })
     }
@@ -77,6 +83,7 @@ impl JobPhase {
             JobPhase::Running => "running",
             JobPhase::Done => "done",
             JobPhase::Failed => "failed",
+            JobPhase::TimedOut => "timed_out",
         }
     }
 }
@@ -296,7 +303,13 @@ fn submit_job(state: &Arc<ServeState>, name: String, spec: JobSpec) -> u64 {
         match execute_job(&st, &spec) {
             Ok(done) => {
                 if let Some(e) = st.lock().get_mut(&job) {
-                    e.phase = JobPhase::Done;
+                    // a deadline-clipped fit is a partial success: the
+                    // best-so-far model stays queryable, the phase says so
+                    e.phase = if done.timed_out {
+                        JobPhase::TimedOut
+                    } else {
+                        JobPhase::Done
+                    };
                     e.converged = done.converged;
                     e.iters = done.iters;
                     e.objective = done.model.objective;
@@ -332,6 +345,7 @@ fn status_of(state: &ServeState, job: u64) -> Option<JobStatus> {
 struct FinishedJob {
     model: FittedModel,
     converged: bool,
+    timed_out: bool,
     iters: u64,
     wall_seconds: f64,
 }
@@ -388,6 +402,7 @@ fn execute_job(state: &ServeState, spec: &JobSpec) -> anyhow::Result<FinishedJob
     Ok(FinishedJob {
         model,
         converged: res.converged,
+        timed_out: res.timed_out,
         iters: res.iters as u64,
         wall_seconds: res.wall_seconds,
     })
@@ -404,6 +419,7 @@ mod tests {
             JobPhase::Running,
             JobPhase::Done,
             JobPhase::Failed,
+            JobPhase::TimedOut,
         ] {
             assert_eq!(JobPhase::from_code(phase.code()).unwrap(), phase);
             assert!(!phase.name().is_empty());

@@ -57,6 +57,13 @@ fn active_prefix(mags: &mut [f64], r: f64, d: usize) -> (f64, usize) {
 /// threshold found by expected-O(n) partial selection.
 pub fn project_l1_ball(v: &[f64], r: f64) -> Vec<f64> {
     assert!(r >= 0.0, "radius must be non-negative");
+    // non-finite input breaks the selection invariants (partial_cmp on
+    // NaN panics, inf poisons the prefix sums); the reply guard keeps
+    // such values out of the solver, so reaching here is a caller bug
+    debug_assert!(
+        v.iter().all(|x| x.is_finite()) && r.is_finite(),
+        "project_l1_ball: non-finite input"
+    );
     let l1: f64 = v.iter().map(|x| x.abs()).sum();
     if l1 <= r {
         return v.to_vec();
@@ -112,6 +119,10 @@ pub fn project_l1_ball_sorted(v: &[f64], r: f64) -> Vec<f64> {
 /// partial selection as [`project_l1_ball`], with the epigraph's shifted
 /// denominator (`j + 1` active terms plus the `t` slope).
 pub fn project_l1_epigraph(v: &[f64], s: f64) -> (Vec<f64>, f64) {
+    debug_assert!(
+        v.iter().all(|x| x.is_finite()) && s.is_finite(),
+        "project_l1_epigraph: non-finite input"
+    );
     let l1: f64 = v.iter().map(|x| x.abs()).sum();
     if l1 <= s {
         return (v.to_vec(), s); // already feasible

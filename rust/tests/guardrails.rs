@@ -1,0 +1,206 @@
+//! Numerical-guardrail integration tests: a pathological penalty ending
+//! in a structured `Diverged` on every transport, the poison-quarantine →
+//! banish → rejoin cycle over sockets, and a serve job landing in the
+//! `timed_out` phase — with a queryable best-so-far model — when its
+//! config carries a deadline.
+
+use std::time::Duration;
+
+use psfit::admm::{solve, SolveError, SolveOptions};
+use psfit::backend::BlockParams;
+use psfit::config::{Config, TransportKind};
+use psfit::data::SyntheticSpec;
+use psfit::driver;
+use psfit::metrics::TransferLedger;
+use psfit::network::socket::spawn_local_worker;
+use psfit::network::socket::wire::JobSpec;
+use psfit::network::{Cluster, NodeReply, WarmState};
+use psfit::serve::{spawn_serve, JobPhase, ServeClient, ServeOpts};
+
+/// A penalty that overflows `participants * rho_c` must end in
+/// `SolveError::Diverged` within the watchdog window on every transport
+/// — sequential, threaded, and socket — never in a silent full-budget
+/// run or an opaque transport error.
+#[test]
+fn pathological_rho_diverges_structured_on_every_transport() {
+    let spec = SyntheticSpec::regression(24, 140, 2);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.rho_c = 1e308;
+    cfg.solver.max_iters = 400;
+
+    let mut scenarios: Vec<(&str, Config, bool)> = vec![
+        ("sequential", cfg.clone(), false),
+        ("threaded", cfg.clone(), true),
+    ];
+    let mut socket_cfg = cfg.clone();
+    socket_cfg.platform.transport = TransportKind::Socket;
+    socket_cfg.platform.workers = vec![
+        spawn_local_worker().unwrap(),
+        spawn_local_worker().unwrap(),
+    ];
+    scenarios.push(("socket", socket_cfg, false));
+
+    for (name, cfg, threaded) in &mut scenarios {
+        let err = driver::fit_with_options(&ds, cfg, &SolveOptions::default(), *threaded)
+            .expect_err(&format!("{name}: a 1e308 penalty must not succeed"));
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::Diverged { round, .. }) => {
+                assert!(
+                    *round <= cfg.solver.watchdog_window,
+                    "{name}: diverged at round {round}, after the watchdog window"
+                );
+            }
+            None => panic!("{name}: expected SolveError::Diverged, got: {err:#}"),
+        }
+    }
+}
+
+/// Wrapper that poisons node 0's replies with NaN for the first
+/// `poison_rounds` rounds — enough consecutive strikes to cross
+/// `platform.quarantine_limit` and trigger a banish.
+struct NodeZeroPoison {
+    inner: Box<dyn Cluster>,
+    poison_rounds: usize,
+    round: usize,
+}
+
+impl Cluster for NodeZeroPoison {
+    fn nodes(&self) -> usize {
+        self.inner.nodes()
+    }
+    fn round(&mut self, z: &[f64]) -> anyhow::Result<Vec<NodeReply>> {
+        let mut replies = self.inner.round(z)?;
+        if self.round < self.poison_rounds {
+            for r in &mut replies {
+                if r.node == 0 {
+                    if let Some(v) = r.x.first_mut() {
+                        *v = f64::NAN;
+                    }
+                }
+            }
+        }
+        self.round += 1;
+        Ok(replies)
+    }
+    fn loss_value(&mut self) -> anyhow::Result<f64> {
+        self.inner.loss_value()
+    }
+    fn ledger(&mut self) -> TransferLedger {
+        self.inner.ledger()
+    }
+    fn recycle(&mut self, replies: Vec<NodeReply>) {
+        self.inner.recycle(replies)
+    }
+    fn coordination(&self) -> Option<psfit::metrics::CoordinationStats> {
+        self.inner.coordination()
+    }
+    fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
+        self.inner.export_warm()
+    }
+    fn reseed(&mut self, states: &[WarmState], params: BlockParams) -> anyhow::Result<()> {
+        self.inner.reseed(states, params)
+    }
+    fn banish(&mut self, node: usize, why: &str) {
+        self.inner.banish(node, why)
+    }
+}
+
+/// The full escalation cycle over the socket transport: repeated poison
+/// from one node is quarantined round by round, crosses the strike limit
+/// into a structured banish (a peer death), and — with `platform.rejoin`
+/// on — the banished worker is re-admitted and finishes the fit with the
+/// full roster.
+#[test]
+fn quarantined_repeat_offender_is_banished_then_rejoins() {
+    let spec = SyntheticSpec::regression(32, 180, 2);
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 14;
+    cfg.solver.tol_primal = 0.0; // fixed horizon: the cycle lands mid-run
+    cfg.platform.quarantine_limit = 2;
+    cfg.platform.transport = TransportKind::Socket;
+    cfg.platform.rejoin = true;
+    cfg.platform.read_timeout_ms = 10_000;
+    cfg.platform.workers = vec![
+        spawn_local_worker().unwrap(),
+        spawn_local_worker().unwrap(),
+    ];
+
+    let inner = driver::build_transport_cluster(&ds, &cfg, false).unwrap();
+    let mut cluster = NodeZeroPoison {
+        inner,
+        poison_rounds: 2, // strikes 1 and 2: banished at the limit
+        round: 0,
+    };
+    let res = solve(
+        &mut cluster,
+        ds.n_features * ds.width,
+        &cfg,
+        Some(&ds),
+        &SolveOptions::default(),
+    )
+    .unwrap();
+
+    assert_eq!(res.iters, 14, "healing keeps the full horizon");
+    let stats = res.coordination.expect("socket cluster reports stats");
+    assert_eq!(stats.quarantined, 2, "both poisoned replies were quarantined");
+    assert!(stats.deaths >= 1, "the banish registers as a peer death");
+    assert!(stats.rejoins >= 1, "the banished worker was re-admitted");
+    let healed = res
+        .trace
+        .records
+        .iter()
+        .any(|r| r.iter > 3 && r.participants == 2);
+    assert!(healed, "no post-banish round ran with the full roster");
+}
+
+/// A serve job whose config carries `solver.deadline_ms` lands in the
+/// `timed_out` phase — a terminal success with a queryable best-so-far
+/// model — not in `failed`.
+#[test]
+fn a_serve_job_with_a_deadline_lands_in_timed_out_with_a_model() {
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec![spawn_local_worker().unwrap(), spawn_local_worker().unwrap()],
+        ..Default::default()
+    };
+    let addr = spawn_serve(&opts).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let mut jcfg = Config::default();
+    jcfg.solver.deadline_ms = 1;
+    jcfg.solver.tol_primal = 0.0; // never converges on tolerance
+    jcfg.solver.max_iters = 2_000_000;
+    let spec = JobSpec {
+        n: 24,
+        m: 120,
+        nodes: 2,
+        config: jcfg.to_json().to_string(),
+        ..JobSpec::default()
+    };
+    let job = client.submit("deadlined", spec).unwrap();
+    let st = client.wait(job, Duration::from_secs(60)).unwrap();
+    assert_eq!(st.phase, JobPhase::TimedOut.code(), "{}", st.message);
+    assert!(!st.converged);
+    assert!(st.iters >= 1, "at least one round completed");
+    assert!(st.support_len > 0, "best-so-far model is queryable");
+
+    // the jobs table shows the terminal phase, and predict works
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs[0].phase, JobPhase::TimedOut.code());
+    let values = client.predict(job, &[(0, 1.0), (3, -0.5)]).unwrap();
+    assert_eq!(values.len(), 1);
+    assert!(values[0].is_finite());
+
+    // and a non-finite query is rejected client-side
+    let err = client
+        .predict(job, &[(2, f64::NAN)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("non-finite"), "{err}");
+}

@@ -134,6 +134,28 @@ fn prop_epigraph_projection_feasible_idempotent_dominant() {
 }
 
 #[test]
+fn prop_projections_map_finite_inputs_to_finite_outputs() {
+    // the numerical guardrails lean on this: any finite iterate — however
+    // large — that reaches a projection comes back finite, so only the
+    // reply guard and the watchdog have to reason about non-finite values
+    run_prop("projection_finite", PropConfig::default(), |rng, size| {
+        let scale = 10f64.powi(rng.below(101) as i32); // 1e0 ..= 1e100
+        let v = randvec(rng, size, scale);
+        let r = rng.uniform() * scale * 4.0;
+        let w = project_l1_ball(&v, r);
+        if w.iter().any(|x| !x.is_finite()) {
+            return Err(format!("l1 ball output non-finite at scale {scale:e}"));
+        }
+        let s = rng.normal() * scale;
+        let (z, t) = project_l1_epigraph(&v, s);
+        if !t.is_finite() || z.iter().any(|x| !x.is_finite()) {
+            return Err(format!("epigraph output non-finite at scale {scale:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_s_update_is_feasible_and_exact_when_reachable() {
     run_prop("s_update", PropConfig::default(), |rng, size| {
         let z = randvec(rng, size, 2.0);
@@ -401,7 +423,7 @@ fn prop_residual_definitions_match_paper() {
         let xs: Vec<Vec<f64>> = (0..nodes).map(|_| randvec(rng, n, 1.0)).collect();
         let rho_c = 0.5 + rng.uniform() * 3.0;
         let xs_refs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
-        let rec = g.residuals(&xs_refs, rho_c, 3, 0.0);
+        let rec = g.residuals(xs_refs.iter().copied(), rho_c, 3, 0.0);
         // p_r = sum_i ||x_i - z||
         let want_p: f64 = xs.iter().map(|x| ops::dist2(x, &g.z).sqrt()).sum();
         if (rec.primal - want_p).abs() > 1e-12 * (1.0 + want_p) {
