@@ -267,6 +267,154 @@ impl LocalProx {
         }
     }
 
+    /// Samples m_i in this node's shard.
+    pub fn samples(&self) -> usize {
+        self.m
+    }
+
+    /// Mini-batch variant of [`LocalProx::solve`]: the inner sweeps run
+    /// over the row window `span = [r0, r1)` only.  Rows outside the
+    /// window keep their warm-started state untouched — predictions,
+    /// omega, and nu are read and written on the chunk rows alone, so a
+    /// round touches O(chunk) samples of data (the out-of-core working
+    /// set).  `span = None` is the full-batch path and routes through
+    /// [`LocalProx::solve`] verbatim, which keeps full-batch trajectories
+    /// bit-identical with mini-batch disabled.
+    pub fn solve_span(
+        &mut self,
+        z: &[f64],
+        u: &[f64],
+        params: BlockParams,
+        sweeps: usize,
+        span: Option<(usize, usize)>,
+        x_out: &mut [f64],
+    ) {
+        let (r0, r1) = match span {
+            None => return self.solve(z, u, params, sweeps, x_out),
+            Some(sp) => sp,
+        };
+        let n = self.plan.n;
+        let width = self.width;
+        assert_eq!(z.len(), n * width);
+        assert_eq!(u.len(), n * width);
+        assert_eq!(x_out.len(), n * width);
+        let m = self.m;
+        assert!(r0 < r1 && r1 <= m, "bad row span [{r0}, {r1})");
+        let cm = r1 - r0;
+        let m_blocks = self.backend.blocks() as f64;
+
+        // gather per-block consensus slices once per solve (as in `solve`)
+        for (j, &(start, bw)) in self.plan.ranges.iter().enumerate() {
+            for c in 0..width {
+                for i in 0..bw {
+                    self.z_blocks[j][c * bw + i] = z[c * n + start + i] as f32;
+                    self.u_blocks[j][c * bw + i] = u[c * n + start + i] as f32;
+                }
+            }
+        }
+
+        // chunk-local sample-space state, class-major (width, cm) except
+        // the row-major omega marshalling pair
+        let blocks_f = self.preds.len() as f32;
+        let mut wbar_c = vec![0.0f32; cm * width];
+        let mut corr_c = vec![0.0f32; cm * width];
+        let mut preds_c: Vec<Vec<f32>> =
+            (0..self.preds.len()).map(|_| vec![0.0f32; cm * width]).collect();
+        let mut rowmaj_c = vec![0.0f32; cm * width];
+        let mut rowmaj_o = vec![0.0f32; cm * width];
+
+        for _ in 0..sweeps {
+            // 1. AllReduce over the chunk rows: w_bar = mean_j pred_j
+            wbar_c.fill(0.0);
+            for p in &self.preds {
+                for c in 0..width {
+                    for i in 0..cm {
+                        wbar_c[c * cm + i] += p[c * m + r0 + i];
+                    }
+                }
+            }
+            for w in wbar_c.iter_mut() {
+                *w /= blocks_f;
+            }
+
+            // 2. frozen chunk correction
+            for c in 0..width {
+                for i in 0..cm {
+                    corr_c[c * cm + i] =
+                        self.omega[c * m + r0 + i] - wbar_c[c * cm + i] - self.nu[c * m + r0 + i];
+                }
+            }
+
+            // 3. all blocks, chunk rows only (lazily cached chunk Grams)
+            self.backend.block_sweep_span(
+                (r0, r1),
+                params,
+                width,
+                &corr_c,
+                &self.z_blocks,
+                &self.u_blocks,
+                &mut self.x_blocks,
+                &mut preds_c,
+            );
+            // scatter the refreshed chunk predictions back into the full
+            // per-block buffers (rows outside the window stay warm)
+            for (p, pc) in self.preds.iter_mut().zip(&preds_c) {
+                for c in 0..width {
+                    p[c * m + r0..c * m + r1].copy_from_slice(&pc[c * cm..(c + 1) * cm]);
+                }
+            }
+
+            // 4. recompute chunk w_bar with fresh predictions
+            wbar_c.fill(0.0);
+            for p in &self.preds {
+                for c in 0..width {
+                    for i in 0..cm {
+                        wbar_c[c * cm + i] += p[c * m + r0 + i];
+                    }
+                }
+            }
+            for w in wbar_c.iter_mut() {
+                *w /= blocks_f;
+            }
+
+            // 5. omega prox on the chunk rows (row-major marshalling)
+            for c in 0..width {
+                for i in 0..cm {
+                    rowmaj_c[i * width + c] = wbar_c[c * cm + i] + self.nu[c * m + r0 + i];
+                }
+            }
+            self.backend.omega_update_span(
+                (r0, r1),
+                &rowmaj_c,
+                m_blocks,
+                params.rho_l,
+                &mut rowmaj_o,
+            );
+            for c in 0..width {
+                for i in 0..cm {
+                    self.omega[c * m + r0 + i] = rowmaj_o[i * width + c];
+                }
+            }
+
+            // 6. nu += w_bar - omega on the chunk rows
+            for c in 0..width {
+                for i in 0..cm {
+                    self.nu[c * m + r0 + i] += wbar_c[c * cm + i] - self.omega[c * m + r0 + i];
+                }
+            }
+        }
+
+        // assemble x_i (class-major flattened)
+        for j in 0..self.plan.blocks {
+            let (start, bw) = self.plan.ranges[j];
+            for c in 0..width {
+                for i in 0..bw {
+                    x_out[c * n + start + i] = self.x_blocks[j][c * bw + i] as f64;
+                }
+            }
+        }
+    }
+
     /// Sum the per-block predictions into `sum`, row-major (m, width).
     fn prediction_into(&self, sum: &mut Vec<f32>) {
         let m = self.m;
@@ -385,6 +533,42 @@ mod tests {
         for (a, b) in x_few.iter().zip(&x_more) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    /// `solve_span` over the whole row window must be bit-identical to
+    /// `solve` — the chunk arithmetic degenerates to the full-batch one.
+    #[test]
+    fn full_window_solve_span_matches_solve_bit_for_bit() {
+        let spec = SyntheticSpec::regression(16, 48, 1);
+        let ds = spec.generate();
+        let plan = FeaturePlan::new(16, 2, 512);
+        let params = BlockParams {
+            rho_l: 2.0,
+            rho_c: 1.0,
+            reg: 1.2,
+        };
+        let mk = || {
+            let backend = NativeBackend::new(
+                &ds.shards[0],
+                &plan,
+                Box::new(Squared),
+                SolveMode::Direct,
+            );
+            LocalProx::new(Box::new(backend), plan.clone(), 1)
+        };
+        let z: Vec<f64> = (0..16).map(|i| (i as f64 * 0.2).sin() * 0.4).collect();
+        let u: Vec<f64> = (0..16).map(|i| (i as f64 * 0.5).cos() * 0.1).collect();
+
+        let mut prox_a = mk();
+        let mut x_a = vec![0.0; 16];
+        prox_a.solve(&z, &u, params, 25, &mut x_a);
+
+        let mut prox_b = mk();
+        let mut x_b = vec![0.0; 16];
+        prox_b.solve_span(&z, &u, params, 25, Some((0, 48)), &mut x_b);
+
+        assert_eq!(x_a, x_b);
+        assert_eq!(prox_a.warm_parts(), prox_b.warm_parts());
     }
 
     #[test]

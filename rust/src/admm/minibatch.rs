@@ -1,0 +1,123 @@
+//! Deterministic mini-batch chunk schedule for out-of-core rounds.
+//!
+//! Every node slices its sample window into fixed `minibatch`-row chunks
+//! and, each outer round, runs the inner Algorithm-2 sweeps over ONE
+//! chunk — the working set a round touches is O(chunk) rows of the
+//! (possibly mmap-backed) shard instead of the whole thing.  Which chunk
+//! runs in which round is a pure function of `(seed, round)`:
+//!
+//!   * no RNG state to checkpoint — a resumed solve replays the exact
+//!     schedule by re-evaluating the function at the restored round index
+//!     (see `Cluster::fast_forward`);
+//!   * every transport (in-process or socket) derives the same schedule
+//!     from the wire-carried round counter, so trajectories are
+//!     bit-identical across transports;
+//!   * the schedule is printable up front: [`schedule_fingerprint`] folds
+//!     the first rounds into one hex token that two runs can compare.
+//!
+//! The hash is the repo-wide FNV-1a (`util::fnv1a`) — the same primitive
+//! the checkpoint problem hash, the wire checksums, and the `PSD1` shard
+//! header use.
+
+use crate::util::fnv1a_fold;
+use crate::util::FNV_OFFSET;
+
+/// Per-round hash: FNV-1a over the little-endian bytes of `seed` then
+/// `round`.  Stable across platforms (explicit LE) and across sessions
+/// (no ambient state).
+pub fn round_hash(seed: u64, round: u64) -> u64 {
+    let h = fnv1a_fold(FNV_OFFSET, &seed.to_le_bytes());
+    fnv1a_fold(h, &round.to_le_bytes())
+}
+
+/// Chunk index scheduled for `round` out of `n_chunks` equal slices.
+pub fn chunk_index(seed: u64, round: u64, n_chunks: usize) -> usize {
+    assert!(n_chunks > 0, "chunk schedule needs at least one chunk");
+    (round_hash(seed, round) % n_chunks as u64) as usize
+}
+
+/// How many rounds [`schedule_fingerprint`] folds.
+pub const FINGERPRINT_ROUNDS: u64 = 64;
+
+/// One printable token summarizing the first [`FINGERPRINT_ROUNDS`]
+/// rounds of the schedule: two runs (or a run and its resume) agree on
+/// the whole schedule iff they print the same fingerprint.
+pub fn schedule_fingerprint(seed: u64, n_chunks: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    for round in 0..FINGERPRINT_ROUNDS {
+        let idx = chunk_index(seed, round, n_chunks) as u64;
+        h = fnv1a_fold(h, &idx.to_le_bytes());
+    }
+    h
+}
+
+/// The row window `[r0, r1)` of the chunk scheduled for `round`, over a
+/// shard of `m` rows sliced into `minibatch`-row chunks.  `None` means
+/// full batch — mini-batch off (`minibatch == 0`) or a chunk that would
+/// cover every row anyway; callers then take the ordinary full-batch
+/// path, which keeps `--minibatch >= m` bit-identical to a plain solve.
+pub fn chunk_for(minibatch: usize, seed: u64, round: u64, m: usize) -> Option<(usize, usize)> {
+    if minibatch == 0 || minibatch >= m {
+        return None;
+    }
+    let n_chunks = m.div_ceil(minibatch);
+    let idx = chunk_index(seed, round, n_chunks);
+    let r0 = idx * minibatch;
+    let r1 = ((idx + 1) * minibatch).min(m);
+    Some((r0, r1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_and_round() {
+        for round in 0..200 {
+            assert_eq!(
+                chunk_index(0x5EED, round, 7),
+                chunk_index(0x5EED, round, 7)
+            );
+        }
+        // different seeds decorrelate
+        let a: Vec<usize> = (0..64).map(|r| chunk_index(1, r, 7)).collect();
+        let b: Vec<usize> = (0..64).map(|r| chunk_index(2, r, 7)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn every_chunk_is_visited() {
+        let n_chunks = 5;
+        let mut seen = vec![false; n_chunks];
+        for round in 0..256 {
+            seen[chunk_index(42, round, n_chunks)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some chunk never scheduled: {seen:?}");
+    }
+
+    #[test]
+    fn chunk_for_windows_are_in_bounds_and_sized() {
+        let (mb, m) = (12usize, 50usize);
+        for round in 0..128 {
+            let (r0, r1) = chunk_for(mb, 9, round, m).unwrap();
+            assert!(r0 < r1 && r1 <= m);
+            assert!(r1 - r0 <= mb);
+            assert_eq!(r0 % mb, 0, "chunks are fixed slices");
+        }
+    }
+
+    #[test]
+    fn full_batch_sentinels() {
+        assert_eq!(chunk_for(0, 1, 0, 40), None, "minibatch off");
+        assert_eq!(chunk_for(40, 1, 0, 40), None, "chunk covers the shard");
+        assert_eq!(chunk_for(64, 1, 0, 40), None, "chunk larger than shard");
+        assert!(chunk_for(39, 1, 0, 40).is_some());
+    }
+
+    #[test]
+    fn fingerprint_pins_the_schedule() {
+        assert_eq!(schedule_fingerprint(7, 4), schedule_fingerprint(7, 4));
+        assert_ne!(schedule_fingerprint(7, 4), schedule_fingerprint(8, 4));
+        assert_ne!(schedule_fingerprint(7, 4), schedule_fingerprint(7, 5));
+    }
+}

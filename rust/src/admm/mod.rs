@@ -20,6 +20,8 @@ pub mod global;
 pub mod guard;
 /// Node-side Algorithm 2: the feature-decomposed inner sharing-ADMM.
 pub mod local;
+/// Deterministic mini-batch chunk schedule (out-of-core rounds).
+pub mod minibatch;
 /// Algorithm 1: the outer consensus loop with resumable state.
 pub mod solver;
 

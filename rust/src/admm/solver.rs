@@ -668,6 +668,9 @@ pub fn solve_checkpointed(
         cluster.reseed(&ck.state.nodes, params)?;
         global = ck.state.global.clone();
         ctl.start = ck.iters_done as usize;
+        // round-indexed schedules (the mini-batch chunk cycle) must replay
+        // from the same round counter the killed run would have reached
+        cluster.fast_forward(ctl.start);
         ctl.trace.records = ck.trace;
         eprintln!(
             "[checkpoint] resuming fit at iteration {} from {}",
@@ -742,6 +745,27 @@ pub fn polish_ridge_with(
                     }
                 }
             }
+            ShardData::Mapped(m) if m.is_csr() => {
+                for r in 0..m.rows() {
+                    let b = shard.labels[r] as f64;
+                    let (cols, vals) = m.csr_row(r);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        let si = slot[c as usize];
+                        if si != usize::MAX {
+                            rhs[si] += 2.0 * v as f64 * b;
+                        }
+                    }
+                }
+            }
+            ShardData::Mapped(m) => {
+                for r in 0..m.rows() {
+                    let row = m.dense_row(r);
+                    let b = shard.labels[r] as f64;
+                    for (si, &col) in support.iter().enumerate() {
+                        rhs[si] += 2.0 * row[col] as f64 * b;
+                    }
+                }
+            }
         }
     }
     SolveScratch::reuse_f64(&mut scratch.w, s, &mut scratch.saved_bytes);
@@ -784,6 +808,39 @@ pub fn polish_ridge_with(
                             if si != usize::MAX {
                                 out[si] += 2.0 * val as f64 * av;
                             }
+                        }
+                    }
+                }
+                ShardData::Mapped(m) if m.is_csr() => {
+                    for r in 0..m.rows() {
+                        let (cols, vals) = m.csr_row(r);
+                        let mut av = 0.0f64;
+                        for (&c, &val) in cols.iter().zip(vals) {
+                            let si = slot[c as usize];
+                            if si != usize::MAX {
+                                av += val as f64 * v[si];
+                            }
+                        }
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for (&c, &val) in cols.iter().zip(vals) {
+                            let si = slot[c as usize];
+                            if si != usize::MAX {
+                                out[si] += 2.0 * val as f64 * av;
+                            }
+                        }
+                    }
+                }
+                ShardData::Mapped(m) => {
+                    for r in 0..m.rows() {
+                        let row = m.dense_row(r);
+                        let mut av = 0.0f64;
+                        for (si, &col) in support.iter().enumerate() {
+                            av += row[col] as f64 * v[si];
+                        }
+                        for (si, &col) in support.iter().enumerate() {
+                            out[si] += 2.0 * row[col] as f64 * av;
                         }
                     }
                 }
@@ -875,6 +932,7 @@ mod tests {
                     params,
                     sweeps,
                 )
+                .with_minibatch(cfg.solver.minibatch, cfg.solver.minibatch_seed)
             })
             .collect();
         SequentialCluster::new(workers, ds.n_features * ds.width)
@@ -1046,6 +1104,126 @@ mod tests {
         let other = SyntheticSpec::regression(16, 100, 3).generate();
         let mut cluster = build_cluster(&other, &ck_cfg, 2);
         let err = solve_checkpointed(&mut cluster, 16, &ck_cfg, &other, &SolveOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different fit"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Mini-batch rounds are a pure function of (seed, round): two runs
+    /// with the same seed must produce bit-identical traces and iterates.
+    #[test]
+    fn minibatch_same_seed_is_bit_identical() {
+        let spec = SyntheticSpec::regression(16, 120, 2);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 4;
+        cfg.solver.max_iters = 10;
+        cfg.solver.tol_primal = 0.0; // fixed rounds
+        cfg.solver.minibatch = 16; // 60 rows/node -> 4 chunks
+        cfg.solver.minibatch_seed = 7;
+
+        let run = || {
+            let mut cluster = build_cluster(&ds, &cfg, 2);
+            solve(&mut cluster, 16, &cfg, Some(&ds), &SolveOptions::default()).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.trace.iters(), 10);
+        for (ra, rb) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "iter {}", ra.iter);
+            assert_eq!(ra.dual.to_bits(), rb.dual.to_bits(), "iter {}", ra.iter);
+        }
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.support, b.support);
+    }
+
+    /// A window at least as large as the shard is the full-batch sentinel:
+    /// the run must reproduce `minibatch = 0` bit-for-bit.
+    #[test]
+    fn minibatch_window_covering_shard_matches_full_batch_bit_for_bit() {
+        let spec = SyntheticSpec::regression(14, 96, 2);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 3;
+        cfg.solver.max_iters = 8;
+        cfg.solver.tol_primal = 0.0;
+
+        let run = |mb: usize| {
+            let mut c = cfg.clone();
+            c.solver.minibatch = mb;
+            c.solver.minibatch_seed = 99;
+            let mut cluster = build_cluster(&ds, &c, 2);
+            solve(&mut cluster, 14, &c, Some(&ds), &SolveOptions::default()).unwrap()
+        };
+        let full = run(0);
+        // 48 rows per node: a window of exactly the shard and one far past
+        // it both degenerate to the full-batch trajectory
+        for mb in [48, 1000] {
+            let win = run(mb);
+            assert_eq!(win.z, full.z, "minibatch = {mb}");
+            assert_eq!(win.x, full.x, "minibatch = {mb}");
+            assert_eq!(win.support, full.support, "minibatch = {mb}");
+            for (ra, rb) in win.trace.records.iter().zip(&full.trace.records) {
+                assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "iter {}", ra.iter);
+            }
+        }
+    }
+
+    /// A mini-batch fit killed mid-run and resumed from its checkpoint
+    /// must replay the chunk schedule: `Cluster::fast_forward` restores
+    /// the round counter, so the remaining trace is bit-identical to an
+    /// uninterrupted run's.
+    #[test]
+    fn minibatch_resume_replays_the_chunk_schedule() {
+        let spec = SyntheticSpec::regression(16, 100, 2);
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = 4;
+        cfg.solver.max_iters = 12;
+        cfg.solver.tol_primal = 0.0;
+        cfg.solver.minibatch = 16; // 50 rows/node -> 4 chunks
+        cfg.solver.minibatch_seed = 3;
+
+        let mut cluster = build_cluster(&ds, &cfg, 2);
+        let reference =
+            solve(&mut cluster, 16, &cfg, Some(&ds), &SolveOptions::default()).unwrap();
+        assert_eq!(reference.trace.iters(), 12);
+
+        let path = std::env::temp_dir().join("psfit_minibatch_resume.psf");
+        let _ = std::fs::remove_file(&path);
+        let mut ck_cfg = cfg.clone();
+        ck_cfg.solver.checkpoint = path.to_string_lossy().into_owned();
+        ck_cfg.solver.checkpoint_every = 1;
+        let mut half = ck_cfg.clone();
+        half.solver.max_iters = 7;
+        let mut cluster = build_cluster(&ds, &half, 2);
+        let partial =
+            solve_checkpointed(&mut cluster, 16, &half, &ds, &SolveOptions::default()).unwrap();
+        assert!(!partial.converged);
+        assert!(path.exists(), "no checkpoint was written");
+
+        let mut cluster = build_cluster(&ds, &ck_cfg, 2);
+        let resumed =
+            solve_checkpointed(&mut cluster, 16, &ck_cfg, &ds, &SolveOptions::default()).unwrap();
+        assert_eq!(resumed.iters, 12);
+        for (a, b) in resumed.trace.records.iter().zip(&reference.trace.records) {
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "iter {}", a.iter);
+        }
+        assert_eq!(resumed.z, reference.z);
+        assert_eq!(resumed.x, reference.x);
+        assert_eq!(resumed.support, reference.support);
+
+        // a checkpoint from a different chunk schedule is a different fit
+        let mut other = ck_cfg.clone();
+        other.solver.minibatch_seed = 4;
+        let mut cluster = build_cluster(&ds, &other, 2);
+        let err = solve_checkpointed(&mut cluster, 16, &other, &ds, &SolveOptions::default())
             .unwrap_err()
             .to_string();
         assert!(err.contains("different fit"), "{err}");

@@ -105,9 +105,59 @@ pub trait NodeBackend: Send {
         }
     }
 
+    /// Mini-batch variant of [`NodeBackend::block_sweep`]: the sweep runs
+    /// over the row window `span = [r0, r1)` only.  `corr` and `preds[j]`
+    /// are **chunk-local** — class-major `(width, r1 - r0)` — while
+    /// `z`/`u`/`x` keep their full per-block shapes (coefficients are not
+    /// row-indexed).
+    ///
+    /// The default only supports the trivial full window (mini-batch
+    /// rounds are gated to backends that override this — today the native
+    /// backend); `config::validate` rejects `solver.minibatch` on other
+    /// backends before a solve ever gets here.
+    #[allow(clippy::too_many_arguments)]
+    fn block_sweep_span(
+        &mut self,
+        span: (usize, usize),
+        params: BlockParams,
+        width: usize,
+        corr: &[f32],
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+    ) {
+        assert_eq!(
+            span,
+            (0, self.samples()),
+            "this backend does not support partial row spans (mini-batch rounds need the native backend)"
+        );
+        self.block_sweep(params, width, corr, z_blocks, u_blocks, x_blocks, preds);
+    }
+
     /// Separable omega-bar prox (Eq. 21) against this node's labels.
     /// `c` and `out` are row-major (m, width).
     fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]);
+
+    /// Mini-batch variant of [`NodeBackend::omega_update`] over the row
+    /// window `span = [r0, r1)`: `c` and `out` are chunk-local, row-major
+    /// `(r1 - r0, width)`.  Default as in
+    /// [`NodeBackend::block_sweep_span`]: full window only.
+    fn omega_update_span(
+        &mut self,
+        span: (usize, usize),
+        c: &[f32],
+        m_blocks: f64,
+        rho_l: f64,
+        out: &mut [f32],
+    ) {
+        assert_eq!(
+            span,
+            (0, self.samples()),
+            "this backend does not support partial row spans (mini-batch rounds need the native backend)"
+        );
+        self.omega_update(c, m_blocks, rho_l, out);
+    }
 
     /// Loss value at the given predictions (row-major (m, width)) —
     /// objective reporting only, not on the iteration hot path.

@@ -40,7 +40,7 @@ use super::{BlockParams, NodeBackend};
 use crate::data::{FeaturePlan, Shard, ShardData};
 use crate::linalg::csr;
 use crate::linalg::kernels;
-use crate::linalg::{conjugate_gradient, Cholesky};
+use crate::linalg::{conjugate_gradient, Cholesky, ColumnBlockView, CsrBlockView, CsrParts};
 use crate::losses::Loss;
 use crate::metrics::TransferLedger;
 use crate::util::pool::WorkerPool;
@@ -70,16 +70,11 @@ struct Scratch {
 /// any realistic rho ladder while bounding memory on a runaway sweep.
 const CHOL_CACHE_CAP: usize = 16;
 
-struct Block {
-    /// Column range `[start, start + width)` of the shard — the feature
-    /// block `A_j`, read in place through `ColumnBlockView` (dense) or
-    /// `CsrBlockView` (CSR).
-    start: usize,
-    width: usize,
-    /// Per-row entry subranges of the block within the parent CSR
-    /// (`Some` iff the shard storage is CSR; computed once here so every
-    /// sweep reuses them).
-    csr_ranges: Option<Vec<(usize, usize)>>,
+/// Gram + factorization state for one feature block over one row span —
+/// the full shard owns one (`Block::full`); each mini-batch chunk that
+/// actually runs gets its own lazily (`Block::spans`), since a chunk's
+/// normal matrix `A_j[r0..r1]^T A_j[r0..r1]` differs from the full one.
+struct SolveState {
     /// Cached Gram (width x width), f64.
     gram: Vec<f64>,
     /// Cholesky factors of `rho_l G + reg I`, keyed by the penalties they
@@ -100,7 +95,94 @@ struct Block {
     chol_factored: u64,
     /// Penalty revisits that found their factor in the cache.
     chol_reused: u64,
+}
+
+impl SolveState {
+    fn new(gram: Vec<f64>) -> SolveState {
+        SolveState {
+            gram,
+            chol_cache: Vec::new(),
+            chol_last: None,
+            chol_active: 0,
+            chol_factored: 0,
+            chol_reused: 0,
+        }
+    }
+}
+
+struct Block {
+    /// Column range `[start, start + width)` of the shard — the feature
+    /// block `A_j`, read in place through `ColumnBlockView` (dense) or
+    /// `CsrBlockView` (CSR).
+    start: usize,
+    width: usize,
+    /// Per-row entry subranges of the block within the parent CSR
+    /// (`Some` iff the shard layout is CSR — resident or mapped; computed
+    /// once here so every sweep reuses them).  Ranges hold absolute entry
+    /// offsets, so a row span just slices `ranges[r0..r1]`.
+    csr_ranges: Option<Vec<(usize, usize)>>,
+    /// Full-batch solve state (Gram over every shard row).
+    full: SolveState,
+    /// Per-chunk solve states for mini-batch rounds, keyed by row span
+    /// and built on first use.  Chunk counts are small (`m / minibatch`),
+    /// so a linear scan is fine.
+    spans: Vec<((usize, usize), SolveState)>,
     scratch: Scratch,
+}
+
+/// Borrowed, storage-kind-erased handle on the shard's raw arrays.
+/// Resident and mapped storage collapse to the same two layouts here, so
+/// every kernel dispatch below this point is shared — the bit-parity seam
+/// `tests/oocore.rs` pins.
+#[derive(Clone, Copy)]
+enum StorageRef<'a> {
+    Dense { data: &'a [f32], stride: usize },
+    Csr(CsrParts<'a>),
+}
+
+fn storage_ref(a: &ShardData) -> StorageRef<'_> {
+    match a {
+        ShardData::Dense(m) => StorageRef::Dense {
+            data: m.padded_data(),
+            stride: m.stride(),
+        },
+        ShardData::Csr(c) => StorageRef::Csr(c.parts()),
+        ShardData::Mapped(m) => {
+            if m.is_csr() {
+                StorageRef::Csr(m.csr_parts())
+            } else {
+                StorageRef::Dense {
+                    data: m.dense_padded(),
+                    stride: m.stride(),
+                }
+            }
+        }
+    }
+}
+
+/// Gram matrix of the feature block over rows `[r0, r1)`, in the exact
+/// kernel/summation order the resident full-batch path uses.
+fn build_gram(
+    a: &ShardData,
+    csr_ranges: &Option<Vec<(usize, usize)>>,
+    start: usize,
+    width: usize,
+    span: (usize, usize),
+) -> Vec<f64> {
+    let (r0, r1) = span;
+    let mut gram32 = vec![0.0f32; width * width];
+    match storage_ref(a) {
+        StorageRef::Dense { data, stride } => {
+            let view = ColumnBlockView::new(&data[r0 * stride..], r1 - r0, width, stride, start);
+            kernels::gram(&view, &mut gram32);
+        }
+        StorageRef::Csr(parts) => {
+            let ranges = csr_ranges.as_ref().expect("csr shard without block ranges");
+            let view = CsrBlockView::new(parts, r0, r1 - r0, start, width, &ranges[r0..r1]);
+            csr::gram_sparse(&view, &mut gram32);
+        }
+    }
+    gram32.iter().map(|&v| v as f64).collect()
 }
 
 /// Dependency-free Rust backend (the paper's "CPU backend").
@@ -131,31 +213,25 @@ impl NativeBackend {
             .ranges
             .iter()
             .map(|&(start, width)| {
-                let mut gram32 = vec![0.0f32; width * width];
                 let csr_ranges = match &a {
-                    ShardData::Dense(mat) => {
-                        let view = mat.column_block_view(start, width);
-                        kernels::gram(&view, &mut gram32);
-                        None
-                    }
-                    ShardData::Csr(c) => {
-                        let ranges = c.block_ranges(start, width);
-                        let view = c.block_view(&ranges, start, width);
-                        csr::gram_sparse(&view, &mut gram32);
-                        Some(ranges)
+                    ShardData::Dense(_) => None,
+                    ShardData::Csr(c) => Some(c.block_ranges(start, width)),
+                    ShardData::Mapped(m) => {
+                        if m.is_csr() {
+                            Some(m.block_ranges(start, width))
+                        } else {
+                            None
+                        }
                     }
                 };
+                let gram = build_gram(&a, &csr_ranges, start, width, (0, rows));
                 saved += (rows * width * std::mem::size_of::<f32>()) as u64;
                 Block {
                     start,
                     width,
                     csr_ranges,
-                    gram: gram32.iter().map(|&v| v as f64).collect(),
-                    chol_cache: Vec::new(),
-                    chol_last: None,
-                    chol_active: 0,
-                    chol_factored: 0,
-                    chol_reused: 0,
+                    full: SolveState::new(gram),
+                    spans: Vec::new(),
                     scratch: Scratch::default(),
                 }
             })
@@ -191,35 +267,34 @@ impl NativeBackend {
     }
 }
 
-/// Make sure the block's keyed cache holds a factor for `params`.
+/// Make sure the state's keyed cache holds a factor for `params`.
 /// Steady-state calls (same penalties as the previous step) return
 /// immediately; a penalty *transition* either reuses a cached factor
 /// (rho-ladder revisit) or computes and caches a new one.
-fn ensure_chol(block: &mut Block, params: BlockParams) {
-    if block.chol_last == Some(params) {
+fn ensure_chol(state: &mut SolveState, n: usize, params: BlockParams) {
+    if state.chol_last == Some(params) {
         return; // steady state: chol_active already points at the factor
     }
-    if let Some(idx) = block.chol_cache.iter().position(|(p, _)| *p == params) {
-        block.chol_reused += 1;
-        block.chol_active = idx;
+    if let Some(idx) = state.chol_cache.iter().position(|(p, _)| *p == params) {
+        state.chol_reused += 1;
+        state.chol_active = idx;
     } else {
-        let n = block.width;
         let mut h = vec![0.0f64; n * n];
         for i in 0..n {
             for j in 0..n {
-                h[i * n + j] = params.rho_l * block.gram[i * n + j];
+                h[i * n + j] = params.rho_l * state.gram[i * n + j];
             }
             h[i * n + i] += params.reg;
         }
         let chol = Cholesky::factor(&h, n).expect("block normal matrix is SPD");
-        if block.chol_cache.len() >= CHOL_CACHE_CAP {
-            block.chol_cache.remove(0); // evict the oldest penalty set
+        if state.chol_cache.len() >= CHOL_CACHE_CAP {
+            state.chol_cache.remove(0); // evict the oldest penalty set
         }
-        block.chol_cache.push((params, chol));
-        block.chol_active = block.chol_cache.len() - 1;
-        block.chol_factored += 1;
+        state.chol_cache.push((params, chol));
+        state.chol_active = state.chol_cache.len() - 1;
+        state.chol_factored += 1;
     }
-    block.chol_last = Some(params);
+    state.chol_last = Some(params);
 }
 
 /// The block x-update (Eq. 23) + prediction refresh for all `width` class
@@ -227,12 +302,21 @@ fn ensure_chol(block: &mut Block, params: BlockParams) {
 /// multi-RHS solve, one `A_j X` kernel call.  Shared verbatim by the
 /// granular `block_step` (`width == 1`) and the pooled `block_sweep`, so
 /// the two paths are bit-identical.
+///
+/// `span` selects the row window `[r0, r1)` the step runs over:
+/// `None` (or the full window) is the full-batch path and uses the
+/// block's cached state untouched, so full-batch behaviour is
+/// bit-identical to the pre-span code by construction.  A partial span is
+/// a mini-batch chunk: `corr` / `pred_j` are **chunk-local** (length
+/// `width * (r1 - r0)`), and the chunk's Gram + factor cache is built
+/// lazily and kept per span.
 fn solve_block(
     a: &ShardData,
     mode: SolveMode,
     block: &mut Block,
     params: BlockParams,
     width: usize,
+    span: Option<(usize, usize)>,
     corr: &[f32],
     z_j: &[f32],
     u_j: &[f32],
@@ -240,43 +324,69 @@ fn solve_block(
     pred_j: &mut [f32],
 ) {
     let n = block.width;
-    let m = a.rows();
-    debug_assert_eq!(corr.len(), width * m);
+    let m_total = a.rows();
+    let (r0, r1) = span.unwrap_or((0, m_total));
+    debug_assert!(r0 < r1 && r1 <= m_total, "bad row span [{r0}, {r1})");
+    let cm = r1 - r0;
+    debug_assert_eq!(corr.len(), width * cm);
     debug_assert_eq!(x_j.len(), width * n);
-    debug_assert_eq!(pred_j.len(), width * m);
+    debug_assert_eq!(pred_j.len(), width * cm);
+
+    let Block {
+        start,
+        width: _,
+        csr_ranges,
+        full,
+        spans,
+        scratch: s,
+    } = block;
+    let start = *start;
+
+    // Pick the solve state for this row window.  The full window shares
+    // the constructor-built state; each chunk gets its own on first use.
+    let state: &mut SolveState = if (r0, r1) == (0, m_total) {
+        full
+    } else {
+        match spans.iter().position(|(sp, _)| *sp == (r0, r1)) {
+            Some(i) => &mut spans[i].1,
+            None => {
+                let gram = build_gram(a, csr_ranges, start, n, (r0, r1));
+                spans.push(((r0, r1), SolveState::new(gram)));
+                &mut spans.last_mut().unwrap().1
+            }
+        }
+    };
 
     if matches!(mode, SolveMode::Direct) {
-        ensure_chol(block, params);
+        ensure_chol(state, n, params);
     }
-    let gram = &block.gram;
-    let chol = block.chol_cache.get(block.chol_active).map(|(_, c)| c);
+    let gram = &state.gram;
+    let chol = state.chol_cache.get(state.chol_active).map(|(_, c)| c);
     debug_assert!(
         matches!(mode, SolveMode::Cg { .. })
-            || block
+            || state
                 .chol_cache
-                .get(block.chol_active)
+                .get(state.chol_active)
                 .is_some_and(|(p, _)| *p == params),
         "active cholesky factor does not match the step's penalties"
     );
-    let start = block.start;
-    let csr_ranges = &block.csr_ranges;
-    let s = &mut block.scratch;
     s.qt.resize(width * n, 0.0);
     s.rhs.resize(width * n, 0.0);
     s.x.resize(width * n, 0.0);
 
     // Q = A_j^T C for all class columns at once (the data-touching op,
-    // dispatched on the storage kind)
-    match (a, csr_ranges) {
-        (ShardData::Dense(mat), _) => {
-            let view = mat.column_block_view(start, n);
+    // dispatched on the storage layout — resident and mapped collapse to
+    // the same two branches here)
+    match storage_ref(a) {
+        StorageRef::Dense { data, stride } => {
+            let view = ColumnBlockView::new(&data[r0 * stride..], cm, n, stride, start);
             kernels::matmul_t(&view, corr, width, &mut s.qt);
         }
-        (ShardData::Csr(c), Some(ranges)) => {
-            let view = c.block_view(ranges, start, n);
+        StorageRef::Csr(parts) => {
+            let ranges = csr_ranges.as_ref().expect("csr shard without block ranges");
+            let view = CsrBlockView::new(parts, r0, cm, start, n, &ranges[r0..r1]);
             csr::spmm_t(&view, corr, width, &mut s.qt);
         }
-        (ShardData::Csr(_), None) => unreachable!("csr shard without block ranges"),
     }
 
     // rhs_c = rho_l (G x_c + q_c) + rho_c (z_c - u_c); warm-start x_c
@@ -330,17 +440,17 @@ fn solve_block(
     for (o, &v) in x_j.iter_mut().zip(s.x.iter()) {
         *o = v as f32;
     }
-    // pred_j = A_j X for all class columns
-    match (a, csr_ranges) {
-        (ShardData::Dense(mat), _) => {
-            let view = mat.column_block_view(start, n);
+    // pred_j = A_j X for all class columns (chunk rows only)
+    match storage_ref(a) {
+        StorageRef::Dense { data, stride } => {
+            let view = ColumnBlockView::new(&data[r0 * stride..], cm, n, stride, start);
             kernels::matmul(&view, x_j, width, pred_j);
         }
-        (ShardData::Csr(c), Some(ranges)) => {
-            let view = c.block_view(ranges, start, n);
+        StorageRef::Csr(parts) => {
+            let ranges = csr_ranges.as_ref().expect("csr shard without block ranges");
+            let view = CsrBlockView::new(parts, r0, cm, start, n, &ranges[r0..r1]);
             csr::spmm(&view, x_j, width, pred_j);
         }
-        (ShardData::Csr(_), None) => unreachable!("csr shard without block ranges"),
     }
 }
 
@@ -373,6 +483,7 @@ impl NodeBackend for NativeBackend {
             &mut self.blocks[j],
             params,
             1,
+            None,
             corr,
             z_j,
             u_j,
@@ -405,7 +516,55 @@ impl NodeBackend for NativeBackend {
             .zip(z_blocks.iter().zip(u_blocks))
             .map(|(((block, x_j), pred_j), (z_j, u_j))| {
                 move || {
-                    solve_block(a, mode, block, params, width, corr, z_j, u_j, x_j, pred_j);
+                    solve_block(a, mode, block, params, width, None, corr, z_j, u_j, x_j, pred_j);
+                }
+            })
+            .collect();
+        self.pool.run(jobs);
+    }
+
+    /// Mini-batch sweep over row window `[r0, r1)`: same pooled structure
+    /// as `block_sweep`, but `corr` and `preds` are chunk-local and each
+    /// block solves against its lazily cached chunk Gram.  The full
+    /// window routes to the exact full-batch state, so
+    /// `block_sweep_span((0, m), ..)` is bit-identical to `block_sweep`.
+    fn block_sweep_span(
+        &mut self,
+        span: (usize, usize),
+        params: BlockParams,
+        width: usize,
+        corr: &[f32],
+        z_blocks: &[Vec<f32>],
+        u_blocks: &[Vec<f32>],
+        x_blocks: &mut [Vec<f32>],
+        preds: &mut [Vec<f32>],
+    ) {
+        let (r0, r1) = span;
+        debug_assert!(r0 < r1 && r1 <= self.m, "bad row span [{r0}, {r1})");
+        debug_assert_eq!(corr.len(), width * (r1 - r0));
+        let a = &self.a;
+        let mode = self.mode;
+        let jobs: Vec<_> = self
+            .blocks
+            .iter_mut()
+            .zip(x_blocks.iter_mut())
+            .zip(preds.iter_mut())
+            .zip(z_blocks.iter().zip(u_blocks))
+            .map(|(((block, x_j), pred_j), (z_j, u_j))| {
+                move || {
+                    solve_block(
+                        a,
+                        mode,
+                        block,
+                        params,
+                        width,
+                        Some(span),
+                        corr,
+                        z_j,
+                        u_j,
+                        x_j,
+                        pred_j,
+                    );
                 }
             })
             .collect();
@@ -414,6 +573,24 @@ impl NodeBackend for NativeBackend {
 
     fn omega_update(&mut self, c: &[f32], m_blocks: f64, rho_l: f64, out: &mut [f32]) {
         self.loss.omega_update(&self.labels, c, m_blocks, rho_l, out);
+    }
+
+    /// Chunk-local omega update: the loss is per-row separable, so the
+    /// window's rows see exactly the arithmetic the full update applies
+    /// to them — only the label slice narrows.
+    fn omega_update_span(
+        &mut self,
+        span: (usize, usize),
+        c: &[f32],
+        m_blocks: f64,
+        rho_l: f64,
+        out: &mut [f32],
+    ) {
+        let (r0, r1) = span;
+        let w = self.loss.width();
+        debug_assert!(r0 < r1 && r1 <= self.m, "bad row span [{r0}, {r1})");
+        self.loss
+            .omega_update(&self.labels[r0 * w..r1 * w], c, m_blocks, rho_l, out);
     }
 
     fn loss_value(&self, pred: &[f32]) -> f64 {
@@ -425,12 +602,17 @@ impl NodeBackend for NativeBackend {
         // plus the factorization-reuse counters the path subsystem reads
         let mut l = TransferLedger {
             host_copy_saved_bytes: self.inplace_saved_bytes,
-            gram_builds: self.blocks.len() as u64,
             ..Default::default()
         };
         for b in &self.blocks {
-            l.chol_factorizations += b.chol_factored;
-            l.chol_reuses += b.chol_reused;
+            // one full-batch Gram at construction + one per chunk span
+            l.gram_builds += 1 + b.spans.len() as u64;
+            l.chol_factorizations += b.full.chol_factored;
+            l.chol_reuses += b.full.chol_reused;
+            for (_, st) in &b.spans {
+                l.chol_factorizations += st.chol_factored;
+                l.chol_reuses += st.chol_reused;
+            }
         }
         l
     }
@@ -480,7 +662,7 @@ mod tests {
 
         // residual of (rho_l G + reg I) x = rho_l (G x_prev + q) + rho_c (z-u)
         let block_a = a.column_block(start, n0);
-        let gram = &be.blocks[0].gram;
+        let gram = &be.blocks[0].full.gram;
         let mut q = vec![0.0f32; n0];
         block_a.matvec_t(&corr, &mut q);
         for i in 0..n0 {
@@ -531,21 +713,21 @@ mod tests {
         let p1 = BlockParams { rho_l: 1.0, rho_c: 1.0, reg: 1.0 };
         let p2 = BlockParams { rho_l: 9.0, rho_c: 1.0, reg: 4.0 };
         be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_cache.len(), 1);
-        assert_eq!(be.blocks[0].chol_factored, 1);
+        assert_eq!(be.blocks[0].full.chol_cache.len(), 1);
+        assert_eq!(be.blocks[0].full.chol_factored, 1);
         // steady state: repeating the same penalties touches no counter
         be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_factored, 1);
-        assert_eq!(be.blocks[0].chol_reused, 0);
+        assert_eq!(be.blocks[0].full.chol_factored, 1);
+        assert_eq!(be.blocks[0].full.chol_reused, 0);
         // new penalties: a second factor joins the cache
         be.block_step(0, p2, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_cache.len(), 2);
-        assert_eq!(be.blocks[0].chol_factored, 2);
+        assert_eq!(be.blocks[0].full.chol_cache.len(), 2);
+        assert_eq!(be.blocks[0].full.chol_factored, 2);
         // revisiting p1 (the rho-ladder pattern) reuses the cached factor
         be.block_step(0, p1, &corr, &z, &u, &mut x, &mut pred);
-        assert_eq!(be.blocks[0].chol_cache.len(), 2);
-        assert_eq!(be.blocks[0].chol_factored, 2);
-        assert_eq!(be.blocks[0].chol_reused, 1);
+        assert_eq!(be.blocks[0].full.chol_cache.len(), 2);
+        assert_eq!(be.blocks[0].full.chol_factored, 2);
+        assert_eq!(be.blocks[0].full.chol_reused, 1);
         let ledger = be.ledger();
         // 2 blocks in the plan: block 0 factored twice, block 1 never hit
         assert_eq!(ledger.chol_factorizations, 2);
@@ -580,7 +762,7 @@ mod tests {
         let mut x_revisit = vec![0.0f32; n0];
         be_b.block_step(0, p1, &corr, &z, &u, &mut x_revisit, &mut pred);
 
-        assert_eq!(be_b.blocks[0].chol_reused, 1, "revisit must hit the cache");
+        assert_eq!(be_b.blocks[0].full.chol_reused, 1, "revisit must hit the cache");
         assert_eq!(x_ref, x_revisit);
     }
 
@@ -707,6 +889,177 @@ mod tests {
             }
             // csr serial vs csr pooled: bit-identical
             assert_eq!(results[1], results[2], "mode {mode:?}");
+        }
+    }
+
+    /// `block_sweep_span` over the full row window must be bit-identical
+    /// to `block_sweep` — same code path, same cached full-batch state.
+    #[test]
+    fn full_span_sweep_matches_block_sweep_bit_for_bit() {
+        for mode in [SolveMode::Direct, SolveMode::Cg { iters: 12 }] {
+            let mut rng = Rng::seed_from(21);
+            let ds = SyntheticSpec::regression(24, 60, 1).generate();
+            let plan = FeaturePlan::new(24, 4, 512);
+            let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, 60, 1);
+
+            let mut be_a = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
+            let mut x_a = x0.clone();
+            let mut p_a = p0.clone();
+            be_a.block_sweep(params(), 1, &corr, &z, &u, &mut x_a, &mut p_a);
+
+            let mut be_b = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), mode);
+            let mut x_b = x0.clone();
+            let mut p_b = p0.clone();
+            be_b.block_sweep_span((0, 60), params(), 1, &corr, &z, &u, &mut x_b, &mut p_b);
+
+            assert_eq!(x_a, x_b, "mode {mode:?}");
+            assert_eq!(p_a, p_b, "mode {mode:?}");
+            // the full window reuses the constructor Gram — no span state
+            assert_eq!(be_b.ledger().gram_builds, plan.ranges.len() as u64);
+        }
+    }
+
+    /// A partial span on the full backend must match a backend built on a
+    /// shard containing exactly those rows — the chunk really is "the
+    /// solver run on the chunk", bit for bit.
+    #[test]
+    fn partial_span_sweep_matches_backend_on_row_slice() {
+        let (r0, r1) = (16usize, 48usize);
+        let cm = r1 - r0;
+        for csr in [false, true] {
+            let mut spec = SyntheticSpec::regression(24, 60, 1);
+            if csr {
+                spec.density = 0.2;
+            }
+            let ds = spec.generate();
+            let shard = ds.shards[0].with_storage_policy(
+                if csr { SparseMode::Always } else { SparseMode::Never },
+                0.0,
+            );
+            let plan = FeaturePlan::new(24, 4, 512);
+            let mut rng = Rng::seed_from(22);
+            let corr: Vec<f32> = (0..cm).map(|_| rng.normal_f32()).collect();
+            let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                (0..len).map(|_| rng.normal_f32()).collect()
+            };
+            let z: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(&mut rng, w)).collect();
+            let u: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(&mut rng, w)).collect();
+            let x0: Vec<Vec<f32>> = plan.ranges.iter().map(|&(_, w)| mk(&mut rng, w)).collect();
+            let p0: Vec<Vec<f32>> = plan.ranges.iter().map(|_| vec![0.0; cm]).collect();
+
+            // sub-shard holding exactly rows [r0, r1)
+            let sub_labels = shard.labels[r0..r1].to_vec();
+            let sub_shard = if csr {
+                let c = match &shard.data {
+                    ShardData::Csr(c) => c,
+                    _ => unreachable!(),
+                };
+                let rows: Vec<Vec<(u32, f32)>> = (r0..r1)
+                    .map(|r| {
+                        let (cols, vals) = c.row(r);
+                        cols.iter().copied().zip(vals.iter().copied()).collect()
+                    })
+                    .collect();
+                crate::data::Shard {
+                    data: ShardData::Csr(Arc::new(crate::linalg::CsrMatrix::from_rows(24, rows))),
+                    labels: sub_labels,
+                    width: 1,
+                }
+            } else {
+                let full = shard.data.as_dense().unwrap();
+                let mut a = Matrix::zeros(cm, 24);
+                for r in 0..cm {
+                    a.row_mut(r).copy_from_slice(full.row(r0 + r));
+                }
+                crate::data::Shard::dense(a, sub_labels, 1)
+            };
+
+            let mut be_sub =
+                NativeBackend::new(&sub_shard, &plan, Box::new(Squared), SolveMode::Direct);
+            let mut x_s = x0.clone();
+            let mut p_s = p0.clone();
+            be_sub.block_sweep(params(), 1, &corr, &z, &u, &mut x_s, &mut p_s);
+
+            let mut be_full =
+                NativeBackend::new(&shard, &plan, Box::new(Squared), SolveMode::Direct);
+            let mut x_f = x0.clone();
+            let mut p_f = p0.clone();
+            be_full.block_sweep_span((r0, r1), params(), 1, &corr, &z, &u, &mut x_f, &mut p_f);
+
+            assert_eq!(x_s, x_f, "csr={csr}");
+            assert_eq!(p_s, p_f, "csr={csr}");
+            // one span Gram per block joined the ledger
+            assert_eq!(be_full.ledger().gram_builds, 2 * plan.ranges.len() as u64);
+            // revisiting the same span reuses its cached state (no new Gram)
+            let mut x_f2 = x0.clone();
+            let mut p_f2 = p0.clone();
+            be_full.block_sweep_span((r0, r1), params(), 1, &corr, &z, &u, &mut x_f2, &mut p_f2);
+            assert_eq!(be_full.ledger().gram_builds, 2 * plan.ranges.len() as u64);
+        }
+    }
+
+    /// Chunk-local omega update equals the matching slice of the full one
+    /// (the loss is per-row separable).
+    #[test]
+    fn omega_update_span_matches_full_slice() {
+        let ds = SyntheticSpec::regression(24, 60, 1).generate();
+        let plan = FeaturePlan::new(24, 2, 512);
+        let mut be = NativeBackend::new(&ds.shards[0], &plan, Box::new(Squared), SolveMode::Direct);
+        let mut rng = Rng::seed_from(23);
+        let c: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+        let mut full = vec![0.0f32; 60];
+        be.omega_update(&c, 2.0, 1.5, &mut full);
+        let (r0, r1) = (10usize, 40usize);
+        let mut chunk = vec![0.0f32; r1 - r0];
+        be.omega_update_span((r0, r1), &c[r0..r1], 2.0, 1.5, &mut chunk);
+        assert_eq!(chunk, full[r0..r1]);
+    }
+
+    /// A backend over a mapped PSD1 shard must produce bit-identical
+    /// sweeps to the resident shard it was written from — dense and CSR.
+    #[test]
+    fn mapped_shard_backend_matches_resident_bit_for_bit() {
+        use crate::data::shardfile::{open_shard, write_shard};
+        for csr in [false, true] {
+            let mut spec = SyntheticSpec::regression(24, 60, 1);
+            if csr {
+                spec.density = 0.2;
+            }
+            let ds = spec.generate();
+            let shard = ds.shards[0].with_storage_policy(
+                if csr { SparseMode::Always } else { SparseMode::Never },
+                0.0,
+            );
+            let mut path = std::env::temp_dir();
+            path.push(format!(
+                "psfit-native-mapped-{}-{}.psd1",
+                std::process::id(),
+                csr
+            ));
+            write_shard(&shard, &path).unwrap();
+            let mapped = open_shard(&path).unwrap();
+            assert!(mapped.data.is_mapped());
+            assert_eq!(mapped.data.is_csr(), csr);
+            assert_eq!(mapped.labels, shard.labels);
+
+            let plan = FeaturePlan::new(24, 4, 512);
+            let mut rng = Rng::seed_from(24);
+            let (corr, z, u, x0, p0) = sweep_inputs(&mut rng, &plan, 60, 1);
+            let mut out = Vec::new();
+            for s in [&shard, &mapped] {
+                let mut be = NativeBackend::new(s, &plan, Box::new(Squared), SolveMode::Direct);
+                let mut x = x0.clone();
+                let mut p = p0.clone();
+                be.block_sweep(params(), 1, &corr, &z, &u, &mut x, &mut p);
+                // and a partial span, through the lazily built chunk Gram
+                let corr_c = &corr[8..40];
+                let mut pc: Vec<Vec<f32>> = plan.ranges.iter().map(|_| vec![0.0; 32]).collect();
+                let mut xc = x0.clone();
+                be.block_sweep_span((8, 40), params(), 1, corr_c, &z, &u, &mut xc, &mut pc);
+                out.push((x, p, xc, pc));
+            }
+            assert_eq!(out[0], out[1], "csr={csr}");
+            let _ = std::fs::remove_file(&path);
         }
     }
 

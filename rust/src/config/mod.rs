@@ -122,6 +122,17 @@ pub struct SolverConfig {
     /// finite state) the watchdog may attempt before the solve returns
     /// `SolveError::Diverged`.
     pub watchdog_restarts: usize,
+    /// Mini-batch window in rows for the inner node solve: each outer
+    /// round visits one seeded chunk of `minibatch` rows instead of the
+    /// full shard (see `admm::minibatch`).  `0` (default) disables
+    /// mini-batching; a window >= the shard rows degenerates to the
+    /// full-batch solve bit-for-bit.  Requires the native backend and
+    /// sync coordination.
+    pub minibatch: usize,
+    /// Seed for the deterministic mini-batch chunk schedule: the same
+    /// seed yields an identical schedule fingerprint and a bit-identical
+    /// trajectory on every transport.
+    pub minibatch_seed: u64,
 }
 
 impl Default for SolverConfig {
@@ -145,6 +156,8 @@ impl Default for SolverConfig {
             deadline_ms: 0,
             watchdog_window: 25,
             watchdog_restarts: 2,
+            minibatch: 0,
+            minibatch_seed: 0,
         }
     }
 }
@@ -466,6 +479,8 @@ impl Config {
                             "deadline_ms" => cfg.solver.deadline_ms = u()? as u64,
                             "watchdog_window" => cfg.solver.watchdog_window = u()?,
                             "watchdog_restarts" => cfg.solver.watchdog_restarts = u()?,
+                            "minibatch" => cfg.solver.minibatch = u()?,
+                            "minibatch_seed" => cfg.solver.minibatch_seed = u()? as u64,
                             other => anyhow::bail!("unknown solver key `{other}`"),
                         }
                     }
@@ -737,7 +752,29 @@ impl Config {
         cfg.solver.validate()?;
         cfg.coordinator.validate()?;
         cfg.platform.validate()?;
+        cfg.validate_cross()?;
         Ok(cfg)
+    }
+
+    /// Cross-section rules no single section can check alone.  Called by
+    /// [`Config::from_json`], and again by the CLI after flags overlay the
+    /// file config.
+    pub fn validate_cross(&self) -> anyhow::Result<()> {
+        if self.solver.minibatch > 0 {
+            if self.platform.backend != BackendKind::Native {
+                anyhow::bail!(
+                    "solver.minibatch requires the native backend \
+                     (partial row spans are a native-kernel feature)"
+                );
+            }
+            if self.coordinator.coordination != CoordinationKind::Sync {
+                anyhow::bail!(
+                    "solver.minibatch requires sync coordination \
+                     (the chunk schedule is indexed by the global round)"
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Serialize to a JSON object that [`Config::from_json`] parses back to
@@ -767,6 +804,8 @@ impl Config {
             ("deadline_ms", Json::Num(s.deadline_ms as f64)),
             ("watchdog_window", Json::Num(s.watchdog_window as f64)),
             ("watchdog_restarts", Json::Num(s.watchdog_restarts as f64)),
+            ("minibatch", Json::Num(s.minibatch as f64)),
+            ("minibatch_seed", Json::Num(s.minibatch_seed as f64)),
         ];
         if !s.checkpoint.is_empty() {
             solver.push(("checkpoint", Json::Str(s.checkpoint.clone())));
@@ -1120,6 +1159,31 @@ mod tests {
         assert_eq!(d.solver.deadline_ms, 0);
         assert_eq!(d.solver.watchdog_window, 25);
         assert_eq!(d.solver.watchdog_restarts, 2);
+    }
+
+    #[test]
+    fn minibatch_keys_roundtrip_and_gate() {
+        let src = r#"{"solver": {"minibatch": 64, "minibatch_seed": 9}}"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.solver.minibatch, 64);
+        assert_eq!(cfg.solver.minibatch_seed, 9);
+        // defaults: mini-batching off
+        assert_eq!(Config::default().solver.minibatch, 0);
+        assert_eq!(Config::default().solver.minibatch_seed, 0);
+        // the window is native-backend + sync-coordination only
+        for bad in [
+            r#"{"solver": {"minibatch": 64}, "platform": {"backend": "xla"}}"#,
+            r#"{"solver": {"minibatch": 64},
+                "coordinator": {"coordination": "async"}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // minibatch == 0 is compatible with everything
+        let src = r#"{"platform": {"backend": "xla"}}"#;
+        assert!(Config::from_json(&Json::parse(src).unwrap()).is_ok());
     }
 
     #[test]

@@ -138,40 +138,141 @@ pub fn load_csv_sanitized(path: &Path) -> anyhow::Result<Dataset> {
     load_csv_opts(path, true)
 }
 
+/// Outcome of parsing one CSV line (shared by the resident loader and the
+/// streaming `PSD1` converter, so both apply byte-identical parse rules).
+pub(crate) enum CsvLine {
+    /// Blank or comment line.
+    Skip,
+    /// Row dropped by `--sanitize` (non-finite cell).
+    Dropped,
+    /// Parsed cells, label last.
+    Row(Vec<f32>),
+}
+
+/// Parse one CSV line under the exact `load_csv` dialect.
+pub(crate) fn parse_csv_line(lineno: usize, raw: &str, sanitize: bool) -> anyhow::Result<CsvLine> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(CsvLine::Skip);
+    }
+    let cells: Vec<f32> = line
+        .split(',')
+        .map(|c| {
+            c.trim()
+                .parse::<f32>()
+                .map_err(|_| anyhow::anyhow!("line {}: bad number `{c}`", lineno + 1))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(cells.len() >= 2, "line {}: need >= 2 columns", lineno + 1);
+    if let Some(col) = cells.iter().position(|v| !v.is_finite()) {
+        if sanitize {
+            return Ok(CsvLine::Dropped);
+        }
+        anyhow::bail!(
+            "line {}: non-finite value `{}` in column {} \
+             (use --sanitize to drop such rows)",
+            lineno + 1,
+            cells[col],
+            col + 1
+        );
+    }
+    Ok(CsvLine::Row(cells))
+}
+
+/// Outcome of parsing one LIBSVM line (shared like [`CsvLine`]).
+pub(crate) enum SvmLine {
+    /// Blank or comment-only line.
+    Skip,
+    /// Row dropped by `--sanitize` (non-finite label or value).
+    Dropped,
+    /// Label + entries (0-based strictly increasing columns, explicit
+    /// zeros kept — the loader's storage semantics).
+    Row(f32, Vec<(u32, f32)>),
+}
+
+/// Parse one LIBSVM line under the exact `load_libsvm` dialect.
+pub(crate) fn parse_libsvm_line(
+    lineno: usize,
+    raw: &str,
+    sanitize: bool,
+) -> anyhow::Result<SvmLine> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(SvmLine::Skip);
+    }
+    let mut parts = line.split_whitespace();
+    let label: f32 = parts
+        .next()
+        .unwrap()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("line {}: bad label", lineno + 1))?;
+    if !label.is_finite() {
+        if sanitize {
+            return Ok(SvmLine::Dropped);
+        }
+        anyhow::bail!(
+            "line {}: non-finite label `{label}` \
+             (use --sanitize to drop such rows)",
+            lineno + 1
+        );
+    }
+    let mut entries: Vec<(u32, f32)> = Vec::new();
+    for tok in parts {
+        if tok.starts_with("qid:") {
+            continue; // ranking qualifier: not a feature
+        }
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected idx:val, got `{tok}`", lineno + 1))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad index `{idx}`", lineno + 1))?;
+        anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
+        anyhow::ensure!(
+            idx <= u32::MAX as usize,
+            "line {}: index {idx} exceeds the u32 column limit",
+            lineno + 1
+        );
+        let val: f32 = val
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?;
+        if !val.is_finite() {
+            if sanitize {
+                return Ok(SvmLine::Dropped);
+            }
+            anyhow::bail!(
+                "line {}: non-finite value `{val}` at index {idx} \
+                 (use --sanitize to drop such rows)",
+                lineno + 1
+            );
+        }
+        let col = idx - 1;
+        if let Some(&(prev, _)) = entries.last() {
+            anyhow::ensure!(
+                col as u32 > prev,
+                "line {}: indices must be strictly increasing",
+                lineno + 1
+            );
+        }
+        entries.push((col as u32, val));
+    }
+    Ok(SvmLine::Row(label, entries))
+}
+
 fn load_csv_opts(path: &Path, sanitize: bool) -> anyhow::Result<Dataset> {
     let text = std::fs::read_to_string(path)?;
     let mut rows: Vec<Vec<f32>> = Vec::new();
     let mut labels = Vec::new();
     let mut dropped = 0usize;
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let cells: Vec<f32> = line
-            .split(',')
-            .map(|c| {
-                c.trim()
-                    .parse::<f32>()
-                    .map_err(|_| anyhow::anyhow!("line {}: bad number `{c}`", lineno + 1))
-            })
-            .collect::<anyhow::Result<_>>()?;
-        anyhow::ensure!(cells.len() >= 2, "line {}: need >= 2 columns", lineno + 1);
-        if let Some(col) = cells.iter().position(|v| !v.is_finite()) {
-            if sanitize {
-                dropped += 1;
-                continue;
+        match parse_csv_line(lineno, line, sanitize)? {
+            CsvLine::Skip => {}
+            CsvLine::Dropped => dropped += 1,
+            CsvLine::Row(cells) => {
+                labels.push(*cells.last().unwrap());
+                rows.push(cells[..cells.len() - 1].to_vec());
             }
-            anyhow::bail!(
-                "line {}: non-finite value `{}` in column {} \
-                 (use --sanitize to drop such rows)",
-                lineno + 1,
-                cells[col],
-                col + 1
-            );
         }
-        labels.push(*cells.last().unwrap());
-        rows.push(cells[..cells.len() - 1].to_vec());
     }
     if dropped > 0 {
         eprintln!("[sanitize] dropped {dropped} csv row(s) with non-finite values");
@@ -235,76 +336,20 @@ fn load_libsvm_opts(
     let mut labels: Vec<f32> = Vec::new();
     let mut max_col = 0usize;
     let mut dropped = 0usize;
-    'lines: for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let label: f32 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .map_err(|_| anyhow::anyhow!("line {}: bad label", lineno + 1))?;
-        if !label.is_finite() {
-            if sanitize {
-                dropped += 1;
-                continue;
-            }
-            anyhow::bail!(
-                "line {}: non-finite label `{label}` \
-                 (use --sanitize to drop such rows)",
-                lineno + 1
-            );
-        }
-        let mut entries: Vec<(u32, f32)> = Vec::new();
-        for tok in parts {
-            if tok.starts_with("qid:") {
-                continue; // ranking qualifier: not a feature
-            }
-            let (idx, val) = tok
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: expected idx:val, got `{tok}`", lineno + 1))?;
-            let idx: usize = idx
-                .parse()
-                .map_err(|_| anyhow::anyhow!("line {}: bad index `{idx}`", lineno + 1))?;
-            anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
-            anyhow::ensure!(
-                idx <= u32::MAX as usize,
-                "line {}: index {idx} exceeds the u32 column limit",
-                lineno + 1
-            );
-            let val: f32 = val
-                .parse()
-                .map_err(|_| anyhow::anyhow!("line {}: bad value `{val}`", lineno + 1))?;
-            if !val.is_finite() {
-                if sanitize {
-                    dropped += 1;
-                    continue 'lines;
+    for (lineno, raw) in text.lines().enumerate() {
+        match parse_libsvm_line(lineno, raw, sanitize)? {
+            SvmLine::Skip => {}
+            SvmLine::Dropped => dropped += 1,
+            SvmLine::Row(label, entries) => {
+                // column span committed only for rows that survive, so a
+                // dropped row never widens the feature space
+                if let Some(&(last, _)) = entries.last() {
+                    max_col = max_col.max(last as usize + 1);
                 }
-                anyhow::bail!(
-                    "line {}: non-finite value `{val}` at index {idx} \
-                     (use --sanitize to drop such rows)",
-                    lineno + 1
-                );
+                labels.push(label);
+                rows.push(entries);
             }
-            let col = idx - 1;
-            if let Some(&(prev, _)) = entries.last() {
-                anyhow::ensure!(
-                    col as u32 > prev,
-                    "line {}: indices must be strictly increasing",
-                    lineno + 1
-                );
-            }
-            entries.push((col as u32, val));
         }
-        // column span committed only for rows that survive, so a dropped
-        // row never widens the feature space
-        if let Some(&(last, _)) = entries.last() {
-            max_col = max_col.max(last as usize + 1);
-        }
-        labels.push(label);
-        rows.push(entries);
     }
     if dropped > 0 {
         eprintln!("[sanitize] dropped {dropped} libsvm row(s) with non-finite values");

@@ -4,10 +4,14 @@
 pub mod io;
 /// Sample decomposition, shard storage, and the feature plan.
 pub mod partition;
+/// `PSD1` out-of-core shard files: mmap reader + streaming converter.
+pub mod shardfile;
 /// Synthetic dataset generators (paper §4).
 pub mod synthetic;
 
 pub use partition::{FeaturePlan, Shard, ShardData, SparseMode};
+pub use shardfile::{ConvertInput, ConvertOptions, ConvertSummary, MappedShard};
+pub use shardfile::{convert, open_dataset, open_shard, shard_path};
 pub use synthetic::{SyntheticSpec, Task};
 
 use crate::linalg::Matrix;
@@ -94,8 +98,11 @@ impl Dataset {
                 let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(count);
                 for g in g0..g1 {
                     let (si, r) = locate(g);
-                    let csr = self.shards[si].data.as_csr().unwrap();
-                    let (cols, vals) = csr.row(r);
+                    let (cols, vals) = match &self.shards[si].data {
+                        ShardData::Csr(c) => c.row(r),
+                        ShardData::Mapped(m) => m.csr_row(r),
+                        ShardData::Dense(_) => unreachable!("all_csr checked"),
+                    };
                     rows.push(cols.iter().copied().zip(vals.iter().copied()).collect());
                     labels.extend_from_slice(
                         &self.shards[si].labels[r * self.width..(r + 1) * self.width],
@@ -154,6 +161,19 @@ impl Dataset {
                         let dst = a.row_mut(row + r);
                         for (&cc, &v) in cols.iter().zip(vals) {
                             dst[cc as usize] = v;
+                        }
+                    }
+                }
+                ShardData::Mapped(m) => {
+                    for r in 0..m.rows() {
+                        if m.is_csr() {
+                            let (cols, vals) = m.csr_row(r);
+                            let dst = a.row_mut(row + r);
+                            for (&cc, &v) in cols.iter().zip(vals) {
+                                dst[cc as usize] = v;
+                            }
+                        } else {
+                            a.row_mut(row + r).copy_from_slice(m.dense_row(r));
                         }
                     }
                 }

@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 
+use super::shardfile::MappedShard;
 use crate::linalg::{CsrMatrix, Matrix};
 
 /// Storage-format policy for shard design matrices (config
@@ -55,6 +56,10 @@ pub enum ShardData {
     /// Compressed sparse rows — read in place through per-column-block
     /// [`crate::linalg::CsrBlockView`]s.
     Csr(Arc<CsrMatrix>),
+    /// Out-of-core: a `PSD1` shard file consumed in place off a read-only
+    /// memory map, in either of the two layouts above (bit-identical to
+    /// its resident twin — see `data::shardfile`).
+    Mapped(Arc<MappedShard>),
 }
 
 impl ShardData {
@@ -63,6 +68,7 @@ impl ShardData {
         match self {
             ShardData::Dense(a) => a.rows,
             ShardData::Csr(c) => c.rows,
+            ShardData::Mapped(m) => m.rows(),
         }
     }
 
@@ -71,16 +77,20 @@ impl ShardData {
         match self {
             ShardData::Dense(a) => a.cols,
             ShardData::Csr(c) => c.cols,
+            ShardData::Mapped(m) => m.cols(),
         }
     }
 
-    /// Nonzero count (dense storage counts on demand).
+    /// Nonzero count (dense storage counts on demand; mapped shards
+    /// answer from their header, which records the same quantity for the
+    /// matching resident kind).
     pub fn nnz(&self) -> usize {
         match self {
             ShardData::Dense(a) => (0..a.rows)
                 .map(|i| a.row(i).iter().filter(|&&v| v != 0.0).count())
                 .sum(),
             ShardData::Csr(c) => c.nnz(),
+            ShardData::Mapped(m) => m.nnz(),
         }
     }
 
@@ -95,51 +105,74 @@ impl ShardData {
         }
     }
 
-    /// Whether the shard is CSR-backed.
+    /// Whether the shard's *layout* is CSR (true for both resident CSR
+    /// and csr-mapped storage).
     pub fn is_csr(&self) -> bool {
-        matches!(self, ShardData::Csr(_))
+        match self {
+            ShardData::Csr(_) => true,
+            ShardData::Mapped(m) => m.is_csr(),
+            ShardData::Dense(_) => false,
+        }
     }
 
-    /// "dense" or "csr" — for reports and tests.
+    /// Whether the shard is consumed off a memory map.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, ShardData::Mapped(_))
+    }
+
+    /// "dense", "csr", "mapped-dense" or "mapped-csr" — for reports and
+    /// tests.
     pub fn storage_name(&self) -> &'static str {
         match self {
             ShardData::Dense(_) => "dense",
             ShardData::Csr(_) => "csr",
+            ShardData::Mapped(m) if m.is_csr() => "mapped-csr",
+            ShardData::Mapped(_) => "mapped-dense",
         }
     }
 
-    /// The dense storage, if that is the active kind.
+    /// The resident dense storage, if that is the active kind.
     pub fn as_dense(&self) -> Option<&Arc<Matrix>> {
         match self {
             ShardData::Dense(a) => Some(a),
-            ShardData::Csr(_) => None,
+            _ => None,
         }
     }
 
-    /// The CSR storage, if that is the active kind.
+    /// The resident CSR storage, if that is the active kind.
     pub fn as_csr(&self) -> Option<&Arc<CsrMatrix>> {
         match self {
             ShardData::Csr(c) => Some(c),
-            ShardData::Dense(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The mapped storage, if that is the active kind.
+    pub fn as_mapped(&self) -> Option<&Arc<MappedShard>> {
+        match self {
+            ShardData::Mapped(m) => Some(m),
+            _ => None,
         }
     }
 
     /// Dense view of the data: a cheap `Arc` clone for dense storage, a
-    /// materialization for CSR (the XLA staging path and the centralized
-    /// baselines need packed rows).
+    /// materialization for CSR and mapped shards (the XLA staging path and
+    /// the centralized baselines need packed rows).
     pub fn to_dense(&self) -> Arc<Matrix> {
         match self {
             ShardData::Dense(a) => a.clone(),
             ShardData::Csr(c) => Arc::new(c.to_dense()),
+            ShardData::Mapped(m) => Arc::new(m.to_matrix()),
         }
     }
 
     /// CSR view of the data: a cheap `Arc` clone for CSR storage, a
-    /// compression for dense.
+    /// compression/materialization otherwise.
     pub fn to_csr(&self) -> Arc<CsrMatrix> {
         match self {
             ShardData::Dense(a) => Arc::new(CsrMatrix::from_dense(a)),
             ShardData::Csr(c) => c.clone(),
+            ShardData::Mapped(m) => Arc::new(m.to_csr_matrix()),
         }
     }
 
@@ -148,6 +181,7 @@ impl ShardData {
         match self {
             ShardData::Dense(a) => a.matvec(x, y),
             ShardData::Csr(c) => c.spmv(x, y),
+            ShardData::Mapped(m) => m.matvec(x, y),
         }
     }
 
@@ -156,18 +190,26 @@ impl ShardData {
         match self {
             ShardData::Dense(a) => a.matvec_t(v, y),
             ShardData::Csr(c) => c.spmv_t(v, y),
+            ShardData::Mapped(m) => m.matvec_t(v, y),
         }
     }
 
     /// The storage the policy picks for this data (cheap `Arc` clone when
     /// no conversion is needed).  `Auto` compares the measured density
-    /// against `threshold` (CSR at or below it).
+    /// against `threshold` (CSR at or below it).  A mapped shard whose
+    /// layout already matches the decision stays mapped — out-of-core data
+    /// is only materialized when the policy demands the *other* layout.
     pub fn with_policy(&self, mode: SparseMode, threshold: f64) -> ShardData {
         let want_csr = match mode {
             SparseMode::Always => true,
             SparseMode::Never => false,
             SparseMode::Auto => self.density() <= threshold,
         };
+        if let ShardData::Mapped(m) = self {
+            if m.is_csr() == want_csr {
+                return self.clone();
+            }
+        }
         if want_csr {
             ShardData::Csr(self.to_csr())
         } else {

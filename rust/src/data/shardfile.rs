@@ -1,0 +1,1542 @@
+//! `PSD1` — the out-of-core shard file format and its streaming converter.
+//!
+//! A `PSD1` file holds ONE node's shard (design matrix + labels) in a
+//! layout that memory-maps straight into the SIMD kernel layer with zero
+//! copy: dense payloads are stored at the exact padded row stride of
+//! [`Matrix`] (64-byte-aligned row starts), CSR payloads store the exact
+//! four arrays of [`CsrMatrix`] *including* the `SIMD_PAD` run padding, so
+//! a mapped shard and its RAM-resident twin are bit-identical inputs to
+//! every kernel — the property `tests/oocore.rs` pins end to end.
+//!
+//! # Layout (little-endian, 144-byte header, 64-byte-aligned sections)
+//!
+//! ```text
+//! off   0  magic "PSD1"
+//! off   4  u32 version (1)
+//! off   8  u32 kind (0 dense | 1 csr)
+//! off  12  u32 width (label columns)
+//! off  16  u64 rows | 24 u64 cols | 32 u64 stride (dense; 0 csr) | 40 u64 nnz
+//! off  48  5 x (u64 offset, u64 len): labels, then
+//!            dense: vals(padded rows x stride f32), -, -, -
+//!            csr:   row_ptr(u64), row_len(u64), col_idx(u32), vals(f32)
+//! off 128  u64 reserved (0)
+//! off 136  u64 FNV-1a checksum of bytes [0, 136)
+//! ```
+//!
+//! Every section offset is a multiple of 64; mappings are page-aligned, so
+//! mapped sections inherit the alignment [`crate::linalg::AlignedVec`]
+//! guarantees for resident storage.  The header checksum guards the
+//! *structure*; payload sections are not checksummed (faulting a terabyte
+//! shard to verify it would defeat the point).  Structural CSR arrays
+//! (`row_ptr`/`row_len`) are decoded and bounds-validated at open, so a
+//! corrupt payload can at worst produce a Rust bounds panic — never UB or
+//! a silent partial read.  All open errors are prefixed `psd1:` with a
+//! stable name per failure mode.
+//!
+//! The converter ([`convert`]) turns LIBSVM/CSV input into one `PSD1` file
+//! per node in two streaming passes — O(rows) bookkeeping (labels, per-row
+//! entry counts), never the full matrix — and reproduces the resident
+//! pipeline (`io::load_libsvm` → `Dataset::resplit` → storage policy)
+//! bit-for-bit.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::io::{parse_csv_line, parse_libsvm_line, CsvLine, SvmLine};
+use super::partition::{shard_sizes, Shard, ShardData, SparseMode};
+use crate::linalg::csr::SIMD_PAD;
+use crate::linalg::matrix::padded_stride;
+use crate::linalg::{ColumnBlockView, CsrBlockView, CsrMatrix, CsrParts, Matrix};
+use crate::util::mmap::Mmap;
+use crate::util::{fnv1a, fnv1a_fold};
+
+/// File magic.
+pub const MAGIC: &[u8; 4] = b"PSD1";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Header length in bytes (checksum included).
+pub const HEADER_LEN: usize = 144;
+/// Section alignment in bytes.
+pub const ALIGN: usize = 64;
+
+const KIND_DENSE: u32 = 0;
+const KIND_CSR: u32 = 1;
+
+const SEC_LABELS: usize = 0;
+const SEC_DENSE_VALS: usize = 1;
+const SEC_ROW_PTR: usize = 1;
+const SEC_ROW_LEN: usize = 2;
+const SEC_COL_IDX: usize = 3;
+const SEC_VALS: usize = 4;
+
+fn align_up(x: u64) -> u64 {
+    x.div_ceil(ALIGN as u64) * ALIGN as u64
+}
+
+/// Decoded header fields.
+#[derive(Debug, Clone)]
+struct Header {
+    kind: u32,
+    width: usize,
+    rows: usize,
+    cols: usize,
+    stride: usize,
+    nnz: usize,
+    sections: [(u64, u64); 5],
+}
+
+impl Header {
+    fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..4].copy_from_slice(MAGIC);
+        b[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        b[8..12].copy_from_slice(&self.kind.to_le_bytes());
+        b[12..16].copy_from_slice(&(self.width as u32).to_le_bytes());
+        b[16..24].copy_from_slice(&(self.rows as u64).to_le_bytes());
+        b[24..32].copy_from_slice(&(self.cols as u64).to_le_bytes());
+        b[32..40].copy_from_slice(&(self.stride as u64).to_le_bytes());
+        b[40..48].copy_from_slice(&(self.nnz as u64).to_le_bytes());
+        for (i, &(off, len)) in self.sections.iter().enumerate() {
+            let at = 48 + i * 16;
+            b[at..at + 8].copy_from_slice(&off.to_le_bytes());
+            b[at + 8..at + 16].copy_from_slice(&len.to_le_bytes());
+        }
+        // bytes 128..136 reserved (zero)
+        let sum = fnv1a(&b[..136]);
+        b[136..144].copy_from_slice(&sum.to_le_bytes());
+        b
+    }
+
+    fn decode(bytes: &[u8]) -> anyhow::Result<Header> {
+        anyhow::ensure!(bytes.len() >= HEADER_LEN, "psd1: truncated header");
+        anyhow::ensure!(&bytes[0..4] == MAGIC, "psd1: bad magic");
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        anyhow::ensure!(
+            u64_at(136) == fnv1a(&bytes[..136]),
+            "psd1: header checksum mismatch"
+        );
+        let version = u32_at(4);
+        anyhow::ensure!(version == VERSION, "psd1: unsupported version {version}");
+        let kind = u32_at(8);
+        anyhow::ensure!(
+            kind == KIND_DENSE || kind == KIND_CSR,
+            "psd1: unknown shard kind {kind}"
+        );
+        let as_usize = |v: u64| -> anyhow::Result<usize> {
+            usize::try_from(v).map_err(|_| anyhow::anyhow!("psd1: header field overflow"))
+        };
+        let mut sections = [(0u64, 0u64); 5];
+        for (i, s) in sections.iter_mut().enumerate() {
+            *s = (u64_at(48 + i * 16), u64_at(48 + i * 16 + 8));
+        }
+        Ok(Header {
+            kind,
+            width: u32_at(12) as usize,
+            rows: as_usize(u64_at(16))?,
+            cols: as_usize(u64_at(24))?,
+            stride: as_usize(u64_at(32))?,
+            nnz: as_usize(u64_at(40))?,
+            sections,
+        })
+    }
+
+    /// Section offsets laid out sequentially from the first aligned
+    /// position after the header, given the section byte lengths.
+    fn layout(lens: [u64; 5]) -> [(u64, u64); 5] {
+        let mut sections = [(0u64, 0u64); 5];
+        let mut pos = align_up(HEADER_LEN as u64);
+        for (i, &len) in lens.iter().enumerate() {
+            if len > 0 {
+                sections[i] = (pos, len);
+                pos = align_up(pos + len);
+            }
+        }
+        sections
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+/// Buffered positioned writer for one file section: bytes accumulate and
+/// flush at an explicit file offset, so two sections (CSR `col_idx` and
+/// `vals`) can interleave row-by-row during a streaming pass without
+/// holding either in memory.
+struct SectionWriter<'f> {
+    file: &'f File,
+    pos: u64,
+    buf: Vec<u8>,
+}
+
+impl<'f> SectionWriter<'f> {
+    fn new(file: &'f File, pos: u64) -> SectionWriter<'f> {
+        SectionWriter {
+            file,
+            pos,
+            buf: Vec::with_capacity(1 << 18),
+        }
+    }
+
+    fn write(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.buf.extend_from_slice(bytes);
+        if self.buf.len() >= 1 << 18 {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn write_f32s(&mut self, xs: &[f32]) -> anyhow::Result<()> {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        if self.buf.len() >= 1 << 18 {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> anyhow::Result<()> {
+        if !self.buf.is_empty() {
+            let mut f = self.file;
+            f.seek(SeekFrom::Start(self.pos))?;
+            f.write_all(&self.buf)?;
+            self.pos += self.buf.len() as u64;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Flush and return the file position one past the last byte written.
+    fn finish(mut self) -> anyhow::Result<u64> {
+        self.flush()?;
+        Ok(self.pos)
+    }
+}
+
+fn ensure_little_endian() -> anyhow::Result<()> {
+    #[cfg(target_endian = "big")]
+    anyhow::bail!("psd1: little-endian hosts only");
+    #[allow(unreachable_code)]
+    Ok(())
+}
+
+fn write_header_and_labels(
+    file: &File,
+    header: &Header,
+    labels: &[f32],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        labels.len() == header.rows * header.width,
+        "psd1: label shape mismatch at write"
+    );
+    let mut w = SectionWriter::new(file, 0);
+    w.write(&header.encode())?;
+    w.finish()?;
+    let (off, _) = header.sections[SEC_LABELS];
+    let mut w = SectionWriter::new(file, off);
+    w.write_f32s(labels)?;
+    w.finish()?;
+    Ok(())
+}
+
+/// Write an in-memory shard to `path` in its current storage kind
+/// (mapped shards re-serialize as their underlying kind).
+pub fn write_shard(shard: &Shard, path: &Path) -> anyhow::Result<()> {
+    match &shard.data {
+        ShardData::Dense(a) => write_dense(
+            path,
+            shard.width,
+            &shard.labels,
+            a.rows,
+            a.cols,
+            a.stride(),
+            a.padded_data(),
+            shard.data.nnz(),
+        ),
+        ShardData::Csr(c) => write_csr(
+            path,
+            shard.width,
+            &shard.labels,
+            c.rows,
+            c.cols,
+            c.parts(),
+            c.nnz(),
+        ),
+        ShardData::Mapped(m) => {
+            if m.is_csr() {
+                write_csr(
+                    path,
+                    shard.width,
+                    &shard.labels,
+                    m.rows(),
+                    m.cols(),
+                    m.csr_parts(),
+                    m.nnz(),
+                )
+            } else {
+                write_dense(
+                    path,
+                    shard.width,
+                    &shard.labels,
+                    m.rows(),
+                    m.cols(),
+                    m.stride(),
+                    m.dense_padded(),
+                    m.nnz(),
+                )
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_dense(
+    path: &Path,
+    width: usize,
+    labels: &[f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+    padded: &[f32],
+    nnz: usize,
+) -> anyhow::Result<()> {
+    ensure_little_endian()?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = File::create(path)?;
+    let lens = {
+        let mut l = [0u64; 5];
+        l[SEC_LABELS] = (rows * width * 4) as u64;
+        l[SEC_DENSE_VALS] = (rows * stride * 4) as u64;
+        l
+    };
+    let header = Header {
+        kind: KIND_DENSE,
+        width,
+        rows,
+        cols,
+        stride,
+        nnz,
+        sections: Header::layout(lens),
+    };
+    write_header_and_labels(&file, &header, labels)?;
+    let mut w = SectionWriter::new(&file, header.sections[SEC_DENSE_VALS].0);
+    w.write_f32s(&padded[..rows * stride])?;
+    w.finish()?;
+    file.sync_all()?;
+    Ok(())
+}
+
+fn write_csr(
+    path: &Path,
+    width: usize,
+    labels: &[f32],
+    rows: usize,
+    cols: usize,
+    parts: CsrParts<'_>,
+    nnz: usize,
+) -> anyhow::Result<()> {
+    ensure_little_endian()?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = File::create(path)?;
+    let entries = parts.row_ptr[rows];
+    let lens = {
+        let mut l = [0u64; 5];
+        l[SEC_LABELS] = (rows * width * 4) as u64;
+        l[SEC_ROW_PTR] = ((rows + 1) * 8) as u64;
+        l[SEC_ROW_LEN] = (rows * 8) as u64;
+        l[SEC_COL_IDX] = (entries * 4) as u64;
+        l[SEC_VALS] = (entries * 4) as u64;
+        l
+    };
+    let header = Header {
+        kind: KIND_CSR,
+        width,
+        rows,
+        cols,
+        stride: 0,
+        nnz,
+        sections: Header::layout(lens),
+    };
+    write_header_and_labels(&file, &header, labels)?;
+    let mut w = SectionWriter::new(&file, header.sections[SEC_ROW_PTR].0);
+    for &p in parts.row_ptr {
+        w.write(&(p as u64).to_le_bytes())?;
+    }
+    w.finish()?;
+    let mut w = SectionWriter::new(&file, header.sections[SEC_ROW_LEN].0);
+    for &l in parts.row_len {
+        w.write(&(l as u64).to_le_bytes())?;
+    }
+    w.finish()?;
+    let mut w = SectionWriter::new(&file, header.sections[SEC_COL_IDX].0);
+    for &c in parts.col_idx {
+        w.write(&c.to_le_bytes())?;
+    }
+    w.finish()?;
+    let mut w = SectionWriter::new(&file, header.sections[SEC_VALS].0);
+    w.write_f32s(parts.vals)?;
+    w.finish()?;
+    file.sync_all()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Mapped shards
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum MappedKind {
+    Dense {
+        stride: usize,
+        /// Byte range of the padded values section.
+        vals: (usize, usize),
+    },
+    Csr {
+        /// Decoded at open (small, O(rows)); the entry arrays stay mapped.
+        row_ptr: Vec<usize>,
+        row_len: Vec<usize>,
+        col_idx: (usize, usize),
+        vals: (usize, usize),
+    },
+}
+
+/// A `PSD1` shard consumed in place off a read-only memory map — the
+/// out-of-core twin of `Dense`/`Csr` storage (see the module docs for the
+/// exact bit-parity contract).
+#[derive(Debug)]
+pub struct MappedShard {
+    map: Mmap,
+    path: PathBuf,
+    kind: MappedKind,
+    rows: usize,
+    cols: usize,
+    width: usize,
+    nnz: usize,
+}
+
+impl MappedShard {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Label width recorded in the header.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Stored-entry count from the header: nonzeros for a dense payload,
+    /// real stored entries for CSR — the same semantics as the matching
+    /// resident storage, so policy decisions and problem hashes agree.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Whether the payload is CSR.
+    pub fn is_csr(&self) -> bool {
+        matches!(self.kind, MappedKind::Csr { .. })
+    }
+
+    /// Source file path (for reports).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn f32_section(&self, range: (usize, usize)) -> &[f32] {
+        let (off, len) = range;
+        let bytes = &self.map.as_slice()[off..off + len];
+        // Safety: offset 64-byte-aligned within a page-aligned map (both
+        // validated at open), length a multiple of 4, and any bit pattern
+        // is a valid f32.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, len / 4) }
+    }
+
+    fn u32_section(&self, range: (usize, usize)) -> &[u32] {
+        let (off, len) = range;
+        let bytes = &self.map.as_slice()[off..off + len];
+        // Safety: as in `f32_section`.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u32, len / 4) }
+    }
+
+    /// Dense padded stride (panics on CSR payloads).
+    pub fn stride(&self) -> usize {
+        match &self.kind {
+            MappedKind::Dense { stride, .. } => *stride,
+            MappedKind::Csr { .. } => panic!("stride of a csr-mapped shard"),
+        }
+    }
+
+    /// The full padded dense payload (`rows * stride` f32), read off the
+    /// map — the exact buffer [`Matrix::padded_data`] would hold.
+    pub fn dense_padded(&self) -> &[f32] {
+        match &self.kind {
+            MappedKind::Dense { vals, .. } => self.f32_section(*vals),
+            MappedKind::Csr { .. } => panic!("dense payload of a csr-mapped shard"),
+        }
+    }
+
+    /// Logical row `i` of a dense payload.
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        let stride = self.stride();
+        &self.dense_padded()[i * stride..i * stride + self.cols]
+    }
+
+    /// Whole-shard dense view for the kernel layer.
+    pub fn dense_view(&self) -> ColumnBlockView<'_> {
+        ColumnBlockView::new(self.dense_padded(), self.rows, self.cols, self.stride(), 0)
+    }
+
+    /// The CSR arrays as borrowed [`CsrParts`] (structure arrays decoded
+    /// at open, entry arrays straight off the map).
+    pub fn csr_parts(&self) -> CsrParts<'_> {
+        match &self.kind {
+            MappedKind::Csr {
+                row_ptr,
+                row_len,
+                col_idx,
+                vals,
+            } => CsrParts {
+                row_ptr,
+                row_len,
+                col_idx: self.u32_section(*col_idx),
+                vals: self.f32_section(*vals),
+            },
+            MappedKind::Dense { .. } => panic!("csr parts of a dense-mapped shard"),
+        }
+    }
+
+    /// Row `i`'s real entries of a CSR payload.
+    pub fn csr_row(&self, i: usize) -> (&[u32], &[f32]) {
+        self.csr_parts().row(i)
+    }
+
+    /// All real stored values in row-major entry order (padding excluded)
+    /// — the same stream [`CsrMatrix::values`] yields, so the checkpoint
+    /// problem hash samples identically.
+    pub fn csr_values(&self) -> impl Iterator<Item = f32> + '_ {
+        let parts = self.csr_parts();
+        (0..self.rows).flat_map(move |i| parts.row(i).1.iter().copied())
+    }
+
+    /// Per-row entry subranges for a column block (CSR payloads).
+    pub fn block_ranges(&self, col0: usize, width: usize) -> Vec<(usize, usize)> {
+        assert!(col0 + width <= self.cols, "column block out of range");
+        self.csr_parts().block_ranges(col0, width)
+    }
+
+    /// Block view through precomputed ranges (CSR payloads).
+    pub fn block_view<'a>(
+        &'a self,
+        ranges: &'a [(usize, usize)],
+        col0: usize,
+        width: usize,
+    ) -> CsrBlockView<'a> {
+        CsrBlockView::new(self.csr_parts(), 0, self.rows, col0, width, ranges)
+    }
+
+    /// Materialize as a resident dense matrix (bit-identical storage).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        match &self.kind {
+            MappedKind::Dense { .. } => {
+                for i in 0..self.rows {
+                    out.row_mut(i).copy_from_slice(self.dense_row(i));
+                }
+            }
+            MappedKind::Csr { .. } => {
+                for i in 0..self.rows {
+                    let (cols, vals) = self.csr_row(i);
+                    let row = out.row_mut(i);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        row[c as usize] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize as a resident CSR matrix (bit-identical arrays: the
+    /// builder re-derives the exact padding the file stores).
+    pub fn to_csr_matrix(&self) -> CsrMatrix {
+        match &self.kind {
+            MappedKind::Csr { .. } => {
+                let rows: Vec<Vec<(u32, f32)>> = (0..self.rows)
+                    .map(|i| {
+                        let (cols, vals) = self.csr_row(i);
+                        cols.iter().copied().zip(vals.iter().copied()).collect()
+                    })
+                    .collect();
+                CsrMatrix::from_rows(self.cols, rows)
+            }
+            MappedKind::Dense { .. } => CsrMatrix::from_dense(&self.to_matrix()),
+        }
+    }
+
+    /// y = A x, dispatched on the mapped payload kind.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match &self.kind {
+            MappedKind::Dense { .. } => crate::linalg::kernels::matvec(&self.dense_view(), x, y),
+            MappedKind::Csr { .. } => {
+                crate::linalg::csr::spmv_parts(self.csr_parts(), self.cols, x, y)
+            }
+        }
+    }
+
+    /// y = A^T v, dispatched on the mapped payload kind.
+    pub fn matvec_t(&self, v: &[f32], y: &mut [f32]) {
+        match &self.kind {
+            MappedKind::Dense { .. } => crate::linalg::kernels::matvec_t(&self.dense_view(), v, y),
+            MappedKind::Csr { .. } => {
+                crate::linalg::csr::spmv_t_parts(self.csr_parts(), self.cols, v, y)
+            }
+        }
+    }
+}
+
+/// Open a `PSD1` shard file: validate the header, decode the CSR
+/// structure arrays, copy the labels out, and return a [`Shard`] whose
+/// design matrix is consumed lazily off the map.
+pub fn open_shard(path: &Path) -> anyhow::Result<Shard> {
+    ensure_little_endian()?;
+    let file = File::open(path).map_err(|e| anyhow::anyhow!("psd1: open {}: {e}", path.display()))?;
+    let map = Mmap::map(&file)?;
+    let bytes = map.as_slice();
+    let header = Header::decode(bytes)?;
+    anyhow::ensure!(
+        header.width >= 1 && header.rows >= 1 && header.cols >= 1,
+        "psd1: degenerate shape"
+    );
+
+    let section = |idx: usize, expect_len: Option<u64>| -> anyhow::Result<(usize, usize)> {
+        let (off, len) = header.sections[idx];
+        anyhow::ensure!(off % ALIGN as u64 == 0, "psd1: misaligned section offset");
+        anyhow::ensure!(
+            off >= HEADER_LEN as u64 && len % 4 == 0,
+            "psd1: corrupt section bounds"
+        );
+        let end = off
+            .checked_add(len)
+            .ok_or_else(|| anyhow::anyhow!("psd1: corrupt section bounds"))?;
+        anyhow::ensure!(end <= bytes.len() as u64, "psd1: truncated file");
+        if let Some(e) = expect_len {
+            anyhow::ensure!(len == e, "psd1: section length mismatch");
+        }
+        Ok((off as usize, len as usize))
+    };
+
+    let labels_sec = section(SEC_LABELS, Some((header.rows * header.width * 4) as u64))?;
+    let labels: Vec<f32> = bytes[labels_sec.0..labels_sec.0 + labels_sec.1]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let kind = match header.kind {
+        KIND_DENSE => {
+            anyhow::ensure!(
+                header.stride == padded_stride(header.cols),
+                "psd1: dense stride mismatch"
+            );
+            let vals = section(
+                SEC_DENSE_VALS,
+                Some((header.rows * header.stride * 4) as u64),
+            )?;
+            MappedKind::Dense {
+                stride: header.stride,
+                vals,
+            }
+        }
+        KIND_CSR => {
+            let ptr_sec = section(SEC_ROW_PTR, Some(((header.rows + 1) * 8) as u64))?;
+            let len_sec = section(SEC_ROW_LEN, Some((header.rows * 8) as u64))?;
+            let decode_u64s = |(off, len): (usize, usize)| -> anyhow::Result<Vec<usize>> {
+                bytes[off..off + len]
+                    .chunks_exact(8)
+                    .map(|c| {
+                        usize::try_from(u64::from_le_bytes(c.try_into().unwrap()))
+                            .map_err(|_| anyhow::anyhow!("psd1: corrupt csr index"))
+                    })
+                    .collect()
+            };
+            let row_ptr = decode_u64s(ptr_sec)?;
+            let row_len = decode_u64s(len_sec)?;
+            let entries = row_ptr[header.rows];
+            let col_idx = section(SEC_COL_IDX, Some((entries * 4) as u64))?;
+            let vals = section(SEC_VALS, Some((entries * 4) as u64))?;
+            // structure validation: every row slice must be in bounds so
+            // reads can never escape the entry arrays
+            for i in 0..header.rows {
+                anyhow::ensure!(
+                    row_ptr[i] <= row_ptr[i + 1]
+                        && row_ptr[i] + row_len[i] <= row_ptr[i + 1]
+                        && row_ptr[i + 1] <= entries,
+                    "psd1: corrupt csr index"
+                );
+            }
+            MappedKind::Csr {
+                row_ptr,
+                row_len,
+                col_idx,
+                vals,
+            }
+        }
+        _ => unreachable!("kind validated in decode"),
+    };
+
+    let mapped = MappedShard {
+        map,
+        path: path.to_path_buf(),
+        kind,
+        rows: header.rows,
+        cols: header.cols,
+        width: header.width,
+        nnz: header.nnz,
+    };
+    Ok(Shard {
+        width: mapped.width,
+        labels,
+        data: ShardData::Mapped(Arc::new(mapped)),
+    })
+}
+
+/// Open a set of `PSD1` shard files (one per node, in roster order) as a
+/// [`Dataset`](super::Dataset).  All shards must agree on feature count
+/// and label width; planted-truth fields are empty (real data has no
+/// oracle support).
+pub fn open_dataset(paths: &[PathBuf]) -> anyhow::Result<super::Dataset> {
+    anyhow::ensure!(!paths.is_empty(), "psd1: no shard files given");
+    let mut shards = Vec::with_capacity(paths.len());
+    for p in paths {
+        shards.push(open_shard(p)?);
+    }
+    let cols = shards[0].data.cols();
+    let width = shards[0].width;
+    for (s, p) in shards.iter().zip(paths) {
+        anyhow::ensure!(
+            s.data.cols() == cols && s.width == width,
+            "psd1: {} has shape ({}, width {}) but {} has ({cols}, width {width})",
+            p.display(),
+            s.data.cols(),
+            s.width,
+            paths[0].display()
+        );
+    }
+    Ok(super::Dataset {
+        shards,
+        x_true: Vec::new(),
+        support_true: Vec::new(),
+        n_features: cols,
+        width,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming conversion
+// ---------------------------------------------------------------------------
+
+/// What `convert` reads.
+#[derive(Debug, Clone)]
+pub enum ConvertInput {
+    /// LIBSVM/SVMLight text (same dialect as `io::load_libsvm`).
+    Libsvm(PathBuf),
+    /// Dense CSV, last column = label (same dialect as `io::load_csv`).
+    Csv(PathBuf),
+}
+
+/// Conversion knobs — mirrors the fit-time storage policy so a converted
+/// file reproduces the resident pipeline exactly.
+#[derive(Debug, Clone)]
+pub struct ConvertOptions {
+    /// Shard count (one `PSD1` file per node).
+    pub nodes: usize,
+    /// Storage policy, decided per shard exactly like
+    /// [`ShardData::with_policy`] on the resident pipeline.
+    pub mode: SparseMode,
+    /// Density threshold for [`SparseMode::Auto`].
+    pub threshold: f64,
+    /// Pin the feature count (else the largest index seen).
+    pub n_features: Option<usize>,
+    /// Drop rows with non-finite values instead of erroring.
+    pub sanitize: bool,
+}
+
+/// One emitted shard file.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Path of the `PSD1` file.
+    pub path: PathBuf,
+    /// Rows in this shard.
+    pub rows: usize,
+    /// "dense" or "csr".
+    pub storage: &'static str,
+    /// Stored-entry count recorded in the header.
+    pub nnz: usize,
+}
+
+/// Conversion result summary.
+#[derive(Debug, Clone)]
+pub struct ConvertSummary {
+    /// Per-shard reports, in node order.
+    pub shards: Vec<ShardReport>,
+    /// Total rows converted.
+    pub rows: usize,
+    /// Feature count.
+    pub cols: usize,
+    /// Stored-entry fraction over the whole input.
+    pub density: f64,
+    /// Rows dropped by `--sanitize`.
+    pub dropped: usize,
+}
+
+struct Scan {
+    rows: usize,
+    max_col: usize,
+    /// Stored entries per surviving row (LIBSVM: file entries incl.
+    /// explicit zeros; CSV: nonzero cells) — the unit the resident
+    /// density/policy math uses for the matching storage kind.
+    row_entries: Vec<u32>,
+    dropped: usize,
+}
+
+fn scan_input(input: &ConvertInput, sanitize: bool) -> anyhow::Result<Scan> {
+    let mut scan = Scan {
+        rows: 0,
+        max_col: 0,
+        row_entries: Vec::new(),
+        dropped: 0,
+    };
+    let path = match input {
+        ConvertInput::Libsvm(p) | ConvertInput::Csv(p) => p,
+    };
+    let reader = BufReader::new(
+        File::open(path).map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?,
+    );
+    let mut csv_cols: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        match input {
+            ConvertInput::Libsvm(_) => match parse_libsvm_line(lineno, &line, sanitize)? {
+                SvmLine::Skip => {}
+                SvmLine::Dropped => scan.dropped += 1,
+                SvmLine::Row(_, entries) => {
+                    if let Some(&(last, _)) = entries.last() {
+                        scan.max_col = scan.max_col.max(last as usize + 1);
+                    }
+                    scan.row_entries.push(entries.len() as u32);
+                    scan.rows += 1;
+                }
+            },
+            ConvertInput::Csv(_) => match parse_csv_line(lineno, &line, sanitize)? {
+                CsvLine::Skip => {}
+                CsvLine::Dropped => scan.dropped += 1,
+                CsvLine::Row(cells) => {
+                    let n = cells.len() - 1;
+                    match csv_cols {
+                        None => csv_cols = Some(n),
+                        Some(c) => anyhow::ensure!(c == n, "ragged rows in csv"),
+                    }
+                    scan.max_col = scan.max_col.max(n);
+                    scan.row_entries
+                        .push(cells[..n].iter().filter(|&&v| v != 0.0).count() as u32);
+                    scan.rows += 1;
+                }
+            },
+        }
+    }
+    Ok(scan)
+}
+
+fn padded_entries(len: usize) -> usize {
+    if len == 0 {
+        0
+    } else {
+        len.div_ceil(SIMD_PAD) * SIMD_PAD
+    }
+}
+
+/// One parsed input row handed to a sink, in whichever representation the
+/// source provides (so zero-sign and explicit-zero semantics match the
+/// resident loaders exactly — see the sink methods).
+enum RowRef<'a> {
+    Sparse(&'a [(u32, f32)]),
+    DenseCells(&'a [f32]),
+}
+
+/// Streaming writer for one node's `PSD1` file.
+struct NodeSink {
+    file: File,
+    path: PathBuf,
+    csr: bool,
+    rows_expected: usize,
+    rows_seen: usize,
+    cols: usize,
+    width: usize,
+    labels: Vec<f32>,
+    nnz: usize,
+    // dense state
+    stride: usize,
+    rowbuf: Vec<f32>,
+    dense_pos: u64,
+    dense_buf: Vec<u8>,
+    // csr state
+    row_ptr: Vec<usize>,
+    row_len: Vec<usize>,
+    col_pos: u64,
+    col_buf: Vec<u8>,
+    val_pos: u64,
+    val_buf: Vec<u8>,
+    sections: [(u64, u64); 5],
+}
+
+impl NodeSink {
+    fn create(
+        path: PathBuf,
+        rows: usize,
+        cols: usize,
+        width: usize,
+        csr: bool,
+        padded_total: usize,
+    ) -> anyhow::Result<NodeSink> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(&path)?;
+        let stride = padded_stride(cols);
+        let lens = {
+            let mut l = [0u64; 5];
+            l[SEC_LABELS] = (rows * width * 4) as u64;
+            if csr {
+                l[SEC_ROW_PTR] = ((rows + 1) * 8) as u64;
+                l[SEC_ROW_LEN] = (rows * 8) as u64;
+                l[SEC_COL_IDX] = (padded_total * 4) as u64;
+                l[SEC_VALS] = (padded_total * 4) as u64;
+            } else {
+                l[SEC_DENSE_VALS] = (rows * stride * 4) as u64;
+            }
+            l
+        };
+        let sections = Header::layout(lens);
+        Ok(NodeSink {
+            file,
+            path,
+            csr,
+            rows_expected: rows,
+            rows_seen: 0,
+            cols,
+            width,
+            labels: Vec::with_capacity(rows * width),
+            nnz: 0,
+            stride,
+            rowbuf: vec![0.0; stride],
+            dense_pos: sections[SEC_DENSE_VALS].0,
+            dense_buf: Vec::new(),
+            row_ptr: vec![0],
+            row_len: Vec::new(),
+            col_pos: sections[SEC_COL_IDX].0,
+            col_buf: Vec::new(),
+            val_pos: sections[SEC_VALS].0,
+            val_buf: Vec::new(),
+            sections,
+        })
+    }
+
+    fn flush_buf(file: &File, pos: &mut u64, buf: &mut Vec<u8>) -> anyhow::Result<()> {
+        if !buf.is_empty() {
+            let mut f = file;
+            f.seek(SeekFrom::Start(*pos))?;
+            f.write_all(buf)?;
+            *pos += buf.len() as u64;
+            buf.clear();
+        }
+        Ok(())
+    }
+
+    fn push_row(&mut self, label: f32, row: RowRef<'_>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.rows_seen < self.rows_expected,
+            "psd1: input changed between passes"
+        );
+        self.rows_seen += 1;
+        self.labels.push(label);
+        if self.csr {
+            // entries: LIBSVM rows keep explicit zeros (as the resident
+            // CSR loader does); dense cells keep nonzeros only (as
+            // `CsrMatrix::from_dense` does)
+            let mut push_entry = |c: u32, v: f32, buf_c: &mut Vec<u8>, buf_v: &mut Vec<u8>| {
+                buf_c.extend_from_slice(&c.to_le_bytes());
+                buf_v.extend_from_slice(&v.to_le_bytes());
+            };
+            let mut len = 0usize;
+            let mut last_col = 0u32;
+            match row {
+                RowRef::Sparse(entries) => {
+                    for &(c, v) in entries {
+                        push_entry(c, v, &mut self.col_buf, &mut self.val_buf);
+                        last_col = c;
+                        len += 1;
+                    }
+                }
+                RowRef::DenseCells(cells) => {
+                    for (j, &v) in cells.iter().enumerate() {
+                        if v != 0.0 {
+                            push_entry(j as u32, v, &mut self.col_buf, &mut self.val_buf);
+                            last_col = j as u32;
+                            len += 1;
+                        }
+                    }
+                }
+            }
+            // pad the run exactly like `CsrBuilder::finish_row`
+            for _ in len..padded_entries(len) {
+                push_entry(last_col, 0.0, &mut self.col_buf, &mut self.val_buf);
+            }
+            self.nnz += len;
+            self.row_len.push(len);
+            self.row_ptr
+                .push(self.row_ptr.last().unwrap() + padded_entries(len));
+            if self.col_buf.len() >= 1 << 18 {
+                Self::flush_buf(&self.file, &mut self.col_pos, &mut self.col_buf)?;
+                Self::flush_buf(&self.file, &mut self.val_pos, &mut self.val_buf)?;
+            }
+        } else {
+            self.rowbuf.fill(0.0);
+            match row {
+                RowRef::Sparse(entries) => {
+                    // scatter all stored entries (explicit zeros and zero
+                    // signs land bit-identically to `to_dense`)
+                    for &(c, v) in entries {
+                        self.rowbuf[c as usize] = v;
+                    }
+                }
+                RowRef::DenseCells(cells) => {
+                    self.rowbuf[..cells.len()].copy_from_slice(cells);
+                }
+            }
+            self.nnz += self.rowbuf[..self.cols]
+                .iter()
+                .filter(|&&v| v != 0.0)
+                .count();
+            for &v in &self.rowbuf {
+                self.dense_buf.extend_from_slice(&v.to_le_bytes());
+            }
+            if self.dense_buf.len() >= 1 << 18 {
+                Self::flush_buf(&self.file, &mut self.dense_pos, &mut self.dense_buf)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(mut self) -> anyhow::Result<ShardReport> {
+        anyhow::ensure!(
+            self.rows_seen == self.rows_expected,
+            "psd1: input changed between passes"
+        );
+        let (kind, stride) = if self.csr {
+            Self::flush_buf(&self.file, &mut self.col_pos, &mut self.col_buf)?;
+            Self::flush_buf(&self.file, &mut self.val_pos, &mut self.val_buf)?;
+            anyhow::ensure!(
+                self.col_pos == self.sections[SEC_COL_IDX].0 + self.sections[SEC_COL_IDX].1,
+                "psd1: input changed between passes"
+            );
+            let mut w = SectionWriter::new(&self.file, self.sections[SEC_ROW_PTR].0);
+            for &p in &self.row_ptr {
+                w.write(&(p as u64).to_le_bytes())?;
+            }
+            w.finish()?;
+            let mut w = SectionWriter::new(&self.file, self.sections[SEC_ROW_LEN].0);
+            for &l in &self.row_len {
+                w.write(&(l as u64).to_le_bytes())?;
+            }
+            w.finish()?;
+            (KIND_CSR, 0)
+        } else {
+            Self::flush_buf(&self.file, &mut self.dense_pos, &mut self.dense_buf)?;
+            (KIND_DENSE, self.stride)
+        };
+        let header = Header {
+            kind,
+            width: self.width,
+            rows: self.rows_expected,
+            cols: self.cols,
+            stride,
+            nnz: self.nnz,
+            sections: self.sections,
+        };
+        write_header_and_labels(&self.file, &header, &self.labels)?;
+        self.file.sync_all()?;
+        Ok(ShardReport {
+            path: self.path,
+            rows: self.rows_expected,
+            storage: if self.csr { "csr" } else { "dense" },
+            nnz: self.nnz,
+        })
+    }
+}
+
+/// Per-node output path: `<base>.<node>.psd1` (any extension on `base` is
+/// kept as part of the stem).
+pub fn shard_path(base: &Path, node: usize) -> PathBuf {
+    let mut s = base.as_os_str().to_os_string();
+    s.push(format!(".{node}.psd1"));
+    PathBuf::from(s)
+}
+
+/// Convert LIBSVM/CSV input into `nodes` `PSD1` shard files
+/// (`<out_base>.<node>.psd1`) in two streaming passes — bounded memory:
+/// the matrix itself is never resident, only O(rows) bookkeeping.  The
+/// emitted shards reproduce the resident pipeline (`load` → `resplit` →
+/// storage policy) bit-for-bit; `tests/oocore.rs` pins that property.
+pub fn convert(
+    input: &ConvertInput,
+    out_base: &Path,
+    opts: &ConvertOptions,
+) -> anyhow::Result<ConvertSummary> {
+    ensure_little_endian()?;
+    anyhow::ensure!(opts.nodes > 0, "need at least one node");
+    let scan = scan_input(input, opts.sanitize)?;
+    if scan.dropped > 0 {
+        eprintln!(
+            "[sanitize] dropped {} row(s) with non-finite values",
+            scan.dropped
+        );
+    }
+    anyhow::ensure!(scan.rows > 0, "empty input file");
+    anyhow::ensure!(
+        scan.rows >= opts.nodes,
+        "cannot split {} samples across {} nodes",
+        scan.rows,
+        opts.nodes
+    );
+    let cols = match opts.n_features {
+        Some(n) => {
+            anyhow::ensure!(
+                n >= scan.max_col,
+                "n_features {n} < largest index {}",
+                scan.max_col
+            );
+            n
+        }
+        None => scan.max_col,
+    };
+    anyhow::ensure!(cols > 0, "no features in input file");
+
+    // shard boundaries + per-shard storage decisions (same density math
+    // as `ShardData::with_policy` on the resident pipeline)
+    let sizes = shard_sizes(scan.rows, opts.nodes);
+    let mut bounds = vec![0usize];
+    for &s in &sizes {
+        bounds.push(bounds.last().unwrap() + s);
+    }
+    let mut shard_csr = Vec::with_capacity(opts.nodes);
+    let mut shard_padded = Vec::with_capacity(opts.nodes);
+    let mut total_entries = 0usize;
+    for node in 0..opts.nodes {
+        let rows = &scan.row_entries[bounds[node]..bounds[node + 1]];
+        let entries: usize = rows.iter().map(|&e| e as usize).sum();
+        total_entries += entries;
+        let density = if sizes[node] * cols == 0 {
+            1.0
+        } else {
+            entries as f64 / (sizes[node] * cols) as f64
+        };
+        let csr = match opts.mode {
+            SparseMode::Always => true,
+            SparseMode::Never => false,
+            SparseMode::Auto => density <= opts.threshold,
+        };
+        shard_csr.push(csr);
+        shard_padded.push(rows.iter().map(|&e| padded_entries(e as usize)).sum());
+    }
+
+    // pass 2: stream rows into the per-node sinks
+    let path = match input {
+        ConvertInput::Libsvm(p) | ConvertInput::Csv(p) => p,
+    };
+    let reader = BufReader::new(File::open(path)?);
+    let mut reports = Vec::with_capacity(opts.nodes);
+    let mut node = 0usize;
+    let mut sink: Option<NodeSink> = None;
+    let mut row_global = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let parsed: Option<(f32, RowParsed)> = match input {
+            ConvertInput::Libsvm(_) => match parse_libsvm_line(lineno, &line, opts.sanitize)? {
+                SvmLine::Skip | SvmLine::Dropped => None,
+                SvmLine::Row(label, entries) => Some((label, RowParsed::Sparse(entries))),
+            },
+            ConvertInput::Csv(_) => match parse_csv_line(lineno, &line, opts.sanitize)? {
+                CsvLine::Skip | CsvLine::Dropped => None,
+                CsvLine::Row(cells) => {
+                    let label = *cells.last().unwrap();
+                    Some((label, RowParsed::DenseCells(cells)))
+                }
+            },
+        };
+        let Some((label, row)) = parsed else { continue };
+        anyhow::ensure!(row_global < scan.rows, "psd1: input changed between passes");
+        if row_global == bounds[node + 1] {
+            reports.push(sink.take().unwrap().finish()?);
+            node += 1;
+        }
+        if sink.is_none() {
+            sink = Some(NodeSink::create(
+                shard_path(out_base, node),
+                sizes[node],
+                cols,
+                1,
+                shard_csr[node],
+                shard_padded[node],
+            )?);
+        }
+        let sink_ref = sink.as_mut().unwrap();
+        match &row {
+            RowParsed::Sparse(entries) => {
+                for &(c, _) in entries {
+                    anyhow::ensure!(
+                        (c as usize) < cols,
+                        "line {}: column {} out of range {cols}",
+                        lineno + 1,
+                        c + 1
+                    );
+                }
+                sink_ref.push_row(label, RowRef::Sparse(entries))?;
+            }
+            RowParsed::DenseCells(cells) => {
+                sink_ref.push_row(label, RowRef::DenseCells(&cells[..cells.len() - 1]))?;
+            }
+        }
+        row_global += 1;
+    }
+    anyhow::ensure!(row_global == scan.rows, "psd1: input changed between passes");
+    reports.push(sink.take().unwrap().finish()?);
+
+    Ok(ConvertSummary {
+        shards: reports,
+        rows: scan.rows,
+        cols,
+        density: total_entries as f64 / (scan.rows * cols) as f64,
+        dropped: scan.dropped,
+    })
+}
+
+enum RowParsed {
+    Sparse(Vec<(u32, f32)>),
+    DenseCells(Vec<f32>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticSpec, SparseMode};
+    use crate::util::testkit::{run_prop, PropConfig};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("psfit_psd1_{}_{name}", std::process::id()))
+    }
+
+    fn sample_shard(csr: bool) -> Shard {
+        let mut spec = SyntheticSpec::regression(13, 27, 1);
+        spec.density = 0.3;
+        let ds = spec.generate();
+        let mode = if csr { SparseMode::Always } else { SparseMode::Never };
+        ds.shards[0].with_storage_policy(mode, 0.0)
+    }
+
+    fn roundtrip(shard: &Shard, name: &str) -> Shard {
+        let path = tmp(name);
+        write_shard(shard, &path).unwrap();
+        let back = open_shard(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        back
+    }
+
+    #[test]
+    fn dense_shard_roundtrips_bit_exactly() {
+        let shard = sample_shard(false);
+        let back = roundtrip(&shard, "dense_rt");
+        let ShardData::Mapped(m) = &back.data else {
+            panic!("expected mapped storage")
+        };
+        assert!(!m.is_csr());
+        assert_eq!(back.labels, shard.labels);
+        let orig = shard.data.as_dense().unwrap();
+        assert_eq!(m.dense_padded(), orig.padded_data());
+        assert_eq!(m.to_matrix(), **orig);
+        assert_eq!(back.data.nnz(), shard.data.nnz());
+    }
+
+    #[test]
+    fn csr_shard_roundtrips_bit_exactly() {
+        let shard = sample_shard(true);
+        let back = roundtrip(&shard, "csr_rt");
+        let ShardData::Mapped(m) = &back.data else {
+            panic!("expected mapped storage")
+        };
+        assert!(m.is_csr());
+        assert_eq!(back.labels, shard.labels);
+        let orig = shard.data.as_csr().unwrap();
+        let (op, mp) = (orig.parts(), m.csr_parts());
+        assert_eq!(op.row_ptr, mp.row_ptr);
+        assert_eq!(op.row_len, mp.row_len);
+        assert_eq!(op.col_idx, mp.col_idx);
+        assert_eq!(op.vals, mp.vals);
+        assert_eq!(back.data.nnz(), shard.data.nnz());
+    }
+
+    #[test]
+    fn mapped_matvec_matches_resident() {
+        for csr in [false, true] {
+            let shard = sample_shard(csr);
+            let back = roundtrip(&shard, if csr { "mv_csr" } else { "mv_dense" });
+            let n = shard.data.cols();
+            let m = shard.data.rows();
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let v: Vec<f32> = (0..m).map(|i| (i as f32 * 0.11).cos()).collect();
+            let (mut y0, mut y1) = (vec![0.0f32; m], vec![0.0f32; m]);
+            shard.data.matvec(&x, &mut y0);
+            back.data.matvec(&x, &mut y1);
+            assert_eq!(y0, y1, "matvec csr={csr}");
+            let (mut z0, mut z1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            shard.data.matvec_t(&v, &mut z0);
+            back.data.matvec_t(&v, &mut z1);
+            assert_eq!(z0, z1, "matvec_t csr={csr}");
+        }
+    }
+
+    #[test]
+    fn open_names_all_header_failure_modes() {
+        let shard = sample_shard(true);
+        let path = tmp("mut_named");
+        write_shard(&shard, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let open_err = |bytes: &[u8]| -> String {
+            std::fs::write(&path, bytes).unwrap();
+            open_shard(&path).unwrap_err().to_string()
+        };
+
+        // truncated header
+        assert!(open_err(&good[..40]).contains("psd1: truncated header"));
+        // bad magic
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(open_err(&b).contains("psd1: bad magic"));
+        // checksum mismatch (flip a header byte without re-checksumming)
+        let mut b = good.clone();
+        b[17] ^= 0x40;
+        assert!(open_err(&b).contains("psd1: header checksum mismatch"));
+        // version mismatch, checksum recomputed
+        let mut b = good.clone();
+        b[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let sum = fnv1a(&b[..136]);
+        b[136..144].copy_from_slice(&sum.to_le_bytes());
+        assert!(open_err(&b).contains("psd1: unsupported version 2"));
+        // misaligned section offset, checksum recomputed
+        let mut b = good.clone();
+        let off = u64::from_le_bytes(b[48..56].try_into().unwrap());
+        b[48..56].copy_from_slice(&(off + 4).to_le_bytes());
+        let sum = fnv1a(&b[..136]);
+        b[136..144].copy_from_slice(&sum.to_le_bytes());
+        assert!(open_err(&b).contains("psd1: misaligned section offset"));
+        // truncated body
+        assert!(open_err(&good[..good.len() - 8]).contains("psd1: truncated file"));
+
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn prop_mutated_headers_never_panic_the_reader() {
+        let dense = sample_shard(false);
+        let csr = sample_shard(true);
+        let path = tmp("mut_prop");
+        write_shard(&dense, &path).unwrap();
+        let dense_bytes = std::fs::read(&path).unwrap();
+        write_shard(&csr, &path).unwrap();
+        let csr_bytes = std::fs::read(&path).unwrap();
+
+        run_prop(
+            "psd1_header_mutations",
+            PropConfig {
+                cases: 192,
+                ..PropConfig::default()
+            },
+            |rng, _size| {
+                let base = if rng.next_u64() % 2 == 0 {
+                    &dense_bytes
+                } else {
+                    &csr_bytes
+                };
+                let mut bytes = base.clone();
+                match rng.next_u64() % 3 {
+                    0 => {
+                        // truncate anywhere
+                        let at = (rng.next_u64() as usize) % bytes.len();
+                        bytes.truncate(at);
+                    }
+                    1 => {
+                        // flip a byte in the structural prefix (header +
+                        // labels + csr index sections)
+                        let span = bytes.len().min(4096);
+                        let at = (rng.next_u64() as usize) % span;
+                        bytes[at] ^= 1 << (rng.next_u64() % 8);
+                    }
+                    _ => {
+                        // rewrite a random header u64 then re-checksum, so
+                        // validation (not the checksum) must catch it
+                        let field = 16 + 8 * ((rng.next_u64() as usize) % 15);
+                        let v = rng.next_u64() % 0x1_0000_0000;
+                        bytes[field..field + 8].copy_from_slice(&v.to_le_bytes());
+                        let sum = fnv1a(&bytes[..136]);
+                        bytes[136..144].copy_from_slice(&sum.to_le_bytes());
+                    }
+                }
+                std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+                // must never panic; errors must carry the psd1: prefix
+                match open_shard(&path) {
+                    Ok(shard) => {
+                        // survivors must stay in-bounds for basic reads
+                        let _ = shard.data.nnz();
+                        Ok(())
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        if msg.starts_with("psd1:") {
+                            Ok(())
+                        } else {
+                            Err(format!("unnamed error: {msg}"))
+                        }
+                    }
+                }
+            },
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn convert_matches_resident_pipeline_bit_for_bit() {
+        // libsvm -> convert must equal load_libsvm -> resplit -> policy
+        let mut spec = SyntheticSpec::regression(19, 41, 1);
+        spec.density = 0.25;
+        let mut ds = spec.generate();
+        ds.apply_storage(SparseMode::Always, 0.0);
+        let svm = tmp("conv_in.svm");
+        crate::data::io::save_libsvm(&ds, &svm).unwrap();
+
+        let resident = crate::data::io::load_libsvm(&svm, Some(19)).unwrap().resplit(3);
+        let base = tmp("conv_out");
+        for (mode, name) in [(SparseMode::Always, "csr"), (SparseMode::Never, "dense")] {
+            let summary = convert(
+                &ConvertInput::Libsvm(svm.clone()),
+                &base,
+                &ConvertOptions {
+                    nodes: 3,
+                    mode,
+                    threshold: 0.25,
+                    n_features: Some(19),
+                    sanitize: false,
+                },
+            )
+            .unwrap();
+            assert_eq!(summary.rows, 41);
+            assert_eq!(summary.cols, 19);
+            for (i, report) in summary.shards.iter().enumerate() {
+                assert_eq!(report.storage, name);
+                let mapped = open_shard(&report.path).unwrap();
+                let want = resident.shards[i].with_storage_policy(mode, 0.25);
+                assert_eq!(mapped.labels, want.labels, "labels node {i}");
+                let ShardData::Mapped(m) = &mapped.data else { panic!() };
+                match &want.data {
+                    ShardData::Csr(c) => {
+                        let (a, b) = (c.parts(), m.csr_parts());
+                        assert_eq!(a.row_ptr, b.row_ptr, "node {i}");
+                        assert_eq!(a.col_idx, b.col_idx, "node {i}");
+                        assert_eq!(a.vals, b.vals, "node {i}");
+                    }
+                    ShardData::Dense(d) => {
+                        assert_eq!(m.dense_padded(), d.padded_data(), "node {i}");
+                    }
+                    ShardData::Mapped(_) => unreachable!(),
+                }
+                std::fs::remove_file(&report.path).unwrap();
+            }
+        }
+        std::fs::remove_file(&svm).unwrap();
+    }
+
+    #[test]
+    fn convert_auto_decides_per_shard_like_with_policy() {
+        let mut spec = SyntheticSpec::regression(16, 30, 1);
+        spec.density = 0.2;
+        let mut ds = spec.generate();
+        ds.apply_storage(SparseMode::Always, 0.0);
+        let svm = tmp("conv_auto.svm");
+        crate::data::io::save_libsvm(&ds, &svm).unwrap();
+        let resident = crate::data::io::load_libsvm(&svm, Some(16)).unwrap().resplit(2);
+        let base = tmp("conv_auto_out");
+        let threshold = resident.shards[0].data.density(); // node 0 -> csr
+        let summary = convert(
+            &ConvertInput::Libsvm(svm.clone()),
+            &base,
+            &ConvertOptions {
+                nodes: 2,
+                mode: SparseMode::Auto,
+                threshold,
+                n_features: Some(16),
+                sanitize: false,
+            },
+        )
+        .unwrap();
+        for (i, report) in summary.shards.iter().enumerate() {
+            let want = resident.shards[i].data.with_policy(SparseMode::Auto, threshold);
+            assert_eq!(report.storage, want.storage_name(), "node {i}");
+            std::fs::remove_file(&report.path).unwrap();
+        }
+        std::fs::remove_file(&svm).unwrap();
+    }
+
+    #[test]
+    fn convert_csv_matches_resident_dense() {
+        let csv = tmp("conv.csv");
+        std::fs::write(
+            &csv,
+            "1.0, 0.0, 3.5, 2.0\n0.5, -1.0, 0.0, -2.0\n0.0, 2.5, 1.5, 0.5\n",
+        )
+        .unwrap();
+        let resident = crate::data::io::load_csv(&csv).unwrap().resplit(1);
+        let base = tmp("conv_csv_out");
+        let summary = convert(
+            &ConvertInput::Csv(csv.clone()),
+            &base,
+            &ConvertOptions {
+                nodes: 1,
+                mode: SparseMode::Never,
+                threshold: 0.25,
+                n_features: None,
+                sanitize: false,
+            },
+        )
+        .unwrap();
+        let mapped = open_shard(&summary.shards[0].path).unwrap();
+        assert_eq!(mapped.labels, resident.shards[0].labels);
+        let ShardData::Mapped(m) = &mapped.data else { panic!() };
+        assert_eq!(
+            m.dense_padded(),
+            resident.shards[0].data.as_dense().unwrap().padded_data()
+        );
+        std::fs::remove_file(&summary.shards[0].path).unwrap();
+        std::fs::remove_file(&csv).unwrap();
+    }
+}

@@ -120,12 +120,15 @@ pub fn build_workers_mode(
                 Box::new(XlaBackend::new(rt, shard, &plan, loss)?)
             }
         };
-        workers.push(NodeWorker::new(
-            i,
-            LocalProx::new(backend, plan.clone(), ds.width),
-            params,
-            cfg.solver.inner_iters,
-        ));
+        workers.push(
+            NodeWorker::new(
+                i,
+                LocalProx::new(backend, plan.clone(), ds.width),
+                params,
+                cfg.solver.inner_iters,
+            )
+            .with_minibatch(cfg.solver.minibatch, cfg.solver.minibatch_seed),
+        );
     }
     Ok(workers)
 }

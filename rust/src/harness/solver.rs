@@ -24,7 +24,7 @@
 
 use crate::admm::solver as admm_solver;
 use crate::config::Config;
-use crate::data::SyntheticSpec;
+use crate::data::{shardfile, SyntheticSpec};
 use crate::linalg::simd::{self, Isa, IsaChoice};
 use crate::losses::make_loss;
 use crate::metrics::CsvTable;
@@ -66,6 +66,22 @@ struct TolEntry {
     objective_rel_diff: f64,
 }
 
+struct OocoreEntry {
+    n: usize,
+    m: usize,
+    nodes: usize,
+    density: f64,
+    rounds: usize,
+    /// What the dense working set would occupy resident (m * n * 4).
+    logical_dense_bytes: u64,
+    /// What the mapped PSD1 files actually occupy on disk.
+    shard_file_bytes: u64,
+    resident_wall_seconds: f64,
+    mapped_wall_seconds: f64,
+    support_match: bool,
+    bit_identical: bool,
+}
+
 fn ratio(a: f64, b: f64) -> f64 {
     if b > 0.0 {
         a / b
@@ -74,7 +90,13 @@ fn ratio(a: f64, b: f64) -> f64 {
     }
 }
 
-fn report_json(rounds: &[RoundsEntry], tol: &[TolEntry], quick: bool, isa: Isa) -> Json {
+fn report_json(
+    rounds: &[RoundsEntry],
+    tol: &[TolEntry],
+    oocore: &[OocoreEntry],
+    quick: bool,
+    isa: Isa,
+) -> Json {
     let mut entries: Vec<Json> = Vec::new();
     for e in rounds {
         entries.push(Json::obj(vec![
@@ -111,6 +133,26 @@ fn report_json(rounds: &[RoundsEntry], tol: &[TolEntry], quick: bool, isa: Isa) 
             (
                 "speedup",
                 Json::Num(ratio(e.scalar_wall_seconds, e.simd_wall_seconds)),
+            ),
+        ]));
+    }
+    for e in oocore {
+        entries.push(Json::obj(vec![
+            ("name", Json::Str("oocore_workingset".to_string())),
+            ("n", Json::Num(e.n as f64)),
+            ("m", Json::Num(e.m as f64)),
+            ("nodes", Json::Num(e.nodes as f64)),
+            ("density", Json::Num(e.density)),
+            ("rounds", Json::Num(e.rounds as f64)),
+            ("logical_dense_bytes", Json::Num(e.logical_dense_bytes as f64)),
+            ("shard_file_bytes", Json::Num(e.shard_file_bytes as f64)),
+            ("resident_wall_seconds", Json::Num(e.resident_wall_seconds)),
+            ("mapped_wall_seconds", Json::Num(e.mapped_wall_seconds)),
+            ("support_match", Json::Bool(e.support_match)),
+            ("bit_identical", Json::Bool(e.bit_identical)),
+            (
+                "mapped_overhead",
+                Json::Num(ratio(e.mapped_wall_seconds, e.resident_wall_seconds)),
             ),
         ]));
     }
@@ -230,8 +272,77 @@ fn run(opts: &SolverBenchOpts) -> anyhow::Result<CsvTable> {
         });
     }
 
+    // ---- out-of-core working set: mapped PSD1 shards vs resident --------
+    // A sparse problem whose *logical dense* footprint dwarfs its CSR
+    // file: the shape CI runs under an address-space cap that the dense
+    // working set could never fit (see .github/workflows).  Pins that a
+    // mapped fit is bit-identical to the resident fit and reports the
+    // mmap overhead.
+    let oocore_shapes: &[(usize, usize, usize, f64, usize)] = if opts.quick {
+        &[(64, 512, 2, 0.02, 6)]
+    } else {
+        &[(512, 16384, 4, 0.01, 10)]
+    };
+    let mut oocore_entries = Vec::new();
+    for &(n, m, nodes, density, rounds) in oocore_shapes {
+        eprintln!("# oocore working set: n={n} m={m} nodes={nodes} density={density}");
+        let mut spec = SyntheticSpec::regression(n, m, nodes);
+        spec.density = density;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = nodes;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = rounds;
+        cfg.solver.tol_primal = 0.0; // fixed work on both sides
+
+        // one PSD1 file per shard under the fit-time storage policy, so
+        // the sparse shape maps as CSR — O(nnz) on disk and in the map
+        let base = std::env::temp_dir().join(format!("psfit_bench_oocore_{n}x{m}"));
+        let mut paths = Vec::new();
+        let mut file_bytes = 0u64;
+        for (i, shard) in ds.shards.iter().enumerate() {
+            let p = shardfile::shard_path(&base, i);
+            let stored = shard
+                .with_storage_policy(cfg.platform.sparse, cfg.platform.sparse_threshold);
+            shardfile::write_shard(&stored, &p)?;
+            file_bytes += std::fs::metadata(&p)?.len();
+            paths.push(p);
+        }
+        let mapped_ds = shardfile::open_dataset(&paths)?;
+
+        let resident = super::run_timed(&ds, &cfg, true)?;
+        let mapped = super::run_timed(&mapped_ds, &cfg, true)?;
+        for p in &paths {
+            let _ = std::fs::remove_file(p);
+        }
+        anyhow::ensure!(
+            resident.result.iters == rounds && mapped.result.iters == rounds,
+            "fixed-round oocore run terminated early"
+        );
+        let bit_identical = resident.result.z.len() == mapped.result.z.len()
+            && resident
+                .result
+                .z
+                .iter()
+                .zip(&mapped.result.z)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        oocore_entries.push(OocoreEntry {
+            n,
+            m,
+            nodes,
+            density,
+            rounds,
+            logical_dense_bytes: (m as u64) * (n as u64) * 4,
+            shard_file_bytes: file_bytes,
+            resident_wall_seconds: resident.solve_seconds,
+            mapped_wall_seconds: mapped.solve_seconds,
+            support_match: resident.result.support == mapped.result.support,
+            bit_identical,
+        });
+    }
+
     // ---- emit ------------------------------------------------------------
-    let json = report_json(&rounds_entries, &tol_entries, opts.quick, wide);
+    let json = report_json(&rounds_entries, &tol_entries, &oocore_entries, opts.quick, wide);
     std::fs::write(&opts.json, format!("{json}\n"))
         .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.json))?;
     eprintln!("wrote {}", opts.json);
@@ -268,6 +379,24 @@ fn run(opts: &SolverBenchOpts) -> anyhow::Result<CsvTable> {
             ),
         ]);
     }
+    for e in &oocore_entries {
+        table.row(vec![
+            "oocore_workingset".to_string(),
+            e.n.to_string(),
+            e.m.to_string(),
+            e.nodes.to_string(),
+            format!("{}", e.density),
+            format!("{:.3} s resident", e.resident_wall_seconds),
+            format!("{:.3} s mapped", e.mapped_wall_seconds),
+            format!("{:.2}", ratio(e.mapped_wall_seconds, e.resident_wall_seconds)),
+            format!(
+                "bit_identical={} dense={:.1}MB file={:.1}MB",
+                e.bit_identical,
+                e.logical_dense_bytes as f64 / 1e6,
+                e.shard_file_bytes as f64 / 1e6
+            ),
+        ]);
+    }
     Ok(table)
 }
 
@@ -301,16 +430,40 @@ mod tests {
             support_match: true,
             objective_rel_diff: 3e-7,
         }];
-        let parsed = Json::parse(&report_json(&rounds, &tol, true, Isa::Avx2).to_string()).unwrap();
+        let oocore = vec![OocoreEntry {
+            n: 64,
+            m: 512,
+            nodes: 2,
+            density: 0.02,
+            rounds: 6,
+            logical_dense_bytes: 64 * 512 * 4,
+            shard_file_bytes: 9000,
+            resident_wall_seconds: 0.1,
+            mapped_wall_seconds: 0.12,
+            support_match: true,
+            bit_identical: true,
+        }];
+        let parsed =
+            Json::parse(&report_json(&rounds, &tol, &oocore, true, Isa::Avx2).to_string())
+                .unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.get("isa").unwrap().as_str(), Some("avx2"));
         let arr = parsed.get("entries").unwrap().as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
+        assert_eq!(arr.len(), 3);
         assert_eq!(arr[0].get("name").unwrap().as_str(), Some("solver_rounds"));
         assert_eq!(arr[0].get("speedup").unwrap().as_f64(), Some(2.5));
         assert_eq!(arr[1].get("name").unwrap().as_str(), Some("time_to_tol"));
         assert_eq!(arr[1].get("support_match").unwrap().as_bool(), Some(true));
         assert_eq!(arr[1].get("speedup").unwrap().as_f64(), Some(2.0));
+        assert_eq!(arr[2].get("name").unwrap().as_str(), Some("oocore_workingset"));
+        assert_eq!(arr[2].get("bit_identical").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            arr[2].get("logical_dense_bytes").unwrap().as_usize(),
+            Some(64 * 512 * 4)
+        );
+        assert!(
+            (arr[2].get("mapped_overhead").unwrap().as_f64().unwrap() - 1.2).abs() < 1e-9
+        );
     }
 
     #[test]

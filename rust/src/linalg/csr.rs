@@ -234,21 +234,24 @@ impl CsrMatrix {
         (0..self.rows).flat_map(|i| self.row(i).1.iter().copied())
     }
 
+    /// The raw storage arrays as a borrowed [`CsrParts`] — what mapped
+    /// shards construct directly and every view/kernel path reads through.
+    #[inline]
+    pub fn parts(&self) -> CsrParts<'_> {
+        CsrParts {
+            row_ptr: &self.row_ptr,
+            row_len: &self.row_len,
+            col_idx: &self.col_idx,
+            vals: &self.vals,
+        }
+    }
+
     /// Per-row entry subranges covering columns `[col0, col0 + width)` —
     /// the precomputation behind [`CsrBlockView`].  O(rows log nnz_row),
     /// done once per feature block at backend construction.
     pub fn block_ranges(&self, col0: usize, width: usize) -> Vec<(usize, usize)> {
         assert!(col0 + width <= self.cols, "column block out of range");
-        let (lo, hi) = (col0 as u32, (col0 + width) as u32);
-        (0..self.rows)
-            .map(|i| {
-                let (s, e) = self.row_bounds(i);
-                let cols = &self.col_idx[s..e];
-                let a = s + cols.partition_point(|&c| c < lo);
-                let b = s + cols.partition_point(|&c| c < hi);
-                (a, b)
-            })
-            .collect()
+        self.parts().block_ranges(col0, width)
     }
 
     /// Borrowed view of the column block `[col0, col0 + width)` through
@@ -260,14 +263,8 @@ impl CsrMatrix {
         col0: usize,
         width: usize,
     ) -> CsrBlockView<'a> {
-        assert_eq!(ranges.len(), self.rows);
         assert!(col0 + width <= self.cols);
-        CsrBlockView {
-            mat: self,
-            cols: width,
-            col0: col0 as u32,
-            ranges,
-        }
+        CsrBlockView::new(self.parts(), 0, self.rows, col0, width, ranges)
     }
 
     /// y = A x over the whole matrix (convenience for the storage enum;
@@ -275,19 +272,7 @@ impl CsrMatrix {
     /// the padded fast path, read straight off the allocated runs, so no
     /// block-range precomputation (or allocation) is needed).
     pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.cols);
-        assert_eq!(y.len(), self.rows);
-        let isa = simd::active();
-        for (i, yi) in y.iter_mut().enumerate() {
-            let (cols, vals) = if isa == Isa::Scalar {
-                self.row(i)
-            } else {
-                // full padded run: lane-multiple length, zero-value tail
-                let (s, pe) = (self.row_ptr[i], self.row_ptr[i + 1]);
-                (&self.col_idx[s..pe], &self.vals[s..pe])
-            };
-            *yi = row_dot_isa(isa, cols, vals, 0, x);
-        }
+        spmv_parts(self.parts(), self.cols, x, y)
     }
 
     /// y = A^T v over the whole matrix.  Stays scalar on every ISA: the
@@ -295,36 +280,145 @@ impl CsrMatrix {
     /// NEON has scatter stores (the block-level [`spmm_t`] vectorizes
     /// only the value scaling, a marginal win the convenience path skips).
     pub fn spmv_t(&self, v: &[f32], y: &mut [f32]) {
-        assert_eq!(v.len(), self.rows);
-        assert_eq!(y.len(), self.cols);
-        y.fill(0.0);
-        for (i, &vi) in v.iter().enumerate() {
-            let (cols, vals) = self.row(i);
-            for (&c, &a) in cols.iter().zip(vals) {
-                y[c as usize] += a * vi;
-            }
+        spmv_t_parts(self.parts(), self.cols, v, y)
+    }
+}
+
+/// y = A x over whole-matrix [`CsrParts`] — the storage-agnostic body of
+/// [`CsrMatrix::spmv`], shared with mapped `PSD1` shards so resident and
+/// mapped products are the same code path (hence bit-identical).
+pub fn spmv_parts(a: CsrParts<'_>, ncols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), ncols);
+    assert_eq!(y.len(), a.rows());
+    let isa = simd::active();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let (cols, vals) = if isa == Isa::Scalar {
+            a.row(i)
+        } else {
+            // full padded run: lane-multiple length, zero-value tail
+            let (s, pe) = (a.row_ptr[i], a.row_ptr[i + 1]);
+            (&a.col_idx[s..pe], &a.vals[s..pe])
+        };
+        *yi = row_dot_isa(isa, cols, vals, 0, x);
+    }
+}
+
+/// y = A^T v over whole-matrix [`CsrParts`] (see [`CsrMatrix::spmv_t`]).
+pub fn spmv_t_parts(a: CsrParts<'_>, ncols: usize, v: &[f32], y: &mut [f32]) {
+    assert_eq!(v.len(), a.rows());
+    assert_eq!(y.len(), ncols);
+    y.fill(0.0);
+    for (i, &vi) in v.iter().enumerate() {
+        let (cols, vals) = a.row(i);
+        for (&c, &a) in cols.iter().zip(vals) {
+            y[c as usize] += a * vi;
         }
     }
 }
 
+/// Borrowed raw CSR arrays — the storage-agnostic substrate every sparse
+/// kernel path reads through.  A RAM-resident [`CsrMatrix`] lends its own
+/// vectors; a mapped `PSD1` shard (`data::shardfile::MappedShard`) lends
+/// `col_idx`/`vals` straight off the map with `row_ptr`/`row_len` decoded
+/// at open.  Layout contract is the [`CsrMatrix`] one: `row_ptr` bounds the
+/// *allocated* (padded) runs, `row_len` counts the real entries, padding
+/// duplicates the last real column with value 0.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrParts<'a> {
+    /// `rows + 1` offsets bounding each row's allocated (padded) run.
+    pub row_ptr: &'a [usize],
+    /// Real entries per row.
+    pub row_len: &'a [usize],
+    /// Column index of every stored entry (incl. padding duplicates).
+    pub col_idx: &'a [u32],
+    /// Value of every stored entry (padding is 0.0).
+    pub vals: &'a [f32],
+}
+
+impl<'a> CsrParts<'a> {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.row_len.len()
+    }
+
+    /// Absolute bounds `[start, end)` of row `i`'s *real* entries.
+    #[inline]
+    pub fn row_bounds(&self, i: usize) -> (usize, usize) {
+        let s = self.row_ptr[i];
+        (s, s + self.row_len[i])
+    }
+
+    /// Row `i`'s real entries: (column indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        let (s, e) = self.row_bounds(i);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Per-row entry subranges covering columns `[col0, col0 + width)` —
+    /// the precomputation behind [`CsrBlockView`].  O(rows log nnz_row).
+    pub fn block_ranges(&self, col0: usize, width: usize) -> Vec<(usize, usize)> {
+        let (lo, hi) = (col0 as u32, (col0 + width) as u32);
+        (0..self.rows())
+            .map(|i| {
+                let (s, e) = self.row_bounds(i);
+                let cols = &self.col_idx[s..e];
+                let a = s + cols.partition_point(|&c| c < lo);
+                let b = s + cols.partition_point(|&c| c < hi);
+                (a, b)
+            })
+            .collect()
+    }
+}
+
 /// Borrowed view of the contiguous column block `[col0, col0 + cols)` of a
-/// [`CsrMatrix`] — the sparse twin of `ColumnBlockView`.  Column indices
-/// are rebased by `col0` on read, so kernels see block-local columns.
+/// CSR storage (resident or mapped) — the sparse twin of `ColumnBlockView`.
+/// Column indices are rebased by `col0` on read, so kernels see block-local
+/// columns.  `row0` offsets the view down the parent's rows, which is how
+/// the mini-batch spans view a chunk of samples in place.
 #[derive(Clone, Copy, Debug)]
 pub struct CsrBlockView<'a> {
-    mat: &'a CsrMatrix,
+    parts: CsrParts<'a>,
+    /// First parent row of the view (0 for whole-shard views).
+    row0: usize,
+    /// Rows viewed.
+    rows: usize,
     cols: usize,
     col0: u32,
     /// Per-row `[start, end)` into the parent's entry arrays (real
-    /// entries only).
+    /// entries only); entry `i` describes parent row `row0 + i`.
     ranges: &'a [(usize, usize)],
 }
 
 impl<'a> CsrBlockView<'a> {
-    /// Rows of the viewed block (same as the parent matrix).
+    /// View rows `[row0, row0 + rows)` × columns `[col0, col0 + cols)` of
+    /// raw CSR storage through precomputed `ranges` (one per viewed row,
+    /// each a subrange of the matching parent row's real entries).
+    pub fn new(
+        parts: CsrParts<'a>,
+        row0: usize,
+        rows: usize,
+        col0: usize,
+        cols: usize,
+        ranges: &'a [(usize, usize)],
+    ) -> CsrBlockView<'a> {
+        assert_eq!(ranges.len(), rows);
+        assert!(row0 + rows <= parts.rows(), "row span out of range");
+        CsrBlockView {
+            parts,
+            row0,
+            rows,
+            cols,
+            col0: col0 as u32,
+            ranges,
+        }
+    }
+
+    /// Rows of the viewed block.
     #[inline]
     pub fn rows(&self) -> usize {
-        self.mat.rows
+        self.rows
     }
 
     /// Columns (block width) of the viewed block.
@@ -338,7 +432,7 @@ impl<'a> CsrBlockView<'a> {
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
         let (s, e) = self.ranges[i];
-        (&self.mat.col_idx[s..e], &self.mat.vals[s..e])
+        (&self.parts.col_idx[s..e], &self.parts.vals[s..e])
     }
 
     /// Row `i`'s entries for a vector kernel: the padded run (length a
@@ -350,12 +444,12 @@ impl<'a> CsrBlockView<'a> {
     #[inline]
     pub(crate) fn row_lanes(&self, i: usize) -> (&[u32], &[f32]) {
         let (s, e) = self.ranges[i];
-        let (rs, re) = self.mat.row_bounds(i);
+        let (rs, re) = self.parts.row_bounds(self.row0 + i);
         if s == rs && e == re {
-            let pe = self.mat.row_ptr[i + 1];
-            (&self.mat.col_idx[s..pe], &self.mat.vals[s..pe])
+            let pe = self.parts.row_ptr[self.row0 + i + 1];
+            (&self.parts.col_idx[s..pe], &self.parts.vals[s..pe])
         } else {
-            (&self.mat.col_idx[s..e], &self.mat.vals[s..e])
+            (&self.parts.col_idx[s..e], &self.parts.vals[s..e])
         }
     }
 

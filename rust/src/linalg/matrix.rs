@@ -48,8 +48,10 @@ impl PartialEq for Matrix {
     }
 }
 
-/// The padded row stride for a logical column count.
-fn padded_stride(cols: usize) -> usize {
+/// The padded row stride for a logical column count.  Public because the
+/// `PSD1` shard format stores dense payloads at exactly this stride, so
+/// the converter and the mapped reader must agree with `Matrix` storage.
+pub fn padded_stride(cols: usize) -> usize {
     cols.div_ceil(LANE_F32).max(1) * LANE_F32
 }
 
@@ -141,6 +143,14 @@ impl Matrix {
             out.extend_from_slice(self.row(i));
         }
         out
+    }
+
+    /// The full padded storage (`rows * stride` elements, padding
+    /// included) — the exact payload of a dense `PSD1` section, and the
+    /// buffer row-span views (mini-batch chunks) slice in place.
+    #[inline]
+    pub fn padded_data(&self) -> &[f32] {
+        &self.data
     }
 
     /// Borrowed whole-matrix view for the kernel layer.

@@ -24,7 +24,7 @@ pub mod simd;
 pub use aligned::AlignedVec;
 pub use cg::conjugate_gradient;
 pub use cholesky::Cholesky;
-pub use csr::{CsrBlockView, CsrMatrix};
+pub use csr::{CsrBlockView, CsrMatrix, CsrParts};
 pub use kernels::ColumnBlockView;
 pub use matrix::Matrix;
 pub use simd::{Isa, IsaChoice};

@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   train   — fit a sparse model on a synthetic distributed dataset
+//!             (--shards maps PSD1 files out of core; --minibatch runs
+//!             seeded mini-batch rounds)
+//!   convert — stream LIBSVM/CSV input into per-node PSD1 shard files
+//!             in bounded memory (what train --shards maps)
 //!   path    — warm-started sparsity-path sweep over descending budgets
 //!             (checkpoint/resume via --checkpoint)
 //!   fig1    — regenerate Figure 1 (residual convergence vs rho_b)
@@ -56,6 +60,7 @@ fn run() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
+        Some("convert") => convert_cmd(&args),
         Some("path") => path_cmd(&args),
         Some("worker") => {
             if let Some(isa) = args.opt("isa") {
@@ -225,18 +230,21 @@ fn run() -> anyhow::Result<()> {
         Some("info") => info(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (try: train, path, fig1..fig4, table1, straggler, bench, pathbench, worker, chaos, serve, submit, predict, jobs, info)"
+                "unknown subcommand `{other}` (try: train, convert, path, fig1..fig4, table1, straggler, bench, pathbench, worker, chaos, serve, submit, predict, jobs, info)"
             )
         }
         None => {
             eprintln!(
-                "usage: psfit <train|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|worker|chaos|serve|submit|predict|jobs|info> [options]"
+                "usage: psfit <train|convert|path|fig1|fig2|fig3|fig4|table1|straggler|bench|pathbench|worker|chaos|serve|submit|predict|jobs|info> [options]"
             );
             eprintln!("  e.g.  psfit train --n 1000 --m 8000 --nodes 4 --sparsity 0.8 --backend xla");
             eprintln!("        psfit train --threads 8             (pooled native block sweeps)");
             eprintln!("        psfit train --coordination async --quorum 0.75 --staleness 2");
             eprintln!("        psfit train --density 0.02 --sparse auto    (CSR data path)");
             eprintln!("        psfit train --libsvm data.svm --kappa 50    (real sparse data)");
+            eprintln!("        psfit convert --libsvm data.svm --nodes 4 --out data   (PSD1 shards)");
+            eprintln!("        psfit train --shards data.0.psd1,data.1.psd1 --kappa 50 (mmap, out of core)");
+            eprintln!("        psfit train --minibatch 4096 --minibatch-seed 7  (seeded chunk rounds)");
             eprintln!("        psfit path --budgets 200,100,50     (warm-started sparsity path)");
             eprintln!("        psfit path --budgets 64,32 --rho-ladder 2.0,1.0 --checkpoint run.psc");
             eprintln!("        psfit train --isa scalar            (pin the kernel ISA; also PSFIT_ISA)");
@@ -317,12 +325,16 @@ fn shared_config(args: &Args) -> anyhow::Result<(Config, SyntheticSpec, Option<S
     cfg.solver.max_iters = args.get("iters", cfg.solver.max_iters)?;
     cfg.solver.inner_iters = args.get("inner-iters", cfg.solver.inner_iters)?;
     cfg.solver.deadline_ms = args.get("deadline", cfg.solver.deadline_ms)?;
+    cfg.solver.minibatch = args.get("minibatch", cfg.solver.minibatch)?;
+    cfg.solver.minibatch_seed = args.get("minibatch-seed", cfg.solver.minibatch_seed)?;
     if let Some(coord) = args.opt("coordination") {
         cfg.coordinator.coordination = CoordinationKind::parse(coord)?;
     }
     cfg.coordinator.quorum = args.get("quorum", cfg.coordinator.quorum)?;
     cfg.coordinator.max_staleness = args.get("staleness", cfg.coordinator.max_staleness)?;
     cfg.coordinator.heartbeat_ms = args.get("heartbeat-ms", cfg.coordinator.heartbeat_ms)?;
+    // flags may have overlaid the file config — re-check cross-section rules
+    cfg.validate_cross()?;
 
     let mut spec = SyntheticSpec::regression(n, m, nodes);
     spec.sparsity_level = sparsity;
@@ -391,12 +403,65 @@ fn train(args: &Args) -> anyhow::Result<()> {
     cfg.solver.checkpoint_every = args.get("checkpoint-every", cfg.solver.checkpoint_every)?;
     let trace_out = args.opt("trace").map(String::from);
     let model_out = args.opt("model-out").map(String::from);
+    let shards_in = args.opt("shards").map(String::from);
+    let nodes_explicit = args.opt("nodes").is_some();
     let sanitize = args.flag("sanitize");
     args.reject_unknown()?;
 
-    let ds = build_dataset(&mut cfg, &spec, libsvm.as_deref(), sanitize)?;
-    if libsvm.is_some() {
+    let ds = match &shards_in {
+        Some(list) => {
+            anyhow::ensure!(
+                libsvm.is_none(),
+                "--shards and --libsvm are mutually exclusive"
+            );
+            let paths: Vec<std::path::PathBuf> = list
+                .split(',')
+                .map(|s| std::path::PathBuf::from(s.trim()))
+                .collect();
+            anyhow::ensure!(
+                !nodes_explicit || paths.len() == cfg.platform.nodes,
+                "--nodes {} does not match the {} shard file(s) given",
+                cfg.platform.nodes,
+                paths.len()
+            );
+            let ds = psfit::data::open_dataset(&paths)?;
+            cfg.platform.nodes = ds.nodes();
+            eprintln!(
+                "mapped {} PSD1 shard(s): {} samples x {} features ({})",
+                ds.nodes(),
+                ds.total_samples(),
+                ds.n_features,
+                ds.shards
+                    .iter()
+                    .map(|s| s.data.storage_name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            ds
+        }
+        None => build_dataset(&mut cfg, &spec, libsvm.as_deref(), sanitize)?,
+    };
+    if libsvm.is_some() || shards_in.is_some() {
         cfg.solver.kappa = cfg.solver.kappa.min(ds.n_features * ds.width).max(1);
+    }
+    if cfg.solver.minibatch > 0 {
+        // one line per distinct chunk count across the roster (usually one)
+        let counts: std::collections::BTreeSet<usize> = ds
+            .shards
+            .iter()
+            .map(|s| s.rows().div_ceil(cfg.solver.minibatch).max(1))
+            .collect();
+        for n_chunks in counts {
+            eprintln!(
+                "minibatch:   {} rows/chunk, {} chunk(s), schedule fingerprint {:#018x}",
+                cfg.solver.minibatch,
+                n_chunks,
+                psfit::admm::minibatch::schedule_fingerprint(
+                    cfg.solver.minibatch_seed,
+                    n_chunks
+                )
+            );
+        }
     }
     let backend = cfg.platform.backend;
     eprintln!(
@@ -471,6 +536,54 @@ fn train(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = model_out {
         write_model(&path, &ds, res, &cfg)?;
         eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `psfit convert`: stream a LIBSVM/CSV file into one `PSD1` shard per
+/// node in bounded memory (two passes; the matrix is never resident).
+/// The emitted shards are what `psfit train --shards` memory-maps.
+fn convert_cmd(args: &Args) -> anyhow::Result<()> {
+    use psfit::data::{ConvertInput, ConvertOptions};
+    let input = match (args.opt("libsvm"), args.opt("csv")) {
+        (Some(p), None) => ConvertInput::Libsvm(p.into()),
+        (None, Some(p)) => ConvertInput::Csv(p.into()),
+        _ => anyhow::bail!("convert needs exactly one of --libsvm <file> or --csv <file>"),
+    };
+    let out = args.opt("out").map(String::from).ok_or_else(|| {
+        anyhow::anyhow!("convert needs --out <base> (emits <base>.<node>.psd1)")
+    })?;
+    let opts = ConvertOptions {
+        nodes: args.get("nodes", 1)?,
+        mode: match args.opt("sparse") {
+            Some(m) => SparseMode::parse(m)?,
+            None => SparseMode::Auto,
+        },
+        threshold: args.get("sparse-threshold", 0.25)?,
+        n_features: args
+            .opt("n-features")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .map_err(|e| anyhow::anyhow!("--n-features: {e}"))?,
+        sanitize: args.flag("sanitize"),
+    };
+    args.reject_unknown()?;
+    let summary = psfit::data::convert(&input, std::path::Path::new(&out), &opts)?;
+    println!(
+        "converted:   {} rows x {} features, density {:.4}",
+        summary.rows, summary.cols, summary.density
+    );
+    if summary.dropped > 0 {
+        println!("sanitized:   {} row(s) with non-finite values dropped", summary.dropped);
+    }
+    for (i, s) in summary.shards.iter().enumerate() {
+        println!(
+            "shard {i}:     {} ({} rows, {}, {} stored entries)",
+            s.path.display(),
+            s.rows,
+            s.storage,
+            s.nnz
+        );
     }
     Ok(())
 }

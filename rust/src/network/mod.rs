@@ -67,6 +67,15 @@ pub struct NodeWorker {
     first_round: bool,
     params: BlockParams,
     sweeps: usize,
+    /// Mini-batch chunk rows per round (0 = full batch).
+    minibatch: usize,
+    /// Seed of the deterministic chunk schedule.
+    minibatch_seed: u64,
+    /// Self-counted round index for the legacy [`NodeWorker::round_into`]
+    /// path (transports that carry a round counter use
+    /// [`NodeWorker::round_into_at`] instead, which keeps schedules
+    /// replayable across checkpoint/resume and across processes).
+    rounds_seen: u64,
 }
 
 impl NodeWorker {
@@ -82,14 +91,50 @@ impl NodeWorker {
             first_round: true,
             params,
             sweeps,
+            minibatch: 0,
+            minibatch_seed: 0,
+            rounds_seen: 0,
         }
     }
 
-    /// One outer round: receive z^k, refresh the dual (Eq. 9), evaluate
-    /// the prox (7a)/(10), and write (x_i^{k+1}, u_i^k) for the Collect
-    /// step into caller-owned buffers — the transport recycles those
-    /// across rounds instead of cloning fresh vectors every time.
-    pub fn round_into(&mut self, z: &[f64], x_out: &mut Vec<f64>, u_out: &mut Vec<f64>) {
+    /// Enable mini-batch rounds: each outer round's inner sweeps run over
+    /// one `rows`-row chunk picked by the seeded deterministic schedule
+    /// (`admm::minibatch`).  `rows = 0` (or >= the shard) is full batch —
+    /// bit-identical to a plain solve by construction.
+    pub fn with_minibatch(mut self, rows: usize, seed: u64) -> NodeWorker {
+        self.minibatch = rows;
+        self.minibatch_seed = seed;
+        self
+    }
+
+    /// The row window this node's schedule picks for `round` (`None` =
+    /// full batch).
+    pub fn chunk_for(&self, round: u64) -> Option<(usize, usize)> {
+        crate::admm::minibatch::chunk_for(
+            self.minibatch,
+            self.minibatch_seed,
+            round,
+            self.prox.samples(),
+        )
+    }
+
+    /// One outer round at explicit global round index `round`: receive
+    /// z^k, refresh the dual (Eq. 9), evaluate the prox (7a)/(10) — over
+    /// the scheduled mini-batch chunk when one is configured — and write
+    /// (x_i^{k+1}, u_i^k) for the Collect step into caller-owned buffers.
+    ///
+    /// The round index comes from the transport (the coordinator's
+    /// counter, or the wire-carried `Round` frame), NOT from local state:
+    /// that is what makes the chunk schedule identical across transports
+    /// and across checkpoint/resume.
+    pub fn round_into_at(
+        &mut self,
+        round: u64,
+        z: &[f64],
+        x_out: &mut Vec<f64>,
+        u_out: &mut Vec<f64>,
+    ) {
+        self.rounds_seen = round + 1;
         if self.first_round {
             self.first_round = false;
         } else {
@@ -100,15 +145,33 @@ impl NodeWorker {
         }
         u_out.clear();
         u_out.extend_from_slice(&self.u);
+        let span = self.chunk_for(round);
         let mut x_new = std::mem::take(&mut self.x);
-        self.prox.solve(z, &self.u, self.params, self.sweeps, &mut x_new);
+        self.prox
+            .solve_span(z, &self.u, self.params, self.sweeps, span, &mut x_new);
         self.x = x_new;
         x_out.clear();
         x_out.extend_from_slice(&self.x);
     }
 
-    /// [`NodeWorker::round_into`] with freshly allocated reply vectors —
+    /// One outer round with a self-counted round index — the legacy entry
+    /// point for transports that do not carry a round counter (the async
+    /// coordinator).  Full-batch solves are unaffected; mini-batch runs
+    /// are gated to round-carrying synchronous transports by
+    /// `config::validate`.
+    pub fn round_into(&mut self, z: &[f64], x_out: &mut Vec<f64>, u_out: &mut Vec<f64>) {
+        self.round_into_at(self.rounds_seen, z, x_out, u_out)
+    }
+
+    /// [`NodeWorker::round_into_at`] with freshly allocated reply vectors —
     /// the channel-based clusters need owned values on the wire.
+    pub fn round_at(&mut self, round: u64, z: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (mut x, mut u) = (Vec::new(), Vec::new());
+        self.round_into_at(round, z, &mut x, &mut u);
+        (x, u)
+    }
+
+    /// [`NodeWorker::round_into`] with freshly allocated reply vectors.
     pub fn round(&mut self, z: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let (mut x, mut u) = (Vec::new(), Vec::new());
         self.round_into(z, &mut x, &mut u);
@@ -209,6 +272,13 @@ pub trait Cluster {
         let _ = (states, params);
         anyhow::bail!("this transport does not support warm re-seeding")
     }
+    /// Jump the transport's round counter to `round` — called by
+    /// `solve_checkpointed` when resuming mid-trajectory so round-indexed
+    /// schedules (the mini-batch chunk schedule) replay exactly as if the
+    /// run had never stopped.  Transports without a counter ignore it.
+    fn fast_forward(&mut self, round: usize) {
+        let _ = round;
+    }
     /// Expel `node` from the roster as a structured death — the reply
     /// guard's escalation for repeat numerical offenders.  The threaded
     /// cluster severs the node's channel; the socket cluster kills the
@@ -292,7 +362,7 @@ impl Cluster for SequentialCluster {
                 // both reply vectors refill in place — no allocation
                 self.net.net_alloc_saved_bytes += 2 * bytes;
             }
-            w.round_into(z, &mut rep.x, &mut rep.u);
+            w.round_into_at(round as u64, z, &mut rep.x, &mut rep.u);
             rep.node = w.id;
             rep.round = round;
             rep.lag = 0;
@@ -316,6 +386,10 @@ impl Cluster for SequentialCluster {
 
     fn recycle(&mut self, mut replies: Vec<NodeReply>) {
         self.spare.append(&mut replies);
+    }
+
+    fn fast_forward(&mut self, round: usize) {
+        self.round = round;
     }
 
     fn export_warm(&mut self) -> anyhow::Result<Vec<WarmState>> {
@@ -399,7 +473,7 @@ impl ThreadedCluster {
                 while let Ok(cmd) = rx.recv() {
                     let reply = match cmd {
                         Command::Round(z, round) => {
-                            let (x, u) = w.round(&z);
+                            let (x, u) = w.round_at(round as u64, &z);
                             Reply::Round(NodeReply {
                                 node: w.id,
                                 round,
@@ -640,6 +714,10 @@ impl Cluster for ThreadedCluster {
         }
         anyhow::ensure!(got > 0, "re-seed: no node replied");
         Ok(())
+    }
+
+    fn fast_forward(&mut self, round: usize) {
+        self.round = round;
     }
 
     fn banish(&mut self, node: usize, why: &str) {

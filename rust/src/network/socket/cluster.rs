@@ -562,6 +562,13 @@ impl Cluster for SocketCluster {
         Some(self.stats.clone())
     }
 
+    fn fast_forward(&mut self, round: usize) {
+        // the wire counter is 1-based and pre-incremented: after `round`
+        // completed rounds the counter reads `round`, so the next frame
+        // carries `round + 1` and workers index its chunk as `round`
+        self.round = round as u64;
+    }
+
     fn banish(&mut self, node: usize, why: &str) {
         // a structured death like any other peer loss: the slot degrades,
         // and with self-healing on the worker may rejoin (fresh state,

@@ -130,6 +130,28 @@ impl WireShard {
                     rows,
                 }
             }
+            // a mapped shard ships in its on-disk layout's wire form, so
+            // the worker rebuilds the same resident representation the
+            // coordinator's backend computes on (bit-identical f32s)
+            ShardData::Mapped(m) if m.is_csr() => {
+                let mut rows = Vec::with_capacity(m.rows());
+                for i in 0..m.rows() {
+                    let (idx, vals) = m.csr_row(i);
+                    rows.push(idx.iter().copied().zip(vals.iter().copied()).collect());
+                }
+                WireShardData::Csr {
+                    cols: m.cols() as u32,
+                    rows,
+                }
+            }
+            ShardData::Mapped(m) => {
+                let mat = m.to_matrix();
+                WireShardData::Dense {
+                    rows: mat.rows as u32,
+                    cols: mat.cols as u32,
+                    vals: mat.to_vec(),
+                }
+            }
         };
         WireShard {
             labels: shard.labels.clone(),

@@ -163,7 +163,10 @@ fn session(mut stream: SocketStream, fault: Option<usize>) -> anyhow::Result<()>
                     return Ok(());
                 }
                 let w = require(&mut node, &mut stream, "round")?;
-                let (x, u) = w.round(&z);
+                // the wire counter is 1-based (0 is "no round yet"); node
+                // schedules index rounds from 0 like the in-process
+                // transports, so mini-batch chunks line up across them
+                let (x, u) = w.round_at(round.saturating_sub(1), &z);
                 rounds_served += 1;
                 let reply = WireCommand::RoundReply {
                     node: w.id as u32,
@@ -283,7 +286,8 @@ fn build_node(setup: &Setup) -> anyhow::Result<NodeWorker> {
         LocalProx::new(backend, plan, width),
         params,
         cfg.solver.inner_iters,
-    ))
+    )
+    .with_minibatch(cfg.solver.minibatch, cfg.solver.minibatch_seed))
 }
 
 #[cfg(test)]

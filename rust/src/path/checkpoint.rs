@@ -143,6 +143,21 @@ pub fn problem_hash(ds: &Dataset, cfg: &Config, points: &[PathPoint]) -> u64 {
                     h.f32(v);
                 }
             }
+            // mapped shards sample exactly like their resident layout, so
+            // a checkpoint taken over `data.psd1` resumes over the same
+            // file — and over the equivalent resident shard — unchanged
+            crate::data::ShardData::Mapped(m) if m.is_csr() => {
+                let step = (m.nnz() / 1024).max(1);
+                for v in m.csr_values().step_by(step) {
+                    h.f32(v);
+                }
+            }
+            crate::data::ShardData::Mapped(m) => {
+                let step = ((m.rows() * m.cols()) / 1024).max(1);
+                for &v in (0..m.rows()).flat_map(|i| m.dense_row(i)).step_by(step) {
+                    h.f32(v);
+                }
+            }
         }
     }
     // trajectory-shaping solver / platform / coordination settings
@@ -156,6 +171,8 @@ pub fn problem_hash(ds: &Dataset, cfg: &Config, points: &[PathPoint]) -> u64 {
     h.f64(cfg.solver.tol_primal);
     h.f64(cfg.solver.tol_dual);
     h.f64(cfg.solver.tol_bilinear);
+    h.u64(cfg.solver.minibatch as u64);
+    h.u64(cfg.solver.minibatch_seed);
     h.u64(cfg.loss as u64);
     h.u64(cfg.classes as u64);
     h.u64(cfg.platform.backend as u64);

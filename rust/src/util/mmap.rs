@@ -1,0 +1,206 @@
+//! Dependency-free read-only memory mapping (memmap2 stand-in).
+//!
+//! [`Mmap`] maps a whole file read-only and exposes it as a `&[u8]` slice;
+//! `Drop` unmaps.  On Unix this is a direct `mmap(2)`/`munmap(2)` pair
+//! declared locally (std already links libc, so no new crate is needed —
+//! the same vendored-stub discipline as the rest of `util::`).  On other
+//! platforms the "map" degrades to reading the file into an owned buffer,
+//! keeping the API portable at the cost of residency.
+//!
+//! The mapping is `MAP_PRIVATE` + `PROT_READ`: the kernel pages data in on
+//! demand and may drop clean pages under memory pressure, which is exactly
+//! the out-of-core contract the `PSD1` shard reader relies on — a shard
+//! larger than RAM is consumable as long as the *working set* of a round
+//! fits.
+
+use std::fs::File;
+
+/// A read-only mapping of an entire file (see the module docs).
+pub struct Mmap {
+    inner: Backing,
+}
+
+enum Backing {
+    /// Empty file: nothing to map (`mmap` rejects length 0).
+    Empty,
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    #[cfg(not(unix))]
+    Owned(Vec<u8>),
+}
+
+// Safety: the mapping is read-only for its whole lifetime (PROT_READ,
+// MAP_PRIVATE), so shared references across threads are sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    #![allow(non_camel_case_types)]
+    pub type c_int = i32;
+    pub type off_t = i64;
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: off_t,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> c_int;
+    }
+
+    /// `MAP_FAILED` is `(void *) -1`.
+    pub fn map_failed() -> *mut u8 {
+        usize::MAX as *mut u8
+    }
+}
+
+impl Mmap {
+    /// Map `file` read-only in its entirety.
+    pub fn map(file: &File) -> anyhow::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Ok(Mmap {
+                inner: Backing::Empty,
+            });
+        }
+        if len > usize::MAX as u64 {
+            anyhow::bail!("mmap: file too large for address space ({len} bytes)");
+        }
+        Self::map_len(file, len as usize)
+    }
+
+    #[cfg(unix)]
+    fn map_len(file: &File, len: usize) -> anyhow::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            anyhow::bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap {
+            inner: Backing::Mapped { ptr, len },
+        })
+    }
+
+    #[cfg(not(unix))]
+    fn map_len(file: &File, len: usize) -> anyhow::Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file.try_clone()?;
+        f.read_to_end(&mut buf)?;
+        Ok(Mmap {
+            inner: Backing::Owned(buf),
+        })
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            Backing::Empty => &[],
+            #[cfg(unix)]
+            // Safety: ptr/len come from a successful mmap that lives until
+            // Drop; the mapping is never written through or remapped.
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            #[cfg(not(unix))]
+            Backing::Owned(buf) => buf,
+        }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.inner {
+            // Safety: exactly the region returned by mmap, unmapped once.
+            unsafe {
+                sys::munmap(ptr, len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("psfit_mmap_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp_path("contents");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&payload)
+            .unwrap();
+        let map = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        assert_eq!(map.as_slice(), &payload[..]);
+        assert_eq!(map.len(), payload.len());
+        drop(map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp_path("empty");
+        std::fs::File::create(&path).unwrap();
+        let map = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        assert!(map.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn map_base_is_page_aligned() {
+        let path = tmp_path("aligned");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&[1u8; 4096])
+            .unwrap();
+        let map = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        // page alignment implies the 64-byte alignment PSD1 sections need
+        assert_eq!(map.as_slice().as_ptr() as usize % 64, 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

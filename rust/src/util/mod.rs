@@ -14,12 +14,38 @@ pub mod bench;
 pub mod cli;
 /// Minimal JSON parser + writer (serde stand-in).
 pub mod json;
+/// Dependency-free read-only memory mapping (memmap2 stand-in).
+pub mod mmap;
 /// Scoped worker pool for the block sweep.
 pub mod pool;
 /// Seeded PRNG (rand stand-in).
 pub mod rng;
 /// Property-testing kit (proptest stand-in).
 pub mod testkit;
+
+/// FNV-1a 64-bit offset basis — the repo's standard content-hash seed
+/// (the checkpoint problem hash, wire frame checksums, PSD1 shard headers
+/// and the mini-batch chunk schedule all speak this hash).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a state (start from [`FNV_OFFSET`]).
+#[inline]
+pub fn fnv1a_fold(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// FNV-1a 64-bit hash of a byte string.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_fold(FNV_OFFSET, bytes)
+}
 
 /// Wall-clock stopwatch used by the metrics ledger and the bench kit.
 #[derive(Debug)]

@@ -1,0 +1,389 @@
+//! Out-of-core data plane, pinned end to end: a fit from memory-mapped
+//! `PSD1` shards must be *bit-identical* to the RAM-resident fit on every
+//! transport (sequential, threaded, socket), `psfit convert` must
+//! reproduce the resident load→resplit→storage-policy pipeline exactly
+//! (dense and CSR), corrupted shard files must fail with named `psd1:`
+//! errors, and mini-batch rounds must agree across transports from
+//! mapped shards.
+
+use std::path::PathBuf;
+
+use psfit::admm::SolveOptions;
+use psfit::config::{Config, TransportKind};
+use psfit::data::{
+    self, io, shardfile, ConvertInput, ConvertOptions, Dataset, SparseMode, SyntheticSpec,
+};
+use psfit::driver;
+use psfit::util::testkit::{run_prop, PropConfig};
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Write one `PSD1` file per shard (fit-time storage policy applied, so
+/// the mapped twin holds exactly what the resident fit would compute on)
+/// and open them back as a mapped dataset.
+fn mapped_twin(ds: &Dataset, cfg: &Config, tag: &str) -> (Dataset, Vec<PathBuf>) {
+    let base = std::env::temp_dir().join(format!("psfit_oocore_{tag}"));
+    let mut paths = Vec::new();
+    for (i, shard) in ds.shards.iter().enumerate() {
+        let p = shardfile::shard_path(&base, i);
+        let stored =
+            shard.with_storage_policy(cfg.platform.sparse, cfg.platform.sparse_threshold);
+        shardfile::write_shard(&stored, &p).unwrap();
+        paths.push(p);
+    }
+    let mapped = shardfile::open_dataset(&paths).unwrap();
+    for (m, r) in mapped.shards.iter().zip(&ds.shards) {
+        assert!(m.data.is_mapped(), "twin shard is not mapped");
+        assert_eq!(m.labels, r.labels);
+    }
+    (mapped, paths)
+}
+
+fn cleanup(paths: &[PathBuf]) {
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+fn assert_same_fit(a: &psfit::admm::SolveResult, b: &psfit::admm::SolveResult, what: &str) {
+    assert_eq!(a.support, b.support, "{what}: supports differ");
+    assert_eq!(bits(&a.x), bits(&b.x), "{what}: x differs");
+    assert_eq!(bits(&a.z), bits(&b.z), "{what}: z differs");
+    assert_eq!(a.iters, b.iters, "{what}: iteration counts differ");
+}
+
+// ------------------------------------------------- local transport parity
+
+/// Mapped vs resident on the sequential and threaded clusters, for both
+/// storage layouts (a dense problem and a sparse one the auto policy
+/// stores as CSR).
+#[test]
+fn mapped_fit_is_bit_identical_to_resident_on_local_transports() {
+    for (density, tag) in [(1.0, "dense"), (0.05, "csr")] {
+        let mut spec = SyntheticSpec::regression(20, 120, 2);
+        spec.density = density;
+        let ds = spec.generate();
+        let mut cfg = Config::default();
+        cfg.platform.nodes = 2;
+        cfg.solver.kappa = spec.kappa();
+        cfg.solver.max_iters = 15;
+
+        let (mapped, paths) = mapped_twin(&ds, &cfg, &format!("local_{tag}"));
+        if density < 0.25 {
+            assert!(
+                mapped.shards.iter().all(|s| s.data.is_csr()),
+                "sparse twin should map as CSR"
+            );
+        }
+        for threaded in [false, true] {
+            let opts = SolveOptions::default();
+            let resident = driver::fit_with_options(&ds, &cfg, &opts, threaded).unwrap();
+            let oo = driver::fit_with_options(&mapped, &cfg, &opts, threaded).unwrap();
+            assert_same_fit(&resident, &oo, &format!("{tag}, threaded={threaded}"));
+        }
+        cleanup(&paths);
+    }
+}
+
+// ------------------------------------------------------ socket transport
+
+struct WorkerGuard(std::process::Child);
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn_worker() -> (WorkerGuard, String) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_psfit"))
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn psfit worker");
+    let stdout = child.stdout.take().unwrap();
+    let guard = WorkerGuard(child);
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("psfit worker listening on ")
+        .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+        .to_string();
+    (guard, addr)
+}
+
+/// Mapped vs resident over real worker processes: the mapped shards ship
+/// in their on-disk layout's wire form and the fleet reproduces the
+/// sequential resident fit bit for bit.
+#[test]
+fn mapped_fit_is_bit_identical_over_the_socket_transport() {
+    let mut spec = SyntheticSpec::regression(18, 96, 2);
+    spec.density = 0.1; // auto policy -> CSR shards on both sides
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = spec.kappa();
+    cfg.solver.max_iters = 12;
+
+    let (mapped, paths) = mapped_twin(&ds, &cfg, "socket");
+    let opts = SolveOptions::default();
+    let reference = driver::fit_with_options(&ds, &cfg, &opts, false).unwrap();
+
+    let (_g1, a1) = spawn_worker();
+    let (_g2, a2) = spawn_worker();
+    let mut sock_cfg = cfg.clone();
+    sock_cfg.platform.transport = TransportKind::Socket;
+    sock_cfg.platform.workers = vec![a1, a2];
+    let sock_resident = driver::fit_with_options(&ds, &sock_cfg, &opts, false).unwrap();
+    let sock_mapped = driver::fit_with_options(&mapped, &sock_cfg, &opts, false).unwrap();
+    cleanup(&paths);
+
+    assert_same_fit(&reference, &sock_resident, "socket resident vs sequential");
+    assert_same_fit(&reference, &sock_mapped, "socket mapped vs sequential");
+}
+
+// ---------------------------------------------- mini-batch across transports
+
+/// Seeded mini-batch rounds from mapped shards: the chunk schedule is a
+/// pure function of (seed, round), so sequential, threaded, and socket
+/// clusters must walk identical trajectories.
+#[test]
+fn minibatch_rounds_agree_across_transports_from_mapped_shards() {
+    let mut spec = SyntheticSpec::regression(16, 112, 2);
+    spec.density = 0.5;
+    let ds = spec.generate();
+    let mut cfg = Config::default();
+    cfg.platform.nodes = 2;
+    cfg.solver.kappa = 4;
+    cfg.solver.max_iters = 10;
+    cfg.solver.tol_primal = 0.0; // fixed rounds on every transport
+    cfg.solver.minibatch = 16; // 56 rows/node -> 4 chunks
+    cfg.solver.minibatch_seed = 5;
+
+    let (mapped, paths) = mapped_twin(&ds, &cfg, "minibatch");
+    let opts = SolveOptions::default();
+    let seq = driver::fit_with_options(&mapped, &cfg, &opts, false).unwrap();
+    let thr = driver::fit_with_options(&mapped, &cfg, &opts, true).unwrap();
+    assert_same_fit(&seq, &thr, "minibatch threaded vs sequential");
+
+    let (_g1, a1) = spawn_worker();
+    let (_g2, a2) = spawn_worker();
+    let mut sock_cfg = cfg.clone();
+    sock_cfg.platform.transport = TransportKind::Socket;
+    sock_cfg.platform.workers = vec![a1, a2];
+    let sock = driver::fit_with_options(&mapped, &sock_cfg, &opts, false).unwrap();
+    cleanup(&paths);
+    assert_same_fit(&seq, &sock, "minibatch socket vs sequential");
+}
+
+// --------------------------------------------------- convert roundtrips
+
+/// `psfit convert` must reproduce the resident pipeline (load → resplit →
+/// storage policy) exactly: same rows, same labels, same stored values —
+/// for dense, CSR, and auto-decided storage, across random shard counts.
+#[test]
+fn prop_convert_matches_resident_pipeline_dense_and_csr() {
+    run_prop(
+        "convert_roundtrip",
+        PropConfig { cases: 24, ..Default::default() },
+        |rng, size| {
+            let n = 4 + size % 12;
+            let m = 6 + rng.below(30);
+            let mut spec = SyntheticSpec::regression(n, m, 1);
+            spec.density = 0.2 + rng.uniform() * 0.8;
+            spec.seed = rng.next_u64();
+            let ds = spec.generate();
+
+            let id = rng.next_u64();
+            let svm = std::env::temp_dir().join(format!("psfit_oocore_prop_{id}.svm"));
+            io::save_libsvm(&ds, &svm).map_err(|e| e.to_string())?;
+
+            let nodes = 1 + rng.below(3.min(m));
+            let mode = [SparseMode::Auto, SparseMode::Always, SparseMode::Never]
+                [rng.below(3)];
+            let base = std::env::temp_dir().join(format!("psfit_oocore_prop_{id}"));
+            let opts = ConvertOptions {
+                nodes,
+                mode,
+                threshold: 0.25,
+                n_features: None,
+                sanitize: false,
+            };
+            let summary = data::convert(&ConvertInput::Libsvm(svm.clone()), &base, &opts)
+                .map_err(|e| e.to_string())?;
+            let paths: Vec<PathBuf> = summary.shards.iter().map(|s| s.path.clone()).collect();
+            let mapped = shardfile::open_dataset(&paths).map_err(|e| e.to_string())?;
+
+            // resident reference: same file through the in-memory pipeline
+            let mut resident = io::load_libsvm(&svm, None).map_err(|e| e.to_string())?;
+            if nodes > 1 {
+                resident = resident.resplit(nodes);
+            }
+            let _ = std::fs::remove_file(&svm);
+            let check = (|| -> Result<(), String> {
+                if mapped.nodes() != resident.nodes() {
+                    return Err("shard count mismatch".into());
+                }
+                if mapped.n_features != resident.n_features {
+                    return Err("feature count mismatch".into());
+                }
+                for (ms, rs) in mapped.shards.iter().zip(&resident.shards) {
+                    let rs = rs.with_storage_policy(mode, 0.25);
+                    if ms.labels != rs.labels {
+                        return Err("labels mismatch".into());
+                    }
+                    if ms.data.is_csr() != rs.data.is_csr() {
+                        return Err(format!(
+                            "storage mismatch: {} vs {}",
+                            ms.data.storage_name(),
+                            rs.data.storage_name()
+                        ));
+                    }
+                    // stored values must agree bit for bit, row by row
+                    let md = ms.data.to_dense();
+                    let rd = rs.data.to_dense();
+                    for r in 0..ms.rows() {
+                        if md.row(r).iter().map(|v| v.to_bits()).ne(
+                            rd.row(r).iter().map(|v| v.to_bits()),
+                        ) {
+                            return Err(format!("row {r} values mismatch"));
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            cleanup(&paths);
+            check
+        },
+    );
+}
+
+// ------------------------------------------------------ corruption safety
+
+/// Corrupted `PSD1` files must fail with stable named errors through the
+/// public open path — never a panic, never a silent partial read.
+#[test]
+fn corrupted_psd1_files_fail_with_named_errors() {
+    let mut spec = SyntheticSpec::regression(8, 24, 1);
+    spec.density = 0.3;
+    let ds = spec.generate();
+    let base = std::env::temp_dir().join("psfit_oocore_corrupt");
+    let p = shardfile::shard_path(&base, 0);
+    shardfile::write_shard(&ds.shards[0], &p).unwrap();
+    let good = std::fs::read(&p).unwrap();
+    let open_err = |bytes: &[u8]| -> String {
+        std::fs::write(&p, bytes).unwrap();
+        shardfile::open_shard(&p).unwrap_err().to_string()
+    };
+
+    // truncated header
+    assert!(open_err(&good[..40]).contains("psd1: truncated header"));
+    // bad magic
+    let mut b = good.clone();
+    b[0] = b'X';
+    assert!(open_err(&b).contains("psd1: bad magic"));
+    // corrupted checksum field
+    let mut b = good.clone();
+    b[136] ^= 0xFF;
+    assert!(open_err(&b).contains("psd1: header checksum mismatch"));
+    // version bump (checksum re-sealed so the version check is reached)
+    let mut b = good.clone();
+    b[4] = 99;
+    let sum = psfit::util::fnv1a(&b[..136]);
+    b[136..144].copy_from_slice(&sum.to_le_bytes());
+    assert!(open_err(&b).contains("psd1: unsupported version"));
+    // truncated payload
+    assert!(open_err(&good[..good.len() - 8]).contains("psd1: truncated file"));
+    let _ = std::fs::remove_file(&p);
+}
+
+// ----------------------------------------------------------- CLI end to end
+
+/// The full CLI loop: `psfit convert` emits shards, `psfit train --shards`
+/// maps them, and the `--model-out` JSON (exact f64 bit patterns) is
+/// byte-identical to the resident `--libsvm` fit's.
+#[test]
+fn model_out_json_is_byte_identical_for_mapped_and_resident_cli_fits() {
+    use std::process::Command;
+
+    let mut spec = SyntheticSpec::regression(12, 48, 1);
+    spec.density = 0.6;
+    let ds = spec.generate();
+    let dir = std::env::temp_dir();
+    let svm = dir.join("psfit_oocore_cli.svm");
+    io::save_libsvm(&ds, &svm).unwrap();
+    let base = dir.join("psfit_oocore_cli");
+    let resident_json = dir.join("psfit_oocore_cli_resident.json");
+    let mapped_json = dir.join("psfit_oocore_cli_mapped.json");
+
+    let run = |args: &[&str]| {
+        let out = Command::new(env!("CARGO_BIN_EXE_psfit"))
+            .args(args)
+            .output()
+            .expect("run psfit");
+        assert!(
+            out.status.success(),
+            "psfit {args:?} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out
+    };
+
+    run(&[
+        "convert",
+        "--libsvm",
+        svm.to_str().unwrap(),
+        "--nodes",
+        "2",
+        "--out",
+        base.to_str().unwrap(),
+    ]);
+    let shard0 = shardfile::shard_path(&base, 0);
+    let shard1 = shardfile::shard_path(&base, 1);
+    let shards_arg = format!("{},{}", shard0.display(), shard1.display());
+
+    let common = ["--kappa", "3", "--iters", "10", "--minibatch", "8"];
+    let mut a = vec![
+        "train",
+        "--libsvm",
+        svm.to_str().unwrap(),
+        "--nodes",
+        "2",
+        "--model-out",
+        resident_json.to_str().unwrap(),
+    ];
+    a.extend_from_slice(&common);
+    run(&a);
+    let mut b = vec![
+        "train",
+        "--shards",
+        shards_arg.as_str(),
+        "--model-out",
+        mapped_json.to_str().unwrap(),
+    ];
+    b.extend_from_slice(&common);
+    let out = run(&b);
+    // the mini-batch schedule fingerprint is printed and stable
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("schedule fingerprint 0x"),
+        "no fingerprint line in:\n{stderr}"
+    );
+
+    let resident = std::fs::read(&resident_json).unwrap();
+    let mapped = std::fs::read(&mapped_json).unwrap();
+    assert!(!resident.is_empty());
+    assert_eq!(
+        resident, mapped,
+        "model-out JSON differs between resident and mapped fits"
+    );
+    for p in [&svm, &shard0, &shard1, &resident_json, &mapped_json] {
+        let _ = std::fs::remove_file(p);
+    }
+}
