@@ -391,6 +391,32 @@ impl Default for PlatformConfig {
     }
 }
 
+/// Settings for the `psfit serve` daemon's durable control plane (see
+/// `serve::journal` and DESIGN.md §Durable-control-plane).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Durable state directory: the job journal, model artifacts, and
+    /// per-job PSF1 checkpoints live here.  Empty keeps the daemon
+    /// in-memory-only (a restart forgets every job).
+    pub state_dir: String,
+    /// How long a drain (SIGTERM/SIGINT) waits for running jobs before
+    /// exiting anyway; their checkpoints make the wait a courtesy.
+    pub drain_grace_ms: u64,
+    /// Whether to journal at all when a state dir is set; per-job
+    /// checkpoints are still written when `false`.
+    pub journal: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            state_dir: String::new(),
+            drain_grace_ms: 10_000,
+            journal: true,
+        }
+    }
+}
+
 /// Complete experiment configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -407,6 +433,8 @@ pub struct Config {
     /// Sparsity-path sweep settings (`psfit path`; empty budgets means
     /// no path is configured).
     pub path: PathConfig,
+    /// `psfit serve` durability settings (`--state-dir` et al.).
+    pub serve: ServeConfig,
 }
 
 impl Default for Config {
@@ -418,6 +446,7 @@ impl Default for Config {
             loss: LossKind::Squared,
             classes: 2,
             path: PathConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -735,6 +764,32 @@ impl Config {
                     // "path" section (e.g. only a ladder) that the CLI
                     // completes, and non-path subcommands never use it
                 }
+                "serve" => {
+                    let s = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("serve must be an object"))?;
+                    for (k, v) in s {
+                        match k.as_str() {
+                            "state_dir" => {
+                                cfg.serve.state_dir = v
+                                    .as_str()
+                                    .ok_or_else(|| anyhow::anyhow!("serve.state_dir: str"))?
+                                    .to_string()
+                            }
+                            "drain_grace_ms" => {
+                                cfg.serve.drain_grace_ms = v.as_usize().ok_or_else(|| {
+                                    anyhow::anyhow!("serve.drain_grace_ms: int")
+                                })? as u64
+                            }
+                            "journal" => {
+                                cfg.serve.journal = v
+                                    .as_bool()
+                                    .ok_or_else(|| anyhow::anyhow!("serve.journal: bool"))?
+                            }
+                            other => anyhow::bail!("unknown serve key `{other}`"),
+                        }
+                    }
+                }
                 "loss" => {
                     cfg.loss = LossKind::parse(
                         val.as_str()
@@ -886,11 +941,18 @@ impl Config {
         if let Some(ck) = &pa.checkpoint {
             path.push(("checkpoint", Json::Str(ck.clone())));
         }
+        let sv = &self.serve;
+        let serve = vec![
+            ("state_dir", Json::Str(sv.state_dir.clone())),
+            ("drain_grace_ms", Json::Num(sv.drain_grace_ms as f64)),
+            ("journal", Json::Bool(sv.journal)),
+        ];
         Json::obj(vec![
             ("solver", Json::obj(solver)),
             ("platform", Json::obj(platform)),
             ("coordinator", Json::obj(coordinator)),
             ("path", Json::obj(path)),
+            ("serve", Json::obj(serve)),
             ("loss", Json::Str(self.loss.name().to_string())),
             ("classes", Json::Num(self.classes as f64)),
         ])
@@ -1129,6 +1191,9 @@ mod tests {
         cfg.path.rho_ladder = vec![2.0, 1.0];
         cfg.path.checkpoint = Some("sweep.psc".into());
         cfg.path.warm_start = false;
+        cfg.serve.state_dir = "/tmp/psfit-state".into();
+        cfg.serve.drain_grace_ms = 500;
+        cfg.serve.journal = false;
 
         let text = cfg.to_json().to_string();
         let back = Config::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -1184,6 +1249,33 @@ mod tests {
         // minibatch == 0 is compatible with everything
         let src = r#"{"platform": {"backend": "xla"}}"#;
         assert!(Config::from_json(&Json::parse(src).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn serve_section_roundtrip() {
+        let src = r#"{
+            "serve": {"state_dir": "/var/lib/psfit", "drain_grace_ms": 250,
+                      "journal": false}
+        }"#;
+        let cfg = Config::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.serve.state_dir, "/var/lib/psfit");
+        assert_eq!(cfg.serve.drain_grace_ms, 250);
+        assert!(!cfg.serve.journal);
+        // defaults: in-memory daemon, 10 s grace, journaling on
+        let d = Config::default();
+        assert!(d.serve.state_dir.is_empty());
+        assert_eq!(d.serve.drain_grace_ms, 10_000);
+        assert!(d.serve.journal);
+        for bad in [
+            r#"{"serve": {"state_dir": 7}}"#,
+            r#"{"serve": {"journal": "yes"}}"#,
+            r#"{"serve": {"typo": 1}}"#,
+        ] {
+            assert!(
+                Config::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
     }
 
     #[test]

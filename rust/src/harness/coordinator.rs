@@ -1,0 +1,449 @@
+//! `psfit chaos --coordinator` — coordinator kill/restart chaos over a
+//! real subprocess fleet.
+//!
+//! Where `psfit chaos` damages worker traffic and `--numerics` damages
+//! the math, this mode kills the *coordinator*: it stands up `psfit
+//! worker` subprocesses and a `psfit serve --state-dir` daemon, submits a
+//! batch of deterministic jobs, then `SIGKILL`s and restarts the daemon
+//! on a seeded schedule while a reconnecting [`ServeClient`] rides
+//! through every restart.  The same jobs run once on an uninterrupted
+//! daemon first, and the harness asserts that every killed-and-resumed
+//! job still lands `done` with a **bit-identical** PSM1 artifact —
+//! same support, same objective bits, same prediction bits on seeded
+//! probe queries.  The printed schedule fingerprint is a pure function
+//! of `(seed, kills, jobs)`, so two runs with one seed can prove they
+//! faced the same kill schedule with a plain `cmp`.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::network::socket::wire::{fnv1a, JobSpec};
+use crate::serve::journal;
+use crate::serve::{FittedModel, JobPhase, ServeClient};
+use crate::util::rng::Rng;
+
+/// Settings for `psfit chaos --coordinator`.
+#[derive(Debug, Clone)]
+pub struct CoordinatorChaosOpts {
+    /// Smaller job batch and iteration budget (CI smoke).
+    pub quick: bool,
+    /// Kill-schedule seed: same seed, same kill delays, every run.
+    pub seed: u64,
+    /// Coordinator kills to perform; `0` picks the mode default
+    /// (1 quick, 2 full).
+    pub kills: u32,
+    /// Jobs to submit; `0` picks the mode default (2 quick, 3 full).
+    pub jobs: u32,
+}
+
+/// Kills every child it still owns on drop — no orphaned workers or
+/// daemons survive a failed assertion.
+struct Reaper(Vec<Child>);
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Spawn `bin` with stdout+stderr redirected into `log` (the harness
+/// parses announced addresses out of it).
+fn spawn_logged(bin: &Path, args: &[String], log: &Path) -> anyhow::Result<Child> {
+    let out = File::create(log)
+        .map_err(|e| anyhow::anyhow!("cannot create log {}: {e}", log.display()))?;
+    let err = out
+        .try_clone()
+        .map_err(|e| anyhow::anyhow!("cannot clone log handle: {e}"))?;
+    Command::new(bin)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::from(out))
+        .stderr(Stdio::from(err))
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("cannot spawn {}: {e}", bin.display()))
+}
+
+/// Poll `log` until a line starting with `needle` appears; returns the
+/// first whitespace-separated token after the prefix (the announced
+/// address for both the worker and serve banners).
+fn await_line(log: &Path, needle: &str, timeout: Duration) -> anyhow::Result<String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(log) {
+            for line in text.lines() {
+                if let Some(rest) = line.strip_prefix(needle) {
+                    let token = rest.split_whitespace().next().unwrap_or("");
+                    anyhow::ensure!(
+                        !token.is_empty(),
+                        "`{needle}` line in {} carries no address",
+                        log.display()
+                    );
+                    return Ok(token.to_string());
+                }
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "`{needle}` did not appear in {} within {timeout:?}",
+            log.display()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Spawn a `psfit serve` daemon child over `workers` with durable state
+/// in `state_dir`, logging to `log`.
+fn spawn_serve_child(
+    bin: &Path,
+    workers: &str,
+    state_dir: &Path,
+    listen: &str,
+    log: &Path,
+) -> anyhow::Result<Child> {
+    spawn_logged(
+        bin,
+        &[
+            "serve".to_string(),
+            "--listen".to_string(),
+            listen.to_string(),
+            "--workers".to_string(),
+            workers.to_string(),
+            "--state-dir".to_string(),
+            state_dir.display().to_string(),
+        ],
+        log,
+    )
+}
+
+/// Milliseconds from the previous schedule event to kill `k` — pure in
+/// `(seed, k)`, landing in `[400, 1200)` so kills interleave with the
+/// fits instead of bunching at either end.
+fn kill_delay_ms(seed: u64, k: u32) -> u64 {
+    let mut key = [0u8; 12];
+    key[..8].copy_from_slice(&seed.to_le_bytes());
+    key[8..].copy_from_slice(&k.to_le_bytes());
+    400 + fnv1a(&key) % 800
+}
+
+/// FNV-1a digest of the whole kill schedule — what two same-seed runs
+/// `cmp` to prove they faced identical chaos.
+fn schedule_fingerprint(seed: u64, kills: u32, jobs: u32) -> u64 {
+    let mut buf = Vec::with_capacity(16 + 8 * kills as usize);
+    buf.extend_from_slice(&seed.to_le_bytes());
+    buf.extend_from_slice(&kills.to_le_bytes());
+    buf.extend_from_slice(&jobs.to_le_bytes());
+    for k in 0..kills {
+        buf.extend_from_slice(&kill_delay_ms(seed, k).to_le_bytes());
+    }
+    fnv1a(&buf)
+}
+
+/// One deterministic job: zero tolerances pin the exact iteration count,
+/// so a resumed fit and an uninterrupted one walk the same rounds and the
+/// final iterate is bit-identical by construction.
+fn job_spec(seed: u64, idx: u32, iters: usize) -> JobSpec {
+    let mut cfg = Config::default();
+    cfg.solver.max_iters = iters;
+    cfg.solver.tol_primal = 0.0;
+    cfg.solver.tol_dual = 0.0;
+    cfg.solver.tol_bilinear = 0.0;
+    cfg.solver.kappa = 8;
+    JobSpec {
+        n: 48,
+        m: 480,
+        nodes: 2,
+        sparsity: 0.85,
+        density: 1.0,
+        noise_std: 0.1,
+        seed: seed ^ (0x10001 * (idx as u64 + 1)),
+        kappa: 8,
+        config: cfg.to_json().to_string(),
+    }
+}
+
+/// Seeded sparse probe queries for prediction bit-parity (indices inside
+/// the jobs' 48-feature dimension).
+fn probe_queries(seed: u64) -> Vec<Vec<(u32, f64)>> {
+    let mut rng = Rng::seed_from(seed ^ 0x9E37_79B9_7F4A_7C15);
+    (0..4)
+        .map(|_| {
+            (0..6)
+                .map(|_| ((rng.uniform() * 48.0) as u32 % 48, rng.uniform() * 2.0 - 1.0))
+                .collect()
+        })
+        .collect()
+}
+
+/// One job's reference outcome: support, objective bits, and prediction
+/// bits on the probe queries.
+struct Outcome {
+    support: Vec<usize>,
+    objective_bits: u64,
+    prediction_bits: Vec<u64>,
+}
+
+/// Read job `job`'s PSM1 artifact out of `dir` and reduce it to the
+/// bit-comparable outcome.
+fn outcome_from_state(dir: &Path, job: u64, probes: &[Vec<(u32, f64)>]) -> anyhow::Result<Outcome> {
+    let path = journal::model_blob_path(dir, job);
+    let blob = std::fs::read(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read model artifact {}: {e}", path.display()))?;
+    let model = FittedModel::from_bytes(&blob)?;
+    let prediction_bits = probes
+        .iter()
+        .flat_map(|q| model.predict_sparse(q))
+        .map(f64::to_bits)
+        .collect();
+    Ok(Outcome {
+        support: model.support.clone(),
+        objective_bits: model.objective.to_bits(),
+        prediction_bits,
+    })
+}
+
+/// Submit the job batch and wait until every job is `done`.
+fn run_jobs(
+    client: &mut ServeClient,
+    seed: u64,
+    jobs: u32,
+    iters: usize,
+    wait_each: Duration,
+) -> anyhow::Result<()> {
+    for j in 0..jobs {
+        let id = client.submit(&format!("coordchaos-{j}"), job_spec(seed, j, iters))?;
+        anyhow::ensure!(
+            id == j as u64 + 1,
+            "expected job id {} from a fresh daemon, got {id}",
+            j + 1
+        );
+    }
+    for j in 1..=jobs as u64 {
+        let st = client.wait(j, wait_each)?;
+        anyhow::ensure!(
+            JobPhase::from_code(st.phase)? == JobPhase::Done,
+            "job {j} finished in phase `{}`, not `done`",
+            JobPhase::from_code(st.phase)?.name()
+        );
+    }
+    Ok(())
+}
+
+/// Run the harness; errors mean a job failed to land `done`, an artifact
+/// broke bit-parity, or a subprocess misbehaved — CI gates on the exit
+/// code.
+pub fn coordinator_chaos(opts: &CoordinatorChaosOpts) -> anyhow::Result<()> {
+    let (default_jobs, default_kills, iters) = if opts.quick {
+        (2u32, 1u32, 900usize)
+    } else {
+        (3, 2, 1500)
+    };
+    let jobs = if opts.jobs > 0 { opts.jobs } else { default_jobs };
+    let kills = if opts.kills > 0 { opts.kills } else { default_kills };
+    let wait_each = Duration::from_secs(180);
+
+    let bin = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("cannot locate the psfit binary: {e}"))?;
+    let scratch: PathBuf =
+        std::env::temp_dir().join(format!("psfit_coordchaos_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", scratch.display()))?;
+
+    let fingerprint = schedule_fingerprint(opts.seed, kills, jobs);
+    println!(
+        "fault spec:  seed={} kills={kills} jobs={jobs} delays_ms={:?}",
+        opts.seed,
+        (0..kills).map(|k| kill_delay_ms(opts.seed, k)).collect::<Vec<_>>()
+    );
+    println!("fingerprint: {fingerprint:#018x} (same seed => same schedule, every run)");
+
+    let mut reaper = Reaper(Vec::new());
+
+    // ---- subprocess worker fleet (shared by both runs) -----------------
+    let mut fleet = Vec::new();
+    for w in 0..2 {
+        let log = scratch.join(format!("worker{w}.log"));
+        reaper.0.push(spawn_logged(
+            &bin,
+            &[
+                "worker".to_string(),
+                "--listen".to_string(),
+                "127.0.0.1:0".to_string(),
+            ],
+            &log,
+        )?);
+        fleet.push(await_line(
+            &log,
+            "psfit worker listening on ",
+            Duration::from_secs(20),
+        )?);
+    }
+    let workers = fleet.join(",");
+    println!("fleet:       {workers}");
+
+    // ---- clean reference run (uninterrupted daemon) --------------------
+    let clean_dir = scratch.join("state-clean");
+    let clean_log = scratch.join("serve-clean.log");
+    reaper.0.push(spawn_serve_child(&bin, &workers, &clean_dir, "127.0.0.1:0", &clean_log)?);
+    let clean_addr = await_line(&clean_log, "psfit serve listening on ", Duration::from_secs(20))?;
+    let mut client = ServeClient::connect(&clean_addr)?;
+    run_jobs(&mut client, opts.seed, jobs, iters, wait_each)?;
+    let probes = probe_queries(opts.seed);
+    let reference: Vec<Outcome> = (1..=jobs as u64)
+        .map(|j| outcome_from_state(&clean_dir, j, &probes))
+        .collect::<anyhow::Result<_>>()?;
+    println!(
+        "clean run:   {jobs} job(s) done, supports {:?}",
+        reference.iter().map(|o| o.support.len()).collect::<Vec<_>>()
+    );
+
+    // ---- chaos run: kill -9 the coordinator on the seeded schedule -----
+    let chaos_dir = scratch.join("state-chaos");
+    let chaos_log = scratch.join("serve-chaos-0.log");
+    let mut daemon = spawn_serve_child(&bin, &workers, &chaos_dir, "127.0.0.1:0", &chaos_log)?;
+    let chaos_addr = await_line(&chaos_log, "psfit serve listening on ", Duration::from_secs(20))?;
+    let mut client = ServeClient::connect(&chaos_addr)?;
+    for j in 0..jobs {
+        let id = client.submit(&format!("coordchaos-{j}"), job_spec(opts.seed, j, iters))?;
+        anyhow::ensure!(id == j as u64 + 1, "chaos daemon assigned unexpected job id {id}");
+    }
+    let mut restart_logs = Vec::new();
+    for k in 0..kills {
+        let delay = kill_delay_ms(opts.seed, k);
+        std::thread::sleep(Duration::from_millis(delay));
+        daemon
+            .kill()
+            .map_err(|e| anyhow::anyhow!("kill {k} failed: {e}"))?;
+        let _ = daemon.wait();
+        println!(
+            "kill {k}:      coordinator SIGKILLed after {delay} ms; restarting on {chaos_addr}"
+        );
+        let log = scratch.join(format!("serve-chaos-{}.log", k + 1));
+        daemon = spawn_serve_child(&bin, &workers, &chaos_dir, &chaos_addr, &log)?;
+        await_line(&log, "psfit serve listening on ", Duration::from_secs(20))?;
+        restart_logs.push(log);
+    }
+    // every job must still land `done` — the reconnecting client rides
+    // through the restarts, the journal + checkpoints carry the jobs
+    for j in 1..=jobs as u64 {
+        let st = client.wait(j, wait_each)?;
+        anyhow::ensure!(
+            JobPhase::from_code(st.phase)? == JobPhase::Done,
+            "job {j} finished in phase `{}` after {kills} coordinator kill(s)",
+            JobPhase::from_code(st.phase)?.name()
+        );
+    }
+    // at least one restart must have seen the crash (no drain marker was
+    // ever written — SIGKILL leaves none)
+    let crash_seen = restart_logs.iter().any(|log| {
+        std::fs::read_to_string(log)
+            .map(|t| t.contains("crash detected"))
+            .unwrap_or(false)
+    });
+    anyhow::ensure!(
+        crash_seen,
+        "no restarted daemon reported `crash detected` — the journal \
+         replay misread a SIGKILL as a clean drain"
+    );
+    if client.reconnects() > 0 {
+        println!(
+            "client:      rode through {} reconnect(s) transparently",
+            client.reconnects()
+        );
+    }
+
+    // ---- bit-parity: killed-and-resumed vs uninterrupted ---------------
+    for (i, want) in reference.iter().enumerate() {
+        let job = i as u64 + 1;
+        let got = outcome_from_state(&chaos_dir, job, &probes)?;
+        anyhow::ensure!(
+            got.support == want.support,
+            "job {job}: support diverged after coordinator kills \
+             (chaos {:?} vs clean {:?})",
+            got.support,
+            want.support
+        );
+        anyhow::ensure!(
+            got.objective_bits == want.objective_bits,
+            "job {job}: objective bits diverged after coordinator kills \
+             ({:#018x} vs {:#018x})",
+            got.objective_bits,
+            want.objective_bits
+        );
+        anyhow::ensure!(
+            got.prediction_bits == want.prediction_bits,
+            "job {job}: prediction bits diverged after coordinator kills"
+        );
+        // the live restarted daemon must serve the same bits over the wire
+        for (q, probe) in probes.iter().enumerate() {
+            let answer = client.predict(job, probe)?;
+            let served: Vec<u64> = answer.iter().map(|v| v.to_bits()).collect();
+            let want_slice = &want.prediction_bits[q * served.len()..(q + 1) * served.len()];
+            anyhow::ensure!(
+                served == want_slice,
+                "job {job} probe {q}: served prediction differs from the clean run"
+            );
+        }
+    }
+    reaper.0.push(daemon);
+    drop(reaper);
+    let _ = std::fs::remove_dir_all(&scratch);
+    println!(
+        "coordinator chaos: {jobs}/{jobs} job(s) done with bit-identical \
+         artifacts across {kills} SIGKILL(s)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_schedule_is_pure_and_seed_sensitive() {
+        for k in 0..8 {
+            let d = kill_delay_ms(7, k);
+            assert_eq!(d, kill_delay_ms(7, k));
+            assert!((400..1200).contains(&d), "delay {d} out of range");
+        }
+        assert_eq!(schedule_fingerprint(7, 2, 3), schedule_fingerprint(7, 2, 3));
+        assert_ne!(schedule_fingerprint(7, 2, 3), schedule_fingerprint(8, 2, 3));
+        assert_ne!(schedule_fingerprint(7, 2, 3), schedule_fingerprint(7, 3, 3));
+    }
+
+    #[test]
+    fn probe_queries_are_deterministic_and_in_range() {
+        let a = probe_queries(11);
+        let b = probe_queries(11);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        for q in &a {
+            for &(idx, v) in q {
+                assert!(idx < 48);
+                assert!(v.is_finite());
+            }
+        }
+        assert_ne!(probe_queries(11), probe_queries(12));
+    }
+
+    #[test]
+    fn job_specs_differ_by_index_but_share_the_pinned_config() {
+        let a = job_spec(5, 0, 900);
+        let b = job_spec(5, 1, 900);
+        assert_ne!(a.seed, b.seed);
+        assert_eq!(a.config, b.config);
+        // zero tolerances pin the iteration count — the determinism the
+        // bit-parity assertion rests on
+        let json = crate::util::json::Json::parse(&a.config).unwrap();
+        let cfg = Config::from_json(&json).unwrap();
+        assert_eq!(cfg.solver.tol_primal, 0.0);
+        assert_eq!(cfg.solver.tol_dual, 0.0);
+        assert_eq!(cfg.solver.max_iters, 900);
+    }
+}

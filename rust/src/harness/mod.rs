@@ -20,6 +20,8 @@
 
 /// Deterministic fault-injection harness (`psfit chaos`).
 pub mod chaos;
+/// Coordinator kill/restart chaos (`psfit chaos --coordinator`).
+pub mod coordinator;
 /// Deterministic numerical-poison harness (`psfit chaos --numerics`).
 pub mod numerics;
 /// Figure 1: residual convergence vs rho_b.
@@ -42,6 +44,7 @@ pub mod table1;
 pub mod transport;
 
 pub use chaos::chaos;
+pub use coordinator::coordinator_chaos;
 pub use fig1::fig1;
 pub use numerics::numerics;
 pub use fig4::fig4;

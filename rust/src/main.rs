@@ -28,8 +28,13 @@
 //!             through a seeded chaos proxy and checks support parity
 //!             against a clean run.  With --numerics: poisons reply
 //!             vectors with NaN/Inf/1e300 on a seeded schedule and
-//!             asserts the reply guard quarantines every one
+//!             asserts the reply guard quarantines every one.  With
+//!             --coordinator: SIGKILLs and restarts the serve daemon on
+//!             a seeded schedule and asserts journal recovery lands
+//!             every job `done` with bit-identical artifacts
 //!   serve   — multi-tenant fit/predict daemon over a worker fleet
+//!             (--state-dir journals jobs + models durably; SIGTERM
+//!             drains gracefully, kill -9 recovers on restart)
 //!   submit / predict / jobs — client commands against `psfit serve`
 //!   info    — print artifact manifest + platform info
 //!
@@ -76,6 +81,18 @@ fn run() -> anyhow::Result<()> {
             run_worker(&opts)
         }
         Some("chaos") => {
+            if args.flag("coordinator") {
+                // coordinator kill/restart chaos: SIGKILL the serve daemon
+                // mid-fit on a seeded schedule, assert journal recovery
+                let opts = harness::coordinator::CoordinatorChaosOpts {
+                    quick: args.flag("quick"),
+                    seed: args.get("seed", 0xC00D)?,
+                    kills: args.get("kills", 0)?,
+                    jobs: args.get("jobs", 0)?,
+                };
+                args.reject_unknown()?;
+                return harness::coordinator_chaos(&opts);
+            }
             if args.flag("numerics") {
                 // numerical poison harness: NaN/Inf/1e300 in reply vectors
                 let opts = harness::numerics::NumericsOpts {
@@ -97,6 +114,19 @@ fn run() -> anyhow::Result<()> {
             harness::chaos(&opts)
         }
         Some("serve") => {
+            // a --config file's `serve` section supplies defaults; explicit
+            // flags always win
+            let file_cfg = match args.opt("config") {
+                Some(path) => Config::from_json_file(std::path::Path::new(path))?,
+                None => Config::default(),
+            };
+            let state_dir = match args.opt("state-dir") {
+                Some(d) => Some(d.to_string()),
+                None if !file_cfg.serve.state_dir.is_empty() => {
+                    Some(file_cfg.serve.state_dir.clone())
+                }
+                None => None,
+            };
             let opts = ServeOpts {
                 listen: args.opt("listen").unwrap_or("127.0.0.1:7700").to_string(),
                 workers: match args.opt("workers") {
@@ -107,6 +137,9 @@ fn run() -> anyhow::Result<()> {
                 connect_timeout_ms: args.get("connect-timeout-ms", 3000)?,
                 read_timeout_ms: args.get("read-timeout-ms", 30_000)?,
                 connect_retries: args.get("connect-retries", 3)?,
+                state_dir,
+                drain_grace_ms: args.get("drain-grace-ms", file_cfg.serve.drain_grace_ms)?,
+                journal: file_cfg.serve.journal,
             };
             args.reject_unknown()?;
             run_serve(&opts)
@@ -259,9 +292,11 @@ fn run() -> anyhow::Result<()> {
             eprintln!("        psfit train --transport socket --rejoin --min-workers 2 --checkpoint fit.psf");
             eprintln!("        psfit chaos --quick                 (seeded fault-injection harness)");
             eprintln!("        psfit chaos --numerics --quick      (seeded NaN/Inf poison harness)");
+            eprintln!("        psfit chaos --coordinator --quick   (seeded coordinator kill/restart)");
             eprintln!("        psfit train --deadline 5000         (abort cleanly after 5 s, best-so-far)");
             eprintln!("        psfit train --libsvm data.svm --sanitize    (drop non-finite rows)");
             eprintln!("        psfit serve --local-fleet 2         (fit/predict daemon)");
+            eprintln!("        psfit serve --local-fleet 2 --state-dir /var/lib/psfit   (durable jobs)");
             eprintln!("        psfit submit --n 200 --m 1600 --wait && psfit predict --job 1 --features 3:0.5");
             Ok(())
         }
@@ -651,6 +686,7 @@ fn submit_cmd(args: &Args) -> anyhow::Result<()> {
             st.converged, st.iters, st.support_len, st.objective, st.wall_seconds
         );
     }
+    report_reconnects(&client);
     Ok(())
 }
 
@@ -689,6 +725,7 @@ fn predict_cmd(args: &Args) -> anyhow::Result<()> {
     for (c, v) in values.iter().enumerate() {
         println!("class {c}: {v:.6e}");
     }
+    report_reconnects(&client);
     Ok(())
 }
 
@@ -702,16 +739,29 @@ fn jobs_cmd(args: &Args) -> anyhow::Result<()> {
         println!("no jobs");
         return Ok(());
     }
-    println!("{:>5}  {:<8}  name", "job", "phase");
+    println!("{:>5}  {:<8}  {:<16}  detail", "job", "phase", "name");
     for j in &jobs {
         println!(
-            "{:>5}  {:<8}  {}",
+            "{:>5}  {:<8}  {:<16}  {}",
             j.job,
             JobPhase::from_code(j.phase)?.name(),
-            j.name
+            j.name,
+            if j.message.is_empty() { "-" } else { &j.message }
         );
     }
+    report_reconnects(&client);
     Ok(())
+}
+
+/// Surface how many daemon restarts the client rode through — a restart
+/// the retry loop hid must still be visible to the operator.
+fn report_reconnects(client: &ServeClient) {
+    if client.reconnects() > 0 {
+        eprintln!(
+            "reconnects:  {} (client re-dialed through a daemon restart)",
+            client.reconnects()
+        );
+    }
 }
 
 /// Parse a comma-separated list like `200,100,50`.

@@ -29,8 +29,10 @@ use std::sync::Arc;
 
 /// Handshake magic: "PSfit Wire".
 pub const MAGIC: &[u8; 4] = b"PSFW";
-/// Wire protocol version; bumped on any frame-layout change.
-pub const VERSION: u32 = 1;
+/// Wire protocol version; bumped on any frame-layout change.  v2 added
+/// the `JobSummary` failure-detail string and the structured `Rejected`
+/// reply a draining daemon answers `Submit` with.
+pub const VERSION: u32 = 2;
 /// Upper bound on a frame payload (1 GiB) — rejects absurd lengths from a
 /// corrupted or hostile stream before any allocation happens.
 pub const MAX_FRAME: usize = 1 << 30;
@@ -41,7 +43,7 @@ pub const FRAME_OVERHEAD: usize = 4 + 8;
 pub const HANDSHAKE_BYTES: usize = 16;
 
 // Command tags.  Coordinator -> worker: 1..=7; worker -> coordinator:
-// 16..=22; serve client -> daemon: 32..=35; daemon -> client: 48..=51.
+// 16..=22; serve client -> daemon: 32..=35; daemon -> client: 48..=52.
 const TAG_SETUP: u8 = 1;
 const TAG_ROUND: u8 = 2;
 const TAG_LOSS: u8 = 3;
@@ -64,6 +66,7 @@ const TAG_SUBMITTED: u8 = 48;
 const TAG_STATUS_REPLY: u8 = 49;
 const TAG_PREDICT_REPLY: u8 = 50;
 const TAG_JOBS_REPLY: u8 = 51;
+const TAG_REJECTED: u8 = 52;
 
 /// FNV-1a 64-bit hash — the per-frame checksum (same constants as the
 /// checkpoint format's integrity hash).
@@ -288,12 +291,16 @@ pub struct JobSummary {
     pub phase: u8,
     /// Client-supplied job name.
     pub name: String,
+    /// Failure detail when the phase is `Failed`, else empty — carried in
+    /// the listing so `psfit jobs` can say *why* a job failed even after
+    /// the daemon restarted and replayed the entry from its journal.
+    pub message: String,
 }
 
 /// Every message that crosses a psfit socket, as one codec.
 ///
 /// Tags 1–7 flow coordinator→worker, 16–22 worker→coordinator, 32–35
-/// serve-client→daemon, and 48–51 daemon→client.  `Error` is valid in any
+/// serve-client→daemon, and 48–52 daemon→client.  `Error` is valid in any
 /// reply position.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireCommand {
@@ -397,6 +404,14 @@ pub enum WireCommand {
     JobsReply {
         /// One row per job, id ascending.
         jobs: Vec<JobSummary>,
+    },
+    /// Structured refusal of a request the daemon could have parsed but
+    /// will not serve — a draining daemon answers `Submit` with this so
+    /// clients can distinguish "shutting down, don't retry here" from a
+    /// transport failure (which the client *does* retry through).
+    Rejected {
+        /// Machine-greppable cause, e.g. `draining: ...`.
+        reason: String,
     },
 }
 
@@ -506,6 +521,7 @@ impl WireCommand {
             WireCommand::StatusReply(_) => "StatusReply",
             WireCommand::PredictReply { .. } => "PredictReply",
             WireCommand::JobsReply { .. } => "JobsReply",
+            WireCommand::Rejected { .. } => "Rejected",
         }
     }
 
@@ -648,7 +664,12 @@ impl WireCommand {
                     w_u64(out, j.job);
                     w_u8(out, j.phase);
                     w_str(out, &j.name);
+                    w_str(out, &j.message);
                 }
+            }
+            WireCommand::Rejected { reason } => {
+                w_u8(out, TAG_REJECTED);
+                w_str(out, reason);
             }
         }
     }
@@ -800,16 +821,23 @@ impl WireCommand {
             }
             TAG_PREDICT_REPLY => WireCommand::PredictReply { values: c.f64s()? },
             TAG_JOBS_REPLY => {
-                let n = c.bounded_len(9)?;
+                let n = c.bounded_len(17)?;
                 let mut jobs = Vec::with_capacity(n);
                 for _ in 0..n {
                     let job = c.u64()?;
                     let phase = c.u8()?;
                     let name = c.str()?;
-                    jobs.push(JobSummary { job, phase, name });
+                    let message = c.str()?;
+                    jobs.push(JobSummary {
+                        job,
+                        phase,
+                        name,
+                        message,
+                    });
                 }
                 WireCommand::JobsReply { jobs }
             }
+            TAG_REJECTED => WireCommand::Rejected { reason: c.str()? },
             t => anyhow::bail!("unknown wire command tag {t}"),
         };
         c.done()?;
@@ -1101,6 +1129,30 @@ mod tests {
         roundtrip(&WireCommand::LossReply { value: -0.25 });
         roundtrip(&WireCommand::Error {
             message: "node 2 é gone".into(),
+        });
+        roundtrip(&WireCommand::Rejected {
+            reason: "draining: not accepting new jobs".into(),
+        });
+    }
+
+    #[test]
+    fn job_listing_carries_failure_detail() {
+        roundtrip(&WireCommand::JobsReply { jobs: Vec::new() });
+        roundtrip(&WireCommand::JobsReply {
+            jobs: vec![
+                JobSummary {
+                    job: 1,
+                    phase: 2,
+                    name: "ok".into(),
+                    message: String::new(),
+                },
+                JobSummary {
+                    job: 2,
+                    phase: 3,
+                    name: "broken".into(),
+                    message: "quorum lost: 2 worker death(s)".into(),
+                },
+            ],
         });
     }
 

@@ -2,16 +2,35 @@
 //! request predictions.  The CLI's `psfit submit` / `psfit predict` /
 //! `psfit jobs` subcommands and the integration tests all go through
 //! here.
+//!
+//! The client **rides through coordinator restarts**: a refused connect,
+//! a reset stream, or a mid-exchange close tears the session down and
+//! re-dials with the shared seeded [`crate::util::backoff`] policy, up to
+//! a bounded attempt budget.  Application-level replies (`Error`,
+//! `Rejected`) are terminal — a draining daemon's refusal must fail fast,
+//! not be retried into the restarted daemon.
 
 use std::time::{Duration, Instant};
 
 use crate::network::socket::wire::{self, JobSpec, JobStatus, JobSummary, WireCommand};
-use crate::network::socket::{connect, Endpoint, SocketStream};
+use crate::network::socket::{connect, connect_backoff_seed, Endpoint, SocketStream};
 use crate::serve::JobPhase;
+use crate::util::backoff::{self, Backoff};
 
-/// A connected `psfit serve` client session.
+/// Reconnect attempts per call before giving up (with the 100 ms-base,
+/// 2 s-cap backoff this spans roughly half a minute — enough for a
+/// coordinator restart, bounded enough to fail a dead one).
+const MAX_RECONNECTS: u32 = 20;
+
+/// A `psfit serve` client session that transparently re-dials the daemon.
 pub struct ServeClient {
-    stream: SocketStream,
+    addr: String,
+    connect_timeout: Duration,
+    read_timeout: Option<Duration>,
+    retries: u32,
+    stream: Option<SocketStream>,
+    backoff: Backoff,
+    reconnects: u64,
 }
 
 impl ServeClient {
@@ -28,26 +47,103 @@ impl ServeClient {
         read_timeout: Option<Duration>,
         retries: u32,
     ) -> anyhow::Result<ServeClient> {
-        let mut stream = connect(&Endpoint::parse(addr), connect_timeout, retries)?;
-        stream.set_read_timeout(read_timeout)?;
-        wire::client_handshake(&mut stream)?;
-        Ok(ServeClient { stream })
+        let mut client = ServeClient {
+            addr: addr.to_string(),
+            connect_timeout,
+            read_timeout,
+            retries,
+            stream: None,
+            // per-address seed: many clients hammering one restarting
+            // daemon fan their re-dials apart deterministically
+            backoff: Backoff::new(
+                Duration::from_millis(100),
+                Duration::from_millis(2000),
+                connect_backoff_seed(&Endpoint::parse(addr)),
+            ),
+            reconnects: 0,
+        };
+        client.stream = Some(client.dial()?);
+        Ok(client)
     }
 
-    /// One request/reply exchange.  An `Error` reply or a closed
-    /// connection is an error here.
+    /// How many times this session re-dialed the daemon after the initial
+    /// connect — the CLI surfaces this so a restart the client rode
+    /// through is visible, not silent.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// One connection attempt: dial, apply the read timeout, handshake.
+    fn dial(&self) -> anyhow::Result<SocketStream> {
+        let mut stream = connect(&Endpoint::parse(&self.addr), self.connect_timeout, self.retries)?;
+        stream.set_read_timeout(self.read_timeout)?;
+        wire::client_handshake(&mut stream)?;
+        Ok(stream)
+    }
+
+    /// One request/reply exchange, re-dialing through transport failures.
+    /// An `Error` or `Rejected` reply is a terminal error here — the
+    /// daemon answered, it just said no.
     fn call(&mut self, cmd: &WireCommand) -> anyhow::Result<WireCommand> {
-        wire::write_frame(&mut self.stream, cmd)?;
-        match wire::read_frame(&mut self.stream)? {
-            Some((WireCommand::Error { message }, _)) => anyhow::bail!("serve: {message}"),
-            Some((reply, _)) => Ok(reply),
-            None => anyhow::bail!("serve closed the connection"),
+        let mut attempts = 0u32;
+        let mut last_err = String::new();
+        loop {
+            if self.stream.is_none() {
+                match self.dial() {
+                    Ok(s) => {
+                        self.stream = Some(s);
+                        self.reconnects += 1;
+                    }
+                    Err(e) => {
+                        last_err = e.to_string();
+                        attempts += 1;
+                        anyhow::ensure!(
+                            attempts < MAX_RECONNECTS,
+                            "serve {} unreachable after {attempts} reconnect attempt(s): {last_err}",
+                            self.addr
+                        );
+                        backoff::sleep_next(&mut self.backoff);
+                        continue;
+                    }
+                }
+            }
+            let stream = self.stream.as_mut().expect("stream present");
+            let exchange = wire::write_frame(stream, cmd).and_then(|_| wire::read_frame(stream));
+            match exchange {
+                Ok(Some((WireCommand::Error { message }, _))) => {
+                    anyhow::bail!("serve: {message}")
+                }
+                Ok(Some((WireCommand::Rejected { reason }, _))) => {
+                    anyhow::bail!("serve rejected the request: {reason}")
+                }
+                Ok(Some((reply, _))) => {
+                    self.backoff.reset();
+                    return Ok(reply);
+                }
+                Ok(None) => last_err = "serve closed the connection".to_string(),
+                Err(e) => last_err = e.to_string(),
+            }
+            // connection died (daemon restarting, socket reset): drop the
+            // session and re-dial with backoff
+            if let Some(s) = self.stream.take() {
+                s.shutdown();
+            }
+            attempts += 1;
+            anyhow::ensure!(
+                attempts < MAX_RECONNECTS,
+                "serve connection to {} lost after {attempts} attempt(s): {last_err}",
+                self.addr
+            );
+            backoff::sleep_next(&mut self.backoff);
         }
     }
 
     /// Submit a fit job; returns its job id immediately (the fit runs in
     /// the daemon, poll with [`ServeClient::status`] or
-    /// [`ServeClient::wait`]).
+    /// [`ServeClient::wait`]).  Note the at-least-once caveat: if the
+    /// daemon dies between accepting the submit and replying, the
+    /// transparent re-dial re-sends it and the job may run twice (the
+    /// journal makes any duplicate visible in `psfit jobs`).
     pub fn submit(&mut self, name: &str, spec: JobSpec) -> anyhow::Result<u64> {
         let cmd = WireCommand::Submit {
             name: name.to_string(),

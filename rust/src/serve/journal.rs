@@ -1,0 +1,585 @@
+//! PSJ1: the append-only job journal behind `psfit serve --state-dir`.
+//!
+//! The daemon's job table is rebuilt from this file on startup, so a
+//! coordinator crash (or a deliberate drain) loses no job metadata and no
+//! fitted model.  The format follows the PSC1/PSF1 family: a magic +
+//! version header, then a sequence of records
+//!
+//! ```text
+//! | u32 payload_len (LE) | payload bytes | u64 FNV-1a(payload) (LE) |
+//! ```
+//!
+//! where the payload's first byte is the record tag:
+//!
+//! | tag | record            | payload fields                           |
+//! |-----|-------------------|------------------------------------------|
+//! | 1   | job submitted     | job id, name, full `JobSpec`             |
+//! | 2   | phase transition  | job id, phase, converged, iters, objective, wall, message |
+//! | 3   | model artifact    | job id, blob filename, blob FNV-1a       |
+//! | 4   | clean shutdown    | (empty) — written by a completed drain   |
+//!
+//! Model artifacts are separate `model-<job>.psm` blobs written via
+//! tmp + rename *before* their journal record, so a record never points at
+//! a half-written blob.  Replay distinguishes two failure shapes: a
+//! **truncated tail** (the process died mid-append; every complete record
+//! is kept, the ragged bytes are dropped, and appending resumes at the
+//! last valid boundary) and a **corrupted record** (checksum or structure
+//! damage in the middle of the log; a named `JournalCorrupt` error, never
+//! a silently wrong job table).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::network::socket::wire::JobSpec;
+use crate::serve::model::FittedModel;
+use crate::serve::JobPhase;
+use crate::util::fnv1a;
+
+/// Journal file magic.
+pub const JOURNAL_MAGIC: &[u8; 4] = b"PSJ1";
+/// Journal format version.
+pub const JOURNAL_VERSION: u32 = 1;
+/// Journal filename inside the state directory.
+pub const JOURNAL_FILE: &str = "serve.journal";
+/// Upper bound on one record's payload — journal records are tiny (the
+/// largest carries a config JSON string), so anything bigger is damage.
+const MAX_RECORD: usize = 1 << 26;
+
+const REC_SUBMIT: u8 = 1;
+const REC_PHASE: u8 = 2;
+const REC_MODEL: u8 = 3;
+const REC_DRAIN: u8 = 4;
+
+/// Path of job `job`'s model artifact inside `dir`.
+pub fn model_blob_path(dir: &Path, job: u64) -> PathBuf {
+    dir.join(format!("model-{job}.psm"))
+}
+
+/// Path of job `job`'s auto-written mid-fit PSF1 checkpoint inside `dir`.
+pub fn checkpoint_path(dir: &Path, job: u64) -> PathBuf {
+    dir.join(format!("job-{job}.psf"))
+}
+
+/// One job as reconstructed by replay.
+#[derive(Debug, Clone)]
+pub struct ReplayedJob {
+    /// Client-supplied display name.
+    pub name: String,
+    /// The submitted problem + config description.
+    pub spec: JobSpec,
+    /// Last journaled lifecycle phase.
+    pub phase: JobPhase,
+    /// Whether the solver hit its tolerances.
+    pub converged: bool,
+    /// Outer iterations run.
+    pub iters: u64,
+    /// Regularized objective at the fitted point.
+    pub objective: f64,
+    /// Solve wall time in seconds.
+    pub wall_seconds: f64,
+    /// Failure message when the phase is `Failed`, else empty.
+    pub message: String,
+    /// The fitted model, when a valid artifact record + blob exist.
+    pub model: Option<FittedModel>,
+}
+
+/// The result of replaying a journal.
+#[derive(Debug)]
+pub struct Replay {
+    /// Every journaled job, id ascending, in its last journaled state.
+    pub jobs: BTreeMap<u64, ReplayedJob>,
+    /// `true` iff the journal ends with a clean-shutdown marker — the
+    /// previous daemon drained; anything else means it crashed.
+    pub clean_shutdown: bool,
+    /// Complete records replayed.
+    pub records: usize,
+    /// `true` when a ragged tail (torn final append) was dropped.
+    pub truncated: bool,
+    /// Non-fatal replay problems (e.g. an unreadable model blob whose job
+    /// will simply be re-run).
+    pub warnings: Vec<String>,
+}
+
+/// An open journal: replayed once at startup, then append-only.
+#[derive(Debug)]
+pub struct Journal {
+    file: File,
+    dir: PathBuf,
+}
+
+impl Journal {
+    /// Open (or create) the journal inside `dir`, replay it, drop any
+    /// torn tail, and position for appending.  `dir` is created if
+    /// missing.  A corrupted record is a hard error — restoring a wrong
+    /// job table would be worse than refusing to start.
+    pub fn open(dir: &Path) -> anyhow::Result<(Journal, Replay)> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create state dir {}: {e}", dir.display()))?;
+        let path = dir.join(JOURNAL_FILE);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("cannot open journal {}: {e}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        if bytes.is_empty() {
+            file.write_all(JOURNAL_MAGIC)?;
+            file.write_all(&JOURNAL_VERSION.to_le_bytes())?;
+            let replay = Replay {
+                jobs: BTreeMap::new(),
+                clean_shutdown: true,
+                records: 0,
+                truncated: false,
+                warnings: Vec::new(),
+            };
+            return Ok((
+                Journal {
+                    file,
+                    dir: dir.to_path_buf(),
+                },
+                replay,
+            ));
+        }
+        let (replay, valid_end) = replay_bytes(&bytes, dir)?;
+        if replay.truncated {
+            // drop the torn tail so new appends start at a record boundary
+            file.set_len(valid_end as u64)?;
+        }
+        file.seek(SeekFrom::Start(valid_end as u64))?;
+        Ok((
+            Journal {
+                file,
+                dir: dir.to_path_buf(),
+            },
+            replay,
+        ))
+    }
+
+    /// The state directory this journal lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Journal a job submission.
+    pub fn record_submit(&mut self, job: u64, name: &str, spec: &JobSpec) -> anyhow::Result<()> {
+        let mut p = Vec::new();
+        p.push(REC_SUBMIT);
+        w_u64(&mut p, job);
+        w_str(&mut p, name);
+        w_u32(&mut p, spec.n);
+        w_u32(&mut p, spec.m);
+        w_u32(&mut p, spec.nodes);
+        w_f64(&mut p, spec.sparsity);
+        w_f64(&mut p, spec.density);
+        w_f64(&mut p, spec.noise_std);
+        w_u64(&mut p, spec.seed);
+        w_u32(&mut p, spec.kappa);
+        w_str(&mut p, &spec.config);
+        self.append(&p)
+    }
+
+    /// Journal a phase transition with the stats known at that point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_phase(
+        &mut self,
+        job: u64,
+        phase: JobPhase,
+        converged: bool,
+        iters: u64,
+        objective: f64,
+        wall_seconds: f64,
+        message: &str,
+    ) -> anyhow::Result<()> {
+        let mut p = Vec::new();
+        p.push(REC_PHASE);
+        w_u64(&mut p, job);
+        p.push(phase.code());
+        p.push(converged as u8);
+        w_u64(&mut p, iters);
+        w_u64(&mut p, objective.to_bits());
+        w_u64(&mut p, wall_seconds.to_bits());
+        w_str(&mut p, message);
+        self.append(&p)
+    }
+
+    /// Persist a fitted model: write the PSM1 blob atomically (tmp +
+    /// rename), then journal the artifact record pointing at it.
+    pub fn record_model(&mut self, job: u64, model: &FittedModel) -> anyhow::Result<()> {
+        let blob = model.to_bytes();
+        let path = model_blob_path(&self.dir, job);
+        let tmp = path.with_extension("psm.tmp");
+        std::fs::write(&tmp, &blob)
+            .map_err(|e| anyhow::anyhow!("cannot write model blob {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("cannot finalize model blob {}: {e}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let mut p = Vec::new();
+        p.push(REC_MODEL);
+        w_u64(&mut p, job);
+        w_str(&mut p, &name);
+        w_u64(&mut p, fnv1a(&blob));
+        self.append(&p)
+    }
+
+    /// Journal the clean-shutdown marker a completed drain writes last.
+    pub fn record_drain(&mut self) -> anyhow::Result<()> {
+        self.append(&[REC_DRAIN])
+    }
+
+    fn append(&mut self, payload: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !payload.is_empty() && payload.len() <= MAX_RECORD,
+            "journal record payload of {} byte(s) out of range",
+            payload.len()
+        );
+        // one contiguous write per record keeps a torn append a pure
+        // prefix, which replay then drops as a truncated tail
+        let mut rec = Vec::with_capacity(payload.len() + 12);
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(payload);
+        rec.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        self.file.write_all(&rec)?;
+        Ok(())
+    }
+}
+
+/// Replay journal bytes (header included); returns the reconstructed
+/// state and the offset just past the last complete record.
+fn replay_bytes(bytes: &[u8], dir: &Path) -> anyhow::Result<(Replay, usize)> {
+    anyhow::ensure!(
+        bytes.len() >= 8 && &bytes[..4] == JOURNAL_MAGIC,
+        "JournalCorrupt: {} is not a PSJ1 journal",
+        dir.join(JOURNAL_FILE).display()
+    );
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == JOURNAL_VERSION,
+        "unsupported journal version {version} (this build speaks v{JOURNAL_VERSION})"
+    );
+    let mut replay = Replay {
+        jobs: BTreeMap::new(),
+        clean_shutdown: false,
+        records: 0,
+        truncated: false,
+        warnings: Vec::new(),
+    };
+    let mut pos = 8usize;
+    let mut clean = true; // an empty journal counts as cleanly shut down
+    loop {
+        if pos == bytes.len() {
+            break;
+        }
+        if bytes.len() - pos < 4 {
+            replay.truncated = true;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_RECORD {
+            anyhow::bail!(
+                "JournalCorrupt: record {} has absurd length {len}",
+                replay.records
+            );
+        }
+        if bytes.len() - pos < 4 + len + 8 {
+            replay.truncated = true;
+            break;
+        }
+        let payload = &bytes[pos + 4..pos + 4 + len];
+        let stored =
+            u64::from_le_bytes(bytes[pos + 4 + len..pos + 4 + len + 8].try_into().unwrap());
+        let actual = fnv1a(payload);
+        anyhow::ensure!(
+            stored == actual,
+            "JournalCorrupt: record {} checksum mismatch (stored {stored:#018x}, computed {actual:#018x})",
+            replay.records
+        );
+        apply_record(payload, dir, &mut replay, &mut clean).map_err(|e| {
+            anyhow::anyhow!("JournalCorrupt: record {} undecodable: {e}", replay.records)
+        })?;
+        replay.records += 1;
+        pos += 4 + len + 8;
+    }
+    replay.clean_shutdown = clean;
+    Ok((replay, pos))
+}
+
+fn apply_record(
+    payload: &[u8],
+    dir: &Path,
+    replay: &mut Replay,
+    clean: &mut bool,
+) -> anyhow::Result<()> {
+    let mut c = Rd { buf: payload, pos: 0 };
+    let tag = c.u8()?;
+    match tag {
+        REC_SUBMIT => {
+            *clean = false;
+            let job = c.u64()?;
+            let name = c.str()?;
+            let spec = JobSpec {
+                n: c.u32()?,
+                m: c.u32()?,
+                nodes: c.u32()?,
+                sparsity: c.f64()?,
+                density: c.f64()?,
+                noise_std: c.f64()?,
+                seed: c.u64()?,
+                kappa: c.u32()?,
+                config: c.str()?,
+            };
+            replay.jobs.insert(
+                job,
+                ReplayedJob {
+                    name,
+                    spec,
+                    phase: JobPhase::Queued,
+                    converged: false,
+                    iters: 0,
+                    objective: f64::NAN,
+                    wall_seconds: 0.0,
+                    message: String::new(),
+                    model: None,
+                },
+            );
+        }
+        REC_PHASE => {
+            *clean = false;
+            let job = c.u64()?;
+            let phase = JobPhase::from_code(c.u8()?)?;
+            let converged = c.u8()? != 0;
+            let iters = c.u64()?;
+            let objective = f64::from_bits(c.u64()?);
+            let wall_seconds = f64::from_bits(c.u64()?);
+            let message = c.str()?;
+            match replay.jobs.get_mut(&job) {
+                Some(e) => {
+                    e.phase = phase;
+                    e.converged = converged;
+                    e.iters = iters;
+                    e.objective = objective;
+                    e.wall_seconds = wall_seconds;
+                    e.message = message;
+                }
+                None => anyhow::bail!("phase record for unknown job {job}"),
+            }
+        }
+        REC_MODEL => {
+            *clean = false;
+            let job = c.u64()?;
+            let name = c.str()?;
+            let want = c.u64()?;
+            let entry = match replay.jobs.get_mut(&job) {
+                Some(e) => e,
+                None => anyhow::bail!("model record for unknown job {job}"),
+            };
+            // a bad blob is a warning, not a replay failure: the job just
+            // loses its artifact and will be re-run from its checkpoint
+            match load_blob(&dir.join(&name), want) {
+                Ok(m) => entry.model = Some(m),
+                Err(e) => replay
+                    .warnings
+                    .push(format!("job {job}: model blob {name}: {e}")),
+            }
+        }
+        REC_DRAIN => *clean = true,
+        other => anyhow::bail!("unknown record tag {other}"),
+    }
+    c.done()?;
+    Ok(())
+}
+
+fn load_blob(path: &Path, want: u64) -> anyhow::Result<FittedModel> {
+    let blob = std::fs::read(path).map_err(|e| anyhow::anyhow!("unreadable: {e}"))?;
+    let got = fnv1a(&blob);
+    anyhow::ensure!(
+        got == want,
+        "ModelBlobCorrupt: checksum {got:#018x} does not match journaled {want:#018x}"
+    );
+    FittedModel::from_bytes(&blob)
+}
+
+// -- little-endian record primitives ----------------------------------
+
+fn w_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_str(out: &mut Vec<u8>, s: &str) {
+    w_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked reader over one record payload.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.buf.len() - self.pos >= n, "truncated record");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("non-UTF-8 string"))?
+            .to_string())
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pos == self.buf.len(), "trailing record bytes");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("psfit-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn submit_phase_model_drain_replay_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let spec = JobSpec {
+            seed: 7,
+            config: r#"{"solver": {"max_iters": 9}}"#.into(),
+            ..Default::default()
+        };
+        let model = FittedModel::from_solution(4, 1, vec![1], &[0.0, 2.5, 0.0, 0.0], -0.5);
+        {
+            let (mut j, replay) = Journal::open(&dir).unwrap();
+            assert!(replay.jobs.is_empty());
+            assert!(replay.clean_shutdown, "empty journal counts as clean");
+            j.record_submit(1, "first", &spec).unwrap();
+            j.record_phase(1, JobPhase::Running, false, 0, f64::NAN, 0.0, "")
+                .unwrap();
+            j.record_model(1, &model).unwrap();
+            j.record_phase(1, JobPhase::Done, true, 9, -0.5, 0.25, "")
+                .unwrap();
+        }
+        {
+            let (mut j, replay) = Journal::open(&dir).unwrap();
+            assert_eq!(replay.records, 4);
+            assert!(!replay.clean_shutdown, "no drain marker => crash");
+            assert!(!replay.truncated);
+            assert!(replay.warnings.is_empty(), "{:?}", replay.warnings);
+            let e = &replay.jobs[&1];
+            assert_eq!(e.name, "first");
+            assert_eq!(e.spec, spec);
+            assert_eq!(e.phase, JobPhase::Done);
+            assert!(e.converged);
+            assert_eq!(e.iters, 9);
+            assert_eq!(e.objective.to_bits(), (-0.5f64).to_bits());
+            assert_eq!(e.model.as_ref().unwrap(), &model);
+            j.record_drain().unwrap();
+        }
+        let (_, replay) = Journal::open(&dir).unwrap();
+        assert!(replay.clean_shutdown, "drain marker => clean");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_appending_resumes() {
+        let dir = tmpdir("torn");
+        {
+            let (mut j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(1, "keep", &JobSpec::default()).unwrap();
+            j.record_submit(2, "torn", &JobSpec::default()).unwrap();
+        }
+        let path = dir.join(JOURNAL_FILE);
+        let full = std::fs::read(&path).unwrap();
+        // cut into the middle of the second record
+        let file = OpenOptions::new().write(true).open(&path).unwrap();
+        file.set_len(full.len() as u64 - 10).unwrap();
+        drop(file);
+        {
+            let (mut j, replay) = Journal::open(&dir).unwrap();
+            assert!(replay.truncated, "torn tail must be flagged");
+            assert_eq!(replay.records, 1);
+            assert!(replay.jobs.contains_key(&1) && !replay.jobs.contains_key(&2));
+            // the torn bytes were dropped, so a fresh append lands clean
+            j.record_submit(3, "after", &JobSpec::default()).unwrap();
+        }
+        let (_, replay) = Journal::open(&dir).unwrap();
+        assert!(!replay.truncated);
+        assert_eq!(replay.records, 2);
+        assert!(replay.jobs.contains_key(&3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_record_is_a_named_error() {
+        let dir = tmpdir("corrupt");
+        {
+            let (mut j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(1, "a", &JobSpec::default()).unwrap();
+            j.record_submit(2, "b", &JobSpec::default()).unwrap();
+        }
+        let path = dir.join(JOURNAL_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip a byte inside the *first* record's payload (not the tail)
+        bytes[16] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Journal::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("JournalCorrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_model_blob_is_a_warning_not_a_failure() {
+        let dir = tmpdir("blobless");
+        let model = FittedModel::from_solution(3, 1, vec![0], &[1.0, 0.0, 0.0], 0.0);
+        {
+            let (mut j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(1, "a", &JobSpec::default()).unwrap();
+            j.record_model(1, &model).unwrap();
+        }
+        std::fs::remove_file(model_blob_path(&dir, 1)).unwrap();
+        let (_, replay) = Journal::open(&dir).unwrap();
+        assert_eq!(replay.warnings.len(), 1, "{:?}", replay.warnings);
+        assert!(replay.jobs[&1].model.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,8 +13,20 @@
 //! so the prediction endpoint answers support-only sparse dot products
 //! with latency independent of the training dimension and of any fit
 //! currently running.
+//!
+//! With `--state-dir` the control plane is **durable**: every submit,
+//! phase transition, and model artifact is journaled ([`journal`], PSJ1
+//! records + atomic PSM1 blobs), each job's fit auto-writes a per-job
+//! PSF1 checkpoint, and on startup the daemon replays the journal —
+//! completed jobs answer `predict` bit-identically, unfinished jobs are
+//! re-dialed onto the fleet and resumed from their checkpoint via
+//! `solve_checkpointed`.  SIGTERM/SIGINT flips the daemon into *draining*
+//! (new submits get a structured `Rejected` reply, running jobs get a
+//! grace window, and a clean-shutdown marker lets the next startup
+//! distinguish a drain from a crash).
 
 pub mod client;
+pub mod journal;
 pub mod model;
 
 pub use client::ServeClient;
@@ -22,8 +34,10 @@ pub use model::FittedModel;
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::admm::{self, SolveOptions};
 use crate::config::{BackendKind, Config, TransportKind};
@@ -31,8 +45,9 @@ use crate::data::{SyntheticSpec, Task};
 use crate::losses::{make_loss, LossKind};
 use crate::network::socket::wire::{self, JobSpec, JobStatus, JobSummary, WireCommand};
 use crate::network::socket::{
-    spawn_local_worker, Endpoint, SocketCluster, SocketListener, SocketStream,
+    connect, spawn_local_worker, Endpoint, SocketCluster, SocketListener, SocketStream,
 };
+use crate::serve::journal::Journal;
 use crate::util::json::Json;
 
 /// Lifecycle of a submitted job.
@@ -105,6 +120,15 @@ pub struct ServeOpts {
     pub read_timeout_ms: u64,
     /// Worker connect retries after the first attempt.
     pub connect_retries: u32,
+    /// Durable state directory: job journal, model artifacts, and per-job
+    /// PSF1 checkpoints live here; `None` keeps everything in memory.
+    pub state_dir: Option<String>,
+    /// How long a drain (SIGTERM/SIGINT) waits for running jobs before
+    /// exiting anyway (their checkpoints make the wait optional).
+    pub drain_grace_ms: u64,
+    /// Whether to journal at all when a state dir is set (`serve.journal`
+    /// config knob; per-job checkpoints are still written when `false`).
+    pub journal: bool,
 }
 
 impl Default for ServeOpts {
@@ -116,13 +140,18 @@ impl Default for ServeOpts {
             connect_timeout_ms: 3000,
             read_timeout_ms: 30_000,
             connect_retries: 3,
+            state_dir: None,
+            drain_grace_ms: 10_000,
+            journal: true,
         }
     }
 }
 
-/// One job's record: live status plus, once done, the fitted model.
+/// One job's record: live status plus, once done, the fitted model.  The
+/// spec is kept so a replayed `queued`/`running` job can be re-executed.
 struct JobEntry {
     name: String,
+    spec: JobSpec,
     phase: JobPhase,
     converged: bool,
     iters: u64,
@@ -132,7 +161,8 @@ struct JobEntry {
     model: Option<Arc<FittedModel>>,
 }
 
-/// Shared daemon state: the job table and the worker fleet.
+/// Shared daemon state: the job table, the worker fleet, and (with
+/// `--state-dir`) the journal plus the drain flag.
 struct ServeState {
     jobs: Mutex<BTreeMap<u64, JobEntry>>,
     next_id: AtomicU64,
@@ -140,6 +170,11 @@ struct ServeState {
     connect_timeout_ms: u64,
     read_timeout_ms: u64,
     connect_retries: u32,
+    state_dir: Option<PathBuf>,
+    journal: Option<Mutex<Journal>>,
+    draining: AtomicBool,
+    active_jobs: AtomicU64,
+    drain_grace_ms: u64,
 }
 
 impl ServeState {
@@ -147,6 +182,18 @@ impl ServeState {
         // a poisoned table (a panicking job thread) must not take the
         // daemon down with it
         self.jobs.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Append one journal record; a write failure is logged, not fatal —
+    /// the daemon keeps serving from memory (durability degrades, the
+    /// control plane does not stop).
+    fn journal_with(&self, what: &str, f: impl FnOnce(&mut Journal) -> anyhow::Result<()>) {
+        if let Some(j) = &self.journal {
+            let mut g = j.lock().unwrap_or_else(|p| p.into_inner());
+            if let Err(e) = f(&mut g) {
+                eprintln!("[serve] journal {what} failed: {e}");
+            }
+        }
     }
 }
 
@@ -161,7 +208,72 @@ pub fn run_serve(opts: &ServeOpts) -> anyhow::Result<()> {
         state.fleet.len()
     );
     let _ = std::io::stdout().flush();
+    #[cfg(unix)]
+    {
+        install_drain_handler();
+        let st = state.clone();
+        std::thread::Builder::new()
+            .name("psfit-drain".into())
+            .spawn(move || drain_watcher(st))
+            .map_err(|e| anyhow::anyhow!("cannot spawn drain watcher: {e}"))?;
+    }
     serve_loop(listener, state)
+}
+
+/// Process-wide "a drain was requested" latch, set from the signal
+/// handler (an atomic store is async-signal-safe; everything else happens
+/// on the watcher thread).
+static DRAIN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM/SIGINT handlers via a locally-declared libc `signal`
+/// (the `util::mmap` idiom — no new dependencies).
+#[cfg(unix)]
+fn install_drain_handler() {
+    use std::os::raw::c_int;
+    unsafe extern "C" fn on_signal(_sig: c_int) {
+        DRAIN_REQUESTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: c_int, handler: usize) -> usize;
+    }
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+    let handler = on_signal as unsafe extern "C" fn(c_int) as usize;
+    unsafe {
+        signal(SIGINT, handler);
+        signal(SIGTERM, handler);
+    }
+}
+
+/// Graceful drain: flip the daemon into rejecting submits, give running
+/// jobs a grace window (they checkpoint as they go, so the wait is a
+/// courtesy, not a requirement), journal the clean-shutdown marker, and
+/// exit 0.
+#[cfg(unix)]
+fn drain_watcher(state: Arc<ServeState>) {
+    while !DRAIN_REQUESTED.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    state.draining.store(true, Ordering::SeqCst);
+    println!(
+        "draining: rejecting new submits; waiting up to {} ms for {} running job(s)",
+        state.drain_grace_ms,
+        state.active_jobs.load(Ordering::SeqCst)
+    );
+    let _ = std::io::stdout().flush();
+    let deadline = Instant::now() + Duration::from_millis(state.drain_grace_ms);
+    while state.active_jobs.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let leftover = state.active_jobs.load(Ordering::SeqCst);
+    state.journal_with("drain marker", |j| j.record_drain());
+    if leftover == 0 {
+        println!("drained: clean shutdown");
+    } else {
+        println!("drained: clean shutdown ({leftover} job(s) left checkpointed for resume)");
+    }
+    let _ = std::io::stdout().flush();
+    std::process::exit(0);
 }
 
 /// Spawn an in-process daemon on an ephemeral localhost port, backed by
@@ -201,16 +313,118 @@ fn bind_serve(opts: &ServeOpts) -> anyhow::Result<(SocketListener, Arc<ServeStat
         !fleet.is_empty(),
         "psfit serve needs at least one worker (--workers or --local-fleet)"
     );
+    let state_dir = opts.state_dir.as_ref().map(PathBuf::from);
+    let mut jobs = BTreeMap::new();
+    let mut next_id = 0u64;
+    let mut resume = Vec::new();
+    let mut journal = None;
+    if let Some(dir) = &state_dir {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create state dir {}: {e}", dir.display()))?;
+        if opts.journal {
+            let (j, replay) = Journal::open(dir)?;
+            for w in &replay.warnings {
+                eprintln!("[serve] journal warning: {w}");
+            }
+            for (&job, r) in &replay.jobs {
+                next_id = next_id.max(job);
+                // unfinished jobs — and finished ones whose artifact did
+                // not survive — go back to `queued` and re-run; their
+                // PSF1 checkpoint makes the re-run a bit-exact resume
+                let needs_run = matches!(r.phase, JobPhase::Queued | JobPhase::Running)
+                    || (matches!(r.phase, JobPhase::Done | JobPhase::TimedOut)
+                        && r.model.is_none());
+                jobs.insert(
+                    job,
+                    JobEntry {
+                        name: r.name.clone(),
+                        spec: r.spec.clone(),
+                        phase: if needs_run { JobPhase::Queued } else { r.phase },
+                        converged: r.converged,
+                        iters: r.iters,
+                        objective: r.objective,
+                        wall_seconds: r.wall_seconds,
+                        message: r.message.clone(),
+                        model: r.model.clone().map(Arc::new),
+                    },
+                );
+                if needs_run {
+                    resume.push(job);
+                }
+            }
+            if replay.records > 0 {
+                println!(
+                    "journal: replayed {} record(s), {} job(s){}",
+                    replay.records,
+                    replay.jobs.len(),
+                    if replay.truncated { " (torn tail dropped)" } else { "" }
+                );
+                println!(
+                    "recovery: {}; {} job(s) to resume",
+                    if replay.clean_shutdown {
+                        "previous daemon drained cleanly"
+                    } else {
+                        "crash detected"
+                    },
+                    resume.len()
+                );
+                let _ = std::io::stdout().flush();
+            }
+            journal = Some(Mutex::new(j));
+        }
+    }
     let listener = SocketListener::bind(&Endpoint::parse(&opts.listen))?;
     let state = Arc::new(ServeState {
-        jobs: Mutex::new(BTreeMap::new()),
-        next_id: AtomicU64::new(0),
+        jobs: Mutex::new(jobs),
+        next_id: AtomicU64::new(next_id),
         fleet,
         connect_timeout_ms: opts.connect_timeout_ms,
         read_timeout_ms: opts.read_timeout_ms,
         connect_retries: opts.connect_retries,
+        state_dir,
+        journal,
+        draining: AtomicBool::new(false),
+        active_jobs: AtomicU64::new(0),
+        drain_grace_ms: opts.drain_grace_ms,
     });
+    if !resume.is_empty() {
+        // re-dial the fleet off the bind path so the daemon answers
+        // status/predict for completed jobs immediately
+        let st = state.clone();
+        std::thread::Builder::new()
+            .name("psfit-recovery".into())
+            .spawn(move || {
+                await_fleet(&st);
+                for job in resume {
+                    start_job(&st, job);
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("cannot spawn recovery thread: {e}"))?;
+    }
     Ok((listener, state))
+}
+
+/// Probe every fleet address once with the shared backoff-equipped
+/// [`connect`] so resumed jobs start against workers that are actually
+/// back.  An unreachable worker is logged, not fatal — each job's own
+/// cluster connect retries again.
+fn await_fleet(state: &ServeState) {
+    let timeout = Duration::from_millis(state.connect_timeout_ms.max(1));
+    for addr in &state.fleet {
+        let ep = Endpoint::parse(addr);
+        match connect(&ep, timeout, state.connect_retries.max(5)) {
+            Ok(mut s) => {
+                // complete the handshake and part with `Shutdown` so the
+                // worker sees a clean probe session, not a protocol error
+                let _ = wire::client_handshake(&mut s)
+                    .and_then(|_| wire::write_frame(&mut s, &WireCommand::Shutdown));
+                eprintln!("[serve] re-dialed worker {addr}");
+            }
+            Err(e) => {
+                eprintln!("[serve] worker {addr} still unreachable ({e}); jobs will retry")
+            }
+        }
+    }
 }
 
 fn serve_loop(listener: SocketListener, state: Arc<ServeState>) -> anyhow::Result<()> {
@@ -238,8 +452,17 @@ fn client_session(mut stream: SocketStream, state: Arc<ServeState>) -> anyhow::R
         };
         let reply = match cmd {
             WireCommand::Submit { name, spec } => {
-                let job = submit_job(&state, name, spec);
-                WireCommand::Submitted { job }
+                if state.draining.load(Ordering::SeqCst) {
+                    // structured refusal, distinct from `Error`: clients
+                    // must not transport-retry a deliberate shutdown
+                    WireCommand::Rejected {
+                        reason: "draining: daemon is shutting down and not accepting new jobs"
+                            .to_string(),
+                    }
+                } else {
+                    let job = submit_job(&state, name, spec);
+                    WireCommand::Submitted { job }
+                }
             }
             WireCommand::Status { job } => match status_of(&state, job) {
                 Some(st) => WireCommand::StatusReply(Box::new(st)),
@@ -266,6 +489,7 @@ fn client_session(mut stream: SocketStream, state: Arc<ServeState>) -> anyhow::R
                         job,
                         phase: e.phase.code(),
                         name: e.name.clone(),
+                        message: e.message.clone(),
                     })
                     .collect();
                 WireCommand::JobsReply { jobs }
@@ -279,13 +503,16 @@ fn client_session(mut stream: SocketStream, state: Arc<ServeState>) -> anyhow::R
     }
 }
 
-/// Register a job and start fitting it on its own thread.
+/// Register a job, journal the submission, and start fitting it on its
+/// own thread.
 fn submit_job(state: &Arc<ServeState>, name: String, spec: JobSpec) -> u64 {
     let job = state.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+    state.journal_with("submit", |j| j.record_submit(job, &name, &spec));
     state.lock().insert(
         job,
         JobEntry {
             name,
+            spec,
             phase: JobPhase::Queued,
             converged: false,
             iters: 0,
@@ -295,37 +522,85 @@ fn submit_job(state: &Arc<ServeState>, name: String, spec: JobSpec) -> u64 {
             model: None,
         },
     );
+    start_job(state, job);
+    job
+}
+
+/// Run (or resume) job `job` on its own thread.  Shared by fresh submits
+/// and startup recovery — both read the spec out of the job table, so a
+/// replayed job re-executes exactly as submitted; its auto-written PSF1
+/// checkpoint turns the re-execution into a bit-exact resume.
+fn start_job(state: &Arc<ServeState>, job: u64) {
     let st = state.clone();
-    std::thread::spawn(move || {
-        if let Some(e) = st.lock().get_mut(&job) {
-            e.phase = JobPhase::Running;
-        }
-        match execute_job(&st, &spec) {
-            Ok(done) => {
-                if let Some(e) = st.lock().get_mut(&job) {
+    let spawned = std::thread::Builder::new()
+        .name(format!("psfit-job-{job}"))
+        .spawn(move || {
+            st.active_jobs.fetch_add(1, Ordering::SeqCst);
+            let spec = match st.lock().get_mut(&job) {
+                Some(e) => {
+                    e.phase = JobPhase::Running;
+                    e.spec.clone()
+                }
+                None => {
+                    st.active_jobs.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+            };
+            st.journal_with("phase", |j| {
+                j.record_phase(job, JobPhase::Running, false, 0, f64::NAN, 0.0, "")
+            });
+            match execute_job(&st, job, &spec) {
+                Ok(done) => {
+                    // artifact before phase record: replay must never see
+                    // a finished job without a loadable model
+                    st.journal_with("model", |j| j.record_model(job, &done.model));
                     // a deadline-clipped fit is a partial success: the
                     // best-so-far model stays queryable, the phase says so
-                    e.phase = if done.timed_out {
+                    let phase = if done.timed_out {
                         JobPhase::TimedOut
                     } else {
                         JobPhase::Done
                     };
-                    e.converged = done.converged;
-                    e.iters = done.iters;
-                    e.objective = done.model.objective;
-                    e.wall_seconds = done.wall_seconds;
-                    e.model = Some(Arc::new(done.model));
+                    st.journal_with("phase", |j| {
+                        j.record_phase(
+                            job,
+                            phase,
+                            done.converged,
+                            done.iters,
+                            done.model.objective,
+                            done.wall_seconds,
+                            "",
+                        )
+                    });
+                    if let Some(e) = st.lock().get_mut(&job) {
+                        e.phase = phase;
+                        e.converged = done.converged;
+                        e.iters = done.iters;
+                        e.objective = done.model.objective;
+                        e.wall_seconds = done.wall_seconds;
+                        e.model = Some(Arc::new(done.model));
+                    }
+                    // the mid-fit checkpoint has served its purpose
+                    if let Some(dir) = &st.state_dir {
+                        let _ = std::fs::remove_file(journal::checkpoint_path(dir, job));
+                    }
+                }
+                Err(err) => {
+                    let message = err.to_string();
+                    st.journal_with("phase", |j| {
+                        j.record_phase(job, JobPhase::Failed, false, 0, f64::NAN, 0.0, &message)
+                    });
+                    if let Some(e) = st.lock().get_mut(&job) {
+                        e.phase = JobPhase::Failed;
+                        e.message = message;
+                    }
                 }
             }
-            Err(err) => {
-                if let Some(e) = st.lock().get_mut(&job) {
-                    e.phase = JobPhase::Failed;
-                    e.message = err.to_string();
-                }
-            }
-        }
-    });
-    job
+            st.active_jobs.fetch_sub(1, Ordering::SeqCst);
+        });
+    if let Err(e) = spawned {
+        eprintln!("[serve] cannot spawn job thread for job {job}: {e}");
+    }
 }
 
 fn status_of(state: &ServeState, job: u64) -> Option<JobStatus> {
@@ -352,13 +627,20 @@ struct FinishedJob {
 
 /// Run one fit over the shared fleet: build the synthetic problem the
 /// spec describes, connect a socket cluster to the first `spec.nodes`
-/// workers, solve, and reduce the solution to its support.
-fn execute_job(state: &ServeState, spec: &JobSpec) -> anyhow::Result<FinishedJob> {
+/// workers, solve, and reduce the solution to its support.  With a state
+/// dir, the fit auto-writes a per-job PSF1 checkpoint so a daemon restart
+/// resumes it bit-identically instead of starting over.
+fn execute_job(state: &ServeState, job: u64, spec: &JobSpec) -> anyhow::Result<FinishedJob> {
     let mut cfg = if spec.config.is_empty() {
         Config::default()
     } else {
         Config::from_json(&Json::parse(&spec.config)?)?
     };
+    if let Some(dir) = &state.state_dir {
+        if cfg.solver.checkpoint.is_empty() {
+            cfg.solver.checkpoint = journal::checkpoint_path(dir, job).display().to_string();
+        }
+    }
     let nodes = (spec.nodes as usize).clamp(1, state.fleet.len());
     cfg.platform.nodes = nodes;
     cfg.platform.backend = BackendKind::Native;
@@ -425,6 +707,29 @@ mod tests {
             assert!(!phase.name().is_empty());
         }
         assert!(JobPhase::from_code(99).is_err());
+    }
+
+    #[test]
+    fn draining_daemon_rejects_submits_with_structured_reply() {
+        // workers list is a dead address: submission is rejected before
+        // any worker connect happens, so nothing ever dials it
+        let opts = ServeOpts {
+            listen: "127.0.0.1:0".to_string(),
+            workers: vec!["127.0.0.1:9".to_string()],
+            ..Default::default()
+        };
+        let (listener, state) = bind_serve(&opts).unwrap();
+        let addr = listener.local_endpoint();
+        state.draining.store(true, Ordering::SeqCst);
+        let st = state.clone();
+        std::thread::spawn(move || {
+            let _ = serve_loop(listener, st);
+        });
+        let mut c = ServeClient::connect(&addr).unwrap();
+        let err = c.submit("nope", JobSpec::default()).unwrap_err().to_string();
+        assert!(err.contains("draining"), "{err}");
+        // non-submit traffic still flows while draining
+        assert!(c.jobs().unwrap().is_empty());
     }
 
     #[test]

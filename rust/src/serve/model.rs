@@ -5,6 +5,19 @@
 //! scores sparse feature vectors with a two-pointer merge over sorted
 //! index lists.  Prediction cost is O(support + query nnz) per class,
 //! independent of the full feature dimension.
+//!
+//! Models also serialize to the **PSM1** blob format
+//! ([`FittedModel::to_bytes`] / [`FittedModel::from_bytes`]) — the
+//! artifact the serve journal persists under `--state-dir` so a restarted
+//! daemon answers `predict` for completed jobs bit-identically.  The blob
+//! is in the PSC1/PSF1 family: magic + version header, little-endian
+//! fields, coefficients as `f64::to_bits`, and a trailing FNV-1a checksum
+//! so corruption surfaces as a named error instead of silent bad scores.
+
+/// PSM1 model-blob magic.
+pub const MODEL_MAGIC: &[u8; 4] = b"PSM1";
+/// PSM1 model-blob format version.
+pub const MODEL_VERSION: u32 = 1;
 
 /// A fitted model: the κ-sparse solution of one completed job, reduced
 /// to its support.
@@ -51,6 +64,97 @@ impl FittedModel {
         }
     }
 
+    /// Serialize to a PSM1 blob: header, support, per-class coefficient
+    /// lists, and a trailing FNV-1a checksum over everything before it.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MODEL_MAGIC);
+        out.extend_from_slice(&MODEL_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.n_features as u64).to_le_bytes());
+        out.extend_from_slice(&(self.width as u64).to_le_bytes());
+        out.extend_from_slice(&self.objective.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.support.len() as u64).to_le_bytes());
+        for &j in &self.support {
+            out.extend_from_slice(&(j as u64).to_le_bytes());
+        }
+        for coef in &self.per_class {
+            out.extend_from_slice(&(coef.len() as u64).to_le_bytes());
+            for &(feature, value) in coef {
+                out.extend_from_slice(&feature.to_le_bytes());
+                out.extend_from_slice(&value.to_bits().to_le_bytes());
+            }
+        }
+        let sum = crate::util::fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse a PSM1 blob.  Truncation, a bad magic/version, an absurd
+    /// count, or a checksum mismatch is a named `ModelBlobCorrupt` error —
+    /// never a panic or a silently wrong model.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<FittedModel> {
+        anyhow::ensure!(
+            bytes.len() >= 8 && &bytes[..4] == MODEL_MAGIC,
+            "ModelBlobCorrupt: not a PSM1 model blob"
+        );
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        anyhow::ensure!(
+            version == MODEL_VERSION,
+            "ModelBlobCorrupt: unsupported PSM1 version {version}"
+        );
+        anyhow::ensure!(bytes.len() >= 16, "ModelBlobCorrupt: truncated blob");
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        let actual = crate::util::fnv1a(body);
+        anyhow::ensure!(
+            stored == actual,
+            "ModelBlobCorrupt: checksum mismatch (stored {stored:#018x}, computed {actual:#018x})"
+        );
+        let mut pos = 8usize;
+        let n_features = take_u64(body, &mut pos)? as usize;
+        let width = take_u64(body, &mut pos)? as usize;
+        let objective = f64::from_bits(take_u64(body, &mut pos)?);
+        let support_len = take_u64(body, &mut pos)? as usize;
+        anyhow::ensure!(
+            support_len <= body.len() / 8,
+            "ModelBlobCorrupt: support count {support_len} exceeds the blob size"
+        );
+        let mut support = Vec::with_capacity(support_len);
+        for _ in 0..support_len {
+            support.push(take_u64(body, &mut pos)? as usize);
+        }
+        anyhow::ensure!(
+            width <= body.len() / 8,
+            "ModelBlobCorrupt: class count {width} exceeds the blob size"
+        );
+        let mut per_class = Vec::with_capacity(width);
+        for _ in 0..width {
+            let len = take_u64(body, &mut pos)? as usize;
+            anyhow::ensure!(
+                len <= body.len() / 12,
+                "ModelBlobCorrupt: coefficient count {len} exceeds the blob size"
+            );
+            let mut coef = Vec::with_capacity(len);
+            for _ in 0..len {
+                anyhow::ensure!(pos + 12 <= body.len(), "ModelBlobCorrupt: truncated blob");
+                let feature = u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap());
+                let value =
+                    f64::from_bits(u64::from_le_bytes(body[pos + 4..pos + 12].try_into().unwrap()));
+                pos += 12;
+                coef.push((feature, value));
+            }
+            per_class.push(coef);
+        }
+        anyhow::ensure!(pos == body.len(), "ModelBlobCorrupt: trailing garbage");
+        Ok(FittedModel {
+            n_features,
+            width,
+            support,
+            objective,
+            per_class,
+        })
+    }
+
     /// Score one sparse feature vector: `width` raw scores (the linear
     /// predictor per class; for width 1 this is the regression value or
     /// the classification margin).  `features` is `(index, value)` pairs
@@ -64,6 +168,14 @@ impl FittedModel {
             .map(|coef| merge_dot(coef, &q))
             .collect()
     }
+}
+
+/// Bounds-checked little-endian `u64` read used by the PSM1 decoder.
+fn take_u64(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    anyhow::ensure!(*pos + 8 <= buf.len(), "ModelBlobCorrupt: truncated blob");
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
 }
 
 /// Sparse dot product of two index-sorted `(index, value)` lists.  `b`
@@ -125,5 +237,47 @@ mod tests {
         assert_eq!(got, vec![1.5 * 2.0 + 1.5 * 1.0]);
         // empty query scores zero
         assert_eq!(m.predict_sparse(&[]), vec![0.0]);
+    }
+
+    #[test]
+    fn psm1_blob_roundtrips_bit_exactly() {
+        let n = 6;
+        let mut x = vec![0.0; 2 * n];
+        x[1] = 0.1 + 0.2; // deliberately non-representable sum
+        x[5] = -1e-300;
+        x[n + 3] = f64::MIN_POSITIVE;
+        let m = FittedModel::from_solution(n, 2, vec![1, 5, n + 3], &x, 0.1 + 0.7);
+        let blob = m.to_bytes();
+        let back = FittedModel::from_bytes(&blob).unwrap();
+        assert_eq!(back, m);
+        // predictions off the restored model are bit-identical
+        let q = [(1u32, 3.5f64), (3, -2.0), (5, 0.25)];
+        let (a, b) = (m.predict_sparse(&q), back.predict_sparse(&q));
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn psm1_blob_rejects_corruption_and_truncation_by_name() {
+        let m = FittedModel::from_solution(4, 1, vec![2], &[0.0, 0.0, 1.5, 0.0], 0.0);
+        let blob = m.to_bytes();
+        // flip one payload byte -> checksum mismatch
+        let mut bad = blob.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        let err = FittedModel::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("ModelBlobCorrupt"), "{err}");
+        // truncation anywhere is also a named error
+        for cut in [0, 3, 8, blob.len() - 1] {
+            let err = FittedModel::from_bytes(&blob[..cut]).unwrap_err().to_string();
+            assert!(err.contains("ModelBlobCorrupt"), "cut {cut}: {err}");
+        }
+        // wrong magic
+        let mut wrong = blob.clone();
+        wrong[0] = b'X';
+        let err = FittedModel::from_bytes(&wrong).unwrap_err().to_string();
+        assert!(err.contains("not a PSM1"), "{err}");
     }
 }

@@ -1,0 +1,398 @@
+//! Durable control-plane integration tests: journal replay across daemon
+//! restarts, torn-tail and corrupted-journal handling at the serve level,
+//! kill -9 recovery with bit-identical artifacts over real subprocess
+//! coordinators, SIGTERM drain semantics, and the reproducibility of the
+//! `psfit chaos --coordinator` kill schedule.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use psfit::network::socket::spawn_local_worker;
+use psfit::network::socket::wire::JobSpec;
+use psfit::network::socket::worker::spawn_flaky_worker;
+use psfit::serve::journal::{self, Journal, JOURNAL_FILE};
+use psfit::serve::{spawn_serve, JobPhase, ServeClient, ServeOpts};
+
+fn state_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("psfit-durable-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn prediction_bits(client: &mut ServeClient, job: u64, q: &[(u32, f64)]) -> Vec<u64> {
+    client
+        .predict(job, q)
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+const PROBE: [(u32, f64); 3] = [(0, 1.0), (3, -0.5), (7, 2.0)];
+
+#[test]
+fn a_restarted_daemon_serves_replayed_models_bit_identically() {
+    let dir = state_dir("replay");
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec![spawn_local_worker().unwrap(), spawn_local_worker().unwrap()],
+        state_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let addr = spawn_serve(&opts).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let spec = JobSpec {
+        n: 48,
+        m: 320,
+        nodes: 2,
+        ..Default::default()
+    };
+    let job = client.submit("replayed", spec).unwrap();
+    let st = client.wait(job, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.phase, JobPhase::Done.code());
+    let before = prediction_bits(&mut client, job, &PROBE);
+    assert!(journal::model_blob_path(&dir, job).exists());
+
+    // a second daemon over the same state dir replays the journal and must
+    // serve the same artifact bit-for-bit, stats included
+    let addr2 = spawn_serve(&opts).unwrap();
+    let mut client2 = ServeClient::connect(&addr2).unwrap();
+    assert_eq!(prediction_bits(&mut client2, job, &PROBE), before);
+    let st2 = client2.status(job).unwrap();
+    assert_eq!(st2.phase, JobPhase::Done.code());
+    assert_eq!(st2.objective.to_bits(), st.objective.to_bits());
+    assert_eq!(st2.iters, st.iters);
+    assert_eq!(st2.support_len, st.support_len);
+    let jobs = client2.jobs().unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].name, "replayed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_failed_job_replays_with_its_failure_detail() {
+    let dir = state_dir("failed");
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec![spawn_flaky_worker(1).unwrap(), spawn_flaky_worker(1).unwrap()],
+        state_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let addr = spawn_serve(&opts).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let spec = JobSpec {
+        n: 24,
+        m: 120,
+        nodes: 2,
+        ..Default::default()
+    };
+    let job = client.submit("doomed", spec).unwrap();
+    let err = client.wait(job, Duration::from_secs(60)).unwrap_err();
+    assert!(err.to_string().contains("failed"), "{err}");
+
+    // the restarted daemon never needs to re-dial anything for a failed
+    // job, so a dead fleet address proves the phase + detail come straight
+    // from the journal
+    let opts2 = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec!["127.0.0.1:9".to_string()],
+        state_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let addr2 = spawn_serve(&opts2).unwrap();
+    let mut client2 = ServeClient::connect(&addr2).unwrap();
+    let jobs = client2.jobs().unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].phase, JobPhase::Failed.code());
+    assert!(
+        jobs[0].message.contains("death"),
+        "summary lost the failure detail: {:?}",
+        jobs[0].message
+    );
+    let st = client2.status(job).unwrap();
+    assert!(st.message.contains("death"), "{}", st.message);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_torn_journal_tail_is_dropped_and_the_torn_job_reruns() {
+    let dir = state_dir("torn");
+    let spec = JobSpec {
+        n: 32,
+        m: 160,
+        nodes: 2,
+        ..Default::default()
+    };
+    {
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        j.record_submit(1, "torn-tail", &spec).unwrap();
+    }
+    // simulate a crash mid-append: a length prefix promising 64 bytes with
+    // only 5 behind it
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(JOURNAL_FILE))
+            .unwrap();
+        f.write_all(&64u32.to_le_bytes()).unwrap();
+        f.write_all(b"tornx").unwrap();
+    }
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec![spawn_local_worker().unwrap(), spawn_local_worker().unwrap()],
+        state_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let addr = spawn_serve(&opts).unwrap();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    // the submit survived, the ragged tail did not, and recovery runs the
+    // journaled-but-never-finished job to completion
+    let st = client.wait(1, Duration::from_secs(120)).unwrap();
+    assert_eq!(st.phase, JobPhase::Done.code());
+    assert!(!prediction_bits(&mut client, 1, &PROBE).is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_corrupted_journal_refuses_to_start_with_a_named_error() {
+    let dir = state_dir("corrupt");
+    {
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        j.record_submit(1, "a", &JobSpec::default()).unwrap();
+        j.record_submit(2, "b", &JobSpec::default()).unwrap();
+    }
+    let path = dir.join(JOURNAL_FILE);
+    let mut bytes = std::fs::read(&path).unwrap();
+    // flip a bit inside the first record's payload — mid-log damage, not a
+    // torn tail, so startup must refuse rather than serve a wrong table
+    bytes[16] ^= 0x20;
+    std::fs::write(&path, &bytes).unwrap();
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".to_string(),
+        workers: vec!["127.0.0.1:9".to_string()],
+        state_dir: Some(dir.display().to_string()),
+        ..Default::default()
+    };
+    let err = spawn_serve(&opts).unwrap_err().to_string();
+    assert!(err.contains("JournalCorrupt"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- subprocess coordinators (kill -9 / SIGTERM need a real process) ----
+
+#[cfg(unix)]
+mod subprocess {
+    use super::*;
+    use std::path::Path;
+    use std::process::{Child, Command, Stdio};
+    use std::time::Instant;
+
+    const BIN: &str = env!("CARGO_BIN_EXE_psfit");
+
+    /// Kill-on-drop guard so a failed assertion leaves no daemon behind.
+    struct Guard(Option<Child>);
+
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            if let Some(mut c) = self.0.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+
+    fn spawn_serve_process(workers: &str, dir: &Path, listen: &str, log: &Path) -> Guard {
+        let out = std::fs::File::create(log).unwrap();
+        let err = out.try_clone().unwrap();
+        Guard(Some(
+            Command::new(BIN)
+                .args([
+                    "serve",
+                    "--listen",
+                    listen,
+                    "--workers",
+                    workers,
+                    "--state-dir",
+                    &dir.display().to_string(),
+                    "--drain-grace-ms",
+                    "2000",
+                ])
+                .stdin(Stdio::null())
+                .stdout(Stdio::from(out))
+                .stderr(Stdio::from(err))
+                .spawn()
+                .unwrap(),
+        ))
+    }
+
+    fn await_line(log: &Path, needle: &str) -> String {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Ok(text) = std::fs::read_to_string(log) {
+                for line in text.lines() {
+                    if let Some(rest) = line.strip_prefix(needle) {
+                        return rest.split_whitespace().next().unwrap_or("").to_string();
+                    }
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "`{needle}` never appeared in {}",
+                log.display()
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    fn log_contains(log: &Path, needle: &str) -> bool {
+        std::fs::read_to_string(log)
+            .map(|t| t.contains(needle))
+            .unwrap_or(false)
+    }
+
+    /// Two jobs pinned to an exact round count: what the kill interrupts
+    /// and what the uninterrupted reference runs.
+    fn pinned_spec() -> JobSpec {
+        let mut cfg = psfit::config::Config::default();
+        cfg.solver.tol_primal = 0.0;
+        cfg.solver.tol_dual = 0.0;
+        cfg.solver.tol_bilinear = 0.0;
+        cfg.solver.max_iters = 600;
+        JobSpec {
+            n: 64,
+            m: 480,
+            nodes: 2,
+            seed: 4242,
+            kappa: 10,
+            config: cfg.to_json().to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn kill_nine_mid_fit_then_restart_recovers_bit_identically() {
+        let w1 = spawn_local_worker().unwrap();
+        let w2 = spawn_local_worker().unwrap();
+        let fleet = format!("{w1},{w2}");
+        let scratch = state_dir("kill9");
+        std::fs::create_dir_all(&scratch).unwrap();
+
+        // uninterrupted reference: same spec through an in-process daemon
+        let ref_dir = scratch.join("state-ref");
+        let ref_addr = spawn_serve(&ServeOpts {
+            listen: "127.0.0.1:0".to_string(),
+            workers: fleet.split(',').map(String::from).collect(),
+            state_dir: Some(ref_dir.display().to_string()),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ref_client = ServeClient::connect(&ref_addr).unwrap();
+        let job = ref_client.submit("reference", pinned_spec()).unwrap();
+        let st = ref_client.wait(job, Duration::from_secs(180)).unwrap();
+        assert_eq!(st.phase, JobPhase::Done.code());
+        let want = prediction_bits(&mut ref_client, job, &PROBE);
+
+        // chaos run: subprocess coordinator, SIGKILLed mid-fit
+        let chaos_dir = scratch.join("state-chaos");
+        let log1 = scratch.join("serve1.log");
+        let mut daemon = spawn_serve_process(&fleet, &chaos_dir, "127.0.0.1:0", &log1);
+        let addr = await_line(&log1, "psfit serve listening on ");
+        let mut client = ServeClient::connect(&addr).unwrap();
+        assert_eq!(client.submit("interrupted", pinned_spec()).unwrap(), 1);
+        std::thread::sleep(Duration::from_millis(1200));
+        {
+            let child = daemon.0.as_mut().unwrap();
+            child.kill().unwrap();
+            let _ = child.wait();
+        }
+        let log2 = scratch.join("serve2.log");
+        let daemon2 = spawn_serve_process(&fleet, &chaos_dir, &addr, &log2);
+        await_line(&log2, "psfit serve listening on ");
+        assert!(
+            log_contains(&log2, "crash detected"),
+            "restart misread a SIGKILL as a clean drain"
+        );
+
+        // the same client rides through the restart; the job lands done
+        // with the reference's exact bits, from blob and over the wire
+        let st = client.wait(1, Duration::from_secs(180)).unwrap();
+        assert_eq!(st.phase, JobPhase::Done.code());
+        assert!(client.reconnects() > 0, "restart was invisible to the client");
+        assert_eq!(prediction_bits(&mut client, 1, &PROBE), want);
+        let ref_blob = std::fs::read(journal::model_blob_path(&ref_dir, job)).unwrap();
+        let chaos_blob = std::fs::read(journal::model_blob_path(&chaos_dir, 1)).unwrap();
+        assert_eq!(ref_blob, chaos_blob, "PSM1 artifacts diverged");
+        drop(daemon2);
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
+    #[test]
+    fn sigterm_drains_cleanly_and_the_restart_sees_the_marker() {
+        let fleet = spawn_local_worker().unwrap();
+        let scratch = state_dir("drain");
+        std::fs::create_dir_all(&scratch).unwrap();
+        let dir = scratch.join("state");
+        let log1 = scratch.join("serve1.log");
+        let daemon = spawn_serve_process(&fleet, &dir, "127.0.0.1:0", &log1);
+        let addr = await_line(&log1, "psfit serve listening on ");
+        let mut client = ServeClient::connect(&addr).unwrap();
+        let spec = JobSpec {
+            n: 32,
+            m: 160,
+            nodes: 1,
+            ..Default::default()
+        };
+        let job = client.submit("drained", spec).unwrap();
+        let st = client.wait(job, Duration::from_secs(120)).unwrap();
+        assert_eq!(st.phase, JobPhase::Done.code());
+
+        let pid = daemon.0.as_ref().unwrap().id().to_string();
+        let killed = Command::new("kill").args(["-TERM", &pid]).status().unwrap();
+        assert!(killed.success());
+        // the drain exits the process on its own; poll the log for proof
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !log_contains(&log1, "drained: clean shutdown") {
+            assert!(Instant::now() < deadline, "drain never completed");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(log_contains(&log1, "draining: rejecting new submits"));
+
+        let log2 = scratch.join("serve2.log");
+        let daemon2 = spawn_serve_process(&fleet, &dir, "127.0.0.1:0", &log2);
+        let addr2 = await_line(&log2, "psfit serve listening on ");
+        assert!(
+            log_contains(&log2, "previous daemon drained cleanly"),
+            "restart misread a drain as a crash"
+        );
+        // the drained daemon's finished work is still served
+        let mut client2 = ServeClient::connect(&addr2).unwrap();
+        assert_eq!(client2.status(1).unwrap().phase, JobPhase::Done.code());
+        drop(daemon2);
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
+    #[test]
+    fn coordinator_chaos_quick_fingerprint_is_reproducible() {
+        let run = || {
+            let out = Command::new(BIN)
+                .args(["chaos", "--coordinator", "--quick", "--jobs", "1"])
+                .output()
+                .unwrap();
+            let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+            assert!(
+                out.status.success(),
+                "chaos --coordinator failed:\n{stdout}\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            stdout
+                .lines()
+                .find(|l| l.starts_with("fingerprint:"))
+                .expect("no fingerprint line")
+                .to_string()
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "same seed must print the same schedule");
+    }
+}
